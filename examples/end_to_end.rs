@@ -1,0 +1,370 @@
+//! End-to-end driver — proves all layers compose on a real (small)
+//! workload, for every primitive:
+//!
+//! 1. generate a synthetic 10-class 32×32×3 image dataset (oriented
+//!    sinusoidal textures + noise — a CIFAR-shaped classification task);
+//! 2. build a float MCU-Net per primitive (random frozen conv features),
+//!    train its classifier head by softmax-regression SGD on the float
+//!    features;
+//! 3. run the **deployment pipeline** (calibration → Eq. 4 formats → BN
+//!    folding → int8 engine model);
+//! 4. evaluate float vs int8 accuracy (quantization must not collapse
+//!    accuracy), verify scalar/SIMD bit-parity, and measure simulated MCU
+//!    latency/energy per primitive;
+//! 5. serve the deployed models through the threaded inference service
+//!    and report service statistics.
+//!
+//! Results are summarized as the table EXPERIMENTS.md §E2E records.
+//!
+//! Run: `cargo run --release --example end_to_end`
+
+use convbench::analytic::Primitive;
+use convbench::coordinator::{
+    FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift, FloatAddConv,
+    InferenceServer, Request,
+};
+use convbench::harness::measure_model;
+use convbench::mcu::McuConfig;
+use convbench::nn::{argmax, BatchNorm, NoopMonitor, Shape, Tensor};
+use convbench::util::prng::Rng;
+
+const CLASSES: usize = 10;
+const TRAIN: usize = 200;
+const TEST: usize = 100;
+
+fn main() {
+    let mut rng = Rng::new(0xE2E);
+    let (train, test) = make_dataset(&mut rng);
+    println!(
+        "dataset: {} train / {} test images, {} classes, 32x32x3\n",
+        train.len(),
+        test.len(),
+        CLASSES
+    );
+
+    let cfg = McuConfig::default();
+    let mut deployed = Vec::new();
+    println!("| primitive | float acc | int8 acc | weights (KiB) | MCU latency SIMD (ms) | energy (mJ) |");
+    println!("|---|---|---|---|---|---|");
+    for prim in Primitive::ALL {
+        // --- float model; head trained quantization-aware: deploy the
+        // feature extractor first, train the head on the *deployed*
+        // (dequantized int8) features — the standard MCU workflow when
+        // post-training quantization would eat the classifier's margins.
+        let mut fm = float_mcunet(prim, &mut rng);
+        let calib: Vec<Vec<f32>> = train.iter().take(24).map(|(x, _)| x.clone()).collect();
+        if prim == Primitive::Add {
+            // Random L1-distance features concentrate hard around their
+            // mean — without data-calibrated BN statistics the stage
+            // output is ~constant (AdderNet's BN is essential, §2.2).
+            calibrate_add_bn(&mut fm, &calib);
+        }
+        let qm0 = fm.deploy(&calib);
+        train_head_quantized(&mut fm, &qm0, &train);
+
+        // --- float accuracy (of the final float model)
+        let float_acc = accuracy_float(&fm, &test);
+
+        // --- deploy through the calibration pipeline
+        let qm = fm.deploy(&calib);
+
+        // --- int8 accuracy + scalar/SIMD parity
+        let mut int8_hits = 0;
+        for (x, label) in &test {
+            let xt = Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let a = qm.forward(&xt, false, &mut NoopMonitor);
+            let b = qm.forward(&xt, true, &mut NoopMonitor);
+            assert_eq!(a.data, b.data, "scalar/SIMD parity ({})", prim.name());
+            if argmax(&a.data) == *label {
+                int8_hits += 1;
+            }
+        }
+        let int8_acc = int8_hits as f64 / test.len() as f64;
+
+        // --- simulated MCU cost of one inference
+        let xt = Tensor::from_f32(fm.input_shape, qm.input_q, &test[0].0);
+        let m = measure_model(&qm, &xt, true, &cfg);
+        println!(
+            "| {} | {:.1}% | {:.1}% | {:.1} | {:.2} | {:.3} |",
+            prim.name(),
+            100.0 * float_acc,
+            100.0 * int8_acc,
+            qm.weight_bytes() as f64 / 1024.0,
+            1e3 * m.latency_s,
+            m.energy_mj
+        );
+        assert!(
+            int8_acc >= 0.5,
+            "{}: deployed model failed to classify ({int8_acc})",
+            prim.name()
+        );
+        assert!(
+            int8_acc + 0.15 >= float_acc,
+            "{}: quantization collapsed accuracy ({float_acc} -> {int8_acc})",
+            prim.name()
+        );
+        deployed.push(qm);
+    }
+
+    // --- serve the deployed fleet
+    println!("\nserving the deployed fleet (2 workers, 100 requests)…");
+    let names: Vec<String> = deployed.iter().map(|m| m.name.clone()).collect();
+    let server = InferenceServer::start(deployed, 2, &cfg);
+    for i in 0..100u64 {
+        let (x, _) = &test[(i as usize) % test.len()];
+        let input: Vec<i8> = x.iter().map(|&v| (v * 64.0) as i8).collect();
+        let model = names[(i as usize) % names.len()].clone();
+        server.infer(Request { id: i, model, input }).expect("inference");
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests, {} errors; host p50 {:.0} µs, p99 {:.0} µs",
+        stats.served, stats.errors, stats.p50_us, stats.p99_us
+    );
+    assert_eq!(stats.served, 100);
+    println!("\nend_to_end OK");
+}
+
+/// Oriented-texture dataset: class k has orientation θ_k and frequency
+/// f_k; images get per-sample phase and pixel noise.
+fn make_dataset(rng: &mut Rng) -> (Vec<(Vec<f32>, usize)>, Vec<(Vec<f32>, usize)>) {
+    let gen = |rng: &mut Rng, n: usize| -> Vec<(Vec<f32>, usize)> {
+        (0..n)
+            .map(|i| {
+                let class = i % CLASSES;
+                let theta = std::f32::consts::PI * class as f32 / CLASSES as f32;
+                let freq = 0.25 + 0.09 * (class % 5) as f32;
+                let phase = rng.f32_range(0.0, std::f32::consts::TAU);
+                let mut img = vec![0f32; 32 * 32 * 3];
+                for y in 0..32 {
+                    for x in 0..32 {
+                        let u = x as f32 * theta.cos() + y as f32 * theta.sin();
+                        let base = (u * freq + phase).sin();
+                        for c in 0..3 {
+                            let chan_mod = 1.0 - 0.25 * c as f32;
+                            let noise = rng.f32_range(-0.25, 0.25);
+                            img[(y * 32 + x) * 3 + c] = (base * chan_mod + noise).clamp(-1.0, 1.0);
+                        }
+                    }
+                }
+                (img, class)
+            })
+            .collect()
+    };
+    (gen(rng, TRAIN), gen(rng, TEST))
+}
+
+/// MCU-Net topology in float, parameterized by primitive (mirrors
+/// `models::mcunet`).
+fn float_mcunet(prim: Primitive, rng: &mut Rng) -> FloatModel {
+    let bn = |c: usize, rng: &mut Rng| BatchNorm {
+        gamma: (0..c).map(|_| rng.f32_range(0.8, 1.2)).collect(),
+        beta: vec![0.0; c],
+        mean: vec![0.0; c],
+        var: vec![1.0; c],
+        eps: 1e-5,
+    };
+    let conv = |k: usize, g: usize, cin: usize, cout: usize, rng: &mut Rng| {
+        let fan_in = (k * k * cin / g) as f32;
+        FloatConv {
+            kernel: k,
+            groups: g,
+            in_channels: cin,
+            out_channels: cout,
+            weights: rng.normal_vec_f32(k * k * cin / g * cout, (2.0 / fan_in).sqrt()),
+            bias: vec![0.0; cout],
+            bn: Some(bn(cout, rng)),
+        }
+    };
+    let mut layers = vec![
+        FloatLayer::Conv(conv(3, 1, 3, 16, rng)),
+        FloatLayer::Relu,
+        FloatLayer::MaxPool2,
+    ];
+    let stage = |cin: usize, cout: usize, rng: &mut Rng, layers: &mut Vec<FloatLayer>| match prim
+    {
+        Primitive::Standard => layers.push(FloatLayer::Conv(conv(3, 1, cin, cout, rng))),
+        Primitive::Grouped => layers.push(FloatLayer::Conv(conv(3, 2, cin, cout, rng))),
+        Primitive::DepthwiseSeparable => {
+            layers.push(FloatLayer::Depthwise(FloatDepthwise {
+                kernel: 3,
+                channels: cin,
+                weights: rng.normal_vec_f32(9 * cin, (2.0 / 9.0f32).sqrt()),
+                bias: vec![0.0; cin],
+                bn: None,
+            }));
+            layers.push(FloatLayer::Conv(FloatConv {
+                kernel: 1,
+                groups: 1,
+                in_channels: cin,
+                out_channels: cout,
+                weights: rng.normal_vec_f32(cin * cout, (2.0 / cin as f32).sqrt()),
+                bias: vec![0.0; cout],
+                bn: Some(bn(cout, rng)),
+            }));
+        }
+        Primitive::Shift => layers.push(FloatLayer::Shift(FloatShift {
+            in_channels: cin,
+            out_channels: cout,
+            kernel: 3,
+            weights: rng.normal_vec_f32(cin * cout, (2.0 / cin as f32).sqrt()),
+            bias: vec![0.0; cout],
+            bn: Some(bn(cout, rng)),
+        })),
+        Primitive::Add => layers.push(FloatLayer::AddConv(FloatAddConv {
+            kernel: 3,
+            in_channels: cin,
+            out_channels: cout,
+            weights: rng.normal_vec_f32(9 * cin * cout, 0.4),
+            bias: vec![0.0; cout],
+            bn: BatchNorm {
+                // recenter the negative L1 outputs before ReLU (§2.2)
+                gamma: vec![0.15; cout],
+                beta: vec![1.0; cout],
+                mean: vec![-6.0; cout],
+                var: vec![1.0; cout],
+                eps: 1e-5,
+            },
+        })),
+    };
+    stage(16, 32, rng, &mut layers);
+    layers.push(FloatLayer::Relu);
+    layers.push(FloatLayer::MaxPool2);
+    stage(32, 32, rng, &mut layers);
+    layers.push(FloatLayer::Relu);
+    layers.push(FloatLayer::GlobalAvgPool);
+    layers.push(FloatLayer::Dense(FloatDense {
+        in_features: 32,
+        out_features: CLASSES,
+        weights: vec![0.0; 32 * CLASSES],
+        bias: vec![0.0; CLASSES],
+    }));
+    FloatModel {
+        name: format!("mcunet-{}", prim.name()),
+        input_shape: Shape::new(32, 32, 3),
+        layers,
+    }
+}
+
+/// Softmax-regression SGD on the *deployed* (int8, dequantized) features
+/// of the penultimate layer — quantization-aware head training: the head
+/// sees exactly the features the MCU will produce at inference time.
+fn train_head_quantized(
+    fm: &mut FloatModel,
+    deployed: &convbench::nn::Model,
+    train: &[(Vec<f32>, usize)],
+) {
+    // extract deployed features once (all layers except the dense head)
+    let feats: Vec<(Vec<f32>, usize)> = train
+        .iter()
+        .map(|(x, y)| {
+            let mut t = Tensor::from_f32(deployed.input_shape, deployed.input_q, x);
+            for layer in &deployed.layers[..deployed.layers.len() - 1] {
+                t = layer.forward(&t, true, &mut NoopMonitor);
+            }
+            (t.to_f32(), *y)
+        })
+        .collect();
+    let d = feats[0].0.len();
+    let mut w = vec![0f32; d * CLASSES];
+    let mut b = vec![0f32; CLASSES];
+    let lr = 0.15;
+    for _epoch in 0..150 {
+        for (f, y) in &feats {
+            // logits + softmax
+            let mut z: Vec<f32> = (0..CLASSES)
+                .map(|k| b[k] + (0..d).map(|i| w[k * d + i] * f[i]).sum::<f32>())
+                .collect();
+            let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for zk in z.iter_mut() {
+                *zk = (*zk - zmax).exp();
+                sum += *zk;
+            }
+            for k in 0..CLASSES {
+                let p = z[k] / sum;
+                let g = p - if k == *y { 1.0 } else { 0.0 };
+                for i in 0..d {
+                    w[k * d + i] -= lr * g * f[i];
+                }
+                b[k] -= lr * g;
+            }
+        }
+    }
+    if let Some(FloatLayer::Dense(dense)) = fm.layers.last_mut() {
+        dense.weights = w;
+        dense.bias = b;
+    } else {
+        panic!("model must end with a dense head");
+    }
+}
+
+/// Standardize each add-conv stage: set its BN to the per-channel
+/// mean/variance of the raw distance map measured on calibration data
+/// (gamma schedules a mild gain so ReLU keeps both tails).
+fn calibrate_add_bn(fm: &mut FloatModel, calib: &[Vec<f32>]) {
+    let add_idxs: Vec<usize> = fm
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l, FloatLayer::AddConv(_)))
+        .map(|(i, _)| i)
+        .collect();
+    for &i in &add_idxs {
+        // identity BN → forward_all exposes the raw distances at i+1
+        if let FloatLayer::AddConv(a) = &mut fm.layers[i] {
+            a.bn = BatchNorm::identity(a.out_channels);
+        }
+        let cout = match &fm.layers[i] {
+            FloatLayer::AddConv(a) => a.out_channels,
+            _ => unreachable!(),
+        };
+        let mut sum = vec![0f64; cout];
+        let mut sq = vec![0f64; cout];
+        let mut n = 0f64;
+        for x in calib {
+            let acts = fm.forward_all(x);
+            let raw = &acts[i + 1];
+            let per_ch = raw.len() / cout;
+            for (j, &v) in raw.iter().enumerate() {
+                let c = j % cout;
+                sum[c] += v as f64;
+                sq[c] += (v as f64) * (v as f64);
+                let _ = per_ch;
+            }
+            n += (raw.len() / cout) as f64;
+        }
+        if let FloatLayer::AddConv(a) = &mut fm.layers[i] {
+            let mean: Vec<f32> = sum.iter().map(|&s| (s / n) as f32).collect();
+            let var: Vec<f32> = sq
+                .iter()
+                .zip(&mean)
+                .map(|(&s2, &m)| ((s2 / n) as f32 - m * m).max(1e-4))
+                .collect();
+            a.bn = BatchNorm {
+                gamma: vec![1.0; cout],
+                beta: vec![0.0; cout],
+                mean,
+                var,
+                eps: 1e-5,
+            };
+        }
+    }
+}
+
+fn accuracy_float(fm: &FloatModel, set: &[(Vec<f32>, usize)]) -> f64 {
+    let hits = set
+        .iter()
+        .filter(|(x, y)| {
+            let logits = fm.forward(x);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            pred == *y
+        })
+        .count();
+    hits as f64 / set.len() as f64
+}

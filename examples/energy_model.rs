@@ -1,0 +1,55 @@
+//! The §4.2 "influence of other factors" experiments: frequency (Fig. 4 +
+//! Table 3) and compiler optimization level (Table 4), plus the energy
+//! linearity analysis of §4.1 over the full Table 2 point cloud.
+//!
+//! Run: `cargo run --release --example energy_model -- [--quick]`
+
+use convbench::harness::{
+    fig4_frequency_sweep, regressions, run_all, table2_plans, table3_power, table4_optlevel,
+};
+use convbench::harness::quick_plans;
+use convbench::mcu::McuConfig;
+use convbench::report::{fig4_csv, table3_markdown, table4_markdown};
+use convbench::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+
+    // --- Fig. 4: latency & energy vs MCU frequency
+    let freqs: Vec<f64> = (1..=8).map(|i| 10.0 * i as f64).collect();
+    let pts = fig4_frequency_sweep(&freqs);
+    println!("Fig. 4 — §4.2 layer across 10–80 MHz\n");
+    println!("{}", fig4_csv(&pts));
+    let e10 = pts.first().unwrap().scalar.energy_mj;
+    let e80 = pts.last().unwrap().scalar.energy_mj;
+    println!(
+        "energy at 10 MHz {:.2} mJ → at 80 MHz {:.2} mJ: running at max frequency saves {:.0}% (the paper's conclusion)\n",
+        e10,
+        e80,
+        100.0 * (1.0 - e80 / e10)
+    );
+
+    // --- Table 3: the power model the paper measured
+    println!("Table 3 — average power (mW)\n");
+    println!("{}", table3_markdown(&table3_power()));
+
+    // --- Table 4: optimization level
+    println!("Table 4 — optimization level effect (§4.2 layer, 84 MHz)\n");
+    println!("{}", table4_markdown(&table4_optlevel()));
+
+    // --- §4.1 linearity over the full experiment cloud
+    let plans = if args.flag("quick") {
+        quick_plans()
+    } else {
+        table2_plans()
+    };
+    let points = run_all(&plans, &McuConfig::default());
+    let r = regressions(&points).expect("point cloud");
+    println!("§4.1 linearity over {} points\n", points.len());
+    println!("{}", r.to_markdown());
+    assert!(
+        r.simd_latency_beats_macs(),
+        "expected the paper's SIMD finding to hold"
+    );
+    println!("✓ with SIMD, latency predicts energy better than theoretical MACs");
+}

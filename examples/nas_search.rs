@@ -1,0 +1,54 @@
+//! Hardware-aware architecture search over the primitive space — the
+//! paper's closing direction ("our work opens up new possibilities for
+//! neural architecture search algorithms"): exhaustively score every
+//! per-stage primitive assignment of MCU-Net on the simulated STM32F401
+//! (latency, energy, flash, SRAM) and print the latency/energy Pareto
+//! front plus budgeted picks.
+//!
+//! Run: `cargo run --release --example nas_search -- [--budget-mj 5.0]`
+
+use convbench::harness::{
+    best_under_energy_budget, nas_enumerate, nas_markdown, pareto_front,
+};
+use convbench::mcu::McuConfig;
+use convbench::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = McuConfig::default();
+
+    eprintln!("scoring 36 candidates on the simulated MCU…");
+    let scored = nas_enumerate(&cfg);
+
+    let mut all: Vec<&_> = scored.iter().collect();
+    all.sort_by(|a, b| a.mcu.energy_mj.partial_cmp(&b.mcu.energy_mj).unwrap());
+    println!("## Full space (by energy)\n");
+    println!("{}", nas_markdown(&all));
+
+    let front = pareto_front(&scored);
+    println!("## Latency/energy Pareto front\n");
+    println!("{}", nas_markdown(&front));
+
+    for budget in [args.get_or("budget-mj", 5.0f64), 10.0, 20.0] {
+        match best_under_energy_budget(&scored, budget) {
+            Some(c) => println!(
+                "budget {budget:>5.1} mJ → {} + {} ({:.2} ms, {:.3} mJ)",
+                c.candidate.stage1.name(),
+                c.candidate.stage2.name(),
+                1e3 * c.mcu.latency_s,
+                c.mcu.energy_mj
+            ),
+            None => println!("budget {budget:>5.1} mJ → no deployable candidate"),
+        }
+    }
+
+    // sanity: the front must contain a shift-based config (Table 1's most
+    // MAC-efficient primitive) at the low-energy end
+    let cheapest = front.last().unwrap();
+    println!(
+        "\ncheapest deployable: {} + {} at {:.3} mJ",
+        cheapest.candidate.stage1.name(),
+        cheapest.candidate.stage2.name(),
+        cheapest.mcu.energy_mj
+    );
+}

@@ -1,0 +1,44 @@
+//! §Perf A/B micro-bench (same-process, noise-immune): the optimized i16
+//! `mat_mult_2x2` vs the indexed-style i8 `mat_mult_block` at the same
+//! 2×2 blocking and data — the evidence behind EXPERIMENTS.md §Perf
+//! iterations 1–2.
+//!
+//! Run: `cargo run --release --example perf_ab`
+use convbench::nn::blocking::mat_mult_block;
+use convbench::nn::im2col::mat_mult_2x2;
+use convbench::nn::NoopMonitor;
+use convbench::util::bench::Bench;
+use convbench::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let k = 144usize; // Hk²·Cx of the paper's 3×3×16 layers
+    let mut wa8 = vec![0i8; k];
+    rng.fill_i8(&mut wa8, -64, 63);
+    let mut wb8 = vec![0i8; k];
+    rng.fill_i8(&mut wb8, -64, 63);
+    let wa: Vec<i16> = wa8.iter().map(|&w| w as i16).collect();
+    let wb: Vec<i16> = wb8.iter().map(|&w| w as i16).collect();
+    let pa: Vec<i16> = (0..k).map(|_| rng.i8_range(-64, 63) as i16).collect();
+    let pb: Vec<i16> = (0..k).map(|_| rng.i8_range(-64, 63) as i16).collect();
+
+    let mut b = Bench::new();
+    let new1 = b
+        .run("matmul2x2/optimized_i16", || {
+            mat_mult_2x2(&wa, &wb, &pa, &pb, 0, 0, &mut NoopMonitor)
+        })
+        .mean_ns();
+    let old = b
+        .run("matmul2x2/indexed_i8_block", || {
+            mat_mult_block(&[&wa8, &wb8], &[&pa, &pb], &[0, 0], &mut NoopMonitor)
+        })
+        .mean_ns();
+    let new2 = b
+        .run("matmul2x2/optimized_i16_again", || {
+            mat_mult_2x2(&wa, &wb, &pa, &pb, 0, 0, &mut NoopMonitor)
+        })
+        .mean_ns();
+    let speedup = old / new1.min(new2);
+    println!("kernel speedup (same process): {speedup:.2}x");
+    assert!(speedup > 1.5, "optimized kernel regressed: {speedup:.2}x");
+}

@@ -1,0 +1,17 @@
+//! §Perf profiling driver: a steady-state workload for `perf record`
+//! (the methodology of EXPERIMENTS.md §Perf).
+//!
+//! Run: `perf record -o perf.data cargo run --release --example perf_driver`
+use convbench::mcu::calib::anchor_layer;
+use convbench::nn::NoopMonitor;
+
+fn main() {
+    let (conv, x) = anchor_layer();
+    for _ in 0..2000 {
+        std::hint::black_box(conv.forward_simd(&x, &mut NoopMonitor));
+    }
+    for _ in 0..500 {
+        std::hint::black_box(conv.forward_scalar(&x, &mut NoopMonitor));
+    }
+    println!("perf_driver done");
+}

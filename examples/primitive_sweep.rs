@@ -1,0 +1,66 @@
+//! The paper's §4.1 experiment, end to end: run the Table 2 sweeps on the
+//! simulated MCU and print the Fig. 2 panels (a–f) plus the Fig. 3
+//! memory-access-ratio panel for one chosen experiment.
+//!
+//! Run: `cargo run --release --example primitive_sweep -- [--exp N] [--quick]`
+
+use convbench::analytic::Primitive;
+use convbench::harness::{quick_plans, run_sweep, table2_plans};
+use convbench::mcu::McuConfig;
+use convbench::report::figure_panel_markdown;
+use convbench::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let exp: usize = args.get_or("exp", 2); // kernel-size sweep by default
+    let plans = if args.flag("quick") {
+        quick_plans()
+    } else {
+        table2_plans()
+    };
+    let plan = plans
+        .iter()
+        .find(|p| p.id == exp)
+        .expect("--exp must be 1..=5");
+
+    eprintln!(
+        "running experiment {} ({} axis, {} values × 5 primitives)…",
+        plan.id,
+        plan.axis.name(),
+        plan.values.len()
+    );
+    let cfg = McuConfig::default();
+    let points = run_sweep(plan, &Primitive::ALL, &cfg);
+
+    for (title, f) in [
+        (
+            "a) theoretical MACs",
+            (|p| Some(p.theory.macs as f64)) as fn(&convbench::harness::SweepPoint) -> Option<f64>,
+        ),
+        ("b) latency without SIMD (s)", |p| Some(p.scalar.latency_s)),
+        ("c) energy without SIMD (mJ)", |p| Some(p.scalar.energy_mj)),
+        ("d) latency with SIMD (s)", |p| p.simd.map(|m| m.latency_s)),
+        ("e) energy with SIMD (mJ)", |p| p.simd.map(|m| m.energy_mj)),
+        ("f) SIMD speedup", |p| p.speedup()),
+        ("fig3) mem-access ratio (no-SIMD / SIMD, per MAC)", |p| {
+            p.mem_access_ratio()
+        }),
+    ] {
+        println!(
+            "{}",
+            figure_panel_markdown(&points, plan.id, plan.axis.name(), title, f)
+        );
+    }
+
+    // the paper's headline observation on this data
+    let std_speedups: Vec<f64> = points
+        .iter()
+        .filter(|p| p.primitive == Primitive::Standard)
+        .filter_map(|p| p.speedup())
+        .collect();
+    println!(
+        "standard conv SIMD speedup across the sweep: {:.2}x – {:.2}x (paper's Os anchor: 7.55x)",
+        std_speedups.iter().cloned().fold(f64::INFINITY, f64::min),
+        std_speedups.iter().cloned().fold(0.0, f64::max),
+    );
+}

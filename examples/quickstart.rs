@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Build a quantized convolution layer (any primitive).
+//! 2. Run it through the int8 engine, scalar and SIMD — bit-exact.
+//! 3. Put it on the simulated STM32F401 and read latency/energy — the
+//!    paper's measurement loop in five lines.
+//! 4. If `artifacts/` exists, run the same computation through the
+//!    JAX/Pallas-lowered HLO on the PJRT runtime and verify bit-exactness
+//!    across the language boundary.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use convbench::analytic::{costs, Primitive};
+use convbench::coordinator::{artifact_inputs, kernel_layer};
+use convbench::harness::measure_model;
+use convbench::mcu::McuConfig;
+use convbench::models::{experiment_input, experiment_layer};
+use convbench::nn::NoopMonitor;
+use convbench::runtime::{artifact_path, Runtime};
+
+fn main() {
+    // --- 1. a layer configuration straight from the paper's Table 2
+    let p = kernel_layer(); // groups=2, kernel=3, width=8, Cx=4, Cy=4
+    println!("layer: {p:?}");
+
+    for prim in Primitive::ALL {
+        // --- 2. the quantized engine model for this primitive
+        let model = experiment_layer(&p, prim, convbench::coordinator::validate::VALIDATE_SEED);
+        let x = experiment_input(&p, convbench::coordinator::validate::VALIDATE_SEED);
+        let y_scalar = model.forward(&x, false, &mut NoopMonitor);
+        let y_simd = model.forward(&x, true, &mut NoopMonitor);
+        assert_eq!(y_scalar.data, y_simd.data, "scalar/SIMD parity");
+
+        // --- 3. simulated MCU measurement (84 MHz, -Os)
+        let cfg = McuConfig::default();
+        let scalar = measure_model(&model, &x, false, &cfg);
+        let simd = measure_model(&model, &x, true, &cfg);
+        let theory = costs(&p, prim);
+        println!(
+            "{:<9} macs {:>6}  scalar {:>8.3} ms / {:>7.4} mJ   simd {:>8.3} ms / {:>7.4} mJ   speedup {:>4.2}x",
+            prim.name(),
+            theory.macs,
+            1e3 * scalar.latency_s,
+            scalar.energy_mj,
+            1e3 * simd.latency_s,
+            simd.energy_mj,
+            scalar.latency_s / simd.latency_s,
+        );
+
+        // --- 4. cross-layer check against the AOT artifact (if built)
+        let path = artifact_path("artifacts", &format!("kernel_{}", prim.name()));
+        if std::path::Path::new(&path).exists() {
+            let rt = Runtime::cpu().expect("pjrt cpu client");
+            let loaded = rt.load_hlo_text(&path).expect("load artifact");
+            let outs = loaded.run_i32(&artifact_inputs(&model, &x)).expect("execute");
+            let want: Vec<i32> = y_simd.data.iter().map(|&v| v as i32).collect();
+            assert_eq!(outs[0], want, "{}: engine vs HLO artifact", prim.name());
+            println!("          ✓ bit-exact vs JAX/Pallas artifact ({path})");
+        }
+    }
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,15 @@
+//! Serving demo: deploy all five MCU-Net variants behind the threaded
+//! inference service and fire a random request mix — the L3 "router"
+//! loop with per-model simulated MCU cost accounting.
+//!
+//! Run: `cargo run --release --example serve -- [--requests N] [--workers W]`
+
+use convbench::coordinator::serve_cli;
+use convbench::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let requests = args.get_or("requests", 200usize);
+    let workers = args.get_or("workers", 4usize);
+    serve_cli(requests, workers);
+}

@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** artifacts for the rust
+PJRT runtime.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/load_hlo and its README.
+
+Usage (from ``python/``):  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The kernel-artifact layer configuration — must match
+# rust/src/coordinator/validate.rs::kernel_layer(): G=2, K=3, W=8, Cx=4, Cy=4.
+GROUPS, K, W, CX, CY = 2, 3, 8, 4, 4
+
+I32 = jnp.int32
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, I32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, fn, ref_fn, arg specs) for every kernel artifact. The
+    argument order mirrors ``validate.rs::artifact_inputs``."""
+    x = spec((W, W, CX))
+    s = spec((1,))
+    return [
+        (
+            "kernel_standard",
+            model.kernel_standard,
+            model.ref_standard,
+            [x, spec((CY, K, K, CX)), spec((CY,)), s],
+        ),
+        (
+            "kernel_grouped",
+            model.make_kernel_grouped(GROUPS),
+            model.make_ref_grouped(GROUPS),
+            [x, spec((CY, K, K, CX // GROUPS)), spec((CY,)), s],
+        ),
+        (
+            "kernel_dws",
+            model.kernel_dws,
+            model.ref_dws,
+            [x, spec((CX, K, K)), spec((CX,)), spec((CY, 1, 1, CX)), spec((CY,)), s, s],
+        ),
+        (
+            "kernel_shift",
+            model.kernel_shift,
+            model.ref_shift,
+            [x, spec((CY, CX)), spec((CY,)), s],
+        ),
+        (
+            "kernel_add",
+            model.kernel_add,
+            model.ref_add,
+            [x, spec((CY, K, K, CX)), spec((CY,)), spec((CY,)), spec((CY,)), s, s],
+        ),
+    ]
+
+
+def selfcheck(fn, ref_fn, specs, name, rng):
+    """Before writing an artifact, run the pallas graph against the
+    pure-jnp oracle on random int8-range data."""
+    args = []
+    for sp in specs:
+        if sp.shape == (1,):
+            args.append(jnp.array([rng.integers(0, 10)], I32))
+        else:
+            args.append(jnp.asarray(rng.integers(-100, 100, sp.shape), I32))
+    got = fn(*args)[0]
+    want = ref_fn(*args)[0]
+    if not np.array_equal(np.asarray(got), np.asarray(want)):
+        diff = int(np.sum(np.asarray(got) != np.asarray(want)))
+        raise AssertionError(f"{name}: pallas vs ref mismatch on {diff} elements")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) single-artifact sentinel path")
+    ap.add_argument("--skip-selfcheck", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    rng = np.random.default_rng(0xA07E57)
+    for name, fn, ref_fn, specs in artifact_specs():
+        if not args.skip_selfcheck:
+            selfcheck(fn, ref_fn, specs, name, rng)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    # legacy sentinel for the Makefile (`artifacts/model.hlo.txt`): the
+    # standard-conv kernel doubles as "the model" artifact
+    sentinel = os.path.join(out_dir, "model.hlo.txt")
+    std = os.path.join(out_dir, "kernel_standard.hlo.txt")
+    with open(std) as fsrc, open(sentinel, "w") as fdst:
+        fdst.write(fsrc.read())
+    print(f"wrote {sentinel}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

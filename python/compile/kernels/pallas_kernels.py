@@ -1,0 +1,172 @@
+"""Layer-1 Pallas kernels — the compute hot-spots of every primitive.
+
+TPU hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+CMSIS-NN insight is *register-file data reuse* (2 patches × 2 filters
+blocked over ``__SMLAD``). The TPU analog is conv-as-matmul with
+VMEM-resident tiles feeding the MXU: the im2col matrix is tiled over rows
+(patches) by a ``BlockSpec`` grid while the weight panel stays resident,
+which is exactly the HBM↔VMEM schedule the paper expressed with its
+2-patch im2col buffer.
+
+All kernels run in ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls) and in int32 so the lowered HLO is bit-exact with the
+rust engine. Shapes here are build-time small; the BlockSpec tiling is
+what would carry over to a real TPU lowering (tile sizes asserted
+(8, 128)-aligned when the dims allow it).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+
+# Row-block size of the im2col matmul grid (the "2 patches at a time" of
+# CMSIS-NN becomes an 8-row VMEM tile — the MXU sublane count).
+BLOCK_M = 8
+
+
+def _qmatmul_kernel(p_ref, w_ref, b_ref, s_ref, o_ref):
+    """One grid step: an (bm, K) patch tile × (K, N) weight panel.
+
+    acc[bm, N] = patches · weights + bias  →  sat((acc) >> shift)
+    """
+    acc = jnp.dot(p_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...][None, :]
+    shift = s_ref[0]
+    right = jax.lax.shift_right_arithmetic(acc, jnp.broadcast_to(jnp.maximum(shift, 0), acc.shape))
+    left = jax.lax.shift_left(acc, jnp.broadcast_to(jnp.maximum(-shift, 0), acc.shape))
+    o_ref[...] = jnp.clip(jnp.where(shift >= 0, right, left), -128, 127)
+
+
+def qmatmul(patches, weights, bias, out_shift):
+    """Quantized matmul: ``patches[M, K] × weights[K, N]`` with bias and
+    power-of-two requantization — the shared engine behind the standard,
+    grouped, pointwise and shift primitives (they differ only in how the
+    patch matrix is gathered).
+
+    M is padded to a multiple of BLOCK_M and tiled by the Pallas grid.
+    """
+    m, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    m_pad = (m + BLOCK_M - 1) // BLOCK_M * BLOCK_M
+    patches_p = jnp.pad(patches, ((0, m_pad - m), (0, 0)))
+    grid = (m_pad // BLOCK_M,)
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),   # patch tile walks M
+            pl.BlockSpec((k, n), lambda i: (0, 0)),          # weight panel resident
+            pl.BlockSpec((n,), lambda i: (0,)),              # bias resident
+            pl.BlockSpec((1,), lambda i: (0,)),              # shift scalar
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.int32),
+        interpret=True,
+    )(patches_p, weights, bias, out_shift)
+    return out[:m]
+
+
+def _qdepthwise_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, *, k, h, w):
+    """Depthwise conv over a padded HWC tile: per-channel K×K MAC."""
+    c = x_ref.shape[-1]
+    acc = jnp.broadcast_to(b_ref[...][None, None, :], (h, w, c)).astype(jnp.int32)
+    for i in range(k):
+        for j in range(k):
+            acc = acc + x_ref[i : i + h, j : j + w, :] * w_ref[:, i, j][None, None, :]
+    shift = s_ref[0]
+    right = jax.lax.shift_right_arithmetic(acc, jnp.broadcast_to(jnp.maximum(shift, 0), acc.shape))
+    left = jax.lax.shift_left(acc, jnp.broadcast_to(jnp.maximum(-shift, 0), acc.shape))
+    o_ref[...] = jnp.clip(jnp.where(shift >= 0, right, left), -128, 127)
+
+
+def qdepthwise(x, w, bias, out_shift):
+    """Depthwise convolution kernel: ``x[H, W, C]``, ``w[C, K, K]``."""
+    h, wd, c = x.shape
+    _, k, _ = w.shape
+    pad = k // 2
+    xp = quant.pad_hwc(x, pad)
+    kernel = functools.partial(_qdepthwise_kernel, k=k, h=h, w=wd)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, wd, c), jnp.int32),
+        interpret=True,
+    )(xp, w, bias, out_shift)
+
+
+def _qaddconv_kernel(p_ref, w_ref, b_ref, s_ref, o_ref):
+    """Add-conv tile: acc[m, n] = bias[n] − Σ_k |p[m, k] − w[k, n]|.
+
+    The L1-distance analog of the matmul tile (Eq. 3); no MXU mapping
+    exists (the paper's "no __SMLAD for add convolutions" holds on TPU
+    too — this runs on the VPU), so the tile is pure vector work.
+    """
+    p = p_ref[...]  # (bm, K)
+    w = w_ref[...]  # (K, N)
+    diff = jnp.abs(p[:, :, None] - w[None, :, :])  # (bm, K, N)
+    acc = b_ref[...][None, :] - jnp.sum(diff, axis=1)
+    shift = s_ref[0]
+    right = jax.lax.shift_right_arithmetic(acc, jnp.broadcast_to(jnp.maximum(shift, 0), acc.shape))
+    left = jax.lax.shift_left(acc, jnp.broadcast_to(jnp.maximum(-shift, 0), acc.shape))
+    o_ref[...] = jnp.clip(jnp.where(shift >= 0, right, left), -128, 127)
+
+
+def qaddconv_matmul(patches, weights, bias, out_shift):
+    """Add-convolution over an im2col patch matrix (same tiling as
+    [`qmatmul`]). Padded taps are true zeros in `patches`, contributing
+    −|w| as the engine does."""
+    m, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2
+    m_pad = (m + BLOCK_M - 1) // BLOCK_M * BLOCK_M
+    patches_p = jnp.pad(patches, ((0, m_pad - m), (0, 0)))
+    grid = (m_pad // BLOCK_M,)
+    out = pl.pallas_call(
+        _qaddconv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.int32),
+        interpret=True,
+    )(patches_p, weights, bias, out_shift)
+    return out[:m]
+
+
+def _bn_kernel(x_ref, m_ref, b_ref, s_ref, o_ref):
+    """Integer batch-norm tile: sat((x·m + b) >> shift)."""
+    acc = x_ref[...] * m_ref[...][None, :] + b_ref[...][None, :]
+    shift = s_ref[0]
+    right = jax.lax.shift_right_arithmetic(acc, jnp.broadcast_to(jnp.maximum(shift, 0), acc.shape))
+    left = jax.lax.shift_left(acc, jnp.broadcast_to(jnp.maximum(-shift, 0), acc.shape))
+    o_ref[...] = jnp.clip(jnp.where(shift >= 0, right, left), -128, 127)
+
+
+def qbatchnorm(x, m, b, out_shift):
+    """Integer BN over ``x[P, C]`` rows (flattened spatial × channels)."""
+    p, c = x.shape
+    p_pad = (p + BLOCK_M - 1) // BLOCK_M * BLOCK_M
+    xp = jnp.pad(x, ((0, p_pad - p), (0, 0)))
+    grid = (p_pad // BLOCK_M,)
+    out = pl.pallas_call(
+        _bn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, c), jnp.int32),
+        interpret=True,
+    )(xp, m, b, out_shift)
+    return out[:p]

@@ -1,0 +1,55 @@
+"""Shared quantization helpers for the build-time JAX path.
+
+Bit-exact counterparts of ``rust/src/quant/mod.rs``: power-of-two
+requantization is a plain *arithmetic* right shift (the paper's Alg. 1),
+saturation clips to the int8 range. All arithmetic runs in int32 — the
+artifact interface carries int8 values sign-extended to i32, so rust and
+JAX compute the identical integers.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def sat_i8(x):
+    """Saturate an int32 tensor to the int8 value range (stays int32)."""
+    return jnp.clip(x, INT8_MIN, INT8_MAX)
+
+
+def requantize(acc, shift):
+    """Arithmetic shift with sign-aware direction, matching
+    ``quant::requantize``: right shift for ``shift >= 0`` (truncating
+    toward -inf), left shift otherwise. ``shift`` is a scalar i32 tensor.
+    """
+    shift = jnp.asarray(shift, jnp.int32).reshape(())
+    right = lax.shift_right_arithmetic(acc, jnp.broadcast_to(jnp.maximum(shift, 0), acc.shape))
+    left = lax.shift_left(acc, jnp.broadcast_to(jnp.maximum(-shift, 0), acc.shape))
+    return jnp.where(shift >= 0, right, left)
+
+
+def requantize_sat(acc, shift):
+    """`requantize` then saturate — the per-output epilogue of every
+    quantized layer (Alg. 1)."""
+    return sat_i8(requantize(acc, shift))
+
+
+def pad_hwc(x, pad):
+    """Zero-pad the two spatial dims of an HWC tensor."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+
+
+def uniform_shifts(channels, kernel):
+    """The shared shift-assignment rule (must mirror
+    ``nn::shift::uniform_shifts``): channels distributed over the
+    kernel×kernel offset grid, centered."""
+    half = kernel // 2
+    out = []
+    for m in range(channels):
+        cell = m % (kernel * kernel)
+        out.append((cell // kernel - half, cell % kernel - half))
+    return out

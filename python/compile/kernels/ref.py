@@ -1,0 +1,117 @@
+"""Pure-jnp oracle for every primitive — the correctness reference the
+Pallas kernels are tested against (and an independent implementation of
+the rust engine's integer semantics).
+
+All functions take/return int32 tensors holding int8-range values, HWC
+layout, and mirror the engine's weight layouts:
+
+* standard/grouped: ``w[Cy, K, K, Cx/G]``
+* depthwise:        ``w[C, K, K]``
+* pointwise/shift:  ``w[Cy, Cx]``
+* add:              ``w[Cy, K, K, Cx]``
+"""
+
+import jax.numpy as jnp
+
+from . import quant
+
+
+def conv_standard(x, w, bias, out_shift, groups=1):
+    """Grouped/standard convolution (Eq. 1), same-padding, stride 1."""
+    h, wdt, cx = x.shape
+    cy, k, _, cpg = w.shape
+    assert cx == cpg * groups, f"cx={cx} vs cpg*groups={cpg * groups}"
+    fpg = cy // groups
+    pad = k // 2
+    xp = quant.pad_hwc(x, pad)
+    out = jnp.zeros((h, wdt, cy), jnp.int32)
+    for n in range(cy):
+        g = n // fpg
+        acc = jnp.full((h, wdt), bias[n], jnp.int32)
+        for i in range(k):
+            for j in range(k):
+                patch = jnp.asarray(
+                    xp[i : i + h, j : j + wdt, g * cpg : (g + 1) * cpg], jnp.int32
+                )
+                acc = acc + jnp.sum(patch * w[n, i, j][None, None, :], axis=-1)
+        out = out.at[:, :, n].set(acc)
+    return quant.requantize_sat(out, out_shift)
+
+
+def conv_depthwise(x, w, bias, out_shift):
+    """Depthwise convolution: one K×K filter per channel."""
+    h, wdt, c = x.shape
+    _, k, _ = w.shape
+    pad = k // 2
+    xp = quant.pad_hwc(x, pad)
+    acc = jnp.broadcast_to(bias[None, None, :], (h, wdt, c)).astype(jnp.int32)
+    for i in range(k):
+        for j in range(k):
+            acc = acc + jnp.asarray(xp[i : i + h, j : j + wdt, :], jnp.int32) * w[:, i, j][
+                None, None, :
+            ]
+    return quant.requantize_sat(acc, out_shift)
+
+
+def conv_pointwise(x, w, bias, out_shift):
+    """1×1 convolution: ``w[Cy, Cx]``."""
+    acc = jnp.tensordot(jnp.asarray(x, jnp.int32), w.T, axes=1) + bias[None, None, :]
+    return quant.requantize_sat(acc, out_shift)
+
+
+def shifted_input(x, shifts):
+    """Eq. 2: per-channel spatial shift with zero padding."""
+    h, wdt, _ = x.shape
+    cols = []
+    for m, (a, b) in enumerate(shifts):
+        plane = x[:, :, m]
+        plane = jnp.roll(plane, (-a, -b), axis=(0, 1))
+        # zero the wrapped-around region
+        hh = jnp.arange(h)[:, None]
+        ww = jnp.arange(wdt)[None, :]
+        valid_h = (hh + a >= 0) & (hh + a < h)
+        valid_w = (ww + b >= 0) & (ww + b < wdt)
+        cols.append(jnp.where(valid_h & valid_w, plane, 0))
+    return jnp.stack(cols, axis=-1)
+
+
+def conv_shift(x, w, bias, out_shift, kernel=3):
+    """Shift convolution: per-channel shift (uniform rule) + pointwise."""
+    shifts = quant.uniform_shifts(x.shape[2], kernel)
+    inter = shifted_input(x, shifts)
+    return conv_pointwise(inter, w, bias, out_shift)
+
+
+def conv_add(x, w, bias, out_shift):
+    """Add (L1-norm) convolution (Eq. 3): padded taps contribute −|w|."""
+    h, wdt, cx = x.shape
+    cy, k, _, _ = w.shape
+    pad = k // 2
+    xp = quant.pad_hwc(x, pad)
+    out = jnp.zeros((h, wdt, cy), jnp.int32)
+    for n in range(cy):
+        acc = jnp.full((h, wdt), bias[n], jnp.int32)
+        for i in range(k):
+            for j in range(k):
+                patch = jnp.asarray(xp[i : i + h, j : j + wdt, :], jnp.int32)
+                acc = acc - jnp.sum(jnp.abs(patch - w[n, i, j][None, None, :]), axis=-1)
+        out = out.at[:, :, n].set(acc)
+    return quant.requantize_sat(out, out_shift)
+
+
+def batchnorm_int(x, m, b, out_shift):
+    """Integer BN (per channel): ``sat((x·m + b) >> shift)``."""
+    acc = jnp.asarray(x, jnp.int32) * m[None, None, :] + b[None, None, :]
+    return quant.requantize_sat(acc, out_shift)
+
+
+def dws(x, w_dw, b_dw, w_pw, b_pw, dw_shift, pw_shift):
+    """Depthwise-separable: depthwise then pointwise."""
+    mid = conv_depthwise(x, w_dw, b_dw, dw_shift)
+    return conv_pointwise(mid, w_pw, b_pw, pw_shift)
+
+
+def add_bn(x, w, bias, bn_m, bn_b, out_shift, bn_shift):
+    """Add-convolution followed by its mandatory integer BN (§2.2/§3.2)."""
+    raw = conv_add(x, w, bias, out_shift)
+    return batchnorm_int(raw, bn_m, bn_b, bn_shift)

@@ -1,0 +1,152 @@
+"""Layer-2 JAX graphs: one function per primitive, composing the Pallas
+kernels (L1) behind jnp im2col gathers — the computation each HLO artifact
+carries.
+
+The artifact I/O contract is shared with
+``rust/src/coordinator/validate.rs::artifact_inputs``: activations in HWC,
+weights in the engine's layouts, every layer parameter a runtime argument,
+per-layer requantization shifts appended last as ``[1]``-shaped i32
+tensors. Everything is int32 holding int8-range values, so rust and JAX
+compute identical integers.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as pk
+from .kernels import quant
+
+
+def im2col(x, kernel, ch0, ch):
+    """Patch matrix ``[H·W, K·K·ch]`` for channels ``[ch0, ch0+ch)`` with
+    same-padding — the jnp counterpart of ``nn::im2col::fill_patch_q15``.
+    """
+    h, w, _ = x.shape
+    pad = kernel // 2
+    xp = quant.pad_hwc(x[:, :, ch0 : ch0 + ch], pad)
+    cols = []
+    for i in range(kernel):
+        for j in range(kernel):
+            cols.append(xp[i : i + h, j : j + w, :].reshape(h * w, ch))
+    return jnp.concatenate(cols, axis=1)
+
+
+def im2col_shifted(x, kernel):
+    """The modified im2col of §3.3 for shift convolution: a ``1×1×Cx``
+    patch per pixel, each channel sampled at its own shifted coordinate."""
+    shifts = quant.uniform_shifts(x.shape[2], kernel)
+    inter = _shifted_input(x, shifts)
+    h, w, c = inter.shape
+    return inter.reshape(h * w, c)
+
+
+def _shifted_input(x, shifts):
+    h, w, _ = x.shape
+    cols = []
+    for m, (a, b) in enumerate(shifts):
+        plane = jnp.roll(x[:, :, m], (-a, -b), axis=(0, 1))
+        hh = jnp.arange(h)[:, None]
+        ww = jnp.arange(w)[None, :]
+        valid = (hh + a >= 0) & (hh + a < h) & (ww + b >= 0) & (ww + b < w)
+        cols.append(jnp.where(valid, plane, 0))
+    return jnp.stack(cols, axis=-1)
+
+
+def kernel_standard(x, w, bias, out_shift):
+    """Standard convolution: im2col + Pallas qmatmul."""
+    h, wd, _ = x.shape
+    cy, k, _, cpg = w.shape
+    patches = im2col(x, k, 0, cpg)
+    wmat = w.reshape(cy, k * k * cpg).T  # (K·K·Cpg, Cy)
+    out = pk.qmatmul(patches, wmat, bias, out_shift)
+    return (out.reshape(h, wd, cy),)
+
+
+def make_kernel_grouped(groups):
+    """Grouped convolution: Lai et al.'s algorithm applied per group
+    (§3.3), each group an independent qmatmul."""
+
+    def kernel_grouped(x, w, bias, out_shift):
+        h, wd, cx = x.shape
+        cy, k, _, cpg = w.shape
+        fpg = cy // groups
+        outs = []
+        for g in range(groups):
+            patches = im2col(x, k, g * cpg, cpg)
+            wg = w[g * fpg : (g + 1) * fpg].reshape(fpg, k * k * cpg).T
+            bg = bias[g * fpg : (g + 1) * fpg]
+            outs.append(pk.qmatmul(patches, wg, bg, out_shift).reshape(h, wd, fpg))
+        return (jnp.concatenate(outs, axis=-1),)
+
+    return kernel_grouped
+
+
+def kernel_dws(x, w_dw, b_dw, w_pw, b_pw, dw_shift, pw_shift):
+    """Depthwise-separable: Pallas depthwise + pointwise qmatmul."""
+    h, wd, _ = x.shape
+    mid = pk.qdepthwise(x, w_dw, b_dw, dw_shift)
+    cy = w_pw.shape[0]
+    cx = w_pw.shape[-1]
+    patches = mid.reshape(h * wd, cx)
+    wmat = w_pw.reshape(cy, cx).T
+    out = pk.qmatmul(patches, wmat, b_pw, pw_shift)
+    return (out.reshape(h, wd, cy),)
+
+
+def kernel_shift(x, w, bias, out_shift):
+    """Shift convolution: shifted-gather im2col + pointwise qmatmul."""
+    h, wd, _ = x.shape
+    cy, cx = w.shape
+    patches = im2col_shifted(x, 3)
+    out = pk.qmatmul(patches, w.T, bias, out_shift)
+    return (out.reshape(h, wd, cy),)
+
+
+def kernel_add(x, w, bias, bn_m, bn_b, out_shift, bn_shift):
+    """Add convolution (+ its mandatory integer BN): im2col + the Pallas
+    L1-distance tile + the Pallas BN tile."""
+    h, wd, cx = x.shape
+    cy, k, _, _ = w.shape
+    patches = im2col(x, k, 0, cx)
+    wmat = w.reshape(cy, k * k * cx).T
+    raw = pk.qaddconv_matmul(patches, wmat, bias, out_shift)
+    out = pk.qbatchnorm(raw, bn_m, bn_b, bn_shift)
+    return (out.reshape(h, wd, cy),)
+
+
+# ---------------------------------------------------------------------------
+# reference (pure-jnp) counterparts of each artifact — used by pytest and
+# by aot.py's self-check before writing an artifact.
+
+
+def ref_standard(x, w, bias, out_shift):
+    from .kernels import ref
+
+    return (ref.conv_standard(x, w, bias, out_shift, groups=1),)
+
+
+def make_ref_grouped(groups):
+    from .kernels import ref
+
+    def ref_grouped(x, w, bias, out_shift):
+        return (ref.conv_standard(x, w, bias, out_shift, groups=groups),)
+
+    return ref_grouped
+
+
+def ref_dws(x, w_dw, b_dw, w_pw, b_pw, dw_shift, pw_shift):
+    from .kernels import ref
+
+    cy = w_pw.shape[0]
+    return (ref.dws(x, w_dw, b_dw, w_pw.reshape(cy, -1), b_pw, dw_shift, pw_shift),)
+
+
+def ref_shift(x, w, bias, out_shift):
+    from .kernels import ref
+
+    return (ref.conv_shift(x, w, bias, out_shift, kernel=3),)
+
+
+def ref_add(x, w, bias, bn_m, bn_b, out_shift, bn_shift):
+    from .kernels import ref
+
+    return (ref.add_bn(x, w, bias, bn_m, bn_b, out_shift, bn_shift),)

@@ -1,0 +1,211 @@
+"""THE core correctness signal: every Pallas kernel against the pure-jnp
+oracle (ref.py), over hypothesis-drawn shapes and values.
+
+interpret=True makes Pallas slow, so shapes stay small; the sweep coverage
+comes from hypothesis drawing kernel sizes, channel counts, widths and
+shift values.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+I32 = jnp.int32
+
+
+def rand(rng, shape, lo=-100, hi=100):
+    return jnp.asarray(rng.integers(lo, hi, shape), I32)
+
+
+def scalar(v):
+    return jnp.array([v], I32)
+
+
+shapes = dict(
+    h=st.integers(3, 8),
+    cx=st.integers(1, 6),
+    cy=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    shift=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+
+
+class TestQMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 20),
+        k=st.integers(1, 24),
+        n=st.integers(1, 8),
+        shift=st.integers(0, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_plain_dot(self, m, k, n, shift, seed):
+        rng = np.random.default_rng(seed)
+        p = rand(rng, (m, k))
+        w = rand(rng, (k, n))
+        b = rand(rng, (n,), -1000, 1000)
+        got = pk.qmatmul(p, w, b, scalar(shift))
+        acc = np.asarray(p) @ np.asarray(w) + np.asarray(b)[None, :]
+        want = np.clip(acc >> shift, -128, 127)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_blocking_boundary_exact_multiple(self):
+        rng = np.random.default_rng(1)
+        p = rand(rng, (pk.BLOCK_M * 3, 4))
+        w = rand(rng, (4, 2))
+        b = jnp.zeros((2,), I32)
+        got = pk.qmatmul(p, w, b, scalar(0))
+        want = np.clip(np.asarray(p) @ np.asarray(w), -128, 127)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+class TestStandardConv:
+    @settings(max_examples=10, deadline=None)
+    @given(**shapes)
+    def test_pallas_vs_ref(self, h, cx, cy, k, shift, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (h, h, cx))
+        w = rand(rng, (cy, k, k, cx))
+        b = rand(rng, (cy,), -500, 500)
+        got = model.kernel_standard(x, w, b, scalar(shift))[0]
+        want = ref.conv_standard(x, w, b, scalar(shift), groups=1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestGroupedConv:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        g=st.sampled_from([1, 2, 4]),
+        cpg=st.integers(1, 3),
+        fpg=st.integers(1, 3),
+        h=st.integers(3, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pallas_vs_ref(self, g, cpg, fpg, h, seed):
+        rng = np.random.default_rng(seed)
+        cx, cy, k = g * cpg, g * fpg, 3
+        x = rand(rng, (h, h, cx))
+        w = rand(rng, (cy, k, k, cpg))
+        b = rand(rng, (cy,), -500, 500)
+        fn = model.make_kernel_grouped(g)
+        rf = model.make_ref_grouped(g)
+        got = fn(x, w, b, scalar(9))[0]
+        want = rf(x, w, b, scalar(9))[0]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_g1_equals_standard(self):
+        rng = np.random.default_rng(3)
+        x = rand(rng, (4, 4, 3))
+        w = rand(rng, (4, 3, 3, 3))
+        b = rand(rng, (4,))
+        a = model.make_kernel_grouped(1)(x, w, b, scalar(5))[0]
+        s = model.kernel_standard(x, w, b, scalar(5))[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(s))
+
+
+class TestDepthwiseSeparable:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.integers(3, 6),
+        c=st.integers(1, 6),
+        cy=st.integers(1, 6),
+        k=st.sampled_from([1, 3]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pallas_vs_ref(self, h, c, cy, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (h, h, c))
+        w_dw = rand(rng, (c, k, k))
+        b_dw = rand(rng, (c,), -200, 200)
+        w_pw = rand(rng, (cy, 1, 1, c))
+        b_pw = rand(rng, (cy,), -200, 200)
+        got = model.kernel_dws(x, w_dw, b_dw, w_pw, b_pw, scalar(7), scalar(9))[0]
+        want = model.ref_dws(x, w_dw, b_dw, w_pw, b_pw, scalar(7), scalar(9))[0]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestShiftConv:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.integers(3, 8),
+        cx=st.integers(1, 12),
+        cy=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pallas_vs_ref(self, h, cx, cy, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (h, h, cx))
+        w = rand(rng, (cy, cx))
+        b = rand(rng, (cy,), -200, 200)
+        got = model.kernel_shift(x, w, b, scalar(9))[0]
+        want = model.ref_shift(x, w, b, scalar(9))[0]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_border_channels_zeroed(self):
+        # channel 0 of a 3x3-shift layout reads (y-1, x-1): at pixel
+        # (0, 0) that is out of bounds → contributes 0
+        x = jnp.ones((3, 3, 1), I32) * 50
+        w = jnp.ones((1, 1), I32)
+        b = jnp.zeros((1,), I32)
+        out = model.kernel_shift(x, w, b, scalar(0))[0]
+        assert int(out[0, 0, 0]) == 0  # OOB gather
+        assert int(out[1, 1, 0]) == 50
+
+
+class TestAddConv:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.integers(3, 6),
+        cx=st.integers(1, 4),
+        cy=st.integers(1, 4),
+        k=st.sampled_from([1, 3]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pallas_vs_ref(self, h, cx, cy, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (h, h, cx))
+        w = rand(rng, (cy, k, k, cx))
+        b = rand(rng, (cy,), -100, 100)
+        bn_m = rand(rng, (cy,), 1, 2**13)
+        bn_b = rand(rng, (cy,), -(2**17), 2**17)
+        got = model.kernel_add(x, w, b, bn_m, bn_b, scalar(2), scalar(13))[0]
+        want = model.ref_add(x, w, b, bn_m, bn_b, scalar(2), scalar(13))[0]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_raw_output_non_positive(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, (4, 4, 2))
+        w = rand(rng, (3, 3, 3, 2))
+        b = jnp.zeros((3,), I32)
+        raw = ref.conv_add(x, w, b, scalar(0))
+        assert int(jnp.max(raw)) <= 0
+
+    def test_identical_patch_zero_distance(self):
+        x = jnp.zeros((1, 1, 2), I32)
+        w = jnp.zeros((1, 1, 1, 2), I32)
+        b = jnp.zeros((1,), I32)
+        raw = ref.conv_add(x, w, b, scalar(0))
+        assert int(raw[0, 0, 0]) == 0
+
+
+class TestIm2col:
+    @settings(max_examples=10, deadline=None)
+    @given(h=st.integers(2, 6), c=st.integers(1, 4), k=st.sampled_from([1, 3]), seed=st.integers(0, 2**31 - 1))
+    def test_direct_equals_matmul_form(self, h, c, k, seed):
+        # im2col ∘ reshape(w) ≡ direct convolution (the §3.3 identity)
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (h, h, c))
+        w = rand(rng, (2, k, k, c))
+        b = jnp.zeros((2,), I32)
+        patches = model.im2col(x, k, 0, c)
+        wm = w.reshape(2, k * k * c).T
+        acc = np.asarray(patches) @ np.asarray(wm)
+        direct = ref.conv_standard(x, w, b, scalar(0), groups=1)
+        want = np.clip(acc.reshape(h, h, 2), -128, 127)
+        np.testing.assert_array_equal(np.asarray(direct), want)

@@ -1,0 +1,78 @@
+"""Unit tests for the shared quantization helpers (python side)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import quant
+
+
+class TestRequantize:
+    def test_right_shift_truncates_toward_neg_inf(self):
+        # arithmetic shift: -1 >> 1 == -1 (matches rust `>>` on i32)
+        acc = jnp.array([-1, -2, -256, 255, 256], jnp.int32)
+        out = quant.requantize(acc, jnp.array([1], jnp.int32)[0])
+        assert out.tolist() == [-1, -1, -128, 127, 128]
+
+    def test_negative_shift_is_left_shift(self):
+        acc = jnp.array([3, -3], jnp.int32)
+        out = quant.requantize(acc, jnp.array(-2, jnp.int32))
+        assert out.tolist() == [12, -12]
+
+    def test_zero_shift_identity(self):
+        acc = jnp.arange(-5, 6, dtype=jnp.int32)
+        out = quant.requantize(acc, jnp.array(0, jnp.int32))
+        assert out.tolist() == acc.tolist()
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(st.integers(-(2**20), 2**20), min_size=1, max_size=16),
+        st.integers(0, 16),
+    )
+    def test_matches_numpy_arithmetic_shift(self, vals, shift):
+        acc = jnp.array(vals, jnp.int32)
+        out = quant.requantize(acc, jnp.array(shift, jnp.int32))
+        want = np.array(vals, np.int32) >> shift
+        assert out.tolist() == want.tolist()
+
+
+class TestSat:
+    def test_sat_bounds(self):
+        x = jnp.array([-1000, -129, -128, 0, 127, 128, 1000], jnp.int32)
+        assert quant.sat_i8(x).tolist() == [-128, -128, -128, 0, 127, 127, 127]
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(-(2**30), 2**30))
+    def test_sat_in_range(self, v):
+        out = int(quant.sat_i8(jnp.array(v, jnp.int32)))
+        assert -128 <= out <= 127
+
+
+class TestShifts:
+    def test_uniform_shifts_3x3(self):
+        s = quant.uniform_shifts(9, 3)
+        assert s[0] == (-1, -1)
+        assert s[4] == (0, 0)
+        assert s[8] == (1, 1)
+        # wraps
+        assert quant.uniform_shifts(10, 3)[9] == (-1, -1)
+
+    def test_uniform_shifts_bounded_by_kernel(self):
+        for k in (1, 3, 5):
+            for a, b in quant.uniform_shifts(32, k):
+                assert abs(a) <= k // 2 and abs(b) <= k // 2
+
+
+class TestPad:
+    def test_pad_hwc_shape_and_zeros(self):
+        x = jnp.ones((2, 2, 3), jnp.int32)
+        p = quant.pad_hwc(x, 1)
+        assert p.shape == (4, 4, 3)
+        assert int(p[0, 0, 0]) == 0
+        assert int(p[1, 1, 0]) == 1
+
+    def test_pad_zero_is_identity(self):
+        x = jnp.ones((2, 2, 1), jnp.int32)
+        assert quant.pad_hwc(x, 0) is x

@@ -1,0 +1,39 @@
+//! Ablation bench: the §3.3 design choices — P patches × F filters
+//! register blocking of the im2col matmul. Quantifies why CMSIS-NN (and
+//! the paper's implementation) block at 2×2: best data reuse among the
+//! blockings that fit the Cortex-M4 register file, at a bounded im2col
+//! buffer.
+//!
+//! Run: `cargo bench --bench ablation_blocking`
+
+use convbench::harness::{ablation_markdown, best_feasible, blocking_ablation};
+use convbench::mcu::McuConfig;
+use convbench::report::write_report;
+
+fn main() {
+    // K = Hk²·Cx for the paper's 3×3×16 layers; 16 filters over an 8×8 map
+    let points = blocking_ablation(144, 8, &McuConfig::default());
+    let md = ablation_markdown(&points);
+    print!("{md}");
+    write_report("results/ablation_blocking.md", &md).unwrap();
+
+    let best = best_feasible(&points).expect("some feasible blocking");
+    println!(
+        "best feasible blocking: {}x{} ({:.3} accesses/MAC, {} B im2col buffer)",
+        best.patches, best.filters, best.measured_accesses_per_mac, best.im2col_bytes
+    );
+    assert_eq!(
+        (best.patches, best.filters),
+        (2, 2),
+        "expected the CMSIS-NN design point to win"
+    );
+
+    // reuse must strictly improve along the diagonal, and 4x4 must be
+    // infeasible (register spill) despite better reuse — the tension the
+    // paper's §3.3 resolves at 2x2
+    let get = |p: usize, f: usize| points.iter().find(|x| x.patches == p && x.filters == f).unwrap();
+    assert!(get(2, 2).measured_accesses_per_mac < get(1, 1).measured_accesses_per_mac);
+    assert!(get(4, 4).measured_accesses_per_mac < get(2, 2).measured_accesses_per_mac);
+    assert!(!get(4, 4).feasible);
+    println!("ablation_blocking OK");
+}

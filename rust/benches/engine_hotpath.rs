@@ -1,0 +1,64 @@
+//! Bench: the engine hot paths themselves (host wall-clock) — the §Perf
+//! working set: per-primitive forward passes on the §4.2 anchor layer and
+//! the MCU-Net end-to-end model, scalar vs SIMD vs monitored.
+//!
+//! This is the harness the performance pass iterates against; results are
+//! recorded in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench engine_hotpath`
+
+use convbench::analytic::Primitive;
+use convbench::mcu::calib::anchor_layer;
+use convbench::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+use convbench::nn::{CountingMonitor, NoopMonitor, Tensor};
+use convbench::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- the §4.2 anchor conv, the paper's central measurement target
+    let (conv, x) = anchor_layer();
+    b.run("anchor/scalar/noop", || conv.forward_scalar(&x, &mut NoopMonitor));
+    b.run("anchor/simd/noop", || conv.forward_simd(&x, &mut NoopMonitor));
+    b.run("anchor/scalar/counting", || {
+        let mut m = CountingMonitor::new();
+        conv.forward_scalar(&x, &mut m);
+        m.counts
+    });
+    b.run("anchor/simd/counting", || {
+        let mut m = CountingMonitor::new();
+        conv.forward_simd(&x, &mut m);
+        m.counts
+    });
+
+    // --- per-primitive single layers (Fig. 2 exp-3 base config)
+    let p = LayerParams::new(2, 3, 32, 16, 16);
+    let xin = experiment_input(&p, 3);
+    for prim in Primitive::ALL {
+        let model = experiment_layer(&p, prim, 3);
+        b.run(&format!("layer/{}/simd", prim.name()), || {
+            model.forward(&xin, prim.has_simd(), &mut NoopMonitor)
+        });
+    }
+
+    // --- whole-model inference (the serving hot path)
+    for prim in [Primitive::Standard, Primitive::Shift] {
+        let m = mcunet(prim, 11);
+        let xm = Tensor::zeros(m.input_shape, m.input_q);
+        b.run(&format!("mcunet/{}/simd", prim.name()), || {
+            m.forward(&xm, true, &mut NoopMonitor)
+        });
+    }
+
+    b.write_csv("results/bench_engine_hotpath.csv");
+
+    // throughput summary for §Perf
+    if let Some(r) = b.results.iter().find(|r| r.name == "anchor/simd/noop") {
+        let macs = 9.0 * 3.0 * 32.0 * 32.0 * 32.0;
+        println!(
+            "hotpath: anchor SIMD path {:.1} ms/inference, {:.2} GMAC/s host",
+            r.ns.mean / 1e6,
+            macs / r.ns.mean
+        );
+    }
+}

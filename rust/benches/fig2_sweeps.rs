@@ -1,0 +1,59 @@
+//! Bench: regenerate **Fig. 2** (all five experiment rows × panels a–f)
+//! on the full Table 2 plans, wall-clock-timing the underlying engine
+//! executions per primitive along the way.
+//!
+//! Run: `cargo bench --bench fig2_sweeps` (CONVBENCH_QUICK=1 for a smoke run)
+
+use convbench::analytic::Primitive;
+use convbench::harness::{regressions, run_sweep, table2_plans};
+use convbench::mcu::McuConfig;
+use convbench::models::{experiment_input, experiment_layer, LayerParams};
+use convbench::nn::NoopMonitor;
+use convbench::report::{sweep_csv, write_report};
+use convbench::util::bench::Bench;
+
+fn main() {
+    let cfg = McuConfig::default();
+    let quick = std::env::var("CONVBENCH_QUICK").as_deref() == Ok("1");
+
+    // 1) regenerate the figure data (the paper artifact)
+    let plans = table2_plans();
+    let selected = if quick { &plans[1..2] } else { &plans[..] };
+    let mut points = Vec::new();
+    for plan in selected {
+        eprintln!("fig2: experiment {} ({})", plan.id, plan.axis.name());
+        points.extend(run_sweep(plan, &Primitive::ALL, &cfg));
+    }
+    write_report("results/fig2_sweeps.csv", &sweep_csv(&points)).unwrap();
+    println!("fig2: {} sweep points -> results/fig2_sweeps.csv", points.len());
+
+    // paper's headline linearity claims over the cloud
+    if let Some(r) = regressions(&points) {
+        println!(
+            "fig2: R2 macs->latency(noSIMD) {:.4} (paper 0.995) | latency->energy(noSIMD) {:.4} (0.999)",
+            r.macs_latency_scalar.r2, r.latency_energy_scalar.r2
+        );
+        println!(
+            "fig2: R2 macs->energy(SIMD) {:.4} (paper 0.932) | latency->energy(SIMD) {:.4} (0.999)",
+            r.macs_energy_simd.r2, r.latency_energy_simd.r2
+        );
+        assert!(r.simd_latency_beats_macs());
+    }
+
+    // 2) wall-clock the engine on the Fig. 2 reference layer per primitive
+    let mut b = Bench::new();
+    let p = LayerParams::new(2, 3, 32, 16, 16);
+    let x = experiment_input(&p, 7);
+    for prim in Primitive::ALL {
+        let model = experiment_layer(&p, prim, 7);
+        b.run(&format!("engine/{}/scalar", prim.name()), || {
+            model.forward(&x, false, &mut NoopMonitor)
+        });
+        if prim.has_simd() {
+            b.run(&format!("engine/{}/simd", prim.name()), || {
+                model.forward(&x, true, &mut NoopMonitor)
+            });
+        }
+    }
+    b.write_csv("results/bench_fig2_engine.csv");
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate **Fig. 3** — the ratio of memory accesses without
+//! SIMD to with SIMD (normalized by MACs) for every experiment axis, and
+//! verify the paper's qualitative finding: the ratio panel mirrors the
+//! Fig. 2.f speedup panel (data reuse drives the SIMD gain).
+//!
+//! Run: `cargo bench --bench fig3_memaccess`
+
+use convbench::analytic::Primitive;
+use convbench::harness::{run_sweep, table2_plans};
+use convbench::mcu::McuConfig;
+use convbench::report::{sweep_csv, write_report};
+use convbench::util::stats::pearson;
+
+fn main() {
+    let cfg = McuConfig::default();
+    let quick = std::env::var("CONVBENCH_QUICK").as_deref() == Ok("1");
+    let plans = table2_plans();
+    let selected = if quick { &plans[..1] } else { &plans[..] };
+
+    let mut all = Vec::new();
+    for plan in selected {
+        eprintln!("fig3: experiment {} ({})", plan.id, plan.axis.name());
+        let points = run_sweep(plan, &Primitive::ALL, &cfg);
+
+        // Fig. 3 ↔ Fig. 2.f correlation per primitive across this axis
+        for prim in Primitive::ALL.iter().filter(|p| p.has_simd()) {
+            let (ratios, speedups): (Vec<f64>, Vec<f64>) = points
+                .iter()
+                .filter(|p| p.primitive == *prim)
+                .filter_map(|p| Some((p.mem_access_ratio()?, p.speedup()?)))
+                .unzip();
+            if ratios.len() >= 3 {
+                if let Some(r) = pearson(&ratios, &speedups) {
+                    println!(
+                        "fig3: exp {} {:<9} corr(mem-ratio, speedup) = {r:+.3}",
+                        plan.id,
+                        prim.name()
+                    );
+                }
+            }
+        }
+        all.extend(points);
+    }
+    write_report("results/fig3_memaccess.csv", &sweep_csv(&all)).unwrap();
+    println!("fig3: {} points -> results/fig3_memaccess.csv", all.len());
+
+    // The paper's §4.1 claim ("we observe in Fig. 3 the same variations
+    // as in Fig. 2.f"): pooled correlation must be strongly positive.
+    let (ratios, speedups): (Vec<f64>, Vec<f64>) = all
+        .iter()
+        .filter_map(|p| Some((p.mem_access_ratio()?, p.speedup()?)))
+        .unzip();
+    let r = pearson(&ratios, &speedups).unwrap();
+    println!("fig3: pooled corr(mem-ratio, speedup) = {r:+.3}");
+    assert!(r > 0.5, "data-reuse/speedup correlation too weak: {r}");
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate **Fig. 4** — latency and energy of the §4.2 layer
+//! across the 10–80 MHz frequency range, with and without SIMD, and check
+//! the paper's conclusions (latency ∝ 1/f; energy decreasing in f).
+//!
+//! Run: `cargo bench --bench fig4_frequency`
+
+use convbench::harness::fig4_frequency_sweep;
+use convbench::report::{fig4_csv, write_report};
+
+fn main() {
+    let freqs: Vec<f64> = (1..=8).map(|i| 10.0 * i as f64).collect();
+    let pts = fig4_frequency_sweep(&freqs);
+    let csv = fig4_csv(&pts);
+    print!("{csv}");
+    write_report("results/fig4_frequency.csv", &csv).unwrap();
+
+    // paper finding 1: latency inversely proportional to frequency
+    let l10 = pts[0].scalar.latency_s;
+    let l80 = pts[7].scalar.latency_s;
+    assert!(((l10 / l80) - 8.0).abs() < 1e-6, "latency not ∝ 1/f");
+
+    // paper finding 2: energy decreases monotonically with frequency
+    for w in pts.windows(2) {
+        assert!(w[1].scalar.energy_mj < w[0].scalar.energy_mj);
+        assert!(w[1].simd.energy_mj < w[0].simd.energy_mj);
+    }
+    let save = 100.0 * (1.0 - pts[7].scalar.energy_mj / pts[0].scalar.energy_mj);
+    println!("fig4: running at 80 MHz instead of 10 MHz saves {save:.0}% energy (paper: max frequency minimizes energy)");
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate **Table 3** — average power at 10/20/40/80 MHz for
+//! the scalar and SIMD binaries, from the model fit to the paper's
+//! measurements, and assert agreement within 5%.
+//!
+//! Run: `cargo bench --bench table3_power`
+
+use convbench::harness::table3_power;
+use convbench::mcu::power::{TABLE3_NO_SIMD_MW, TABLE3_SIMD_MW};
+use convbench::report::{table3_markdown, write_report};
+
+fn main() {
+    let rows = table3_power();
+    let md = table3_markdown(&rows);
+    print!("{md}");
+    write_report("results/table3.md", &md).unwrap();
+
+    let mut worst = 0.0f64;
+    for (i, row) in rows.iter().enumerate() {
+        let e1 = (row.no_simd_mw - TABLE3_NO_SIMD_MW[i]).abs() / TABLE3_NO_SIMD_MW[i];
+        let e2 = (row.simd_mw - TABLE3_SIMD_MW[i]).abs() / TABLE3_SIMD_MW[i];
+        worst = worst.max(e1).max(e2);
+    }
+    println!("table3: worst relative error vs paper = {:.2}%", 100.0 * worst);
+    assert!(worst < 0.05, "power model drifted from Table 3");
+
+    // the structural finding: SIMD raises the dynamic (per-MHz) slope,
+    // not the static floor
+    use convbench::mcu::{PathClass, PowerModel};
+    let s = PowerModel::for_path(PathClass::Scalar);
+    let v = PowerModel::for_path(PathClass::Simd);
+    println!(
+        "table3: P(f) = {:.2} + {:.3}·f (scalar) | {:.2} + {:.3}·f (SIMD)",
+        s.p_static_mw, s.slope_mw_per_mhz, v.p_static_mw, v.slope_mw_per_mhz
+    );
+    assert!(v.slope_mw_per_mhz > s.slope_mw_per_mhz);
+    assert!((v.p_static_mw - s.p_static_mw).abs() < 3.0);
+}

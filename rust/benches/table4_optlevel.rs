@@ -1,0 +1,51 @@
+//! Bench: regenerate **Table 4** — the optimization-level experiment
+//! (§4.2): O0 vs Os for the scalar and SIMD convolution, with the
+//! paper's speedups and the SIMD-at-O0 energy inversion.
+//!
+//! Note: the κ calibration anchors the cycle model to exactly these four
+//! measurements (DESIGN.md §2), so the latencies reproduce by
+//! construction; the energies and the inversion are *predictions* of the
+//! Table 3 power model on top.
+//!
+//! Run: `cargo bench --bench table4_optlevel`
+
+use convbench::harness::table4_optlevel;
+use convbench::report::{table4_markdown, write_report};
+
+fn main() {
+    let rows = table4_optlevel();
+    let md = table4_markdown(&rows);
+    print!("{md}");
+    write_report("results/table4.md", &md).unwrap();
+
+    // paper values: latencies 1.26/0.83/1.08/0.11 s; speedups 1.52, 9.81,
+    // 7.55 (SIMD@Os) and 1.17 (SIMD@O0); energies 63.9/45.7/82.0/7.2 mJ
+    assert!((rows[0].latency_s - 1.26).abs() < 1e-6);
+    assert!((rows[1].latency_s - 0.83).abs() < 1e-6);
+    assert!((rows[2].latency_s - 1.08).abs() < 1e-6);
+    assert!((rows[3].latency_s - 0.11).abs() < 1e-6);
+    assert!((rows[1].opt_speedup.unwrap() - 1.52).abs() < 0.02);
+    assert!((rows[3].opt_speedup.unwrap() - 9.81).abs() < 0.03);
+    assert!((rows[3].simd_speedup.unwrap() - 7.55).abs() < 0.03);
+
+    let paper_mj = [63.9, 45.7, 82.0, 7.2];
+    for (row, want) in rows.iter().zip(paper_mj) {
+        let err = (row.energy_mj - want).abs() / want;
+        println!(
+            "table4: {} {:?} -> {:.1} mJ (paper {want}, {:+.1}%)",
+            if row.simd { "SIMD" } else { "scalar" },
+            row.opt,
+            row.energy_mj,
+            100.0 * err
+        );
+        // The P(f) model is calibrated on the Os binaries (Table 3) and
+        // carries no opt-level term; the paper's measured O0 binaries
+        // draw −7% (scalar) / +16% (SIMD) relative to it — instruction
+        // mix changes average power. 15% is the honest envelope here;
+        // see EXPERIMENTS.md §Deviations.
+        assert!(err < 0.15, "energy off by {err:.2}");
+    }
+    // the inversion: SIMD at O0 consumes MORE than scalar at O0
+    assert!(rows[2].energy_mj > rows[0].energy_mj);
+    println!("table4: SIMD-at-O0 energy inversion reproduced");
+}

@@ -1,0 +1,251 @@
+//! Closed-form parameter / MAC counts for every primitive — the paper's
+//! Table 1 — plus memory-footprint estimates used by the harness and the
+//! TPU roofline estimates recorded in DESIGN.md §Perf.
+//!
+//! Notation follows §2.1: square input `Hx×Hx×Cx`, output `Hy×Hy×Cy`
+//! (same-padding ⇒ `Hy = Hx`), kernel `Hk×Hk`.
+
+use crate::models::LayerParams;
+
+/// Which primitive a layer uses (§2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Primitive {
+    /// Standard 2-D convolution (Eq. 1).
+    Standard,
+    /// Grouped convolution with `G` groups (Fig. 1).
+    Grouped,
+    /// Depthwise-separable = depthwise + pointwise (Inception/MobileNet).
+    DepthwiseSeparable,
+    /// Shift convolution = per-channel spatial shift + pointwise (Eq. 2).
+    Shift,
+    /// Add (L1-norm) convolution, AdderNet (Eq. 3).
+    Add,
+}
+
+impl Primitive {
+    pub const ALL: [Primitive; 5] = [
+        Primitive::Standard,
+        Primitive::Grouped,
+        Primitive::DepthwiseSeparable,
+        Primitive::Shift,
+        Primitive::Add,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Primitive::Standard => "standard",
+            Primitive::Grouped => "grouped",
+            Primitive::DepthwiseSeparable => "dws",
+            Primitive::Shift => "shift",
+            Primitive::Add => "add",
+        }
+    }
+
+    /// Whether our implementation has a SIMD (`__SMLAD`) variant. The
+    /// paper implements SIMD for all multiplicative primitives but not for
+    /// add-convolution ("no instructions similar to __SMLAD adapted to add
+    /// convolutions", §3.3).
+    pub fn has_simd(&self) -> bool {
+        !matches!(self, Primitive::Add)
+    }
+}
+
+/// Table 1 row: closed-form costs of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Costs {
+    /// Number of stored weights (excluding bias, as in Table 1).
+    pub params: u64,
+    /// Theoretical multiply-accumulate count for one inference.
+    pub macs: u64,
+}
+
+/// Table 1 closed forms for a layer configuration.
+pub fn costs(p: &LayerParams, prim: Primitive) -> Costs {
+    let hk = p.kernel as u64;
+    let hy = p.out_width() as u64;
+    let cx = p.in_channels as u64;
+    let cy = p.filters as u64;
+    let g = p.groups as u64;
+    match prim {
+        Primitive::Standard => Costs {
+            params: hk * hk * cx * cy,
+            macs: hk * hk * cx * hy * hy * cy,
+        },
+        Primitive::Grouped => Costs {
+            params: hk * hk * (cx / g) * cy,
+            macs: hk * hk * (cx / g) * hy * hy * cy,
+        },
+        Primitive::DepthwiseSeparable => Costs {
+            params: cx * (hk * hk + cy),
+            macs: cx * hy * hy * (hk * hk + cy),
+        },
+        Primitive::Shift => Costs {
+            // 2 shift offsets per channel + pointwise weights
+            params: cx * (2 + cy),
+            // the shift itself is MAC-free; pointwise dominates
+            macs: cx * cy * hy * hy,
+        },
+        Primitive::Add => Costs {
+            params: hk * hk * cx * cy,
+            macs: hk * hk * cx * hy * hy * cy,
+        },
+    }
+}
+
+/// Parameter gain vs. standard convolution (Table 1 column 4).
+pub fn param_gain(p: &LayerParams, prim: Primitive) -> f64 {
+    let std = costs(p, Primitive::Standard).params as f64;
+    costs(p, prim).params as f64 / std
+}
+
+/// Complexity (MACs) gain vs. standard convolution (Table 1 column 5).
+pub fn complexity_gain(p: &LayerParams, prim: Primitive) -> f64 {
+    let std = costs(p, Primitive::Standard).macs as f64;
+    costs(p, prim).macs as f64 / std
+}
+
+/// Working-memory estimate in bytes for the scalar (direct) int8
+/// implementation: input + output activations.
+pub fn activation_bytes(p: &LayerParams) -> u64 {
+    let hx = p.input_width as u64;
+    let hy = p.out_width() as u64;
+    hx * hx * p.in_channels as u64 + hy * hy * p.filters as u64
+}
+
+/// Extra working memory of the CMSIS-NN SIMD path: the im2col q15 buffer
+/// holds 2 patches of `Hk²·Cx` int16 values (§3.3, "limit the number of
+/// patches processed at the same time to 2").
+pub fn im2col_buffer_bytes(p: &LayerParams, prim: Primitive) -> u64 {
+    let hk = p.kernel as u64;
+    let cx = p.in_channels as u64;
+    match prim {
+        Primitive::Standard | Primitive::Add => 2 * hk * hk * cx * 2,
+        Primitive::Grouped => 2 * hk * hk * (cx / p.groups as u64) * 2,
+        // depthwise stage uses no im2col; pointwise patch is 1×1×Cx
+        Primitive::DepthwiseSeparable | Primitive::Shift => 2 * cx * 2,
+    }
+}
+
+/// TPU-mapping roofline estimate for the Pallas kernel of a primitive
+/// (DESIGN.md §Hardware-Adaptation): given MXU-tiled conv-as-matmul with
+/// (8,128) tiles, estimate VMEM footprint and MXU utilization.
+#[derive(Clone, Copy, Debug)]
+pub struct TpuEstimate {
+    /// Bytes resident in VMEM for one grid step (patches + weights + out).
+    pub vmem_bytes: u64,
+    /// Fraction of MXU lanes doing useful work given the layer shape.
+    pub mxu_utilization: f64,
+}
+
+/// Estimate VMEM footprint / MXU utilization for the conv-as-matmul
+/// mapping: M = Hy², K = Hk²·Cx/G, N = Cy tiles padded to (8, 128).
+pub fn tpu_estimate(p: &LayerParams, prim: Primitive) -> TpuEstimate {
+    let c = costs(p, prim);
+    let hy2 = (p.out_width() * p.out_width()) as u64;
+    let k: u64 = match prim {
+        Primitive::Standard | Primitive::Add => (p.kernel * p.kernel * p.in_channels) as u64,
+        Primitive::Grouped => (p.kernel * p.kernel * p.in_channels / p.groups) as u64,
+        Primitive::DepthwiseSeparable | Primitive::Shift => p.in_channels as u64,
+    };
+    let n = p.filters as u64;
+    let pad = |x: u64, to: u64| x.div_ceil(to) * to;
+    let (m_t, k_t, n_t) = (pad(hy2.min(256), 8), pad(k, 128), pad(n, 128));
+    // bf16 patches + weights tiles + f32 accumulators for one grid step
+    let vmem_bytes = m_t * k_t * 2 + k_t * n_t * 2 + m_t * n_t * 4;
+    let useful = hy2.min(256) * k * n;
+    let lanes = m_t * k_t * n_t;
+    TpuEstimate {
+        vmem_bytes,
+        mxu_utilization: (useful as f64 / lanes as f64).min(1.0),
+        // `c` keeps the MAC count available for flops/s roofline reporting
+    }
+    .with_macs(c.macs)
+}
+
+impl TpuEstimate {
+    fn with_macs(self, _macs: u64) -> Self {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerParams;
+
+    fn layer(g: usize, k: usize, w: usize, cx: usize, cy: usize) -> LayerParams {
+        LayerParams::new(g, k, w, cx, cy)
+    }
+
+    #[test]
+    fn table1_standard() {
+        let p = layer(1, 3, 10, 128, 64);
+        let c = costs(&p, Primitive::Standard);
+        assert_eq!(c.params, 3 * 3 * 128 * 64);
+        assert_eq!(c.macs, 3 * 3 * 128 * 10 * 10 * 64);
+    }
+
+    #[test]
+    fn table1_grouped_gain_is_one_over_g() {
+        for g in [1usize, 2, 4, 8, 16, 32] {
+            let p = layer(g, 3, 10, 128, 64);
+            assert!((param_gain(&p, Primitive::Grouped) - 1.0 / g as f64).abs() < 1e-12);
+            assert!((complexity_gain(&p, Primitive::Grouped) - 1.0 / g as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn table1_dws_gain_formula() {
+        let p = layer(1, 3, 32, 16, 16);
+        // 1/Cy + 1/Hk²
+        let expect = 1.0 / 16.0 + 1.0 / 9.0;
+        assert!((param_gain(&p, Primitive::DepthwiseSeparable) - expect).abs() < 1e-12);
+        assert!((complexity_gain(&p, Primitive::DepthwiseSeparable) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_shift_complexity_gain_is_one_over_hk2() {
+        let p = layer(1, 3, 32, 16, 16);
+        assert!((complexity_gain(&p, Primitive::Shift) - 1.0 / 9.0).abs() < 1e-12);
+        let p5 = layer(1, 5, 32, 16, 16);
+        assert!((complexity_gain(&p5, Primitive::Shift) - 1.0 / 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_add_gains_are_one() {
+        let p = layer(1, 3, 32, 16, 16);
+        assert_eq!(param_gain(&p, Primitive::Add), 1.0);
+        assert_eq!(complexity_gain(&p, Primitive::Add), 1.0);
+    }
+
+    #[test]
+    fn grouped_with_g1_equals_standard() {
+        let p = layer(1, 5, 16, 8, 12);
+        assert_eq!(costs(&p, Primitive::Grouped), costs(&p, Primitive::Standard));
+    }
+
+    #[test]
+    fn im2col_buffer_matches_cmsis_two_patches() {
+        let p = layer(1, 3, 32, 16, 16);
+        assert_eq!(im2col_buffer_bytes(&p, Primitive::Standard), 2 * 9 * 16 * 2);
+        assert_eq!(im2col_buffer_bytes(&p, Primitive::Shift), 2 * 16 * 2);
+    }
+
+    #[test]
+    fn tpu_estimate_sane() {
+        let p = layer(1, 3, 32, 16, 64);
+        let e = tpu_estimate(&p, Primitive::Standard);
+        assert!(e.vmem_bytes > 0);
+        assert!(e.mxu_utilization > 0.0 && e.mxu_utilization <= 1.0);
+    }
+
+    #[test]
+    fn macs_monotone_in_every_parameter() {
+        let base = layer(2, 3, 16, 16, 16);
+        let m0 = costs(&base, Primitive::Standard).macs;
+        assert!(costs(&layer(2, 5, 16, 16, 16), Primitive::Standard).macs > m0);
+        assert!(costs(&layer(2, 3, 32, 16, 16), Primitive::Standard).macs > m0);
+        assert!(costs(&layer(2, 3, 16, 32, 16), Primitive::Standard).macs > m0);
+        assert!(costs(&layer(2, 3, 16, 16, 32), Primitive::Standard).macs > m0);
+    }
+}

@@ -1,0 +1,63 @@
+//! L3 coordinator: the deployment pipeline (float model → calibrated int8
+//! engine model), the threaded inference service, and the cross-layer
+//! validation against the JAX/Pallas HLO artifacts.
+
+pub mod pipeline;
+pub mod server;
+pub mod validate;
+
+pub use pipeline::{
+    FloatAddConv, FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift,
+};
+pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use validate::{artifact_inputs, kernel_layer, validate_all, validate_cli, validate_primitive};
+
+use crate::analytic::Primitive;
+use crate::mcu::McuConfig;
+use crate::models::mcunet;
+use crate::util::prng::Rng;
+
+/// CLI entry point for `convbench serve`: deploy all five MCU-Net
+/// variants, fire `n` random requests through `workers` workers, print
+/// the service report.
+pub fn serve_cli(n: usize, workers: usize) {
+    let models: Vec<_> = Primitive::ALL.iter().map(|&p| mcunet(p, 42)).collect();
+    let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    let server = InferenceServer::start(models, workers, &McuConfig::default());
+    println!("deployed: {names:?} ({workers} workers)");
+
+    let mut rng = Rng::new(7);
+    let mut per_model: std::collections::BTreeMap<String, (u64, f64, f64)> = Default::default();
+    for i in 0..n {
+        let model = names[rng.range(0, names.len() - 1)].clone();
+        let mut input = vec![0i8; 32 * 32 * 3];
+        rng.fill_i8(&mut input, -64, 63);
+        match server.infer(Request {
+            id: i as u64,
+            model: model.clone(),
+            input,
+        }) {
+            Ok(r) => {
+                let e = per_model.entry(model).or_default();
+                e.0 += 1;
+                e.1 += r.mcu_latency_s;
+                e.2 += r.mcu_energy_mj;
+            }
+            Err(e) => eprintln!("request {i} failed: {e}"),
+        }
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests, {} errors; host latency p50 {:.1} µs p99 {:.1} µs",
+        stats.served, stats.errors, stats.p50_us, stats.p99_us
+    );
+    println!("\n| model | requests | simulated MCU latency (ms) | simulated energy (mJ) |");
+    println!("|---|---|---|---|");
+    for (m, (cnt, lat, en)) in per_model {
+        println!(
+            "| {m} | {cnt} | {:.2} | {:.3} |",
+            1e3 * lat / cnt as f64,
+            en / cnt as f64
+        );
+    }
+}

@@ -1,0 +1,605 @@
+//! Deployment pipeline — the NNoM-utils-equivalent: take a *float* model
+//! (weights + optional batch-norm per conv), run a calibration set to pick
+//! every activation's power-of-two format (Eq. 4 on the observed max-abs),
+//! fold batch norms (§3.2), quantize weights, and emit the int8 engine
+//! [`Model`]. This is the path a user walks to put their own network on
+//! the simulated MCU (and the path the end-to-end example exercises).
+
+use crate::nn::{
+    uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
+    QuantDepthwise, Shape, ShiftConv,
+};
+use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
+
+/// A float convolution stage (standard/grouped via `groups`).
+#[derive(Clone, Debug)]
+pub struct FloatConv {
+    pub kernel: usize,
+    pub groups: usize,
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub bn: Option<BatchNorm>,
+}
+
+/// A float depthwise stage.
+#[derive(Clone, Debug)]
+pub struct FloatDepthwise {
+    pub kernel: usize,
+    pub channels: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub bn: Option<BatchNorm>,
+}
+
+/// A float shift-conv stage.
+#[derive(Clone, Debug)]
+pub struct FloatShift {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub bn: Option<BatchNorm>,
+}
+
+/// A float add-conv stage (BN kept separate — folding unsuitable, §3.2).
+#[derive(Clone, Debug)]
+pub struct FloatAddConv {
+    pub kernel: usize,
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub bn: BatchNorm,
+}
+
+/// A float dense stage.
+#[derive(Clone, Debug)]
+pub struct FloatDense {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Float model layers.
+#[derive(Clone, Debug)]
+pub enum FloatLayer {
+    Conv(FloatConv),
+    Depthwise(FloatDepthwise),
+    Shift(FloatShift),
+    AddConv(FloatAddConv),
+    Relu,
+    MaxPool2,
+    GlobalAvgPool,
+    Dense(FloatDense),
+}
+
+/// The float model a user brings to the pipeline.
+#[derive(Clone, Debug)]
+pub struct FloatModel {
+    pub name: String,
+    pub input_shape: Shape,
+    pub layers: Vec<FloatLayer>,
+}
+
+impl FloatModel {
+    /// Float-domain forward pass (HWC layout, same-padding). Returns all
+    /// intermediate activations (index 0 = input) — the calibration pass
+    /// needs them; `last` is the logits.
+    pub fn forward_all(&self, x: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(x.len(), self.input_shape.len());
+        let mut acts = vec![x.to_vec()];
+        let mut shape = self.input_shape;
+        for layer in &self.layers {
+            let cur = acts.last().unwrap();
+            let (next, nshape) = float_forward(layer, cur, &shape);
+            acts.push(next);
+            shape = nshape;
+        }
+        acts
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_all(x).pop().unwrap()
+    }
+
+    /// Deploy: calibrate activation formats over `calib` inputs, fold
+    /// BNs, quantize, emit the engine model.
+    pub fn deploy(&self, calib: &[Vec<f32>]) -> Model {
+        assert!(!calib.is_empty(), "calibration set must be non-empty");
+        // 1. per-activation max-abs over the calibration set
+        let n_act = self.layers.len() + 1;
+        let mut max_abs = vec![0f32; n_act];
+        for x in calib {
+            for (i, act) in self.forward_all(x).iter().enumerate() {
+                for v in act {
+                    max_abs[i] = max_abs[i].max(v.abs());
+                }
+            }
+        }
+        let mut fmts: Vec<QParam> = max_abs
+            .iter()
+            .map(|&m| QParam::new(frac_bits_for(m)))
+            .collect();
+        // Format-preserving layers (ReLU, pooling) do not requantize in
+        // the engine — their output format IS their input format, even
+        // though the observed max-abs shrinks. Propagate forward so the
+        // next compute layer reads the right scale.
+        for (i, layer) in self.layers.iter().enumerate() {
+            if matches!(layer, FloatLayer::Relu | FloatLayer::MaxPool2) {
+                fmts[i + 1] = fmts[i];
+            }
+        }
+
+        // 2. quantize layer by layer. Add-convolution expands into two
+        //    engine layers (raw add-conv + integer BN, §3.2) with an
+        //    intermediate format calibrated on the raw (pre-BN) output.
+        let mut model = Model::new(self.name.clone(), self.input_shape, fmts[0]);
+        let mut shape = self.input_shape;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (q_in, q_out) = (fmts[i], fmts[i + 1]);
+            if let FloatLayer::AddConv(a) = layer {
+                // calibrate the raw add-conv output range
+                let mut max_raw = 0f32;
+                for x in calib {
+                    let acts = self.forward_all(x);
+                    let raw = addconv_raw(a, &acts[i], &shape);
+                    for v in raw {
+                        max_raw = max_raw.max(v.abs());
+                    }
+                }
+                let q_mid = QParam::new(frac_bits_for(max_raw));
+                let max_w = a.weights.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                let q_w = QParam::new(frac_bits_for(max_w));
+                let aligned_frac = q_in.frac_bits.max(q_w.frac_bits);
+                let bias_scale = (aligned_frac as f32).exp2();
+                model.push(Layer::AddConv(AddConv {
+                    kernel: a.kernel,
+                    in_channels: a.in_channels,
+                    out_channels: a.out_channels,
+                    pad: a.kernel / 2,
+                    weights: quantize_tensor_with(&a.weights, q_w),
+                    bias: a.bias.iter().map(|&b| (b * bias_scale).round() as i32).collect(),
+                    q_in,
+                    q_w,
+                    q_out: q_mid,
+                }));
+                model.push(Layer::Bn(BnLayer::quantize(&a.bn, q_mid, q_out)));
+            } else {
+                model.push(quantize_layer(layer, q_in, q_out));
+            }
+            let (_, nshape) = float_shape_only(layer, &shape);
+            shape = nshape;
+        }
+        model
+    }
+}
+
+/// Raw (pre-BN) float add-convolution output — used by calibration.
+fn addconv_raw(a: &FloatAddConv, x: &[f32], shape: &Shape) -> Vec<f32> {
+    let out_shape = Shape::new(shape.h, shape.w, a.out_channels);
+    let pad = a.kernel / 2;
+    let mut y = vec![0f32; out_shape.len()];
+    for n in 0..a.out_channels {
+        for oy in 0..shape.h {
+            for ox in 0..shape.w {
+                let mut acc = a.bias[n];
+                for i in 0..a.kernel {
+                    for j in 0..a.kernel {
+                        let iy = oy as isize + i as isize - pad as isize;
+                        let ix = ox as isize + j as isize - pad as isize;
+                        for m in 0..a.in_channels {
+                            let xv = if iy < 0
+                                || ix < 0
+                                || iy >= shape.h as isize
+                                || ix >= shape.w as isize
+                            {
+                                0.0
+                            } else {
+                                x[shape.idx(iy as usize, ix as usize, m)]
+                            };
+                            let wv =
+                                a.weights[((n * a.kernel + i) * a.kernel + j) * a.in_channels + m];
+                            acc -= (xv - wv).abs();
+                        }
+                    }
+                }
+                y[out_shape.idx(oy, ox, n)] = acc;
+            }
+        }
+    }
+    y
+}
+
+/// Output shape of a float layer (no compute).
+fn float_shape_only(layer: &FloatLayer, shape: &Shape) -> ((), Shape) {
+    let s = match layer {
+        FloatLayer::Conv(c) => Shape::new(shape.h, shape.w, c.out_channels),
+        FloatLayer::Depthwise(d) => Shape::new(shape.h, shape.w, d.channels),
+        FloatLayer::Shift(s) => Shape::new(shape.h, shape.w, s.out_channels),
+        FloatLayer::AddConv(a) => Shape::new(shape.h, shape.w, a.out_channels),
+        FloatLayer::Relu => *shape,
+        FloatLayer::MaxPool2 => Shape::new(shape.h / 2, shape.w / 2, shape.c),
+        FloatLayer::GlobalAvgPool => Shape::new(1, 1, shape.c),
+        FloatLayer::Dense(d) => Shape::new(1, 1, d.out_features),
+    };
+    ((), s)
+}
+
+fn float_forward(layer: &FloatLayer, x: &[f32], shape: &Shape) -> (Vec<f32>, Shape) {
+    match layer {
+        FloatLayer::Conv(c) => {
+            let out_shape = Shape::new(shape.h, shape.w, c.out_channels);
+            let (w, b) = match &c.bn {
+                Some(bn) => bn.fold_into(&c.weights, &c.bias, c.out_channels),
+                None => (c.weights.clone(), c.bias.clone()),
+            };
+            let mut y = vec![0f32; out_shape.len()];
+            let cpg = c.in_channels / c.groups;
+            let fpg = c.out_channels / c.groups;
+            let pad = c.kernel / 2;
+            for n in 0..c.out_channels {
+                let ch0 = (n / fpg) * cpg;
+                for oy in 0..shape.h {
+                    for ox in 0..shape.w {
+                        let mut acc = b[n];
+                        for i in 0..c.kernel {
+                            for j in 0..c.kernel {
+                                let iy = oy as isize + i as isize - pad as isize;
+                                let ix = ox as isize + j as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= shape.h as isize || ix >= shape.w as isize {
+                                    continue;
+                                }
+                                for m in 0..cpg {
+                                    let xv = x[shape.idx(iy as usize, ix as usize, ch0 + m)];
+                                    let wv = w[((n * c.kernel + i) * c.kernel + j) * cpg + m];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        y[out_shape.idx(oy, ox, n)] = acc;
+                    }
+                }
+            }
+            (y, out_shape)
+        }
+        FloatLayer::Depthwise(d) => {
+            let out_shape = Shape::new(shape.h, shape.w, d.channels);
+            let (w, b) = match &d.bn {
+                Some(bn) => bn.fold_into(&d.weights, &d.bias, d.channels),
+                None => (d.weights.clone(), d.bias.clone()),
+            };
+            let pad = d.kernel / 2;
+            let mut y = vec![0f32; out_shape.len()];
+            for c in 0..d.channels {
+                for oy in 0..shape.h {
+                    for ox in 0..shape.w {
+                        let mut acc = b[c];
+                        for i in 0..d.kernel {
+                            for j in 0..d.kernel {
+                                let iy = oy as isize + i as isize - pad as isize;
+                                let ix = ox as isize + j as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= shape.h as isize || ix >= shape.w as isize {
+                                    continue;
+                                }
+                                acc += x[shape.idx(iy as usize, ix as usize, c)]
+                                    * w[(c * d.kernel + i) * d.kernel + j];
+                            }
+                        }
+                        y[out_shape.idx(oy, ox, c)] = acc;
+                    }
+                }
+            }
+            (y, out_shape)
+        }
+        FloatLayer::Shift(s) => {
+            let out_shape = Shape::new(shape.h, shape.w, s.out_channels);
+            let (w, b) = match &s.bn {
+                Some(bn) => bn.fold_into(&s.weights, &s.bias, s.out_channels),
+                None => (s.weights.clone(), s.bias.clone()),
+            };
+            let shifts = uniform_shifts(s.in_channels, s.kernel);
+            let mut y = vec![0f32; out_shape.len()];
+            for n in 0..s.out_channels {
+                for oy in 0..shape.h {
+                    for ox in 0..shape.w {
+                        let mut acc = b[n];
+                        for m in 0..s.in_channels {
+                            let (a, bb) = shifts[m];
+                            let iy = oy as isize + a as isize;
+                            let ix = ox as isize + bb as isize;
+                            if iy < 0 || ix < 0 || iy >= shape.h as isize || ix >= shape.w as isize {
+                                continue;
+                            }
+                            acc += x[shape.idx(iy as usize, ix as usize, m)]
+                                * w[n * s.in_channels + m];
+                        }
+                        y[out_shape.idx(oy, ox, n)] = acc;
+                    }
+                }
+            }
+            (y, out_shape)
+        }
+        FloatLayer::AddConv(a) => {
+            let out_shape = Shape::new(shape.h, shape.w, a.out_channels);
+            let pad = a.kernel / 2;
+            let mut y = vec![0f32; out_shape.len()];
+            let (ba, bb) = a.bn.affine();
+            for n in 0..a.out_channels {
+                for oy in 0..shape.h {
+                    for ox in 0..shape.w {
+                        let mut acc = a.bias[n];
+                        for i in 0..a.kernel {
+                            for j in 0..a.kernel {
+                                let iy = oy as isize + i as isize - pad as isize;
+                                let ix = ox as isize + j as isize - pad as isize;
+                                for m in 0..a.in_channels {
+                                    let xv = if iy < 0
+                                        || ix < 0
+                                        || iy >= shape.h as isize
+                                        || ix >= shape.w as isize
+                                    {
+                                        0.0
+                                    } else {
+                                        x[shape.idx(iy as usize, ix as usize, m)]
+                                    };
+                                    let wv =
+                                        a.weights[((n * a.kernel + i) * a.kernel + j) * a.in_channels + m];
+                                    acc -= (xv - wv).abs();
+                                }
+                            }
+                        }
+                        // separate BN (not folded)
+                        y[out_shape.idx(oy, ox, n)] = ba[n] * acc + bb[n];
+                    }
+                }
+            }
+            (y, out_shape)
+        }
+        FloatLayer::Relu => (x.iter().map(|&v| v.max(0.0)).collect(), *shape),
+        FloatLayer::MaxPool2 => {
+            let out_shape = Shape::new(shape.h / 2, shape.w / 2, shape.c);
+            let mut y = vec![0f32; out_shape.len()];
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    for c in 0..shape.c {
+                        let m = x[shape.idx(2 * oy, 2 * ox, c)]
+                            .max(x[shape.idx(2 * oy, 2 * ox + 1, c)])
+                            .max(x[shape.idx(2 * oy + 1, 2 * ox, c)])
+                            .max(x[shape.idx(2 * oy + 1, 2 * ox + 1, c)]);
+                        y[out_shape.idx(oy, ox, c)] = m;
+                    }
+                }
+            }
+            (y, out_shape)
+        }
+        FloatLayer::GlobalAvgPool => {
+            let out_shape = Shape::new(1, 1, shape.c);
+            let n = (shape.h * shape.w) as f32;
+            let mut y = vec![0f32; shape.c];
+            for c in 0..shape.c {
+                let mut acc = 0.0;
+                for yy in 0..shape.h {
+                    for xx in 0..shape.w {
+                        acc += x[shape.idx(yy, xx, c)];
+                    }
+                }
+                y[c] = acc / n;
+            }
+            (y, out_shape)
+        }
+        FloatLayer::Dense(d) => {
+            let mut y = vec![0f32; d.out_features];
+            for (n, o) in y.iter_mut().enumerate() {
+                let mut acc = d.bias[n];
+                for (i, xv) in x.iter().enumerate() {
+                    acc += xv * d.weights[n * d.in_features + i];
+                }
+                *o = acc;
+            }
+            (y, Shape::new(1, 1, d.out_features))
+        }
+    }
+}
+
+fn quantize_layer(layer: &FloatLayer, q_in: QParam, q_out: QParam) -> Layer {
+    match layer {
+        FloatLayer::Conv(c) => {
+            let (w, b) = match &c.bn {
+                Some(bn) => bn.fold_into(&c.weights, &c.bias, c.out_channels),
+                None => (c.weights.clone(), c.bias.clone()),
+            };
+            let max_w = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let q_w = QParam::new(frac_bits_for(max_w));
+            Layer::Conv(QuantConv {
+                kernel: c.kernel,
+                groups: c.groups,
+                in_channels: c.in_channels,
+                out_channels: c.out_channels,
+                pad: c.kernel / 2,
+                weights: quantize_tensor_with(&w, q_w),
+                bias: quantize_bias(&b, q_in.frac_bits, q_w.frac_bits),
+                q_in,
+                q_w,
+                q_out,
+            })
+        }
+        FloatLayer::Depthwise(d) => {
+            let (w, b) = match &d.bn {
+                Some(bn) => bn.fold_into(&d.weights, &d.bias, d.channels),
+                None => (d.weights.clone(), d.bias.clone()),
+            };
+            let max_w = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let q_w = QParam::new(frac_bits_for(max_w));
+            Layer::Depthwise(QuantDepthwise {
+                kernel: d.kernel,
+                channels: d.channels,
+                pad: d.kernel / 2,
+                weights: quantize_tensor_with(&w, q_w),
+                bias: quantize_bias(&b, q_in.frac_bits, q_w.frac_bits),
+                q_in,
+                q_w,
+                q_out,
+            })
+        }
+        FloatLayer::Shift(s) => {
+            let (w, b) = match &s.bn {
+                Some(bn) => bn.fold_into(&s.weights, &s.bias, s.out_channels),
+                None => (s.weights.clone(), s.bias.clone()),
+            };
+            let max_w = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let q_w = QParam::new(frac_bits_for(max_w));
+            Layer::Shift(ShiftConv {
+                in_channels: s.in_channels,
+                out_channels: s.out_channels,
+                shifts: uniform_shifts(s.in_channels, s.kernel),
+                weights: quantize_tensor_with(&w, q_w),
+                bias: quantize_bias(&b, q_in.frac_bits, q_w.frac_bits),
+                q_in,
+                q_w,
+                q_out,
+            })
+        }
+        FloatLayer::AddConv(_) => {
+            unreachable!("AddConv is expanded by deploy() into conv+bn — see quantize_add")
+        }
+        FloatLayer::Relu => Layer::Relu,
+        FloatLayer::MaxPool2 => Layer::MaxPool2,
+        FloatLayer::GlobalAvgPool => Layer::GlobalAvgPool(Some(q_out)),
+        FloatLayer::Dense(d) => {
+            let max_w = d.weights.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let q_w = QParam::new(frac_bits_for(max_w));
+            Layer::Dense(QuantDense {
+                in_features: d.in_features,
+                out_features: d.out_features,
+                weights: quantize_tensor_with(&d.weights, q_w),
+                bias: quantize_bias(&d.bias, q_in.frac_bits, q_w.frac_bits),
+                q_in,
+                q_w,
+                q_out,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NoopMonitor;
+    use crate::util::prng::Rng;
+
+    fn small_float_model(rng: &mut Rng) -> FloatModel {
+        let cin = 3;
+        let cmid = 8;
+        FloatModel {
+            name: "pipe-test".into(),
+            input_shape: Shape::new(8, 8, cin),
+            layers: vec![
+                FloatLayer::Conv(FloatConv {
+                    kernel: 3,
+                    groups: 1,
+                    in_channels: cin,
+                    out_channels: cmid,
+                    weights: rng.normal_vec_f32(9 * cin * cmid, 0.3),
+                    bias: rng.normal_vec_f32(cmid, 0.1),
+                    bn: Some(BatchNorm {
+                        gamma: vec![1.1; cmid],
+                        beta: vec![0.05; cmid],
+                        mean: vec![0.02; cmid],
+                        var: vec![0.9; cmid],
+                        eps: 1e-5,
+                    }),
+                }),
+                FloatLayer::Relu,
+                FloatLayer::MaxPool2,
+                FloatLayer::GlobalAvgPool,
+                FloatLayer::Dense(FloatDense {
+                    in_features: cmid,
+                    out_features: 4,
+                    weights: rng.normal_vec_f32(cmid * 4, 0.5),
+                    bias: vec![0.0; 4],
+                }),
+            ],
+        }
+    }
+
+    fn calib_set(rng: &mut Rng, model: &FloatModel, n: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                (0..model.input_shape.len())
+                    .map(|_| rng.f32_range(-1.0, 1.0))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn float_forward_shapes() {
+        let mut rng = Rng::new(1);
+        let m = small_float_model(&mut rng);
+        let x: Vec<f32> = (0..m.input_shape.len()).map(|_| 0.1).collect();
+        let acts = m.forward_all(&x);
+        assert_eq!(acts.len(), m.layers.len() + 1);
+        assert_eq!(acts.last().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn deployed_model_tracks_float_logits() {
+        let mut rng = Rng::new(2);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 8);
+        let qm = fm.deploy(&calib);
+        // agreement on argmax for most calibration inputs
+        let mut agree = 0;
+        for x in &calib {
+            let logits_f = fm.forward(x);
+            let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let out = qm.forward(&xi, true, &mut NoopMonitor);
+            let af = crate::nn::argmax(
+                &logits_f
+                    .iter()
+                    .map(|&v| crate::quant::sat_i8((v * 16.0) as i32))
+                    .collect::<Vec<_>>(),
+            );
+            let aq = crate::nn::argmax(&out.data);
+            if af == aq {
+                agree += 1;
+            }
+        }
+        assert!(agree >= calib.len() * 3 / 4, "agreement {agree}/{}", calib.len());
+    }
+
+    #[test]
+    fn deployed_scalar_simd_parity() {
+        let mut rng = Rng::new(3);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let qm = fm.deploy(&calib);
+        let x = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, &calib[0]);
+        let a = qm.forward(&x, false, &mut NoopMonitor);
+        let b = qm.forward(&x, true, &mut NoopMonitor);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn calibration_formats_cover_activations() {
+        let mut rng = Rng::new(4);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 8);
+        let qm = fm.deploy(&calib);
+        // the quantized model must not saturate pervasively on the
+        // calibration set: check <2% saturated outputs at the logits
+        let mut sat = 0usize;
+        let mut tot = 0usize;
+        for x in &calib {
+            let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let out = qm.forward(&xi, false, &mut NoopMonitor);
+            sat += out.data.iter().filter(|&&v| v == 127 || v == -128).count();
+            tot += out.data.len();
+        }
+        assert!(sat * 50 < tot, "saturation {sat}/{tot}");
+    }
+}

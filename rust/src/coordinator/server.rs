@@ -1,0 +1,331 @@
+//! Threaded inference service — the L3 request path. A leader thread owns
+//! the request queue and batches requests; worker threads run the int8
+//! engine (zero-overhead [`NoopMonitor`]); per-request latency and
+//! simulated MCU energy are accounted from a one-time profile of the
+//! deployed model.
+//!
+//! (tokio is not in the offline vendor set — std threads + mpsc channels
+//! provide the same structure; see Cargo.toml note.)
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::mcu::{McuConfig, Measurement};
+use crate::nn::{argmax, Model, NoopMonitor, Tensor};
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Which deployed model variant to run (e.g. "mcunet-shift").
+    pub model: String,
+    pub input: Vec<i8>,
+}
+
+/// An inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub model: String,
+    pub logits: Vec<i8>,
+    pub class: usize,
+    /// Host wall-clock service time.
+    pub service_time: Duration,
+    /// Simulated on-MCU latency for this model (from the deployment
+    /// profile).
+    pub mcu_latency_s: f64,
+    /// Simulated on-MCU energy (mJ).
+    pub mcu_energy_mj: f64,
+}
+
+/// Server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+struct Deployed {
+    model: Model,
+    /// One-time simulated measurement (SIMD path, default MCU config).
+    mcu: Measurement,
+}
+
+enum Job {
+    Run(Request, mpsc::Sender<Result<Response, String>>),
+    Shutdown,
+}
+
+/// The inference server: a registry of deployed models and a worker pool.
+pub struct InferenceServer {
+    models: Arc<HashMap<String, Deployed>>,
+    tx: mpsc::Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    served: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    latencies_us: Arc<Mutex<Vec<f64>>>,
+    shutting_down: AtomicBool,
+}
+
+impl InferenceServer {
+    /// Deploy a set of models and start `n_workers` workers.
+    pub fn start(models: Vec<Model>, n_workers: usize, cfg: &McuConfig) -> Self {
+        let mut registry = HashMap::new();
+        for m in models {
+            // one-time MCU profile: counts of a representative input
+            let x = Tensor::zeros(m.input_shape, m.input_q);
+            let mcu = crate::harness::measure_model(&m, &x, true, cfg);
+            registry.insert(m.name.clone(), Deployed { model: m, mcu });
+        }
+        let models = Arc::new(registry);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let served = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let latencies_us = Arc::new(Mutex::new(Vec::new()));
+
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let models = Arc::clone(&models);
+                let served = Arc::clone(&served);
+                let errors = Arc::clone(&errors);
+                let lats = Arc::clone(&latencies_us);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(Job::Run(req, reply)) => {
+                            let t0 = Instant::now();
+                            let result = serve_one(&models, &req, t0);
+                            match &result {
+                                Ok(r) => {
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                    lats.lock()
+                                        .unwrap()
+                                        .push(r.service_time.as_secs_f64() * 1e6);
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            let _ = reply.send(result);
+                        }
+                        Ok(Job::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+
+        Self {
+            models,
+            tx,
+            workers,
+            served,
+            errors,
+            latencies_us,
+            shutting_down: AtomicBool::new(false),
+        }
+    }
+
+    /// Names of the deployed models.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Result<Response, String>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // a shut-down queue drops the job; the caller sees a disconnect
+        let _ = self.tx.send(Job::Run(req, reply_tx));
+        reply_rx
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, req: Request) -> Result<Response, String> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| "server shut down".to_string())?
+    }
+
+    /// Current statistics.
+    pub fn stats(&self) -> ServerStats {
+        let mut lats = self.latencies_us.lock().unwrap().clone();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lats.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
+            lats[idx]
+        };
+        ServerStats {
+            served: self.served.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            p50_us: pct(0.5),
+            p99_us: pct(0.99),
+            mean_us: if lats.is_empty() {
+                0.0
+            } else {
+                lats.iter().sum::<f64>() / lats.len() as f64
+            },
+        }
+    }
+
+    /// Graceful shutdown: drain workers.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+fn serve_one(
+    models: &HashMap<String, Deployed>,
+    req: &Request,
+    t0: Instant,
+) -> Result<Response, String> {
+    let deployed = models
+        .get(&req.model)
+        .ok_or_else(|| format!("unknown model {:?}", req.model))?;
+    let m = &deployed.model;
+    if req.input.len() != m.input_shape.len() {
+        return Err(format!(
+            "input length {} != expected {}",
+            req.input.len(),
+            m.input_shape.len()
+        ));
+    }
+    let x = Tensor::from_vec(m.input_shape, m.input_q, req.input.clone());
+    let out = m.forward(&x, true, &mut NoopMonitor);
+    Ok(Response {
+        id: req.id,
+        model: req.model.clone(),
+        class: argmax(&out.data),
+        logits: out.data,
+        service_time: t0.elapsed(),
+        mcu_latency_s: deployed.mcu.latency_s,
+        mcu_energy_mj: deployed.mcu.energy_mj,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Primitive;
+    use crate::models::mcunet;
+    use crate::util::prng::Rng;
+
+    fn server() -> InferenceServer {
+        let models = vec![
+            mcunet(Primitive::Standard, 1),
+            mcunet(Primitive::Shift, 1),
+        ];
+        InferenceServer::start(models, 2, &McuConfig::default())
+    }
+
+    fn request(id: u64, model: &str, rng: &mut Rng) -> Request {
+        let mut input = vec![0i8; 32 * 32 * 3];
+        rng.fill_i8(&mut input, -64, 63);
+        Request {
+            id,
+            model: model.to_string(),
+            input,
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_counts() {
+        let s = server();
+        let mut rng = Rng::new(1);
+        for i in 0..8 {
+            let model = if i % 2 == 0 { "mcunet-standard" } else { "mcunet-shift" };
+            let r = s.infer(request(i, model, &mut rng)).unwrap();
+            assert_eq!(r.id, i);
+            assert_eq!(r.logits.len(), 10);
+            assert!(r.class < 10);
+            assert!(r.mcu_latency_s > 0.0);
+            assert!(r.mcu_energy_mj > 0.0);
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 8);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.p99_us >= stats.p50_us);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let s = server();
+        let mut rng = Rng::new(2);
+        let e = s.infer(request(0, "nope", &mut rng)).unwrap_err();
+        assert!(e.contains("unknown model"));
+        let stats = s.shutdown();
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn bad_input_length_is_an_error() {
+        let s = server();
+        let r = Request {
+            id: 0,
+            model: "mcunet-standard".into(),
+            input: vec![0; 7],
+        };
+        assert!(s.infer(r).unwrap_err().contains("input length"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let s = Arc::new(server());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s2 = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                let mut ok = 0;
+                for i in 0..16u64 {
+                    let r = s2
+                        .infer(request(t * 100 + i, "mcunet-standard", &mut rng))
+                        .unwrap();
+                    assert_eq!(r.id, t * 100 + i);
+                    ok += 1;
+                }
+                ok
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 64);
+        let s = Arc::try_unwrap(s).ok().expect("sole owner");
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 64);
+        // request conservation: no response lost, none double-counted
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn deterministic_outputs_across_workers() {
+        let s = server();
+        let mut rng = Rng::new(5);
+        let req = request(1, "mcunet-shift", &mut rng);
+        let a = s.infer(req.clone()).unwrap();
+        let b = s.infer(Request { id: 2, ..req }).unwrap();
+        assert_eq!(a.logits, b.logits);
+        s.shutdown();
+    }
+}

@@ -1,0 +1,231 @@
+//! Cross-layer validation: run the same quantized computation through the
+//! rust int8 engine and through the JAX/Pallas-lowered HLO artifact on the
+//! PJRT runtime, and require bit-exact agreement.
+//!
+//! The artifacts (`make artifacts`) carry the quantized integer semantics
+//! in i32 (see `python/compile/`): inputs are int8 values sign-extended to
+//! i32, outputs are the engine's int8 outputs as i32.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::models::{experiment_input, experiment_layer, LayerParams};
+use crate::nn::{NoopMonitor, Tensor};
+use crate::runtime::{artifact_path, InputI32, Runtime};
+
+/// The layer configuration every kernel artifact is lowered at (must match
+/// `python/compile/aot.py` KERNEL_LAYER).
+pub fn kernel_layer() -> LayerParams {
+    LayerParams::new(2, 3, 8, 4, 4)
+}
+
+/// Seed shared with `aot.py` for weights/input generation — the python
+/// side regenerates identical tensors via the same xoshiro256** PRNG
+/// re-implemented in `python/compile/seeds.py`.
+pub const VALIDATE_SEED: u64 = 0xA0_7E57;
+
+/// Outcome of one artifact validation.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub artifact: String,
+    pub elements: usize,
+    pub mismatches: usize,
+    pub first_mismatch: Option<(usize, i32, i32)>,
+}
+
+impl Validation {
+    pub fn passed(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+/// Build the artifact input list for a primitive: the activation plus
+/// every layer parameter as a runtime argument (shared contract with
+/// `python/compile/aot.py` — weights travel at run time, so no
+/// cross-language weight generation is needed). Order:
+/// * standard/grouped: `x, w, bias, out_shift`
+/// * dws: `x, w_dw, b_dw, w_pw, b_pw, dw_shift, pw_shift`
+/// * shift: `x, w, bias, out_shift` (offsets = the shared uniform rule)
+/// * add: `x, w, bias, bn_m, bn_b, out_shift, bn_shift`
+pub fn artifact_inputs(model: &crate::nn::Model, x: &Tensor) -> Vec<InputI32> {
+    use crate::nn::Layer;
+    let mut ins = vec![InputI32::from_i8(
+        &x.data,
+        &[x.shape.h, x.shape.w, x.shape.c],
+    )];
+    let mut shifts: Vec<i32> = Vec::new();
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv(c) => {
+                let cpg = c.ch_per_group();
+                ins.push(InputI32::from_i8(
+                    &c.weights,
+                    &[c.out_channels, c.kernel, c.kernel, cpg],
+                ));
+                ins.push(InputI32::new(c.bias.clone(), &[c.out_channels]));
+                shifts.push(c.out_shift());
+            }
+            Layer::Depthwise(d) => {
+                ins.push(InputI32::from_i8(
+                    &d.weights,
+                    &[d.channels, d.kernel, d.kernel],
+                ));
+                ins.push(InputI32::new(d.bias.clone(), &[d.channels]));
+                shifts.push(d.out_shift());
+            }
+            Layer::Shift(s) => {
+                ins.push(InputI32::from_i8(
+                    &s.weights,
+                    &[s.out_channels, s.in_channels],
+                ));
+                ins.push(InputI32::new(s.bias.clone(), &[s.out_channels]));
+                shifts.push(s.out_shift());
+            }
+            Layer::AddConv(a) => {
+                ins.push(InputI32::from_i8(
+                    &a.weights,
+                    &[a.out_channels, a.kernel, a.kernel, a.in_channels],
+                ));
+                ins.push(InputI32::new(a.bias.clone(), &[a.out_channels]));
+                shifts.push(a.out_shift());
+            }
+            Layer::Bn(b) => {
+                ins.push(InputI32::new(
+                    b.m.iter().map(|&v| v as i32).collect(),
+                    &[b.channels],
+                ));
+                ins.push(InputI32::new(b.b.clone(), &[b.channels]));
+                shifts.push(b.out_shift());
+            }
+            _ => {}
+        }
+    }
+    for s in shifts {
+        ins.push(InputI32::new(vec![s], &[1]));
+    }
+    ins
+}
+
+/// Validate one primitive's kernel artifact against the engine.
+pub fn validate_primitive(
+    rt: &Runtime,
+    dir: &str,
+    prim: crate::analytic::Primitive,
+) -> Result<Validation> {
+    let p = kernel_layer();
+    let model = experiment_layer(&p, prim, VALIDATE_SEED);
+    let x = experiment_input(&p, VALIDATE_SEED);
+
+    // engine output (int8 → i32)
+    let engine_out = model.forward(&x, true, &mut NoopMonitor);
+    let want: Vec<i32> = engine_out.data.iter().map(|&v| v as i32).collect();
+
+    // artifact output
+    let name = format!("kernel_{}", prim.name());
+    let path = artifact_path(dir, &name);
+    let loaded = rt
+        .load_hlo_text(&path)
+        .with_context(|| format!("loading {path}"))?;
+    let outs = loaded.run_i32(&artifact_inputs(&model, &x))?;
+    let got = outs
+        .first()
+        .ok_or_else(|| anyhow!("artifact returned no outputs"))?;
+
+    if got.len() != want.len() {
+        return Err(anyhow!(
+            "{name}: output length {} != engine {}",
+            got.len(),
+            want.len()
+        ));
+    }
+    let mut mismatches = 0;
+    let mut first = None;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        if g != w {
+            if first.is_none() {
+                first = Some((i, *g, *w));
+            }
+            mismatches += 1;
+        }
+    }
+    Ok(Validation {
+        artifact: name,
+        elements: want.len(),
+        mismatches,
+        first_mismatch: first,
+    })
+}
+
+/// Validate every available kernel artifact; returns (validations, all_ok).
+pub fn validate_all(dir: &str) -> Result<(Vec<Validation>, bool)> {
+    let rt = Runtime::cpu()?;
+    let mut results = Vec::new();
+    let mut all_ok = true;
+    for prim in crate::analytic::Primitive::ALL {
+        let name = format!("kernel_{}", prim.name());
+        if !std::path::Path::new(&artifact_path(dir, &name)).exists() {
+            eprintln!("skip {name}: artifact not built (run `make artifacts`)");
+            continue;
+        }
+        let v = validate_primitive(&rt, dir, prim)?;
+        all_ok &= v.passed();
+        results.push(v);
+    }
+    Ok((results, all_ok))
+}
+
+/// CLI entry point for `convbench validate`.
+pub fn validate_cli(dir: &str) {
+    match validate_all(dir) {
+        Ok((results, all_ok)) => {
+            if results.is_empty() {
+                eprintln!("no artifacts found in {dir}/ — run `make artifacts` first");
+                std::process::exit(1);
+            }
+            for v in &results {
+                if v.passed() {
+                    println!("PASS {} ({} elements, bit-exact)", v.artifact, v.elements);
+                } else {
+                    println!(
+                        "FAIL {} ({}/{} mismatches, first at {:?})",
+                        v.artifact, v.mismatches, v.elements, v.first_mismatch
+                    );
+                }
+            }
+            std::process::exit(if all_ok { 0 } else { 1 });
+        }
+        Err(e) => {
+            eprintln!("validation error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_layer_is_small_and_valid() {
+        let p = kernel_layer();
+        assert!(p.validate().is_ok());
+        // small enough for interpret-mode pallas at build time
+        assert!(p.input_len() <= 1024);
+    }
+
+    #[test]
+    fn validation_passed_logic() {
+        let v = Validation {
+            artifact: "x".into(),
+            elements: 10,
+            mismatches: 0,
+            first_mismatch: None,
+        };
+        assert!(v.passed());
+        let v2 = Validation {
+            mismatches: 1,
+            first_mismatch: Some((3, 1, 2)),
+            ..v
+        };
+        assert!(!v2.passed());
+    }
+}

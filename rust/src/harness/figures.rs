@@ -1,0 +1,227 @@
+//! Generators for the paper's remaining figures/tables: Fig. 4 (frequency
+//! sweep), Table 3 (power vs frequency), Table 4 (optimization level), and
+//! Table 1 (closed forms) — each producing the same rows/series the paper
+//! reports.
+
+use crate::analytic::{complexity_gain, costs, param_gain, Primitive};
+use crate::mcu::calib::anchor_layer;
+use crate::mcu::{measure, McuConfig, Measurement, OptLevel, PathClass, PowerModel};
+use crate::models::LayerParams;
+use crate::nn::CountingMonitor;
+
+/// One row of the Fig. 4 frequency sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct FreqPoint {
+    pub freq_mhz: f64,
+    pub scalar: Measurement,
+    pub simd: Measurement,
+}
+
+/// Fig. 4: latency and energy of the §4.2 layer from 10 to 80 MHz.
+pub fn fig4_frequency_sweep(freqs_mhz: &[f64]) -> Vec<FreqPoint> {
+    let (conv, x) = anchor_layer();
+    let mut ms = CountingMonitor::new();
+    conv.forward_scalar(&x, &mut ms);
+    let mut mv = CountingMonitor::new();
+    conv.forward_simd(&x, &mut mv);
+    freqs_mhz
+        .iter()
+        .map(|&f| {
+            let cfg = McuConfig {
+                freq_mhz: f,
+                opt: OptLevel::Os,
+            };
+            FreqPoint {
+                freq_mhz: f,
+                scalar: measure(&ms.counts, PathClass::Scalar, &cfg),
+                simd: measure(&mv.counts, PathClass::Simd, &cfg),
+            }
+        })
+        .collect()
+}
+
+/// Table 3: average power (mW) at the paper's four frequencies, per path.
+#[derive(Clone, Copy, Debug)]
+pub struct Table3Row {
+    pub freq_mhz: f64,
+    pub no_simd_mw: f64,
+    pub simd_mw: f64,
+}
+
+pub fn table3_power() -> Vec<Table3Row> {
+    let s = PowerModel::for_path(PathClass::Scalar);
+    let v = PowerModel::for_path(PathClass::Simd);
+    [10.0, 20.0, 40.0, 80.0]
+        .iter()
+        .map(|&f| Table3Row {
+            freq_mhz: f,
+            no_simd_mw: s.power_mw(f),
+            simd_mw: v.power_mw(f),
+        })
+        .collect()
+}
+
+/// One row of Table 4 (optimization level × path).
+#[derive(Clone, Copy, Debug)]
+pub struct Table4Row {
+    pub simd: bool,
+    pub opt: OptLevel,
+    pub latency_s: f64,
+    pub energy_mj: f64,
+    /// O0→Os speedup (filled on the Os rows).
+    pub opt_speedup: Option<f64>,
+    /// scalar→SIMD speedup at equal opt level (filled on SIMD rows).
+    pub simd_speedup: Option<f64>,
+}
+
+/// Table 4: the §4.2 convolution at O0/Os, scalar and SIMD.
+pub fn table4_optlevel() -> Vec<Table4Row> {
+    let (conv, x) = anchor_layer();
+    let mut ms = CountingMonitor::new();
+    conv.forward_scalar(&x, &mut ms);
+    let mut mv = CountingMonitor::new();
+    conv.forward_simd(&x, &mut mv);
+
+    let run = |counts, path, opt| {
+        let cfg = McuConfig {
+            freq_mhz: crate::mcu::F401_MAX_MHZ,
+            opt,
+        };
+        measure(counts, path, &cfg)
+    };
+    let s_o0 = run(&ms.counts, PathClass::Scalar, OptLevel::O0);
+    let s_os = run(&ms.counts, PathClass::Scalar, OptLevel::Os);
+    let v_o0 = run(&mv.counts, PathClass::Simd, OptLevel::O0);
+    let v_os = run(&mv.counts, PathClass::Simd, OptLevel::Os);
+
+    vec![
+        Table4Row {
+            simd: false,
+            opt: OptLevel::O0,
+            latency_s: s_o0.latency_s,
+            energy_mj: s_o0.energy_mj,
+            opt_speedup: None,
+            simd_speedup: None,
+        },
+        Table4Row {
+            simd: false,
+            opt: OptLevel::Os,
+            latency_s: s_os.latency_s,
+            energy_mj: s_os.energy_mj,
+            opt_speedup: Some(s_o0.latency_s / s_os.latency_s),
+            simd_speedup: None,
+        },
+        Table4Row {
+            simd: true,
+            opt: OptLevel::O0,
+            latency_s: v_o0.latency_s,
+            energy_mj: v_o0.energy_mj,
+            opt_speedup: None,
+            simd_speedup: Some(s_o0.latency_s / v_o0.latency_s),
+        },
+        Table4Row {
+            simd: true,
+            opt: OptLevel::Os,
+            latency_s: v_os.latency_s,
+            energy_mj: v_os.energy_mj,
+            opt_speedup: Some(v_o0.latency_s / v_os.latency_s),
+            simd_speedup: Some(s_os.latency_s / v_os.latency_s),
+        },
+    ]
+}
+
+/// One row of Table 1 (evaluated on a reference layer).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub primitive: Primitive,
+    pub params: u64,
+    pub macs: u64,
+    pub param_gain: f64,
+    pub complexity_gain: f64,
+}
+
+/// Table 1 instantiated on a layer configuration.
+pub fn table1_costs(p: &LayerParams) -> Vec<Table1Row> {
+    Primitive::ALL
+        .iter()
+        .map(|&prim| {
+            let c = costs(p, prim);
+            Table1Row {
+                primitive: prim,
+                params: c.params,
+                macs: c.macs,
+                param_gain: param_gain(p, prim),
+                complexity_gain: complexity_gain(p, prim),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_latency_hyperbolic_energy_decreasing() {
+        let pts = fig4_frequency_sweep(&[10.0, 20.0, 40.0, 80.0]);
+        for w in pts.windows(2) {
+            // latency strictly decreasing with frequency
+            assert!(w[1].scalar.latency_s < w[0].scalar.latency_s);
+            assert!(w[1].simd.latency_s < w[0].simd.latency_s);
+            // energy decreasing too (the §4.2 finding)
+            assert!(w[1].scalar.energy_mj < w[0].scalar.energy_mj);
+            assert!(w[1].simd.energy_mj < w[0].simd.energy_mj);
+        }
+        // exact inverse proportionality of latency
+        let r = pts[0].scalar.latency_s / pts[3].scalar.latency_s;
+        assert!((r - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table3_matches_paper_within_5pct() {
+        use crate::mcu::power::{TABLE3_NO_SIMD_MW, TABLE3_SIMD_MW};
+        let rows = table3_power();
+        for (i, row) in rows.iter().enumerate() {
+            assert!((row.no_simd_mw - TABLE3_NO_SIMD_MW[i]).abs() / TABLE3_NO_SIMD_MW[i] < 0.05);
+            assert!((row.simd_mw - TABLE3_SIMD_MW[i]).abs() / TABLE3_SIMD_MW[i] < 0.05);
+        }
+    }
+
+    #[test]
+    fn table4_reproduces_paper_speedups() {
+        let rows = table4_optlevel();
+        // paper: opt speedup 1.52 (scalar), 9.81 (SIMD); SIMD speedup at
+        // Os 7.55, at O0 1.17
+        let s_os = &rows[1];
+        let v_o0 = &rows[2];
+        let v_os = &rows[3];
+        assert!((s_os.opt_speedup.unwrap() - 1.52).abs() < 0.02);
+        assert!((v_os.opt_speedup.unwrap() - 9.81).abs() < 0.03);
+        assert!((v_os.simd_speedup.unwrap() - 7.55).abs() < 0.03);
+        assert!((v_o0.simd_speedup.unwrap() - 1.17).abs() < 0.02);
+        // paper latencies: 1.26 / 0.83 / 1.08 / 0.11 s
+        assert!((rows[0].latency_s - 1.26).abs() < 1e-6);
+        assert!((rows[1].latency_s - 0.83).abs() < 1e-6);
+        assert!((rows[2].latency_s - 1.08).abs() < 1e-6);
+        assert!((rows[3].latency_s - 0.11).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table4_energy_inversion_at_o0() {
+        // paper: SIMD at O0 consumes MORE energy (82.0 vs 63.9 mJ)
+        let rows = table4_optlevel();
+        assert!(rows[2].energy_mj > rows[0].energy_mj);
+        // and energies land near the paper's absolute numbers
+        assert!((rows[0].energy_mj - 63.9).abs() < 6.0, "{}", rows[0].energy_mj);
+        assert!((rows[3].energy_mj - 7.2).abs() < 1.0, "{}", rows[3].energy_mj);
+    }
+
+    #[test]
+    fn table1_rows_cover_all_primitives() {
+        let p = LayerParams::new(2, 3, 32, 16, 16);
+        let rows = table1_costs(&p);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].param_gain, 1.0);
+        assert!(rows[1].param_gain < 1.0); // grouped
+    }
+}

@@ -1,0 +1,20 @@
+//! Benchmark harness: the paper's experiment plans (Table 2), the sweep
+//! runner behind Fig. 2 / Fig. 3, the §4.1 linearity regressions, and the
+//! Fig. 4 / Table 1 / Table 3 / Table 4 generators.
+
+pub mod ablation;
+pub mod figures;
+pub mod nas;
+pub mod plan;
+pub mod regress;
+pub mod sweep;
+
+pub use ablation::{ablation_markdown, best_feasible, blocking_ablation, BlockingPoint};
+pub use figures::{
+    fig4_frequency_sweep, table1_costs, table3_power, table4_optlevel, FreqPoint, Table1Row,
+    Table3Row, Table4Row,
+};
+pub use nas::{best_under_energy_budget, enumerate as nas_enumerate, nas_markdown, pareto_front, Candidate, ScoredCandidate, StageChoice};
+pub use plan::{quick_plans, table2_plans, Axis, Sweep};
+pub use regress::{regressions, RegressionReport};
+pub use sweep::{measure_model, run_all, run_sweep, SweepPoint};

@@ -1,0 +1,216 @@
+//! Primitive-aware architecture search — the paper's closing direction
+//! ("our work opens up new possibilities for neural architecture search
+//! algorithms"): search over the per-stage primitive choice (and groups)
+//! of an MCU-Net-shaped network, scoring candidates with the *simulated*
+//! latency/energy/memory models instead of on-device measurement.
+//!
+//! The search is exhaustive over the discrete space (it is small) and
+//! returns the latency/energy Pareto front plus the best candidate under
+//! a budget — exactly the loop a hardware-aware NAS would run with this
+//! crate as its cost oracle.
+
+use crate::analytic::Primitive;
+use crate::harness::measure_model;
+use crate::mcu::{footprint, McuConfig, Measurement, F401_FLASH_BYTES, F401_SRAM_BYTES};
+use crate::models::mcunet_with;
+use crate::nn::Tensor;
+
+/// One candidate architecture: a primitive (and group count) per stage.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub stage1: StageChoice,
+    pub stage2: StageChoice,
+}
+
+/// Per-stage choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageChoice {
+    Standard,
+    Grouped(usize),
+    DepthwiseSeparable,
+    Shift,
+    Add,
+}
+
+impl StageChoice {
+    pub const ALL: [StageChoice; 6] = [
+        StageChoice::Standard,
+        StageChoice::Grouped(2),
+        StageChoice::Grouped(4),
+        StageChoice::DepthwiseSeparable,
+        StageChoice::Shift,
+        StageChoice::Add,
+    ];
+
+    pub fn primitive(&self) -> Primitive {
+        match self {
+            StageChoice::Standard => Primitive::Standard,
+            StageChoice::Grouped(_) => Primitive::Grouped,
+            StageChoice::DepthwiseSeparable => Primitive::DepthwiseSeparable,
+            StageChoice::Shift => Primitive::Shift,
+            StageChoice::Add => Primitive::Add,
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        match self {
+            StageChoice::Grouped(g) => *g,
+            _ => 1,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StageChoice::Grouped(g) => format!("grouped{g}"),
+            other => other.primitive().name().to_string(),
+        }
+    }
+}
+
+/// A scored candidate.
+#[derive(Clone, Debug)]
+pub struct ScoredCandidate {
+    pub candidate: Candidate,
+    pub mcu: Measurement,
+    pub flash_bytes: usize,
+    pub sram_bytes: usize,
+    pub fits_f401: bool,
+}
+
+/// Score every candidate in the space on the simulated MCU (SIMD build,
+/// default config).
+pub fn enumerate(cfg: &McuConfig) -> Vec<ScoredCandidate> {
+    let mut out = Vec::new();
+    for &s1 in &StageChoice::ALL {
+        for &s2 in &StageChoice::ALL {
+            let cand = Candidate { stage1: s1, stage2: s2 };
+            let model = mcunet_with(s1.primitive(), s1.groups(), s2.primitive(), s2.groups(), 77);
+            let x = Tensor::zeros(model.input_shape, model.input_q);
+            let mcu = measure_model(&model, &x, true, cfg);
+            let mem = footprint(&model);
+            out.push(ScoredCandidate {
+                candidate: cand,
+                mcu,
+                flash_bytes: mem.flash_bytes,
+                sram_bytes: mem.sram_bytes,
+                fits_f401: mem.fits(F401_FLASH_BYTES, F401_SRAM_BYTES),
+            });
+        }
+    }
+    out
+}
+
+/// Latency/energy Pareto front (minimizing both; deployable only).
+pub fn pareto_front(scored: &[ScoredCandidate]) -> Vec<&ScoredCandidate> {
+    let mut front: Vec<&ScoredCandidate> = Vec::new();
+    for c in scored.iter().filter(|c| c.fits_f401) {
+        let dominated = scored.iter().filter(|o| o.fits_f401).any(|o| {
+            (o.mcu.latency_s < c.mcu.latency_s && o.mcu.energy_mj <= c.mcu.energy_mj)
+                || (o.mcu.latency_s <= c.mcu.latency_s && o.mcu.energy_mj < c.mcu.energy_mj)
+        });
+        if !dominated {
+            front.push(c);
+        }
+    }
+    front.sort_by(|a, b| a.mcu.latency_s.partial_cmp(&b.mcu.latency_s).unwrap());
+    front
+}
+
+/// Best candidate under an energy budget (mJ): minimize latency subject
+/// to energy ≤ budget and deployability.
+pub fn best_under_energy_budget(
+    scored: &[ScoredCandidate],
+    budget_mj: f64,
+) -> Option<&ScoredCandidate> {
+    scored
+        .iter()
+        .filter(|c| c.fits_f401 && c.mcu.energy_mj <= budget_mj)
+        .min_by(|a, b| a.mcu.latency_s.partial_cmp(&b.mcu.latency_s).unwrap())
+}
+
+/// Markdown table for a candidate list.
+pub fn nas_markdown(rows: &[&ScoredCandidate]) -> String {
+    let mut s = String::from(
+        "| stage1 | stage2 | latency (ms) | energy (mJ) | flash (KiB) | SRAM (KiB) | fits F401 |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for c in rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.2} | {:.3} | {:.1} | {:.1} | {} |\n",
+            c.candidate.stage1.name(),
+            c.candidate.stage2.name(),
+            1e3 * c.mcu.latency_s,
+            c.mcu.energy_mj,
+            c.flash_bytes as f64 / 1024.0,
+            c.sram_bytes as f64 / 1024.0,
+            if c.fits_f401 { "yes" } else { "no" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn scored() -> &'static Vec<ScoredCandidate> {
+        static S: OnceLock<Vec<ScoredCandidate>> = OnceLock::new();
+        S.get_or_init(|| enumerate(&McuConfig::default()))
+    }
+
+    #[test]
+    fn full_space_enumerated() {
+        assert_eq!(scored().len(), 36);
+        assert!(scored().iter().all(|c| c.mcu.latency_s > 0.0));
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_sorted() {
+        let front = pareto_front(scored());
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].mcu.latency_s <= w[1].mcu.latency_s);
+            // along the front, lower latency costs at least as much energy
+            assert!(w[0].mcu.energy_mj >= w[1].mcu.energy_mj - 1e-12);
+        }
+    }
+
+    #[test]
+    fn shift_dominates_add_everywhere() {
+        // Table 1: shift has 1/Hk² the MACs of add at the same shape, and
+        // a SIMD path — every all-shift config must dominate all-add
+        let all_shift = scored()
+            .iter()
+            .find(|c| c.candidate.stage1 == StageChoice::Shift && c.candidate.stage2 == StageChoice::Shift)
+            .unwrap();
+        let all_add = scored()
+            .iter()
+            .find(|c| c.candidate.stage1 == StageChoice::Add && c.candidate.stage2 == StageChoice::Add)
+            .unwrap();
+        assert!(all_shift.mcu.latency_s < all_add.mcu.latency_s);
+        assert!(all_shift.mcu.energy_mj < all_add.mcu.energy_mj);
+    }
+
+    #[test]
+    fn budget_search_respects_budget() {
+        let s = scored();
+        let loose = best_under_energy_budget(s, 1e9).unwrap();
+        // unconstrained: the fastest deployable candidate
+        for c in s.iter().filter(|c| c.fits_f401) {
+            assert!(loose.mcu.latency_s <= c.mcu.latency_s);
+        }
+        let tight_budget = loose.mcu.energy_mj * 0.5;
+        if let Some(t) = best_under_energy_budget(s, tight_budget) {
+            assert!(t.mcu.energy_mj <= tight_budget);
+        }
+        assert!(best_under_energy_budget(s, 0.0).is_none());
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let front = pareto_front(scored());
+        let md = nas_markdown(&front);
+        assert!(md.lines().count() >= 3);
+    }
+}

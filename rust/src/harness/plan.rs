@@ -1,0 +1,174 @@
+//! Experiment plans — the paper's Table 2.
+//!
+//! | Experiment | Groups | Kernel | Input width | Input ch | Filters |
+//! |------------|--------|--------|-------------|----------|---------|
+//! | 1          | 1–32   | 3      | 10          | 128      | 64      |
+//! | 2          | 2      | 1–11   | 32          | 16       | 16      |
+//! | 3          | 2      | 3      | 8–32        | 16       | 16      |
+//! | 4          | 2      | 3      | 32          | 4–32     | 16      |
+//! | 5          | 2      | 3      | 32          | 16       | 4–32    |
+//!
+//! Swept values honour the engine's structural constraints: groups must
+//! divide both channel counts (powers of two up to 32), kernels are odd
+//! (symmetric same-padding — even kernels are not representable in NNoM's
+//! padding scheme either).
+
+use crate::models::LayerParams;
+
+/// The swept hyper-parameter axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    Groups,
+    Kernel,
+    InputWidth,
+    InChannels,
+    Filters,
+}
+
+impl Axis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::Groups => "groups",
+            Axis::Kernel => "kernel_size",
+            Axis::InputWidth => "input_width",
+            Axis::InChannels => "input_channels",
+            Axis::Filters => "filters",
+        }
+    }
+}
+
+/// One row of Table 2: a base configuration and the swept axis.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    /// Paper experiment id (1–5; Fig. 2 row / Fig. 3 panel).
+    pub id: usize,
+    pub axis: Axis,
+    pub values: Vec<usize>,
+    pub base: LayerParams,
+}
+
+impl Sweep {
+    /// The layer parameters at a given axis value.
+    pub fn layer_at(&self, value: usize) -> LayerParams {
+        let mut p = self.base;
+        match self.axis {
+            Axis::Groups => p.groups = value,
+            Axis::Kernel => p.kernel = value,
+            Axis::InputWidth => p.input_width = value,
+            Axis::InChannels => p.in_channels = value,
+            Axis::Filters => p.filters = value,
+        }
+        p.validate().expect("sweep produced invalid layer");
+        p
+    }
+}
+
+/// The five experiments of Table 2.
+pub fn table2_plans() -> Vec<Sweep> {
+    vec![
+        Sweep {
+            id: 1,
+            axis: Axis::Groups,
+            values: vec![1, 2, 4, 8, 16, 32],
+            base: LayerParams::new(1, 3, 10, 128, 64),
+        },
+        Sweep {
+            id: 2,
+            axis: Axis::Kernel,
+            values: vec![1, 3, 5, 7, 9, 11],
+            base: LayerParams::new(2, 3, 32, 16, 16),
+        },
+        Sweep {
+            id: 3,
+            axis: Axis::InputWidth,
+            values: vec![8, 12, 16, 20, 24, 28, 32],
+            base: LayerParams::new(2, 3, 8, 16, 16),
+        },
+        Sweep {
+            id: 4,
+            axis: Axis::InChannels,
+            values: vec![4, 8, 12, 16, 20, 24, 28, 32],
+            base: LayerParams::new(2, 3, 32, 4, 16),
+        },
+        Sweep {
+            id: 5,
+            axis: Axis::Filters,
+            values: vec![4, 8, 12, 16, 20, 24, 28, 32],
+            base: LayerParams::new(2, 3, 32, 16, 4),
+        },
+    ]
+}
+
+/// Reduced-size variants of the plans for fast CI runs (same axes, fewer
+/// and smaller points).
+pub fn quick_plans() -> Vec<Sweep> {
+    vec![
+        Sweep {
+            id: 1,
+            axis: Axis::Groups,
+            values: vec![1, 2, 4, 8],
+            base: LayerParams::new(1, 3, 6, 16, 16),
+        },
+        Sweep {
+            id: 2,
+            axis: Axis::Kernel,
+            values: vec![1, 3, 5],
+            base: LayerParams::new(2, 3, 10, 8, 8),
+        },
+        Sweep {
+            id: 3,
+            axis: Axis::InputWidth,
+            values: vec![6, 8, 10],
+            base: LayerParams::new(2, 3, 8, 8, 8),
+        },
+        Sweep {
+            id: 4,
+            axis: Axis::InChannels,
+            values: vec![4, 8, 12],
+            base: LayerParams::new(2, 3, 10, 4, 8),
+        },
+        Sweep {
+            id: 5,
+            axis: Axis::Filters,
+            values: vec![4, 8, 12],
+            base: LayerParams::new(2, 3, 10, 8, 4),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_experiments_matching_table2() {
+        let plans = table2_plans();
+        assert_eq!(plans.len(), 5);
+        assert_eq!(plans[0].axis, Axis::Groups);
+        assert_eq!(plans[0].base.in_channels, 128);
+        assert_eq!(plans[0].base.filters, 64);
+        assert_eq!(plans[0].base.input_width, 10);
+        assert_eq!(plans[1].axis, Axis::Kernel);
+        assert_eq!(plans[1].base.input_width, 32);
+        assert_eq!(plans[4].axis, Axis::Filters);
+    }
+
+    #[test]
+    fn all_sweep_points_are_valid_layers() {
+        for plan in table2_plans().iter().chain(quick_plans().iter()) {
+            for &v in &plan.values {
+                let p = plan.layer_at(v);
+                assert!(p.validate().is_ok(), "exp {} value {v}", plan.id);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_at_changes_only_the_axis() {
+        let plan = &table2_plans()[2]; // input width
+        let p = plan.layer_at(16);
+        assert_eq!(p.input_width, 16);
+        assert_eq!(p.groups, plan.base.groups);
+        assert_eq!(p.in_channels, plan.base.in_channels);
+    }
+}

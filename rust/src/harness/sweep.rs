@@ -1,0 +1,175 @@
+//! Sweep runner: executes the Table 2 experiment plans through the int8
+//! engine under the counting monitor and the MCU simulator, producing the
+//! per-point records behind every Fig. 2 / Fig. 3 panel.
+
+use crate::analytic::{costs, Costs, Primitive};
+use crate::mcu::{combine, measure, McuConfig, Measurement, PathClass};
+use crate::models::{experiment_input, experiment_layer, LayerParams};
+use crate::nn::Model;
+
+use super::plan::Sweep;
+
+/// One measured sweep point: a (primitive, axis value) cell of Fig. 2.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub experiment: usize,
+    pub primitive: Primitive,
+    pub axis_value: usize,
+    pub params: LayerParams,
+    /// Table 1 closed forms.
+    pub theory: Costs,
+    /// Simulated measurement, scalar path (Fig. 2 b/c).
+    pub scalar: Measurement,
+    /// Simulated measurement, SIMD path (Fig. 2 d/e) — `None` for add
+    /// convolution, which has no SIMD variant (§3.3).
+    pub simd: Option<Measurement>,
+}
+
+impl SweepPoint {
+    /// Fig. 2.f: latency speedup of the SIMD implementation.
+    pub fn speedup(&self) -> Option<f64> {
+        self.simd.map(|s| self.scalar.latency_s / s.latency_s)
+    }
+
+    /// Fig. 3: ratio of memory accesses without SIMD to with SIMD
+    /// (both normalized by the same theoretical MACs, so the ratio is
+    /// direct).
+    pub fn mem_access_ratio(&self) -> Option<f64> {
+        self.simd
+            .map(|s| self.scalar.mem_accesses as f64 / s.mem_accesses as f64)
+    }
+}
+
+/// Measure one experiment model on the simulated MCU: per-layer counts,
+/// each mapped through the path class it actually executes (add-conv and
+/// BN stay scalar even in the SIMD build), then combined.
+pub fn measure_model(model: &Model, x: &crate::nn::Tensor, simd: bool, cfg: &McuConfig) -> Measurement {
+    let (_, profiles) = model.forward_profiled(x, simd);
+    let parts: Vec<Measurement> = profiles
+        .iter()
+        .zip(&model.layers)
+        .map(|(p, layer)| {
+            let path = if simd && layer.has_simd() {
+                PathClass::Simd
+            } else {
+                PathClass::Scalar
+            };
+            measure(&p.counts, path, cfg)
+        })
+        .collect();
+    combine(&parts, cfg)
+}
+
+/// Run a sweep for the given primitives.
+pub fn run_sweep(sweep: &Sweep, primitives: &[Primitive], cfg: &McuConfig) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &value in &sweep.values {
+        let params = sweep.layer_at(value);
+        for &prim in primitives {
+            let model = experiment_layer(&params, prim, 0xEC0 + sweep.id as u64);
+            let x = experiment_input(&params, 0x11A + value as u64);
+            let scalar = measure_model(&model, &x, false, cfg);
+            let simd = prim.has_simd().then(|| measure_model(&model, &x, true, cfg));
+            out.push(SweepPoint {
+                experiment: sweep.id,
+                primitive: prim,
+                axis_value: value,
+                params,
+                theory: costs(&params, prim),
+                scalar,
+                simd,
+            });
+        }
+    }
+    out
+}
+
+/// Run all plans for all five primitives (the full Fig. 2 / Fig. 3 data).
+pub fn run_all(plans: &[Sweep], cfg: &McuConfig) -> Vec<SweepPoint> {
+    plans
+        .iter()
+        .flat_map(|s| run_sweep(s, &Primitive::ALL, cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::plan::quick_plans;
+
+    fn quick_points() -> Vec<SweepPoint> {
+        let cfg = McuConfig::default();
+        run_sweep(&quick_plans()[1], &Primitive::ALL, &cfg)
+    }
+
+    #[test]
+    fn every_primitive_present_per_value() {
+        let pts = quick_points();
+        let plan = &quick_plans()[1];
+        assert_eq!(pts.len(), plan.values.len() * Primitive::ALL.len());
+    }
+
+    #[test]
+    fn add_conv_has_no_simd_measurement() {
+        for p in quick_points() {
+            match p.primitive {
+                Primitive::Add => assert!(p.simd.is_none()),
+                _ => assert!(p.simd.is_some(), "{:?}", p.primitive),
+            }
+        }
+    }
+
+    #[test]
+    fn simd_is_faster_at_os() {
+        for p in quick_points() {
+            if let Some(s) = p.simd {
+                assert!(
+                    s.latency_s < p.scalar.latency_s,
+                    "{:?} @ {}: simd {} !< scalar {}",
+                    p.primitive,
+                    p.axis_value,
+                    s.latency_s,
+                    p.scalar.latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_kernel_for_standard() {
+        let pts = quick_points();
+        let mut std_pts: Vec<_> = pts
+            .iter()
+            .filter(|p| p.primitive == Primitive::Standard)
+            .collect();
+        std_pts.sort_by_key(|p| p.axis_value);
+        for w in std_pts.windows(2) {
+            assert!(w[1].scalar.latency_s > w[0].scalar.latency_s);
+        }
+        // shift conv is kernel-independent in MACs (Table 1): latency
+        // stays near-flat. (Wider kernels draw larger shift offsets,
+        // clipping more border taps on the tiny quick-plan inputs, so
+        // allow a generous band here; the full-size sweep is flat.)
+        let shift_pts: Vec<_> = pts
+            .iter()
+            .filter(|p| p.primitive == Primitive::Shift)
+            .collect();
+        let l0 = shift_pts[0].scalar.latency_s;
+        for p in &shift_pts {
+            assert!((p.scalar.latency_s - l0).abs() / l0 < 0.3);
+        }
+    }
+
+    #[test]
+    fn mem_ratio_defined_for_simd_primitives() {
+        for p in quick_points() {
+            match p.primitive {
+                Primitive::Add => assert!(p.mem_access_ratio().is_none()),
+                _ => {
+                    let r = p.mem_access_ratio().unwrap();
+                    assert!(r > 1.0, "{:?}: ratio {r} <= 1", p.primitive);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # convbench
+//!
+//! Reproduction of **"Evaluation of Convolution Primitives for Embedded
+//! Neural Networks on 32-bit Microcontrollers"** (Nguyen, Moëllic, Blayac,
+//! 2023).
+//!
+//! The paper implements five convolution primitives (standard, grouped,
+//! depthwise-separable, shift, add) as int8 quantized kernels for ARM
+//! Cortex-M4 (NNoM + CMSIS-NN-style SIMD) and characterizes their latency,
+//! energy and memory-access behaviour. This crate rebuilds the whole stack
+//! on a simulated substrate:
+//!
+//! * [`quant`] — the paper's power-of-two quantization scheme (Eq. 4).
+//! * [`nn`] — an NNoM-equivalent int8 inference engine with scalar and
+//!   SIMD (`__SMLAD`-semantics) code paths for all five primitives.
+//! * [`mcu`] — a Cortex-M4 instruction-cost + power/energy simulator
+//!   (the substitution for the paper's STM32F401-RE testbed).
+//! * [`analytic`] — Table 1 closed forms (parameters / theoretical MACs).
+//! * [`harness`] — the experiment plans of Table 2 and generators for
+//!   every figure and table in the evaluation section.
+//! * [`models`] — layer configs and small end-to-end CNNs ("MCU-Net").
+//! * [`runtime`] — PJRT client (via the `xla` crate) that loads the
+//!   JAX/Pallas-lowered HLO artifacts for cross-layer validation.
+//! * [`coordinator`] — deployment pipeline + threaded inference server.
+//! * [`report`] — CSV / markdown emitters for EXPERIMENTS.md.
+//! * [`util`] — offline substitutes for clap/criterion/proptest/serde.
+
+pub mod analytic;
+pub mod coordinator;
+pub mod harness;
+pub mod mcu;
+pub mod models;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;

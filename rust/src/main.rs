@@ -1,0 +1,321 @@
+//! `convbench` — CLI for the reproduction: regenerate every table and
+//! figure of the paper, validate the engine against the JAX/Pallas
+//! artifacts, and serve models.
+//!
+//! ```text
+//! convbench table1                 # Table 1 closed forms
+//! convbench fig2  [--exp N]        # Fig. 2 sweeps (CSV + markdown)
+//! convbench fig3  [--exp N]        # Fig. 3 memory-access ratios
+//! convbench fig4                   # Fig. 4 frequency sweep
+//! convbench table3                 # Table 3 power model
+//! convbench table4                 # Table 4 optimization levels
+//! convbench regressions            # §4.1 linearity scores
+//! convbench all [--out results]    # everything above into --out
+//! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
+//! convbench serve [--requests N] [--workers W] # inference service demo
+//! ```
+
+use convbench::analytic::Primitive;
+use convbench::coordinator;
+use convbench::harness::{
+    fig4_frequency_sweep, quick_plans, regressions, run_all, run_sweep, table1_costs,
+    table2_plans, table3_power, table4_optlevel, Sweep, SweepPoint,
+};
+use convbench::mcu::McuConfig;
+use convbench::models::LayerParams;
+use convbench::report;
+use convbench::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let out_dir = args.get("out").unwrap_or("results").to_string();
+    let quick = args.flag("quick");
+    let cfg = McuConfig::default();
+
+    match args.subcommand.as_deref() {
+        Some("table1") => cmd_table1(&args),
+        Some("fig2") => cmd_fig2(&args, &cfg, quick, &out_dir),
+        Some("fig3") => cmd_fig3(&args, &cfg, quick, &out_dir),
+        Some("fig4") => cmd_fig4(&out_dir),
+        Some("table3") => cmd_table3(),
+        Some("table4") => cmd_table4(),
+        Some("regressions") => cmd_regressions(&cfg, quick),
+        Some("all") => cmd_all(&cfg, quick, &out_dir),
+        Some("validate") => {
+            let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+            coordinator::validate_cli(&dir);
+        }
+        Some("profile") => cmd_profile(&args, &cfg),
+        Some("serve") => {
+            let n = args.get_or("requests", 64usize);
+            let workers = args.get_or("workers", 2usize);
+            coordinator::serve_cli(n, workers);
+        }
+        _ => {
+            eprintln!(
+                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|validate|profile|serve> \
+                 [--exp N] [--out DIR] [--quick]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn plans(quick: bool) -> Vec<Sweep> {
+    if quick {
+        quick_plans()
+    } else {
+        table2_plans()
+    }
+}
+
+fn select_plans(args: &Args, quick: bool) -> Vec<Sweep> {
+    let all = plans(quick);
+    match args.get("exp") {
+        Some(e) => {
+            let id: usize = e.parse().expect("--exp must be 1..=5");
+            all.into_iter().filter(|s| s.id == id).collect()
+        }
+        None => all,
+    }
+}
+
+type Metric = fn(&SweepPoint) -> Option<f64>;
+
+fn metric_macs(p: &SweepPoint) -> Option<f64> {
+    Some(p.theory.macs as f64)
+}
+fn metric_lat_scalar(p: &SweepPoint) -> Option<f64> {
+    Some(p.scalar.latency_s)
+}
+fn metric_en_scalar(p: &SweepPoint) -> Option<f64> {
+    Some(p.scalar.energy_mj)
+}
+fn metric_lat_simd(p: &SweepPoint) -> Option<f64> {
+    p.simd.map(|m| m.latency_s)
+}
+fn metric_en_simd(p: &SweepPoint) -> Option<f64> {
+    p.simd.map(|m| m.energy_mj)
+}
+fn metric_speedup(p: &SweepPoint) -> Option<f64> {
+    p.speedup()
+}
+fn metric_mem_ratio(p: &SweepPoint) -> Option<f64> {
+    p.mem_access_ratio()
+}
+
+/// The six Fig. 2 panel metrics (a–f).
+const FIG2_PANELS: [(&str, Metric); 6] = [
+    ("a) theoretical MACs", metric_macs),
+    ("b) latency no-SIMD (s)", metric_lat_scalar),
+    ("c) energy no-SIMD (mJ)", metric_en_scalar),
+    ("d) latency SIMD (s)", metric_lat_simd),
+    ("e) energy SIMD (mJ)", metric_en_simd),
+    ("f) SIMD speedup", metric_speedup),
+];
+
+fn cmd_table1(args: &Args) {
+    let p = LayerParams::new(
+        args.get_or("groups", 2usize),
+        args.get_or("kernel", 3usize),
+        args.get_or("width", 32usize),
+        args.get_or("cin", 16usize),
+        args.get_or("cout", 16usize),
+    );
+    println!("Table 1 — primitives on layer {p:?}\n");
+    println!("{}", report::table1_markdown(&table1_costs(&p)));
+}
+
+fn cmd_fig2(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
+    let selected = select_plans(args, quick);
+    let mut points = Vec::new();
+    for plan in &selected {
+        eprintln!("experiment {} ({} axis) ...", plan.id, plan.axis.name());
+        points.extend(run_sweep(plan, &Primitive::ALL, cfg));
+    }
+    let path = format!("{out_dir}/fig2_sweeps.csv");
+    report::write_report(&path, &report::sweep_csv(&points)).expect("write csv");
+    for plan in &selected {
+        for (metric, f) in FIG2_PANELS {
+            println!(
+                "{}",
+                report::figure_panel_markdown(&points, plan.id, plan.axis.name(), metric, f)
+            );
+        }
+    }
+    eprintln!("wrote {path} ({} points)", points.len());
+}
+
+fn cmd_fig3(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
+    let selected = select_plans(args, quick);
+    let mut points = Vec::new();
+    for plan in &selected {
+        points.extend(run_sweep(plan, &Primitive::ALL, cfg));
+    }
+    let path = format!("{out_dir}/fig3_memaccess.csv");
+    report::write_report(&path, &report::sweep_csv(&points)).expect("write csv");
+    for plan in &selected {
+        println!(
+            "{}",
+            report::figure_panel_markdown(
+                &points,
+                plan.id,
+                plan.axis.name(),
+                "mem-access ratio scalar/SIMD (per MAC)",
+                metric_mem_ratio
+            )
+        );
+    }
+    eprintln!("wrote {path}");
+}
+
+fn cmd_fig4(out_dir: &str) {
+    let freqs: Vec<f64> = (1..=8).map(|i| 10.0 * i as f64).collect();
+    let pts = fig4_frequency_sweep(&freqs);
+    let csv = report::fig4_csv(&pts);
+    let path = format!("{out_dir}/fig4_frequency.csv");
+    report::write_report(&path, &csv).expect("write csv");
+    println!("Fig. 4 — frequency sweep of the §4.2 layer\n");
+    println!("{csv}");
+    eprintln!("wrote {path}");
+}
+
+fn cmd_table3() {
+    println!("Table 3 — average power (mW) vs frequency\n");
+    println!("{}", report::table3_markdown(&table3_power()));
+}
+
+fn cmd_table4() {
+    println!("Table 4 — optimization level effect (§4.2 layer, 84 MHz)\n");
+    println!("{}", report::table4_markdown(&table4_optlevel()));
+}
+
+fn cmd_regressions(cfg: &McuConfig, quick: bool) {
+    let pts = run_all(&plans(quick), cfg);
+    let r = regressions(&pts).expect("regressions need points");
+    println!("§4.1 linearity — {} sweep points\n", pts.len());
+    println!("{}", r.to_markdown());
+    println!(
+        "SIMD: latency beats MACs as energy predictor: {}",
+        r.simd_latency_beats_macs()
+    );
+}
+
+fn cmd_all(cfg: &McuConfig, quick: bool, out_dir: &str) {
+    let p = LayerParams::new(2, 3, 32, 16, 16);
+    report::write_report(
+        &format!("{out_dir}/table1.md"),
+        &report::table1_markdown(&table1_costs(&p)),
+    )
+    .unwrap();
+    let points = run_all(&plans(quick), cfg);
+    report::write_report(&format!("{out_dir}/fig2_sweeps.csv"), &report::sweep_csv(&points))
+        .unwrap();
+    let mut figmd = String::new();
+    for plan in &plans(quick) {
+        for (metric, f) in FIG2_PANELS {
+            figmd.push_str(&report::figure_panel_markdown(
+                &points,
+                plan.id,
+                plan.axis.name(),
+                metric,
+                f,
+            ));
+            figmd.push('\n');
+        }
+        figmd.push_str(&report::figure_panel_markdown(
+            &points,
+            plan.id,
+            plan.axis.name(),
+            "fig3) mem-access ratio",
+            metric_mem_ratio,
+        ));
+        figmd.push('\n');
+    }
+    report::write_report(&format!("{out_dir}/fig2_fig3_panels.md"), &figmd).unwrap();
+    let freqs: Vec<f64> = (1..=8).map(|i| 10.0 * i as f64).collect();
+    report::write_report(
+        &format!("{out_dir}/fig4_frequency.csv"),
+        &report::fig4_csv(&fig4_frequency_sweep(&freqs)),
+    )
+    .unwrap();
+    report::write_report(
+        &format!("{out_dir}/table3.md"),
+        &report::table3_markdown(&table3_power()),
+    )
+    .unwrap();
+    report::write_report(
+        &format!("{out_dir}/table4.md"),
+        &report::table4_markdown(&table4_optlevel()),
+    )
+    .unwrap();
+    if let Some(r) = regressions(&points) {
+        report::write_report(&format!("{out_dir}/regressions.md"), &r.to_markdown()).unwrap();
+    }
+    println!("wrote all reports to {out_dir}/");
+}
+
+/// `convbench profile --model mcunet-shift [--scalar]` — per-layer
+/// simulated cycle/energy/memory breakdown of a zoo model (the NNoM
+/// `model_stat()` equivalent on the simulated MCU).
+fn cmd_profile(args: &Args, cfg: &McuConfig) {
+    use convbench::analytic::Primitive;
+    use convbench::mcu::{footprint, measure, PathClass};
+    use convbench::models::mcunet;
+    use convbench::nn::Tensor;
+
+    let name = args.get("model").unwrap_or("mcunet-standard");
+    let simd = !args.flag("scalar");
+    let model = Primitive::ALL
+        .iter()
+        .map(|&p| mcunet(p, 42))
+        .find(|m| m.name == name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown model {name:?}; available: mcunet-<standard|grouped|dws|shift|add>");
+            std::process::exit(2);
+        });
+    let x = Tensor::zeros(model.input_shape, model.input_q);
+    let (_, profiles) = model.forward_profiled(&x, simd);
+    println!(
+        "{name} ({} path) — per-layer simulated profile @ {:.0} MHz\n",
+        if simd { "SIMD" } else { "scalar" },
+        cfg.freq_mhz
+    );
+    println!("| layer | cycles | latency (ms) | energy (µJ) | mem accesses | eff. MACs |");
+    println!("|---|---|---|---|---|---|");
+    let mut total = Vec::new();
+    for (prof, layer) in profiles.iter().zip(&model.layers) {
+        let path = if simd && layer.has_simd() {
+            PathClass::Simd
+        } else {
+            PathClass::Scalar
+        };
+        let m = measure(&prof.counts, path, cfg);
+        println!(
+            "| {} | {:.0} | {:.3} | {:.2} | {} | {} |",
+            prof.name,
+            m.cycles,
+            1e3 * m.latency_s,
+            1e3 * m.energy_mj,
+            m.mem_accesses,
+            m.effective_macs
+        );
+        total.push(m);
+    }
+    let sum = convbench::mcu::combine(&total, cfg);
+    println!(
+        "| **total** | {:.0} | {:.3} | {:.2} | {} | {} |",
+        sum.cycles,
+        1e3 * sum.latency_s,
+        1e3 * sum.energy_mj,
+        sum.mem_accesses,
+        sum.effective_macs
+    );
+    let mem = footprint(&model);
+    println!(
+        "\nflash {:.1} KiB, SRAM {:.1} KiB — fits STM32F401: {}",
+        mem.flash_bytes as f64 / 1024.0,
+        mem.sram_bytes as f64 / 1024.0,
+        mem.fits_f401()
+    );
+}

@@ -1,0 +1,154 @@
+//! Cycle model: maps a micro-op count vector ([`OpCounts`]) to Cortex-M4
+//! cycles.
+//!
+//! Two-level model (DESIGN.md §2):
+//!
+//! 1. **Ideal cycles** from the ARM Cortex-M4 TRM per-instruction costs
+//!    (load 2, store 1, MUL/MLA/SMLAD 1, ALU 1, taken branch 3 including
+//!    pipeline refill). This captures *all parameter dependence* — the
+//!    sweeps of Fig. 2/3 are driven entirely by the counted op mix.
+//! 2. A **systematic factor κ(path, optlevel)** capturing what the trace
+//!    does not see: flash wait-states (2 WS at 84 MHz on STM32F401),
+//!    NNoM's per-tap index arithmetic, and the compiler's register
+//!    allocation quality. κ is calibrated once against the paper's four
+//!    Table 4 anchor measurements (O0/Os × scalar/SIMD on the fixed §4.2
+//!    layer) — see [`super::calib`]. By construction Table 4 reproduces
+//!    exactly on the anchor layer; everything else is prediction.
+
+use crate::nn::OpCounts;
+
+/// Compiler optimization level (§4.2, Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    /// `-O0` — no optimization; every intermediate spilled.
+    O0,
+    /// `-Os` — the paper's default ("optimization level sets to 0s").
+    Os,
+}
+
+/// Which code path a count vector came from (selects κ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PathClass {
+    /// Plain C loops (NNoM `local_*_q7`).
+    Scalar,
+    /// CMSIS-NN-style `__SMLAD` + im2col code.
+    Simd,
+}
+
+/// Cortex-M4 TRM per-instruction costs (ideal, no memory-system stalls).
+#[derive(Clone, Copy, Debug)]
+pub struct CostTable {
+    pub ld: f64,
+    pub st: f64,
+    pub mac: f64,
+    pub smlad: f64,
+    pub alu: f64,
+    pub branch: f64,
+}
+
+/// Default M4 cost table.
+pub const M4_COSTS: CostTable = CostTable {
+    ld: 2.0,
+    st: 1.0,
+    mac: 1.0,
+    smlad: 1.0,
+    alu: 1.0,
+    branch: 3.0,
+};
+
+/// Ideal (TRM) cycles for a count vector.
+pub fn ideal_cycles(counts: &OpCounts) -> f64 {
+    let c = M4_COSTS;
+    counts.loads() as f64 * c.ld
+        + counts.stores() as f64 * c.st
+        + counts.mac as f64 * c.mac
+        + counts.smlad as f64 * c.smlad
+        + counts.alu as f64 * c.alu
+        + counts.branch as f64 * c.branch
+}
+
+/// The four calibrated systematic factors.
+#[derive(Clone, Copy, Debug)]
+pub struct Kappa {
+    pub scalar_os: f64,
+    pub scalar_o0: f64,
+    pub simd_os: f64,
+    pub simd_o0: f64,
+}
+
+impl Kappa {
+    pub fn get(&self, path: PathClass, opt: OptLevel) -> f64 {
+        match (path, opt) {
+            (PathClass::Scalar, OptLevel::Os) => self.scalar_os,
+            (PathClass::Scalar, OptLevel::O0) => self.scalar_o0,
+            (PathClass::Simd, OptLevel::Os) => self.simd_os,
+            (PathClass::Simd, OptLevel::O0) => self.simd_o0,
+        }
+    }
+}
+
+/// Calibrated cycles for a count vector under a path class + opt level.
+pub fn cycles(counts: &OpCounts, path: PathClass, opt: OptLevel, kappa: &Kappa) -> f64 {
+    ideal_cycles(counts) * kappa.get(path, opt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_counts() -> OpCounts {
+        OpCounts {
+            ld8: 100,
+            ld16: 10,
+            ld32: 20,
+            st8: 30,
+            st16: 5,
+            st32: 5,
+            mac: 50,
+            smlad: 25,
+            alu: 40,
+            branch: 60,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ideal_cycles_formula() {
+        let c = sample_counts();
+        let want = 130.0 * 2.0 + 40.0 * 1.0 + 50.0 + 25.0 + 40.0 + 60.0 * 3.0;
+        assert_eq!(ideal_cycles(&c), want);
+    }
+
+    #[test]
+    fn kappa_scales_linearly() {
+        let c = sample_counts();
+        let k = Kappa {
+            scalar_os: 2.0,
+            scalar_o0: 4.0,
+            simd_os: 1.5,
+            simd_o0: 10.0,
+        };
+        let base = ideal_cycles(&c);
+        assert_eq!(cycles(&c, PathClass::Scalar, OptLevel::Os, &k), 2.0 * base);
+        assert_eq!(cycles(&c, PathClass::Simd, OptLevel::O0, &k), 10.0 * base);
+    }
+
+    #[test]
+    fn zero_counts_zero_cycles() {
+        let k = Kappa {
+            scalar_os: 1.0,
+            scalar_o0: 1.0,
+            simd_os: 1.0,
+            simd_o0: 1.0,
+        };
+        assert_eq!(cycles(&OpCounts::default(), PathClass::Scalar, OptLevel::Os, &k), 0.0);
+    }
+
+    #[test]
+    fn more_ops_more_cycles() {
+        let a = sample_counts();
+        let mut b = a;
+        b.smlad += 100;
+        assert!(ideal_cycles(&b) > ideal_cycles(&a));
+    }
+}

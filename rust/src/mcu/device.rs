@@ -1,0 +1,172 @@
+//! The simulated device: combines the cycle model, κ calibration and the
+//! power model into a single "measurement" API — the stand-in for the
+//! Nucleo STM32F401-RE + STM32CubeMonitor-Power testbed of §4.
+
+use crate::nn::OpCounts;
+
+use super::calib::kappa;
+use super::cycles::{cycles, ideal_cycles, OptLevel, PathClass};
+use super::power::{PowerModel, F401_MAX_MHZ};
+
+/// Simulated MCU configuration (§4: "the compiler is arm-none-eabi-gcc
+/// with the optimization level sets to 0s and the MCU's frequency is
+/// fixed at 84 MHz" unless specified).
+#[derive(Clone, Copy, Debug)]
+pub struct McuConfig {
+    pub freq_mhz: f64,
+    pub opt: OptLevel,
+}
+
+impl Default for McuConfig {
+    fn default() -> Self {
+        Self {
+            freq_mhz: F401_MAX_MHZ,
+            opt: OptLevel::Os,
+        }
+    }
+}
+
+/// One simulated measurement — the quantities the paper reports per run.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Estimated Cortex-M4 cycles.
+    pub cycles: f64,
+    /// Latency in seconds at the configured frequency.
+    pub latency_s: f64,
+    /// Average power in mW (path- and frequency-dependent, Table 3 model).
+    pub power_mw: f64,
+    /// Energy per inference in mJ.
+    pub energy_mj: f64,
+    /// Memory-access events (the Fig. 3 quantity).
+    pub mem_accesses: u64,
+    /// Effective MAC work performed (SMLAD counts double).
+    pub effective_macs: u64,
+}
+
+/// Simulate a measurement for a count vector executed on `path`.
+pub fn measure(counts: &OpCounts, path: PathClass, cfg: &McuConfig) -> Measurement {
+    let cyc = cycles(counts, path, cfg.opt, kappa());
+    let latency_s = cyc / (cfg.freq_mhz * 1e6);
+    let pm = PowerModel::for_path(path);
+    let power_mw = pm.power_mw(cfg.freq_mhz);
+    Measurement {
+        cycles: cyc,
+        latency_s,
+        power_mw,
+        energy_mj: power_mw * latency_s,
+        mem_accesses: counts.mem_accesses(),
+        effective_macs: counts.effective_macs(),
+    }
+}
+
+/// Combine sequential measurements (layer-by-layer → whole model). Powers
+/// are latency-weighted; cycles/latency/energy/accesses add.
+pub fn combine(parts: &[Measurement], cfg: &McuConfig) -> Measurement {
+    let cycles: f64 = parts.iter().map(|m| m.cycles).sum();
+    let latency_s: f64 = parts.iter().map(|m| m.latency_s).sum();
+    let energy_mj: f64 = parts.iter().map(|m| m.energy_mj).sum();
+    let mem_accesses: u64 = parts.iter().map(|m| m.mem_accesses).sum();
+    let effective_macs: u64 = parts.iter().map(|m| m.effective_macs).sum();
+    let power_mw = if latency_s > 0.0 {
+        energy_mj / latency_s
+    } else {
+        PowerModel::for_path(PathClass::Scalar).power_mw(cfg.freq_mhz)
+    };
+    Measurement {
+        cycles,
+        latency_s,
+        power_mw,
+        energy_mj,
+        mem_accesses,
+        effective_macs,
+    }
+}
+
+/// Convenience: ideal (uncalibrated) cycles — exposed for the §Perf
+/// roofline analysis.
+pub fn ideal(counts: &OpCounts) -> f64 {
+    ideal_cycles(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts() -> OpCounts {
+        OpCounts {
+            ld8: 1000,
+            mac: 500,
+            branch: 500,
+            st8: 50,
+            alu: 100,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn latency_inverse_in_frequency() {
+        // Fig. 4a/c: latency is inversely proportional to frequency.
+        let c = counts();
+        let m10 = measure(&c, PathClass::Scalar, &McuConfig { freq_mhz: 10.0, opt: OptLevel::Os });
+        let m80 = measure(&c, PathClass::Scalar, &McuConfig { freq_mhz: 80.0, opt: OptLevel::Os });
+        assert!((m10.latency_s / m80.latency_s - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_decreases_with_frequency() {
+        // Fig. 4b/d: max frequency minimizes energy per inference.
+        let c = counts();
+        let mut last = f64::INFINITY;
+        for f in [10.0, 20.0, 40.0, 80.0] {
+            let m = measure(&c, PathClass::Simd, &McuConfig { freq_mhz: f, opt: OptLevel::Os });
+            assert!(m.energy_mj < last, "energy not decreasing at {f} MHz");
+            last = m.energy_mj;
+        }
+    }
+
+    #[test]
+    fn o0_slower_than_os() {
+        let c = counts();
+        let os = measure(&c, PathClass::Scalar, &McuConfig { freq_mhz: 84.0, opt: OptLevel::Os });
+        let o0 = measure(&c, PathClass::Scalar, &McuConfig { freq_mhz: 84.0, opt: OptLevel::O0 });
+        assert!(o0.latency_s > os.latency_s);
+    }
+
+    #[test]
+    fn combine_adds_and_weights() {
+        let c = counts();
+        let cfg = McuConfig::default();
+        let a = measure(&c, PathClass::Scalar, &cfg);
+        let b = measure(&c, PathClass::Simd, &cfg);
+        let s = combine(&[a, b], &cfg);
+        assert!((s.cycles - (a.cycles + b.cycles)).abs() < 1e-9);
+        assert!((s.energy_mj - (a.energy_mj + b.energy_mj)).abs() < 1e-12);
+        assert!(s.power_mw > a.power_mw.min(b.power_mw));
+        assert!(s.power_mw < a.power_mw.max(b.power_mw));
+        assert_eq!(s.mem_accesses, a.mem_accesses + b.mem_accesses);
+    }
+
+    #[test]
+    fn simd_at_o0_can_cost_more_energy_than_scalar() {
+        // The paper's §4.2 observation: "Without optimization, the use of
+        // SIMD instructions can even increase the layer's energy
+        // consumption" — check the model reproduces the inversion on the
+        // anchor layer.
+        use crate::mcu::calib::anchor_layer;
+        use crate::nn::CountingMonitor;
+        let (conv, x) = anchor_layer();
+        let cfg = McuConfig { freq_mhz: 84.0, opt: OptLevel::O0 };
+        let mut ms = CountingMonitor::new();
+        conv.forward_scalar(&x, &mut ms);
+        let mut mv = CountingMonitor::new();
+        conv.forward_simd(&x, &mut mv);
+        let scalar = measure(&ms.counts, PathClass::Scalar, &cfg);
+        let simd = measure(&mv.counts, PathClass::Simd, &cfg);
+        assert!(
+            simd.energy_mj > scalar.energy_mj,
+            "expected SIMD@O0 energy inversion: {} vs {}",
+            simd.energy_mj,
+            scalar.energy_mj
+        );
+    }
+}

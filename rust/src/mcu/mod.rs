@@ -1,0 +1,20 @@
+//! Cortex-M4 MCU simulator — the substitution for the paper's physical
+//! STM32F401-RE + current-probe testbed (DESIGN.md §2):
+//!
+//! * [`cycles`] — TRM per-instruction cycle model with a calibrated
+//!   systematic factor κ per (path, optimization level);
+//! * [`calib`] — κ anchored to the paper's Table 4 measurements;
+//! * [`power`] — linear P(f) model fit to the paper's Table 3;
+//! * [`device`] — the measurement API used by the harness.
+
+pub mod calib;
+pub mod cycles;
+pub mod device;
+pub mod memory;
+pub mod power;
+
+pub use calib::kappa;
+pub use cycles::{cycles, ideal_cycles, Kappa, OptLevel, PathClass};
+pub use device::{combine, measure, McuConfig, Measurement};
+pub use memory::{footprint, MemoryReport, F401_FLASH_BYTES, F401_SRAM_BYTES};
+pub use power::{PowerModel, F401_MAX_MHZ};

@@ -1,0 +1,120 @@
+//! Power and energy model of the STM32F401-RE testbed.
+//!
+//! The paper measures average electric power with STM32CubeMonitor-Power
+//! and reports it in Table 3 for four frequencies, separately for the
+//! scalar and SIMD binaries. Those eight points are extremely linear in
+//! `f` (CMOS dynamic power `P = P_static + c·f` at fixed voltage), so we
+//! *fit* the model to Table 3 (our substitution for the current probe,
+//! DESIGN.md §2) and use it to reproduce Fig. 4 and every energy column:
+//!
+//! `P(f)[mW] ≈ 11.0 + 0.513·f[MHz]` (scalar), `≈ 11.1 + 0.645·f` (SIMD).
+//!
+//! Energy per inference: `E = P(f) · t = P(f) · cycles / f`.
+
+use crate::util::stats::linreg;
+
+use super::cycles::PathClass;
+
+/// Table 3 of the paper: average power (mW) at 10/20/40/80 MHz.
+pub const TABLE3_FREQ_MHZ: [f64; 4] = [10.0, 20.0, 40.0, 80.0];
+pub const TABLE3_NO_SIMD_MW: [f64; 4] = [16.16, 21.59, 32.83, 52.09];
+pub const TABLE3_SIMD_MW: [f64; 4] = [17.57, 24.66, 37.33, 62.75];
+
+/// Linear power model `P[mW] = p_static + slope · f[MHz]`.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    pub p_static_mw: f64,
+    pub slope_mw_per_mhz: f64,
+}
+
+impl PowerModel {
+    /// Fit from measured (f, P) points.
+    pub fn fit(freqs: &[f64], power_mw: &[f64]) -> Self {
+        let f = linreg(freqs, power_mw).expect("power fit needs >= 2 points");
+        Self {
+            p_static_mw: f.b,
+            slope_mw_per_mhz: f.a,
+        }
+    }
+
+    /// The paper-calibrated model for a code path.
+    pub fn for_path(path: PathClass) -> Self {
+        match path {
+            PathClass::Scalar => Self::fit(&TABLE3_FREQ_MHZ, &TABLE3_NO_SIMD_MW),
+            PathClass::Simd => Self::fit(&TABLE3_FREQ_MHZ, &TABLE3_SIMD_MW),
+        }
+    }
+
+    /// Average power at `f` MHz.
+    pub fn power_mw(&self, f_mhz: f64) -> f64 {
+        self.p_static_mw + self.slope_mw_per_mhz * f_mhz
+    }
+
+    /// Energy (mJ) for an activity of `cycles` at `f` MHz:
+    /// `E = P · t`, `t = cycles / (f·1e6)`.
+    pub fn energy_mj(&self, cycles: f64, f_mhz: f64) -> f64 {
+        let t_s = cycles / (f_mhz * 1e6);
+        self.power_mw(f_mhz) * t_s
+    }
+}
+
+/// STM32F401 clock limits.
+pub const F401_MAX_MHZ: f64 = 84.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_reproduces_table3_within_tolerance() {
+        for (path, table) in [
+            (PathClass::Scalar, &TABLE3_NO_SIMD_MW),
+            (PathClass::Simd, &TABLE3_SIMD_MW),
+        ] {
+            let m = PowerModel::for_path(path);
+            for (f, p) in TABLE3_FREQ_MHZ.iter().zip(table.iter()) {
+                let got = m.power_mw(*f);
+                assert!(
+                    (got - p).abs() / p < 0.05,
+                    "{path:?} @ {f} MHz: model {got:.2} vs measured {p:.2}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_draws_more_power() {
+        let s = PowerModel::for_path(PathClass::Scalar);
+        let v = PowerModel::for_path(PathClass::Simd);
+        for f in [10.0, 42.0, 84.0] {
+            assert!(v.power_mw(f) > s.power_mw(f));
+        }
+    }
+
+    #[test]
+    fn static_power_is_positive_and_similar() {
+        let s = PowerModel::for_path(PathClass::Scalar);
+        let v = PowerModel::for_path(PathClass::Simd);
+        assert!(s.p_static_mw > 5.0 && s.p_static_mw < 20.0);
+        assert!((s.p_static_mw - v.p_static_mw).abs() < 3.0);
+    }
+
+    #[test]
+    fn energy_decreases_with_frequency() {
+        // Fig. 4 / §4.2 finding: running at max frequency lowers energy.
+        let m = PowerModel::for_path(PathClass::Scalar);
+        let cycles = 1e7;
+        let e10 = m.energy_mj(cycles, 10.0);
+        let e84 = m.energy_mj(cycles, 84.0);
+        assert!(e84 < e10, "e84 {e84} !< e10 {e10}");
+    }
+
+    #[test]
+    fn energy_units_sane() {
+        // 69.7M cycles at 84 MHz scalar ≈ 0.83 s × ~54 mW ≈ 45 mJ — the
+        // paper's Table 4 reports 45.7 mJ for exactly this point.
+        let m = PowerModel::for_path(PathClass::Scalar);
+        let e = m.energy_mj(0.83 * 84e6, 84.0);
+        assert!((e - 45.7).abs() < 3.0, "energy {e} mJ");
+    }
+}

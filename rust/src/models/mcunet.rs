@@ -1,0 +1,324 @@
+//! The model zoo: single-layer experiment models (one per primitive, used
+//! by the sweeps) and "MCU-Net" — a small CIFAR-shaped CNN whose
+//! convolution stages can be instantiated with any of the five primitives
+//! (the end-to-end deployment workload).
+
+use crate::analytic::Primitive;
+use crate::nn::{
+    uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
+    QuantDepthwise, Shape, ShiftConv,
+};
+use crate::quant::QParam;
+use crate::util::prng::Rng;
+
+use super::LayerParams;
+
+/// Standard activation/weight formats used by the synthetic experiment
+/// layers (weights at Q7, activations at Q7 in, Q5 out — representative
+/// NNoM choices; the deployment pipeline computes real ones from data).
+const Q_IN: i32 = 7;
+const Q_W: i32 = 7;
+const Q_OUT: i32 = 5;
+
+/// Build the single-layer experiment model for a primitive (the unit the
+/// paper benchmarks in §4.1). Weights are seeded deterministically.
+pub fn experiment_layer(p: &LayerParams, prim: Primitive, seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let input_shape = Shape::new(p.input_width, p.input_width, p.in_channels);
+    let mut model = Model::new(
+        format!("exp-{}-{:?}", prim.name(), p),
+        input_shape,
+        QParam::new(Q_IN),
+    );
+    match prim {
+        Primitive::Standard => {
+            model.push(Layer::Conv(make_conv(p, 1, Q_IN, &mut rng)));
+        }
+        Primitive::Grouped => {
+            model.push(Layer::Conv(make_conv(p, p.groups, Q_IN, &mut rng)));
+        }
+        Primitive::DepthwiseSeparable => {
+            model.push(Layer::Depthwise(make_depthwise(p, Q_IN, &mut rng)));
+            model.push(Layer::Conv(make_pointwise(p.in_channels, p.filters, Q_IN, &mut rng)));
+        }
+        Primitive::Shift => {
+            model.push(Layer::Shift(make_shift(p, Q_IN, &mut rng)));
+        }
+        Primitive::Add => {
+            model.push(Layer::AddConv(make_add(p, Q_IN, &mut rng)));
+            // §2.2: add conv needs a following BN to recenter the
+            // always-negative outputs (folding not applicable, §3.2).
+            let bn = BatchNorm {
+                gamma: vec![1.0; p.filters],
+                beta: vec![0.6; p.filters],
+                mean: vec![-1.2; p.filters],
+                var: vec![1.0; p.filters],
+                eps: 1e-5,
+            };
+            model.push(Layer::Bn(BnLayer::quantize(
+                &bn,
+                QParam::new(Q_OUT),
+                QParam::new(Q_OUT),
+            )));
+        }
+    }
+    model
+}
+
+fn make_conv(p: &LayerParams, groups: usize, q_in: i32, rng: &mut Rng) -> QuantConv {
+    let cpg = p.in_channels / groups;
+    let mut weights = vec![0i8; p.filters * p.kernel * p.kernel * cpg];
+    rng.fill_i8(&mut weights, -64, 63);
+    QuantConv {
+        kernel: p.kernel,
+        groups,
+        in_channels: p.in_channels,
+        out_channels: p.filters,
+        pad: p.pad(),
+        weights,
+        bias: (0..p.filters).map(|_| rng.range(0, 256) as i32 - 128).collect(),
+        q_in: QParam::new(q_in),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }
+}
+
+fn make_depthwise(p: &LayerParams, q_in: i32, rng: &mut Rng) -> QuantDepthwise {
+    let mut weights = vec![0i8; p.in_channels * p.kernel * p.kernel];
+    rng.fill_i8(&mut weights, -64, 63);
+    QuantDepthwise {
+        kernel: p.kernel,
+        channels: p.in_channels,
+        pad: p.pad(),
+        weights,
+        bias: vec![0; p.in_channels],
+        q_in: QParam::new(q_in),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(q_in), // intermediate stays at input format
+    }
+}
+
+fn make_pointwise(cin: usize, cout: usize, q_in: i32, rng: &mut Rng) -> QuantConv {
+    let mut weights = vec![0i8; cin * cout];
+    rng.fill_i8(&mut weights, -64, 63);
+    QuantConv {
+        kernel: 1,
+        groups: 1,
+        in_channels: cin,
+        out_channels: cout,
+        pad: 0,
+        weights,
+        bias: vec![0; cout],
+        q_in: QParam::new(q_in),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }
+}
+
+fn make_shift(p: &LayerParams, q_in: i32, rng: &mut Rng) -> ShiftConv {
+    let mut weights = vec![0i8; p.in_channels * p.filters];
+    rng.fill_i8(&mut weights, -64, 63);
+    ShiftConv {
+        in_channels: p.in_channels,
+        out_channels: p.filters,
+        shifts: uniform_shifts(p.in_channels, p.kernel),
+        weights,
+        bias: vec![0; p.filters],
+        q_in: QParam::new(q_in),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }
+}
+
+fn make_add(p: &LayerParams, q_in: i32, rng: &mut Rng) -> AddConv {
+    let mut weights = vec![0i8; p.filters * p.kernel * p.kernel * p.in_channels];
+    rng.fill_i8(&mut weights, -64, 63);
+    AddConv {
+        kernel: p.kernel,
+        in_channels: p.in_channels,
+        out_channels: p.filters,
+        pad: p.pad(),
+        weights,
+        bias: vec![0; p.filters],
+        q_in: QParam::new(q_in),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }
+}
+
+/// MCU-Net: a small CIFAR-10-shaped CNN (~3 conv stages + head) with the
+/// convolution stages instantiated by `prim`. Used by the end-to-end
+/// example, the serving coordinator and the model-level benches.
+///
+/// Topology (32×32×3 input, 10 classes):
+/// `stem 3→16` → pool → `stage(prim) 16→32` → pool → `stage(prim) 32→32`
+/// → pool → gavg → dense 32→10.
+pub fn mcunet(prim: Primitive, seed: u64) -> Model {
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF);
+    let mut m = Model::new(
+        format!("mcunet-{}", prim.name()),
+        Shape::new(32, 32, 3),
+        QParam::new(Q_IN),
+    );
+    // stem: always a standard conv (as in the source architectures the
+    // paper cites: the first layer stays dense)
+    let stem = make_conv(&LayerParams::new(1, 3, 32, 3, 16), 1, Q_IN, &mut rng);
+    m.push(Layer::Conv(stem));
+    m.push(Layer::Relu);
+    m.push(Layer::MaxPool2); // 16×16×16
+
+    push_stage(&mut m, prim, &LayerParams::new(2, 3, 16, 16, 32), &mut rng);
+    m.push(Layer::Relu);
+    m.push(Layer::MaxPool2); // 8×8×32
+
+    push_stage(&mut m, prim, &LayerParams::new(2, 3, 8, 32, 32), &mut rng);
+    m.push(Layer::Relu);
+    m.push(Layer::GlobalAvgPool(None)); // 1×1×32
+
+    let mut w = vec![0i8; 32 * 10];
+    rng.fill_i8(&mut w, -64, 63);
+    m.push(Layer::Dense(QuantDense {
+        in_features: 32,
+        out_features: 10,
+        weights: w,
+        bias: (0..10).map(|_| rng.range(0, 256) as i32 - 128).collect(),
+        q_in: QParam::new(Q_OUT),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }));
+    m
+}
+
+/// MCU-Net with independent per-stage primitive (and group) choices —
+/// the NAS search space of [`crate::harness::nas`].
+pub fn mcunet_with(
+    prim1: Primitive,
+    groups1: usize,
+    prim2: Primitive,
+    groups2: usize,
+    seed: u64,
+) -> Model {
+    let mut rng = Rng::new(seed ^ 0x0A5_5EA2C);
+    let mut m = Model::new(
+        format!(
+            "mcunet-{}{}-{}{}",
+            prim1.name(),
+            if groups1 > 1 { format!("{groups1}") } else { String::new() },
+            prim2.name(),
+            if groups2 > 1 { format!("{groups2}") } else { String::new() },
+        ),
+        Shape::new(32, 32, 3),
+        QParam::new(Q_IN),
+    );
+    let stem = make_conv(&LayerParams::new(1, 3, 32, 3, 16), 1, Q_IN, &mut rng);
+    m.push(Layer::Conv(stem));
+    m.push(Layer::Relu);
+    m.push(Layer::MaxPool2);
+    push_stage(&mut m, prim1, &LayerParams::new(groups1, 3, 16, 16, 32), &mut rng);
+    m.push(Layer::Relu);
+    m.push(Layer::MaxPool2);
+    push_stage(&mut m, prim2, &LayerParams::new(groups2, 3, 8, 32, 32), &mut rng);
+    m.push(Layer::Relu);
+    m.push(Layer::GlobalAvgPool(None));
+    let mut w = vec![0i8; 32 * 10];
+    rng.fill_i8(&mut w, -64, 63);
+    m.push(Layer::Dense(QuantDense {
+        in_features: 32,
+        out_features: 10,
+        weights: w,
+        bias: (0..10).map(|_| rng.range(0, 256) as i32 - 128).collect(),
+        q_in: QParam::new(Q_OUT),
+        q_w: QParam::new(Q_W),
+        q_out: QParam::new(Q_OUT),
+    }));
+    m
+}
+
+fn push_stage(m: &mut Model, prim: Primitive, p: &LayerParams, rng: &mut Rng) {
+    // stages consume the previous stage's Q_OUT-format activations
+    let qi = Q_OUT;
+    match prim {
+        Primitive::Standard => {
+            m.push(Layer::Conv(make_conv(p, 1, qi, rng)));
+        }
+        Primitive::Grouped => {
+            m.push(Layer::Conv(make_conv(p, p.groups, qi, rng)));
+        }
+        Primitive::DepthwiseSeparable => {
+            m.push(Layer::Depthwise(make_depthwise(p, qi, rng)));
+            m.push(Layer::Conv(make_pointwise(p.in_channels, p.filters, qi, rng)));
+        }
+        Primitive::Shift => {
+            m.push(Layer::Shift(make_shift(p, qi, rng)));
+        }
+        Primitive::Add => {
+            m.push(Layer::AddConv(make_add(p, qi, rng)));
+            let bn = BatchNorm {
+                gamma: vec![1.0; p.filters],
+                beta: vec![0.7; p.filters],
+                mean: vec![-1.5; p.filters],
+                var: vec![1.0; p.filters],
+                eps: 1e-5,
+            };
+            m.push(Layer::Bn(BnLayer::quantize(
+                &bn,
+                QParam::new(Q_OUT),
+                QParam::new(Q_OUT),
+            )));
+        }
+    }
+}
+
+/// Fixed experiment input for a layer config (deterministic).
+pub fn experiment_input(p: &LayerParams, seed: u64) -> crate::nn::Tensor {
+    let mut rng = Rng::new(seed ^ 0x1A2B_3C4D);
+    let mut t = crate::nn::Tensor::zeros(
+        Shape::new(p.input_width, p.input_width, p.in_channels),
+        QParam::new(Q_IN),
+    );
+    rng.fill_i8(&mut t.data, -64, 63);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NoopMonitor;
+
+    #[test]
+    fn all_primitives_build_and_run() {
+        let p = LayerParams::new(2, 3, 8, 4, 6);
+        for prim in Primitive::ALL {
+            let m = experiment_layer(&p, prim, 1);
+            let x = experiment_input(&p, 2);
+            let y = m.forward(&x, false, &mut NoopMonitor);
+            assert_eq!(y.shape.c, 6, "{prim:?}");
+            let y2 = m.forward(&x, true, &mut NoopMonitor);
+            assert_eq!(y.data, y2.data, "{prim:?} simd mismatch");
+        }
+    }
+
+    #[test]
+    fn mcunet_shapes_and_parity() {
+        for prim in Primitive::ALL {
+            let m = mcunet(prim, 7);
+            let shapes = m.shapes();
+            assert_eq!(*shapes.last().unwrap(), Shape::new(1, 1, 10), "{prim:?}");
+            let mut x = crate::nn::Tensor::zeros(m.input_shape, m.input_q);
+            let mut rng = Rng::new(3);
+            rng.fill_i8(&mut x.data, -64, 63);
+            let a = m.forward(&x, false, &mut NoopMonitor);
+            let b = m.forward(&x, true, &mut NoopMonitor);
+            assert_eq!(a.data, b.data, "{prim:?} model simd parity");
+        }
+    }
+
+    #[test]
+    fn mcunet_weight_budget_is_mcu_scale() {
+        // must fit a small Cortex-M flash: well under 256 KiB
+        for prim in Primitive::ALL {
+            let m = mcunet(prim, 7);
+            assert!(m.weight_bytes() < 256 * 1024, "{prim:?}: {}", m.weight_bytes());
+        }
+    }
+}

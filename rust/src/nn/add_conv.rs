@@ -1,0 +1,308 @@
+//! Add (L1-norm) convolution — AdderNet (Eq. 3): the cross-correlation is
+//! replaced by a negative L1 distance,
+//! `Y = −Σ |W − X|`, so the layer uses additions/subtractions only.
+//!
+//! Quantization follows the paper's Alg. 1 (right): input and weight are
+//! aligned to a common power-of-two exponent by a left shift of the
+//! coarser operand before the distance is taken (see
+//! [`crate::quant::align_shift`]). The output is always ≤ 0, so a
+//! batch-normalization layer must follow to make ReLU useful (§2.2) —
+//! BN folding is *not* applicable (§3.2); see [`super::bn::BnLayer`].
+//!
+//! There is no SIMD variant: "there is no instructions similar to
+//! `__SMLAD` adapted to add convolutions" (§3.3).
+
+use crate::quant::{
+    add_conv_inner, add_conv_out_shift, align_shift, requantize, sat_i8, QParam,
+};
+
+use super::monitor::Monitor;
+use super::tensor::{Shape, Tensor};
+
+/// A quantized add-convolution layer.
+#[derive(Clone, Debug)]
+pub struct AddConv {
+    pub kernel: usize,
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub pad: usize,
+    /// Weights `[out_channels][kernel][kernel][in_channels]`.
+    pub weights: Vec<i8>,
+    /// Bias at the *aligned* scale (`max(frac_in, frac_w)` fractional
+    /// bits) — added to the negative distance accumulator.
+    pub bias: Vec<i32>,
+    pub q_in: QParam,
+    pub q_w: QParam,
+    pub q_out: QParam,
+}
+
+impl AddConv {
+    /// Operand alignment (Alg. 1 right).
+    #[inline]
+    pub fn alignment(&self) -> (i32, bool) {
+        align_shift(self.q_in.frac_bits, self.q_w.frac_bits)
+    }
+
+    /// Output requantization shift from the aligned accumulator scale.
+    #[inline]
+    pub fn out_shift(&self) -> i32 {
+        add_conv_out_shift(self.q_in.frac_bits, self.q_w.frac_bits, self.q_out.frac_bits)
+    }
+
+    #[inline(always)]
+    fn w_idx(&self, n: usize, i: usize, j: usize, m: usize) -> usize {
+        ((n * self.kernel + i) * self.kernel + j) * self.in_channels + m
+    }
+
+    pub fn validate(&self, input: &Shape) -> Result<(), String> {
+        if input.c != self.in_channels {
+            return Err(format!("input channels {} != {}", input.c, self.in_channels));
+        }
+        let expect = self.out_channels * self.kernel * self.kernel * self.in_channels;
+        if self.weights.len() != expect {
+            return Err("weight length mismatch".into());
+        }
+        if self.bias.len() != self.out_channels {
+            return Err("bias length mismatch".into());
+        }
+        Ok(())
+    }
+
+    pub fn output_shape(&self, input: &Shape) -> Shape {
+        Shape::new(
+            input.h + 2 * self.pad - self.kernel + 1,
+            input.w + 2 * self.pad - self.kernel + 1,
+            self.out_channels,
+        )
+    }
+
+    /// Scalar path — the only path (§3.3). Each tap costs a subtract and
+    /// an abs (2 `alu`) instead of a `mac`: same operation *count* as
+    /// standard convolution (Table 1 complexity gain = 1) but a slightly
+    /// longer dependent chain, which is the paper's explanation for add
+    /// convolution being "slightly less efficient ... despite the same
+    /// number of MACs" (§4.1).
+    ///
+    /// Padding note: a zero-padded tap still contributes `−|w|` to the L1
+    /// distance (unlike multiplicative convolution where the zero kills
+    /// the term), so taps are *not* skipped at the borders — the full
+    /// `Hk²·Cx` distance is computed for every output, with the zero
+    /// operand synthesized (no input load).
+    pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid add-conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let (shift, on_input) = self.alignment();
+        let out_shift = self.out_shift();
+        let k = self.kernel as isize;
+        let pad = self.pad as isize;
+
+        for n in 0..self.out_channels {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    mon.ld32(1);
+                    let mut acc: i32 = self.bias[n];
+                    for i in 0..k {
+                        let iy = oy as isize + i - pad;
+                        for j in 0..k {
+                            let ix = ox as isize + j - pad;
+                            mon.branch(1);
+                            let in_bounds = iy >= 0
+                                && ix >= 0
+                                && iy < x.shape.h as isize
+                                && ix < x.shape.w as isize;
+                            let wbase = self.w_idx(n, i as usize, j as usize, 0);
+                            let cin = self.in_channels;
+                            let ws = &self.weights[wbase..wbase + cin];
+                            if in_bounds {
+                                let xbase = x.shape.idx(iy as usize, ix as usize, 0);
+                                let xs = &x.data[xbase..xbase + cin];
+                                for (xv, wv) in xs.iter().zip(ws) {
+                                    acc += add_conv_inner(*xv as i32, *wv as i32, shift, on_input);
+                                }
+                                mon.ld8(2 * cin as u64);
+                            } else {
+                                for wv in ws {
+                                    acc += add_conv_inner(0, *wv as i32, shift, on_input);
+                                }
+                                mon.ld8(cin as u64);
+                            }
+                            // sub + abs (accumulate folds into the abs
+                            // sequence; the align shift is hoisted —
+                            // formats are fixed per layer) ≈ 2 alu per
+                            // tap vs 1 mac for conv: the paper's
+                            // "slightly less efficient" (§4.1).
+                            mon.alu(2 * self.in_channels as u64);
+                            mon.branch(self.in_channels as u64);
+                        }
+                    }
+                    mon.alu(2);
+                    mon.st8(1);
+                    y.set(oy, ox, n, sat_i8(requantize(acc, out_shift)));
+                }
+            }
+        }
+        y
+    }
+
+    /// Float-domain reference of the *integer* semantics.
+    pub fn forward_integer_reference(&self, x: &Tensor) -> Tensor {
+        self.validate(&x.shape).expect("invalid add-conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let (shift, on_input) = self.alignment();
+        let out_shift = self.out_shift();
+        for n in 0..self.out_channels {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut acc: i32 = self.bias[n];
+                    for i in 0..self.kernel {
+                        for j in 0..self.kernel {
+                            let iy = oy as isize + i as isize - self.pad as isize;
+                            let ix = ox as isize + j as isize - self.pad as isize;
+                            for m in 0..self.in_channels {
+                                let xv = x.at_padded(iy, ix, m) as i32;
+                                let wv = self.weights[self.w_idx(n, i, j, m)] as i32;
+                                acc += add_conv_inner(xv, wv, shift, on_input);
+                            }
+                        }
+                    }
+                    y.set(oy, ox, n, sat_i8(requantize(acc, out_shift)));
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure, ensure_eq_i8};
+
+    pub(crate) fn random_add_conv(rng: &mut Rng, k: usize, cin: usize, cout: usize) -> AddConv {
+        let mut weights = vec![0i8; cout * k * k * cin];
+        rng.fill_i8(&mut weights, -16, 16);
+        AddConv {
+            kernel: k,
+            in_channels: cin,
+            out_channels: cout,
+            pad: k / 2,
+            weights,
+            bias: vec![0; cout],
+            q_in: QParam::new(7),
+            q_w: QParam::new(5),
+            q_out: QParam::new(3),
+        }
+    }
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    #[test]
+    fn output_is_non_positive_with_zero_bias() {
+        check(
+            "addconv-nonpositive",
+            32,
+            |rng, _| {
+                let cin = rng.range(1, 6);
+                let cout = rng.range(1, 6);
+                let h = rng.range(3, 6);
+                (random_add_conv(rng, 3, cin, cout), random_input(rng, h, cin))
+            },
+            |(ac, x)| {
+                let y = ac.forward_scalar(x, &mut NoopMonitor);
+                ensure(
+                    y.data.iter().all(|&v| v <= 0),
+                    "positive output from add-conv",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn matches_integer_reference() {
+        check(
+            "addconv-vs-ref",
+            48,
+            |rng, _| {
+                let cin = rng.range(1, 6);
+                let cout = rng.range(1, 6);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                (random_add_conv(rng, k, cin, cout), random_input(rng, h, cin))
+            },
+            |(ac, x)| {
+                let a = ac.forward_scalar(x, &mut NoopMonitor);
+                let b = ac.forward_integer_reference(x);
+                ensure_eq_i8(&a.data, &b.data, "add conv scalar vs reference")
+            },
+        );
+    }
+
+    #[test]
+    fn perfect_match_gives_zero_distance() {
+        // weight == aligned input patch → distance 0 (maximal similarity)
+        let k = 3usize;
+        let c = 2usize;
+        let mut ac = random_add_conv(&mut Rng::new(9), k, c, 1);
+        ac.q_in = QParam::new(7);
+        ac.q_w = QParam::new(7); // same scale: no alignment shift
+        ac.pad = 0;
+        let mut x = Tensor::zeros(Shape::new(3, 3, c), QParam::new(7));
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i as i8 % 11) - 5;
+        }
+        // copy the patch into the filter (layout matches: [i][j][m])
+        ac.weights = x.data.clone();
+        let y = ac.forward_scalar(&x, &mut NoopMonitor);
+        assert_eq!(y.data[0], 0);
+    }
+
+    #[test]
+    fn same_op_count_as_standard_conv_interior() {
+        // Table 1: add conv has the same theoretical MACs as standard.
+        // Our counter reports them as `alu` groups of 3 per tap; check the
+        // tap count matches Hk²·Cx·Hy²·Cy on a pad-0 layer.
+        let mut rng = Rng::new(21);
+        let (k, cin, cout, h) = (3usize, 4usize, 5usize, 6usize);
+        let mut ac = random_add_conv(&mut rng, k, cin, cout);
+        ac.pad = 0;
+        let x = random_input(&mut rng, h, cin);
+        let mut mon = CountingMonitor::new();
+        let y = ac.forward_scalar(&x, &mut mon);
+        let hy = y.shape.h as u64;
+        let taps = (k * k * cin) as u64 * hy * hy * cout as u64;
+        assert_eq!(mon.counts.alu, 2 * taps + 2 * (y.shape.len() as u64));
+    }
+
+    #[test]
+    fn alignment_shifts_agree_with_quant_helpers() {
+        let ac = random_add_conv(&mut Rng::new(2), 3, 2, 2);
+        // q_in=7, q_w=5 → input is finer → shift applies to weight
+        assert_eq!(ac.alignment(), (2, false));
+        assert_eq!(ac.out_shift(), 7 - 3);
+    }
+
+    #[test]
+    fn padded_taps_contribute_weight_magnitude() {
+        // A 1x1 input with 3x3 kernel: 8 of 9 taps are padding; output
+        // must include −|w| for those taps (not skip them).
+        let mut ac = random_add_conv(&mut Rng::new(4), 3, 1, 1);
+        ac.q_in = QParam::new(7);
+        ac.q_w = QParam::new(7);
+        ac.q_out = QParam::new(7);
+        ac.weights = vec![10, 10, 10, 10, 0, 10, 10, 10, 10]; // center 0
+        let mut x = Tensor::zeros(Shape::new(1, 1, 1), QParam::new(7));
+        x.data = vec![0];
+        let y = ac.forward_scalar(&x, &mut NoopMonitor);
+        // acc = -(8 * 10) = -80, shift 0 → saturate at -80
+        assert_eq!(y.data[0], -80);
+    }
+}
+

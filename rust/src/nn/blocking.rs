@@ -1,0 +1,220 @@
+//! Generalized P×F register-blocked matmul — the ablation substrate for
+//! the paper's §3.3 design choices: CMSIS-NN fixes **2 patches** (im2col
+//! buffer cap) × **2 filters** (register-file reuse). This module lets the
+//! harness sweep P (patches in flight) and F (filter rows in flight) to
+//! quantify *why* 2×2: memory accesses per MAC fall as P·F grows, but the
+//! accumulator+operand set must fit the Cortex-M register file.
+//!
+//! The 2×2 instantiation is event-equivalent to
+//! [`super::im2col::mat_mult_2x2`] (property-tested), so the ablation
+//! measures the production kernel at its design point.
+
+use super::monitor::Monitor;
+
+/// Cortex-M4 integer register file available to a leaf kernel: r0–r12
+/// (13), minus pointers to the P column bases, F weight bases and the
+/// loop counter. What remains must hold `P·F` accumulators plus one
+/// loaded word per operand stream.
+pub const M4_USABLE_REGS: usize = 13;
+
+/// Register demand of a P×F blocked inner loop.
+pub fn register_demand(p: usize, f: usize) -> usize {
+    // accumulators + one live word per column + per filter row + counter
+    p * f + p + f + 1
+}
+
+/// Whether a (P, F) blocking fits the M4 register file without spilling.
+pub fn fits_register_file(p: usize, f: usize) -> bool {
+    register_demand(p, f) <= M4_USABLE_REGS
+}
+
+/// Blocked quantized matmul: `f` weight rows (q7) × `p` q15 columns,
+/// `p·f` accumulators, SMLAD over K in chunks of 4 (2 q15 words).
+///
+/// Event accounting per 4 k-values: `f` weight `ld32` (+`2f` widening
+/// ALU) + `2p` column `ld32` + `2·p·f` SMLAD + 1 branch — data reuse
+/// grows as `p·f / (f + 2p)` loads amortize over `4·p·f` MACs.
+/// Returns accumulators in row-major `[f][p]` order.
+pub fn mat_mult_block<M: Monitor>(
+    w_rows: &[&[i8]],
+    cols: &[&[i16]],
+    biases: &[i32],
+    mon: &mut M,
+) -> Vec<i32> {
+    let f = w_rows.len();
+    let p = cols.len();
+    assert_eq!(biases.len(), f, "one bias per filter row");
+    let k = w_rows[0].len();
+    debug_assert!(w_rows.iter().all(|r| r.len() == k));
+    debug_assert!(cols.iter().all(|c| c.len() == k));
+
+    mon.ld32(f as u64); // bias loads
+    let mut acc: Vec<i32> = biases
+        .iter()
+        .flat_map(|&b| std::iter::repeat_n(b, p))
+        .collect();
+
+    let k4 = k / 4;
+    for blk in 0..k4 {
+        let o = blk * 4;
+        mon.ld32(f as u64); // one q7x4 word per filter row
+        mon.alu(2 * f as u64); // SXTB16 widening
+        mon.ld32(2 * p as u64); // two q15 words per column
+        mon.smlad(2 * (p * f) as u64);
+        mon.branch(1);
+        for (fi, w) in w_rows.iter().enumerate() {
+            for (pi, c) in cols.iter().enumerate() {
+                let a = &mut acc[fi * p + pi];
+                for t in 0..4 {
+                    *a += w[o + t] as i32 * c[o + t] as i32;
+                }
+            }
+        }
+    }
+    // scalar tail
+    for i in k4 * 4..k {
+        mon.ld8(f as u64);
+        mon.ld16(p as u64);
+        mon.mac((p * f) as u64);
+        mon.branch(1);
+        for (fi, w) in w_rows.iter().enumerate() {
+            for (pi, c) in cols.iter().enumerate() {
+                acc[fi * p + pi] += w[i] as i32 * c[i] as i32;
+            }
+        }
+    }
+    acc
+}
+
+/// Memory-access events per MAC of a (P, F) blocking over a length-K
+/// reduction (closed form, ignoring the tail): loads per 4 k-values are
+/// `f + 2p` (+ per-call bias), MACs are `4·p·f`.
+pub fn loads_per_mac(p: usize, f: usize) -> f64 {
+    (f as f64 + 2.0 * p as f64) / (4.0 * p as f64 * f as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::im2col::mat_mult_2x2;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure};
+
+    fn dot(w: &[i8], c: &[i16]) -> i32 {
+        w.iter().zip(c).map(|(&a, &b)| a as i32 * b as i32).sum()
+    }
+
+    #[test]
+    fn block_matches_dot_products() {
+        check(
+            "blocked-matmul",
+            64,
+            |rng, _| {
+                let k = rng.range(1, 32);
+                let p = rng.range(1, 4);
+                let f = rng.range(1, 4);
+                let rows: Vec<Vec<i8>> = (0..f)
+                    .map(|_| {
+                        let mut r = vec![0i8; k];
+                        rng.fill_i8(&mut r, -20, 20);
+                        r
+                    })
+                    .collect();
+                let cols: Vec<Vec<i16>> = (0..p)
+                    .map(|_| (0..k).map(|_| rng.i8_range(-30, 30) as i16).collect())
+                    .collect();
+                let biases: Vec<i32> = (0..f).map(|_| rng.range(0, 100) as i32 - 50).collect();
+                (rows, cols, biases)
+            },
+            |(rows, cols, biases)| {
+                let wr: Vec<&[i8]> = rows.iter().map(|r| r.as_slice()).collect();
+                let cr: Vec<&[i16]> = cols.iter().map(|c| c.as_slice()).collect();
+                let acc = mat_mult_block(&wr, &cr, biases, &mut NoopMonitor);
+                for (fi, row) in rows.iter().enumerate() {
+                    for (pi, col) in cols.iter().enumerate() {
+                        let want = biases[fi] + dot(row, col);
+                        ensure(
+                            acc[fi * cols.len() + pi] == want,
+                            format!("acc[{fi}][{pi}]"),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn two_by_two_is_event_equivalent_to_production_kernel() {
+        let mut rng = Rng::new(3);
+        let k = 16usize;
+        let mut wa = vec![0i8; k];
+        let mut wb = vec![0i8; k];
+        rng.fill_i8(&mut wa, -10, 10);
+        rng.fill_i8(&mut wb, -10, 10);
+        let pa: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+        let pb: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+
+        let waq: Vec<i16> = wa.iter().map(|&w| w as i16).collect();
+        let wbq: Vec<i16> = wb.iter().map(|&w| w as i16).collect();
+        let mut m1 = CountingMonitor::new();
+        let prod = mat_mult_2x2(&waq, &wbq, &pa, &pb, 1, 2, &mut m1);
+        let mut m2 = CountingMonitor::new();
+        let blk = mat_mult_block(&[&wa, &wb], &[&pa, &pb], &[1, 2], &mut m2);
+        // results: production order [aA, aB, bA, bB] == block row-major
+        assert_eq!(prod.to_vec(), blk);
+        assert_eq!(m1.counts, m2.counts, "event streams must match at 2x2");
+    }
+
+    #[test]
+    fn loads_per_mac_decrease_with_blocking() {
+        assert!(loads_per_mac(1, 1) > loads_per_mac(2, 2));
+        assert!(loads_per_mac(2, 2) > loads_per_mac(4, 4));
+        // closed form vs counted events on a K divisible by 4
+        let k = 32usize;
+        for (p, f) in [(1usize, 1usize), (2, 2), (2, 4), (4, 2)] {
+            let rows: Vec<Vec<i8>> = (0..f).map(|_| vec![1i8; k]).collect();
+            let cols: Vec<Vec<i16>> = (0..p).map(|_| vec![1i16; k]).collect();
+            let wr: Vec<&[i8]> = rows.iter().map(|r| r.as_slice()).collect();
+            let cr: Vec<&[i16]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut mon = CountingMonitor::new();
+            mat_mult_block(&wr, &cr, &vec![0; f], &mut mon);
+            let macs = mon.counts.effective_macs() as f64;
+            // subtract the f bias loads to isolate the streaming loads
+            let loads = (mon.counts.loads() - f as u64) as f64;
+            let got = loads / macs;
+            let want = loads_per_mac(p, f);
+            assert!((got - want).abs() < 1e-9, "({p},{f}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn register_budget_picks_2x2_among_squares() {
+        // among square blockings, 2x2 is the largest that fits M4's
+        // register file — the CMSIS-NN design point
+        assert!(fits_register_file(1, 1));
+        assert!(fits_register_file(2, 2));
+        assert!(!fits_register_file(3, 3));
+        assert!(!fits_register_file(4, 4));
+        // asymmetric alternatives that fit: (1,4) ties the streaming
+        // closed form (q15 columns cost 2 words per 4 k, weights 1) but
+        // loses on per-call epilogue/bias traffic — the ablation counts
+        // that; (4,1) is strictly worse.
+        assert!(fits_register_file(1, 4));
+        assert!(loads_per_mac(2, 2) <= loads_per_mac(1, 4));
+        assert!(loads_per_mac(2, 2) < loads_per_mac(4, 1));
+    }
+
+    #[test]
+    fn tail_handling_any_k() {
+        let mut rng = Rng::new(9);
+        for k in [1usize, 3, 5, 7, 13] {
+            let mut w = vec![0i8; k];
+            rng.fill_i8(&mut w, -5, 5);
+            let c: Vec<i16> = (0..k).map(|_| rng.i8_range(-5, 5) as i16).collect();
+            let acc = mat_mult_block(&[&w], &[&c], &[7], &mut NoopMonitor);
+            assert_eq!(acc[0], 7 + dot(&w, &c));
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Batch normalization: folding into convolution weights (§3.2, Jacob et
+//! al.) for the multiplicative primitives, and a standalone integer BN
+//! layer for add-convolution, where folding "is not suitable" (§3.2) and
+//! the always-negative outputs *require* a BN before ReLU (§2.2).
+
+use crate::quant::{requantize, sat_i8, QParam};
+
+use super::monitor::Monitor;
+use super::tensor::Tensor;
+
+/// Float batch-norm parameters of one layer (per output channel).
+#[derive(Clone, Debug)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub eps: f32,
+}
+
+impl BatchNorm {
+    pub fn identity(channels: usize) -> Self {
+        Self {
+            gamma: vec![1.0; channels],
+            beta: vec![0.0; channels],
+            mean: vec![0.0; channels],
+            var: vec![1.0; channels],
+            eps: 1e-5,
+        }
+    }
+
+    /// Per-channel affine form `y = a·x + b`.
+    pub fn affine(&self) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = self
+            .gamma
+            .iter()
+            .zip(&self.var)
+            .map(|(&g, &v)| g / (v + self.eps).sqrt())
+            .collect();
+        let b: Vec<f32> = a
+            .iter()
+            .zip(&self.mean)
+            .zip(&self.beta)
+            .map(|((&a, &m), &b)| b - a * m)
+            .collect();
+        (a, b)
+    }
+
+    /// Fold into float convolution weights/bias (§3.2): weight layout is
+    /// `[out_channels][...per_filter...]`, one scale per output channel.
+    /// Returns folded `(weights, bias)`.
+    pub fn fold_into(
+        &self,
+        weights: &[f32],
+        bias: &[f32],
+        out_channels: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(bias.len(), out_channels);
+        assert_eq!(weights.len() % out_channels, 0);
+        let per_filter = weights.len() / out_channels;
+        let (a, b) = self.affine();
+        let mut w = weights.to_vec();
+        let mut bb = bias.to_vec();
+        for n in 0..out_channels {
+            for t in 0..per_filter {
+                w[n * per_filter + t] *= a[n];
+            }
+            bb[n] = a[n] * bias[n] + b[n];
+        }
+        (w, bb)
+    }
+}
+
+/// Integer batch-norm layer (for add-convolution): per-channel
+/// `y = sat((x · m + b) >> shift)` with `m` at `frac_m` fractional bits
+/// and `b` at `frac_in + frac_m` (accumulator scale).
+#[derive(Clone, Debug)]
+pub struct BnLayer {
+    pub channels: usize,
+    pub m: Vec<i16>,
+    pub b: Vec<i32>,
+    pub frac_m: i32,
+    pub q_in: QParam,
+    pub q_out: QParam,
+}
+
+impl BnLayer {
+    /// Quantize a float BN at given input/output formats. `frac_m` is
+    /// chosen from the largest |a| (same Eq. 4 rule, on 16 bits: 15-dec).
+    pub fn quantize(bn: &BatchNorm, q_in: QParam, q_out: QParam) -> Self {
+        let (a, b) = bn.affine();
+        let max_a = a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let dec = if max_a > 0.0 {
+            max_a.log2().ceil() as i32
+        } else {
+            0
+        };
+        let frac_m = 15 - 1 - dec; // int16 with sign bit headroom
+        let ms = (frac_m as f32).exp2();
+        let bs = ((q_in.frac_bits + frac_m) as f32).exp2();
+        Self {
+            channels: a.len(),
+            m: a.iter().map(|&x| (x * ms).round() as i16).collect(),
+            b: b.iter().map(|&x| (x * bs).round() as i32).collect(),
+            frac_m,
+            q_in,
+            q_out,
+        }
+    }
+
+    pub fn out_shift(&self) -> i32 {
+        self.q_in.frac_bits + self.frac_m - self.q_out.frac_bits
+    }
+
+    /// Apply per-element. Event stream: per element one `ld8` activation,
+    /// per channel-indexed `ld16`/`ld32` parameter load, one `mac`, shift +
+    /// saturate (`alu`), `st8`.
+    pub fn forward<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        assert_eq!(x.shape.c, self.channels, "BN channel mismatch");
+        debug_assert_eq!(x.q, self.q_in);
+        let mut y = Tensor::zeros(x.shape, self.q_out);
+        let shift = self.out_shift();
+        for i in 0..x.data.len() {
+            let c = i % self.channels;
+            mon.ld8(1);
+            mon.ld16(1);
+            mon.ld32(1);
+            mon.mac(1);
+            mon.alu(2);
+            mon.st8(1);
+            let acc = x.data[i] as i32 * self.m[c] as i32 + self.b[c];
+            y.data[i] = sat_i8(requantize(acc, shift));
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::NoopMonitor;
+    use crate::nn::tensor::Shape;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn identity_bn_affine_is_identity() {
+        let bn = BatchNorm::identity(4);
+        let (a, b) = bn.affine();
+        for i in 0..4 {
+            assert!((a[i] - 1.0).abs() < 1e-3);
+            assert!(b[i].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn folding_matches_sequential_float() {
+        // conv(x)*a + b == conv_with_folded_weights(x) for the float model
+        check(
+            "bn-fold",
+            48,
+            |rng, _| {
+                let cout = rng.range(1, 6);
+                let per = rng.range(1, 12);
+                let w: Vec<f32> = (0..cout * per).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                let bias: Vec<f32> = (0..cout).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+                let bn = BatchNorm {
+                    gamma: (0..cout).map(|_| rng.f32_range(0.5, 1.5)).collect(),
+                    beta: (0..cout).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+                    mean: (0..cout).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+                    var: (0..cout).map(|_| rng.f32_range(0.2, 2.0)).collect(),
+                    eps: 1e-5,
+                };
+                let x: Vec<f32> = (0..per).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                (w, bias, bn, x, cout, per)
+            },
+            |(w, bias, bn, x, cout, per)| {
+                let (wf, bf) = bn.fold_into(w, bias, *cout);
+                let (a, b) = bn.affine();
+                for n in 0..*cout {
+                    let pre: f32 = (0..*per).map(|t| w[n * per + t] * x[t]).sum::<f32>() + bias[n];
+                    let want = a[n] * pre + b[n];
+                    let got: f32 =
+                        (0..*per).map(|t| wf[n * per + t] * x[t]).sum::<f32>() + bf[n];
+                    ensure((want - got).abs() < 1e-4, format!("{want} vs {got}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quantized_bn_tracks_float_affine() {
+        let mut rng = Rng::new(5);
+        let c = 4usize;
+        let bn = BatchNorm {
+            gamma: (0..c).map(|_| rng.f32_range(0.5, 2.0)).collect(),
+            beta: (0..c).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..c).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            var: (0..c).map(|_| rng.f32_range(0.5, 2.0)).collect(),
+            eps: 1e-5,
+        };
+        let q_in = QParam::new(5);
+        let q_out = QParam::new(4);
+        let layer = BnLayer::quantize(&bn, q_in, q_out);
+        let mut x = Tensor::zeros(Shape::new(2, 2, c), q_in);
+        rng.fill_i8(&mut x.data, -64, 63);
+        let y = layer.forward(&x, &mut NoopMonitor);
+        let (a, b) = bn.affine();
+        for i in 0..x.data.len() {
+            let ch = i % c;
+            let xf = x.data[i] as f32 / q_in.scale();
+            let want = a[ch] * xf + b[ch];
+            let got = y.data[i] as f32 / q_out.scale();
+            assert!(
+                (want - got).abs() <= 3.0 / q_out.scale(),
+                "ch {ch}: {want} vs {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn bn_layer_saturates() {
+        let layer = BnLayer {
+            channels: 1,
+            m: vec![1 << 10],
+            b: vec![0],
+            frac_m: 0,
+            q_in: QParam::new(7),
+            q_out: QParam::new(7),
+        };
+        let mut x = Tensor::zeros(Shape::new(1, 1, 1), QParam::new(7));
+        x.data = vec![127];
+        let y = layer.forward(&x, &mut NoopMonitor);
+        assert_eq!(y.data[0], 127);
+    }
+}

@@ -1,0 +1,321 @@
+//! Depthwise convolution — the first stage of the depthwise-separable
+//! primitive (§2.2): an extreme grouped convolution with
+//! `G = Cx = Cy`, one `Hk×Hk` filter per channel. The pointwise stage is a
+//! `kernel == 1` [`super::conv::QuantConv`].
+//!
+//! The SIMD variant follows CMSIS-NN's `arm_depthwise_separable_conv_HWC_q7`
+//! shape: because activations are HWC (channel-minor), four adjacent
+//! channels share one 32-bit load; products still need per-channel
+//! accumulators, so the win is in memory accesses, not in `__SMLAD` MAC
+//! fusion — which is exactly why the paper's Fig. 2.f shows a lower SIMD
+//! speedup for depthwise-separable than for standard convolution.
+
+use crate::quant::{requantize, sat_i8, QParam};
+
+use super::monitor::Monitor;
+use super::tensor::{Shape, Tensor};
+
+/// A quantized depthwise convolution layer.
+#[derive(Clone, Debug)]
+pub struct QuantDepthwise {
+    pub kernel: usize,
+    pub channels: usize,
+    pub pad: usize,
+    /// Weights `[channels][kernel][kernel]` (channel-major so each
+    /// channel's filter is contiguous — NNoM's layout).
+    pub weights: Vec<i8>,
+    /// Bias at accumulator scale.
+    pub bias: Vec<i32>,
+    pub q_in: QParam,
+    pub q_w: QParam,
+    pub q_out: QParam,
+}
+
+impl QuantDepthwise {
+    #[inline]
+    pub fn out_shift(&self) -> i32 {
+        crate::quant::conv_out_shift(self.q_in.frac_bits, self.q_w.frac_bits, self.q_out.frac_bits)
+    }
+
+    #[inline(always)]
+    fn w_idx(&self, c: usize, i: usize, j: usize) -> usize {
+        (c * self.kernel + i) * self.kernel + j
+    }
+
+    pub fn validate(&self, input: &Shape) -> Result<(), String> {
+        if input.c != self.channels {
+            return Err(format!("input channels {} != {}", input.c, self.channels));
+        }
+        if self.weights.len() != self.channels * self.kernel * self.kernel {
+            return Err("weight length mismatch".into());
+        }
+        if self.bias.len() != self.channels {
+            return Err("bias length mismatch".into());
+        }
+        Ok(())
+    }
+
+    pub fn output_shape(&self, input: &Shape) -> Shape {
+        Shape::new(
+            input.h + 2 * self.pad - self.kernel + 1,
+            input.w + 2 * self.pad - self.kernel + 1,
+            self.channels,
+        )
+    }
+
+    /// Scalar path: per-channel direct loops, bounds-checked taps.
+    pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid depthwise configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+        let k = self.kernel as isize;
+        let pad = self.pad as isize;
+
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                for c in 0..self.channels {
+                    mon.ld32(1); // bias
+                    let mut acc: i32 = self.bias[c];
+                    for i in 0..k {
+                        let iy = oy as isize + i - pad;
+                        if iy < 0 || iy >= x.shape.h as isize {
+                            mon.branch(1);
+                            continue;
+                        }
+                        for j in 0..k {
+                            let ix = ox as isize + j - pad;
+                            mon.branch(1);
+                            if ix < 0 || ix >= x.shape.w as isize {
+                                continue;
+                            }
+                            let xv = x.at(iy as usize, ix as usize, c) as i32;
+                            let wv = self.weights[self.w_idx(c, i as usize, j as usize)] as i32;
+                            acc += xv * wv;
+                            mon.ld8(2);
+                            mon.mac(1);
+                        }
+                    }
+                    mon.alu(2);
+                    mon.st8(1);
+                    y.set(oy, ox, c, sat_i8(requantize(acc, shift)));
+                }
+            }
+        }
+        y
+    }
+
+    /// SIMD path: channel-blocked (4 channels per 32-bit activation load,
+    /// 4 weights per 32-bit weight load — weights reordered offline to
+    /// `[i][j][channels]` for contiguity, as CMSIS-NN requires). Numerics
+    /// are identical to the scalar path; only the event stream differs.
+    pub fn forward_simd<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid depthwise configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+        let k = self.kernel as isize;
+        let pad = self.pad as isize;
+        let c4 = self.channels / 4;
+        let rem = self.channels % 4;
+
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                // 4-channel blocks
+                for cb in 0..c4 {
+                    let c0 = cb * 4;
+                    mon.ld32(1); // packed bias pair loads (amortized: 2×ld32 per 4 ch)
+                    mon.ld32(1);
+                    let mut acc = [
+                        self.bias[c0],
+                        self.bias[c0 + 1],
+                        self.bias[c0 + 2],
+                        self.bias[c0 + 3],
+                    ];
+                    for i in 0..k {
+                        let iy = oy as isize + i - pad;
+                        if iy < 0 || iy >= x.shape.h as isize {
+                            mon.branch(1);
+                            continue;
+                        }
+                        for j in 0..k {
+                            let ix = ox as isize + j - pad;
+                            mon.branch(1);
+                            if ix < 0 || ix >= x.shape.w as isize {
+                                continue;
+                            }
+                            // one 32-bit load covers 4 channels of x; the
+                            // reordered weight word covers the same 4
+                            // channels. Widening: 2×SXTB16 each.
+                            mon.ld32(2);
+                            mon.alu(4);
+                            // 4 per-channel MACs (SMULBB/SMULTT pairs)
+                            mon.mac(4);
+                            for dc in 0..4 {
+                                let xv = x.at(iy as usize, ix as usize, c0 + dc) as i32;
+                                let wv =
+                                    self.weights[self.w_idx(c0 + dc, i as usize, j as usize)] as i32;
+                                acc[dc] += xv * wv;
+                            }
+                        }
+                    }
+                    for dc in 0..4 {
+                        mon.alu(2);
+                        mon.st8(1);
+                        y.set(oy, ox, c0 + dc, sat_i8(requantize(acc[dc], shift)));
+                    }
+                }
+                // leftover channels — scalar tail
+                for c in self.channels - rem..self.channels {
+                    mon.ld32(1);
+                    let mut acc: i32 = self.bias[c];
+                    for i in 0..k {
+                        let iy = oy as isize + i - pad;
+                        if iy < 0 || iy >= x.shape.h as isize {
+                            mon.branch(1);
+                            continue;
+                        }
+                        for j in 0..k {
+                            let ix = ox as isize + j - pad;
+                            mon.branch(1);
+                            if ix < 0 || ix >= x.shape.w as isize {
+                                continue;
+                            }
+                            let xv = x.at(iy as usize, ix as usize, c) as i32;
+                            let wv = self.weights[self.w_idx(c, i as usize, j as usize)] as i32;
+                            acc += xv * wv;
+                            mon.ld8(2);
+                            mon.mac(1);
+                        }
+                    }
+                    mon.alu(2);
+                    mon.st8(1);
+                    y.set(oy, ox, c, sat_i8(requantize(acc, shift)));
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure, ensure_eq_i8};
+
+    pub(crate) fn random_depthwise(rng: &mut Rng, k: usize, c: usize) -> QuantDepthwise {
+        let mut weights = vec![0i8; c * k * k];
+        rng.fill_i8(&mut weights, -8, 8);
+        QuantDepthwise {
+            kernel: k,
+            channels: c,
+            pad: k / 2,
+            weights,
+            bias: (0..c).map(|_| rng.range(0, 32) as i32 - 16).collect(),
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }
+    }
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    #[test]
+    fn simd_is_bit_exact_with_scalar() {
+        check(
+            "dw-simd-vs-scalar",
+            48,
+            |rng, _| {
+                let c = rng.range(1, 12);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                (random_depthwise(rng, k, c), random_input(rng, h, c))
+            },
+            |(dw, x)| {
+                let a = dw.forward_scalar(x, &mut NoopMonitor);
+                let b = dw.forward_simd(x, &mut NoopMonitor);
+                ensure_eq_i8(&a.data, &b.data, "depthwise simd vs scalar")
+            },
+        );
+    }
+
+    #[test]
+    fn depthwise_equals_grouped_conv_extreme() {
+        // depthwise == QuantConv with groups == channels (1 filter/group)
+        use crate::nn::conv::QuantConv;
+        let mut rng = Rng::new(5);
+        let (k, c, h) = (3usize, 6usize, 5usize);
+        let dw = random_depthwise(&mut rng, k, c);
+        let conv = QuantConv {
+            kernel: k,
+            groups: c,
+            in_channels: c,
+            out_channels: c,
+            pad: k / 2,
+            weights: dw.weights.clone(), // [c][k][k][1] == [c][k][k]
+            bias: dw.bias.clone(),
+            q_in: dw.q_in,
+            q_w: dw.q_w,
+            q_out: dw.q_out,
+        };
+        let x = random_input(&mut rng, h, c);
+        let a = dw.forward_scalar(&x, &mut NoopMonitor);
+        let b = conv.forward_scalar(&x, &mut NoopMonitor);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn simd_reduces_memory_accesses() {
+        let mut rng = Rng::new(11);
+        let dw = random_depthwise(&mut rng, 3, 16);
+        let x = random_input(&mut rng, 10, 16);
+        let mut ms = CountingMonitor::new();
+        let mut mv = CountingMonitor::new();
+        dw.forward_scalar(&x, &mut ms);
+        dw.forward_simd(&x, &mut mv);
+        assert!(
+            mv.counts.mem_accesses() < ms.counts.mem_accesses(),
+            "simd {} !< scalar {}",
+            mv.counts.mem_accesses(),
+            ms.counts.mem_accesses()
+        );
+    }
+
+    #[test]
+    fn mac_count_matches_theory_valid() {
+        let mut rng = Rng::new(13);
+        let (k, c, h) = (3usize, 8usize, 6usize);
+        let mut dw = random_depthwise(&mut rng, k, c);
+        dw.pad = 0;
+        let x = random_input(&mut rng, h, c);
+        let mut mon = CountingMonitor::new();
+        let y = dw.forward_scalar(&x, &mut mon);
+        let hy = y.shape.h as u64;
+        assert_eq!(mon.counts.mac, (k * k * c) as u64 * hy * hy);
+    }
+
+    #[test]
+    fn channel_tail_handled() {
+        // channels not divisible by 4 exercise the scalar tail
+        check(
+            "dw-tail",
+            16,
+            |rng, i| {
+                let c = 4 + (i % 4) + 1; // 5..=8, includes non-multiples
+                (random_depthwise(rng, 3, c), random_input(rng, 4, c))
+            },
+            |(dw, x)| {
+                let a = dw.forward_scalar(x, &mut NoopMonitor);
+                let b = dw.forward_simd(x, &mut NoopMonitor);
+                ensure(a.data == b.data, "tail mismatch")
+            },
+        );
+    }
+}
+

@@ -1,0 +1,270 @@
+//! Sequential model graph — the NNoM-equivalent "compiled model": a list
+//! of quantized layers with fixed formats, executed with either code path
+//! (scalar / SIMD) under any [`Monitor`].
+
+use crate::quant::QParam;
+
+use super::add_conv::AddConv;
+use super::bn::BnLayer;
+use super::conv::QuantConv;
+use super::depthwise::QuantDepthwise;
+use super::monitor::{CountingMonitor, Monitor, OpCounts};
+use super::ops::{self, QuantDense};
+use super::shift::ShiftConv;
+use super::tensor::{Shape, Tensor};
+
+/// One layer of a deployed model.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv(QuantConv),
+    Depthwise(QuantDepthwise),
+    Shift(ShiftConv),
+    AddConv(AddConv),
+    Bn(BnLayer),
+    Relu,
+    MaxPool2,
+    GlobalAvgPool(Option<crate::quant::QParam>),
+    Dense(QuantDense),
+}
+
+impl Layer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layer::Conv(c) if c.kernel == 1 => "pointwise",
+            Layer::Conv(c) if c.groups > 1 => {
+                if c.groups == c.in_channels {
+                    "depthwise(grouped)"
+                } else {
+                    "grouped-conv"
+                }
+            }
+            Layer::Conv(_) => "conv",
+            Layer::Depthwise(_) => "depthwise",
+            Layer::Shift(_) => "shift-conv",
+            Layer::AddConv(_) => "add-conv",
+            Layer::Bn(_) => "batchnorm",
+            Layer::Relu => "relu",
+            Layer::MaxPool2 => "maxpool2",
+            Layer::GlobalAvgPool(_) => "gavgpool",
+            Layer::Dense(_) => "dense",
+        }
+    }
+
+    /// Whether this layer has a distinct SIMD implementation.
+    pub fn has_simd(&self) -> bool {
+        matches!(
+            self,
+            Layer::Conv(_) | Layer::Depthwise(_) | Layer::Shift(_) | Layer::Dense(_)
+        )
+    }
+
+    /// Output shape for a given input shape.
+    pub fn output_shape(&self, input: &Shape) -> Shape {
+        match self {
+            Layer::Conv(c) => c.output_shape(input),
+            Layer::Depthwise(d) => d.output_shape(input),
+            Layer::Shift(s) => s.output_shape(input),
+            Layer::AddConv(a) => a.output_shape(input),
+            Layer::Bn(_) | Layer::Relu => *input,
+            Layer::MaxPool2 => Shape::new(input.h / 2, input.w / 2, input.c),
+            Layer::GlobalAvgPool(_) => Shape::new(1, 1, input.c),
+            Layer::Dense(d) => Shape::new(1, 1, d.out_features),
+        }
+    }
+
+    /// Execute on a tensor.
+    pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
+        match self {
+            Layer::Conv(c) => c.forward(x, simd, mon),
+            Layer::Depthwise(d) => {
+                if simd {
+                    d.forward_simd(x, mon)
+                } else {
+                    d.forward_scalar(x, mon)
+                }
+            }
+            Layer::Shift(s) => s.forward(x, simd, mon),
+            // add-convolution has no SIMD variant (§3.3)
+            Layer::AddConv(a) => a.forward_scalar(x, mon),
+            Layer::Bn(b) => b.forward(x, mon),
+            Layer::Relu => ops::relu(x, mon),
+            Layer::MaxPool2 => ops::maxpool2(x, mon),
+            Layer::GlobalAvgPool(q) => ops::global_avgpool(x, *q, mon),
+            Layer::Dense(d) => {
+                let out = d.forward(&x.data, simd, mon);
+                Tensor::from_vec(Shape::new(1, 1, d.out_features), d.q_out, out)
+            }
+        }
+    }
+}
+
+/// Per-layer profile from an instrumented inference.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: &'static str,
+    pub counts: OpCounts,
+}
+
+/// A deployed sequential model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub input_shape: Shape,
+    pub input_q: QParam,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    pub fn new(name: impl Into<String>, input_shape: Shape, input_q: QParam) -> Self {
+        Self {
+            name: name.into(),
+            input_shape,
+            input_q,
+            layers: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> &mut Self {
+        self.layers.push(layer);
+        self
+    }
+
+    /// Shape after every layer (index 0 = input).
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut shapes = vec![self.input_shape];
+        for l in &self.layers {
+            let s = *shapes.last().unwrap();
+            shapes.push(l.output_shape(&s));
+        }
+        shapes
+    }
+
+    /// Run an inference.
+    pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        let mut t = x.clone();
+        for l in &self.layers {
+            t = l.forward(&t, simd, mon);
+        }
+        t
+    }
+
+    /// Run an inference collecting per-layer op counts.
+    pub fn forward_profiled(&self, x: &Tensor, simd: bool) -> (Tensor, Vec<LayerProfile>) {
+        let mut t = x.clone();
+        let mut profiles = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let mut mon = CountingMonitor::new();
+            t = l.forward(&t, simd, &mut mon);
+            profiles.push(LayerProfile {
+                name: l.name(),
+                counts: mon.counts,
+            });
+        }
+        (t, profiles)
+    }
+
+    /// Total op counts for one inference.
+    pub fn count_ops(&self, x: &Tensor, simd: bool) -> OpCounts {
+        let mut mon = CountingMonitor::new();
+        self.forward(x, simd, &mut mon);
+        mon.counts
+    }
+
+    /// Total weight bytes (flash footprint).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.weights.len() + 4 * c.bias.len(),
+                Layer::Depthwise(d) => d.weights.len() + 4 * d.bias.len(),
+                Layer::Shift(s) => s.weights.len() + 4 * s.bias.len() + 2 * s.shifts.len(),
+                Layer::AddConv(a) => a.weights.len() + 4 * a.bias.len(),
+                Layer::Bn(b) => 2 * b.m.len() + 4 * b.b.len(),
+                Layer::Dense(d) => d.weights.len() + 4 * d.bias.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::test_random_conv;
+    use crate::nn::monitor::NoopMonitor;
+    use crate::util::prng::Rng;
+
+    fn tiny_model(rng: &mut Rng) -> Model {
+        let mut m = Model::new("tiny", Shape::new(8, 8, 4), QParam::new(7));
+        let conv = test_random_conv(rng, 1, 3, 4, 8);
+        m.push(Layer::Conv(conv));
+        m.push(Layer::Relu);
+        m.push(Layer::MaxPool2);
+        let mut w = vec![0i8; 4 * 4 * 8 * 10];
+        rng.fill_i8(&mut w, -8, 8);
+        m.push(Layer::Dense(QuantDense {
+            in_features: 4 * 4 * 8,
+            out_features: 10,
+            weights: w,
+            bias: vec![0; 10],
+            q_in: QParam::new(5),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }));
+        m
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let mut rng = Rng::new(1);
+        let m = tiny_model(&mut rng);
+        let shapes = m.shapes();
+        assert_eq!(shapes[0], Shape::new(8, 8, 4));
+        assert_eq!(shapes[1], Shape::new(8, 8, 8)); // conv same-pad
+        assert_eq!(shapes[2], Shape::new(8, 8, 8)); // relu
+        assert_eq!(shapes[3], Shape::new(4, 4, 8)); // pool
+        assert_eq!(shapes[4], Shape::new(1, 1, 10)); // dense
+    }
+
+    #[test]
+    fn simd_model_bit_exact_with_scalar() {
+        let mut rng = Rng::new(2);
+        let m = tiny_model(&mut rng);
+        let mut x = Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -32, 32);
+        let a = m.forward(&x, false, &mut NoopMonitor);
+        let b = m.forward(&x, true, &mut NoopMonitor);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn profiled_counts_sum_to_total() {
+        let mut rng = Rng::new(3);
+        let m = tiny_model(&mut rng);
+        let mut x = Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -32, 32);
+        let total = m.count_ops(&x, true);
+        let (_, profiles) = m.forward_profiled(&x, true);
+        let sum = profiles
+            .iter()
+            .fold(OpCounts::default(), |acc, p| acc.add(&p.counts));
+        assert_eq!(sum, total);
+    }
+
+    #[test]
+    fn weight_bytes_positive() {
+        let mut rng = Rng::new(4);
+        let m = tiny_model(&mut rng);
+        assert!(m.weight_bytes() > 4 * 4 * 8 * 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "model input shape mismatch")]
+    fn wrong_input_shape_panics() {
+        let mut rng = Rng::new(5);
+        let m = tiny_model(&mut rng);
+        let x = Tensor::zeros(Shape::new(4, 4, 4), QParam::new(7));
+        m.forward(&x, false, &mut NoopMonitor);
+    }
+}

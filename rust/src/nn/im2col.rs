@@ -1,0 +1,415 @@
+//! Image-to-column (im2col) machinery of the SIMD path — §3.3 of the
+//! paper, after CMSIS-NN [Lai et al.]:
+//!
+//! 1. sample patches from the input, widen q7 → q15, and stack them into a
+//!    column buffer — **at most 2 patches at a time** ("to deal with the
+//!    increased memory footprint of im2col, limit the number of patches
+//!    processed at the same time to 2");
+//! 2. matrix-multiply against **2 filters simultaneously** to maximize
+//!    register-file data reuse, with the dual 16-bit `__SMLAD` MAC.
+//!
+//! The event accounting mirrors the compiled CMSIS-NN inner loops:
+//! widening uses one 32-bit load per 4 q7 values plus two `__SXTB16`-class
+//! ALU ops and two 32-bit stores; the 2×2 matmul consumes 6 × `ld32` and
+//! 8 × `__SMLAD` per 4 k-values (16 MACs) — the data-reuse ratio the
+//! paper's Fig. 3 measures.
+
+use super::monitor::Monitor;
+use super::tensor::Tensor;
+
+/// Widen one contiguous i8 run into the i16 buffer, counting the CMSIS
+/// `arm_q7_to_q15_no_shift` pattern (4 values per ld32 + 2×SXTB16 + 2×st32).
+#[inline]
+pub fn widen_run_q15<M: Monitor>(src: &[i8], dst: &mut [i16], mon: &mut M) {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let n4 = n / 4;
+    mon.ld32(n4 as u64);
+    mon.alu(2 * n4 as u64);
+    mon.st32(2 * n4 as u64);
+    let rem = n % 4;
+    mon.ld8(rem as u64);
+    mon.st16(rem as u64);
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s as i16;
+    }
+}
+
+/// Zero-fill a q15 run (padding region): 32-bit stores, 2 lanes each.
+#[inline]
+pub fn zero_run_q15<M: Monitor>(dst: &mut [i16], mon: &mut M) {
+    mon.st32(dst.len().div_ceil(2) as u64);
+    for v in dst.iter_mut() {
+        *v = 0;
+    }
+}
+
+/// Fill one im2col column for a (grouped) convolution patch: the
+/// `kernel×kernel×ch` window whose top-left input coordinate is
+/// `(oy - pad, ox - pad)`, channels `[ch0, ch0+ch)`, widened to q15.
+/// `buf.len() == kernel² · ch`.
+pub fn fill_patch_q15<M: Monitor>(
+    x: &Tensor,
+    oy: usize,
+    ox: usize,
+    kernel: usize,
+    pad: usize,
+    ch0: usize,
+    ch: usize,
+    buf: &mut [i16],
+    mon: &mut M,
+) {
+    debug_assert_eq!(buf.len(), kernel * kernel * ch);
+    let mut o = 0usize;
+    for i in 0..kernel {
+        let iy = oy as isize + i as isize - pad as isize;
+        for j in 0..kernel {
+            let ix = ox as isize + j as isize - pad as isize;
+            mon.branch(1); // bounds test per tap row
+            let dst = &mut buf[o..o + ch];
+            if iy < 0 || ix < 0 || iy >= x.shape.h as isize || ix >= x.shape.w as isize {
+                zero_run_q15(dst, mon);
+            } else {
+                let base = x.shape.idx(iy as usize, ix as usize, ch0);
+                widen_run_q15(&x.data[base..base + ch], dst, mon);
+            }
+            o += ch;
+        }
+    }
+}
+
+/// Fill one im2col column for *shift* convolution (§3.3: "modify the first
+/// step of im2col to sample a patch with different shifts for each input
+/// channel"). The column is `1×1×Cx`, but each channel reads from its own
+/// shifted coordinate — a scalar gather (one `ld8` + `st16` per channel,
+/// no 4-wide widening possible), which is why shift convolution's SIMD
+/// speedup comes from the matmul stage only.
+pub fn fill_patch_shifted_q15<M: Monitor>(
+    x: &Tensor,
+    oy: usize,
+    ox: usize,
+    shifts: &[(i8, i8)],
+    buf: &mut [i16],
+    mon: &mut M,
+) {
+    debug_assert_eq!(buf.len(), shifts.len());
+    for (m, &(a, b)) in shifts.iter().enumerate() {
+        let iy = oy as isize + a as isize;
+        let ix = ox as isize + b as isize;
+        mon.ld8(1); // shift-table byte
+        mon.branch(1);
+        if iy < 0 || ix < 0 || iy >= x.shape.h as isize || ix >= x.shape.w as isize {
+            buf[m] = 0;
+        } else {
+            mon.ld8(1);
+            buf[m] = x.at(iy as usize, ix as usize, m) as i16;
+        }
+        mon.st16(1);
+    }
+}
+
+/// CMSIS-NN `arm_nn_mat_mult_kernel_q7_q15`: two filter rows (`wa`, `wb`,
+/// q7 values pre-widened to i16 by the caller — a host-side optimization,
+/// §Perf iter 2; the *event stream* still models the in-loop `__SXTB16`
+/// widening of the MCU kernel) against two q15 columns, four accumulators.
+///
+/// Per 4 k-values: 2 × `ld32` weights (+2×2 SXTB16 widen), 4 × `ld32`
+/// columns, 8 × `__SMLAD` — 16 MACs from 6 loads. Returns
+/// `[a·A, a·B, b·A, b·B]` with biases pre-loaded.
+#[allow(clippy::too_many_arguments)]
+pub fn mat_mult_2x2<M: Monitor>(
+    wa: &[i16],
+    wb: &[i16],
+    pa: &[i16],
+    pb: &[i16],
+    bias_a: i32,
+    bias_b: i32,
+    mon: &mut M,
+) -> [i32; 4] {
+    let k = wa.len();
+    debug_assert!(wb.len() == k && pa.len() == k && pb.len() == k);
+    let k4 = k / 4;
+    // event accounting hoisted out of the compute loop (identical stream)
+    mon.ld32(2); // two bias loads
+    mon.ld32(6 * k4 as u64); // per block: wa, wb words + 4 column words
+    mon.alu(4 * k4 as u64); // 2×SXTB16 each weight word
+    mon.smlad(8 * k4 as u64);
+    mon.branch(k4 as u64);
+    let tail = (k - k4 * 4) as u64;
+    mon.ld8(2 * tail);
+    mon.ld16(2 * tail);
+    mon.mac(4 * tail);
+    mon.branch(tail);
+
+    // straight-line compute: local accumulators + chunked slices keep
+    // LLVM free of bounds checks and let it vectorize (§Perf iter 1)
+    let (mut a_a, mut a_b, mut b_a, mut b_b) = (bias_a, bias_a, bias_b, bias_b);
+    let mut wa_it = wa.chunks_exact(4);
+    let mut wb_it = wb.chunks_exact(4);
+    let mut pa_it = pa.chunks_exact(4);
+    let mut pb_it = pb.chunks_exact(4);
+    for (((cwa, cwb), cpa), cpb) in (&mut wa_it).zip(&mut wb_it).zip(&mut pa_it).zip(&mut pb_it) {
+        for t in 0..4 {
+            let (w0, w1) = (cwa[t] as i32, cwb[t] as i32);
+            let (p0, p1) = (cpa[t] as i32, cpb[t] as i32);
+            a_a += w0 * p0;
+            a_b += w0 * p1;
+            b_a += w1 * p0;
+            b_b += w1 * p1;
+        }
+    }
+    for (((w0, w1), p0), p1) in wa_it
+        .remainder()
+        .iter()
+        .zip(wb_it.remainder())
+        .zip(pa_it.remainder())
+        .zip(pb_it.remainder())
+    {
+        a_a += *w0 as i32 * *p0 as i32;
+        a_b += *w0 as i32 * *p1 as i32;
+        b_a += *w1 as i32 * *p0 as i32;
+        b_b += *w1 as i32 * *p1 as i32;
+    }
+    [a_a, a_b, b_a, b_b]
+}
+
+/// One filter row against two columns (odd-filter tail of the 2×2 kernel).
+pub fn mat_mult_1x2<M: Monitor>(
+    w: &[i16],
+    pa: &[i16],
+    pb: &[i16],
+    bias: i32,
+    mon: &mut M,
+) -> [i32; 2] {
+    let k = w.len();
+    mon.ld32(1);
+    let mut acc = [bias, bias];
+    let k4 = k / 4;
+    for blk in 0..k4 {
+        let o = blk * 4;
+        mon.ld32(1);
+        mon.alu(2);
+        mon.ld32(4);
+        mon.smlad(4);
+        mon.branch(1);
+        for t in 0..4 {
+            let i = o + t;
+            acc[0] += w[i] as i32 * pa[i] as i32;
+            acc[1] += w[i] as i32 * pb[i] as i32;
+        }
+    }
+    for i in k4 * 4..k {
+        mon.ld8(1);
+        mon.ld16(2);
+        mon.mac(2);
+        mon.branch(1);
+        acc[0] += w[i] as i32 * pa[i] as i32;
+        acc[1] += w[i] as i32 * pb[i] as i32;
+    }
+    acc
+}
+
+/// Two filter rows against one column (odd-pixel tail).
+pub fn mat_mult_2x1<M: Monitor>(
+    wa: &[i16],
+    wb: &[i16],
+    p: &[i16],
+    bias_a: i32,
+    bias_b: i32,
+    mon: &mut M,
+) -> [i32; 2] {
+    let k = wa.len();
+    mon.ld32(2);
+    let mut acc = [bias_a, bias_b];
+    let k4 = k / 4;
+    for blk in 0..k4 {
+        let o = blk * 4;
+        mon.ld32(2);
+        mon.alu(4);
+        mon.ld32(2);
+        mon.smlad(4);
+        mon.branch(1);
+        for t in 0..4 {
+            let i = o + t;
+            acc[0] += wa[i] as i32 * p[i] as i32;
+            acc[1] += wb[i] as i32 * p[i] as i32;
+        }
+    }
+    for i in k4 * 4..k {
+        mon.ld8(2);
+        mon.ld16(1);
+        mon.mac(2);
+        mon.branch(1);
+        acc[0] += wa[i] as i32 * p[i] as i32;
+        acc[1] += wb[i] as i32 * p[i] as i32;
+    }
+    acc
+}
+
+/// One filter row against one column (final scalar corner).
+pub fn mat_mult_1x1<M: Monitor>(w: &[i16], p: &[i16], bias: i32, mon: &mut M) -> i32 {
+    let k = w.len();
+    mon.ld32(1);
+    let mut acc = bias;
+    let k4 = k / 4;
+    for blk in 0..k4 {
+        let o = blk * 4;
+        mon.ld32(1);
+        mon.alu(2);
+        mon.ld32(2);
+        mon.smlad(2);
+        mon.branch(1);
+        for t in 0..4 {
+            let i = o + t;
+            acc += w[i] as i32 * p[i] as i32;
+        }
+    }
+    for i in k4 * 4..k {
+        mon.ld8(1);
+        mon.ld16(1);
+        mon.mac(1);
+        mon.branch(1);
+        acc += w[i] as i32 * p[i] as i32;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::nn::tensor::{Shape, Tensor};
+    use crate::quant::QParam;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn widen_preserves_values_and_counts_words() {
+        let src: Vec<i8> = vec![-128, -1, 0, 1, 127, 5, -5];
+        let mut dst = vec![0i16; 7];
+        let mut mon = CountingMonitor::new();
+        widen_run_q15(&src, &mut dst, &mut mon);
+        assert_eq!(dst, vec![-128i16, -1, 0, 1, 127, 5, -5]);
+        assert_eq!(mon.counts.ld32, 1); // 4 of 7 via one word
+        assert_eq!(mon.counts.ld8, 3);
+        assert_eq!(mon.counts.st32, 2);
+        assert_eq!(mon.counts.st16, 3);
+    }
+
+    #[test]
+    fn fill_patch_matches_padded_reads() {
+        check(
+            "im2col-patch",
+            48,
+            |rng, _| {
+                let c = rng.range(1, 8);
+                let h = rng.range(3, 7);
+                let k = [1usize, 3][rng.range(0, 1)];
+                let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+                rng.fill_i8(&mut t.data, -20, 20);
+                let oy = rng.range(0, h - 1);
+                let ox = rng.range(0, h - 1);
+                (t, oy, ox, k)
+            },
+            |(t, oy, ox, k)| {
+                let c = t.shape.c;
+                let mut buf = vec![0i16; k * k * c];
+                fill_patch_q15(t, *oy, *ox, *k, k / 2, 0, c, &mut buf, &mut NoopMonitor);
+                let mut o = 0;
+                for i in 0..*k {
+                    for j in 0..*k {
+                        for m in 0..c {
+                            let iy = *oy as isize + i as isize - (*k / 2) as isize;
+                            let ix = *ox as isize + j as isize - (*k / 2) as isize;
+                            let want = t.at_padded(iy, ix, m) as i16;
+                            if buf[o] != want {
+                                return Err(format!("patch[{o}] = {} want {want}", buf[o]));
+                            }
+                            o += 1;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mat_mult_2x2_is_dot_products() {
+        check(
+            "matmult-2x2",
+            64,
+            |rng, _| {
+                let k = rng.range(1, 24);
+                let wa: Vec<i16> = (0..k).map(|_| rng.i8_range(-20, 20) as i16).collect();
+                let wb: Vec<i16> = (0..k).map(|_| rng.i8_range(-20, 20) as i16).collect();
+                let pa: Vec<i16> = (0..k).map(|_| rng.i8_range(-30, 30) as i16).collect();
+                let pb: Vec<i16> = (0..k).map(|_| rng.i8_range(-30, 30) as i16).collect();
+                (wa, wb, pa, pb)
+            },
+            |(wa, wb, pa, pb)| {
+                let dot = |w: &[i16], p: &[i16]| -> i32 {
+                    w.iter().zip(p).map(|(&a, &b)| a as i32 * b as i32).sum()
+                };
+                let acc = mat_mult_2x2(wa, wb, pa, pb, 3, -7, &mut NoopMonitor);
+                ensure(acc[0] == 3 + dot(wa, pa), "aA")?;
+                ensure(acc[1] == 3 + dot(wa, pb), "aB")?;
+                ensure(acc[2] == -7 + dot(wb, pa), "bA")?;
+                ensure(acc[3] == -7 + dot(wb, pb), "bB")
+            },
+        );
+    }
+
+    #[test]
+    fn mat_mult_tails_match_2x2() {
+        let mut rng = Rng::new(77);
+        let k = 13usize; // exercises the %4 tail
+        let wa: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+        let wb: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+        let pa: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+        let pb: Vec<i16> = (0..k).map(|_| rng.i8_range(-10, 10) as i16).collect();
+        let full = mat_mult_2x2(&wa, &wb, &pa, &pb, 0, 0, &mut NoopMonitor);
+        let h12 = mat_mult_1x2(&wa, &pa, &pb, 0, &mut NoopMonitor);
+        let h21 = mat_mult_2x1(&wa, &wb, &pa, 0, 0, &mut NoopMonitor);
+        let h11 = mat_mult_1x1(&wb, &pb, 0, &mut NoopMonitor);
+        assert_eq!([h12[0], h12[1]], [full[0], full[1]]);
+        assert_eq!([h21[0], h21[1]], [full[0], full[2]]);
+        assert_eq!(h11, full[3]);
+    }
+
+    #[test]
+    fn smlad_count_is_macs_over_two() {
+        // K divisible by 4: all MACs go through SMLAD, 2 per instruction.
+        let k = 16usize;
+        let wa = vec![1i16; k];
+        let wb = vec![2i16; k];
+        let pa = vec![1i16; k];
+        let pb = vec![1i16; k];
+        let mut mon = CountingMonitor::new();
+        mat_mult_2x2(&wa, &wb, &pa, &pb, 0, 0, &mut mon);
+        // 4 accumulators × k MACs = 64 MACs = 32 SMLADs
+        assert_eq!(mon.counts.smlad, 32);
+        assert_eq!(mon.counts.mac, 0);
+        // loads: per 4 k: 6 ld32 → 24, + 2 bias
+        assert_eq!(mon.counts.ld32, 26);
+    }
+
+    #[test]
+    fn shifted_fill_respects_per_channel_offsets() {
+        let mut t = Tensor::zeros(Shape::new(3, 3, 2), QParam::new(7));
+        for y in 0..3 {
+            for x in 0..3 {
+                t.set(y, x, 0, (10 * y + x) as i8);
+                t.set(y, x, 1, -((10 * y + x) as i8));
+            }
+        }
+        let shifts = [(1i8, 0i8), (0i8, -1i8)];
+        let mut buf = [0i16; 2];
+        fill_patch_shifted_q15(&t, 1, 1, &shifts, &mut buf, &mut NoopMonitor);
+        assert_eq!(buf[0], 21); // X[2,1,0]
+        assert_eq!(buf[1], -10); // X[1,0,1]
+        // border → zero
+        fill_patch_shifted_q15(&t, 2, 2, &shifts, &mut buf, &mut NoopMonitor);
+        assert_eq!(buf[0], 0);
+    }
+}

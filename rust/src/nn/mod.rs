@@ -1,0 +1,29 @@
+//! The NNoM-equivalent int8 inference engine: the five convolution
+//! primitives (§2.2) in scalar and SIMD (`__SMLAD`) variants, glue layers,
+//! and a sequential model graph — all generic over a [`Monitor`] so the
+//! same code serves both the deployment hot path (zero-cost
+//! [`NoopMonitor`]) and the characterization harness
+//! ([`CountingMonitor`] → [`crate::mcu`] cycle/energy models).
+
+pub mod add_conv;
+pub mod blocking;
+pub mod bn;
+pub mod conv;
+pub mod depthwise;
+pub mod graph;
+pub mod im2col;
+pub mod monitor;
+pub mod ops;
+pub mod shift;
+pub mod simd;
+pub mod tensor;
+
+pub use add_conv::AddConv;
+pub use bn::{BatchNorm, BnLayer};
+pub use conv::QuantConv;
+pub use depthwise::QuantDepthwise;
+pub use graph::{Layer, LayerProfile, Model};
+pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
+pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
+pub use shift::{uniform_shifts, ShiftConv};
+pub use tensor::{Shape, Tensor};

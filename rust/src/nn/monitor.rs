@@ -1,0 +1,224 @@
+//! Execution monitoring: the engine's kernels emit micro-op events
+//! (loads, stores, multiply-accumulates, `__SMLAD`s, ALU ops, branches) as
+//! they compute. A [`Monitor`] receives them; [`NoopMonitor`] compiles to
+//! nothing (the deployment hot path), [`CountingMonitor`] accumulates an
+//! [`OpCounts`] vector that the [`crate::mcu`] simulator maps to cycles,
+//! power and energy — the substitution for the paper's on-board
+//! measurements (DESIGN.md §2).
+//!
+//! The instrumentation convention mirrors the compiled inner loops of
+//! NNoM / CMSIS-NN at `-Os`:
+//! * scalar conv MAC: `ld8(x) + ld8(w) + mac` and one `branch` per
+//!   innermost iteration;
+//! * SIMD matmul step (2 patches × 2 filters × 2 k-values):
+//!   4 × `ld32` + 4 × `smlad` + widening ALU ops, one `branch`;
+//! * requantization per output: shift + saturate (`alu`) + `st8`.
+//!
+//! "Memory accesses" for the paper's Fig. 3 are *events* (one `ld32`
+//! counts as one access), which is exactly the quantity the authors count
+//! — the data-reuse win of the SIMD path is fewer, wider accesses.
+
+/// Micro-op event sink. All methods take an event multiplicity `n` so
+/// kernels can hoist counting out of unrolled bodies.
+pub trait Monitor {
+    #[inline(always)]
+    fn ld8(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn ld16(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn ld32(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn st8(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn st16(&mut self, _n: u64) {}
+    #[inline(always)]
+    fn st32(&mut self, _n: u64) {}
+    /// Scalar multiply or multiply-accumulate (MUL/MLA — 1 cycle on M4).
+    #[inline(always)]
+    fn mac(&mut self, _n: u64) {}
+    /// Dual 16-bit multiply-accumulate (`__SMLAD` — 1 cycle, 2 MACs).
+    #[inline(always)]
+    fn smlad(&mut self, _n: u64) {}
+    /// Single-cycle ALU op (add, sub, shift, abs, sat, pack/unpack).
+    #[inline(always)]
+    fn alu(&mut self, _n: u64) {}
+    /// Conditional branch (loop back-edges; taken ⇒ pipeline refill on M4).
+    #[inline(always)]
+    fn branch(&mut self, _n: u64) {}
+}
+
+/// Zero-cost monitor for the deployment hot path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopMonitor;
+impl Monitor for NoopMonitor {}
+
+/// Micro-op event counts for one (part of an) inference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub ld8: u64,
+    pub ld16: u64,
+    pub ld32: u64,
+    pub st8: u64,
+    pub st16: u64,
+    pub st32: u64,
+    pub mac: u64,
+    pub smlad: u64,
+    pub alu: u64,
+    pub branch: u64,
+}
+
+impl OpCounts {
+    /// Total number of memory-access *events* (the Fig. 3 quantity).
+    pub fn mem_accesses(&self) -> u64 {
+        self.ld8 + self.ld16 + self.ld32 + self.st8 + self.st16 + self.st32
+    }
+
+    /// Total load events.
+    pub fn loads(&self) -> u64 {
+        self.ld8 + self.ld16 + self.ld32
+    }
+
+    /// Total store events.
+    pub fn stores(&self) -> u64 {
+        self.st8 + self.st16 + self.st32
+    }
+
+    /// Effective multiply-accumulate work (a `__SMLAD` performs 2 MACs).
+    pub fn effective_macs(&self) -> u64 {
+        self.mac + 2 * self.smlad
+    }
+
+    /// Total compute (non-memory) ops.
+    pub fn compute_ops(&self) -> u64 {
+        self.mac + self.smlad + self.alu
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &OpCounts) -> OpCounts {
+        OpCounts {
+            ld8: self.ld8 + other.ld8,
+            ld16: self.ld16 + other.ld16,
+            ld32: self.ld32 + other.ld32,
+            st8: self.st8 + other.st8,
+            st16: self.st16 + other.st16,
+            st32: self.st32 + other.st32,
+            mac: self.mac + other.mac,
+            smlad: self.smlad + other.smlad,
+            alu: self.alu + other.alu,
+            branch: self.branch + other.branch,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == OpCounts::default()
+    }
+}
+
+/// Monitor that accumulates an [`OpCounts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CountingMonitor {
+    pub counts: OpCounts,
+}
+
+impl CountingMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn take(&mut self) -> OpCounts {
+        std::mem::take(&mut self.counts)
+    }
+}
+
+impl Monitor for CountingMonitor {
+    #[inline(always)]
+    fn ld8(&mut self, n: u64) {
+        self.counts.ld8 += n;
+    }
+    #[inline(always)]
+    fn ld16(&mut self, n: u64) {
+        self.counts.ld16 += n;
+    }
+    #[inline(always)]
+    fn ld32(&mut self, n: u64) {
+        self.counts.ld32 += n;
+    }
+    #[inline(always)]
+    fn st8(&mut self, n: u64) {
+        self.counts.st8 += n;
+    }
+    #[inline(always)]
+    fn st16(&mut self, n: u64) {
+        self.counts.st16 += n;
+    }
+    #[inline(always)]
+    fn st32(&mut self, n: u64) {
+        self.counts.st32 += n;
+    }
+    #[inline(always)]
+    fn mac(&mut self, n: u64) {
+        self.counts.mac += n;
+    }
+    #[inline(always)]
+    fn smlad(&mut self, n: u64) {
+        self.counts.smlad += n;
+    }
+    #[inline(always)]
+    fn alu(&mut self, n: u64) {
+        self.counts.alu += n;
+    }
+    #[inline(always)]
+    fn branch(&mut self, n: u64) {
+        self.counts.branch += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_accumulates() {
+        let mut m = CountingMonitor::new();
+        m.ld8(3);
+        m.ld32(2);
+        m.mac(5);
+        m.smlad(4);
+        m.st8(1);
+        assert_eq!(m.counts.mem_accesses(), 6);
+        assert_eq!(m.counts.effective_macs(), 5 + 8);
+        assert_eq!(m.counts.loads(), 5);
+        assert_eq!(m.counts.stores(), 1);
+    }
+
+    #[test]
+    fn add_is_elementwise() {
+        let mut a = CountingMonitor::new();
+        a.ld8(1);
+        a.alu(2);
+        let mut b = CountingMonitor::new();
+        b.ld8(10);
+        b.branch(3);
+        let s = a.counts.add(&b.counts);
+        assert_eq!(s.ld8, 11);
+        assert_eq!(s.alu, 2);
+        assert_eq!(s.branch, 3);
+    }
+
+    #[test]
+    fn take_resets() {
+        let mut m = CountingMonitor::new();
+        m.mac(7);
+        let c = m.take();
+        assert_eq!(c.mac, 7);
+        assert!(m.counts.is_zero());
+    }
+
+    #[test]
+    fn noop_is_inert() {
+        let mut m = NoopMonitor;
+        m.ld8(100);
+        m.smlad(100);
+        // nothing to observe — the point is that this compiles to nothing
+    }
+}

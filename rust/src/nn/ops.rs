@@ -1,0 +1,294 @@
+//! Pointwise / pooling / activation / dense layers — the glue NNoM layers
+//! needed to run whole models (the paper's single-layer experiments wrap
+//! these around the primitive under test; the end-to-end example uses the
+//! full set).
+
+use crate::quant::{conv_out_shift, requantize, sat_i8, QParam};
+
+use super::monitor::Monitor;
+use super::tensor::{Shape, Tensor};
+
+/// ReLU on int8 activations (in-place format: q unchanged).
+pub fn relu<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
+    let mut y = Tensor::zeros(x.shape, x.q);
+    for i in 0..x.data.len() {
+        mon.ld8(1);
+        mon.alu(1);
+        mon.st8(1);
+        y.data[i] = x.data[i].max(0);
+    }
+    y
+}
+
+/// 2×2 max-pooling with stride 2 (NNoM `local_maxpool_q7_HWC`).
+/// Odd trailing rows/cols are truncated (floor semantics).
+pub fn maxpool2<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
+    let oh = x.shape.h / 2;
+    let ow = x.shape.w / 2;
+    let mut y = Tensor::zeros(Shape::new(oh, ow, x.shape.c), x.q);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..x.shape.c {
+                mon.ld8(4);
+                mon.alu(3);
+                mon.st8(1);
+                let m = x
+                    .at(2 * oy, 2 * ox, c)
+                    .max(x.at(2 * oy, 2 * ox + 1, c))
+                    .max(x.at(2 * oy + 1, 2 * ox, c))
+                    .max(x.at(2 * oy + 1, 2 * ox + 1, c));
+                y.set(oy, ox, c, m);
+            }
+        }
+    }
+    y
+}
+
+/// Global average pooling (NNoM `local_avepool_q7_HWC` over the full
+/// map) with an **output shift**: averaging shrinks magnitudes, so NNoM
+/// re-scales pooled activations to a finer output format
+/// (`shift = frac_out − frac_in`, applied to the accumulated sum before
+/// the division to keep precision). `q_out = None` keeps the input
+/// format.
+pub fn global_avgpool<M: Monitor>(x: &Tensor, q_out: Option<QParam>, mon: &mut M) -> Tensor {
+    let n = (x.shape.h * x.shape.w) as i32;
+    let q_out = q_out.unwrap_or(x.q);
+    let shift = q_out.frac_bits - x.q.frac_bits;
+    let mut y = Tensor::zeros(Shape::new(1, 1, x.shape.c), q_out);
+    for c in 0..x.shape.c {
+        let mut acc: i32 = 0;
+        for yy in 0..x.shape.h {
+            for xx in 0..x.shape.w {
+                mon.ld8(1);
+                mon.alu(1);
+                acc += x.at(yy, xx, c) as i32;
+            }
+        }
+        mon.alu(3);
+        mon.st8(1);
+        let scaled = requantize(acc, -shift); // left shift for finer out
+        y.set(0, 0, c, sat_i8(scaled / n));
+    }
+    y
+}
+
+/// Quantized fully-connected layer (NNoM `local_fully_connected_q7`).
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    pub in_features: usize,
+    pub out_features: usize,
+    /// Weights `[out_features][in_features]`.
+    pub weights: Vec<i8>,
+    /// Bias at accumulator scale.
+    pub bias: Vec<i32>,
+    pub q_in: QParam,
+    pub q_w: QParam,
+    pub q_out: QParam,
+}
+
+impl QuantDense {
+    pub fn out_shift(&self) -> i32 {
+        conv_out_shift(self.q_in.frac_bits, self.q_w.frac_bits, self.q_out.frac_bits)
+    }
+
+    /// Scalar path.
+    pub fn forward_scalar<M: Monitor>(&self, x: &[i8], mon: &mut M) -> Vec<i8> {
+        assert_eq!(x.len(), self.in_features);
+        let shift = self.out_shift();
+        let mut out = vec![0i8; self.out_features];
+        for (n, o) in out.iter_mut().enumerate() {
+            mon.ld32(1);
+            let mut acc = self.bias[n];
+            let row = &self.weights[n * self.in_features..(n + 1) * self.in_features];
+            for (xi, wi) in x.iter().zip(row) {
+                acc += *xi as i32 * *wi as i32;
+            }
+            mon.ld8(2 * self.in_features as u64);
+            mon.mac(self.in_features as u64);
+            mon.branch(self.in_features as u64);
+            mon.alu(2);
+            mon.st8(1);
+            *o = sat_i8(requantize(acc, shift));
+        }
+        out
+    }
+
+    /// SIMD path (CMSIS `arm_fully_connected_q7_opt` shape): the input
+    /// vector is widened to q15 once, then rows are consumed pairwise with
+    /// `__SMLAD`. Bit-exact with the scalar path.
+    pub fn forward_simd<M: Monitor>(&self, x: &[i8], mon: &mut M) -> Vec<i8> {
+        assert_eq!(x.len(), self.in_features);
+        let shift = self.out_shift();
+        let mut out = vec![0i8; self.out_features];
+        // widen input once (amortized across all rows)
+        let mut xq = vec![0i16; self.in_features];
+        super::im2col::widen_run_q15(x, &mut xq, mon);
+        // host-side pre-widened weights (§Perf; events unchanged)
+        let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+
+        let mut n = 0usize;
+        while n + 1 < self.out_features {
+            let ra = &wq[n * self.in_features..(n + 1) * self.in_features];
+            let rb = &wq[(n + 1) * self.in_features..(n + 2) * self.in_features];
+            let acc =
+                super::im2col::mat_mult_2x1(ra, rb, &xq, self.bias[n], self.bias[n + 1], mon);
+            mon.alu(4);
+            mon.st8(2);
+            out[n] = sat_i8(requantize(acc[0], shift));
+            out[n + 1] = sat_i8(requantize(acc[1], shift));
+            n += 2;
+        }
+        if n < self.out_features {
+            let row = &wq[n * self.in_features..(n + 1) * self.in_features];
+            let acc = super::im2col::mat_mult_1x1(row, &xq, self.bias[n], mon);
+            mon.alu(2);
+            mon.st8(1);
+            out[n] = sat_i8(requantize(acc, shift));
+        }
+        out
+    }
+
+    pub fn forward<M: Monitor>(&self, x: &[i8], simd: bool, mon: &mut M) -> Vec<i8> {
+        if simd {
+            self.forward_simd(x, mon)
+        } else {
+            self.forward_scalar(x, mon)
+        }
+    }
+}
+
+/// Integer argmax (classification head; replaces softmax at inference).
+pub fn argmax(x: &[i8]) -> usize {
+    x.iter()
+        .enumerate()
+        .max_by_key(|(i, &v)| (v, std::cmp::Reverse(*i)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure_eq_i8};
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = Tensor::zeros(Shape::new(1, 2, 2), QParam::new(7));
+        x.data = vec![-5, 3, 0, -128];
+        let y = relu(&x, &mut NoopMonitor);
+        assert_eq!(y.data, vec![0, 3, 0, 0]);
+    }
+
+    #[test]
+    fn maxpool_picks_window_max() {
+        let mut x = Tensor::zeros(Shape::new(2, 2, 1), QParam::new(7));
+        x.data = vec![1, -9, 4, 2];
+        let y = maxpool2(&x, &mut NoopMonitor);
+        assert_eq!(y.shape, Shape::new(1, 1, 1));
+        assert_eq!(y.data, vec![4]);
+    }
+
+    #[test]
+    fn maxpool_truncates_odd_dims() {
+        let x = Tensor::zeros(Shape::new(5, 5, 2), QParam::new(7));
+        let y = maxpool2(&x, &mut NoopMonitor);
+        assert_eq!(y.shape, Shape::new(2, 2, 2));
+    }
+
+    #[test]
+    fn global_avgpool_averages() {
+        let mut x = Tensor::zeros(Shape::new(2, 2, 1), QParam::new(7));
+        x.data = vec![4, 8, 12, 16];
+        let y = global_avgpool(&x, None, &mut NoopMonitor);
+        assert_eq!(y.data, vec![10]);
+    }
+
+    #[test]
+    fn dense_simd_bit_exact_with_scalar() {
+        check(
+            "dense-simd-vs-scalar",
+            64,
+            |rng, _| {
+                let fin = rng.range(1, 40);
+                let fout = rng.range(1, 12);
+                let mut w = vec![0i8; fin * fout];
+                rng.fill_i8(&mut w, -16, 16);
+                let d = QuantDense {
+                    in_features: fin,
+                    out_features: fout,
+                    weights: w,
+                    bias: (0..fout).map(|_| rng.range(0, 64) as i32 - 32).collect(),
+                    q_in: QParam::new(7),
+                    q_w: QParam::new(7),
+                    q_out: QParam::new(5),
+                };
+                let mut x = vec![0i8; fin];
+                rng.fill_i8(&mut x, -32, 32);
+                (d, x)
+            },
+            |(d, x)| {
+                let a = d.forward_scalar(x, &mut NoopMonitor);
+                let b = d.forward_simd(x, &mut NoopMonitor);
+                ensure_eq_i8(&a, &b, "dense simd vs scalar")
+            },
+        );
+    }
+
+    #[test]
+    fn dense_known_values() {
+        let d = QuantDense {
+            in_features: 2,
+            out_features: 2,
+            weights: vec![1, 2, 3, 4],
+            bias: vec![0, 10],
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(14), // zero shift
+        };
+        let y = d.forward_scalar(&[5, -3], &mut NoopMonitor);
+        assert_eq!(y, vec![sat_i8(5 - 6), sat_i8(15 - 12 + 10)]);
+    }
+
+    #[test]
+    fn dense_simd_fewer_accesses() {
+        let mut rng = Rng::new(9);
+        let fin = 128usize;
+        let fout = 10usize;
+        let mut w = vec![0i8; fin * fout];
+        rng.fill_i8(&mut w, -8, 8);
+        let d = QuantDense {
+            in_features: fin,
+            out_features: fout,
+            weights: w,
+            bias: vec![0; fout],
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        };
+        let mut x = vec![0i8; fin];
+        rng.fill_i8(&mut x, -8, 8);
+        let mut ms = CountingMonitor::new();
+        let mut mv = CountingMonitor::new();
+        d.forward_scalar(&x, &mut ms);
+        d.forward_simd(&x, &mut mv);
+        assert!(mv.counts.mem_accesses() * 2 < ms.counts.mem_accesses());
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn avgpool_counts_events() {
+        let x = Tensor::zeros(Shape::new(4, 4, 3), QParam::new(7));
+        let mut mon = CountingMonitor::new();
+        global_avgpool(&x, None, &mut mon);
+        assert_eq!(mon.counts.ld8, 4 * 4 * 3);
+        assert_eq!(mon.counts.st8, 3);
+    }
+}

@@ -1,0 +1,283 @@
+//! Shift convolution (Eq. 2, Jeon & Kim): each input channel is spatially
+//! shifted by an assigned offset `(α_m, β_m)`, then a pointwise (1×1)
+//! convolution mixes channels. The shift itself is MAC-free — the paper's
+//! Table 1 charges only the pointwise MACs (`Cx·Cy·Hy²`).
+//!
+//! Scalar path: fused — the pointwise tap reads directly from the shifted
+//! coordinate (no intermediate feature map, exactly how our NNoM port does
+//! it to avoid the extra SRAM buffer). SIMD path ([`super::simd`]): the
+//! paper's §3.3 "modify the first step of im2col to sample a patch with
+//! different shifts for each input channel", then the standard 2×2 matmul.
+
+use crate::quant::{requantize, sat_i8, QParam};
+
+use super::monitor::Monitor;
+use super::tensor::{Shape, Tensor};
+
+/// Per-channel spatial shift assignment.
+///
+/// The reference heuristic (Jeon & Kim's grouped-shift init) distributes
+/// channels uniformly over the `kernel×kernel` offset grid, centered.
+pub fn uniform_shifts(channels: usize, kernel: usize) -> Vec<(i8, i8)> {
+    let k = kernel as i32;
+    let half = k / 2;
+    (0..channels)
+        .map(|m| {
+            let cell = (m % (kernel * kernel)) as i32;
+            let dy = cell / k - half;
+            let dx = cell % k - half;
+            (dy as i8, dx as i8)
+        })
+        .collect()
+}
+
+/// A quantized shift-convolution layer.
+#[derive(Clone, Debug)]
+pub struct ShiftConv {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    /// Per-channel `(α, β)` shift offsets (the "2 parameters" per channel
+    /// of Table 1).
+    pub shifts: Vec<(i8, i8)>,
+    /// Pointwise weights `[out_channels][in_channels]`.
+    pub weights: Vec<i8>,
+    /// Bias at accumulator scale.
+    pub bias: Vec<i32>,
+    pub q_in: QParam,
+    pub q_w: QParam,
+    pub q_out: QParam,
+}
+
+impl ShiftConv {
+    #[inline]
+    pub fn out_shift(&self) -> i32 {
+        crate::quant::conv_out_shift(self.q_in.frac_bits, self.q_w.frac_bits, self.q_out.frac_bits)
+    }
+
+    pub fn validate(&self, input: &Shape) -> Result<(), String> {
+        if input.c != self.in_channels {
+            return Err(format!("input channels {} != {}", input.c, self.in_channels));
+        }
+        if self.shifts.len() != self.in_channels {
+            return Err("shifts length mismatch".into());
+        }
+        if self.weights.len() != self.in_channels * self.out_channels {
+            return Err("weight length mismatch".into());
+        }
+        if self.bias.len() != self.out_channels {
+            return Err("bias length mismatch".into());
+        }
+        Ok(())
+    }
+
+    /// Shift conv preserves spatial dims (Eq. 2: `∀k,l ∈ [1,Hx]`).
+    pub fn output_shape(&self, input: &Shape) -> Shape {
+        Shape::new(input.h, input.w, self.out_channels)
+    }
+
+    /// Materialize the shifted intermediate feature map `I` (Eq. 2) —
+    /// used by tests and by the im2col SIMD path's reference semantics.
+    pub fn shifted_input(&self, x: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(x.shape, x.q);
+        for y in 0..x.shape.h {
+            for xx in 0..x.shape.w {
+                for m in 0..self.in_channels {
+                    let (a, b) = self.shifts[m];
+                    let v = x.at_padded(y as isize + a as isize, xx as isize + b as isize, m);
+                    out.set(y, xx, m, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Scalar path, NNoM layer structure (§3.3): stage 1 materializes the
+    /// shifted intermediate map `I` (Eq. 2 — one shift-table read, one
+    /// bounds check, one copy per element: MAC-free), stage 2 is a plain
+    /// pointwise convolution over `I`. Keeping the pointwise loop
+    /// identical to the standard convolution's inner loop is what makes
+    /// shift convolution sit on the same MACs↔latency line as the other
+    /// multiplicative primitives (§4.1).
+    pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid shift-conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+
+        // stage 1: shift (Eq. 2) — per element: shift-table ld8, bounds
+        // branch, data ld8, st8
+        let mut inter = Tensor::zeros(x.shape, x.q);
+        for yy in 0..x.shape.h {
+            for xx in 0..x.shape.w {
+                for m in 0..self.in_channels {
+                    let (a, b) = self.shifts[m];
+                    let iy = yy as isize + a as isize;
+                    let ix = xx as isize + b as isize;
+                    mon.ld8(1); // packed (α,β) table byte
+                    mon.branch(1);
+                    mon.st8(1);
+                    if iy < 0 || ix < 0 || iy >= x.shape.h as isize || ix >= x.shape.w as isize {
+                        continue;
+                    }
+                    mon.ld8(1);
+                    inter.set(yy, xx, m, x.at(iy as usize, ix as usize, m));
+                }
+            }
+        }
+
+        // stage 2: pointwise convolution over I — the standard inner loop
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                let ibase = inter.shape.idx(oy, ox, 0);
+                for n in 0..self.out_channels {
+                    mon.ld32(1); // bias
+                    let mut acc: i32 = self.bias[n];
+                    let wbase = n * self.in_channels;
+                    for m in 0..self.in_channels {
+                        acc += inter.data[ibase + m] as i32 * self.weights[wbase + m] as i32;
+                    }
+                    mon.ld8(2 * self.in_channels as u64);
+                    mon.mac(self.in_channels as u64);
+                    mon.branch(self.in_channels as u64);
+                    mon.alu(2);
+                    mon.st8(1);
+                    y.set(oy, ox, n, sat_i8(requantize(acc, shift)));
+                }
+            }
+        }
+        y
+    }
+
+    /// Unfused reference: materialize `I`, then run a plain pointwise
+    /// convolution over it. Must agree with the fused path bit-for-bit.
+    pub fn forward_unfused_reference(&self, x: &Tensor) -> Tensor {
+        let i = self.shifted_input(x);
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                for n in 0..self.out_channels {
+                    let mut acc: i32 = self.bias[n];
+                    for m in 0..self.in_channels {
+                        acc += i.at(oy, ox, m) as i32 * self.weights[n * self.in_channels + m] as i32;
+                    }
+                    y.set(oy, ox, n, sat_i8(requantize(acc, shift)));
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure_eq_i8};
+
+    pub(crate) fn random_shift_conv(rng: &mut Rng, cin: usize, cout: usize, kernel: usize) -> ShiftConv {
+        let mut weights = vec![0i8; cin * cout];
+        rng.fill_i8(&mut weights, -8, 8);
+        ShiftConv {
+            in_channels: cin,
+            out_channels: cout,
+            shifts: uniform_shifts(cin, kernel),
+            weights,
+            bias: (0..cout).map(|_| rng.range(0, 32) as i32 - 16).collect(),
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }
+    }
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    #[test]
+    fn uniform_shifts_cover_grid_centered() {
+        let s = uniform_shifts(9, 3);
+        assert_eq!(s[0], (-1, -1));
+        assert_eq!(s[4], (0, 0));
+        assert_eq!(s[8], (1, 1));
+        // wraps around for channels > k²
+        let s2 = uniform_shifts(10, 3);
+        assert_eq!(s2[9], (-1, -1));
+    }
+
+    #[test]
+    fn zero_shift_equals_pointwise() {
+        use crate::nn::conv::QuantConv;
+        let mut rng = Rng::new(7);
+        let (cin, cout, h) = (6usize, 5usize, 4usize);
+        let mut sc = random_shift_conv(&mut rng, cin, cout, 3);
+        sc.shifts = vec![(0, 0); cin];
+        let pw = QuantConv {
+            kernel: 1,
+            groups: 1,
+            in_channels: cin,
+            out_channels: cout,
+            pad: 0,
+            weights: sc.weights.clone(),
+            bias: sc.bias.clone(),
+            q_in: sc.q_in,
+            q_w: sc.q_w,
+            q_out: sc.q_out,
+        };
+        let x = random_input(&mut rng, h, cin);
+        let a = sc.forward_scalar(&x, &mut NoopMonitor);
+        let b = pw.forward_scalar(&x, &mut NoopMonitor);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn fused_matches_unfused_reference() {
+        check(
+            "shift-fused-vs-unfused",
+            48,
+            |rng, _| {
+                let cin = rng.range(1, 10);
+                let cout = rng.range(1, 10);
+                let h = rng.range(3, 8);
+                (random_shift_conv(rng, cin, cout, 3), random_input(rng, h, cin))
+            },
+            |(sc, x)| {
+                let a = sc.forward_scalar(x, &mut NoopMonitor);
+                let b = sc.forward_unfused_reference(x);
+                ensure_eq_i8(&a.data, &b.data, "shift fused vs unfused")
+            },
+        );
+    }
+
+    #[test]
+    fn shifted_input_moves_content() {
+        let mut sc = random_shift_conv(&mut Rng::new(1), 1, 1, 3);
+        sc.shifts = vec![(1, 0)]; // I[k,l] = X[k+1,l]
+        let mut x = Tensor::zeros(Shape::new(3, 1, 1), QParam::new(7));
+        x.data = vec![10, 20, 30];
+        let i = sc.shifted_input(&x);
+        assert_eq!(i.data, vec![20, 30, 0]);
+    }
+
+    #[test]
+    fn mac_count_matches_table1() {
+        // interior-only when all shifts in bounds: Cx·Cy·Hy² MACs; with
+        // border clipping the count is ≤ theory.
+        let mut rng = Rng::new(3);
+        let (cin, cout, h) = (9usize, 8usize, 8usize);
+        let sc = random_shift_conv(&mut rng, cin, cout, 3);
+        let x = random_input(&mut rng, h, cin);
+        let mut mon = CountingMonitor::new();
+        sc.forward_scalar(&x, &mut mon);
+        let theory = (cin * cout * h * h) as u64;
+        assert!(mon.counts.mac <= theory);
+        assert!(mon.counts.mac > theory * 8 / 10);
+    }
+}
+
+#[cfg(test)]
+pub(crate) use tests::random_shift_conv as test_random_shift_conv;

@@ -1,0 +1,335 @@
+//! SIMD (`__SMLAD`) forward paths — the paper's §3.3 implementations:
+//! im2col with 2-patch buffering, matmul over 2 filters at a time.
+//!
+//! * standard / grouped convolution: CMSIS-NN `arm_convolve_HWC_q7`
+//!   structure, applied per group ("for grouped convolution, we apply
+//!   Lai et al.'s algorithm to each group");
+//! * shift convolution: the modified im2col sampling (per-channel shifts)
+//!   followed by the same matmul;
+//! * depthwise-separable: the depthwise stage lives in
+//!   [`super::depthwise`], the pointwise stage is `kernel == 1` here;
+//! * add convolution: **no SIMD variant** (§3.3).
+//!
+//! All SIMD paths are bit-exact with their scalar counterparts — only the
+//! micro-op event stream differs (that equivalence is property-tested).
+
+use crate::quant::{requantize, sat_i8};
+
+use super::conv::QuantConv;
+use super::im2col::{
+    fill_patch_q15, fill_patch_shifted_q15, mat_mult_1x1, mat_mult_1x2, mat_mult_2x1,
+    mat_mult_2x2,
+};
+use super::monitor::Monitor;
+use super::shift::ShiftConv;
+use super::tensor::Tensor;
+
+impl QuantConv {
+    /// SIMD path: im2col (2 patches) + 2-filter matmul, per group.
+    pub fn forward_simd<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+        let cpg = self.ch_per_group();
+        let fpg = self.filters_per_group();
+        let klen = self.kernel * self.kernel * cpg;
+        // the two im2col columns (the paper's 2-patch cap)
+        let mut col_a = vec![0i16; klen];
+        let mut col_b = vec![0i16; klen];
+
+        let n_pix = out_shape.h * out_shape.w;
+        // host-side §Perf optimization: pre-widen the q7 weights to i16
+        // once per call (amortized over every pixel pair); the monitor
+        // events inside mat_mult_* still model the MCU's in-loop SXTB16
+        let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+        let wrow = |n: usize| &wq[n * klen..(n + 1) * klen];
+
+        for g in 0..self.groups {
+            let ch0 = g * cpg;
+            let n0 = g * fpg;
+            let mut pix = 0usize;
+            while pix + 1 < n_pix {
+                let (ay, ax) = (pix / out_shape.w, pix % out_shape.w);
+                let (by, bx) = ((pix + 1) / out_shape.w, (pix + 1) % out_shape.w);
+                fill_patch_q15(x, ay, ax, self.kernel, self.pad, ch0, cpg, &mut col_a, mon);
+                fill_patch_q15(x, by, bx, self.kernel, self.pad, ch0, cpg, &mut col_b, mon);
+                let mut f = 0usize;
+                while f + 1 < fpg {
+                    let (na, nb) = (n0 + f, n0 + f + 1);
+                    let acc = mat_mult_2x2(
+                        wrow(na),
+                        wrow(nb),
+                        &col_a,
+                        &col_b,
+                        self.bias[na],
+                        self.bias[nb],
+                        mon,
+                    );
+                    mon.alu(8);
+                    mon.st8(4);
+                    y.set(ay, ax, na, sat_i8(requantize(acc[0], shift)));
+                    y.set(by, bx, na, sat_i8(requantize(acc[1], shift)));
+                    y.set(ay, ax, nb, sat_i8(requantize(acc[2], shift)));
+                    y.set(by, bx, nb, sat_i8(requantize(acc[3], shift)));
+                    f += 2;
+                }
+                if f < fpg {
+                    let n = n0 + f;
+                    let acc = mat_mult_1x2(wrow(n), &col_a, &col_b, self.bias[n], mon);
+                    mon.alu(4);
+                    mon.st8(2);
+                    y.set(ay, ax, n, sat_i8(requantize(acc[0], shift)));
+                    y.set(by, bx, n, sat_i8(requantize(acc[1], shift)));
+                }
+                pix += 2;
+            }
+            if pix < n_pix {
+                // odd-pixel tail: one column
+                let (ay, ax) = (pix / out_shape.w, pix % out_shape.w);
+                fill_patch_q15(x, ay, ax, self.kernel, self.pad, ch0, cpg, &mut col_a, mon);
+                let mut f = 0usize;
+                while f + 1 < fpg {
+                    let (na, nb) = (n0 + f, n0 + f + 1);
+                    let acc =
+                        mat_mult_2x1(wrow(na), wrow(nb), &col_a, self.bias[na], self.bias[nb], mon);
+                    mon.alu(4);
+                    mon.st8(2);
+                    y.set(ay, ax, na, sat_i8(requantize(acc[0], shift)));
+                    y.set(ay, ax, nb, sat_i8(requantize(acc[1], shift)));
+                    f += 2;
+                }
+                if f < fpg {
+                    let n = n0 + f;
+                    let acc = mat_mult_1x1(wrow(n), &col_a, self.bias[n], mon);
+                    mon.alu(2);
+                    mon.st8(1);
+                    y.set(ay, ax, n, sat_i8(requantize(acc, shift)));
+                }
+            }
+        }
+        y
+    }
+
+    /// Dispatch on the SIMD flag.
+    pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
+        if simd {
+            self.forward_simd(x, mon)
+        } else {
+            self.forward_scalar(x, mon)
+        }
+    }
+}
+
+impl ShiftConv {
+    /// SIMD path: shifted-gather im2col (2 columns of length `Cx`) + the
+    /// 2-filter pointwise matmul.
+    pub fn forward_simd<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        self.validate(&x.shape).expect("invalid shift-conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        let mut y = Tensor::zeros(out_shape, self.q_out);
+        let shift = self.out_shift();
+        let klen = self.in_channels;
+        let mut col_a = vec![0i16; klen];
+        let mut col_b = vec![0i16; klen];
+        let n_pix = out_shape.h * out_shape.w;
+        // pre-widened weights (see the conv path note)
+        let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+        let wrow = |n: usize| &wq[n * klen..(n + 1) * klen];
+
+        let mut pix = 0usize;
+        while pix + 1 < n_pix {
+            let (ay, ax) = (pix / out_shape.w, pix % out_shape.w);
+            let (by, bx) = ((pix + 1) / out_shape.w, (pix + 1) % out_shape.w);
+            fill_patch_shifted_q15(x, ay, ax, &self.shifts, &mut col_a, mon);
+            fill_patch_shifted_q15(x, by, bx, &self.shifts, &mut col_b, mon);
+            let mut f = 0usize;
+            while f + 1 < self.out_channels {
+                let acc = mat_mult_2x2(
+                    wrow(f),
+                    wrow(f + 1),
+                    &col_a,
+                    &col_b,
+                    self.bias[f],
+                    self.bias[f + 1],
+                    mon,
+                );
+                mon.alu(8);
+                mon.st8(4);
+                y.set(ay, ax, f, sat_i8(requantize(acc[0], shift)));
+                y.set(by, bx, f, sat_i8(requantize(acc[1], shift)));
+                y.set(ay, ax, f + 1, sat_i8(requantize(acc[2], shift)));
+                y.set(by, bx, f + 1, sat_i8(requantize(acc[3], shift)));
+                f += 2;
+            }
+            if f < self.out_channels {
+                let acc = mat_mult_1x2(wrow(f), &col_a, &col_b, self.bias[f], mon);
+                mon.alu(4);
+                mon.st8(2);
+                y.set(ay, ax, f, sat_i8(requantize(acc[0], shift)));
+                y.set(by, bx, f, sat_i8(requantize(acc[1], shift)));
+            }
+            pix += 2;
+        }
+        if pix < n_pix {
+            let (ay, ax) = (pix / out_shape.w, pix % out_shape.w);
+            fill_patch_shifted_q15(x, ay, ax, &self.shifts, &mut col_a, mon);
+            let mut f = 0usize;
+            while f + 1 < self.out_channels {
+                let acc =
+                    mat_mult_2x1(wrow(f), wrow(f + 1), &col_a, self.bias[f], self.bias[f + 1], mon);
+                mon.alu(4);
+                mon.st8(2);
+                y.set(ay, ax, f, sat_i8(requantize(acc[0], shift)));
+                y.set(ay, ax, f + 1, sat_i8(requantize(acc[1], shift)));
+                f += 2;
+            }
+            if f < self.out_channels {
+                let acc = mat_mult_1x1(wrow(f), &col_a, self.bias[f], mon);
+                mon.alu(2);
+                mon.st8(1);
+                y.set(ay, ax, f, sat_i8(requantize(acc, shift)));
+            }
+        }
+        y
+    }
+
+    /// Dispatch on the SIMD flag.
+    pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
+        if simd {
+            self.forward_simd(x, mon)
+        } else {
+            self.forward_scalar(x, mon)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::nn::conv::test_random_conv;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
+    use crate::nn::shift::test_random_shift_conv;
+    use crate::nn::tensor::{Shape, Tensor};
+    use crate::quant::QParam;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure, ensure_eq_i8};
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    #[test]
+    fn conv_simd_bit_exact_with_scalar() {
+        check(
+            "conv-simd-vs-scalar",
+            64,
+            |rng, _| {
+                let groups = [1usize, 2, 4][rng.range(0, 2)];
+                let cin = groups * rng.range(1, 5);
+                let cout = groups * rng.range(1, 5);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 5);
+                (test_random_conv(rng, groups, k, cin, cout), random_input(rng, h, cin))
+            },
+            |(conv, x)| {
+                let a = conv.forward_scalar(x, &mut NoopMonitor);
+                let b = conv.forward_simd(x, &mut NoopMonitor);
+                ensure_eq_i8(&a.data, &b.data, "conv simd vs scalar")
+            },
+        );
+    }
+
+    #[test]
+    fn shift_simd_bit_exact_with_scalar() {
+        check(
+            "shift-simd-vs-scalar",
+            64,
+            |rng, _| {
+                let cin = rng.range(1, 12);
+                let cout = rng.range(1, 12);
+                let h = rng.range(3, 8);
+                (test_random_shift_conv(rng, cin, cout, 3), random_input(rng, h, cin))
+            },
+            |(sc, x)| {
+                let a = sc.forward_scalar(x, &mut NoopMonitor);
+                let b = sc.forward_simd(x, &mut NoopMonitor);
+                ensure_eq_i8(&a.data, &b.data, "shift simd vs scalar")
+            },
+        );
+    }
+
+    #[test]
+    fn simd_uses_fewer_memory_accesses_on_realistic_layer() {
+        // The Fig. 3 premise: SIMD im2col reduces memory events per MAC.
+        let mut rng = Rng::new(31);
+        let conv = test_random_conv(&mut rng, 1, 3, 16, 16);
+        let x = random_input(&mut rng, 16, 16);
+        let mut ms = CountingMonitor::new();
+        let mut mv = CountingMonitor::new();
+        conv.forward_scalar(&x, &mut ms);
+        conv.forward_simd(&x, &mut mv);
+        assert!(mv.counts.mem_accesses() * 2 < ms.counts.mem_accesses());
+        // effective MAC work is the same order (border clipping makes
+        // scalar slightly smaller; im2col computes padded taps too)
+        let simd_macs = mv.counts.effective_macs();
+        let scalar_macs = ms.counts.effective_macs();
+        assert!(simd_macs >= scalar_macs);
+    }
+
+    #[test]
+    fn simd_smlad_dominates_for_k_multiple_of_4() {
+        let mut rng = Rng::new(37);
+        // k*k*cpg = 9*4 = 36, divisible by 4 → no scalar tail in matmul
+        let conv = test_random_conv(&mut rng, 1, 3, 4, 8);
+        let x = random_input(&mut rng, 6, 4);
+        let mut mon = CountingMonitor::new();
+        conv.forward_simd(&x, &mut mon);
+        assert_eq!(mon.counts.mac, 0, "expected all MACs via SMLAD");
+        assert!(mon.counts.smlad > 0);
+    }
+
+    #[test]
+    fn odd_sizes_exercise_all_tails() {
+        // odd pixel count, odd filter count, K % 4 != 0
+        check(
+            "conv-simd-tails",
+            24,
+            |rng, _| {
+                let conv = test_random_conv(rng, 1, 3, 3, 5);
+                let x = random_input(rng, 3, 3); // 9 pixels (odd)
+                (conv, x)
+            },
+            |(conv, x)| {
+                let a = conv.forward_scalar(x, &mut NoopMonitor);
+                let b = conv.forward_simd(x, &mut NoopMonitor);
+                ensure(a.data == b.data, "tail mismatch")
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_simd_isolates_groups() {
+        let mut rng = Rng::new(41);
+        let conv = test_random_conv(&mut rng, 2, 3, 8, 8);
+        let x = random_input(&mut rng, 5, 8);
+        let y = conv.forward_simd(&x, &mut NoopMonitor);
+        let mut x2 = x.clone();
+        for yy in 0..5 {
+            for xx in 0..5 {
+                for c in 4..8 {
+                    x2.set(yy, xx, c, 0);
+                }
+            }
+        }
+        let y2 = conv.forward_simd(&x2, &mut NoopMonitor);
+        for yy in 0..5 {
+            for xx in 0..5 {
+                for n in 0..4 {
+                    assert_eq!(y.at(yy, xx, n), y2.at(yy, xx, n));
+                }
+            }
+        }
+    }
+}

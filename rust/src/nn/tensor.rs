@@ -1,0 +1,151 @@
+//! Int8 activation tensors in HWC layout — the layout NNoM and CMSIS-NN
+//! use on Cortex-M (channel-minor so an im2col patch row is contiguous).
+
+use crate::quant::QParam;
+
+/// Spatial+channel shape of an activation tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat index of (y, x, ch) in HWC.
+    #[inline(always)]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+}
+
+/// An int8 activation tensor (HWC) with its quantization parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub q: QParam,
+    pub data: Vec<i8>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: Shape, q: QParam) -> Self {
+        Self {
+            data: vec![0; shape.len()],
+            shape,
+            q,
+        }
+    }
+
+    pub fn from_vec(shape: Shape, q: QParam, data: Vec<i8>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.len(),
+            "tensor data length {} != shape volume {}",
+            data.len(),
+            shape.len()
+        );
+        Self { shape, q, data }
+    }
+
+    /// Build from f32 values, quantizing at a fixed parameter.
+    pub fn from_f32(shape: Shape, q: QParam, xs: &[f32]) -> Self {
+        assert_eq!(xs.len(), shape.len());
+        Self {
+            shape,
+            q,
+            data: crate::quant::quantize_tensor_with(xs, q),
+        }
+    }
+
+    /// Dequantize to f32 (for validation against the JAX reference).
+    pub fn to_f32(&self) -> Vec<f32> {
+        crate::quant::dequantize_tensor(&self.data, self.q)
+    }
+
+    #[inline(always)]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> i8 {
+        self.data[self.shape.idx(y, x, ch)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i8) {
+        let i = self.shape.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Padded load: zero outside bounds (same-padding semantics). `y`/`x`
+    /// may be negative or ≥ dim.
+    #[inline(always)]
+    pub fn at_padded(&self, y: isize, x: isize, ch: usize) -> i8 {
+        if y < 0 || x < 0 || y >= self.shape.h as isize || x >= self.shape.w as isize {
+            0
+        } else {
+            self.at(y as usize, x as usize, ch)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QParam;
+
+    #[test]
+    fn hwc_indexing() {
+        let s = Shape::new(2, 3, 4);
+        assert_eq!(s.len(), 24);
+        assert_eq!(s.idx(0, 0, 0), 0);
+        assert_eq!(s.idx(0, 0, 3), 3);
+        assert_eq!(s.idx(0, 1, 0), 4);
+        assert_eq!(s.idx(1, 0, 0), 12);
+        assert_eq!(s.idx(1, 2, 3), 23);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut t = Tensor::zeros(Shape::new(3, 3, 2), QParam::new(7));
+        t.set(1, 2, 1, -42);
+        assert_eq!(t.at(1, 2, 1), -42);
+        assert_eq!(t.at(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn padded_reads_are_zero_outside() {
+        let mut t = Tensor::zeros(Shape::new(2, 2, 1), QParam::new(7));
+        t.set(0, 0, 0, 9);
+        assert_eq!(t.at_padded(-1, 0, 0), 0);
+        assert_eq!(t.at_padded(0, -1, 0), 0);
+        assert_eq!(t.at_padded(2, 0, 0), 0);
+        assert_eq!(t.at_padded(0, 2, 0), 0);
+        assert_eq!(t.at_padded(0, 0, 0), 9);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let q = QParam::new(7);
+        let xs = [0.5f32, -0.25, 0.0, 0.75];
+        let t = Tensor::from_f32(Shape::new(1, 2, 2), q, &xs);
+        let back = t.to_f32();
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= 1.0 / 128.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor data length")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(Shape::new(2, 2, 2), QParam::new(7), vec![0; 7]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Fixed-point helpers shared by the engine's SIMD path: packing int8/int16
+//! lanes into 32-bit registers and the ARM DSP-extension intrinsics the
+//! CMSIS-NN kernels rely on (`__SMLAD`, `__SXTB16`, `__PKHBT`, …), emulated
+//! bit-exactly. The emulation preserves the *memory-access structure*
+//! (one 32-bit load replaces two 16-bit / four 8-bit loads), which is what
+//! drives the paper's Fig. 3 data-reuse analysis.
+
+/// Pack two i16 values into a u32 as the Cortex-M register would hold them
+/// (low halfword first — little-endian lane order).
+#[inline(always)]
+pub fn pack_i16x2(lo: i16, hi: i16) -> u32 {
+    (lo as u16 as u32) | ((hi as u16 as u32) << 16)
+}
+
+/// Unpack a u32 into (low, high) i16 lanes.
+#[inline(always)]
+pub fn unpack_i16x2(x: u32) -> (i16, i16) {
+    (x as u16 as i16, (x >> 16) as u16 as i16)
+}
+
+/// Pack four i8 values into a u32 (byte 0 = lane 0).
+#[inline(always)]
+pub fn pack_i8x4(b: [i8; 4]) -> u32 {
+    u32::from_le_bytes([b[0] as u8, b[1] as u8, b[2] as u8, b[3] as u8])
+}
+
+/// Unpack a u32 into four i8 lanes.
+#[inline(always)]
+pub fn unpack_i8x4(x: u32) -> [i8; 4] {
+    let b = x.to_le_bytes();
+    [b[0] as i8, b[1] as i8, b[2] as i8, b[3] as i8]
+}
+
+/// `__SMLAD`: dual signed 16×16 multiply-accumulate.
+/// `acc + lo(x)·lo(y) + hi(x)·hi(y)` — one cycle on Cortex-M4, two MACs.
+#[inline(always)]
+pub fn smlad(x: u32, y: u32, acc: i32) -> i32 {
+    let (xl, xh) = unpack_i16x2(x);
+    let (yl, yh) = unpack_i16x2(y);
+    acc.wrapping_add(xl as i32 * yl as i32)
+        .wrapping_add(xh as i32 * yh as i32)
+}
+
+/// `__SXTB16`: sign-extend bytes 0 and 2 of a word into two i16 lanes.
+/// CMSIS-NN uses `__SXTB16(x)` / `__SXTB16(__ROR(x, 8))` to widen a word
+/// of four q7 values into two words of q15 pairs.
+#[inline(always)]
+pub fn sxtb16(x: u32) -> u32 {
+    let b = x.to_le_bytes();
+    pack_i16x2(b[0] as i8 as i16, b[2] as i8 as i16)
+}
+
+/// `__ROR`: rotate right.
+#[inline(always)]
+pub fn ror(x: u32, n: u32) -> u32 {
+    x.rotate_right(n)
+}
+
+/// Widen four q7 bytes (one 32-bit load) into two q15 pair-words, in the
+/// lane order CMSIS-NN's `arm_nn_read_q7x4` + `__SXTB16` sequence yields:
+/// returns (word with lanes (b0, b2), word with lanes (b1, b3)).
+#[inline(always)]
+pub fn q7x4_to_q15x2(x: u32) -> (u32, u32) {
+    (sxtb16(x), sxtb16(ror(x, 8)))
+}
+
+/// `__SSAT(x, 8)` — saturate to signed 8-bit.
+#[inline(always)]
+pub fn ssat8(x: i32) -> i32 {
+    x.clamp(-128, 127)
+}
+
+/// `__QADD16`-style element-wise i16 saturating add on packed lanes
+/// (used by the int16 batch-norm path of add-convolution).
+#[inline(always)]
+pub fn qadd16(x: u32, y: u32) -> u32 {
+    let (xl, xh) = unpack_i16x2(x);
+    let (yl, yh) = unpack_i16x2(y);
+    let sl = (xl as i32 + yl as i32).clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+    let sh = (xh as i32 + yh as i32).clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+    pack_i16x2(sl, sh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn pack_unpack_i16_roundtrip() {
+        for &(a, b) in &[(0i16, 0i16), (-1, 1), (i16::MIN, i16::MAX), (12345, -12345)] {
+            assert_eq!(unpack_i16x2(pack_i16x2(a, b)), (a, b));
+        }
+    }
+
+    #[test]
+    fn pack_unpack_i8_roundtrip() {
+        let cases = [[0i8, 0, 0, 0], [-1, 1, -128, 127], [5, -6, 7, -8]];
+        for c in cases {
+            assert_eq!(unpack_i8x4(pack_i8x4(c)), c);
+        }
+    }
+
+    #[test]
+    fn smlad_matches_scalar() {
+        check(
+            "smlad",
+            512,
+            |rng, _| {
+                (
+                    rng.next_u32(),
+                    rng.next_u32(),
+                    rng.next_u32() as i32 >> 8,
+                )
+            },
+            |&(x, y, acc)| {
+                let (xl, xh) = unpack_i16x2(x);
+                let (yl, yh) = unpack_i16x2(y);
+                let expect = acc
+                    .wrapping_add(xl as i32 * yl as i32)
+                    .wrapping_add(xh as i32 * yh as i32);
+                ensure(smlad(x, y, acc) == expect, "smlad mismatch")
+            },
+        );
+    }
+
+    #[test]
+    fn sxtb16_extends_bytes_0_and_2() {
+        let x = pack_i8x4([-3, 100, -128, 7]);
+        let (l, h) = unpack_i16x2(sxtb16(x));
+        assert_eq!((l, h), (-3, -128));
+        let (l, h) = unpack_i16x2(sxtb16(ror(x, 8)));
+        assert_eq!((l, h), (100, 7));
+    }
+
+    #[test]
+    fn q7x4_widen_covers_all_lanes() {
+        check(
+            "q7x4",
+            256,
+            |rng, _| [rng.i8(), rng.i8(), rng.i8(), rng.i8()],
+            |b| {
+                let (even, odd) = q7x4_to_q15x2(pack_i8x4(*b));
+                let (e0, e2) = unpack_i16x2(even);
+                let (o1, o3) = unpack_i16x2(odd);
+                ensure(
+                    e0 == b[0] as i16 && e2 == b[2] as i16 && o1 == b[1] as i16 && o3 == b[3] as i16,
+                    format!("widen mismatch {b:?}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn ssat8_range() {
+        assert_eq!(ssat8(1000), 127);
+        assert_eq!(ssat8(-1000), -128);
+        assert_eq!(ssat8(5), 5);
+    }
+
+    #[test]
+    fn qadd16_saturates() {
+        let x = pack_i16x2(i16::MAX, -10);
+        let y = pack_i16x2(10, 20);
+        let (l, h) = unpack_i16x2(qadd16(x, y));
+        assert_eq!((l, h), (i16::MAX, 10));
+    }
+}

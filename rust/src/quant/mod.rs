@@ -1,0 +1,316 @@
+//! Power-of-two symmetric 8-bit quantization — the NNoM scheme the paper
+//! uses (§3.1, Eq. 4):
+//!
+//! ```text
+//! dec = ceil(log2(max|X_f|));   x_i = floor(x_f · 2^((8-1)-dec))
+//! ```
+//!
+//! We carry the exponent around as `frac_bits = 7 - dec` (the number of
+//! fractional bits of the Q-format), which is what NNoM's generated code
+//! actually stores: a value is `x_f ≈ x_i / 2^frac_bits`.
+//!
+//! Because every scale is a power of two, convolution requantization is a
+//! plain arithmetic shift (Alg. 1 left):
+//! `out = (Σ x·w) >> (frac_in + frac_w − frac_out)` — no division, no
+//! per-channel multipliers. Add-convolution needs the operands *aligned*
+//! to a common exponent before the L1-distance is taken (Alg. 1 right);
+//! see [`align_shift`] and [`add_conv_inner`].
+
+mod fixed;
+pub use fixed::*;
+
+/// Quantization parameter of a tensor: number of fractional bits of the
+/// Q7-style fixed-point format (`x_f ≈ x_i / 2^frac_bits`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QParam {
+    pub frac_bits: i32,
+}
+
+impl QParam {
+    pub fn new(frac_bits: i32) -> Self {
+        Self { frac_bits }
+    }
+
+    /// The scale factor `2^frac_bits` as f32 (may be fractional for
+    /// negative `frac_bits`, i.e. tensors with magnitudes above 128).
+    pub fn scale(&self) -> f32 {
+        (self.frac_bits as f32).exp2()
+    }
+
+    /// The paper's `dec` (integer bits): `dec = 7 - frac_bits`.
+    pub fn dec(&self) -> i32 {
+        7 - self.frac_bits
+    }
+}
+
+/// Eq. 4: fractional bits for a tensor whose max magnitude is `max_abs`.
+///
+/// `dec = ceil(log2(max_abs))`, `frac_bits = 7 - dec`. A zero tensor gets
+/// the finest representable scale (frac_bits = 7).
+pub fn frac_bits_for(max_abs: f32) -> i32 {
+    if !(max_abs > 0.0) {
+        return 7;
+    }
+    let dec = max_abs.log2().ceil() as i32;
+    7 - dec
+}
+
+/// Saturate an i32 accumulator to i8 (CMSIS `__SSAT(x, 8)`).
+#[inline(always)]
+pub fn sat_i8(x: i32) -> i8 {
+    x.clamp(-128, 127) as i8
+}
+
+/// Arithmetic right shift that also accepts negative `shift` (left shift),
+/// which occurs when the output format is finer than the accumulator's.
+/// Matches the paper's Alg. 1 (plain truncating shift, no rounding).
+#[inline(always)]
+pub fn requantize(acc: i32, shift: i32) -> i32 {
+    if shift >= 0 {
+        // i32 >> is an arithmetic shift in Rust.
+        acc >> shift.min(31)
+    } else {
+        acc << (-shift).min(31)
+    }
+}
+
+/// Quantize a single value at a given parameter (Eq. 4's floor).
+#[inline]
+pub fn quantize_one(x: f32, q: QParam) -> i8 {
+    sat_i8((x * q.scale()).floor() as i32)
+}
+
+/// Dequantize a single value.
+#[inline]
+pub fn dequantize_one(x: i8, q: QParam) -> f32 {
+    x as f32 / q.scale()
+}
+
+/// Quantize a tensor with the Eq. 4 calibration (max-abs over the tensor).
+/// Returns the int8 data and the chosen parameter.
+pub fn quantize_tensor(xs: &[f32]) -> (Vec<i8>, QParam) {
+    let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let q = QParam::new(frac_bits_for(max_abs));
+    (xs.iter().map(|&x| quantize_one(x, q)).collect(), q)
+}
+
+/// Quantize a tensor at a caller-chosen parameter (used when the
+/// deployment pipeline fixes activations' formats from calibration data).
+pub fn quantize_tensor_with(xs: &[f32], q: QParam) -> Vec<i8> {
+    xs.iter().map(|&x| quantize_one(x, q)).collect()
+}
+
+/// Dequantize a tensor.
+pub fn dequantize_tensor(xs: &[i8], q: QParam) -> Vec<f32> {
+    xs.iter().map(|&x| dequantize_one(x, q)).collect()
+}
+
+/// Quantize an f32 bias directly at accumulator scale
+/// (`frac_in + frac_w` fractional bits, i32 storage — the CMSIS-NN
+/// convention of adding bias before the output shift).
+pub fn quantize_bias(bias: &[f32], frac_in: i32, frac_w: i32) -> Vec<i32> {
+    let scale = ((frac_in + frac_w) as f32).exp2();
+    bias.iter().map(|&b| (b * scale).round() as i32).collect()
+}
+
+/// Alignment shift for add-convolution (Alg. 1 right): the operand with
+/// fewer fractional bits is left-shifted by `|frac_in − frac_w|` so both
+/// sit at `max(frac_in, frac_w)` fractional bits.
+#[inline(always)]
+pub fn align_shift(frac_in: i32, frac_w: i32) -> (i32, bool) {
+    // (shift, shift_applies_to_input)
+    if frac_w > frac_in {
+        (frac_w - frac_in, true)
+    } else {
+        (frac_in - frac_w, false)
+    }
+}
+
+/// Inner loop of add-convolution (Alg. 1 right, our un-garbled form):
+/// contribution of one (input, weight) pair to the (negative) accumulator,
+/// with operands aligned to the common exponent.
+#[inline(always)]
+pub fn add_conv_inner(x: i32, w: i32, shift: i32, shift_input: bool) -> i32 {
+    let (xa, wa) = if shift_input {
+        (x << shift, w)
+    } else {
+        (x, w << shift)
+    };
+    -(xa - wa).abs()
+}
+
+/// Output shift for add-convolution: accumulator sits at
+/// `max(frac_in, frac_w)` fractional bits; bring it to `frac_out`.
+#[inline(always)]
+pub fn add_conv_out_shift(frac_in: i32, frac_w: i32, frac_out: i32) -> i32 {
+    frac_in.max(frac_w) - frac_out
+}
+
+/// Output shift for multiplicative convolution (Alg. 1 left):
+/// `frac_in + frac_w − frac_out`.
+#[inline(always)]
+pub fn conv_out_shift(frac_in: i32, frac_w: i32, frac_out: i32) -> i32 {
+    frac_in + frac_w - frac_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn frac_bits_examples() {
+        // max|X| = 1.0 → dec = 0 → 7 fractional bits (classic Q7).
+        assert_eq!(frac_bits_for(1.0), 7);
+        // max|X| = 2.0 → dec = 1 → 6 fractional bits.
+        assert_eq!(frac_bits_for(2.0), 6);
+        // max|X| = 0.5 → dec = -1 → 8 fractional bits.
+        assert_eq!(frac_bits_for(0.5), 8);
+        // max|X| = 100 → dec = 7 → 0 fractional bits.
+        assert_eq!(frac_bits_for(100.0), 0);
+        // degenerate all-zero tensor
+        assert_eq!(frac_bits_for(0.0), 7);
+    }
+
+    #[test]
+    fn eq4_uses_floor_not_round() {
+        let q = QParam::new(7);
+        // 0.999 * 128 = 127.87 → floor → 127
+        assert_eq!(quantize_one(0.999, q), 127);
+        // -0.999 * 128 = -127.87 → floor → -128
+        assert_eq!(quantize_one(-0.999, q), -128);
+    }
+
+    #[test]
+    fn saturation() {
+        let q = QParam::new(7);
+        assert_eq!(quantize_one(4.0, q), 127);
+        assert_eq!(quantize_one(-4.0, q), -128);
+        assert_eq!(sat_i8(1 << 20), 127);
+        assert_eq!(sat_i8(-(1 << 20)), -128);
+    }
+
+    #[test]
+    fn requantize_both_directions() {
+        assert_eq!(requantize(256, 4), 16);
+        assert_eq!(requantize(-256, 4), -16);
+        assert_eq!(requantize(3, -2), 12);
+        // truncating arithmetic shift (rounds toward -inf)
+        assert_eq!(requantize(-1, 1), -1);
+    }
+
+    #[test]
+    fn quantize_tensor_range_fits_i8() {
+        let xs = [3.2f32, -1.5, 0.25, 2.9];
+        let (qs, p) = quantize_tensor(&xs);
+        // max 3.2 → dec=2 → frac_bits=5 → scale 32
+        assert_eq!(p.frac_bits, 5);
+        assert_eq!(qs[0], (3.2f32 * 32.0).floor() as i8);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_scale() {
+        check(
+            "quant-roundtrip",
+            128,
+            |rng, _| {
+                let n = rng.range(1, 64);
+                (0..n).map(|_| rng.f32_range(-4.0, 4.0)).collect::<Vec<f32>>()
+            },
+            |xs| {
+                let (qs, p) = quantize_tensor(xs);
+                let step = 1.0 / p.scale();
+                for (x, q) in xs.iter().zip(&qs) {
+                    let back = dequantize_one(*q, p);
+                    // floor quantization: error in [0, step) unless saturated
+                    let err = (x - back).abs();
+                    ensure(
+                        err <= step + 1e-6,
+                        format!("err {err} > step {step} for {x} -> {q}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn conv_shift_identity() {
+        // Requantizing a product through conv_out_shift reproduces the
+        // float product within one output step.
+        check(
+            "conv-shift",
+            256,
+            |rng, _| {
+                (
+                    rng.f32_range(-1.0, 1.0),
+                    rng.f32_range(-1.0, 1.0),
+                )
+            },
+            |&(xf, wf)| {
+                let qi = QParam::new(7);
+                let qw = QParam::new(7);
+                let qo = QParam::new(5);
+                let x = quantize_one(xf, qi) as i32;
+                let w = quantize_one(wf, qw) as i32;
+                let shift = conv_out_shift(qi.frac_bits, qw.frac_bits, qo.frac_bits);
+                let out = requantize(x * w, shift);
+                let approx = dequantize_one(sat_i8(out), qo);
+                ensure(
+                    (approx - xf * wf).abs() <= 3.0 / qo.scale(),
+                    format!("{approx} vs {}", xf * wf),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn add_conv_alignment_is_exact() {
+        // After alignment, |x - w| computed in integers equals the fixed
+        // point value of |x_f - w_f| at the common exponent (up to the
+        // original quantization error).
+        let fi = 5;
+        let fw = 7;
+        let (shift, on_input) = align_shift(fi, fw);
+        assert_eq!((shift, on_input), (2, true));
+        let x = 10i32; // 10/32 = 0.3125
+        let w = 50i32; // 50/128 = 0.390625
+        let contrib = add_conv_inner(x, w, shift, on_input);
+        // aligned x = 40 (=0.3125 at 2^-7), |40-50| = 10 → -10/128
+        assert_eq!(contrib, -10);
+    }
+
+    #[test]
+    fn add_conv_inner_always_non_positive() {
+        check(
+            "addconv-negative",
+            256,
+            |rng, _| {
+                (
+                    rng.i8(),
+                    rng.i8(),
+                    rng.range(0, 3) as i32,
+                    rng.below(2) == 0,
+                )
+            },
+            |&(x, w, shift, on_input)| {
+                let v = add_conv_inner(x as i32, w as i32, shift, on_input);
+                ensure(v <= 0, format!("positive contribution {v}"))
+            },
+        );
+    }
+
+    #[test]
+    fn bias_at_accumulator_scale() {
+        let b = quantize_bias(&[0.5, -0.25], 7, 7);
+        assert_eq!(b, vec![(0.5 * 16384.0) as i32, (-0.25 * 16384.0) as i32]);
+    }
+
+    #[test]
+    fn dec_frac_duality() {
+        for fb in -3..=10 {
+            let q = QParam::new(fb);
+            assert_eq!(q.dec(), 7 - fb);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Report emitters: CSV and markdown renderings of the harness outputs,
+//! in the same rows/series layout as the paper's figures and tables.
+//! Used by the `convbench` CLI, the benches and EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+
+use crate::analytic::Primitive;
+use crate::harness::{FreqPoint, SweepPoint, Table1Row, Table3Row, Table4Row};
+use crate::mcu::OptLevel;
+
+/// CSV for a Fig. 2-style sweep: one row per (experiment, primitive,
+/// axis value) with theory + both measurements.
+pub fn sweep_csv(points: &[SweepPoint]) -> String {
+    let mut s = String::from(
+        "experiment,primitive,axis_value,params,theoretical_macs,\
+         latency_scalar_s,energy_scalar_mj,mem_scalar,\
+         latency_simd_s,energy_simd_mj,mem_simd,speedup,mem_ratio\n",
+    );
+    for p in points {
+        let (ls, es, mm, sp, mr) = match p.simd {
+            Some(v) => (
+                format!("{:.6e}", v.latency_s),
+                format!("{:.6e}", v.energy_mj),
+                format!("{}", v.mem_accesses),
+                format!("{:.3}", p.speedup().unwrap()),
+                format!("{:.3}", p.mem_access_ratio().unwrap()),
+            ),
+            None => (String::new(), String::new(), String::new(), String::new(), String::new()),
+        };
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{:.6e},{:.6e},{},{},{},{},{},{}",
+            p.experiment,
+            p.primitive.name(),
+            p.axis_value,
+            p.theory.params,
+            p.theory.macs,
+            p.scalar.latency_s,
+            p.scalar.energy_mj,
+            p.scalar.mem_accesses,
+            ls,
+            es,
+            mm,
+            sp,
+            mr
+        );
+    }
+    s
+}
+
+/// Markdown series table for one experiment / one metric — the textual
+/// equivalent of a Fig. 2 panel: rows = axis values, columns = primitives.
+pub fn figure_panel_markdown(
+    points: &[SweepPoint],
+    experiment: usize,
+    axis_name: &str,
+    metric_name: &str,
+    metric: impl Fn(&SweepPoint) -> Option<f64>,
+) -> String {
+    let pts: Vec<&SweepPoint> = points.iter().filter(|p| p.experiment == experiment).collect();
+    let mut values: Vec<usize> = pts.iter().map(|p| p.axis_value).collect();
+    values.sort_unstable();
+    values.dedup();
+
+    let mut s = format!("**Experiment {experiment}** — {metric_name} vs {axis_name}\n\n");
+    let _ = write!(s, "| {axis_name} |");
+    for prim in Primitive::ALL {
+        let _ = write!(s, " {} |", prim.name());
+    }
+    s.push('\n');
+    let _ = write!(s, "|---|");
+    for _ in Primitive::ALL {
+        let _ = write!(s, "---|");
+    }
+    s.push('\n');
+    for v in values {
+        let _ = write!(s, "| {v} |");
+        for prim in Primitive::ALL {
+            let cell = pts
+                .iter()
+                .find(|p| p.axis_value == v && p.primitive == prim)
+                .and_then(|p| metric(p));
+            match cell {
+                Some(x) => {
+                    let _ = write!(s, " {x:.4e} |");
+                }
+                None => {
+                    let _ = write!(s, " — |");
+                }
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Markdown for Table 1.
+pub fn table1_markdown(rows: &[Table1Row]) -> String {
+    let mut s = String::from(
+        "| Convolution type | Parameters | Theoretical MACs | Parameters gain | Complexity gain |\n\
+         |---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {:.4} | {:.4} |",
+            r.primitive.name(),
+            r.params,
+            r.macs,
+            r.param_gain,
+            r.complexity_gain
+        );
+    }
+    s
+}
+
+/// Markdown for Table 3 (average power vs frequency).
+pub fn table3_markdown(rows: &[Table3Row]) -> String {
+    let mut head = String::from("| |");
+    let mut sep = String::from("|---|");
+    let mut no_simd = String::from("| No SIMD |");
+    let mut simd = String::from("| SIMD |");
+    for r in rows {
+        let _ = write!(head, " {} MHz |", r.freq_mhz);
+        sep.push_str("---|");
+        let _ = write!(no_simd, " {:.2} |", r.no_simd_mw);
+        let _ = write!(simd, " {:.2} |", r.simd_mw);
+    }
+    format!("{head}\n{sep}\n{no_simd}\n{simd}\n")
+}
+
+/// Markdown for Table 4 (optimization level effect).
+pub fn table4_markdown(rows: &[Table4Row]) -> String {
+    let mut s = String::from(
+        "| | Opt level | Latency (s) | Consumption (mJ) | Optimization speedup | SIMD speedup |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let opt = match r.opt {
+            OptLevel::O0 => "O0",
+            OptLevel::Os => "Os",
+        };
+        let _ = writeln!(
+            s,
+            "| {} | {} | {:.3} | {:.1} | {} | {} |",
+            if r.simd { "SIMD" } else { "No SIMD" },
+            opt,
+            r.latency_s,
+            r.energy_mj,
+            r.opt_speedup.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into()),
+            r.simd_speedup.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into()),
+        );
+    }
+    s
+}
+
+/// CSV for the Fig. 4 frequency sweep.
+pub fn fig4_csv(points: &[FreqPoint]) -> String {
+    let mut s = String::from(
+        "freq_mhz,latency_scalar_s,energy_scalar_mj,power_scalar_mw,\
+         latency_simd_s,energy_simd_mj,power_simd_mw\n",
+    );
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{},{:.6e},{:.6e},{:.3},{:.6e},{:.6e},{:.3}",
+            p.freq_mhz,
+            p.scalar.latency_s,
+            p.scalar.energy_mj,
+            p.scalar.power_mw,
+            p.simd.latency_s,
+            p.simd.energy_mj,
+            p.simd.power_mw
+        );
+    }
+    s
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_report(path: &str, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::{quick_plans, run_all, table1_costs, table3_power, table4_optlevel};
+    use crate::mcu::McuConfig;
+    use crate::models::LayerParams;
+
+    #[test]
+    fn sweep_csv_has_header_and_rows() {
+        let pts = run_all(&quick_plans()[..1], &McuConfig::default());
+        let csv = sweep_csv(&pts);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("experiment,primitive"));
+        assert_eq!(lines.len(), pts.len() + 1);
+        // add rows end with empty simd fields
+        assert!(csv.contains("add"));
+    }
+
+    #[test]
+    fn panel_markdown_is_well_formed() {
+        let pts = run_all(&quick_plans()[..1], &McuConfig::default());
+        let md = figure_panel_markdown(&pts, 1, "groups", "latency (scalar)", |p| {
+            Some(p.scalar.latency_s)
+        });
+        assert!(md.contains("| groups |"));
+        assert!(md.contains("standard"));
+        // add column renders its SIMD-only metrics as —
+        let md2 = figure_panel_markdown(&pts, 1, "groups", "speedup", |p| p.speedup());
+        assert!(md2.contains("—"));
+    }
+
+    #[test]
+    fn table_markdowns_render() {
+        let t1 = table1_markdown(&table1_costs(&LayerParams::new(2, 3, 32, 16, 16)));
+        assert_eq!(t1.lines().count(), 7);
+        let t3 = table3_markdown(&table3_power());
+        assert!(t3.contains("No SIMD"));
+        let t4 = table4_markdown(&table4_optlevel());
+        assert!(t4.contains("Os"));
+        assert!(t4.contains("SIMD"));
+    }
+
+    #[test]
+    fn fig4_csv_rows() {
+        use crate::harness::fig4_frequency_sweep;
+        let pts = fig4_frequency_sweep(&[10.0, 80.0]);
+        let csv = fig4_csv(&pts);
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

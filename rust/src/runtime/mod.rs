@@ -1,0 +1,171 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the build-time
+//! python path (`python/compile/aot.py` — JAX/Pallas lowered to HLO text,
+//! see /opt/xla-example/load_hlo and aot_recipe) and executes them on the
+//! `xla` crate's PJRT CPU client. Python never runs here — the rust binary
+//! is self-contained once `artifacts/` exists.
+//!
+//! The cross-layer contract: every artifact takes `i32` tensors holding
+//! int8-quantized values (i32 at the interface dodges dtype-conversion
+//! pitfalls between jax and xla_extension 0.5.1; the arithmetic inside is
+//! exact integer math) and returns `i32` tensors, so the rust engine's
+//! outputs can be compared bit-for-bit.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT execution context (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(LoadedModel {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+/// A compiled executable plus metadata.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An input tensor for execution: flat i32 data + dims.
+#[derive(Clone, Debug)]
+pub struct InputI32 {
+    pub data: Vec<i32>,
+    pub dims: Vec<i64>,
+}
+
+impl InputI32 {
+    pub fn new(data: Vec<i32>, dims: &[usize]) -> Self {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        assert_eq!(
+            data.len() as i64,
+            d.iter().product::<i64>(),
+            "input volume mismatch"
+        );
+        Self { data, dims: d }
+    }
+
+    /// From int8 engine data.
+    pub fn from_i8(data: &[i8], dims: &[usize]) -> Self {
+        Self::new(data.iter().map(|&v| v as i32).collect(), dims)
+    }
+
+    fn literal(&self) -> Result<xla::Literal> {
+        xla::Literal::vec1(&self.data)
+            .reshape(&self.dims)
+            .map_err(|e| anyhow!("reshape input: {e:?}"))
+    }
+}
+
+impl LoadedModel {
+    /// Execute with i32 inputs; returns each tuple element flattened.
+    /// The artifacts are lowered with `return_tuple=True`, so the single
+    /// output literal is a tuple.
+    pub fn run_i32(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute and saturate outputs back to the engine's i8 domain.
+    pub fn run_to_i8(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i8>>> {
+        Ok(self
+            .run_i32(inputs)?
+            .into_iter()
+            .map(|v| v.into_iter().map(crate::quant::sat_i8).collect())
+            .collect())
+    }
+}
+
+/// Resolve an artifact path: `<dir>/<name>.hlo.txt`.
+pub fn artifact_path(dir: &str, name: &str) -> String {
+    format!("{dir}/{name}.hlo.txt")
+}
+
+/// List available artifacts in a directory.
+pub fn list_artifacts(dir: &str) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let f = e.file_name().to_string_lossy().into_owned();
+                    f.strip_suffix(".hlo.txt").map(|s| s.to_string())
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_volume_checked() {
+        let i = InputI32::new(vec![1, 2, 3, 4], &[2, 2]);
+        assert_eq!(i.dims, vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "input volume mismatch")]
+    fn bad_volume_panics() {
+        InputI32::new(vec![1, 2, 3], &[2, 2]);
+    }
+
+    #[test]
+    fn from_i8_sign_extends() {
+        let i = InputI32::from_i8(&[-128, 127], &[2]);
+        assert_eq!(i.data, vec![-128, 127]);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        assert_eq!(artifact_path("artifacts", "model"), "artifacts/model.hlo.txt");
+        assert!(list_artifacts("/nonexistent-dir").is_empty());
+    }
+}

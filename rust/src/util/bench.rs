@@ -1,0 +1,171 @@
+//! Criterion-style micro-benchmark runner (criterion is not in the offline
+//! vendor set). Benches declare `harness = false` and call [`Bench::run`].
+//!
+//! The runner warms up, then collects wall-clock samples and prints a
+//! summary line per benchmark, plus an optional CSV dump for EXPERIMENTS.md.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+
+/// Configuration for a bench run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warm-up time before sampling.
+    pub warmup: Duration,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Minimum time per sample (iterations are batched to reach it).
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            min_sample_time: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Quick config for smoke-testing bench binaries (CI / `cargo test`).
+impl BenchConfig {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            samples: 5,
+            min_sample_time: Duration::from_millis(1),
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary, in nanoseconds.
+    pub ns: Summary,
+    /// Iterations per sample batch.
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.ns.mean
+    }
+}
+
+/// The bench runner. Honours `CONVBENCH_QUICK=1` for fast smoke runs.
+pub struct Bench {
+    config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let config = if std::env::var("CONVBENCH_QUICK").as_deref() == Ok("1") {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record + print the result. The closure's return value
+    /// is passed through `black_box` to keep the optimizer honest.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warm-up, and estimate iterations per sample batch.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.config.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.config.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.config.min_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            samples_ns.push(dt.as_nanos() as f64 / iters as f64);
+        }
+        let ns = summarize(&samples_ns).expect("non-empty samples");
+        let result = BenchResult {
+            name: name.to_string(),
+            ns,
+            iters_per_sample: iters,
+        };
+        println!(
+            "bench {:<52} {:>12.1} ns/iter (±{:>10.1}, median {:>12.1}, n={})",
+            result.name, ns.mean, ns.std, ns.median, ns.n
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Dump all results as CSV (name,mean_ns,std_ns,median_ns,min_ns,max_ns).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("name,mean_ns,std_ns,median_ns,min_ns,max_ns\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{},{:.1},{:.1},{:.1},{:.1},{:.1}\n",
+                r.name, r.ns.mean, r.ns.std, r.ns.median, r.ns.min, r.ns.max
+            ));
+        }
+        s
+    }
+
+    /// Write the CSV next to the repo's bench outputs.
+    pub fn write_csv(&self, path: &str) {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Err(e) = std::fs::write(path, self.to_csv()) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("wrote {path}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_results() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            min_sample_time: Duration::from_micros(100),
+        });
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].ns.mean > 0.0);
+        let csv = b.to_csv();
+        assert!(csv.starts_with("name,"));
+        assert!(csv.contains("noop"));
+    }
+}

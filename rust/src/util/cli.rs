@@ -1,0 +1,119 @@
+//! Minimal command-line argument parser (clap is not in the offline vendor
+//! set). Supports subcommands, `--flag`, `--key value` / `--key=value` and
+//! positional arguments — enough for the `convbench` binary and examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Get an option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Get an option parsed as `T`, or `default` when absent.
+    /// Panics with a readable message on a malformed value.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("invalid value for --{key}: {v:?} ({e})"),
+            },
+        }
+    }
+
+    /// Whether a bare `--flag` was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig2 --exp 3 --out results.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.get("exp"), Some("3"));
+        assert_eq!(a.get("out"), Some("results.csv"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("serve --port=8080 --verbose");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_get_or() {
+        let a = parse("x --n 12");
+        assert_eq!(a.get_or("n", 5usize), 12);
+        assert_eq!(a.get_or("m", 5usize), 5);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run model.hlo.txt input.bin");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["model.hlo.txt", "input.bin"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_typed_value_panics() {
+        let a = parse("x --n twelve");
+        let _: usize = a.get_or("n", 0);
+    }
+}

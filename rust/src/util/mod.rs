@@ -1,0 +1,9 @@
+//! Small self-contained utilities substituting for crates that are not
+//! available in the offline vendor set (clap, criterion, proptest, serde).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;

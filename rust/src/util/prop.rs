@@ -1,0 +1,135 @@
+//! Miniature property-based-testing harness (proptest is not in the offline
+//! vendor set). Provides `check`: run a property over N randomly generated
+//! cases with a deterministic seed; on failure, report the case index and
+//! seed so the exact case can be replayed.
+//!
+//! Shrinking is deliberately not implemented — generators here draw small
+//! sizes to begin with, which keeps failing cases readable.
+
+use super::prng::Rng;
+
+/// Number of cases per property (override with CONVBENCH_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("CONVBENCH_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` receives a seeded RNG
+/// and the case index. `prop` returns `Err(msg)` to fail.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = 0xC0FFEE ^ name.len() as u64;
+    for i in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let case = gen(&mut rng, i);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (seed base {seed:#x}):\n  \
+                 {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two i8 slices are identical, reporting the first mismatch.
+pub fn ensure_eq_i8(a: &[i8], b: &[i8], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x != y {
+            return Err(format!("{what}: first mismatch at [{i}]: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert two i32 slices are identical, reporting the first mismatch.
+pub fn ensure_eq_i32(a: &[i32], b: &[i32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x != y {
+            return Err(format!("{what}: first mismatch at [{i}]: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "count",
+            10,
+            |rng, _| rng.range(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad' failed")]
+    fn failing_property_panics_with_case() {
+        check(
+            "bad",
+            10,
+            |rng, _| rng.range(0, 100),
+            |_| Err("always fails".to_string()),
+        );
+    }
+
+    #[test]
+    fn ensure_eq_reports_index() {
+        let e = ensure_eq_i8(&[1, 2, 3], &[1, 9, 3], "x").unwrap_err();
+        assert!(e.contains("[1]"), "{e}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        check(
+            "det",
+            5,
+            |rng, _| rng.range(0, 1000),
+            |v| {
+                first.push(*v);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = Vec::new();
+        check(
+            "det",
+            5,
+            |rng, _| rng.range(0, 1000),
+            |v| {
+                second.push(*v);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

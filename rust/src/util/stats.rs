@@ -1,0 +1,163 @@
+//! Statistics helpers: ordinary-least-squares linear regression (used for
+//! the paper's R² linearity claims in §4.1), summary statistics for the
+//! bench runner, and small helpers shared by the harness.
+
+/// Result of a simple linear regression `y = a·x + b`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearFit {
+    /// Slope.
+    pub a: f64,
+    /// Intercept.
+    pub b: f64,
+    /// Coefficient of determination (the paper reports these as
+    /// "regression scores", e.g. 0.995 MACs↔latency without SIMD).
+    pub r2: f64,
+    /// Number of points.
+    pub n: usize,
+}
+
+/// Ordinary least squares on `(x, y)` pairs.
+///
+/// Returns `None` for fewer than 2 points or a degenerate x variance.
+pub fn linreg(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+    let n = xs.len().min(ys.len());
+    if n < 2 {
+        return None;
+    }
+    let nf = n as f64;
+    let mx = xs[..n].iter().sum::<f64>() / nf;
+    let my = ys[..n].iter().sum::<f64>() / nf;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    if sxx <= f64::EPSILON {
+        return None;
+    }
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    // R² = 1 - SS_res / SS_tot
+    let mut ss_res = 0.0;
+    for i in 0..n {
+        let e = ys[i] - (a * xs[i] + b);
+        ss_res += e * e;
+    }
+    let r2 = if syy <= f64::EPSILON { 1.0 } else { 1.0 - ss_res / syy };
+    Some(LinearFit { a, b, r2, n })
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    linreg(xs, ys).map(|f| f.r2.sqrt() * f.a.signum())
+}
+
+/// Summary statistics over a sample (used by the bench runner).
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+/// Compute summary statistics. Returns `None` on an empty sample.
+pub fn summarize(sample: &[f64]) -> Option<Summary> {
+    if sample.is_empty() {
+        return None;
+    }
+    let n = sample.len();
+    let mean = sample.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        sample.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = sample.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    Some(Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median,
+    })
+}
+
+/// Geometric mean of strictly-positive values.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return None;
+    }
+    Some((xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_line_r2_is_one() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let f = linreg(&xs, &ys).unwrap();
+        assert!((f.a - 3.0).abs() < 1e-12);
+        assert!((f.b - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 * x + if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let f = linreg(&xs, &ys).unwrap();
+        assert!(f.r2 < 1.0 && f.r2 > 0.9);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(linreg(&[1.0], &[2.0]).is_none());
+        assert!(linreg(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn geomean_of_constant() {
+        assert!((geomean(&[2.0, 2.0, 2.0]).unwrap() - 2.0).abs() < 1e-12);
+        assert!(geomean(&[1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn pearson_sign() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let down: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!(pearson(&xs, &down).unwrap() < -0.999);
+    }
+}

@@ -1,0 +1,82 @@
+//! Integration: artifacts → PJRT runtime → bit-exact parity with the
+//! int8 engine, for every primitive (the cross-layer contract).
+//!
+//! Requires `make artifacts` (skips with a notice when absent, so plain
+//! `cargo test` stays green in a fresh checkout).
+
+use convbench::analytic::Primitive;
+use convbench::coordinator::{artifact_inputs, kernel_layer, validate_primitive};
+use convbench::models::{experiment_input, experiment_layer};
+use convbench::nn::NoopMonitor;
+use convbench::runtime::{artifact_path, list_artifacts, Runtime};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = "artifacts".to_string();
+    if std::path::Path::new(&artifact_path(&dir, "kernel_standard")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime integration tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn all_kernel_artifacts_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    for prim in Primitive::ALL {
+        let v = validate_primitive(&rt, &dir, prim).expect("validation ran");
+        assert!(
+            v.passed(),
+            "{}: {}/{} mismatches, first {:?}",
+            v.artifact,
+            v.mismatches,
+            v.elements,
+            v.first_mismatch
+        );
+    }
+}
+
+#[test]
+fn artifact_listing_contains_all_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let names = list_artifacts(&dir);
+    for prim in Primitive::ALL {
+        let want = format!("kernel_{}", prim.name());
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+}
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let Some(_) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    assert!(rt.load_hlo_text("artifacts/nonexistent.hlo.txt").is_err());
+}
+
+#[test]
+fn artifact_is_input_sensitive() {
+    // flipping one input value must change the artifact output — guards
+    // against a constant-folded or weight-baked artifact
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let p = kernel_layer();
+    let model = experiment_layer(&p, Primitive::Standard, convbench::coordinator::validate::VALIDATE_SEED);
+    let x = experiment_input(&p, convbench::coordinator::validate::VALIDATE_SEED);
+    let loaded = rt
+        .load_hlo_text(artifact_path(&dir, "kernel_standard"))
+        .expect("load");
+    let base = loaded.run_i32(&artifact_inputs(&model, &x)).expect("run");
+    let mut x2 = x.clone();
+    x2.data[0] = x2.data[0].wrapping_add(40);
+    let flipped = loaded.run_i32(&artifact_inputs(&model, &x2)).expect("run");
+    assert_ne!(base[0], flipped[0], "artifact ignored its input");
+    // and the engine agrees with the perturbed run too
+    let want: Vec<i32> = model
+        .forward(&x2, true, &mut NoopMonitor)
+        .data
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+    assert_eq!(flipped[0], want);
+}

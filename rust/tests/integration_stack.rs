@@ -1,0 +1,172 @@
+//! Integration across the rust stack: analytic ↔ engine ↔ simulator ↔
+//! harness consistency on realistic layer sizes, plus the deployment
+//! pipeline and server end to end.
+
+use convbench::analytic::{costs, Primitive};
+use convbench::harness::{measure_model, quick_plans, run_sweep};
+use convbench::mcu::{McuConfig, OptLevel};
+use convbench::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+use convbench::nn::{CountingMonitor, NoopMonitor};
+use convbench::util::prng::Rng;
+
+/// Table 1's closed forms must agree with the *counted* MAC work of the
+/// engine (within border effects) — theory meets implementation.
+#[test]
+fn counted_macs_track_table1() {
+    let p = LayerParams::new(2, 3, 16, 8, 8);
+    let x = experiment_input(&p, 1);
+    for prim in Primitive::ALL {
+        let model = experiment_layer(&p, prim, 1);
+        let mut mon = CountingMonitor::new();
+        model.forward(&x, false, &mut mon);
+        let theory = costs(&p, prim).macs;
+        let counted = match prim {
+            // add conv counts its taps as 2-alu groups
+            Primitive::Add => mon.counts.alu / 2,
+            _ => mon.counts.mac,
+        };
+        let ratio = counted as f64 / theory as f64;
+        assert!(
+            (0.7..=1.3).contains(&ratio),
+            "{prim:?}: counted {counted} vs theory {theory} (ratio {ratio:.3})"
+        );
+    }
+}
+
+/// SIMD effective MACs (2 per SMLAD) must cover the same work.
+#[test]
+fn simd_effective_macs_cover_theory() {
+    let p = LayerParams::new(2, 3, 16, 8, 8);
+    let x = experiment_input(&p, 2);
+    for prim in Primitive::ALL.iter().filter(|p| p.has_simd()) {
+        let model = experiment_layer(&p, *prim, 2);
+        let mut mon = CountingMonitor::new();
+        model.forward(&x, true, &mut mon);
+        let theory = costs(&p, *prim).macs;
+        let eff = mon.counts.effective_macs();
+        // im2col computes padded taps too (eff > theory), while the
+        // depthwise stage clips border taps (eff slightly < theory)
+        assert!(
+            eff * 10 >= theory * 9 && eff <= theory * 3 / 2,
+            "{prim:?}: effective {eff} vs theory {theory}"
+        );
+    }
+}
+
+/// Grouped convolution's measured latency must scale ~1/G (Table 1).
+#[test]
+fn grouped_latency_scales_inverse_g() {
+    let cfg = McuConfig::default();
+    let mut lat = Vec::new();
+    for g in [1usize, 2, 4, 8] {
+        let p = LayerParams::new(g, 3, 10, 16, 16);
+        let model = experiment_layer(&p, Primitive::Grouped, 3);
+        let x = experiment_input(&p, 3);
+        lat.push(measure_model(&model, &x, false, &cfg).latency_s);
+    }
+    for i in 1..lat.len() {
+        let gain = lat[i - 1] / lat[i];
+        assert!(
+            (1.6..=2.4).contains(&gain),
+            "G doubling gave latency gain {gain:.2} at step {i}"
+        );
+    }
+}
+
+/// The κ order holds on every layer in the sweep (SIMD faster at Os,
+/// slower to collapse at O0 than scalar).
+#[test]
+fn optlevel_ordering_holds_across_sweep() {
+    let plan = &quick_plans()[3];
+    for point in run_sweep(plan, &[Primitive::Standard], &McuConfig::default()) {
+        let o0 = McuConfig {
+            freq_mhz: 84.0,
+            opt: OptLevel::O0,
+        };
+        let model = experiment_layer(&point.params, Primitive::Standard, 0xEC0 + plan.id as u64);
+        let x = experiment_input(&point.params, 0x11A + point.axis_value as u64);
+        let scalar_o0 = measure_model(&model, &x, false, &o0);
+        let simd_o0 = measure_model(&model, &x, true, &o0);
+        // at O0, SIMD barely helps (paper: ×1.17)
+        let speedup_o0 = scalar_o0.latency_s / simd_o0.latency_s;
+        assert!(
+            (0.8..=2.0).contains(&speedup_o0),
+            "O0 SIMD speedup {speedup_o0:.2} out of the paper's regime"
+        );
+        // and costs more energy per joule efficiency than at Os
+        assert!(simd_o0.energy_mj > point.simd.unwrap().energy_mj);
+    }
+}
+
+/// Deployment pipeline → engine → server, full loop on a small model.
+#[test]
+fn pipeline_to_server_loop() {
+    use convbench::coordinator::{InferenceServer, Request};
+    let models: Vec<_> = [Primitive::Standard, Primitive::DepthwiseSeparable]
+        .iter()
+        .map(|&p| mcunet(p, 9))
+        .collect();
+    let server = InferenceServer::start(models, 2, &McuConfig::default());
+    let mut rng = Rng::new(4);
+    for i in 0..12u64 {
+        let mut input = vec![0i8; 32 * 32 * 3];
+        rng.fill_i8(&mut input, -64, 63);
+        let model = if i % 2 == 0 {
+            "mcunet-standard"
+        } else {
+            "mcunet-dws"
+        };
+        let r = server
+            .infer(Request {
+                id: i,
+                model: model.into(),
+                input,
+            })
+            .expect("inference");
+        assert_eq!(r.logits.len(), 10);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.errors, 0);
+}
+
+/// Whole-model scalar/SIMD parity on every primitive at a non-trivial
+/// input (integration-scale re-check of the per-layer property).
+#[test]
+fn model_level_parity_all_primitives() {
+    let mut rng = Rng::new(8);
+    for prim in Primitive::ALL {
+        let m = mcunet(prim, 21);
+        let mut x = convbench::nn::Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -96, 95);
+        let a = m.forward(&x, false, &mut NoopMonitor);
+        let b = m.forward(&x, true, &mut NoopMonitor);
+        assert_eq!(a.data, b.data, "{prim:?}");
+    }
+}
+
+/// Energy accounting is additive and consistent between the per-layer
+/// and whole-model measurement paths.
+#[test]
+fn measurement_additivity() {
+    let cfg = McuConfig::default();
+    let p = LayerParams::new(2, 3, 12, 8, 8);
+    let model = experiment_layer(&p, Primitive::DepthwiseSeparable, 5);
+    let x = experiment_input(&p, 5);
+    let whole = measure_model(&model, &x, true, &cfg);
+    // manual per-layer accumulation
+    let (_, profiles) = model.forward_profiled(&x, true);
+    let sum_cycles: f64 = profiles
+        .iter()
+        .zip(&model.layers)
+        .map(|(prof, layer)| {
+            let path = if layer.has_simd() {
+                convbench::mcu::PathClass::Simd
+            } else {
+                convbench::mcu::PathClass::Scalar
+            };
+            convbench::mcu::measure(&prof.counts, path, &cfg).cycles
+        })
+        .sum();
+    assert!((whole.cycles - sum_cycles).abs() < 1e-6);
+}
