@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verification plus a tuner smoke test.
+#
+#   ./ci.sh          # build + test + tune smoke (quick plans)
+#   ./ci.sh --full   # additionally run the full-size tune sweep
+#
+# The default build has zero external dependencies; the PJRT validation
+# path (cargo feature `pjrt`) is exercised separately in environments
+# that vendor the `xla` crate (see README "PJRT validation").
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+echo "==> smoke: convbench tune --objective latency --quick"
+# exercises the schedule auto-tuner end to end on the quick plans:
+# exits non-zero if any tuned schedule regresses vs the best fixed one
+./target/release/convbench tune --objective latency --quick --out results/ci
+
+echo "==> smoke: warm-cache replay (must perform zero evaluations)"
+./target/release/convbench tune --objective latency --quick --out results/ci
+
+if [[ "${1:-}" == "--full" ]]; then
+    echo "==> full: convbench tune over the full Table 2 plans"
+    ./target/release/convbench tune --objective energy --out results/ci-full
+fi
+
+echo "CI OK"

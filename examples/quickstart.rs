@@ -4,19 +4,37 @@
 //! 2. Run it through the int8 engine, scalar and SIMD — bit-exact.
 //! 3. Put it on the simulated STM32F401 and read latency/energy — the
 //!    paper's measurement loop in five lines.
-//! 4. If `artifacts/` exists, run the same computation through the
-//!    JAX/Pallas-lowered HLO on the PJRT runtime and verify bit-exactness
-//!    across the language boundary.
+//! 4. If `artifacts/` exists (and the crate is built with the `pjrt`
+//!    feature), run the same computation through the JAX/Pallas-lowered
+//!    HLO on the PJRT runtime and verify bit-exactness across the
+//!    language boundary.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use convbench::analytic::{costs, Primitive};
-use convbench::coordinator::{artifact_inputs, kernel_layer};
+use convbench::coordinator::kernel_layer;
 use convbench::harness::measure_model;
 use convbench::mcu::McuConfig;
 use convbench::models::{experiment_input, experiment_layer};
-use convbench::nn::NoopMonitor;
-use convbench::runtime::{artifact_path, Runtime};
+use convbench::nn::{Model, NoopMonitor, Tensor};
+use convbench::runtime::artifact_path;
+
+/// Cross-check against the AOT artifact on the PJRT runtime.
+#[cfg(feature = "pjrt")]
+fn check_artifact(model: &Model, x: &Tensor, want: &[i32], path: &str) {
+    use convbench::coordinator::artifact_inputs;
+    use convbench::runtime::Runtime;
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let loaded = rt.load_hlo_text(path).expect("load artifact");
+    let outs = loaded.run_i32(&artifact_inputs(model, x)).expect("execute");
+    assert_eq!(outs[0], want, "{}: engine vs HLO artifact", model.name);
+    println!("          ✓ bit-exact vs JAX/Pallas artifact ({path})");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn check_artifact(_model: &Model, _x: &Tensor, _want: &[i32], path: &str) {
+    println!("          (skipping {path}: built without the `pjrt` feature)");
+}
 
 fn main() {
     // --- 1. a layer configuration straight from the paper's Table 2
@@ -50,12 +68,8 @@ fn main() {
         // --- 4. cross-layer check against the AOT artifact (if built)
         let path = artifact_path("artifacts", &format!("kernel_{}", prim.name()));
         if std::path::Path::new(&path).exists() {
-            let rt = Runtime::cpu().expect("pjrt cpu client");
-            let loaded = rt.load_hlo_text(&path).expect("load artifact");
-            let outs = loaded.run_i32(&artifact_inputs(&model, &x)).expect("execute");
             let want: Vec<i32> = y_simd.data.iter().map(|&v| v as i32).collect();
-            assert_eq!(outs[0], want, "{}: engine vs HLO artifact", prim.name());
-            println!("          ✓ bit-exact vs JAX/Pallas artifact ({path})");
+            check_artifact(&model, &x, &want, &path);
         }
     }
     println!("\nquickstart OK");

@@ -1,0 +1,78 @@
+//! Bench: the schedule auto-tuner itself — cold search cost (every
+//! candidate through the simulator), warm-cache replay cost (zero
+//! simulator evaluations), and the single-layer scoring hot path. The
+//! cold/warm ratio is the headline number: it is what a persistent
+//! tuning cache buys every redeployment.
+//!
+//! Run: `cargo bench --bench tuner_search`
+
+use convbench::analytic::Primitive;
+use convbench::harness::quick_plans;
+use convbench::mcu::McuConfig;
+use convbench::models::{experiment_input, experiment_layer, mcunet};
+use convbench::nn::Tensor;
+use convbench::report::write_report;
+use convbench::tuner::{tune_model, Objective, TuningCache};
+use convbench::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let cfg = McuConfig::default();
+
+    // --- cold search: fresh cache per iteration (single Table 2 layer)
+    let plan = &quick_plans()[1];
+    let model = experiment_layer(&plan.base, Primitive::Standard, 3);
+    let x = experiment_input(&plan.base, 4);
+    b.run("tune/layer/cold", || {
+        let mut cache = TuningCache::in_memory();
+        let (s, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert!(stats.evaluations > 0);
+        s.latency_s
+    });
+
+    // --- warm replay: shared pre-filled cache
+    let mut warm = TuningCache::in_memory();
+    let _ = tune_model(&model, &x, &cfg, Objective::Latency, &mut warm);
+    b.run("tune/layer/warm", || {
+        let (s, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut warm);
+        assert_eq!(stats.evaluations, 0);
+        s.latency_s
+    });
+
+    // --- whole-model tuning (MCU-Net, the serving registration path)
+    let net = mcunet(Primitive::DepthwiseSeparable, 7);
+    let xin = Tensor::zeros(net.input_shape, net.input_q);
+    b.run("tune/mcunet-dws/cold", || {
+        let mut cache = TuningCache::in_memory();
+        let (s, _) = tune_model(&net, &xin, &cfg, Objective::Latency, &mut cache);
+        s.latency_s
+    });
+    let mut warm_net = TuningCache::in_memory();
+    let _ = tune_model(&net, &xin, &cfg, Objective::Latency, &mut warm_net);
+    b.run("tune/mcunet-dws/warm", || {
+        let (s, stats) = tune_model(&net, &xin, &cfg, Objective::Latency, &mut warm_net);
+        assert_eq!(stats.evaluations, 0);
+        s.latency_s
+    });
+
+    b.write_csv("results/bench_tuner_search.csv");
+
+    // headline: what the cache buys a redeployment
+    let cold = b.results.iter().find(|r| r.name == "tune/mcunet-dws/cold").unwrap().ns.mean;
+    let warm = b.results.iter().find(|r| r.name == "tune/mcunet-dws/warm").unwrap().ns.mean;
+    println!(
+        "tuner: cold mcunet search {:.2} ms, warm replay {:.3} ms — cache speedup {:.0}x",
+        cold / 1e6,
+        warm / 1e6,
+        cold / warm
+    );
+    let _ = write_report(
+        "results/tuner_cache_speedup.md",
+        &format!(
+            "| search | mean (ms) |\n|---|---|\n| cold | {:.3} |\n| warm | {:.4} |\n| speedup | {:.0}x |\n",
+            cold / 1e6,
+            warm / 1e6,
+            cold / warm
+        ),
+    );
+}

@@ -10,7 +10,9 @@ pub use pipeline::{
     FloatAddConv, FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift,
 };
 pub use server::{InferenceServer, Request, Response, ServerStats};
-pub use validate::{artifact_inputs, kernel_layer, validate_all, validate_cli, validate_primitive};
+pub use validate::{artifact_inputs, kernel_layer, validate_cli};
+#[cfg(feature = "pjrt")]
+pub use validate::{validate_all, validate_primitive};
 
 use crate::analytic::Primitive;
 use crate::mcu::McuConfig;

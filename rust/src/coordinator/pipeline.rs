@@ -5,11 +5,13 @@
 //! [`Model`]. This is the path a user walks to put their own network on
 //! the simulated MCU (and the path the end-to-end example exercises).
 
+use crate::mcu::McuConfig;
 use crate::nn::{
     uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
-    QuantDepthwise, Shape, ShiftConv,
+    QuantDepthwise, Shape, ShiftConv, Tensor,
 };
 use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
+use crate::tuner::{tune_model, Objective, TuneStats, TunedSchedule, TuningCache};
 
 /// A float convolution stage (standard/grouped via `groups`).
 #[derive(Clone, Debug)]
@@ -175,6 +177,24 @@ impl FloatModel {
             shape = nshape;
         }
         model
+    }
+
+    /// Deploy and auto-tune in one step: calibrate + quantize as
+    /// [`FloatModel::deploy`], then pick the per-layer schedule that
+    /// minimizes `objective` on the simulated MCU, consulting (and
+    /// filling) the tuning `cache`. The first calibration input doubles
+    /// as the tuning input (event counts are shape-driven).
+    pub fn deploy_tuned(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, TuneStats) {
+        let model = self.deploy(calib);
+        let x = Tensor::from_f32(self.input_shape, model.input_q, &calib[0]);
+        let (schedule, stats) = tune_model(&model, &x, cfg, objective, cache);
+        (model, schedule, stats)
     }
 }
 
@@ -582,6 +602,32 @@ mod tests {
         let a = qm.forward(&x, false, &mut NoopMonitor);
         let b = qm.forward(&x, true, &mut NoopMonitor);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn deploy_tuned_is_bit_exact_and_no_slower_than_fixed() {
+        let mut rng = Rng::new(6);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let (qm, schedule, stats) =
+            fm.deploy_tuned(&calib, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(schedule.layers.len(), qm.layers.len());
+        assert!(stats.evaluations > 0);
+        // tuned execution matches the engine bit-for-bit
+        let x = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, &calib[0]);
+        let want = qm.forward(&x, true, &mut NoopMonitor);
+        let got = schedule.run(&qm, &x, &mut NoopMonitor);
+        assert_eq!(want.data, got.data);
+        // and never loses to either fixed path
+        let scalar = crate::harness::measure_model(&qm, &x, false, &cfg);
+        let simd = crate::harness::measure_model(&qm, &x, true, &cfg);
+        assert!(schedule.latency_s <= scalar.latency_s.min(simd.latency_s) + 1e-12);
+        // warm redeploy: zero simulator evaluations
+        let (_, _, warm) = fm.deploy_tuned(&calib, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(warm.evaluations, 0);
+        assert_eq!(warm.cache_hits, qm.layers.len());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //! the request queue and batches requests; worker threads run the int8
 //! engine (zero-overhead [`NoopMonitor`]); per-request latency and
 //! simulated MCU energy are accounted from a one-time profile of the
-//! deployed model.
+//! deployed model. Models can be registered with their paper-default
+//! schedule ([`InferenceServer::start`]) or auto-tuned per layer at
+//! registration ([`InferenceServer::start_tuned`]), in which case every
+//! inference executes the tuned kernels and the per-request MCU cost
+//! reflects the tuned schedule.
 //!
 //! (tokio is not in the offline vendor set — std threads + mpsc channels
 //! provide the same structure; see Cargo.toml note.)
@@ -15,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
 use crate::nn::{argmax, Model, NoopMonitor, Tensor};
+use crate::tuner::{tune_model, Objective, TunedSchedule, TuningCache};
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -53,8 +58,10 @@ pub struct ServerStats {
 
 struct Deployed {
     model: Model,
-    /// One-time simulated measurement (SIMD path, default MCU config).
+    /// One-time simulated measurement (SIMD path, or the tuned schedule).
     mcu: Measurement,
+    /// Tuned per-layer schedule; `None` serves the paper-default SIMD path.
+    schedule: Option<TunedSchedule>,
 }
 
 enum Job {
@@ -81,8 +88,35 @@ impl InferenceServer {
             // one-time MCU profile: counts of a representative input
             let x = Tensor::zeros(m.input_shape, m.input_q);
             let mcu = crate::harness::measure_model(&m, &x, true, cfg);
-            registry.insert(m.name.clone(), Deployed { model: m, mcu });
+            registry.insert(m.name.clone(), Deployed { model: m, mcu, schedule: None });
         }
+        Self::spawn(registry, n_workers)
+    }
+
+    /// Deploy a set of models with per-layer auto-tuned schedules (the
+    /// tuning cache is shared across the registered models, so repeated
+    /// layer shapes tune once).
+    pub fn start_tuned(
+        models: Vec<Model>,
+        n_workers: usize,
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+    ) -> Self {
+        let mut registry = HashMap::new();
+        for m in models {
+            let x = Tensor::zeros(m.input_shape, m.input_q);
+            let (schedule, _) = tune_model(&m, &x, cfg, objective, cache);
+            let mcu = schedule.as_measurement();
+            registry.insert(
+                m.name.clone(),
+                Deployed { model: m, mcu, schedule: Some(schedule) },
+            );
+        }
+        Self::spawn(registry, n_workers)
+    }
+
+    fn spawn(registry: HashMap<String, Deployed>, n_workers: usize) -> Self {
         let models = Arc::new(registry);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -160,26 +194,12 @@ impl InferenceServer {
 
     /// Current statistics.
     pub fn stats(&self) -> ServerStats {
-        let mut lats = self.latencies_us.lock().unwrap().clone();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lats.is_empty() {
-                return 0.0;
-            }
-            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
-            lats[idx]
-        };
-        ServerStats {
-            served: self.served.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            p50_us: pct(0.5),
-            p99_us: pct(0.99),
-            mean_us: if lats.is_empty() {
-                0.0
-            } else {
-                lats.iter().sum::<f64>() / lats.len() as f64
-            },
-        }
+        let lats = self.latencies_us.lock().unwrap().clone();
+        compute_stats(
+            self.served.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            lats,
+        )
     }
 
     /// Graceful shutdown: drain workers.
@@ -192,6 +212,33 @@ impl InferenceServer {
             let _ = w.join();
         }
         self.stats()
+    }
+}
+
+/// Summarize latency samples into [`ServerStats`]. Percentiles use
+/// nearest-rank on the sorted samples: index `round((n - 1) · p)` — so
+/// p50 of 1..=100 µs is 51 µs and p99 is 99 µs (pinned by a unit test;
+/// the serving hot path depends on this staying stable under future
+/// batching work).
+fn compute_stats(served: u64, errors: u64, mut lats_us: Vec<f64>) -> ServerStats {
+    lats_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if lats_us.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lats_us.len() as f64 - 1.0) * p).round() as usize;
+        lats_us[idx.min(lats_us.len() - 1)]
+    };
+    ServerStats {
+        served,
+        errors,
+        p50_us: pct(0.5),
+        p99_us: pct(0.99),
+        mean_us: if lats_us.is_empty() {
+            0.0
+        } else {
+            lats_us.iter().sum::<f64>() / lats_us.len() as f64
+        },
     }
 }
 
@@ -212,7 +259,10 @@ fn serve_one(
         ));
     }
     let x = Tensor::from_vec(m.input_shape, m.input_q, req.input.clone());
-    let out = m.forward(&x, true, &mut NoopMonitor);
+    let out = match &deployed.schedule {
+        Some(s) => s.run(m, &x, &mut NoopMonitor),
+        None => m.forward(&x, true, &mut NoopMonitor),
+    };
     Ok(Response {
         id: req.id,
         model: req.model.clone(),
@@ -316,6 +366,53 @@ mod tests {
         assert_eq!(stats.served, 64);
         // request conservation: no response lost, none double-counted
         assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn percentiles_pinned_on_known_distribution() {
+        // 100 samples 1..=100 µs: nearest-rank at round((n-1)·p) gives
+        // p50 = lats[50] = 51, p99 = lats[98] = 99, mean = 50.5
+        let lats: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let s = compute_stats(100, 0, lats);
+        assert_eq!(s.p50_us, 51.0);
+        assert_eq!(s.p99_us, 99.0);
+        assert!((s.mean_us - 50.5).abs() < 1e-12);
+        // order independence: shuffled input summarizes identically
+        let mut shuffled: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        Rng::new(11).shuffle(&mut shuffled);
+        let s2 = compute_stats(100, 0, shuffled);
+        assert_eq!(s2.p50_us, 51.0);
+        assert_eq!(s2.p99_us, 99.0);
+        // degenerate inputs
+        let empty = compute_stats(0, 0, Vec::new());
+        assert_eq!((empty.p50_us, empty.p99_us, empty.mean_us), (0.0, 0.0, 0.0));
+        let one = compute_stats(1, 0, vec![7.5]);
+        assert_eq!((one.p50_us, one.p99_us, one.mean_us), (7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn tuned_server_matches_untuned_outputs() {
+        use crate::tuner::{Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let models = || vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)];
+        let plain = InferenceServer::start(models(), 1, &cfg);
+        let mut cache = TuningCache::in_memory();
+        let tuned =
+            InferenceServer::start_tuned(models(), 1, &cfg, Objective::Latency, &mut cache);
+        let mut rng = Rng::new(3);
+        for (i, name) in ["mcunet-standard", "mcunet-shift"].iter().enumerate() {
+            let req = request(i as u64, name, &mut rng);
+            let a = plain.infer(req.clone()).unwrap();
+            let b = tuned.infer(req).unwrap();
+            // tuned schedules are bit-exact; only the cost model changes
+            assert_eq!(a.logits, b.logits, "{name}");
+            assert_eq!(a.class, b.class);
+            // the tuned cost is never worse than the fixed SIMD profile
+            assert!(b.mcu_latency_s <= a.mcu_latency_s + 1e-12, "{name}");
+            assert!(b.mcu_energy_mj <= a.mcu_energy_mj + 1e-12, "{name}");
+        }
+        plain.shutdown();
+        tuned.shutdown();
     }
 
     #[test]

@@ -6,11 +6,15 @@
 //! in i32 (see `python/compile/`): inputs are int8 values sign-extended to
 //! i32, outputs are the engine's int8 outputs as i32.
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::models::{experiment_input, experiment_layer, LayerParams};
-use crate::nn::{NoopMonitor, Tensor};
-use crate::runtime::{artifact_path, InputI32, Runtime};
+use crate::models::LayerParams;
+use crate::nn::Tensor;
+use crate::runtime::InputI32;
+#[cfg(feature = "pjrt")]
+use crate::{
+    models::{experiment_input, experiment_layer},
+    nn::NoopMonitor,
+    runtime::{artifact_path, Runtime},
+};
 
 /// The layer configuration every kernel artifact is lowered at (must match
 /// `python/compile/aot.py` KERNEL_LAYER).
@@ -106,11 +110,12 @@ pub fn artifact_inputs(model: &crate::nn::Model, x: &Tensor) -> Vec<InputI32> {
 }
 
 /// Validate one primitive's kernel artifact against the engine.
+#[cfg(feature = "pjrt")]
 pub fn validate_primitive(
     rt: &Runtime,
     dir: &str,
     prim: crate::analytic::Primitive,
-) -> Result<Validation> {
+) -> Result<Validation, String> {
     let p = kernel_layer();
     let model = experiment_layer(&p, prim, VALIDATE_SEED);
     let x = experiment_input(&p, VALIDATE_SEED);
@@ -124,14 +129,14 @@ pub fn validate_primitive(
     let path = artifact_path(dir, &name);
     let loaded = rt
         .load_hlo_text(&path)
-        .with_context(|| format!("loading {path}"))?;
+        .map_err(|e| format!("loading {path}: {e}"))?;
     let outs = loaded.run_i32(&artifact_inputs(&model, &x))?;
     let got = outs
         .first()
-        .ok_or_else(|| anyhow!("artifact returned no outputs"))?;
+        .ok_or_else(|| "artifact returned no outputs".to_string())?;
 
     if got.len() != want.len() {
-        return Err(anyhow!(
+        return Err(format!(
             "{name}: output length {} != engine {}",
             got.len(),
             want.len()
@@ -156,7 +161,8 @@ pub fn validate_primitive(
 }
 
 /// Validate every available kernel artifact; returns (validations, all_ok).
-pub fn validate_all(dir: &str) -> Result<(Vec<Validation>, bool)> {
+#[cfg(feature = "pjrt")]
+pub fn validate_all(dir: &str) -> Result<(Vec<Validation>, bool), String> {
     let rt = Runtime::cpu()?;
     let mut results = Vec::new();
     let mut all_ok = true;
@@ -173,7 +179,19 @@ pub fn validate_all(dir: &str) -> Result<(Vec<Validation>, bool)> {
     Ok((results, all_ok))
 }
 
+/// CLI entry point for `convbench validate` in builds without the PJRT
+/// runtime: report how to enable it and exit non-zero.
+#[cfg(not(feature = "pjrt"))]
+pub fn validate_cli(_dir: &str) {
+    eprintln!(
+        "convbench validate requires the `pjrt` cargo feature (and a vendored \
+         `xla` crate); rebuild with `cargo build --features pjrt` — see README."
+    );
+    std::process::exit(1);
+}
+
 /// CLI entry point for `convbench validate`.
+#[cfg(feature = "pjrt")]
 pub fn validate_cli(dir: &str) {
     match validate_all(dir) {
         Ok((results, all_ok)) => {
@@ -194,7 +212,7 @@ pub fn validate_cli(dir: &str) {
             std::process::exit(if all_ok { 0 } else { 1 });
         }
         Err(e) => {
-            eprintln!("validation error: {e:#}");
+            eprintln!("validation error: {e}");
             std::process::exit(1);
         }
     }

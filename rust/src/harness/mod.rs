@@ -8,6 +8,7 @@ pub mod nas;
 pub mod plan;
 pub mod regress;
 pub mod sweep;
+pub mod tuned;
 
 pub use ablation::{ablation_markdown, best_feasible, blocking_ablation, BlockingPoint};
 pub use figures::{
@@ -18,3 +19,4 @@ pub use nas::{best_under_energy_budget, enumerate as nas_enumerate, nas_markdown
 pub use plan::{quick_plans, table2_plans, Axis, Sweep};
 pub use regress::{regressions, RegressionReport};
 pub use sweep::{measure_model, run_all, run_sweep, SweepPoint};
+pub use tuned::{tuned_csv, tuned_markdown, tuned_vs_fixed, TunedCmpRow};

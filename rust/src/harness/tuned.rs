@@ -1,0 +1,184 @@
+//! Tuned-vs-fixed comparison: for every Table 2 workload (base
+//! configuration × primitive), measure the two fixed schedules the paper
+//! deploys (scalar everywhere / SIMD everywhere) and the auto-tuned
+//! per-layer schedule, for both the latency and the energy objective.
+//! The tuner's candidate space contains both fixed schedules, so the
+//! tuned result is ≤ the best fixed one by construction — this harness
+//! measures *how much* better substitution + blocking get to be, and the
+//! integration tests pin the inequality.
+
+use crate::analytic::Primitive;
+use crate::mcu::{McuConfig, Measurement};
+use crate::models::{experiment_input, experiment_layer, LayerParams};
+use crate::tuner::{tune_model, Objective, TuneStats, TunedSchedule, TuningCache};
+
+use super::plan::Sweep;
+use super::sweep::measure_model;
+
+/// One workload row of the comparison.
+#[derive(Clone, Debug)]
+pub struct TunedCmpRow {
+    pub experiment: usize,
+    pub primitive: Primitive,
+    pub params: LayerParams,
+    /// Fixed all-scalar schedule.
+    pub fixed_scalar: Measurement,
+    /// Fixed all-SIMD schedule (`None` for add convolution).
+    pub fixed_simd: Option<Measurement>,
+    /// Tuned under [`Objective::Latency`].
+    pub tuned_latency: TunedSchedule,
+    /// Tuned under [`Objective::Energy`].
+    pub tuned_energy: TunedSchedule,
+    pub stats: TuneStats,
+}
+
+impl TunedCmpRow {
+    /// Best fixed latency across the paper's two code paths.
+    pub fn best_fixed_latency_s(&self) -> f64 {
+        self.fixed_simd
+            .map(|m| m.latency_s.min(self.fixed_scalar.latency_s))
+            .unwrap_or(self.fixed_scalar.latency_s)
+    }
+
+    /// Best fixed energy across the paper's two code paths.
+    pub fn best_fixed_energy_mj(&self) -> f64 {
+        self.fixed_simd
+            .map(|m| m.energy_mj.min(self.fixed_scalar.energy_mj))
+            .unwrap_or(self.fixed_scalar.energy_mj)
+    }
+
+    /// The acceptance inequality: tuned(latency) beats (or ties) the best
+    /// fixed latency AND tuned(energy) beats (or ties) the best fixed
+    /// energy.
+    pub fn tuned_is_never_worse(&self) -> bool {
+        self.tuned_latency.latency_s <= self.best_fixed_latency_s() + 1e-12
+            && self.tuned_energy.energy_mj <= self.best_fixed_energy_mj() + 1e-12
+    }
+}
+
+/// Run the comparison over the base configuration of each experiment
+/// plan, for all five primitives, consulting (and filling) `cache`.
+pub fn tuned_vs_fixed(
+    plans: &[Sweep],
+    cfg: &McuConfig,
+    cache: &mut TuningCache,
+) -> Vec<TunedCmpRow> {
+    let mut rows = Vec::new();
+    for plan in plans {
+        let params = plan.base;
+        for &prim in &Primitive::ALL {
+            let model = experiment_layer(&params, prim, 0xEC0 + plan.id as u64);
+            let x = experiment_input(&params, 0x11A + plan.id as u64);
+            let fixed_scalar = measure_model(&model, &x, false, cfg);
+            let fixed_simd = prim.has_simd().then(|| measure_model(&model, &x, true, cfg));
+            let (tuned_latency, s1) = tune_model(&model, &x, cfg, Objective::Latency, cache);
+            let (tuned_energy, s2) = tune_model(&model, &x, cfg, Objective::Energy, cache);
+            rows.push(TunedCmpRow {
+                experiment: plan.id,
+                primitive: prim,
+                params,
+                fixed_scalar,
+                fixed_simd,
+                tuned_latency,
+                tuned_energy,
+                stats: TuneStats {
+                    evaluations: s1.evaluations + s2.evaluations,
+                    cache_hits: s1.cache_hits + s2.cache_hits,
+                    candidates: s1.candidates + s2.candidates,
+                },
+            });
+        }
+    }
+    rows
+}
+
+/// Markdown table of the comparison.
+pub fn tuned_markdown(rows: &[TunedCmpRow]) -> String {
+    let mut s = String::from(
+        "| exp | primitive | fixed scalar (ms) | fixed SIMD (ms) | tuned (ms) | \
+         fixed best (mJ) | tuned (mJ) | evals | never worse |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.3} | {} | {:.3} | {:.4} | {:.4} | {} | {} |\n",
+            r.experiment,
+            r.primitive.name(),
+            1e3 * r.fixed_scalar.latency_s,
+            r.fixed_simd
+                .map(|m| format!("{:.3}", 1e3 * m.latency_s))
+                .unwrap_or_else(|| "—".into()),
+            1e3 * r.tuned_latency.latency_s,
+            r.best_fixed_energy_mj(),
+            r.tuned_energy.energy_mj,
+            r.stats.evaluations,
+            if r.tuned_is_never_worse() { "yes" } else { "NO" },
+        ));
+    }
+    s
+}
+
+/// CSV of the comparison (one row per workload).
+pub fn tuned_csv(rows: &[TunedCmpRow]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from(
+        "experiment,primitive,fixed_scalar_latency_s,fixed_simd_latency_s,\
+         tuned_latency_s,best_fixed_energy_mj,tuned_energy_mj,\
+         tuned_peak_ram_bytes,evaluations,cache_hits\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{},{},{:.6e},{},{:.6e},{:.6e},{:.6e},{},{},{}",
+            r.experiment,
+            r.primitive.name(),
+            r.fixed_scalar.latency_s,
+            r.fixed_simd
+                .map(|m| format!("{:.6e}", m.latency_s))
+                .unwrap_or_default(),
+            r.tuned_latency.latency_s,
+            r.best_fixed_energy_mj(),
+            r.tuned_energy.energy_mj,
+            r.tuned_latency.peak_ram_bytes,
+            r.stats.evaluations,
+            r.stats.cache_hits,
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::plan::quick_plans;
+
+    #[test]
+    fn quick_rows_cover_all_plans_and_primitives() {
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let plans = quick_plans();
+        let rows = tuned_vs_fixed(&plans[..2], &cfg, &mut cache);
+        assert_eq!(rows.len(), 2 * Primitive::ALL.len());
+        for r in &rows {
+            assert!(r.tuned_is_never_worse(), "{:?} exp {}", r.primitive, r.experiment);
+        }
+        let md = tuned_markdown(&rows);
+        assert_eq!(md.lines().count(), rows.len() + 2);
+        assert!(!md.contains("| NO |"), "a tuned row regressed:\n{md}");
+        let csv = tuned_csv(&rows);
+        assert_eq!(csv.lines().count(), rows.len() + 1);
+    }
+
+    #[test]
+    fn second_pass_is_fully_cached() {
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let plans = quick_plans();
+        let _ = tuned_vs_fixed(&plans[..1], &cfg, &mut cache);
+        let rows = tuned_vs_fixed(&plans[..1], &cfg, &mut cache);
+        for r in &rows {
+            assert_eq!(r.stats.evaluations, 0, "{:?}", r.primitive);
+            assert!(r.stats.cache_hits > 0);
+        }
+    }
+}

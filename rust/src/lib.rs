@@ -19,9 +19,16 @@
 //! * [`harness`] — the experiment plans of Table 2 and generators for
 //!   every figure and table in the evaluation section.
 //! * [`models`] — layer configs and small end-to-end CNNs ("MCU-Net").
-//! * [`runtime`] — PJRT client (via the `xla` crate) that loads the
-//!   JAX/Pallas-lowered HLO artifacts for cross-layer validation.
-//! * [`coordinator`] — deployment pipeline + threaded inference server.
+//! * [`tuner`] — cost-model-driven per-layer schedule auto-tuner:
+//!   enumerates primitive substitutions, scalar/SIMD lowering and (P, F)
+//!   register blocking per layer, scores candidates on the [`mcu`]
+//!   simulator under a latency/energy/RAM objective, and persists the
+//!   winning schedules in a JSON tuning cache (`convbench tune`).
+//! * [`runtime`] — artifact bookkeeping for the JAX/Pallas-lowered HLO
+//!   models; the PJRT client (via the `xla` crate) sits behind the
+//!   `pjrt` cargo feature for cross-layer validation.
+//! * [`coordinator`] — deployment pipeline + threaded inference server
+//!   (both can deploy tuned schedules).
 //! * [`report`] — CSV / markdown emitters for EXPERIMENTS.md.
 //! * [`util`] — offline substitutes for clap/criterion/proptest/serde.
 
@@ -34,4 +41,5 @@ pub mod nn;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod tuner;
 pub mod util;

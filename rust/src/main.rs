@@ -11,6 +11,10 @@
 //! convbench table4                 # Table 4 optimization levels
 //! convbench regressions            # §4.1 linearity scores
 //! convbench all [--out results]    # everything above into --out
+//! convbench tune [--objective latency|energy|ram|weighted[:L,E,R]]
+//!                [--cache PATH] [--quick] [--out results]
+//!                                  # per-layer schedule auto-tuner over
+//!                                  # the Table 2 workloads + model zoo
 //! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
 //! convbench serve [--requests N] [--workers W] # inference service demo
 //! ```
@@ -41,6 +45,7 @@ fn main() {
         Some("table4") => cmd_table4(),
         Some("regressions") => cmd_regressions(&cfg, quick),
         Some("all") => cmd_all(&cfg, quick, &out_dir),
+        Some("tune") => cmd_tune(&args, &cfg, quick, &out_dir),
         Some("validate") => {
             let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
             coordinator::validate_cli(&dir);
@@ -53,7 +58,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|validate|profile|serve> \
+                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve> \
                  [--exp N] [--out DIR] [--quick]"
             );
             std::process::exit(2);
@@ -253,6 +258,78 @@ fn cmd_all(cfg: &McuConfig, quick: bool, out_dir: &str) {
         report::write_report(&format!("{out_dir}/regressions.md"), &r.to_markdown()).unwrap();
     }
     println!("wrote all reports to {out_dir}/");
+}
+
+/// `convbench tune` — run the per-layer schedule auto-tuner over every
+/// Table 2 workload (base config × primitive) and the MCU-Net zoo,
+/// compare against the paper's fixed scalar/SIMD schedules, and persist
+/// the tuning cache so the next invocation replays without touching the
+/// simulator.
+fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
+    use convbench::harness::{tuned_csv, tuned_markdown, tuned_vs_fixed};
+    use convbench::models::mcunet;
+    use convbench::nn::Tensor;
+    use convbench::tuner::{tune_model, Objective, TuningCache};
+
+    let objective = match Objective::parse(args.get("objective").unwrap_or("latency")) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let mut cache = match args.get("cache") {
+        Some(path) => TuningCache::load(path),
+        None => TuningCache::load(&format!("{out_dir}/tuning_cache.json")),
+    };
+    let warm_entries = cache.len();
+    eprintln!(
+        "tuning on {:.0} MHz/-{:?} ({} cached entries); --objective {} applies to the \
+         model-zoo schedules below — the Table 2 comparison always tunes both the \
+         latency and the energy objective (the acceptance inequality needs both)",
+        cfg.freq_mhz,
+        cfg.opt,
+        warm_entries,
+        objective.name(),
+    );
+
+    // Table 2 workloads: tuned (latency + energy) vs fixed schedules
+    let rows = tuned_vs_fixed(&plans(quick), cfg, &mut cache);
+    println!("Table 2 workloads — tuned (latency / energy objectives) vs fixed schedules\n");
+    println!("{}", tuned_markdown(&rows));
+    let evals: usize = rows.iter().map(|r| r.stats.evaluations).sum();
+    let hits: usize = rows.iter().map(|r| r.stats.cache_hits).sum();
+    let regressions = rows.iter().filter(|r| !r.tuned_is_never_worse()).count();
+
+    // the model zoo under the requested --objective, layer by layer
+    println!("MCU-Net zoo — objective {}\n", objective.name());
+    for prim in Primitive::ALL {
+        let model = mcunet(prim, 42);
+        let x = Tensor::zeros(model.input_shape, model.input_q);
+        let (schedule, _) = tune_model(&model, &x, cfg, objective, &mut cache);
+        println!("{}", schedule.to_markdown());
+    }
+
+    let csv_path = format!("{out_dir}/tuned_vs_fixed.csv");
+    report::write_report(&csv_path, &tuned_csv(&rows)).expect("write csv");
+    report::write_report(
+        &format!("{out_dir}/tuned_vs_fixed.json"),
+        &report::tuned_summary_json(&rows),
+    )
+    .expect("write json summary");
+    if let Err(e) = cache.save() {
+        eprintln!("warning: could not persist tuning cache: {e}");
+    }
+    eprintln!(
+        "tuned {} workloads: {evals} simulator evaluations, {hits} cache hits \
+         ({warm_entries} entries warm at start, {} now); wrote {csv_path}",
+        rows.len(),
+        cache.len()
+    );
+    if regressions > 0 {
+        eprintln!("ERROR: {regressions} workloads regressed vs the best fixed schedule");
+        std::process::exit(1);
+    }
 }
 
 /// `convbench profile --model mcunet-shift [--scalar]` — per-layer

@@ -168,6 +168,49 @@ mod tests {
     }
 
     #[test]
+    fn two_by_two_event_and_result_equivalence_property() {
+        // The doc claim of this module, as a property over randomized
+        // shapes: at P=2, F=2 the generalized block is indistinguishable
+        // from the production CMSIS-style kernel — same accumulators,
+        // same micro-op event stream — including K % 4 tails and
+        // saturating-range operand values.
+        check(
+            "block-2x2-equiv",
+            96,
+            |rng, _| {
+                let k = rng.range(1, 40);
+                let mut wa = vec![0i8; k];
+                let mut wb = vec![0i8; k];
+                rng.fill_i8(&mut wa, -128, 127);
+                rng.fill_i8(&mut wb, -128, 127);
+                let pa: Vec<i16> = (0..k).map(|_| rng.i8_range(-128, 127) as i16).collect();
+                let pb: Vec<i16> = (0..k).map(|_| rng.i8_range(-128, 127) as i16).collect();
+                let ba = rng.range(0, 2000) as i32 - 1000;
+                let bb = rng.range(0, 2000) as i32 - 1000;
+                (wa, wb, pa, pb, ba, bb)
+            },
+            |(wa, wb, pa, pb, ba, bb)| {
+                let waq: Vec<i16> = wa.iter().map(|&w| w as i16).collect();
+                let wbq: Vec<i16> = wb.iter().map(|&w| w as i16).collect();
+                let mut m1 = CountingMonitor::new();
+                let prod = mat_mult_2x2(&waq, &wbq, pa, pb, *ba, *bb, &mut m1);
+                let mut m2 = CountingMonitor::new();
+                let blk = mat_mult_block(
+                    &[wa.as_slice(), wb.as_slice()],
+                    &[pa.as_slice(), pb.as_slice()],
+                    &[*ba, *bb],
+                    &mut m2,
+                );
+                ensure(prod.to_vec() == blk, "accumulator mismatch")?;
+                ensure(
+                    m1.counts == m2.counts,
+                    format!("event mismatch: 2x2 {:?} vs block {:?}", m1.counts, m2.counts),
+                )
+            },
+        );
+    }
+
+    #[test]
     fn loads_per_mac_decrease_with_blocking() {
         assert!(loads_per_mac(1, 1) > loads_per_mac(2, 2));
         assert!(loads_per_mac(2, 2) > loads_per_mac(4, 4));

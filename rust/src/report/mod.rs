@@ -176,6 +176,37 @@ pub fn fig4_csv(points: &[FreqPoint]) -> String {
     s
 }
 
+/// Machine-readable summary of a tuned-vs-fixed comparison (consumed by
+/// dashboards / CI trend tracking; the human-readable table is
+/// [`crate::harness::tuned_markdown`]).
+pub fn tuned_summary_json(rows: &[crate::harness::TunedCmpRow]) -> String {
+    use crate::util::json::Json;
+    let workloads: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .field("experiment", r.experiment)
+                .field("primitive", r.primitive.name())
+                .field("fixed_scalar_latency_s", r.fixed_scalar.latency_s)
+                .field(
+                    "fixed_simd_latency_s",
+                    r.fixed_simd.map(|m| Json::Num(m.latency_s)).unwrap_or(Json::Null),
+                )
+                .field("tuned_latency_s", r.tuned_latency.latency_s)
+                .field("best_fixed_energy_mj", r.best_fixed_energy_mj())
+                .field("tuned_energy_mj", r.tuned_energy.energy_mj)
+                .field("tuned_peak_ram_bytes", r.tuned_latency.peak_ram_bytes)
+                .field("evaluations", r.stats.evaluations)
+                .field("cache_hits", r.stats.cache_hits)
+                .field("never_worse", r.tuned_is_never_worse())
+        })
+        .collect();
+    Json::obj()
+        .field("workloads", Json::Arr(workloads))
+        .field("all_never_worse", rows.iter().all(|r| r.tuned_is_never_worse()))
+        .to_string()
+}
+
 /// Write a string to a file, creating parent directories.
 pub fn write_report(path: &str, content: &str) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
@@ -232,5 +263,23 @@ mod tests {
         let pts = fig4_frequency_sweep(&[10.0, 80.0]);
         let csv = fig4_csv(&pts);
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn tuned_summary_json_parses_back() {
+        use crate::harness::tuned_vs_fixed;
+        use crate::tuner::TuningCache;
+        use crate::util::json::Json;
+        let mut cache = TuningCache::in_memory();
+        let rows = tuned_vs_fixed(&quick_plans()[..1], &McuConfig::default(), &mut cache);
+        let text = tuned_summary_json(&rows);
+        let j = Json::parse(&text).expect("valid json");
+        assert_eq!(j.get("all_never_worse").and_then(|v| v.as_bool()), Some(true));
+        let w = j.get("workloads").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(w.len(), rows.len());
+        // the add row has a null fixed SIMD latency
+        assert!(w
+            .iter()
+            .any(|v| v.get("fixed_simd_latency_s") == Some(&Json::Null)));
     }
 }

@@ -1,8 +1,14 @@
 //! PJRT runtime: loads the HLO-text artifacts produced by the build-time
-//! python path (`python/compile/aot.py` — JAX/Pallas lowered to HLO text,
-//! see /opt/xla-example/load_hlo and aot_recipe) and executes them on the
-//! `xla` crate's PJRT CPU client. Python never runs here — the rust binary
-//! is self-contained once `artifacts/` exists.
+//! python path (`python/compile/aot.py` — JAX/Pallas lowered to HLO text)
+//! and executes them on the `xla` crate's PJRT CPU client. Python never
+//! runs here — the rust binary is self-contained once `artifacts/` exists.
+//!
+//! The PJRT client itself lives in [`pjrt`] behind the `pjrt` cargo
+//! feature: the `xla` crate is not part of the offline vendor set, so the
+//! default build ships only the artifact bookkeeping (paths, listings,
+//! the [`InputI32`] interchange type) and the engine-side halves of the
+//! cross-layer contract. Enable `--features pjrt` in an environment with
+//! the `xla` crate vendored (see README "PJRT validation").
 //!
 //! The cross-layer contract: every artifact takes `i32` tensors holding
 //! int8-quantized values (i32 at the interface dodges dtype-conversion
@@ -10,55 +16,13 @@
 //! exact integer math) and returns `i32` tensors, so the rust engine's
 //! outputs can be compared bit-for-bit.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{LoadedModel, Runtime};
 
-/// A PJRT execution context (CPU).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Self { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO **text** artifact and compile it.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        Ok(LoadedModel {
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-            exe,
-        })
-    }
-}
-
-/// A compiled executable plus metadata.
-pub struct LoadedModel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// An input tensor for execution: flat i32 data + dims.
+/// An input tensor for artifact execution: flat i32 data + dims.
 #[derive(Clone, Debug)]
 pub struct InputI32 {
     pub data: Vec<i32>,
@@ -79,44 +43,6 @@ impl InputI32 {
     /// From int8 engine data.
     pub fn from_i8(data: &[i8], dims: &[usize]) -> Self {
         Self::new(data.iter().map(|&v| v as i32).collect(), dims)
-    }
-
-    fn literal(&self) -> Result<xla::Literal> {
-        xla::Literal::vec1(&self.data)
-            .reshape(&self.dims)
-            .map_err(|e| anyhow!("reshape input: {e:?}"))
-    }
-}
-
-impl LoadedModel {
-    /// Execute with i32 inputs; returns each tuple element flattened.
-    /// The artifacts are lowered with `return_tuple=True`, so the single
-    /// output literal is a tuple.
-    pub fn run_i32(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i32>>> {
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|i| i.literal()).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-
-    /// Execute and saturate outputs back to the engine's i8 domain.
-    pub fn run_to_i8(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i8>>> {
-        Ok(self
-            .run_i32(inputs)?
-            .into_iter()
-            .map(|v| v.into_iter().map(crate::quant::sat_i8).collect())
-            .collect())
     }
 }
 

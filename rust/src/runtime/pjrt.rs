@@ -1,0 +1,90 @@
+//! The PJRT client half of the runtime (feature `pjrt`): compiles HLO-text
+//! artifacts with the `xla` crate and executes them on the CPU client.
+//! Errors surface as `String` (the crate is dependency-free by default;
+//! see `rust/src/util/`), formatted from the underlying xla errors.
+
+use std::path::Path;
+
+use super::InputI32;
+
+/// A PJRT execution context (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel, String> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| "artifact path not utf-8".to_string())?,
+        )
+        .map_err(|e| format!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {path:?}: {e:?}"))?;
+        Ok(LoadedModel {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+/// A compiled executable plus metadata.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn input_literal(input: &InputI32) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(&input.data)
+        .reshape(&input.dims)
+        .map_err(|e| format!("reshape input: {e:?}"))
+}
+
+impl LoadedModel {
+    /// Execute with i32 inputs; returns each tuple element flattened.
+    /// The artifacts are lowered with `return_tuple=True`, so the single
+    /// output literal is a tuple.
+    pub fn run_i32(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i32>>, String> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(input_literal)
+            .collect::<Result<_, String>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| format!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| format!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute and saturate outputs back to the engine's i8 domain.
+    pub fn run_to_i8(&self, inputs: &[InputI32]) -> Result<Vec<Vec<i8>>, String> {
+        Ok(self
+            .run_i32(inputs)?
+            .into_iter()
+            .map(|v| v.into_iter().map(crate::quant::sat_i8).collect())
+            .collect())
+    }
+}

@@ -1,0 +1,284 @@
+//! Persistent tuning cache: maps (layer signature, `McuConfig`
+//! fingerprint, objective) to the winning schedule-space candidate and
+//! its simulated measurement, serialized as JSON via [`crate::util::json`]
+//! so repeated deployments skip the simulator entirely (a warm `tune` run
+//! performs zero evaluations — asserted by the integration tests).
+//!
+//! Invalidation is by construction: the key embeds the MCU configuration
+//! and the objective, so changing either (different frequency, `-O0`
+//! instead of `-Os`, energy instead of latency) misses cleanly and
+//! re-tunes, while the stale entries stay valid for their own
+//! configuration.
+
+use std::collections::BTreeMap;
+
+use crate::mcu::McuConfig;
+use crate::util::json::Json;
+
+use super::space::{Candidate, KernelImpl, Lowering};
+
+/// Cache file format version (bump on incompatible schema changes —
+/// mismatching files are discarded wholesale).
+pub const CACHE_VERSION: i64 = 1;
+
+/// A cached per-layer decision: the winning candidate plus its simulated
+/// measurement (all inputs to the objective, so replay needs no simulator).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheEntry {
+    pub candidate: Candidate,
+    pub cycles: f64,
+    pub latency_s: f64,
+    pub energy_mj: f64,
+    pub mem_accesses: u64,
+    pub effective_macs: u64,
+    pub ram_bytes: usize,
+}
+
+/// Fingerprint of the simulated MCU configuration a measurement is valid
+/// for (part of every cache key).
+pub fn mcu_fingerprint(cfg: &McuConfig) -> String {
+    format!("{:.3}MHz-{:?}", cfg.freq_mhz, cfg.opt)
+}
+
+/// Compose a cache key.
+pub fn cache_key(layer_sig: &str, mcu_fp: &str, objective: &str) -> String {
+    format!("{layer_sig}|{mcu_fp}|{objective}")
+}
+
+/// The tuning cache: an in-memory map with optional JSON persistence.
+#[derive(Debug)]
+pub struct TuningCache {
+    path: Option<String>,
+    entries: BTreeMap<String, CacheEntry>,
+    dirty: bool,
+}
+
+impl TuningCache {
+    /// A cache that lives only for this process.
+    pub fn in_memory() -> Self {
+        Self {
+            path: None,
+            entries: BTreeMap::new(),
+            dirty: false,
+        }
+    }
+
+    /// Load a cache file; a missing, unreadable or incompatible file
+    /// yields an empty cache bound to the same path (it will be created
+    /// on [`TuningCache::save`]).
+    pub fn load(path: &str) -> Self {
+        let entries = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|json| parse_entries(&json))
+            .unwrap_or_default();
+        Self {
+            path: Some(path.to_string()),
+            entries,
+            dirty: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether entries were added since load/save.
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CacheEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn put(&mut self, key: String, entry: CacheEntry) {
+        let prev = self.entries.insert(key, entry);
+        if prev != Some(entry) {
+            self.dirty = true;
+        }
+    }
+
+    /// Serialize the whole cache.
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::with_capacity(self.entries.len());
+        for (key, e) in &self.entries {
+            let (patches, filters) = match e.candidate.lowering {
+                Lowering::Direct => (0usize, 0usize),
+                Lowering::Im2col { patches, filters } => (patches, filters),
+            };
+            fields.push((
+                key.clone(),
+                Json::obj()
+                    .field("kernel", e.candidate.kernel.as_str())
+                    .field("lowering", e.candidate.lowering.path_name())
+                    .field("patches", patches)
+                    .field("filters", filters)
+                    .field("cycles", e.cycles)
+                    .field("latency_s", e.latency_s)
+                    .field("energy_mj", e.energy_mj)
+                    .field("mem_accesses", e.mem_accesses)
+                    .field("effective_macs", e.effective_macs)
+                    .field("ram_bytes", e.ram_bytes),
+            ));
+        }
+        Json::obj()
+            .field("version", CACHE_VERSION)
+            .field("entries", Json::Obj(fields))
+    }
+
+    /// Persist to the bound path (no-op for in-memory caches). Parent
+    /// directories are created as needed.
+    pub fn save(&mut self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+trait LoweringName {
+    fn path_name(&self) -> &'static str;
+}
+
+impl LoweringName for Lowering {
+    fn path_name(&self) -> &'static str {
+        match self {
+            Lowering::Direct => "direct",
+            Lowering::Im2col { .. } => "im2col",
+        }
+    }
+}
+
+fn parse_entries(json: &Json) -> Option<BTreeMap<String, CacheEntry>> {
+    if json.get("version")?.as_i64()? != CACHE_VERSION {
+        return None;
+    }
+    let mut out = BTreeMap::new();
+    for (key, v) in json.get("entries")?.as_obj()? {
+        let kernel = KernelImpl::parse(v.get("kernel")?.as_str()?).ok()?;
+        let lowering = match v.get("lowering")?.as_str()? {
+            "direct" => Lowering::Direct,
+            "im2col" => Lowering::Im2col {
+                patches: v.get("patches")?.as_i64()? as usize,
+                filters: v.get("filters")?.as_i64()? as usize,
+            },
+            _ => return None,
+        };
+        out.insert(
+            key.clone(),
+            CacheEntry {
+                candidate: Candidate { kernel, lowering },
+                cycles: v.get("cycles")?.as_f64()?,
+                latency_s: v.get("latency_s")?.as_f64()?,
+                energy_mj: v.get("energy_mj")?.as_f64()?,
+                mem_accesses: v.get("mem_accesses")?.as_i64()? as u64,
+                effective_macs: v.get("effective_macs")?.as_i64()? as u64,
+                ram_bytes: v.get("ram_bytes")?.as_i64()? as usize,
+            },
+        );
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::OptLevel;
+
+    fn entry(lat: f64) -> CacheEntry {
+        CacheEntry {
+            candidate: Candidate {
+                kernel: KernelImpl::AsIs,
+                lowering: Lowering::Im2col { patches: 2, filters: 2 },
+            },
+            cycles: lat * 84e6,
+            latency_s: lat,
+            energy_mj: lat * 31.0,
+            mem_accesses: 1234,
+            effective_macs: 5678,
+            ram_bytes: 4096,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_json_text_is_identical() {
+        let mut c = TuningCache::in_memory();
+        c.put(cache_key("conv[x]@8x8x4", "84.000MHz-Os", "latency"), entry(0.011));
+        c.put(
+            cache_key("dw[y]@8x8x4", "84.000MHz-Os", "energy"),
+            CacheEntry {
+                candidate: Candidate { kernel: KernelImpl::DepthwiseAsConv, lowering: Lowering::Direct },
+                ..entry(0.5)
+            },
+        );
+        let text = c.to_json().to_string();
+        let parsed = parse_entries(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        for (k, v) in &parsed {
+            assert_eq!(c.get(k), Some(v), "{k}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_and_warm_reload() {
+        let dir = std::env::temp_dir().join("convbench-cache-test");
+        let path = dir.join("tuning.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut c = TuningCache::load(&path);
+        assert!(c.is_empty());
+        let key = cache_key("conv[a]@4x4x2", &mcu_fingerprint(&McuConfig::default()), "latency");
+        c.put(key.clone(), entry(0.002));
+        assert!(c.is_dirty());
+        c.save().expect("save cache");
+        assert!(!c.is_dirty());
+
+        let warm = TuningCache::load(&path);
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm.get(&key), Some(&entry(0.002)));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_or_versioned_files_load_empty() {
+        let dir = std::env::temp_dir().join("convbench-cache-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.json");
+        std::fs::write(&path, "not json at all {{{").unwrap();
+        assert!(TuningCache::load(path.to_str().unwrap()).is_empty());
+        std::fs::write(&path, r#"{"version":999,"entries":{}}"#).unwrap();
+        assert!(TuningCache::load(path.to_str().unwrap()).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mcu_config_change_invalidates_by_key() {
+        let os = McuConfig::default();
+        let o0 = McuConfig { freq_mhz: 84.0, opt: OptLevel::O0 };
+        let f20 = McuConfig { freq_mhz: 20.0, opt: OptLevel::Os };
+        let sig = "conv[z]@8x8x8";
+        let k_os = cache_key(sig, &mcu_fingerprint(&os), "latency");
+        let k_o0 = cache_key(sig, &mcu_fingerprint(&o0), "latency");
+        let k_f20 = cache_key(sig, &mcu_fingerprint(&f20), "latency");
+        assert_ne!(k_os, k_o0);
+        assert_ne!(k_os, k_f20);
+        let mut c = TuningCache::in_memory();
+        c.put(k_os.clone(), entry(0.01));
+        assert!(c.get(&k_os).is_some());
+        assert!(c.get(&k_o0).is_none(), "O0 must miss an Os-keyed entry");
+        assert!(c.get(&k_f20).is_none(), "20 MHz must miss an 84 MHz entry");
+        // objective change misses too
+        assert!(c.get(&cache_key(sig, &mcu_fingerprint(&os), "energy")).is_none());
+    }
+}

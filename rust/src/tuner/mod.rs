@@ -1,0 +1,161 @@
+//! Cost-model-driven per-layer schedule auto-tuner.
+//!
+//! The paper's central result is that the *choice* of primitive, code
+//! path (scalar vs `__SMLAD` SIMD) and register blocking dominates
+//! latency and energy on Cortex-M — yet a fixed deployment hard-codes one
+//! schedule for the whole model. This subsystem makes the selection
+//! automatic, per layer:
+//!
+//! * [`space`] enumerates the legal schedule space of each layer —
+//!   admissible primitive substitutions (depthwise ↔ grouped conv,
+//!   pointwise ↔ zero-shift shift-conv), direct vs im2col lowering, and
+//!   every (P, F) register blocking that fits the M4 register file
+//!   ([`crate::nn::blocking::fits_register_file`]) — and can *execute*
+//!   any candidate bit-exactly (the generalized blocked matmul runs
+//!   through [`crate::nn::blocking::mat_mult_block`]);
+//! * [`search`] scores every candidate with the MCU cycle/energy
+//!   simulator ([`crate::mcu::measure`]) under a configurable
+//!   [`Objective`] and emits a [`TunedSchedule`];
+//! * [`cache`] persists decisions as JSON keyed by layer shape +
+//!   [`crate::mcu::McuConfig`] + objective, so a warm re-deployment
+//!   performs **zero** simulator evaluations.
+//!
+//! Wiring: `coordinator::pipeline::FloatModel::deploy_tuned` tunes at
+//! deployment, `coordinator::server::InferenceServer::start_tuned`
+//! serves tuned variants, `convbench tune` drives the Table 2 workloads
+//! from the CLI, and `harness::tuned` compares tuned schedules against
+//! the fixed (primitive, path) configurations of the sweep harness.
+
+pub mod cache;
+pub mod search;
+pub mod space;
+
+pub use cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
+pub use search::{simd_flags, tune_model, LayerDecision, TuneStats, TunedSchedule};
+pub use space::{candidates, Candidate, KernelImpl, Lowering};
+
+/// What the tuner minimizes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Simulated end-to-end latency (seconds).
+    Latency,
+    /// Simulated energy per inference (mJ).
+    Energy,
+    /// Peak working SRAM (activations + schedule scratch).
+    PeakRam,
+    /// Weighted sum of the three (latency in ms, energy in mJ, RAM in
+    /// KiB, so the default weights are comparable in magnitude).
+    Weighted { latency: f64, energy: f64, ram: f64 },
+}
+
+impl Objective {
+    /// Parse a CLI spelling: `latency`, `energy`, `ram`, or
+    /// `weighted[:L,E,R]` (e.g. `weighted:1,0.5,0.1`).
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "energy" => Ok(Objective::Energy),
+            "ram" => Ok(Objective::PeakRam),
+            "weighted" => Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 }),
+            other => {
+                if let Some(spec) = other.strip_prefix("weighted:") {
+                    let parts: Vec<&str> = spec.split(',').collect();
+                    if parts.len() != 3 {
+                        return Err(format!(
+                            "weighted objective needs 3 comma-separated weights, got {other:?}"
+                        ));
+                    }
+                    let w: Result<Vec<f64>, _> =
+                        parts.iter().map(|p| p.trim().parse::<f64>()).collect();
+                    match w {
+                        Ok(w) => Ok(Objective::Weighted { latency: w[0], energy: w[1], ram: w[2] }),
+                        Err(e) => Err(format!("bad weight in {other:?}: {e}")),
+                    }
+                } else {
+                    Err(format!(
+                        "unknown objective {other:?} (latency|energy|ram|weighted[:L,E,R])"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Stable name — part of every cache key.
+    pub fn name(&self) -> String {
+        match self {
+            Objective::Latency => "latency".to_string(),
+            Objective::Energy => "energy".to_string(),
+            Objective::PeakRam => "ram".to_string(),
+            Objective::Weighted { latency, energy, ram } => {
+                format!("weighted:{latency},{energy},{ram}")
+            }
+        }
+    }
+
+    /// The scalar the search minimizes.
+    pub fn score(&self, latency_s: f64, energy_mj: f64, ram_bytes: usize) -> f64 {
+        match self {
+            Objective::Latency => latency_s,
+            Objective::Energy => energy_mj,
+            Objective::PeakRam => ram_bytes as f64,
+            Objective::Weighted { latency, energy, ram } => {
+                latency * latency_s * 1e3 + energy * energy_mj + ram * ram_bytes as f64 / 1024.0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse_spellings() {
+        assert_eq!(Objective::parse("latency"), Ok(Objective::Latency));
+        assert_eq!(Objective::parse("energy"), Ok(Objective::Energy));
+        assert_eq!(Objective::parse("ram"), Ok(Objective::PeakRam));
+        assert_eq!(
+            Objective::parse("weighted"),
+            Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 })
+        );
+        assert_eq!(
+            Objective::parse("weighted:2,0.5,0"),
+            Ok(Objective::Weighted { latency: 2.0, energy: 0.5, ram: 0.0 })
+        );
+        assert!(Objective::parse("speed").is_err());
+        assert!(Objective::parse("weighted:1,2").is_err());
+        assert!(Objective::parse("weighted:a,b,c").is_err());
+    }
+
+    #[test]
+    fn objective_names_are_distinct_cache_key_parts() {
+        let names: Vec<String> = [
+            Objective::Latency,
+            Objective::Energy,
+            Objective::PeakRam,
+            Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 },
+            Objective::Weighted { latency: 2.0, energy: 1.0, ram: 0.1 },
+        ]
+        .iter()
+        .map(|o| o.name())
+        .collect();
+        for i in 0..names.len() {
+            for j in i + 1..names.len() {
+                assert_ne!(names[i], names[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn scores_select_the_right_metric() {
+        // candidate A: fast but RAM-hungry; candidate B: slow but small
+        let a = (0.001f64, 0.05f64, 64 * 1024usize);
+        let b = (0.010f64, 0.40f64, 4 * 1024usize);
+        assert!(Objective::Latency.score(a.0, a.1, a.2) < Objective::Latency.score(b.0, b.1, b.2));
+        assert!(Objective::Energy.score(a.0, a.1, a.2) < Objective::Energy.score(b.0, b.1, b.2));
+        assert!(Objective::PeakRam.score(a.0, a.1, a.2) > Objective::PeakRam.score(b.0, b.1, b.2));
+        // a RAM-dominated weighting flips the preference
+        let w = Objective::Weighted { latency: 0.0, energy: 0.0, ram: 1.0 };
+        assert!(w.score(a.0, a.1, a.2) > w.score(b.0, b.1, b.2));
+    }
+}

@@ -1,0 +1,373 @@
+//! The schedule search: for every layer of a model, score every
+//! schedule-space candidate with the MCU cycle/energy simulator
+//! ([`crate::mcu::measure`]) under the configured objective, keep the
+//! winner, and assemble a [`TunedSchedule`]. Layer decisions are
+//! independent because the engine fixes activation formats at deployment
+//! time, so per-layer minimization is globally optimal for additive
+//! objectives — and therefore never worse than any fixed
+//! (primitive, path) configuration the sweep harness measures.
+
+use crate::mcu::{measure, McuConfig, Measurement};
+use crate::nn::{CountingMonitor, Model, Monitor, NoopMonitor, Shape, Tensor};
+
+use super::cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
+use super::space::{self, Candidate};
+use super::Objective;
+
+/// The tuned decision for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerDecision {
+    pub index: usize,
+    pub layer: &'static str,
+    pub candidate: Candidate,
+    pub cycles: f64,
+    pub latency_s: f64,
+    pub energy_mj: f64,
+    pub mem_accesses: u64,
+    pub effective_macs: u64,
+    /// Input + output activations + candidate scratch.
+    pub ram_bytes: usize,
+    /// Whether the decision was replayed from the tuning cache.
+    pub from_cache: bool,
+}
+
+/// A tuned per-layer schedule for one model on one MCU configuration.
+#[derive(Clone, Debug)]
+pub struct TunedSchedule {
+    pub model: String,
+    /// MCU fingerprint the measurements are valid for.
+    pub mcu: String,
+    pub objective: String,
+    pub layers: Vec<LayerDecision>,
+    /// Sum of per-layer simulated latencies.
+    pub latency_s: f64,
+    /// Sum of per-layer simulated energies.
+    pub energy_mj: f64,
+    /// Max of per-layer working RAM.
+    pub peak_ram_bytes: usize,
+}
+
+/// Search-effort accounting (the warm-cache acceptance criterion reads
+/// `evaluations == 0`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Simulator evaluations performed (one per scored candidate).
+    pub evaluations: usize,
+    /// Layers answered from the cache without touching the simulator.
+    pub cache_hits: usize,
+    /// Candidates considered (scored + replayed).
+    pub candidates: usize,
+}
+
+impl TunedSchedule {
+    /// Execute the model under this schedule (same bit-exact outputs as
+    /// `Model::forward`; only the event stream differs).
+    pub fn run<M: Monitor>(&self, model: &Model, x: &Tensor, mon: &mut M) -> Tensor {
+        assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
+        assert_eq!(self.layers.len(), model.layers.len(), "schedule/model mismatch");
+        let mut t = x.clone();
+        for (layer, d) in model.layers.iter().zip(&self.layers) {
+            t = space::execute(layer, &d.candidate, &t, mon);
+        }
+        t
+    }
+
+    /// Collapse the schedule totals into a [`Measurement`] (power is the
+    /// latency-weighted average, as in [`crate::mcu::combine`]).
+    pub fn as_measurement(&self) -> Measurement {
+        let cycles: f64 = self.layers.iter().map(|d| d.cycles).sum();
+        let mem_accesses: u64 = self.layers.iter().map(|d| d.mem_accesses).sum();
+        let effective_macs: u64 = self.layers.iter().map(|d| d.effective_macs).sum();
+        Measurement {
+            cycles,
+            latency_s: self.latency_s,
+            power_mw: if self.latency_s > 0.0 {
+                self.energy_mj / self.latency_s
+            } else {
+                0.0
+            },
+            energy_mj: self.energy_mj,
+            mem_accesses,
+            effective_macs,
+        }
+    }
+
+    /// Markdown rendering (one row per layer plus totals).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!(
+            "**{}** — objective {}, MCU {}\n\n\
+             | # | layer | kernel | lowering | latency (ms) | energy (µJ) | RAM (B) | cached |\n\
+             |---|---|---|---|---|---|---|---|\n",
+            self.model, self.objective, self.mcu
+        );
+        for d in &self.layers {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {:.4} | {:.3} | {} | {} |\n",
+                d.index,
+                d.layer,
+                d.candidate.kernel.as_str(),
+                d.candidate.lowering.as_str(),
+                1e3 * d.latency_s,
+                1e3 * d.energy_mj,
+                d.ram_bytes,
+                if d.from_cache { "yes" } else { "no" }
+            ));
+        }
+        s.push_str(&format!(
+            "| — | **total** | | | {:.4} | {:.3} | {} (peak) | |\n",
+            1e3 * self.latency_s,
+            1e3 * self.energy_mj,
+            self.peak_ram_bytes
+        ));
+        s
+    }
+}
+
+fn decision_from_entry(
+    index: usize,
+    layer: &'static str,
+    e: &CacheEntry,
+    from_cache: bool,
+) -> LayerDecision {
+    LayerDecision {
+        index,
+        layer,
+        candidate: e.candidate,
+        cycles: e.cycles,
+        latency_s: e.latency_s,
+        energy_mj: e.energy_mj,
+        mem_accesses: e.mem_accesses,
+        effective_macs: e.effective_macs,
+        ram_bytes: e.ram_bytes,
+        from_cache,
+    }
+}
+
+/// Score one candidate on one layer input: run the candidate kernel under
+/// the counting monitor, map the event vector through the simulator.
+fn score_candidate(
+    layer: &crate::nn::Layer,
+    cand: &Candidate,
+    x: &Tensor,
+    in_shape: &Shape,
+    cfg: &McuConfig,
+) -> (CacheEntry, Measurement) {
+    let mut mon = CountingMonitor::new();
+    space::execute(layer, cand, x, &mut mon);
+    let m = measure(&mon.counts, cand.lowering.path_class(), cfg);
+    (
+        CacheEntry {
+            candidate: *cand,
+            cycles: m.cycles,
+            latency_s: m.latency_s,
+            energy_mj: m.energy_mj,
+            mem_accesses: m.mem_accesses,
+            effective_macs: m.effective_macs,
+            ram_bytes: space::ram_bytes(layer, cand, in_shape),
+        },
+        m,
+    )
+}
+
+/// Tune every layer of `model` for `objective` on `cfg`, consulting (and
+/// filling) `cache`. `x` is a representative input — event counts are
+/// shape-driven, so any correctly-shaped input yields the same schedule.
+pub fn tune_model(
+    model: &Model,
+    x: &Tensor,
+    cfg: &McuConfig,
+    objective: Objective,
+    cache: &mut TuningCache,
+) -> (TunedSchedule, TuneStats) {
+    assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
+    let mcu_fp = mcu_fingerprint(cfg);
+    let obj_name = objective.name();
+    let mut stats = TuneStats::default();
+    let mut decisions: Vec<LayerDecision> = Vec::with_capacity(model.layers.len());
+
+    let mut t = x.clone();
+    for (index, layer) in model.layers.iter().enumerate() {
+        let in_shape = t.shape;
+        let sig = space::layer_signature(layer, &in_shape);
+        let key = cache_key(&sig, &mcu_fp, &obj_name);
+
+        let cached = cache.get(&key).copied();
+        let decision = match cached {
+            // replay only candidates that still apply (a schema change in
+            // the space enum would otherwise panic at execution time)
+            Some(e) if space::applies(layer, &e.candidate) => {
+                stats.cache_hits += 1;
+                stats.candidates += 1;
+                decision_from_entry(index, layer.name(), &e, true)
+            }
+            _ => {
+                let mut best: Option<(f64, CacheEntry)> = None;
+                for cand in space::candidates(layer) {
+                    let (entry, m) = score_candidate(layer, &cand, &t, &in_shape, cfg);
+                    let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
+                    stats.evaluations += 1;
+                    stats.candidates += 1;
+                    if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
+                        best = Some((score, entry));
+                    }
+                }
+                let (_, entry) = best.expect("every layer has at least one candidate");
+                cache.put(key, entry);
+                decision_from_entry(index, layer.name(), &entry, false)
+            }
+        };
+        decisions.push(decision);
+        // propagate the (path-independent) activation to the next layer
+        t = layer.forward(&t, false, &mut NoopMonitor);
+    }
+
+    let latency_s = decisions.iter().map(|d| d.latency_s).sum();
+    let energy_mj = decisions.iter().map(|d| d.energy_mj).sum();
+    let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
+    (
+        TunedSchedule {
+            model: model.name.clone(),
+            mcu: mcu_fp,
+            objective: obj_name,
+            layers: decisions,
+            latency_s,
+            energy_mj,
+            peak_ram_bytes,
+        },
+        stats,
+    )
+}
+
+/// Per-layer SIMD-substitute flags for serving paths that only know the
+/// global scalar/SIMD dichotomy: `true` where the tuned lowering is an
+/// im2col/SIMD one.
+pub fn simd_flags(schedule: &TunedSchedule) -> Vec<bool> {
+    schedule
+        .layers
+        .iter()
+        .map(|d| matches!(d.candidate.lowering, super::space::Lowering::Im2col { .. }))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Primitive;
+    use crate::harness::measure_model;
+    use crate::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+
+    fn quick_layer() -> (Model, Tensor) {
+        let p = LayerParams::new(2, 3, 8, 4, 4);
+        (experiment_layer(&p, Primitive::Standard, 3), experiment_input(&p, 4))
+    }
+
+    #[test]
+    fn tuned_run_is_bit_exact_with_model_forward() {
+        let cfg = McuConfig::default();
+        for prim in Primitive::ALL {
+            let p = LayerParams::new(2, 3, 8, 4, 4);
+            let model = experiment_layer(&p, prim, 3);
+            let x = experiment_input(&p, 4);
+            let mut cache = TuningCache::in_memory();
+            let (sched, _) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+            let want = model.forward(&x, false, &mut NoopMonitor);
+            let got = sched.run(&model, &x, &mut NoopMonitor);
+            assert_eq!(want.data, got.data, "{prim:?}");
+        }
+    }
+
+    #[test]
+    fn tuned_latency_never_worse_than_fixed_paths() {
+        let cfg = McuConfig::default();
+        for prim in Primitive::ALL {
+            let p = LayerParams::new(2, 3, 10, 8, 8);
+            let model = experiment_layer(&p, prim, 7);
+            let x = experiment_input(&p, 8);
+            let mut cache = TuningCache::in_memory();
+            let (sched, _) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+            let scalar = measure_model(&model, &x, false, &cfg);
+            assert!(
+                sched.latency_s <= scalar.latency_s + 1e-12,
+                "{prim:?}: tuned {} > scalar {}",
+                sched.latency_s,
+                scalar.latency_s
+            );
+            if prim.has_simd() {
+                let simd = measure_model(&model, &x, true, &cfg);
+                assert!(
+                    sched.latency_s <= simd.latency_s + 1e-12,
+                    "{prim:?}: tuned {} > simd {}",
+                    sched.latency_s,
+                    simd.latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_cache_performs_zero_evaluations() {
+        let cfg = McuConfig::default();
+        let (model, x) = quick_layer();
+        let mut cache = TuningCache::in_memory();
+        let (cold, s1) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert!(s1.evaluations > 0);
+        assert_eq!(s1.cache_hits, 0);
+        let (warm, s2) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(s2.evaluations, 0, "warm cache must not touch the simulator");
+        assert_eq!(s2.cache_hits, model.layers.len());
+        assert_eq!(cold.latency_s, warm.latency_s);
+        assert_eq!(cold.layers.len(), warm.layers.len());
+        for (a, b) in cold.layers.iter().zip(&warm.layers) {
+            assert_eq!(a.candidate, b.candidate);
+            assert!(b.from_cache);
+        }
+    }
+
+    #[test]
+    fn changing_mcu_or_objective_retunes() {
+        let cfg = McuConfig::default();
+        let (model, x) = quick_layer();
+        let mut cache = TuningCache::in_memory();
+        let (_, s1) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert!(s1.evaluations > 0);
+        // same cache, different objective: misses
+        let (_, s2) = tune_model(&model, &x, &cfg, Objective::Energy, &mut cache);
+        assert!(s2.evaluations > 0);
+        // same cache, different MCU config: misses
+        let o0 = McuConfig { freq_mhz: 84.0, opt: crate::mcu::OptLevel::O0 };
+        let (_, s3) = tune_model(&model, &x, &o0, Objective::Latency, &mut cache);
+        assert!(s3.evaluations > 0);
+        // and every combination is now warm
+        let (_, w) = tune_model(&model, &x, &cfg, Objective::Energy, &mut cache);
+        assert_eq!(w.evaluations, 0);
+    }
+
+    #[test]
+    fn ram_objective_prefers_small_working_sets() {
+        let cfg = McuConfig::default();
+        let (model, x) = quick_layer();
+        let mut cache = TuningCache::in_memory();
+        let (ram_sched, _) = tune_model(&model, &x, &cfg, Objective::PeakRam, &mut cache);
+        let (lat_sched, _) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert!(ram_sched.peak_ram_bytes <= lat_sched.peak_ram_bytes);
+    }
+
+    #[test]
+    fn whole_model_tuning_covers_every_layer() {
+        let cfg = McuConfig::default();
+        let model = mcunet(Primitive::DepthwiseSeparable, 5);
+        let x = Tensor::zeros(model.input_shape, model.input_q);
+        let mut cache = TuningCache::in_memory();
+        let (sched, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(sched.layers.len(), model.layers.len());
+        assert!(stats.evaluations >= model.layers.len());
+        assert!(sched.latency_s > 0.0 && sched.energy_mj > 0.0);
+        assert!(sched.peak_ram_bytes > 0);
+        // schedule markdown renders a row per layer + header/totals
+        let md = sched.to_markdown();
+        assert_eq!(md.lines().count(), model.layers.len() + 5);
+        // the flags view matches the decisions
+        let flags = simd_flags(&sched);
+        assert_eq!(flags.len(), model.layers.len());
+    }
+}

@@ -1,0 +1,687 @@
+//! The per-layer schedule space: which kernel implementations can compute
+//! a layer (primitive substitution, where mathematically admissible),
+//! which lowering each implementation admits (direct scalar loops vs
+//! im2col + blocked SIMD matmul), and which (P, F) register blockings fit
+//! the Cortex-M4 register file ([`crate::nn::blocking`]).
+//!
+//! Admissible substitutions (bit-exact by construction, asserted in
+//! tests):
+//! * a convolution with `G == Cx == Cy` IS a depthwise convolution
+//!   (NNoM ships a dedicated kernel for that case — the tuner decides
+//!   per-shape which one actually wins on the simulated MCU);
+//! * a depthwise layer can conversely run through the grouped-conv
+//!   kernel with `G == C`, which unlocks the generalized (P, F) blocked
+//!   im2col lowering depthwise's own SIMD path does not have;
+//! * a `1×1, G == 1` convolution IS a shift convolution with all-zero
+//!   shifts (the Eq. 2 pointwise stage), letting the tuner price the
+//!   shift-conv im2col gather against the standard widening fill.
+//!
+//! Everything else (add-convolution, batch-norm, activations, pooling)
+//! only has its scalar implementation (§3.3: no SIMD add-convolution).
+
+use crate::mcu::PathClass;
+use crate::nn::blocking::{fits_register_file, mat_mult_block};
+use crate::nn::im2col::fill_patch_q15;
+use crate::nn::{
+    uniform_shifts, Layer, Monitor, QuantConv, QuantDepthwise, Shape, ShiftConv, Tensor,
+};
+use crate::quant::{requantize, sat_i8};
+
+/// Which kernel implementation computes the layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// Execute the layer's own kernel.
+    AsIs,
+    /// Run a `G == Cx == Cy` convolution through the depthwise kernel.
+    ConvAsDepthwise,
+    /// Run a depthwise layer through the grouped-conv kernel (`G == C`).
+    DepthwiseAsConv,
+    /// Run a `1×1, G == 1` convolution through the shift-conv kernel
+    /// (all-zero shifts).
+    PointwiseAsShift,
+}
+
+impl KernelImpl {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelImpl::AsIs => "as-is",
+            KernelImpl::ConvAsDepthwise => "conv-as-depthwise",
+            KernelImpl::DepthwiseAsConv => "depthwise-as-conv",
+            KernelImpl::PointwiseAsShift => "pointwise-as-shift",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KernelImpl, String> {
+        match s {
+            "as-is" => Ok(KernelImpl::AsIs),
+            "conv-as-depthwise" => Ok(KernelImpl::ConvAsDepthwise),
+            "depthwise-as-conv" => Ok(KernelImpl::DepthwiseAsConv),
+            "pointwise-as-shift" => Ok(KernelImpl::PointwiseAsShift),
+            other => Err(format!("unknown kernel impl {other:?}")),
+        }
+    }
+}
+
+/// How the chosen kernel is lowered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lowering {
+    /// Direct scalar loops (the NNoM `local_*_q7` path).
+    Direct,
+    /// im2col + `__SMLAD` matmul, blocked at `patches × filters`
+    /// (CMSIS-NN's design point is 2×2; the generalized blocking runs
+    /// through [`mat_mult_block`]).
+    Im2col { patches: usize, filters: usize },
+}
+
+impl Lowering {
+    pub fn as_str(&self) -> String {
+        match self {
+            Lowering::Direct => "direct".to_string(),
+            Lowering::Im2col { patches, filters } => format!("im2col{patches}x{filters}"),
+        }
+    }
+
+    pub fn path_class(&self) -> PathClass {
+        match self {
+            Lowering::Direct => PathClass::Scalar,
+            Lowering::Im2col { .. } => PathClass::Simd,
+        }
+    }
+}
+
+/// One point of the schedule space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub kernel: KernelImpl,
+    pub lowering: Lowering,
+}
+
+/// All (P, F) blockings that fit the M4 register file, P and F up to 4
+/// (beyond that the register demand always spills).
+pub fn blocking_options() -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for p in 1..=4usize {
+        for f in 1..=4usize {
+            if fits_register_file(p, f) {
+                v.push((p, f));
+            }
+        }
+    }
+    v
+}
+
+/// The CMSIS-NN design point, the only blocking the fixed-function SIMD
+/// kernels (shift / depthwise / dense pairing) implement.
+pub const DESIGN_POINT: (usize, usize) = (2, 2);
+
+fn conv_is_depthwise_shaped(c: &QuantConv) -> bool {
+    c.groups == c.in_channels && c.groups == c.out_channels && c.groups > 0
+}
+
+fn conv_is_pointwise(c: &QuantConv) -> bool {
+    c.kernel == 1 && c.groups == 1 && c.pad == 0
+}
+
+/// Enumerate the legal schedule space of one layer.
+pub fn candidates(layer: &Layer) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    let push = |out: &mut Vec<Candidate>, kernel: KernelImpl, lowering: Lowering| {
+        out.push(Candidate { kernel, lowering });
+    };
+    match layer {
+        Layer::Conv(c) => {
+            push(&mut out, KernelImpl::AsIs, Lowering::Direct);
+            for (p, f) in blocking_options() {
+                push(&mut out, KernelImpl::AsIs, Lowering::Im2col { patches: p, filters: f });
+            }
+            if conv_is_depthwise_shaped(c) {
+                push(&mut out, KernelImpl::ConvAsDepthwise, Lowering::Direct);
+                push(
+                    &mut out,
+                    KernelImpl::ConvAsDepthwise,
+                    Lowering::Im2col { patches: DESIGN_POINT.0, filters: DESIGN_POINT.1 },
+                );
+            }
+            if conv_is_pointwise(c) {
+                push(&mut out, KernelImpl::PointwiseAsShift, Lowering::Direct);
+                push(
+                    &mut out,
+                    KernelImpl::PointwiseAsShift,
+                    Lowering::Im2col { patches: DESIGN_POINT.0, filters: DESIGN_POINT.1 },
+                );
+            }
+        }
+        Layer::Depthwise(_) => {
+            push(&mut out, KernelImpl::AsIs, Lowering::Direct);
+            push(
+                &mut out,
+                KernelImpl::AsIs,
+                Lowering::Im2col { patches: DESIGN_POINT.0, filters: DESIGN_POINT.1 },
+            );
+            push(&mut out, KernelImpl::DepthwiseAsConv, Lowering::Direct);
+            for (p, f) in blocking_options() {
+                push(
+                    &mut out,
+                    KernelImpl::DepthwiseAsConv,
+                    Lowering::Im2col { patches: p, filters: f },
+                );
+            }
+        }
+        Layer::Shift(_) => {
+            push(&mut out, KernelImpl::AsIs, Lowering::Direct);
+            push(
+                &mut out,
+                KernelImpl::AsIs,
+                Lowering::Im2col { patches: DESIGN_POINT.0, filters: DESIGN_POINT.1 },
+            );
+        }
+        Layer::Dense(_) => {
+            push(&mut out, KernelImpl::AsIs, Lowering::Direct);
+            // the CMSIS fully-connected kernel widens one input column and
+            // consumes 2 weight rows per step
+            push(&mut out, KernelImpl::AsIs, Lowering::Im2col { patches: 1, filters: 2 });
+        }
+        // scalar-only layers (§3.3: no SIMD add-convolution; BN and the
+        // glue layers have no distinct SIMD implementation)
+        _ => push(&mut out, KernelImpl::AsIs, Lowering::Direct),
+    }
+    out
+}
+
+/// Whether (kernel, lowering) legally applies to `layer` (used when
+/// replaying cached schedules against a possibly-changed model).
+pub fn applies(layer: &Layer, cand: &Candidate) -> bool {
+    candidates(layer).contains(cand)
+}
+
+/// Reinterpret a depthwise-shaped convolution as the depthwise kernel.
+fn conv_to_depthwise(c: &QuantConv) -> QuantDepthwise {
+    debug_assert!(conv_is_depthwise_shaped(c));
+    QuantDepthwise {
+        kernel: c.kernel,
+        channels: c.in_channels,
+        pad: c.pad,
+        // [C][k][k][1] row-major IS [C][k][k]
+        weights: c.weights.clone(),
+        bias: c.bias.clone(),
+        q_in: c.q_in,
+        q_w: c.q_w,
+        q_out: c.q_out,
+    }
+}
+
+/// Reinterpret a depthwise layer as a grouped convolution with `G == C`.
+fn depthwise_to_conv(d: &QuantDepthwise) -> QuantConv {
+    QuantConv {
+        kernel: d.kernel,
+        groups: d.channels,
+        in_channels: d.channels,
+        out_channels: d.channels,
+        pad: d.pad,
+        weights: d.weights.clone(),
+        bias: d.bias.clone(),
+        q_in: d.q_in,
+        q_w: d.q_w,
+        q_out: d.q_out,
+    }
+}
+
+/// Reinterpret a `1×1, G == 1` convolution as a zero-shift shift conv.
+fn pointwise_to_shift(c: &QuantConv) -> ShiftConv {
+    debug_assert!(conv_is_pointwise(c));
+    ShiftConv {
+        in_channels: c.in_channels,
+        out_channels: c.out_channels,
+        shifts: uniform_shifts(c.in_channels, 1), // all (0, 0)
+        // conv [Cy][1][1][Cx] row-major IS pointwise [Cy][Cx]
+        weights: c.weights.clone(),
+        bias: c.bias.clone(),
+        q_in: c.q_in,
+        q_w: c.q_w,
+        q_out: c.q_out,
+    }
+}
+
+/// Generalized blocked im2col convolution: fill `p_blk` q15 columns, feed
+/// `f_blk` weight rows at a time through [`mat_mult_block`], requantize.
+/// At the 2×2 design point this is event- and result-equivalent to
+/// [`QuantConv::forward_simd`] (tested); other blockings explore the §3.3
+/// trade between register-file reuse and im2col buffer size.
+pub fn conv_im2col_blocked<M: Monitor>(
+    conv: &QuantConv,
+    x: &Tensor,
+    p_blk: usize,
+    f_blk: usize,
+    mon: &mut M,
+) -> Tensor {
+    assert!(p_blk >= 1 && f_blk >= 1, "degenerate blocking");
+    conv.validate(&x.shape).expect("invalid conv configuration");
+    let out_shape = conv.output_shape(&x.shape);
+    let mut y = Tensor::zeros(out_shape, conv.q_out);
+    let shift = conv.out_shift();
+    let cpg = conv.ch_per_group();
+    let fpg = conv.filters_per_group();
+    let klen = conv.kernel * conv.kernel * cpg;
+    let n_pix = out_shape.h * out_shape.w;
+    let mut cols: Vec<Vec<i16>> = vec![vec![0i16; klen]; p_blk];
+
+    for g in 0..conv.groups {
+        let ch0 = g * cpg;
+        let n0 = g * fpg;
+        let mut pix = 0usize;
+        while pix < n_pix {
+            let pcnt = p_blk.min(n_pix - pix);
+            for (pi, col) in cols.iter_mut().take(pcnt).enumerate() {
+                let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                fill_patch_q15(x, oy, ox, conv.kernel, conv.pad, ch0, cpg, col, mon);
+            }
+            let col_refs: Vec<&[i16]> = cols[..pcnt].iter().map(|c| c.as_slice()).collect();
+            let mut f0 = 0usize;
+            while f0 < fpg {
+                let fcnt = f_blk.min(fpg - f0);
+                let w_rows: Vec<&[i8]> = (0..fcnt)
+                    .map(|fi| {
+                        let n = n0 + f0 + fi;
+                        &conv.weights[n * klen..(n + 1) * klen]
+                    })
+                    .collect();
+                let biases: Vec<i32> = (0..fcnt).map(|fi| conv.bias[n0 + f0 + fi]).collect();
+                let acc = mat_mult_block(&w_rows, &col_refs, &biases, mon);
+                for fi in 0..fcnt {
+                    let n = n0 + f0 + fi;
+                    for pi in 0..pcnt {
+                        let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                        mon.alu(2);
+                        mon.st8(1);
+                        y.set(oy, ox, n, sat_i8(requantize(acc[fi * pcnt + pi], shift)));
+                    }
+                }
+                f0 += fcnt;
+            }
+            pix += pcnt;
+        }
+    }
+    y
+}
+
+/// Execute `layer` under a schedule-space candidate. Panics if the
+/// candidate does not apply to the layer kind (callers enumerate via
+/// [`candidates`] or validate via [`applies`]).
+pub fn execute<M: Monitor>(layer: &Layer, cand: &Candidate, x: &Tensor, mon: &mut M) -> Tensor {
+    match (layer, cand.kernel) {
+        (Layer::Conv(c), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => c.forward_scalar(x, mon),
+            Lowering::Im2col { patches, filters } => {
+                conv_im2col_blocked(c, x, patches, filters, mon)
+            }
+        },
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise) => {
+            let d = conv_to_depthwise(c);
+            match cand.lowering {
+                Lowering::Direct => d.forward_scalar(x, mon),
+                Lowering::Im2col { .. } => d.forward_simd(x, mon),
+            }
+        }
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift) => {
+            let s = pointwise_to_shift(c);
+            match cand.lowering {
+                Lowering::Direct => s.forward_scalar(x, mon),
+                Lowering::Im2col { .. } => s.forward_simd(x, mon),
+            }
+        }
+        (Layer::Depthwise(d), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => d.forward_scalar(x, mon),
+            Lowering::Im2col { .. } => d.forward_simd(x, mon),
+        },
+        (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv) => {
+            let c = depthwise_to_conv(d);
+            match cand.lowering {
+                Lowering::Direct => c.forward_scalar(x, mon),
+                Lowering::Im2col { patches, filters } => {
+                    conv_im2col_blocked(&c, x, patches, filters, mon)
+                }
+            }
+        }
+        (Layer::Shift(s), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => s.forward_scalar(x, mon),
+            Lowering::Im2col { .. } => s.forward_simd(x, mon),
+        },
+        (Layer::Dense(_), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => layer.forward(x, false, mon),
+            Lowering::Im2col { .. } => layer.forward(x, true, mon),
+        },
+        (_, KernelImpl::AsIs) => {
+            debug_assert_eq!(cand.lowering, Lowering::Direct);
+            layer.forward(x, false, mon)
+        }
+        (l, k) => panic!("candidate {k:?} does not apply to layer {:?}", l.name()),
+    }
+}
+
+/// SRAM scratch a candidate needs beyond the activation ping-pong:
+/// the q15 im2col buffer (P columns), the widened dense input, or the
+/// shift-conv scalar path's materialized intermediate map.
+pub fn scratch_bytes(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> usize {
+    match (layer, cand.lowering) {
+        // the shift-conv scalar path materializes the shifted intermediate
+        // map I (Eq. 2) — same cost whether the layer is a native shift
+        // conv or a pointwise conv substituted onto the shift kernel
+        (Layer::Conv(_), Lowering::Direct) if cand.kernel == KernelImpl::PointwiseAsShift => {
+            in_shape.len()
+        }
+        (Layer::Conv(c), Lowering::Im2col { patches, .. }) => match cand.kernel {
+            // the shift gather column is 1×1×Cx
+            KernelImpl::PointwiseAsShift => patches * c.in_channels * 2,
+            // depthwise SIMD works in-register, no column buffer
+            KernelImpl::ConvAsDepthwise => 0,
+            _ => patches * c.kernel * c.kernel * c.ch_per_group() * 2,
+        },
+        (Layer::Depthwise(d), Lowering::Im2col { patches, .. }) => match cand.kernel {
+            KernelImpl::DepthwiseAsConv => patches * d.kernel * d.kernel * 2,
+            _ => 0,
+        },
+        (Layer::Shift(s), Lowering::Im2col { patches, .. }) => patches * s.in_channels * 2,
+        (Layer::Shift(_), Lowering::Direct) => in_shape.len(), // intermediate map I
+        (Layer::Dense(d), Lowering::Im2col { .. }) => d.in_features * 2,
+        _ => 0,
+    }
+}
+
+/// Peak working RAM of the layer under a candidate: input + output
+/// activations plus candidate scratch.
+pub fn ram_bytes(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> usize {
+    in_shape.len() + layer.output_shape(in_shape).len() + scratch_bytes(layer, cand, in_shape)
+}
+
+/// A structural fingerprint of (layer, input shape): two layers with equal
+/// signatures produce identical micro-op streams under every candidate,
+/// so tuning results are shareable through the cache. Weight *values*
+/// never affect event counts; shift *tables* do (border clipping), so the
+/// shift assignment is folded in.
+pub fn layer_signature(layer: &Layer, in_shape: &Shape) -> String {
+    let shape = format!("{}x{}x{}", in_shape.h, in_shape.w, in_shape.c);
+    match layer {
+        Layer::Conv(c) => format!(
+            "conv[g{},k{},ci{},co{},p{},q{}/{}/{}]@{shape}",
+            c.groups,
+            c.kernel,
+            c.in_channels,
+            c.out_channels,
+            c.pad,
+            c.q_in.frac_bits,
+            c.q_w.frac_bits,
+            c.q_out.frac_bits
+        ),
+        Layer::Depthwise(d) => format!(
+            "dw[k{},c{},p{},q{}/{}/{}]@{shape}",
+            d.kernel, d.channels, d.pad, d.q_in.frac_bits, d.q_w.frac_bits, d.q_out.frac_bits
+        ),
+        Layer::Shift(s) => {
+            // fold the shift table into the signature (it changes border
+            // clipping and therefore the counted events)
+            let mut h: u64 = 0xcbf29ce484222325;
+            for &(a, b) in &s.shifts {
+                h = (h ^ (a as u8 as u64)).wrapping_mul(0x100000001b3);
+                h = (h ^ (b as u8 as u64)).wrapping_mul(0x100000001b3);
+            }
+            format!(
+                "shift[ci{},co{},t{:016x},q{}/{}/{}]@{shape}",
+                s.in_channels,
+                s.out_channels,
+                h,
+                s.q_in.frac_bits,
+                s.q_w.frac_bits,
+                s.q_out.frac_bits
+            )
+        }
+        Layer::AddConv(a) => format!(
+            "add[k{},ci{},co{},p{},q{}/{}/{}]@{shape}",
+            a.kernel,
+            a.in_channels,
+            a.out_channels,
+            a.pad,
+            a.q_in.frac_bits,
+            a.q_w.frac_bits,
+            a.q_out.frac_bits
+        ),
+        Layer::Bn(b) => format!("bn[c{},s{}]@{shape}", b.channels, b.out_shift()),
+        Layer::Relu => format!("relu@{shape}"),
+        Layer::MaxPool2 => format!("maxpool2@{shape}"),
+        Layer::GlobalAvgPool(q) => format!(
+            "gavg[{}]@{shape}",
+            q.map(|p| p.frac_bits.to_string()).unwrap_or_else(|| "-".into())
+        ),
+        Layer::Dense(d) => format!(
+            "dense[i{},o{},q{}/{}/{}]@{shape}",
+            d.in_features, d.out_features, d.q_in.frac_bits, d.q_w.frac_bits, d.q_out.frac_bits
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{CountingMonitor, NoopMonitor};
+    use crate::quant::QParam;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure_eq_i8};
+
+    fn random_conv(rng: &mut Rng, groups: usize, k: usize, cin: usize, cout: usize) -> QuantConv {
+        let cpg = cin / groups;
+        let mut weights = vec![0i8; cout * k * k * cpg];
+        rng.fill_i8(&mut weights, -12, 12);
+        QuantConv {
+            kernel: k,
+            groups,
+            in_channels: cin,
+            out_channels: cout,
+            pad: k / 2,
+            weights,
+            bias: (0..cout).map(|_| rng.range(0, 64) as i32 - 32).collect(),
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }
+    }
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    #[test]
+    fn blocking_options_contain_design_point_and_fit() {
+        let opts = blocking_options();
+        assert!(opts.contains(&DESIGN_POINT));
+        for &(p, f) in &opts {
+            assert!(fits_register_file(p, f), "({p},{f})");
+        }
+        // the spilling squares are excluded
+        assert!(!opts.contains(&(3, 3)));
+        assert!(!opts.contains(&(4, 4)));
+    }
+
+    #[test]
+    fn blocked_conv_at_design_point_is_event_equivalent_to_simd_path() {
+        // The load-bearing equivalence for the tuner's acceptance
+        // criterion: scoring candidate im2col(2,2) must reproduce the
+        // sweep harness's SIMD measurement exactly.
+        check(
+            "blocked-conv-2x2-event-parity",
+            24,
+            |rng, _| {
+                let groups = [1usize, 2][rng.range(0, 1)];
+                let cin = groups * rng.range(1, 4);
+                let cout = groups * rng.range(1, 4);
+                let k = [1usize, 3][rng.range(0, 1)];
+                let h = rng.range(k.max(2), k + 4);
+                (random_conv(rng, groups, k, cin, cout), random_input(rng, h, cin))
+            },
+            |(conv, x)| {
+                let mut ma = CountingMonitor::new();
+                let a = conv.forward_simd(x, &mut ma);
+                let mut mb = CountingMonitor::new();
+                let b = conv_im2col_blocked(conv, x, 2, 2, &mut mb);
+                ensure_eq_i8(&a.data, &b.data, "blocked 2x2 result")?;
+                if ma.counts != mb.counts {
+                    return Err(format!(
+                        "event mismatch: simd {:?} vs blocked {:?}",
+                        ma.counts, mb.counts
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_conv_matches_scalar_for_every_feasible_blocking() {
+        let mut rng = Rng::new(0x5_0ACE);
+        for &(p, f) in &blocking_options() {
+            let conv = random_conv(&mut rng, 2, 3, 4, 6);
+            let x = random_input(&mut rng, 5, 4);
+            let want = conv.forward_scalar(&x, &mut NoopMonitor);
+            let got = conv_im2col_blocked(&conv, &x, p, f, &mut NoopMonitor);
+            assert_eq!(want.data, got.data, "({p},{f})");
+        }
+    }
+
+    #[test]
+    fn larger_blocking_reduces_memory_accesses() {
+        let mut rng = Rng::new(7);
+        let conv = random_conv(&mut rng, 1, 3, 8, 8);
+        let x = random_input(&mut rng, 8, 8);
+        let count = |p: usize, f: usize| {
+            let mut mon = CountingMonitor::new();
+            conv_im2col_blocked(&conv, &x, p, f, &mut mon);
+            mon.counts.mem_accesses()
+        };
+        assert!(count(2, 2) < count(1, 1));
+        // (3,2) fits the register file and reuses strictly more than 2x2
+        assert!(count(3, 2) < count(2, 2));
+    }
+
+    #[test]
+    fn substitutions_are_bit_exact() {
+        let mut rng = Rng::new(0xD1CE);
+        // depthwise-shaped conv <-> depthwise kernel
+        let dwc = random_conv(&mut rng, 4, 3, 4, 4);
+        let x = random_input(&mut rng, 6, 4);
+        let base = dwc.forward_scalar(&x, &mut NoopMonitor);
+        let as_dw = conv_to_depthwise(&dwc);
+        assert_eq!(base.data, as_dw.forward_scalar(&x, &mut NoopMonitor).data);
+        assert_eq!(base.data, as_dw.forward_simd(&x, &mut NoopMonitor).data);
+        // and back: depthwise -> grouped conv
+        let back = depthwise_to_conv(&as_dw);
+        assert_eq!(base.data, back.forward_scalar(&x, &mut NoopMonitor).data);
+        // pointwise conv <-> zero-shift shift conv
+        let pw = random_conv(&mut rng, 1, 1, 5, 3);
+        let xp = random_input(&mut rng, 4, 5);
+        let want = pw.forward_scalar(&xp, &mut NoopMonitor);
+        let s = pointwise_to_shift(&pw);
+        assert_eq!(want.data, s.forward_scalar(&xp, &mut NoopMonitor).data);
+        assert_eq!(want.data, s.forward_simd(&xp, &mut NoopMonitor).data);
+    }
+
+    #[test]
+    fn every_candidate_of_every_layer_kind_is_bit_exact() {
+        let mut rng = Rng::new(0xBEEF);
+        let p = crate::models::LayerParams::new(2, 3, 6, 4, 4);
+        for prim in crate::analytic::Primitive::ALL {
+            let model = crate::models::experiment_layer(&p, prim, 5);
+            let x = crate::models::experiment_input(&p, 6);
+            let mut t = x.clone();
+            for layer in &model.layers {
+                let want = layer.forward(&t, false, &mut NoopMonitor);
+                for cand in candidates(layer) {
+                    let got = execute(layer, &cand, &t, &mut NoopMonitor);
+                    assert_eq!(
+                        want.data, got.data,
+                        "{prim:?}/{}/{cand:?}",
+                        layer.name()
+                    );
+                }
+                t = want;
+            }
+        }
+        // dense too (not part of the single-layer experiments)
+        let d = crate::nn::QuantDense {
+            in_features: 12,
+            out_features: 5,
+            weights: {
+                let mut w = vec![0i8; 60];
+                rng.fill_i8(&mut w, -10, 10);
+                w
+            },
+            bias: vec![3; 5],
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        };
+        let layer = Layer::Dense(d);
+        let mut x = Tensor::zeros(Shape::new(1, 1, 12), QParam::new(7));
+        rng.fill_i8(&mut x.data, -16, 16);
+        let want = layer.forward(&x, false, &mut NoopMonitor);
+        for cand in candidates(&layer) {
+            let got = execute(&layer, &cand, &x, &mut NoopMonitor);
+            assert_eq!(want.data, got.data, "dense/{cand:?}");
+        }
+    }
+
+    #[test]
+    fn signatures_discriminate_shape_and_config() {
+        let mut rng = Rng::new(3);
+        let a = Layer::Conv(random_conv(&mut rng, 1, 3, 4, 4));
+        let b = Layer::Conv(random_conv(&mut rng, 2, 3, 4, 4));
+        let s1 = Shape::new(6, 6, 4);
+        let s2 = Shape::new(8, 8, 4);
+        assert_ne!(layer_signature(&a, &s1), layer_signature(&b, &s1));
+        assert_ne!(layer_signature(&a, &s1), layer_signature(&a, &s2));
+        // weight values do not enter the signature
+        let mut c1 = random_conv(&mut rng, 1, 3, 4, 4);
+        let c2 = {
+            let mut c = c1.clone();
+            rng.fill_i8(&mut c.weights, -5, 5);
+            c
+        };
+        c1.weights.fill(1);
+        assert_eq!(
+            layer_signature(&Layer::Conv(c1), &s1),
+            layer_signature(&Layer::Conv(c2), &s1)
+        );
+    }
+
+    #[test]
+    fn scratch_accounts_im2col_and_shift_intermediate() {
+        let mut rng = Rng::new(9);
+        let c = random_conv(&mut rng, 1, 3, 8, 8);
+        let shape = Shape::new(6, 6, 8);
+        let direct = Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct };
+        let im2 = Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Im2col { patches: 2, filters: 2 },
+        };
+        let im4 = Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Im2col { patches: 4, filters: 1 },
+        };
+        let layer = Layer::Conv(c);
+        assert_eq!(scratch_bytes(&layer, &direct, &shape), 0);
+        assert_eq!(scratch_bytes(&layer, &im2, &shape), 2 * 9 * 8 * 2);
+        assert_eq!(scratch_bytes(&layer, &im4, &shape), 4 * 9 * 8 * 2);
+        assert!(ram_bytes(&layer, &im4, &shape) > ram_bytes(&layer, &im2, &shape));
+        // a pointwise conv substituted onto the shift kernel pays the
+        // shift scalar path's materialized intermediate map
+        let pw = Layer::Conv(random_conv(&mut rng, 1, 1, 8, 8));
+        let pw_as_shift = Candidate {
+            kernel: KernelImpl::PointwiseAsShift,
+            lowering: Lowering::Direct,
+        };
+        assert_eq!(scratch_bytes(&pw, &pw_as_shift, &shape), shape.len());
+        assert_eq!(
+            scratch_bytes(&pw, &Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }, &shape),
+            0
+        );
+    }
+}
