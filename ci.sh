@@ -22,8 +22,19 @@ echo "==> smoke: convbench tune --objective latency --quick"
 # exits non-zero if any tuned schedule regresses vs the best fixed one
 ./target/release/convbench tune --objective latency --quick --out results/ci
 
-echo "==> smoke: warm-cache replay (must perform zero evaluations)"
-./target/release/convbench tune --objective latency --quick --out results/ci
+echo "==> smoke: warm-cache replay (gated: must re-score nothing)"
+# --expect-warm makes the run exit non-zero if the Table 2 comparison
+# scored any candidate (analytic or simulated) or hit the cache zero
+# times — i.e. it actually asserts the warm-replay invariant instead of
+# just printing it
+./target/release/convbench tune --objective latency --quick --out results/ci --expect-warm
+
+echo "==> bench smoke: infer_hot (zero-alloc forward_in + analytic cold tune)"
+# quick mode keeps the sample count CI-sized; the binary asserts that
+# steady-state forward_in performs zero heap allocations and that the
+# cold tune runs zero instrumented simulator evaluations, then emits
+# results/BENCH_infer.json — the perf baseline future PRs regress against
+CONVBENCH_QUICK=1 cargo bench --bench infer_hot
 
 if [[ "${1:-}" == "--full" ]]; then
     echo "==> full: convbench tune over the full Table 2 plans"

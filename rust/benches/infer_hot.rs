@@ -1,0 +1,172 @@
+//! Bench: the inference hot path — the first entry of the repo's bench
+//! trajectory (`results/BENCH_infer.json`), which future PRs regress
+//! against.
+//!
+//! Three headline quantities:
+//!
+//! 1. **steady-state allocations** of `Model::forward_in` inside a
+//!    pre-planned [`Workspace`] — pinned to **zero** with a counting
+//!    global allocator (this binary's `#[global_allocator]` wraps the
+//!    system allocator and counts every `alloc`/`realloc`); the legacy
+//!    `Model::forward` per-inference allocation count is reported next
+//!    to it for contrast;
+//! 2. **throughput** of the workspace path vs the legacy allocating
+//!    path (ns per inference, inferences/s);
+//! 3. **cold-tune cost** of the analytic schedule search: wall time and
+//!    `TuneStats` for a cold `tune_model_shape` over MCU-Net —
+//!    `evaluations` (instrumented simulator runs) pinned to 0 — plus the
+//!    warm-cache replay time.
+//!
+//! Run: `cargo bench --bench infer_hot` (CI runs it with
+//! `CONVBENCH_QUICK=1`; see `ci.sh`). Writes `results/BENCH_infer.json`
+//! and `results/bench_infer_hot.csv`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use convbench::analytic::Primitive;
+use convbench::mcu::McuConfig;
+use convbench::models::mcunet;
+use convbench::nn::{NoopMonitor, Tensor, Workspace};
+use convbench::report::write_report;
+use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+use convbench::util::bench::Bench;
+use convbench::util::json::Json;
+use convbench::util::prng::Rng;
+
+/// Counts every heap allocation the process performs.
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let cfg = McuConfig::default();
+    let model = mcunet(Primitive::DepthwiseSeparable, 42);
+    let mut ws = Workspace::new(&model);
+    let mut x = Tensor::zeros(model.input_shape, model.input_q);
+    Rng::new(7).fill_i8(&mut x.data, -64, 63);
+
+    // --- 1. allocation accounting (correctness gate, not a timing) -----
+    // one warm-up settles the arena; from then on the workspace path must
+    // not touch the allocator at all
+    let warm = model.forward_in(&x, true, &mut ws, &mut NoopMonitor);
+    let check = model.forward(&x, true, &mut NoopMonitor);
+    assert_eq!(warm.data, check.data, "workspace path must stay bit-exact");
+
+    let iters: u64 = 32;
+    let a0 = allocations();
+    for _ in 0..iters {
+        black_box(model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]);
+    }
+    let steady_allocs = allocations() - a0;
+    assert_eq!(
+        steady_allocs, 0,
+        "steady-state forward_in performed {steady_allocs} heap allocations"
+    );
+
+    let l0 = allocations();
+    for _ in 0..iters {
+        black_box(model.forward(&x, true, &mut NoopMonitor).data[0]);
+    }
+    let legacy_allocs_per_inference = (allocations() - l0) / iters;
+
+    // --- 2. throughput ------------------------------------------------
+    b.run("infer/forward_in/simd", || {
+        model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]
+    });
+    b.run("infer/forward_legacy/simd", || {
+        model.forward(&x, true, &mut NoopMonitor).data[0]
+    });
+    b.run("infer/forward_in/scalar", || {
+        model.forward_in(&x, false, &mut ws, &mut NoopMonitor).data[0]
+    });
+
+    // --- 3. cold / warm analytic tune ---------------------------------
+    let mut cache = TuningCache::in_memory();
+    let t0 = Instant::now();
+    let (sched, cold) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+    let cold_tune_us = t0.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(cold.evaluations, 0, "cold tune must not run the simulator");
+    assert!(cold.analytic > 0);
+    let t1 = Instant::now();
+    let (_, warm_stats) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+    let warm_tune_us = t1.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(warm_stats.evaluations, 0);
+    assert_eq!(warm_stats.analytic, 0);
+
+    b.write_csv("results/bench_infer_hot.csv");
+
+    let mean_ns = |name: &str| -> f64 {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.ns.mean)
+            .unwrap_or(f64::NAN)
+    };
+    let in_ns = mean_ns("infer/forward_in/simd");
+    let legacy_ns = mean_ns("infer/forward_legacy/simd");
+    let scalar_ns = mean_ns("infer/forward_in/scalar");
+    let plan = ws.plan();
+
+    let json = Json::obj()
+        .field("model", model.name.as_str())
+        .field("steady_state_allocs_per_inference", steady_allocs / iters)
+        .field("legacy_allocs_per_inference", legacy_allocs_per_inference)
+        .field("forward_in_simd_ns", in_ns)
+        .field("forward_legacy_simd_ns", legacy_ns)
+        .field("forward_in_scalar_ns", scalar_ns)
+        .field("forward_in_simd_ops_per_sec", 1e9 / in_ns)
+        .field("alloc_free_speedup", legacy_ns / in_ns)
+        .field("cold_tune_us", cold_tune_us)
+        .field("warm_tune_us", warm_tune_us)
+        .field("cold_tune_simulator_evals", cold.evaluations)
+        .field("cold_tune_analytic_scores", cold.analytic)
+        .field("tuned_latency_s", sched.latency_s)
+        .field("workspace_total_bytes", plan.total_bytes())
+        .field("workspace_activation_bytes", plan.activation_bytes)
+        .field("workspace_peak_pair_bytes", plan.peak_pair_bytes)
+        .field("workspace_im2col_bytes", plan.im2col_bytes)
+        .field("workspace_widened_weight_bytes", plan.widened_weight_bytes);
+    write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
+
+    println!(
+        "infer_hot: forward_in {in_ns:.0} ns ({:.0} inf/s, 0 allocs) vs legacy {legacy_ns:.0} ns \
+         ({legacy_allocs_per_inference} allocs) — {:.2}x; cold analytic tune {:.0} µs \
+         ({} scores, 0 simulator evals), warm replay {:.0} µs; {}",
+        1e9 / in_ns,
+        legacy_ns / in_ns,
+        cold_tune_us,
+        cold.analytic,
+        warm_tune_us,
+        plan.summary()
+    );
+    println!("wrote results/BENCH_infer.json");
+}

@@ -1,8 +1,10 @@
 //! Bench: the schedule auto-tuner itself — cold search cost (every
-//! candidate through the simulator), warm-cache replay cost (zero
-//! simulator evaluations), and the single-layer scoring hot path. The
-//! cold/warm ratio is the headline number: it is what a persistent
-//! tuning cache buys every redeployment.
+//! candidate priced analytically from shapes; zero instrumented
+//! forwards), warm-cache replay cost (zero scoring at all), and the
+//! single-layer scoring hot path. The cold/warm ratio is what a
+//! persistent tuning cache buys every redeployment; the cold number
+//! itself is what the analytic cost engine bought over simulator-scored
+//! search (see `benches/infer_hot.rs` for that comparison's trajectory).
 //!
 //! Run: `cargo bench --bench tuner_search`
 
@@ -26,7 +28,8 @@ fn main() {
     b.run("tune/layer/cold", || {
         let mut cache = TuningCache::in_memory();
         let (s, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
-        assert!(stats.evaluations > 0);
+        assert_eq!(stats.evaluations, 0, "analytic scoring never runs the simulator");
+        assert!(stats.analytic > 0);
         s.latency_s
     });
 
@@ -36,6 +39,7 @@ fn main() {
     b.run("tune/layer/warm", || {
         let (s, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut warm);
         assert_eq!(stats.evaluations, 0);
+        assert_eq!(stats.analytic, 0);
         s.latency_s
     });
 
@@ -52,6 +56,7 @@ fn main() {
     b.run("tune/mcunet-dws/warm", || {
         let (s, stats) = tune_model(&net, &xin, &cfg, Objective::Latency, &mut warm_net);
         assert_eq!(stats.evaluations, 0);
+        assert_eq!(stats.analytic, 0);
         s.latency_s
     });
 

@@ -8,10 +8,10 @@
 use crate::mcu::McuConfig;
 use crate::nn::{
     uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
-    QuantDepthwise, Shape, ShiftConv, Tensor,
+    QuantDepthwise, Shape, ShiftConv, Workspace,
 };
 use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
-use crate::tuner::{tune_model, Objective, TuneStats, TunedSchedule, TuningCache};
+use crate::tuner::{tune_model_shape, Objective, TuneStats, TunedSchedule, TuningCache};
 
 /// A float convolution stage (standard/grouped via `groups`).
 #[derive(Clone, Debug)]
@@ -182,8 +182,8 @@ impl FloatModel {
     /// Deploy and auto-tune in one step: calibrate + quantize as
     /// [`FloatModel::deploy`], then pick the per-layer schedule that
     /// minimizes `objective` on the simulated MCU, consulting (and
-    /// filling) the tuning `cache`. The first calibration input doubles
-    /// as the tuning input (event counts are shape-driven).
+    /// filling) the tuning `cache`. Tuning is analytic and shape-driven
+    /// — no tuning input exists and no forward is executed.
     pub fn deploy_tuned(
         &self,
         calib: &[Vec<f32>],
@@ -192,9 +192,19 @@ impl FloatModel {
         cache: &mut TuningCache,
     ) -> (Model, TunedSchedule, TuneStats) {
         let model = self.deploy(calib);
-        let x = Tensor::from_f32(self.input_shape, model.input_q, &calib[0]);
-        let (schedule, stats) = tune_model(&model, &x, cfg, objective, cache);
+        let (schedule, stats) = tune_model_shape(&model, cfg, objective, cache);
         (model, schedule, stats)
+    }
+
+    /// Deploy and plan the per-model inference arena in one step. The
+    /// returned [`Workspace`] drives [`Model::forward_in`] (zero heap
+    /// allocations in steady state), and its plan is the deployment's
+    /// **exact** peak-RAM report — the byte-true version of the
+    /// [`crate::mcu::footprint`] SRAM estimate.
+    pub fn deploy_with_workspace(&self, calib: &[Vec<f32>]) -> (Model, Workspace) {
+        let model = self.deploy(calib);
+        let workspace = Workspace::new(&model);
+        (model, workspace)
     }
 }
 
@@ -614,7 +624,8 @@ mod tests {
         let (qm, schedule, stats) =
             fm.deploy_tuned(&calib, &cfg, Objective::Latency, &mut cache);
         assert_eq!(schedule.layers.len(), qm.layers.len());
-        assert!(stats.evaluations > 0);
+        assert_eq!(stats.evaluations, 0, "analytic tuning never runs the simulator");
+        assert!(stats.analytic > 0);
         // tuned execution matches the engine bit-for-bit
         let x = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, &calib[0]);
         let want = qm.forward(&x, true, &mut NoopMonitor);
@@ -624,10 +635,28 @@ mod tests {
         let scalar = crate::harness::measure_model(&qm, &x, false, &cfg);
         let simd = crate::harness::measure_model(&qm, &x, true, &cfg);
         assert!(schedule.latency_s <= scalar.latency_s.min(simd.latency_s) + 1e-12);
-        // warm redeploy: zero simulator evaluations
+        // warm redeploy: zero evaluations, zero analytic scores
         let (_, _, warm) = fm.deploy_tuned(&calib, &cfg, Objective::Latency, &mut cache);
         assert_eq!(warm.evaluations, 0);
+        assert_eq!(warm.analytic, 0);
         assert_eq!(warm.cache_hits, qm.layers.len());
+    }
+
+    #[test]
+    fn deploy_with_workspace_serves_bit_exact_zero_alloc_inference() {
+        let mut rng = Rng::new(9);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let (qm, mut ws) = fm.deploy_with_workspace(&calib);
+        let plan = ws.plan();
+        assert!(plan.total_bytes() > 0);
+        assert!(plan.activation_bytes >= plan.peak_pair_bytes);
+        for x in &calib {
+            let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let want = qm.forward(&xi, true, &mut NoopMonitor);
+            let got = qm.forward_in(&xi, true, &mut ws, &mut NoopMonitor);
+            assert_eq!(want.data, got.data);
+        }
     }
 
     #[test]

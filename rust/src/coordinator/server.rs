@@ -18,8 +18,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, Model, NoopMonitor, Tensor};
-use crate::tuner::{tune_model, Objective, TunedSchedule, TuningCache};
+use crate::nn::{argmax, Model, NoopMonitor, Tensor, Workspace};
+use crate::tuner::{tune_model_shape, Objective, TunedSchedule, TuningCache};
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -81,13 +81,12 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Deploy a set of models and start `n_workers` workers.
+    /// Deploy a set of models and start `n_workers` workers. The
+    /// one-time MCU profile is priced analytically (exact, forward-free).
     pub fn start(models: Vec<Model>, n_workers: usize, cfg: &McuConfig) -> Self {
         let mut registry = HashMap::new();
         for m in models {
-            // one-time MCU profile: counts of a representative input
-            let x = Tensor::zeros(m.input_shape, m.input_q);
-            let mcu = crate::harness::measure_model(&m, &x, true, cfg);
+            let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
             registry.insert(m.name.clone(), Deployed { model: m, mcu, schedule: None });
         }
         Self::spawn(registry, n_workers)
@@ -95,7 +94,8 @@ impl InferenceServer {
 
     /// Deploy a set of models with per-layer auto-tuned schedules (the
     /// tuning cache is shared across the registered models, so repeated
-    /// layer shapes tune once).
+    /// layer shapes tune once — and tuning is analytic: registration
+    /// executes no forwards at all).
     pub fn start_tuned(
         models: Vec<Model>,
         n_workers: usize,
@@ -105,8 +105,7 @@ impl InferenceServer {
     ) -> Self {
         let mut registry = HashMap::new();
         for m in models {
-            let x = Tensor::zeros(m.input_shape, m.input_q);
-            let (schedule, _) = tune_model(&m, &x, cfg, objective, cache);
+            let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             registry.insert(
                 m.name.clone(),
@@ -131,29 +130,41 @@ impl InferenceServer {
                 let served = Arc::clone(&served);
                 let errors = Arc::clone(&errors);
                 let lats = Arc::clone(&latencies_us);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(Job::Run(req, reply)) => {
-                            let t0 = Instant::now();
-                            let result = serve_one(&models, &req, t0);
-                            match &result {
-                                Ok(r) => {
-                                    served.fetch_add(1, Ordering::Relaxed);
-                                    lats.lock()
-                                        .unwrap()
-                                        .push(r.service_time.as_secs_f64() * 1e6);
+                std::thread::spawn(move || {
+                    // per-worker inference workspaces, planned up front
+                    // for every untuned model (the registry is fixed
+                    // before spawn): the request path never allocates an
+                    // arena, clones a key, or pays a first-request
+                    // weight-widening spike
+                    let mut workspaces: HashMap<String, Workspace> = models
+                        .iter()
+                        .filter(|(_, d)| d.schedule.is_none())
+                        .map(|(name, d)| (name.clone(), Workspace::new(&d.model)))
+                        .collect();
+                    loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(Job::Run(req, reply)) => {
+                                let t0 = Instant::now();
+                                let result = serve_one(&models, &mut workspaces, req, t0);
+                                match &result {
+                                    Ok(r) => {
+                                        served.fetch_add(1, Ordering::Relaxed);
+                                        lats.lock()
+                                            .unwrap()
+                                            .push(r.service_time.as_secs_f64() * 1e6);
+                                    }
+                                    Err(_) => {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                    }
                                 }
-                                Err(_) => {
-                                    errors.fetch_add(1, Ordering::Relaxed);
-                                }
+                                let _ = reply.send(result);
                             }
-                            let _ = reply.send(result);
+                            Ok(Job::Shutdown) | Err(_) => break,
                         }
-                        Ok(Job::Shutdown) | Err(_) => break,
                     }
                 })
             })
@@ -192,13 +203,16 @@ impl InferenceServer {
             .map_err(|_| "server shut down".to_string())?
     }
 
-    /// Current statistics.
+    /// Current statistics. Percentiles are computed from the sample
+    /// vector in place under the lock — no clone of the full history
+    /// (reordering is harmless: only pushes happen elsewhere, and a
+    /// mostly-sorted vector re-sorts cheaply).
     pub fn stats(&self) -> ServerStats {
-        let lats = self.latencies_us.lock().unwrap().clone();
+        let mut lats = self.latencies_us.lock().unwrap();
         compute_stats(
             self.served.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
-            lats,
+            &mut lats[..],
         )
     }
 
@@ -219,8 +233,9 @@ impl InferenceServer {
 /// nearest-rank on the sorted samples: index `round((n - 1) · p)` — so
 /// p50 of 1..=100 µs is 51 µs and p99 is 99 µs (pinned by a unit test;
 /// the serving hot path depends on this staying stable under future
-/// batching work).
-fn compute_stats(served: u64, errors: u64, mut lats_us: Vec<f64>) -> ServerStats {
+/// batching work). Operates on a borrowed slice, sorting it in place —
+/// callers no longer clone the whole latency history per stats() call.
+fn compute_stats(served: u64, errors: u64, lats_us: &mut [f64]) -> ServerStats {
     lats_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| -> f64 {
         if lats_us.is_empty() {
@@ -244,7 +259,8 @@ fn compute_stats(served: u64, errors: u64, mut lats_us: Vec<f64>) -> ServerStats
 
 fn serve_one(
     models: &HashMap<String, Deployed>,
-    req: &Request,
+    workspaces: &mut HashMap<String, Workspace>,
+    req: Request,
     t0: Instant,
 ) -> Result<Response, String> {
     let deployed = models
@@ -258,16 +274,28 @@ fn serve_one(
             m.input_shape.len()
         ));
     }
-    let x = Tensor::from_vec(m.input_shape, m.input_q, req.input.clone());
-    let out = match &deployed.schedule {
-        Some(s) => s.run(m, &x, &mut NoopMonitor),
-        None => m.forward(&x, true, &mut NoopMonitor),
+    let Request { id, model, input } = req;
+    // the request buffer becomes the input tensor — no clone
+    let x = Tensor::from_vec(m.input_shape, m.input_q, input);
+    let logits = match &deployed.schedule {
+        // tuned schedules still execute through TunedSchedule::run,
+        // which allocates per layer — zero-alloc execution of arbitrary
+        // (P, F)-blocked candidates is an open item (see ROADMAP)
+        Some(s) => s.run(m, &x, &mut NoopMonitor).data,
+        None => match workspaces.get_mut(&model) {
+            // steady-state path: run inside the worker's pre-planned
+            // arena (zero heap allocations); only the reply logits are
+            // copied out
+            Some(ws) => m.forward_in(&x, true, ws, &mut NoopMonitor).data.clone(),
+            None => m.forward(&x, true, &mut NoopMonitor).data,
+        },
     };
+    let class = argmax(&logits);
     Ok(Response {
-        id: req.id,
-        model: req.model.clone(),
-        class: argmax(&out.data),
-        logits: out.data,
+        id,
+        model,
+        class,
+        logits,
         service_time: t0.elapsed(),
         mcu_latency_s: deployed.mcu.latency_s,
         mcu_energy_mj: deployed.mcu.energy_mj,
@@ -372,21 +400,21 @@ mod tests {
     fn percentiles_pinned_on_known_distribution() {
         // 100 samples 1..=100 µs: nearest-rank at round((n-1)·p) gives
         // p50 = lats[50] = 51, p99 = lats[98] = 99, mean = 50.5
-        let lats: Vec<f64> = (1..=100).map(|v| v as f64).collect();
-        let s = compute_stats(100, 0, lats);
+        let mut lats: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let s = compute_stats(100, 0, &mut lats);
         assert_eq!(s.p50_us, 51.0);
         assert_eq!(s.p99_us, 99.0);
         assert!((s.mean_us - 50.5).abs() < 1e-12);
         // order independence: shuffled input summarizes identically
         let mut shuffled: Vec<f64> = (1..=100).map(|v| v as f64).collect();
         Rng::new(11).shuffle(&mut shuffled);
-        let s2 = compute_stats(100, 0, shuffled);
+        let s2 = compute_stats(100, 0, &mut shuffled);
         assert_eq!(s2.p50_us, 51.0);
         assert_eq!(s2.p99_us, 99.0);
         // degenerate inputs
-        let empty = compute_stats(0, 0, Vec::new());
+        let empty = compute_stats(0, 0, &mut []);
         assert_eq!((empty.p50_us, empty.p99_us, empty.mean_us), (0.0, 0.0, 0.0));
-        let one = compute_stats(1, 0, vec![7.5]);
+        let one = compute_stats(1, 0, &mut [7.5]);
         assert_eq!((one.p50_us, one.p99_us, one.mean_us), (7.5, 7.5, 7.5));
     }
 

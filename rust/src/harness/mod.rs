@@ -18,5 +18,7 @@ pub use figures::{
 pub use nas::{best_under_energy_budget, enumerate as nas_enumerate, nas_markdown, pareto_front, Candidate, ScoredCandidate, StageChoice};
 pub use plan::{quick_plans, table2_plans, Axis, Sweep};
 pub use regress::{regressions, RegressionReport};
-pub use sweep::{measure_model, run_all, run_sweep, SweepPoint};
+pub use sweep::{
+    measure_model, measure_model_analytic, measure_model_in, run_all, run_sweep, SweepPoint,
+};
 pub use tuned::{tuned_csv, tuned_markdown, tuned_vs_fixed, TunedCmpRow};

@@ -40,27 +40,70 @@ impl SweepPoint {
     }
 }
 
-/// Measure one experiment model on the simulated MCU: per-layer counts,
-/// each mapped through the path class it actually executes (add-conv and
-/// BN stay scalar even in the SIMD build), then combined.
-pub fn measure_model(model: &Model, x: &crate::nn::Tensor, simd: bool, cfg: &McuConfig) -> Measurement {
-    let (_, profiles) = model.forward_profiled(x, simd);
-    let parts: Vec<Measurement> = profiles
+/// Map per-layer counts through the path class each layer actually
+/// executes (add-conv and BN stay scalar even in the SIMD build), then
+/// combine into one model-level measurement.
+fn measure_layer_counts(
+    counts: &[crate::nn::OpCounts],
+    model: &Model,
+    simd: bool,
+    cfg: &McuConfig,
+) -> Measurement {
+    let parts: Vec<Measurement> = counts
         .iter()
         .zip(&model.layers)
-        .map(|(p, layer)| {
+        .map(|(c, layer)| {
             let path = if simd && layer.has_simd() {
                 PathClass::Simd
             } else {
                 PathClass::Scalar
             };
-            measure(&p.counts, path, cfg)
+            measure(c, path, cfg)
         })
         .collect();
     combine(&parts, cfg)
 }
 
-/// Run a sweep for the given primitives.
+/// Measure one experiment model on the simulated MCU via an instrumented
+/// forward — the oracle the analytic pricing below is property-tested
+/// against.
+pub fn measure_model(model: &Model, x: &crate::nn::Tensor, simd: bool, cfg: &McuConfig) -> Measurement {
+    let (_, profiles) = model.forward_profiled(x, simd);
+    let counts: Vec<crate::nn::OpCounts> = profiles.iter().map(|p| p.counts).collect();
+    measure_layer_counts(&counts, model, simd, cfg)
+}
+
+/// [`measure_model`] executing inside a reusable [`crate::nn::Workspace`]
+/// arena — identical numbers, zero per-layer heap allocations. The sweep
+/// runner uses this so a full Table 2 sweep reuses one arena per
+/// experiment model across both code paths.
+pub fn measure_model_in(
+    model: &Model,
+    x: &crate::nn::Tensor,
+    simd: bool,
+    cfg: &McuConfig,
+    ws: &mut crate::nn::Workspace,
+) -> Measurement {
+    let (_, profiles) = model.forward_profiled_in(x, simd, ws);
+    let counts: Vec<crate::nn::OpCounts> = profiles.iter().map(|p| p.counts).collect();
+    measure_layer_counts(&counts, model, simd, cfg)
+}
+
+/// Price a model on the simulated MCU **without executing it**: per-layer
+/// closed-form counts ([`crate::nn::model_layer_counts`]) mapped through
+/// the path class each layer actually executes, then combined. Exact —
+/// the analytic counts equal the instrumented ones event class by event
+/// class — so this returns bitwise the same [`Measurement`] as
+/// [`measure_model`] on any correctly-shaped input, at shape-arithmetic
+/// cost. The tuned-vs-fixed harness and the serving registration path
+/// use this; the figure sweeps keep the instrumented oracle.
+pub fn measure_model_analytic(model: &Model, simd: bool, cfg: &McuConfig) -> Measurement {
+    measure_layer_counts(&crate::nn::model_layer_counts(model, simd), model, simd, cfg)
+}
+
+/// Run a sweep for the given primitives. Each experiment model executes
+/// inside one workspace arena (both code paths), so the sweep's inner
+/// loop performs no per-layer allocations.
 pub fn run_sweep(sweep: &Sweep, primitives: &[Primitive], cfg: &McuConfig) -> Vec<SweepPoint> {
     let mut out = Vec::new();
     for &value in &sweep.values {
@@ -68,8 +111,11 @@ pub fn run_sweep(sweep: &Sweep, primitives: &[Primitive], cfg: &McuConfig) -> Ve
         for &prim in primitives {
             let model = experiment_layer(&params, prim, 0xEC0 + sweep.id as u64);
             let x = experiment_input(&params, 0x11A + value as u64);
-            let scalar = measure_model(&model, &x, false, cfg);
-            let simd = prim.has_simd().then(|| measure_model(&model, &x, true, cfg));
+            let mut ws = crate::nn::Workspace::new(&model);
+            let scalar = measure_model_in(&model, &x, false, cfg, &mut ws);
+            let simd = prim
+                .has_simd()
+                .then(|| measure_model_in(&model, &x, true, cfg, &mut ws));
             out.push(SweepPoint {
                 experiment: sweep.id,
                 primitive: prim,
@@ -100,6 +146,31 @@ mod tests {
     fn quick_points() -> Vec<SweepPoint> {
         let cfg = McuConfig::default();
         run_sweep(&quick_plans()[1], &Primitive::ALL, &cfg)
+    }
+
+    #[test]
+    fn analytic_measurement_is_bitwise_equal_to_instrumented() {
+        use crate::analytic::Primitive;
+        use crate::models::{experiment_input, experiment_layer};
+        let cfg = McuConfig::default();
+        let plan = &quick_plans()[0];
+        for &prim in &Primitive::ALL {
+            let model = experiment_layer(&plan.base, prim, 0xA0);
+            let x = experiment_input(&plan.base, 0xB0);
+            let mut ws = crate::nn::Workspace::new(&model);
+            for simd in [false, true] {
+                let inst = measure_model(&model, &x, simd, &cfg);
+                let ana = measure_model_analytic(&model, simd, &cfg);
+                let in_ws = measure_model_in(&model, &x, simd, &cfg, &mut ws);
+                assert_eq!(inst.cycles, ana.cycles, "{prim:?} simd={simd}");
+                assert_eq!(inst.latency_s, ana.latency_s, "{prim:?} simd={simd}");
+                assert_eq!(inst.energy_mj, ana.energy_mj, "{prim:?} simd={simd}");
+                assert_eq!(inst.mem_accesses, ana.mem_accesses, "{prim:?} simd={simd}");
+                assert_eq!(inst.effective_macs, ana.effective_macs, "{prim:?} simd={simd}");
+                assert_eq!(inst.cycles, in_ws.cycles, "workspace {prim:?} simd={simd}");
+                assert_eq!(inst.mem_accesses, in_ws.mem_accesses, "workspace {prim:?} simd={simd}");
+            }
+        }
     }
 
     #[test]

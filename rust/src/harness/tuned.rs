@@ -1,19 +1,23 @@
 //! Tuned-vs-fixed comparison: for every Table 2 workload (base
-//! configuration × primitive), measure the two fixed schedules the paper
+//! configuration × primitive), price the two fixed schedules the paper
 //! deploys (scalar everywhere / SIMD everywhere) and the auto-tuned
 //! per-layer schedule, for both the latency and the energy objective.
 //! The tuner's candidate space contains both fixed schedules, so the
 //! tuned result is ≤ the best fixed one by construction — this harness
 //! measures *how much* better substitution + blocking get to be, and the
 //! integration tests pin the inequality.
+//!
+//! Both sides are priced by the analytic cost engine (exact, see
+//! [`crate::nn::counts`]), so a cold `convbench tune` executes **zero**
+//! instrumented forwards end to end.
 
 use crate::analytic::Primitive;
 use crate::mcu::{McuConfig, Measurement};
-use crate::models::{experiment_input, experiment_layer, LayerParams};
-use crate::tuner::{tune_model, Objective, TuneStats, TunedSchedule, TuningCache};
+use crate::models::{experiment_layer, LayerParams};
+use crate::tuner::{tune_model_shape, Objective, TuneStats, TunedSchedule, TuningCache};
 
 use super::plan::Sweep;
-use super::sweep::measure_model;
+use super::sweep::measure_model_analytic;
 
 /// One workload row of the comparison.
 #[derive(Clone, Debug)]
@@ -68,11 +72,10 @@ pub fn tuned_vs_fixed(
         let params = plan.base;
         for &prim in &Primitive::ALL {
             let model = experiment_layer(&params, prim, 0xEC0 + plan.id as u64);
-            let x = experiment_input(&params, 0x11A + plan.id as u64);
-            let fixed_scalar = measure_model(&model, &x, false, cfg);
-            let fixed_simd = prim.has_simd().then(|| measure_model(&model, &x, true, cfg));
-            let (tuned_latency, s1) = tune_model(&model, &x, cfg, Objective::Latency, cache);
-            let (tuned_energy, s2) = tune_model(&model, &x, cfg, Objective::Energy, cache);
+            let fixed_scalar = measure_model_analytic(&model, false, cfg);
+            let fixed_simd = prim.has_simd().then(|| measure_model_analytic(&model, true, cfg));
+            let (tuned_latency, s1) = tune_model_shape(&model, cfg, Objective::Latency, cache);
+            let (tuned_energy, s2) = tune_model_shape(&model, cfg, Objective::Energy, cache);
             rows.push(TunedCmpRow {
                 experiment: plan.id,
                 primitive: prim,
@@ -83,6 +86,7 @@ pub fn tuned_vs_fixed(
                 tuned_energy,
                 stats: TuneStats {
                     evaluations: s1.evaluations + s2.evaluations,
+                    analytic: s1.analytic + s2.analytic,
                     cache_hits: s1.cache_hits + s2.cache_hits,
                     candidates: s1.candidates + s2.candidates,
                 },
@@ -96,7 +100,7 @@ pub fn tuned_vs_fixed(
 pub fn tuned_markdown(rows: &[TunedCmpRow]) -> String {
     let mut s = String::from(
         "| exp | primitive | fixed scalar (ms) | fixed SIMD (ms) | tuned (ms) | \
-         fixed best (mJ) | tuned (mJ) | evals | never worse |\n\
+         fixed best (mJ) | tuned (mJ) | scored | never worse |\n\
          |---|---|---|---|---|---|---|---|---|\n",
     );
     for r in rows {
@@ -111,7 +115,7 @@ pub fn tuned_markdown(rows: &[TunedCmpRow]) -> String {
             1e3 * r.tuned_latency.latency_s,
             r.best_fixed_energy_mj(),
             r.tuned_energy.energy_mj,
-            r.stats.evaluations,
+            r.stats.analytic,
             if r.tuned_is_never_worse() { "yes" } else { "NO" },
         ));
     }
@@ -124,12 +128,12 @@ pub fn tuned_csv(rows: &[TunedCmpRow]) -> String {
     let mut s = String::from(
         "experiment,primitive,fixed_scalar_latency_s,fixed_simd_latency_s,\
          tuned_latency_s,best_fixed_energy_mj,tuned_energy_mj,\
-         tuned_peak_ram_bytes,evaluations,cache_hits\n",
+         tuned_peak_ram_bytes,evaluations,analytic_scored,cache_hits\n",
     );
     for r in rows {
         let _ = writeln!(
             s,
-            "{},{},{:.6e},{},{:.6e},{:.6e},{:.6e},{},{},{}",
+            "{},{},{:.6e},{},{:.6e},{:.6e},{:.6e},{},{},{},{}",
             r.experiment,
             r.primitive.name(),
             r.fixed_scalar.latency_s,
@@ -141,6 +145,7 @@ pub fn tuned_csv(rows: &[TunedCmpRow]) -> String {
             r.tuned_energy.energy_mj,
             r.tuned_latency.peak_ram_bytes,
             r.stats.evaluations,
+            r.stats.analytic,
             r.stats.cache_hits,
         );
     }
@@ -170,6 +175,18 @@ mod tests {
     }
 
     #[test]
+    fn cold_pass_scores_analytically_with_zero_simulator_evals() {
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let plans = quick_plans();
+        let rows = tuned_vs_fixed(&plans[..1], &cfg, &mut cache);
+        for r in &rows {
+            assert_eq!(r.stats.evaluations, 0, "{:?}", r.primitive);
+            assert!(r.stats.analytic > 0, "{:?}", r.primitive);
+        }
+    }
+
+    #[test]
     fn second_pass_is_fully_cached() {
         let cfg = McuConfig::default();
         let mut cache = TuningCache::in_memory();
@@ -178,6 +195,7 @@ mod tests {
         let rows = tuned_vs_fixed(&plans[..1], &cfg, &mut cache);
         for r in &rows {
             assert_eq!(r.stats.evaluations, 0, "{:?}", r.primitive);
+            assert_eq!(r.stats.analytic, 0, "warm pass must not re-score: {:?}", r.primitive);
             assert!(r.stats.cache_hits > 0);
         }
     }

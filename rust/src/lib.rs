@@ -12,7 +12,11 @@
 //!
 //! * [`quant`] — the paper's power-of-two quantization scheme (Eq. 4).
 //! * [`nn`] — an NNoM-equivalent int8 inference engine with scalar and
-//!   SIMD (`__SMLAD`-semantics) code paths for all five primitives.
+//!   SIMD (`__SMLAD`-semantics) code paths for all five primitives, an
+//!   analytic op-count engine deriving each kernel's exact micro-op mix
+//!   in closed form from shapes ([`nn::counts`]), and a per-model
+//!   scratch arena for zero-allocation inference with a byte-exact
+//!   peak-RAM plan ([`nn::workspace`], `Model::forward_in`).
 //! * [`mcu`] — a Cortex-M4 instruction-cost + power/energy simulator
 //!   (the substitution for the paper's STM32F401-RE testbed).
 //! * [`analytic`] — Table 1 closed forms (parameters / theoretical MACs).
@@ -21,9 +25,11 @@
 //! * [`models`] — layer configs and small end-to-end CNNs ("MCU-Net").
 //! * [`tuner`] — cost-model-driven per-layer schedule auto-tuner:
 //!   enumerates primitive substitutions, scalar/SIMD lowering and (P, F)
-//!   register blocking per layer, scores candidates on the [`mcu`]
-//!   simulator under a latency/energy/RAM objective, and persists the
-//!   winning schedules in a JSON tuning cache (`convbench tune`).
+//!   register blocking per layer, scores candidates analytically
+//!   (closed-form counts through the [`mcu`] cost model — a cold tune
+//!   executes zero instrumented forwards) under a latency/energy/RAM
+//!   objective, and persists the winning schedules in a JSON tuning
+//!   cache (`convbench tune`).
 //! * [`runtime`] — artifact bookkeeping for the JAX/Pallas-lowered HLO
 //!   models; the PJRT client (via the `xla` crate) sits behind the
 //!   `pjrt` cargo feature for cross-layer validation.

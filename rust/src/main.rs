@@ -263,13 +263,13 @@ fn cmd_all(cfg: &McuConfig, quick: bool, out_dir: &str) {
 /// `convbench tune` — run the per-layer schedule auto-tuner over every
 /// Table 2 workload (base config × primitive) and the MCU-Net zoo,
 /// compare against the paper's fixed scalar/SIMD schedules, and persist
-/// the tuning cache so the next invocation replays without touching the
-/// simulator.
+/// the tuning cache. Scoring is analytic (closed-form op counts), so a
+/// cold tune executes zero instrumented forwards; a warm cache skips
+/// even the shape arithmetic.
 fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     use convbench::harness::{tuned_csv, tuned_markdown, tuned_vs_fixed};
     use convbench::models::mcunet;
-    use convbench::nn::Tensor;
-    use convbench::tuner::{tune_model, Objective, TuningCache};
+    use convbench::tuner::{tune_model_shape, Objective, TuningCache};
 
     let objective = match Objective::parse(args.get("objective").unwrap_or("latency")) {
         Ok(o) => o,
@@ -298,6 +298,7 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     println!("Table 2 workloads — tuned (latency / energy objectives) vs fixed schedules\n");
     println!("{}", tuned_markdown(&rows));
     let evals: usize = rows.iter().map(|r| r.stats.evaluations).sum();
+    let scored: usize = rows.iter().map(|r| r.stats.analytic).sum();
     let hits: usize = rows.iter().map(|r| r.stats.cache_hits).sum();
     let regressions = rows.iter().filter(|r| !r.tuned_is_never_worse()).count();
 
@@ -305,8 +306,7 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     println!("MCU-Net zoo — objective {}\n", objective.name());
     for prim in Primitive::ALL {
         let model = mcunet(prim, 42);
-        let x = Tensor::zeros(model.input_shape, model.input_q);
-        let (schedule, _) = tune_model(&model, &x, cfg, objective, &mut cache);
+        let (schedule, _) = tune_model_shape(&model, cfg, objective, &mut cache);
         println!("{}", schedule.to_markdown());
     }
 
@@ -321,13 +321,24 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
         eprintln!("warning: could not persist tuning cache: {e}");
     }
     eprintln!(
-        "tuned {} workloads: {evals} simulator evaluations, {hits} cache hits \
+        "tuned {} workloads: {evals} simulator evaluations (analytic scoring — always 0), \
+         {scored} analytic scores, {hits} cache hits \
          ({warm_entries} entries warm at start, {} now); wrote {csv_path}",
         rows.len(),
         cache.len()
     );
     if regressions > 0 {
         eprintln!("ERROR: {regressions} workloads regressed vs the best fixed schedule");
+        std::process::exit(1);
+    }
+    // --expect-warm: CI's warm-replay gate — a run against a cache that
+    // should already hold every key must not score anything (cache
+    // keying drift would otherwise pass silently; see ci.sh)
+    if args.flag("expect-warm") && (scored > 0 || evals > 0 || hits == 0) {
+        eprintln!(
+            "ERROR: --expect-warm but the Table 2 comparison re-scored {scored} candidates \
+             ({evals} simulator evals, {hits} cache hits) — tuning cache keying regressed"
+        );
         std::process::exit(1);
     }
 }
@@ -395,4 +406,7 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         mem.sram_bytes as f64 / 1024.0,
         mem.fits_f401()
     );
+    // the workspace plan is the byte-exact version of the SRAM estimate
+    let ws = convbench::nn::Workspace::new(&model);
+    println!("exact {}", ws.plan().summary());
 }

@@ -90,8 +90,18 @@ impl AddConv {
     /// operand synthesized (no input load).
     pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid add-conv configuration");
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
+        self.forward_scalar_into(x, &mut y, mon);
+        y
+    }
+
+    /// [`AddConv::forward_scalar`] into a caller-provided output tensor
+    /// (allocation-free workspace path; identical event stream).
+    pub fn forward_scalar_into<M: Monitor>(&self, x: &Tensor, y: &mut Tensor, mon: &mut M) {
+        self.validate(&x.shape).expect("invalid add-conv configuration");
         let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
         let (shift, on_input) = self.alignment();
         let out_shift = self.out_shift();
         let k = self.kernel as isize;
@@ -142,7 +152,6 @@ impl AddConv {
                 }
             }
         }
-        y
     }
 
     /// Float-domain reference of the *integer* semantics.

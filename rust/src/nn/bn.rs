@@ -116,9 +116,18 @@ impl BnLayer {
     /// per channel-indexed `ld16`/`ld32` parameter load, one `mac`, shift +
     /// saturate (`alu`), `st8`.
     pub fn forward<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
+        let mut y = Tensor::zeros(x.shape, self.q_out);
+        self.forward_into(x, &mut y, mon);
+        y
+    }
+
+    /// [`BnLayer::forward`] into a caller-provided output tensor
+    /// (allocation-free workspace path; identical event stream).
+    pub fn forward_into<M: Monitor>(&self, x: &Tensor, y: &mut Tensor, mon: &mut M) {
         assert_eq!(x.shape.c, self.channels, "BN channel mismatch");
         debug_assert_eq!(x.q, self.q_in);
-        let mut y = Tensor::zeros(x.shape, self.q_out);
+        debug_assert_eq!(y.shape, x.shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
         let shift = self.out_shift();
         for i in 0..x.data.len() {
             let c = i % self.channels;
@@ -131,7 +140,6 @@ impl BnLayer {
             let acc = x.data[i] as i32 * self.m[c] as i32 + self.b[c];
             y.data[i] = sat_i8(requantize(acc, shift));
         }
-        y
     }
 }
 

@@ -89,9 +89,22 @@ impl QuantConv {
     /// zero pad, fewer memory events at the borders).
     pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid conv configuration");
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
+        self.forward_scalar_into(x, &mut y, mon);
+        y
+    }
+
+    /// [`QuantConv::forward_scalar`] into a caller-provided output tensor
+    /// (already shaped to [`QuantConv::output_shape`] at `q_out`) — the
+    /// allocation-free path [`super::workspace::Workspace`] drives. Every
+    /// output element is written, so a dirty buffer is fine; the event
+    /// stream is identical to the allocating wrapper.
+    pub fn forward_scalar_into<M: Monitor>(&self, x: &Tensor, y: &mut Tensor, mon: &mut M) {
+        self.validate(&x.shape).expect("invalid conv configuration");
         debug_assert_eq!(x.q, self.q_in);
         let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
         let shift = self.out_shift();
         let cpg = self.ch_per_group();
         let fpg = self.filters_per_group();
@@ -140,7 +153,6 @@ impl QuantConv {
                 }
             }
         }
-        y
     }
 
     /// Float reference for this layer's exact integer semantics — computes

@@ -1,0 +1,882 @@
+//! Analytic op-count engine: closed-form [`OpCounts`] for every kernel in
+//! the engine, computed from shapes alone — no execution, no input data.
+//!
+//! Every formula here is **exact**, not an estimate: for each instrumented
+//! kernel (`forward_scalar`, `forward_simd`, `conv_im2col_blocked`, the
+//! glue layers) the analytic count equals what a [`CountingMonitor`]
+//! accumulates over a real forward, event class by event class. That
+//! equality is property-tested across randomized configurations at the
+//! bottom of this file and again over the whole schedule space in
+//! `tuner::space`. The payoff is the paper's own separation of cost
+//! modeling from execution (latency/energy follow the counted op mix,
+//! §4.1): the schedule tuner scores candidates with shape arithmetic
+//! instead of thousands of instrumented forwards, and the sweep harness
+//! can price a fixed schedule without running it.
+//!
+//! Border handling is where the closed forms earn their keep. The direct
+//! kernels *skip* out-of-bounds taps while im2col *zero-fills* them, so
+//! both cases reduce to counting, for each kernel offset `i`, how many
+//! output rows keep `iy = oy + i − pad` inside the input — a clamped
+//! range length ([`rows_in_bounds`]). Tap populations then factorize:
+//! `Σ_{i,j} rin(i)·cin(j) = (Σ_i rin(i))·(Σ_j cin(j))`, which keeps every
+//! formula O(k) in the kernel size and O(1) in the image size. Shift
+//! convolution is the same game per channel with its `(α, β)` offsets.
+
+use super::monitor::OpCounts;
+use super::tensor::Shape;
+
+#[cfg(test)]
+use super::monitor::CountingMonitor;
+
+/// Number of output rows `oy ∈ [0, out)` whose sampled input row
+/// `iy = oy + off − pad` lands inside `[0, len)`.
+#[inline]
+fn rows_in_bounds(out: usize, len: usize, off: usize, pad: usize) -> u64 {
+    let lo = (pad as isize - off as isize).max(0);
+    let hi = ((len + pad) as isize - off as isize).min(out as isize);
+    (hi - lo).max(0) as u64
+}
+
+/// Σ over kernel offsets of [`rows_in_bounds`] — the total number of
+/// (output row, kernel row) pairs whose input row is in bounds.
+#[inline]
+fn in_bounds_sum(out: usize, len: usize, kernel: usize, pad: usize) -> u64 {
+    (0..kernel).map(|off| rows_in_bounds(out, len, off, pad)).sum()
+}
+
+/// Number of in-bounds sample rows for a single signed shift offset:
+/// `#{y ∈ [0, len) : y + s ∈ [0, len)} = max(0, len − |s|)`.
+#[inline]
+fn shifted_in_bounds(len: usize, s: i8) -> u64 {
+    (len as i64 - (s as i64).abs()).max(0) as u64
+}
+
+/// Stride-1 output spatial length for `len` with `pad` on each side.
+#[inline]
+fn out_len(len: usize, kernel: usize, pad: usize) -> usize {
+    len + 2 * pad - kernel + 1
+}
+
+/// Scalar (grouped) direct convolution — the event stream of
+/// [`super::conv::QuantConv::forward_scalar`].
+pub fn conv_scalar_counts(
+    kernel: usize,
+    groups: usize,
+    in_channels: usize,
+    out_channels: usize,
+    pad: usize,
+    in_shape: &Shape,
+) -> OpCounts {
+    let cpg = (in_channels / groups) as u64;
+    let cout = out_channels as u64;
+    let oh = out_len(in_shape.h, kernel, pad);
+    let ow = out_len(in_shape.w, kernel, pad);
+    let npix = (oh * ow) as u64;
+    let rsum = in_bounds_sum(oh, in_shape.h, kernel, pad);
+    let csum = in_bounds_sum(ow, in_shape.w, kernel, pad);
+    let rows_oob = (kernel * oh) as u64 - rsum;
+    let taps = rsum * csum; // fully in-bounds (oy, ox, i, j) tuples
+    OpCounts {
+        ld32: cout * npix,
+        st8: cout * npix,
+        alu: 2 * cout * npix,
+        ld8: 2 * cout * cpg * taps,
+        mac: cout * cpg * taps,
+        branch: cout * (ow as u64 * rows_oob + ow as u64 * rsum * kernel as u64 + cpg * taps),
+        ..OpCounts::default()
+    }
+}
+
+/// Blocked im2col (grouped) convolution at `patches × filters` — the
+/// event stream of [`crate::tuner::space::conv_im2col_blocked`]. At the
+/// 2×2 design point this is also exactly
+/// [`super::conv::QuantConv::forward_simd`] (the production CMSIS-style
+/// kernel is event-equivalent to the generalized block there, which the
+/// blocking property tests pin).
+pub fn conv_im2col_counts(
+    kernel: usize,
+    groups: usize,
+    in_channels: usize,
+    out_channels: usize,
+    pad: usize,
+    in_shape: &Shape,
+    patches: usize,
+    filters: usize,
+) -> OpCounts {
+    let g = groups as u64;
+    let cpg = in_channels / groups;
+    let fpg = out_channels / groups;
+    let oh = out_len(in_shape.h, kernel, pad);
+    let ow = out_len(in_shape.w, kernel, pad);
+    let npix = oh * ow;
+    let rsum = in_bounds_sum(oh, in_shape.h, kernel, pad);
+    let csum = in_bounds_sum(ow, in_shape.w, kernel, pad);
+
+    let mut c = OpCounts::default();
+
+    // --- im2col fills: every pixel of every group fills one column of
+    // k²·cpg q15 values; in-bounds taps widen (4 per ld32 + 2×SXTB16 +
+    // 2×st32, byte tail), out-of-bounds taps zero-fill (2 lanes per st32).
+    let n_taps_total = (kernel * kernel * npix) as u64;
+    let n_in = rsum * csum;
+    let n_zero = n_taps_total - n_in;
+    let c4 = (cpg / 4) as u64;
+    let crem = (cpg % 4) as u64;
+    c.branch += g * n_taps_total; // bounds test per tap
+    c.ld32 += g * n_in * c4;
+    c.alu += g * n_in * 2 * c4;
+    c.st32 += g * n_in * 2 * c4;
+    c.ld8 += g * n_in * crem;
+    c.st16 += g * n_in * crem;
+    c.st32 += g * n_zero * ((cpg as u64 + 1) / 2);
+
+    // --- blocked matmul over pixel blocks × filter blocks (tails run at
+    // their reduced pcnt/fcnt; see `mat_mult_block`): per 4 k-values one
+    // q7x4 word per filter row (+2 SXTB16) + two q15 words per column +
+    // 2·p·f SMLADs, scalar tail per leftover k, then requantize + store
+    // per produced output.
+    let klen = kernel * kernel * cpg;
+    let k4 = (klen / 4) as u64;
+    let t = (klen % 4) as u64;
+    let pixel_blocks = [(patches, (npix / patches) as u64), (npix % patches, 1)];
+    let filter_blocks = [(filters, (fpg / filters) as u64), (fpg % filters, 1)];
+    for &(pcnt, np) in &pixel_blocks {
+        if pcnt == 0 || np == 0 {
+            continue;
+        }
+        for &(fcnt, nf) in &filter_blocks {
+            if fcnt == 0 || nf == 0 {
+                continue;
+            }
+            let mult = g * np * nf;
+            let (p, f) = (pcnt as u64, fcnt as u64);
+            c.ld32 += mult * (f + k4 * (f + 2 * p));
+            c.alu += mult * (2 * f * k4 + 2 * f * p);
+            c.smlad += mult * 2 * p * f * k4;
+            c.branch += mult * (k4 + t);
+            c.ld8 += mult * f * t;
+            c.ld16 += mult * p * t;
+            c.mac += mult * p * f * t;
+            c.st8 += mult * f * p;
+        }
+    }
+    c
+}
+
+/// Scalar depthwise convolution — the event stream of
+/// [`super::depthwise::QuantDepthwise::forward_scalar`].
+pub fn depthwise_scalar_counts(
+    kernel: usize,
+    channels: usize,
+    pad: usize,
+    in_shape: &Shape,
+) -> OpCounts {
+    let ch = channels as u64;
+    let oh = out_len(in_shape.h, kernel, pad);
+    let ow = out_len(in_shape.w, kernel, pad);
+    let npix = (oh * ow) as u64;
+    let rsum = in_bounds_sum(oh, in_shape.h, kernel, pad);
+    let csum = in_bounds_sum(ow, in_shape.w, kernel, pad);
+    let rows_oob = (kernel * oh) as u64 - rsum;
+    let taps = rsum * csum;
+    OpCounts {
+        ld32: ch * npix,
+        ld8: 2 * ch * taps,
+        mac: ch * taps,
+        branch: ch * (ow as u64 * rows_oob + ow as u64 * rsum * kernel as u64),
+        alu: 2 * ch * npix,
+        st8: ch * npix,
+        ..OpCounts::default()
+    }
+}
+
+/// Channel-blocked SIMD depthwise convolution — the event stream of
+/// [`super::depthwise::QuantDepthwise::forward_simd`] (4-channel blocks
+/// share 32-bit loads; leftover channels run the scalar tail).
+pub fn depthwise_simd_counts(
+    kernel: usize,
+    channels: usize,
+    pad: usize,
+    in_shape: &Shape,
+) -> OpCounts {
+    let c4 = (channels / 4) as u64;
+    let rem = (channels % 4) as u64;
+    let oh = out_len(in_shape.h, kernel, pad);
+    let ow = out_len(in_shape.w, kernel, pad);
+    let npix = (oh * ow) as u64;
+    let rsum = in_bounds_sum(oh, in_shape.h, kernel, pad);
+    let csum = in_bounds_sum(ow, in_shape.w, kernel, pad);
+    let rows_oob = (kernel * oh) as u64 - rsum;
+    let taps = rsum * csum;
+    let branch_per_lane = ow as u64 * rows_oob + ow as u64 * rsum * kernel as u64;
+    OpCounts {
+        // 4-channel blocks: 2 packed bias words, one x + one w word per
+        // tap, 2×SXTB16 each, 4 per-channel MACs, 4 requantize+store
+        ld32: 2 * c4 * npix + 2 * c4 * taps + rem * npix,
+        alu: 4 * c4 * taps + 8 * c4 * npix + 2 * rem * npix,
+        mac: 4 * c4 * taps + rem * taps,
+        st8: 4 * c4 * npix + rem * npix,
+        branch: (c4 + rem) * branch_per_lane,
+        // scalar tail lanes
+        ld8: 2 * rem * taps,
+        ..OpCounts::default()
+    }
+}
+
+/// Fused scalar shift convolution — the event stream of
+/// [`super::shift::ShiftConv::forward_scalar`]: stage 1 materializes the
+/// shifted map (one table read, bounds branch and store per element, a
+/// data load only in bounds), stage 2 is the plain pointwise loop.
+pub fn shift_scalar_counts(shifts: &[(i8, i8)], out_channels: usize, in_shape: &Shape) -> OpCounts {
+    let cin = shifts.len() as u64;
+    let cout = out_channels as u64;
+    let npix = (in_shape.h * in_shape.w) as u64;
+    let n_in: u64 = shifts
+        .iter()
+        .map(|&(a, b)| shifted_in_bounds(in_shape.h, a) * shifted_in_bounds(in_shape.w, b))
+        .sum();
+    OpCounts {
+        ld8: npix * cin + n_in + 2 * cin * npix * cout,
+        branch: npix * cin + cin * npix * cout,
+        st8: npix * cin + npix * cout,
+        ld32: npix * cout,
+        mac: cin * npix * cout,
+        alu: 2 * npix * cout,
+        ..OpCounts::default()
+    }
+}
+
+/// SIMD shift convolution — the event stream of
+/// [`super::simd`]'s `ShiftConv::forward_simd`: shifted-gather im2col
+/// (scalar per channel: no 4-wide widening possible) + the 2×2 pointwise
+/// matmul with its 1×2 / 2×1 / 1×1 tails.
+pub fn shift_simd_counts(shifts: &[(i8, i8)], out_channels: usize, in_shape: &Shape) -> OpCounts {
+    let cin = shifts.len();
+    let npix = (in_shape.h * in_shape.w) as u64;
+    let n_in: u64 = shifts
+        .iter()
+        .map(|&(a, b)| shifted_in_bounds(in_shape.h, a) * shifted_in_bounds(in_shape.w, b))
+        .sum();
+
+    let mut c = OpCounts {
+        // gather fills: per (pixel, channel) one table byte + bounds
+        // branch + st16; the data ld8 only lands in bounds
+        ld8: npix * cin as u64 + n_in,
+        branch: npix * cin as u64,
+        st16: npix * cin as u64,
+        ..OpCounts::default()
+    };
+
+    let k4 = (cin / 4) as u64;
+    let t = (cin % 4) as u64;
+    let pix_pairs = npix / 2;
+    let odd_pix = npix % 2;
+    let f_pairs = (out_channels / 2) as u64;
+    let odd_f = (out_channels % 2) as u64;
+
+    // 2 filters × 2 columns
+    let m = pix_pairs * f_pairs;
+    c.ld32 += m * (2 + 6 * k4);
+    c.alu += m * (4 * k4 + 8);
+    c.smlad += m * 8 * k4;
+    c.branch += m * (k4 + t);
+    c.ld8 += m * 2 * t;
+    c.ld16 += m * 2 * t;
+    c.mac += m * 4 * t;
+    c.st8 += m * 4;
+    // odd filter × 2 columns
+    let m = pix_pairs * odd_f;
+    c.ld32 += m * (1 + 5 * k4);
+    c.alu += m * (2 * k4 + 4);
+    c.smlad += m * 4 * k4;
+    c.branch += m * (k4 + t);
+    c.ld8 += m * t;
+    c.ld16 += m * 2 * t;
+    c.mac += m * 2 * t;
+    c.st8 += m * 2;
+    // 2 filters × odd column
+    let m = odd_pix * f_pairs;
+    c.ld32 += m * (2 + 4 * k4);
+    c.alu += m * (4 * k4 + 4);
+    c.smlad += m * 4 * k4;
+    c.branch += m * (k4 + t);
+    c.ld8 += m * 2 * t;
+    c.ld16 += m * t;
+    c.mac += m * 2 * t;
+    c.st8 += m * 2;
+    // scalar corner
+    let m = odd_pix * odd_f;
+    c.ld32 += m * (1 + 3 * k4);
+    c.alu += m * (2 * k4 + 2);
+    c.smlad += m * 2 * k4;
+    c.branch += m * (k4 + t);
+    c.ld8 += m * t;
+    c.ld16 += m * t;
+    c.mac += m * t;
+    c.st8 += m;
+    c
+}
+
+/// Add (L1-norm) convolution — the event stream of
+/// [`super::add_conv::AddConv::forward_scalar`]. Padded taps are *not*
+/// skipped (a zero operand still contributes `−|w|`), so every tap costs
+/// its 2 ALU ops; only the input load disappears at the border.
+pub fn add_conv_counts(
+    kernel: usize,
+    in_channels: usize,
+    out_channels: usize,
+    pad: usize,
+    in_shape: &Shape,
+) -> OpCounts {
+    let cin = in_channels as u64;
+    let cout = out_channels as u64;
+    let k2 = (kernel * kernel) as u64;
+    let oh = out_len(in_shape.h, kernel, pad);
+    let ow = out_len(in_shape.w, kernel, pad);
+    let npix = (oh * ow) as u64;
+    let rsum = in_bounds_sum(oh, in_shape.h, kernel, pad);
+    let csum = in_bounds_sum(ow, in_shape.w, kernel, pad);
+    let taps_in = rsum * csum;
+    OpCounts {
+        ld32: cout * npix,
+        branch: cout * npix * k2 * (1 + cin),
+        ld8: cout * cin * (npix * k2 + taps_in),
+        alu: cout * (2 * cin * k2 * npix + 2 * npix),
+        st8: cout * npix,
+        ..OpCounts::default()
+    }
+}
+
+/// Integer batch-norm layer — [`super::bn::BnLayer::forward`].
+pub fn bn_counts(in_shape: &Shape) -> OpCounts {
+    let n = in_shape.len() as u64;
+    OpCounts {
+        ld8: n,
+        ld16: n,
+        ld32: n,
+        mac: n,
+        alu: 2 * n,
+        st8: n,
+        ..OpCounts::default()
+    }
+}
+
+/// ReLU — [`super::ops::relu`].
+pub fn relu_counts(in_shape: &Shape) -> OpCounts {
+    let n = in_shape.len() as u64;
+    OpCounts { ld8: n, alu: n, st8: n, ..OpCounts::default() }
+}
+
+/// 2×2 stride-2 max pooling — [`super::ops::maxpool2`].
+pub fn maxpool2_counts(in_shape: &Shape) -> OpCounts {
+    let n = ((in_shape.h / 2) * (in_shape.w / 2) * in_shape.c) as u64;
+    OpCounts { ld8: 4 * n, alu: 3 * n, st8: n, ..OpCounts::default() }
+}
+
+/// Global average pooling — [`super::ops::global_avgpool`].
+pub fn global_avgpool_counts(in_shape: &Shape) -> OpCounts {
+    let n = in_shape.len() as u64;
+    let ch = in_shape.c as u64;
+    OpCounts { ld8: n, alu: n + 3 * ch, st8: ch, ..OpCounts::default() }
+}
+
+/// Scalar fully-connected layer — [`super::ops::QuantDense::forward_scalar`].
+pub fn dense_scalar_counts(in_features: usize, out_features: usize) -> OpCounts {
+    let fin = in_features as u64;
+    let fout = out_features as u64;
+    OpCounts {
+        ld32: fout,
+        ld8: 2 * fin * fout,
+        mac: fin * fout,
+        branch: fin * fout,
+        alu: 2 * fout,
+        st8: fout,
+        ..OpCounts::default()
+    }
+}
+
+/// SIMD fully-connected layer — [`super::ops::QuantDense::forward_simd`]:
+/// one q15 widen of the input, then weight rows pairwise through the
+/// 2×1 matmul with a 1×1 tail.
+pub fn dense_simd_counts(in_features: usize, out_features: usize) -> OpCounts {
+    let fin = in_features;
+    let w4 = (fin / 4) as u64;
+    let wrem = (fin % 4) as u64;
+    let mut c = OpCounts {
+        ld32: w4,
+        alu: 2 * w4,
+        st32: 2 * w4,
+        ld8: wrem,
+        st16: wrem,
+        ..OpCounts::default()
+    };
+    let k4 = w4;
+    let t = wrem;
+    let pairs = (out_features / 2) as u64;
+    let odd = (out_features % 2) as u64;
+    c.ld32 += pairs * (2 + 4 * k4);
+    c.alu += pairs * (4 * k4 + 4);
+    c.smlad += pairs * 4 * k4;
+    c.branch += pairs * (k4 + t);
+    c.ld8 += pairs * 2 * t;
+    c.ld16 += pairs * t;
+    c.mac += pairs * 2 * t;
+    c.st8 += pairs * 2;
+    c.ld32 += odd * (1 + 3 * k4);
+    c.alu += odd * (2 * k4 + 2);
+    c.smlad += odd * 2 * k4;
+    c.branch += odd * (k4 + t);
+    c.ld8 += odd * t;
+    c.ld16 += odd * t;
+    c.mac += odd * t;
+    c.st8 += odd;
+    c
+}
+
+/// Analytic counts for one [`super::graph::Layer`] on the global
+/// scalar/SIMD dichotomy — exactly what [`super::graph::Layer::forward`]
+/// emits into a [`CountingMonitor`] for a correctly-shaped input.
+pub fn layer_counts(layer: &super::graph::Layer, in_shape: &Shape, simd: bool) -> OpCounts {
+    use super::graph::Layer;
+    match layer {
+        Layer::Conv(c) => {
+            if simd {
+                // the production 2-patch × 2-filter CMSIS-style kernel is
+                // event-equivalent to the generalized block at (2, 2)
+                conv_im2col_counts(
+                    c.kernel, c.groups, c.in_channels, c.out_channels, c.pad, in_shape, 2, 2,
+                )
+            } else {
+                conv_scalar_counts(
+                    c.kernel, c.groups, c.in_channels, c.out_channels, c.pad, in_shape,
+                )
+            }
+        }
+        Layer::Depthwise(d) => {
+            if simd {
+                depthwise_simd_counts(d.kernel, d.channels, d.pad, in_shape)
+            } else {
+                depthwise_scalar_counts(d.kernel, d.channels, d.pad, in_shape)
+            }
+        }
+        Layer::Shift(s) => {
+            if simd {
+                shift_simd_counts(&s.shifts, s.out_channels, in_shape)
+            } else {
+                shift_scalar_counts(&s.shifts, s.out_channels, in_shape)
+            }
+        }
+        // no SIMD add-convolution (§3.3)
+        Layer::AddConv(a) => {
+            add_conv_counts(a.kernel, a.in_channels, a.out_channels, a.pad, in_shape)
+        }
+        Layer::Bn(_) => bn_counts(in_shape),
+        Layer::Relu => relu_counts(in_shape),
+        Layer::MaxPool2 => maxpool2_counts(in_shape),
+        Layer::GlobalAvgPool(_) => global_avgpool_counts(in_shape),
+        Layer::Dense(d) => {
+            if simd {
+                dense_simd_counts(d.in_features, d.out_features)
+            } else {
+                dense_scalar_counts(d.in_features, d.out_features)
+            }
+        }
+    }
+}
+
+/// Per-layer analytic counts of a whole model (index-aligned with
+/// `model.layers`) — the forward-free equivalent of
+/// [`super::graph::Model::forward_profiled`]'s count column.
+pub fn model_layer_counts(model: &super::graph::Model, simd: bool) -> Vec<OpCounts> {
+    let mut shape = model.input_shape;
+    model
+        .layers
+        .iter()
+        .map(|layer| {
+            let c = layer_counts(layer, &shape, simd);
+            shape = layer.output_shape(&shape);
+            c
+        })
+        .collect()
+}
+
+/// Total analytic counts of one inference — the forward-free equivalent
+/// of [`super::graph::Model::count_ops`].
+pub fn model_counts(model: &super::graph::Model, simd: bool) -> OpCounts {
+    model_layer_counts(model, simd)
+        .iter()
+        .fold(OpCounts::default(), |acc, c| acc.add(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::test_random_conv;
+    use crate::nn::depthwise::QuantDepthwise;
+    use crate::nn::graph::{Layer, Model};
+    use crate::nn::ops::QuantDense;
+    use crate::nn::shift::test_random_shift_conv;
+    use crate::nn::tensor::Tensor;
+    use crate::quant::QParam;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure};
+
+    fn random_input(rng: &mut Rng, h: usize, w: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, w, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    fn counted<F: FnOnce(&mut CountingMonitor)>(f: F) -> OpCounts {
+        let mut mon = CountingMonitor::new();
+        f(&mut mon);
+        mon.counts
+    }
+
+    fn ensure_counts(got: OpCounts, want: OpCounts, what: &str) -> Result<(), String> {
+        ensure(got == want, format!("{what}: analytic {got:?} vs counted {want:?}"))
+    }
+
+    #[test]
+    fn conv_scalar_counts_match_instrumented() {
+        check(
+            "counts-conv-scalar",
+            48,
+            |rng, _| {
+                let groups = [1usize, 2, 4][rng.range(0, 2)];
+                let cin = groups * rng.range(1, 4);
+                let cout = groups * rng.range(1, 4);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 5);
+                let w = rng.range(k, k + 5);
+                let mut conv = test_random_conv(rng, groups, k, cin, cout);
+                // exercise pad 0 and same-pad alike
+                conv.pad = [0, k / 2][rng.range(0, 1)];
+                (conv, random_input(rng, h, w, cin))
+            },
+            |(conv, x)| {
+                let want = counted(|m| {
+                    conv.forward_scalar(x, m);
+                });
+                let got = conv_scalar_counts(
+                    conv.kernel,
+                    conv.groups,
+                    conv.in_channels,
+                    conv.out_channels,
+                    conv.pad,
+                    &x.shape,
+                );
+                ensure_counts(got, want, "conv scalar")
+            },
+        );
+    }
+
+    #[test]
+    fn conv_im2col_counts_match_instrumented_for_every_blocking() {
+        check(
+            "counts-conv-im2col",
+            48,
+            |rng, _| {
+                let groups = [1usize, 2][rng.range(0, 1)];
+                let cin = groups * rng.range(1, 4);
+                let cout = groups * rng.range(1, 4);
+                let k = [1usize, 3][rng.range(0, 1)];
+                let h = rng.range(k.max(2), k + 4);
+                let w = rng.range(k.max(2), k + 4);
+                let p = rng.range(1, 4);
+                let f = rng.range(1, 4);
+                (test_random_conv(rng, groups, k, cin, cout), random_input(rng, h, w, cin), p, f)
+            },
+            |(conv, x, p, f)| {
+                let want = counted(|m| {
+                    crate::tuner::space::conv_im2col_blocked(conv, x, *p, *f, m);
+                });
+                let got = conv_im2col_counts(
+                    conv.kernel,
+                    conv.groups,
+                    conv.in_channels,
+                    conv.out_channels,
+                    conv.pad,
+                    &x.shape,
+                    *p,
+                    *f,
+                );
+                ensure_counts(got, want, "conv im2col blocked")
+            },
+        );
+    }
+
+    #[test]
+    fn conv_simd_production_kernel_matches_2x2_counts() {
+        check(
+            "counts-conv-simd-2x2",
+            32,
+            |rng, _| {
+                let groups = [1usize, 2][rng.range(0, 1)];
+                let cin = groups * rng.range(1, 5);
+                let cout = groups * rng.range(1, 5);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                (test_random_conv(rng, groups, k, cin, cout), random_input(rng, h, h, cin))
+            },
+            |(conv, x)| {
+                let want = counted(|m| {
+                    conv.forward_simd(x, m);
+                });
+                let got = conv_im2col_counts(
+                    conv.kernel,
+                    conv.groups,
+                    conv.in_channels,
+                    conv.out_channels,
+                    conv.pad,
+                    &x.shape,
+                    2,
+                    2,
+                );
+                ensure_counts(got, want, "conv forward_simd vs analytic (2,2)")
+            },
+        );
+    }
+
+    #[test]
+    fn depthwise_counts_match_instrumented() {
+        check(
+            "counts-depthwise",
+            48,
+            |rng, _| {
+                let c = rng.range(1, 12);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                let w = rng.range(k, k + 4);
+                let mut weights = vec![0i8; c * k * k];
+                rng.fill_i8(&mut weights, -8, 8);
+                let dw = QuantDepthwise {
+                    kernel: k,
+                    channels: c,
+                    pad: k / 2,
+                    weights,
+                    bias: vec![0; c],
+                    q_in: QParam::new(7),
+                    q_w: QParam::new(7),
+                    q_out: QParam::new(5),
+                };
+                (dw, random_input(rng, h, w, c))
+            },
+            |(dw, x)| {
+                let want_s = counted(|m| {
+                    dw.forward_scalar(x, m);
+                });
+                let got_s = depthwise_scalar_counts(dw.kernel, dw.channels, dw.pad, &x.shape);
+                ensure_counts(got_s, want_s, "depthwise scalar")?;
+                let want_v = counted(|m| {
+                    dw.forward_simd(x, m);
+                });
+                let got_v = depthwise_simd_counts(dw.kernel, dw.channels, dw.pad, &x.shape);
+                ensure_counts(got_v, want_v, "depthwise simd")
+            },
+        );
+    }
+
+    #[test]
+    fn shift_counts_match_instrumented() {
+        check(
+            "counts-shift",
+            48,
+            |rng, _| {
+                let cin = rng.range(1, 12);
+                let cout = rng.range(1, 12);
+                let h = rng.range(2, 7);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                (test_random_shift_conv(rng, cin, cout, k), random_input(rng, h, h, cin))
+            },
+            |(sc, x)| {
+                let want_s = counted(|m| {
+                    sc.forward_scalar(x, m);
+                });
+                let got_s = shift_scalar_counts(&sc.shifts, sc.out_channels, &x.shape);
+                ensure_counts(got_s, want_s, "shift scalar")?;
+                let want_v = counted(|m| {
+                    sc.forward_simd(x, m);
+                });
+                let got_v = shift_simd_counts(&sc.shifts, sc.out_channels, &x.shape);
+                ensure_counts(got_v, want_v, "shift simd")
+            },
+        );
+    }
+
+    #[test]
+    fn add_conv_counts_match_instrumented() {
+        check(
+            "counts-addconv",
+            32,
+            |rng, _| {
+                let cin = rng.range(1, 6);
+                let cout = rng.range(1, 6);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                let mut weights = vec![0i8; cout * k * k * cin];
+                rng.fill_i8(&mut weights, -16, 16);
+                let ac = crate::nn::AddConv {
+                    kernel: k,
+                    in_channels: cin,
+                    out_channels: cout,
+                    pad: k / 2,
+                    weights,
+                    bias: vec![0; cout],
+                    q_in: QParam::new(7),
+                    q_w: QParam::new(5),
+                    q_out: QParam::new(3),
+                };
+                (ac, random_input(rng, h, h, cin))
+            },
+            |(ac, x)| {
+                let want = counted(|m| {
+                    ac.forward_scalar(x, m);
+                });
+                let got =
+                    add_conv_counts(ac.kernel, ac.in_channels, ac.out_channels, ac.pad, &x.shape);
+                ensure_counts(got, want, "add conv")
+            },
+        );
+    }
+
+    #[test]
+    fn dense_and_glue_counts_match_instrumented() {
+        check(
+            "counts-dense-glue",
+            48,
+            |rng, _| {
+                let fin = rng.range(1, 40);
+                let fout = rng.range(1, 12);
+                let mut w = vec![0i8; fin * fout];
+                rng.fill_i8(&mut w, -16, 16);
+                let d = QuantDense {
+                    in_features: fin,
+                    out_features: fout,
+                    weights: w,
+                    bias: vec![0; fout],
+                    q_in: QParam::new(7),
+                    q_w: QParam::new(7),
+                    q_out: QParam::new(5),
+                };
+                let h = rng.range(2, 7);
+                let c = rng.range(1, 6);
+                (d, random_input(rng, h, h, c))
+            },
+            |(d, t)| {
+                let mut x = vec![0i8; d.in_features];
+                for (i, v) in x.iter_mut().enumerate() {
+                    *v = (i % 7) as i8 - 3;
+                }
+                let want_s = counted(|m| {
+                    d.forward_scalar(&x, m);
+                });
+                ensure_counts(
+                    dense_scalar_counts(d.in_features, d.out_features),
+                    want_s,
+                    "dense scalar",
+                )?;
+                let want_v = counted(|m| {
+                    d.forward_simd(&x, m);
+                });
+                ensure_counts(
+                    dense_simd_counts(d.in_features, d.out_features),
+                    want_v,
+                    "dense simd",
+                )?;
+                // glue layers on the random tensor
+                let want = counted(|m| {
+                    crate::nn::ops::relu(t, m);
+                });
+                ensure_counts(relu_counts(&t.shape), want, "relu")?;
+                let want = counted(|m| {
+                    crate::nn::ops::maxpool2(t, m);
+                });
+                ensure_counts(maxpool2_counts(&t.shape), want, "maxpool2")?;
+                let want = counted(|m| {
+                    crate::nn::ops::global_avgpool(t, None, m);
+                });
+                ensure_counts(global_avgpool_counts(&t.shape), want, "gavgpool")?;
+                let bn = crate::nn::BnLayer {
+                    channels: t.shape.c,
+                    m: vec![1 << 6; t.shape.c],
+                    b: vec![0; t.shape.c],
+                    frac_m: 6,
+                    q_in: t.q,
+                    q_out: t.q,
+                };
+                let want = counted(|m| {
+                    bn.forward(t, m);
+                });
+                ensure_counts(bn_counts(&t.shape), want, "bn")
+            },
+        );
+    }
+
+    #[test]
+    fn model_counts_match_count_ops_both_paths() {
+        let mut rng = Rng::new(0xC0);
+        let mut m = Model::new("counts-model", Shape::new(8, 8, 4), QParam::new(7));
+        m.push(Layer::Conv(test_random_conv(&mut rng, 1, 3, 4, 8)));
+        m.push(Layer::Relu);
+        m.push(Layer::MaxPool2);
+        let mut w = vec![0i8; 4 * 4 * 8 * 10];
+        rng.fill_i8(&mut w, -8, 8);
+        m.push(Layer::Dense(QuantDense {
+            in_features: 4 * 4 * 8,
+            out_features: 10,
+            weights: w,
+            bias: vec![0; 10],
+            q_in: QParam::new(5),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }));
+        let mut x = Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -32, 32);
+        for simd in [false, true] {
+            assert_eq!(model_counts(&m, simd), m.count_ops(&x, simd), "simd={simd}");
+            let per_layer = model_layer_counts(&m, simd);
+            let (_, profiles) = m.forward_profiled(&x, simd);
+            assert_eq!(per_layer.len(), profiles.len());
+            for (i, (a, p)) in per_layer.iter().zip(&profiles).enumerate() {
+                assert_eq!(*a, p.counts, "layer {i} ({}) simd={simd}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_helpers_agree_with_brute_force() {
+        for len in 1..7usize {
+            for k in [1usize, 3, 5] {
+                for pad in 0..=k / 2 + 1 {
+                    let out = len + 2 * pad;
+                    let out = if out >= k { out - k + 1 } else { continue };
+                    for off in 0..k {
+                        let brute = (0..out)
+                            .filter(|&oy| {
+                                let iy = oy as isize + off as isize - pad as isize;
+                                iy >= 0 && iy < len as isize
+                            })
+                            .count() as u64;
+                        assert_eq!(
+                            rows_in_bounds(out, len, off, pad),
+                            brute,
+                            "len={len} k={k} pad={pad} off={off}"
+                        );
+                    }
+                }
+            }
+        }
+        for len in 1..6usize {
+            for s in -6i8..=6 {
+                let brute = (0..len)
+                    .filter(|&y| {
+                        let iy = y as isize + s as isize;
+                        iy >= 0 && iy < len as isize
+                    })
+                    .count() as u64;
+                assert_eq!(shifted_in_bounds(len, s), brute, "len={len} s={s}");
+            }
+        }
+    }
+}

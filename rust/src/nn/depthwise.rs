@@ -66,8 +66,18 @@ impl QuantDepthwise {
     /// Scalar path: per-channel direct loops, bounds-checked taps.
     pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid depthwise configuration");
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
+        self.forward_scalar_into(x, &mut y, mon);
+        y
+    }
+
+    /// [`QuantDepthwise::forward_scalar`] into a caller-provided output
+    /// tensor (allocation-free workspace path; identical event stream).
+    pub fn forward_scalar_into<M: Monitor>(&self, x: &Tensor, y: &mut Tensor, mon: &mut M) {
+        self.validate(&x.shape).expect("invalid depthwise configuration");
         let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
         let shift = self.out_shift();
         let k = self.kernel as isize;
         let pad = self.pad as isize;
@@ -102,7 +112,6 @@ impl QuantDepthwise {
                 }
             }
         }
-        y
     }
 
     /// SIMD path: channel-blocked (4 channels per 32-bit activation load,
@@ -111,8 +120,18 @@ impl QuantDepthwise {
     /// are identical to the scalar path; only the event stream differs.
     pub fn forward_simd<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid depthwise configuration");
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
+        self.forward_simd_into(x, &mut y, mon);
+        y
+    }
+
+    /// [`QuantDepthwise::forward_simd`] into a caller-provided output
+    /// tensor (allocation-free workspace path; identical event stream).
+    pub fn forward_simd_into<M: Monitor>(&self, x: &Tensor, y: &mut Tensor, mon: &mut M) {
+        self.validate(&x.shape).expect("invalid depthwise configuration");
         let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
         let shift = self.out_shift();
         let k = self.kernel as isize;
         let pad = self.pad as isize;
@@ -194,7 +213,6 @@ impl QuantDepthwise {
                 }
             }
         }
-        y
     }
 }
 

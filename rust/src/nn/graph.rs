@@ -58,6 +58,22 @@ impl Layer {
         )
     }
 
+    /// Quantization format of this layer's output given the input format
+    /// (format-preserving layers pass `in_q` through) — what
+    /// [`Layer::forward`] stamps on the tensor it returns.
+    pub fn output_q(&self, in_q: QParam) -> QParam {
+        match self {
+            Layer::Conv(c) => c.q_out,
+            Layer::Depthwise(d) => d.q_out,
+            Layer::Shift(s) => s.q_out,
+            Layer::AddConv(a) => a.q_out,
+            Layer::Bn(b) => b.q_out,
+            Layer::Relu | Layer::MaxPool2 => in_q,
+            Layer::GlobalAvgPool(q) => (*q).unwrap_or(in_q),
+            Layer::Dense(d) => d.q_out,
+        }
+    }
+
     /// Output shape for a given input shape.
     pub fn output_shape(&self, input: &Shape) -> Shape {
         match self {

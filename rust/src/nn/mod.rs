@@ -9,6 +9,7 @@ pub mod add_conv;
 pub mod blocking;
 pub mod bn;
 pub mod conv;
+pub mod counts;
 pub mod depthwise;
 pub mod graph;
 pub mod im2col;
@@ -17,13 +18,16 @@ pub mod ops;
 pub mod shift;
 pub mod simd;
 pub mod tensor;
+pub mod workspace;
 
 pub use add_conv::AddConv;
 pub use bn::{BatchNorm, BnLayer};
 pub use conv::QuantConv;
+pub use counts::{layer_counts, model_counts, model_layer_counts};
 pub use depthwise::QuantDepthwise;
 pub use graph::{Layer, LayerProfile, Model};
 pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
 pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
 pub use shift::{uniform_shifts, ShiftConv};
 pub use tensor::{Shape, Tensor};
+pub use workspace::{Workspace, WorkspacePlan};

@@ -11,21 +11,36 @@ use super::tensor::{Shape, Tensor};
 /// ReLU on int8 activations (in-place format: q unchanged).
 pub fn relu<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
     let mut y = Tensor::zeros(x.shape, x.q);
+    relu_into(x, &mut y, mon);
+    y
+}
+
+/// [`relu`] into a caller-provided output tensor (allocation-free
+/// workspace path; identical event stream).
+pub fn relu_into<M: Monitor>(x: &Tensor, y: &mut Tensor, mon: &mut M) {
+    debug_assert_eq!(y.shape, x.shape, "output buffer shape mismatch");
     for i in 0..x.data.len() {
         mon.ld8(1);
         mon.alu(1);
         mon.st8(1);
         y.data[i] = x.data[i].max(0);
     }
-    y
 }
 
 /// 2×2 max-pooling with stride 2 (NNoM `local_maxpool_q7_HWC`).
 /// Odd trailing rows/cols are truncated (floor semantics).
 pub fn maxpool2<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
+    let mut y = Tensor::zeros(Shape::new(x.shape.h / 2, x.shape.w / 2, x.shape.c), x.q);
+    maxpool2_into(x, &mut y, mon);
+    y
+}
+
+/// [`maxpool2`] into a caller-provided output tensor (allocation-free
+/// workspace path; identical event stream).
+pub fn maxpool2_into<M: Monitor>(x: &Tensor, y: &mut Tensor, mon: &mut M) {
     let oh = x.shape.h / 2;
     let ow = x.shape.w / 2;
-    let mut y = Tensor::zeros(Shape::new(oh, ow, x.shape.c), x.q);
+    debug_assert_eq!(y.shape, Shape::new(oh, ow, x.shape.c), "output buffer shape mismatch");
     for oy in 0..oh {
         for ox in 0..ow {
             for c in 0..x.shape.c {
@@ -41,7 +56,6 @@ pub fn maxpool2<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
             }
         }
     }
-    y
 }
 
 /// Global average pooling (NNoM `local_avepool_q7_HWC` over the full
@@ -51,10 +65,25 @@ pub fn maxpool2<M: Monitor>(x: &Tensor, mon: &mut M) -> Tensor {
 /// the division to keep precision). `q_out = None` keeps the input
 /// format.
 pub fn global_avgpool<M: Monitor>(x: &Tensor, q_out: Option<QParam>, mon: &mut M) -> Tensor {
+    let q = q_out.unwrap_or(x.q);
+    let mut y = Tensor::zeros(Shape::new(1, 1, x.shape.c), q);
+    global_avgpool_into(x, q_out, &mut y, mon);
+    y
+}
+
+/// [`global_avgpool`] into a caller-provided output tensor
+/// (allocation-free workspace path; identical event stream).
+pub fn global_avgpool_into<M: Monitor>(
+    x: &Tensor,
+    q_out: Option<QParam>,
+    y: &mut Tensor,
+    mon: &mut M,
+) {
     let n = (x.shape.h * x.shape.w) as i32;
     let q_out = q_out.unwrap_or(x.q);
     let shift = q_out.frac_bits - x.q.frac_bits;
-    let mut y = Tensor::zeros(Shape::new(1, 1, x.shape.c), q_out);
+    debug_assert_eq!(y.shape, Shape::new(1, 1, x.shape.c), "output buffer shape mismatch");
+    debug_assert_eq!(y.q, q_out, "output buffer format mismatch");
     for c in 0..x.shape.c {
         let mut acc: i32 = 0;
         for yy in 0..x.shape.h {
@@ -69,7 +98,6 @@ pub fn global_avgpool<M: Monitor>(x: &Tensor, q_out: Option<QParam>, mon: &mut M
         let scaled = requantize(acc, -shift); // left shift for finer out
         y.set(0, 0, c, sat_i8(scaled / n));
     }
-    y
 }
 
 /// Quantized fully-connected layer (NNoM `local_fully_connected_q7`).
@@ -93,9 +121,17 @@ impl QuantDense {
 
     /// Scalar path.
     pub fn forward_scalar<M: Monitor>(&self, x: &[i8], mon: &mut M) -> Vec<i8> {
-        assert_eq!(x.len(), self.in_features);
-        let shift = self.out_shift();
         let mut out = vec![0i8; self.out_features];
+        self.forward_scalar_into(x, &mut out, mon);
+        out
+    }
+
+    /// [`QuantDense::forward_scalar`] into a caller-provided output slice
+    /// (allocation-free workspace path; identical event stream).
+    pub fn forward_scalar_into<M: Monitor>(&self, x: &[i8], out: &mut [i8], mon: &mut M) {
+        assert_eq!(x.len(), self.in_features);
+        debug_assert_eq!(out.len(), self.out_features, "output buffer length mismatch");
+        let shift = self.out_shift();
         for (n, o) in out.iter_mut().enumerate() {
             mon.ld32(1);
             let mut acc = self.bias[n];
@@ -110,21 +146,39 @@ impl QuantDense {
             mon.st8(1);
             *o = sat_i8(requantize(acc, shift));
         }
-        out
     }
 
     /// SIMD path (CMSIS `arm_fully_connected_q7_opt` shape): the input
     /// vector is widened to q15 once, then rows are consumed pairwise with
     /// `__SMLAD`. Bit-exact with the scalar path.
     pub fn forward_simd<M: Monitor>(&self, x: &[i8], mon: &mut M) -> Vec<i8> {
-        assert_eq!(x.len(), self.in_features);
-        let shift = self.out_shift();
         let mut out = vec![0i8; self.out_features];
-        // widen input once (amortized across all rows)
         let mut xq = vec![0i16; self.in_features];
-        super::im2col::widen_run_q15(x, &mut xq, mon);
-        // host-side pre-widened weights (§Perf; events unchanged)
+        // host-side pre-widened weights (§Perf; events unchanged) —
+        // deployed models widen once and reuse via the workspace
         let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+        self.forward_simd_with(x, &mut out, &mut xq, &wq, mon);
+        out
+    }
+
+    /// [`QuantDense::forward_simd`] with caller-provided output slice,
+    /// q15 input-widening buffer (`in_features` long) and pre-widened
+    /// weights (allocation-free workspace path; identical event stream).
+    pub fn forward_simd_with<M: Monitor>(
+        &self,
+        x: &[i8],
+        out: &mut [i8],
+        xq: &mut [i16],
+        wq: &[i16],
+        mon: &mut M,
+    ) {
+        assert_eq!(x.len(), self.in_features);
+        debug_assert_eq!(out.len(), self.out_features, "output buffer length mismatch");
+        debug_assert_eq!(xq.len(), self.in_features, "widen buffer length mismatch");
+        debug_assert_eq!(wq.len(), self.weights.len(), "pre-widened weight length");
+        let shift = self.out_shift();
+        // widen input once (amortized across all rows)
+        super::im2col::widen_run_q15(x, xq, mon);
 
         let mut n = 0usize;
         while n + 1 < self.out_features {
@@ -140,12 +194,11 @@ impl QuantDense {
         }
         if n < self.out_features {
             let row = &wq[n * self.in_features..(n + 1) * self.in_features];
-            let acc = super::im2col::mat_mult_1x1(row, &xq, self.bias[n], mon);
+            let acc = super::im2col::mat_mult_1x1(row, xq, self.bias[n], mon);
             mon.alu(2);
             mon.st8(1);
             out[n] = sat_i8(requantize(acc, shift));
         }
-        out
     }
 
     pub fn forward<M: Monitor>(&self, x: &[i8], simd: bool, mon: &mut M) -> Vec<i8> {

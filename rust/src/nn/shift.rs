@@ -100,13 +100,33 @@ impl ShiftConv {
     /// multiplicative primitives (§4.1).
     pub fn forward_scalar<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid shift-conv configuration");
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
+        let mut inter = Tensor::zeros(x.shape, x.q);
+        self.forward_scalar_into(x, &mut y, &mut inter, mon);
+        y
+    }
+
+    /// [`ShiftConv::forward_scalar`] into caller-provided output and
+    /// intermediate-map buffers (allocation-free workspace path). `inter`
+    /// must be shaped like `x`; out-of-bounds samples are written as
+    /// explicit zeros, so a dirty buffer yields identical results — and
+    /// the store was always part of the counted event stream.
+    pub fn forward_scalar_into<M: Monitor>(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        inter: &mut Tensor,
+        mon: &mut M,
+    ) {
+        self.validate(&x.shape).expect("invalid shift-conv configuration");
         let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
+        debug_assert_eq!(inter.shape, x.shape, "intermediate buffer shape mismatch");
         let shift = self.out_shift();
 
         // stage 1: shift (Eq. 2) — per element: shift-table ld8, bounds
         // branch, data ld8, st8
-        let mut inter = Tensor::zeros(x.shape, x.q);
         for yy in 0..x.shape.h {
             for xx in 0..x.shape.w {
                 for m in 0..self.in_channels {
@@ -117,6 +137,7 @@ impl ShiftConv {
                     mon.branch(1);
                     mon.st8(1);
                     if iy < 0 || ix < 0 || iy >= x.shape.h as isize || ix >= x.shape.w as isize {
+                        inter.set(yy, xx, m, 0);
                         continue;
                     }
                     mon.ld8(1);
@@ -145,7 +166,6 @@ impl ShiftConv {
                 }
             }
         }
-        y
     }
 
     /// Unfused reference: materialize `I`, then run a plain pointwise

@@ -30,19 +30,45 @@ impl QuantConv {
         self.validate(&x.shape).expect("invalid conv configuration");
         let out_shape = self.output_shape(&x.shape);
         let mut y = Tensor::zeros(out_shape, self.q_out);
+        let klen = self.kernel * self.kernel * self.ch_per_group();
+        // the two im2col columns (the paper's 2-patch cap)
+        let mut col_a = vec![0i16; klen];
+        let mut col_b = vec![0i16; klen];
+        // host-side §Perf optimization: pre-widen the q7 weights to i16
+        // (amortized over every pixel pair); the monitor events inside
+        // mat_mult_* still model the MCU's in-loop SXTB16. Deployed
+        // models widen once and reuse via the workspace (`forward_simd_with`).
+        let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+        self.forward_simd_with(x, &mut y, &mut col_a, &mut col_b, &wq, mon);
+        y
+    }
+
+    /// [`QuantConv::forward_simd`] with caller-provided output tensor,
+    /// im2col column buffers (each `kernel²·Cx/G` long) and pre-widened
+    /// q15 weights — the allocation-free path the workspace drives. The
+    /// event stream is identical to the allocating wrapper.
+    pub fn forward_simd_with<M: Monitor>(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        col_a: &mut [i16],
+        col_b: &mut [i16],
+        wq: &[i16],
+        mon: &mut M,
+    ) {
+        self.validate(&x.shape).expect("invalid conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
+        debug_assert_eq!(wq.len(), self.weights.len(), "pre-widened weight length");
         let shift = self.out_shift();
         let cpg = self.ch_per_group();
         let fpg = self.filters_per_group();
         let klen = self.kernel * self.kernel * cpg;
-        // the two im2col columns (the paper's 2-patch cap)
-        let mut col_a = vec![0i16; klen];
-        let mut col_b = vec![0i16; klen];
+        debug_assert_eq!(col_a.len(), klen);
+        debug_assert_eq!(col_b.len(), klen);
 
         let n_pix = out_shape.h * out_shape.w;
-        // host-side §Perf optimization: pre-widen the q7 weights to i16
-        // once per call (amortized over every pixel pair); the monitor
-        // events inside mat_mult_* still model the MCU's in-loop SXTB16
-        let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
         let wrow = |n: usize| &wq[n * klen..(n + 1) * klen];
 
         for g in 0..self.groups {
@@ -101,14 +127,13 @@ impl QuantConv {
                 }
                 if f < fpg {
                     let n = n0 + f;
-                    let acc = mat_mult_1x1(wrow(n), &col_a, self.bias[n], mon);
+                    let acc = mat_mult_1x1(wrow(n), col_a, self.bias[n], mon);
                     mon.alu(2);
                     mon.st8(1);
                     y.set(ay, ax, n, sat_i8(requantize(acc, shift)));
                 }
             }
         }
-        y
     }
 
     /// Dispatch on the SIMD flag.
@@ -126,15 +151,39 @@ impl ShiftConv {
     /// 2-filter pointwise matmul.
     pub fn forward_simd<M: Monitor>(&self, x: &Tensor, mon: &mut M) -> Tensor {
         self.validate(&x.shape).expect("invalid shift-conv configuration");
-        let out_shape = self.output_shape(&x.shape);
-        let mut y = Tensor::zeros(out_shape, self.q_out);
-        let shift = self.out_shift();
+        let mut y = Tensor::zeros(self.output_shape(&x.shape), self.q_out);
         let klen = self.in_channels;
         let mut col_a = vec![0i16; klen];
         let mut col_b = vec![0i16; klen];
-        let n_pix = out_shape.h * out_shape.w;
         // pre-widened weights (see the conv path note)
         let wq: Vec<i16> = self.weights.iter().map(|&w| w as i16).collect();
+        self.forward_simd_with(x, &mut y, &mut col_a, &mut col_b, &wq, mon);
+        y
+    }
+
+    /// [`ShiftConv::forward_simd`] with caller-provided output tensor,
+    /// gather columns (each `Cx` long) and pre-widened q15 weights — the
+    /// allocation-free path the workspace drives. Event stream identical
+    /// to the allocating wrapper.
+    pub fn forward_simd_with<M: Monitor>(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        col_a: &mut [i16],
+        col_b: &mut [i16],
+        wq: &[i16],
+        mon: &mut M,
+    ) {
+        self.validate(&x.shape).expect("invalid shift-conv configuration");
+        let out_shape = self.output_shape(&x.shape);
+        debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
+        debug_assert_eq!(wq.len(), self.weights.len(), "pre-widened weight length");
+        let shift = self.out_shift();
+        let klen = self.in_channels;
+        debug_assert_eq!(col_a.len(), klen);
+        debug_assert_eq!(col_b.len(), klen);
+        let n_pix = out_shape.h * out_shape.w;
         let wrow = |n: usize| &wq[n * klen..(n + 1) * klen];
 
         let mut pix = 0usize;
@@ -185,13 +234,12 @@ impl ShiftConv {
                 f += 2;
             }
             if f < self.out_channels {
-                let acc = mat_mult_1x1(wrow(f), &col_a, self.bias[f], mon);
+                let acc = mat_mult_1x1(wrow(f), col_a, self.bias[f], mon);
                 mon.alu(2);
                 mon.st8(1);
                 y.set(ay, ax, f, sat_i8(requantize(acc, shift)));
             }
         }
-        y
     }
 
     /// Dispatch on the SIMD flag.

@@ -1,0 +1,639 @@
+//! Per-model scratch arena for allocation-free inference.
+//!
+//! [`Model::forward`] heap-allocates on every call: one fresh
+//! `Tensor::zeros` per layer, two im2col columns per SIMD convolution,
+//! the widened `wq` weight copy, the shift-conv intermediate map. A
+//! [`Workspace`] hoists all of that into state planned once at deploy
+//! time, so [`Model::forward_in`] performs **zero heap allocations** in
+//! steady state (pinned by `benches/infer_hot.rs` with a counting global
+//! allocator):
+//!
+//! * two ping-pong activation buffers sized to the largest activation of
+//!   the model (NNoM's layer-buffer scheme);
+//! * the two q15 im2col column slots of the widest layer (the paper's
+//!   2-patch cap is exactly what bounds them);
+//! * per-layer pre-widened q15 weights for the SIMD matmuls (widened once
+//!   per deployed model instead of once per call);
+//! * the shift-convolution intermediate map `I` (Eq. 2) for the scalar
+//!   path.
+//!
+//! Because every byte is planned up front, the [`WorkspacePlan`] doubles
+//! as an **exact** peak-RAM report for the deployment — the quantity
+//! `mcu::footprint` estimates and the paper's §3.3 memory-footprint
+//! discussion bounds.
+//!
+//! Event streams are untouched: `forward_in` drives the same kernels
+//! through their `*_into` / `*_with` entry points, so outputs are
+//! bit-exact with [`Model::forward`] and a [`CountingMonitor`] sees the
+//! identical micro-op mix (both properties are tested below, including
+//! reuse of a dirty workspace).
+
+use crate::quant::QParam;
+use crate::util::fnv::Fnv1a;
+
+use super::graph::{Layer, LayerProfile, Model};
+use super::monitor::{CountingMonitor, Monitor};
+use super::ops;
+use super::tensor::{Shape, Tensor};
+
+/// Byte-exact breakdown of a planned arena — the deployment's peak-RAM
+/// report. All quantities are bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspacePlan {
+    /// The two ping-pong activation buffers (each sized to the largest
+    /// activation, input included).
+    pub activation_bytes: usize,
+    /// Largest input+output activation pair — the tight lower bound an
+    /// in-place ping-pong deployment must provision (`mcu::footprint`'s
+    /// estimate of the same quantity).
+    pub peak_pair_bytes: usize,
+    /// Shift-convolution intermediate map `I` (scalar path), sized to the
+    /// largest shift-layer input.
+    pub shift_scratch_bytes: usize,
+    /// The two q15 im2col / gather / widen columns of the widest layer.
+    pub im2col_bytes: usize,
+    /// Pre-widened q15 weight copies for the SIMD matmul layers.
+    pub widened_weight_bytes: usize,
+}
+
+impl WorkspacePlan {
+    /// Total arena bytes held at run time (weights in flash excluded;
+    /// the widened copies are SRAM on our host-side engine).
+    pub fn total_bytes(&self) -> usize {
+        self.activation_bytes
+            + self.shift_scratch_bytes
+            + self.im2col_bytes
+            + self.widened_weight_bytes
+    }
+
+    /// One-line report for logs and CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "arena {} B (activations {} B [peak pair {} B], im2col {} B, \
+             shift scratch {} B, widened weights {} B)",
+            self.total_bytes(),
+            self.activation_bytes,
+            self.peak_pair_bytes,
+            self.im2col_bytes,
+            self.shift_scratch_bytes,
+            self.widened_weight_bytes
+        )
+    }
+}
+
+/// Reshape a tensor in place without allocating (the target length must
+/// be within the capacity planned for it).
+#[inline]
+fn prepare(t: &mut Tensor, shape: Shape, q: QParam) {
+    debug_assert!(
+        shape.len() <= t.data.capacity(),
+        "workspace buffer capacity {} < required {}",
+        t.data.capacity(),
+        shape.len()
+    );
+    t.shape = shape;
+    t.q = q;
+    t.data.resize(shape.len(), 0);
+}
+
+fn tensor_with_capacity(cap: usize, q: QParam) -> Tensor {
+    Tensor {
+        shape: Shape::new(0, 0, 0),
+        q,
+        data: Vec::with_capacity(cap),
+    }
+}
+
+fn widen(weights: &[i8]) -> Vec<i16> {
+    weights.iter().map(|&w| w as i16).collect()
+}
+
+/// FNV-1a fingerprint of every parameter tensor in the model. The arena
+/// caches pre-widened weight copies, so reusing it against a model whose
+/// weights changed (same name, same shapes — e.g. a recalibrated
+/// redeployment) would silently compute with stale weights; the
+/// fingerprint turns that into a loud failure. Cost: linear in the
+/// parameter count, allocation-free — validated at bind time (and on
+/// every call in debug builds, which is what the test suite runs).
+fn model_weight_fingerprint(model: &Model) -> u64 {
+    let mut h = Fnv1a::new();
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv(c) => {
+                h.i8s(&c.weights);
+                h.i32s(&c.bias);
+            }
+            Layer::Depthwise(d) => {
+                h.i8s(&d.weights);
+                h.i32s(&d.bias);
+            }
+            Layer::Shift(s) => {
+                h.i8s(&s.weights);
+                h.i32s(&s.bias);
+            }
+            Layer::AddConv(a) => {
+                h.i8s(&a.weights);
+                h.i32s(&a.bias);
+            }
+            Layer::Bn(b) => {
+                h.i16s(&b.m);
+                h.i32s(&b.b);
+            }
+            Layer::Dense(d) => {
+                h.i8s(&d.weights);
+                h.i32s(&d.bias);
+            }
+            // parameterless layers still advance the stream so layer
+            // reordering changes the fingerprint
+            Layer::Relu | Layer::MaxPool2 | Layer::GlobalAvgPool(_) => {
+                h.byte(0x9e);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// The per-model scratch arena. Build once per deployed model (per
+/// serving worker); reuse across every inference. Deliberately not
+/// `Clone`: `Vec::clone` does not preserve spare capacity, which would
+/// silently reintroduce steady-state growth — plan a fresh arena per
+/// worker instead.
+#[derive(Debug)]
+pub struct Workspace {
+    /// Name, layer count, input shape and parameter fingerprint of the
+    /// model this arena was planned for (guards against cross-model
+    /// reuse — including a same-shaped redeployment with different
+    /// weights, which would otherwise silently hit the stale pre-widened
+    /// copies).
+    model_name: String,
+    n_layers: usize,
+    input_shape: Shape,
+    weight_fp: u64,
+    /// Ping-pong activation buffers.
+    buf_a: Tensor,
+    buf_b: Tensor,
+    /// Shift-conv scalar intermediate map `I`.
+    shift_inter: Tensor,
+    /// q15 im2col / gather columns (also the dense input-widening slot).
+    col_a: Vec<i16>,
+    col_b: Vec<i16>,
+    /// Per-layer pre-widened q15 weights (empty where not applicable).
+    wq: Vec<Vec<i16>>,
+    plan: WorkspacePlan,
+}
+
+impl Workspace {
+    /// Plan and allocate the arena for `model` (both code paths: the
+    /// scalar path needs the shift scratch, the SIMD path the columns
+    /// and widened weights).
+    pub fn new(model: &Model) -> Self {
+        let shapes = model.shapes();
+        let max_act = shapes.iter().map(|s| s.len()).max().unwrap_or(0);
+        let peak_pair = shapes
+            .windows(2)
+            .map(|w| w[0].len() + w[1].len())
+            .max()
+            .unwrap_or(max_act);
+
+        let mut shift_inter_len = 0usize;
+        let mut col_len = 0usize;
+        let mut wq: Vec<Vec<i16>> = Vec::with_capacity(model.layers.len());
+        for (layer, in_shape) in model.layers.iter().zip(&shapes) {
+            match layer {
+                Layer::Conv(c) => {
+                    col_len = col_len.max(c.kernel * c.kernel * c.ch_per_group());
+                    wq.push(widen(&c.weights));
+                }
+                Layer::Shift(s) => {
+                    shift_inter_len = shift_inter_len.max(in_shape.len());
+                    col_len = col_len.max(s.in_channels);
+                    wq.push(widen(&s.weights));
+                }
+                Layer::Dense(d) => {
+                    col_len = col_len.max(d.in_features);
+                    wq.push(widen(&d.weights));
+                }
+                _ => wq.push(Vec::new()),
+            }
+        }
+
+        let plan = WorkspacePlan {
+            activation_bytes: 2 * max_act,
+            peak_pair_bytes: peak_pair,
+            shift_scratch_bytes: shift_inter_len,
+            im2col_bytes: 2 * col_len * 2,
+            widened_weight_bytes: 2 * wq.iter().map(|w| w.len()).sum::<usize>(),
+        };
+
+        Self {
+            model_name: model.name.clone(),
+            n_layers: model.layers.len(),
+            input_shape: model.input_shape,
+            weight_fp: model_weight_fingerprint(model),
+            buf_a: tensor_with_capacity(max_act, model.input_q),
+            buf_b: tensor_with_capacity(max_act, model.input_q),
+            shift_inter: tensor_with_capacity(shift_inter_len, model.input_q),
+            col_a: vec![0i16; col_len],
+            col_b: vec![0i16; col_len],
+            wq,
+            plan,
+        }
+    }
+
+    /// The byte-exact arena plan (the deployment's peak-RAM report).
+    pub fn plan(&self) -> WorkspacePlan {
+        self.plan
+    }
+
+    /// O(1) structural identity: name, layer count, input shape.
+    fn fits_structurally(&self, model: &Model) -> bool {
+        self.model_name == model.name
+            && self.n_layers == model.layers.len()
+            && self.input_shape == model.input_shape
+    }
+
+    /// Whether this arena was planned for `model` — structure **and**
+    /// parameter values ([`model_weight_fingerprint`], O(params) but
+    /// allocation-free). Call this when *binding* a workspace to a model
+    /// (the server does at worker spawn); the per-inference path checks
+    /// structure every call and re-validates the fingerprint only in
+    /// debug builds, so the release hot path pays O(1).
+    pub fn fits(&self, model: &Model) -> bool {
+        self.fits_structurally(model) && self.weight_fp == model_weight_fingerprint(model)
+    }
+
+    /// Execute one layer from the current ping-pong slot into the other,
+    /// entirely inside the arena. `cur_is_a` names the slot holding the
+    /// layer's input; `idx` is the layer index (for the pre-widened
+    /// weights). Identical event stream to [`Layer::forward`].
+    fn run_layer<M: Monitor>(
+        &mut self,
+        layer: &Layer,
+        idx: usize,
+        cur_is_a: bool,
+        simd: bool,
+        mon: &mut M,
+    ) {
+        let (xb, yb) = if cur_is_a {
+            (&self.buf_a, &mut self.buf_b)
+        } else {
+            (&self.buf_b, &mut self.buf_a)
+        };
+        let out_shape = layer.output_shape(&xb.shape);
+        let out_q = layer.output_q(xb.q);
+        prepare(yb, out_shape, out_q);
+        match layer {
+            Layer::Conv(c) => {
+                if simd {
+                    let klen = c.kernel * c.kernel * c.ch_per_group();
+                    c.forward_simd_with(
+                        xb,
+                        yb,
+                        &mut self.col_a[..klen],
+                        &mut self.col_b[..klen],
+                        &self.wq[idx],
+                        mon,
+                    );
+                } else {
+                    c.forward_scalar_into(xb, yb, mon);
+                }
+            }
+            Layer::Depthwise(d) => {
+                if simd {
+                    d.forward_simd_into(xb, yb, mon);
+                } else {
+                    d.forward_scalar_into(xb, yb, mon);
+                }
+            }
+            Layer::Shift(s) => {
+                if simd {
+                    let klen = s.in_channels;
+                    s.forward_simd_with(
+                        xb,
+                        yb,
+                        &mut self.col_a[..klen],
+                        &mut self.col_b[..klen],
+                        &self.wq[idx],
+                        mon,
+                    );
+                } else {
+                    prepare(&mut self.shift_inter, xb.shape, xb.q);
+                    s.forward_scalar_into(xb, yb, &mut self.shift_inter, mon);
+                }
+            }
+            // add-convolution has no SIMD variant (§3.3)
+            Layer::AddConv(a) => a.forward_scalar_into(xb, yb, mon),
+            Layer::Bn(b) => b.forward_into(xb, yb, mon),
+            Layer::Relu => ops::relu_into(xb, yb, mon),
+            Layer::MaxPool2 => ops::maxpool2_into(xb, yb, mon),
+            Layer::GlobalAvgPool(qo) => ops::global_avgpool_into(xb, *qo, yb, mon),
+            Layer::Dense(d) => {
+                if simd {
+                    d.forward_simd_with(
+                        &xb.data,
+                        &mut yb.data,
+                        &mut self.col_a[..d.in_features],
+                        &self.wq[idx],
+                        mon,
+                    );
+                } else {
+                    d.forward_scalar_into(&xb.data, &mut yb.data, mon);
+                }
+            }
+        }
+    }
+
+    /// Stage the model input into the first ping-pong slot (the analogue
+    /// of `Model::forward`'s initial clone — not a counted event).
+    /// Structural identity is asserted on every call; the full parameter
+    /// fingerprint (stale pre-widened weights after a same-shaped
+    /// redeploy) is re-asserted in debug builds — release callers
+    /// validate at bind time via [`Workspace::fits`].
+    fn stage_input(&mut self, model: &Model, x: &Tensor) {
+        assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
+        let ok = if cfg!(debug_assertions) {
+            self.fits(model)
+        } else {
+            self.fits_structurally(model)
+        };
+        assert!(
+            ok,
+            "workspace was planned for model {:?}, not {:?} (stale parameters?)",
+            self.model_name,
+            model.name
+        );
+        prepare(&mut self.buf_a, x.shape, x.q);
+        self.buf_a.data.copy_from_slice(&x.data);
+    }
+}
+
+impl Model {
+    /// Run an inference inside a pre-planned [`Workspace`]: bit-exact
+    /// with [`Model::forward`], identical micro-op event stream, zero
+    /// heap allocations in steady state. The returned reference points
+    /// into the workspace's output buffer and is valid until the next
+    /// `forward_in` call.
+    pub fn forward_in<'w, M: Monitor>(
+        &self,
+        x: &Tensor,
+        simd: bool,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w Tensor {
+        ws.stage_input(self, x);
+        let mut cur_is_a = true;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            ws.run_layer(layer, idx, cur_is_a, simd, mon);
+            cur_is_a = !cur_is_a;
+        }
+        if cur_is_a {
+            &ws.buf_a
+        } else {
+            &ws.buf_b
+        }
+    }
+
+    /// [`Model::forward_profiled`] inside a workspace: per-layer op
+    /// counts with the same zero-allocation execution (one
+    /// [`CountingMonitor`] per layer is stack state, not heap). Used by
+    /// the sweep harness so a full Table 2 sweep reuses one arena per
+    /// experiment model.
+    pub fn forward_profiled_in<'w>(
+        &self,
+        x: &Tensor,
+        simd: bool,
+        ws: &'w mut Workspace,
+    ) -> (&'w Tensor, Vec<LayerProfile>) {
+        ws.stage_input(self, x);
+        let mut profiles = Vec::with_capacity(self.layers.len());
+        let mut cur_is_a = true;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            let mut mon = CountingMonitor::new();
+            ws.run_layer(layer, idx, cur_is_a, simd, &mut mon);
+            profiles.push(LayerProfile {
+                name: layer.name(),
+                counts: mon.counts,
+            });
+            cur_is_a = !cur_is_a;
+        }
+        let out = if cur_is_a { &ws.buf_a } else { &ws.buf_b };
+        (out, profiles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::test_random_conv;
+    use crate::nn::monitor::NoopMonitor;
+    use crate::nn::ops::QuantDense;
+    use crate::nn::shift::test_random_shift_conv;
+    use crate::nn::{uniform_shifts, AddConv, BnLayer, QuantDepthwise};
+    use crate::util::prng::Rng;
+
+    /// A model exercising every layer kind (both shift paths, depthwise,
+    /// add-conv + BN, pooling, dense).
+    fn kitchen_sink(rng: &mut Rng) -> Model {
+        let mut m = Model::new("sink", Shape::new(8, 8, 4), QParam::new(7));
+        m.push(Layer::Conv(test_random_conv(rng, 1, 3, 4, 8)));
+        m.push(Layer::Relu);
+        let mut dww = vec![0i8; 8 * 9];
+        rng.fill_i8(&mut dww, -8, 8);
+        m.push(Layer::Depthwise(QuantDepthwise {
+            kernel: 3,
+            channels: 8,
+            pad: 1,
+            weights: dww,
+            bias: vec![0; 8],
+            q_in: QParam::new(5),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }));
+        let mut sc = test_random_shift_conv(rng, 8, 8, 3);
+        sc.q_in = QParam::new(5);
+        sc.q_out = QParam::new(4);
+        sc.shifts = uniform_shifts(8, 3);
+        m.push(Layer::Shift(sc));
+        let mut acw = vec![0i8; 6 * 9 * 8];
+        rng.fill_i8(&mut acw, -16, 16);
+        m.push(Layer::AddConv(AddConv {
+            kernel: 3,
+            in_channels: 8,
+            out_channels: 6,
+            pad: 1,
+            weights: acw,
+            bias: vec![0; 6],
+            q_in: QParam::new(4),
+            q_w: QParam::new(5),
+            q_out: QParam::new(3),
+        }));
+        m.push(Layer::Bn(BnLayer {
+            channels: 6,
+            m: vec![1 << 5; 6],
+            b: vec![7; 6],
+            frac_m: 5,
+            q_in: QParam::new(3),
+            q_out: QParam::new(5),
+        }));
+        m.push(Layer::MaxPool2);
+        m.push(Layer::GlobalAvgPool(Some(QParam::new(6))));
+        let mut dw = vec![0i8; 6 * 5];
+        rng.fill_i8(&mut dw, -10, 10);
+        m.push(Layer::Dense(QuantDense {
+            in_features: 6,
+            out_features: 5,
+            weights: dw,
+            bias: vec![0; 5],
+            q_in: QParam::new(6),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }));
+        m
+    }
+
+    #[test]
+    fn forward_in_bit_exact_with_forward_on_dirty_workspace() {
+        let mut rng = Rng::new(0xA11);
+        let model = kitchen_sink(&mut rng);
+        let mut ws = Workspace::new(&model);
+        for simd in [false, true] {
+            for trial in 0..4 {
+                // fresh random input each trial; the workspace is reused
+                // dirty across trials and across path switches
+                let mut x = Tensor::zeros(model.input_shape, model.input_q);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let want = model.forward(&x, simd, &mut NoopMonitor);
+                let got = model.forward_in(&x, simd, &mut ws, &mut NoopMonitor);
+                assert_eq!(want.shape, got.shape, "simd={simd} trial={trial}");
+                assert_eq!(want.q, got.q, "simd={simd} trial={trial}");
+                assert_eq!(want.data, got.data, "simd={simd} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_in_event_stream_identical_to_forward() {
+        let mut rng = Rng::new(0xB22);
+        let model = kitchen_sink(&mut rng);
+        let mut ws = Workspace::new(&model);
+        let mut x = Tensor::zeros(model.input_shape, model.input_q);
+        rng.fill_i8(&mut x.data, -64, 63);
+        for simd in [false, true] {
+            let mut ma = CountingMonitor::new();
+            model.forward(&x, simd, &mut ma);
+            let mut mb = CountingMonitor::new();
+            model.forward_in(&x, simd, &mut ws, &mut mb);
+            assert_eq!(ma.counts, mb.counts, "simd={simd}");
+        }
+    }
+
+    #[test]
+    fn forward_profiled_in_matches_forward_profiled() {
+        let mut rng = Rng::new(0xF66);
+        let model = kitchen_sink(&mut rng);
+        let mut ws = Workspace::new(&model);
+        let mut x = Tensor::zeros(model.input_shape, model.input_q);
+        rng.fill_i8(&mut x.data, -64, 63);
+        for simd in [false, true] {
+            let (want_out, want_prof) = model.forward_profiled(&x, simd);
+            let (got_out, got_prof) = model.forward_profiled_in(&x, simd, &mut ws);
+            assert_eq!(want_out.data, got_out.data, "simd={simd}");
+            assert_eq!(want_prof.len(), got_prof.len());
+            for (i, (a, b)) in want_prof.iter().zip(&got_prof).enumerate() {
+                assert_eq!(a.counts, b.counts, "layer {i} ({}) simd={simd}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reports_exact_arena_breakdown() {
+        let mut rng = Rng::new(0xC33);
+        let model = kitchen_sink(&mut rng);
+        let ws = Workspace::new(&model);
+        let plan = ws.plan();
+        let shapes = model.shapes();
+        let max_act = shapes.iter().map(|s| s.len()).max().unwrap();
+        assert_eq!(plan.activation_bytes, 2 * max_act);
+        let peak_pair = shapes.windows(2).map(|w| w[0].len() + w[1].len()).max().unwrap();
+        assert_eq!(plan.peak_pair_bytes, peak_pair);
+        // widest column: the 3×3×4 conv (36) vs shift gather (8) vs dense (6)
+        assert_eq!(plan.im2col_bytes, 2 * 36 * 2);
+        // shift scratch = the shift layer's input map (8×8×8)
+        assert_eq!(plan.shift_scratch_bytes, 8 * 8 * 8);
+        // widened weights: conv + shift + dense layers, 2 bytes each
+        let expect_wq: usize = model
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.weights.len(),
+                Layer::Shift(s) => s.weights.len(),
+                Layer::Dense(d) => d.weights.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(plan.widened_weight_bytes, 2 * expect_wq);
+        assert_eq!(
+            plan.total_bytes(),
+            plan.activation_bytes
+                + plan.shift_scratch_bytes
+                + plan.im2col_bytes
+                + plan.widened_weight_bytes
+        );
+        assert!(plan.summary().contains("arena"));
+    }
+
+    #[test]
+    fn workspace_capacities_never_grow_after_planning() {
+        let mut rng = Rng::new(0xD44);
+        let model = kitchen_sink(&mut rng);
+        let mut ws = Workspace::new(&model);
+        let cap_a = ws.buf_a.data.capacity();
+        let cap_b = ws.buf_b.data.capacity();
+        let cap_i = ws.shift_inter.data.capacity();
+        let mut x = Tensor::zeros(model.input_shape, model.input_q);
+        for _ in 0..3 {
+            rng.fill_i8(&mut x.data, -64, 63);
+            model.forward_in(&x, true, &mut ws, &mut NoopMonitor);
+            model.forward_in(&x, false, &mut ws, &mut NoopMonitor);
+        }
+        assert_eq!(ws.buf_a.data.capacity(), cap_a);
+        assert_eq!(ws.buf_b.data.capacity(), cap_b);
+        assert_eq!(ws.shift_inter.data.capacity(), cap_i);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace was planned for model")]
+    fn cross_model_reuse_is_rejected() {
+        let mut rng = Rng::new(0xE55);
+        let model = kitchen_sink(&mut rng);
+        let other = Model::new("other", model.input_shape, model.input_q);
+        let mut ws = Workspace::new(&other);
+        let x = Tensor::zeros(model.input_shape, model.input_q);
+        model.forward_in(&x, false, &mut ws, &mut NoopMonitor);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace was planned for model")]
+    fn same_shaped_redeployment_with_new_weights_is_rejected() {
+        // the stale-arena trap: same name, same layer count, same input
+        // shape, different weight values — the cached pre-widened copies
+        // would silently be wrong, so the fingerprint must reject it
+        let mut rng = Rng::new(0xF77);
+        let model = kitchen_sink(&mut rng);
+        let mut ws = Workspace::new(&model);
+        let mut redeployed = model.clone();
+        if let Layer::Conv(c) = &mut redeployed.layers[0] {
+            c.weights[0] = c.weights[0].wrapping_add(1);
+        }
+        let x = Tensor::zeros(redeployed.input_shape, redeployed.input_q);
+        redeployed.forward_in(&x, true, &mut ws, &mut NoopMonitor);
+    }
+
+    #[test]
+    fn fits_accepts_an_identical_clone() {
+        let mut rng = Rng::new(0x177);
+        let model = kitchen_sink(&mut rng);
+        let ws = Workspace::new(&model);
+        assert!(ws.fits(&model.clone()));
+    }
+}

@@ -197,6 +197,7 @@ pub fn tuned_summary_json(rows: &[crate::harness::TunedCmpRow]) -> String {
                 .field("tuned_energy_mj", r.tuned_energy.energy_mj)
                 .field("tuned_peak_ram_bytes", r.tuned_latency.peak_ram_bytes)
                 .field("evaluations", r.stats.evaluations)
+                .field("analytic_scored", r.stats.analytic)
                 .field("cache_hits", r.stats.cache_hits)
                 .field("never_worse", r.tuned_is_never_worse())
         })

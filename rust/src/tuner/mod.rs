@@ -10,29 +10,39 @@
 //!   admissible primitive substitutions (depthwise ↔ grouped conv,
 //!   pointwise ↔ zero-shift shift-conv), direct vs im2col lowering, and
 //!   every (P, F) register blocking that fits the M4 register file
-//!   ([`crate::nn::blocking::fits_register_file`]) — and can *execute*
-//!   any candidate bit-exactly (the generalized blocked matmul runs
-//!   through [`crate::nn::blocking::mat_mult_block`]);
-//! * [`search`] scores every candidate with the MCU cycle/energy
-//!   simulator ([`crate::mcu::measure`]) under a configurable
-//!   [`Objective`] and emits a [`TunedSchedule`];
+//!   ([`crate::nn::blocking::fits_register_file`]) — can *execute* any
+//!   candidate bit-exactly (the generalized blocked matmul runs through
+//!   [`crate::nn::blocking::mat_mult_block`]), and can *price* any
+//!   candidate in closed form ([`space::analytic_counts`], backed by
+//!   [`crate::nn::counts`]);
+//! * [`search`] scores every candidate **analytically** — shape-derived
+//!   op counts through the MCU cost model ([`crate::mcu::measure`]) —
+//!   under a configurable [`Objective`] and emits a [`TunedSchedule`].
+//!   The analytic counts are property-tested equal to the instrumented
+//!   ones, so decisions are byte-identical to a simulator-scored search,
+//!   but a **cold tune executes zero forwards** (shapes propagate via
+//!   `Layer::output_shape`; `TuneStats::evaluations` pins 0 on cold and
+//!   warm runs alike, with effort reported in `TuneStats::analytic`);
 //! * [`cache`] persists decisions as JSON keyed by layer shape +
 //!   [`crate::mcu::McuConfig`] + objective, so a warm re-deployment
-//!   performs **zero** simulator evaluations.
+//!   does not even re-run the shape arithmetic.
 //!
 //! Wiring: `coordinator::pipeline::FloatModel::deploy_tuned` tunes at
 //! deployment, `coordinator::server::InferenceServer::start_tuned`
 //! serves tuned variants, `convbench tune` drives the Table 2 workloads
 //! from the CLI, and `harness::tuned` compares tuned schedules against
-//! the fixed (primitive, path) configurations of the sweep harness.
+//! the fixed (primitive, path) configurations — both sides priced by the
+//! same analytic engine.
 
 pub mod cache;
 pub mod search;
 pub mod space;
 
 pub use cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
-pub use search::{simd_flags, tune_model, LayerDecision, TuneStats, TunedSchedule};
-pub use space::{candidates, Candidate, KernelImpl, Lowering};
+pub use search::{
+    simd_flags, tune_model, tune_model_shape, LayerDecision, TuneStats, TunedSchedule,
+};
+pub use space::{analytic_counts, candidates, Candidate, KernelImpl, Lowering};
 
 /// What the tuner minimizes.
 #[derive(Clone, Copy, Debug, PartialEq)]

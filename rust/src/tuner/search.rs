@@ -1,14 +1,21 @@
 //! The schedule search: for every layer of a model, score every
-//! schedule-space candidate with the MCU cycle/energy simulator
-//! ([`crate::mcu::measure`]) under the configured objective, keep the
-//! winner, and assemble a [`TunedSchedule`]. Layer decisions are
-//! independent because the engine fixes activation formats at deployment
-//! time, so per-layer minimization is globally optimal for additive
-//! objectives — and therefore never worse than any fixed
-//! (primitive, path) configuration the sweep harness measures.
+//! schedule-space candidate **analytically** — closed-form op counts
+//! ([`crate::tuner::space::analytic_counts`]) mapped through the MCU
+//! cycle/energy model ([`crate::mcu::measure`]) — under the configured
+//! objective, keep the winner, and assemble a [`TunedSchedule`]. The
+//! analytic counts equal the instrumented ones exactly (property-tested),
+//! so the decisions are byte-identical to the original simulator-scored
+//! search while a cold tune costs shape arithmetic instead of thousands
+//! of instrumented forwards; activation shapes propagate through
+//! [`crate::nn::Layer::output_shape`], so tuning executes **zero**
+//! forwards. Layer decisions are independent because the engine fixes
+//! activation formats at deployment time, so per-layer minimization is
+//! globally optimal for additive objectives — and therefore never worse
+//! than any fixed (primitive, path) configuration the sweep harness
+//! measures.
 
 use crate::mcu::{measure, McuConfig, Measurement};
-use crate::nn::{CountingMonitor, Model, Monitor, NoopMonitor, Shape, Tensor};
+use crate::nn::{Model, Monitor, Shape, Tensor};
 
 use super::cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
 use super::space::{self, Candidate};
@@ -47,13 +54,18 @@ pub struct TunedSchedule {
     pub peak_ram_bytes: usize,
 }
 
-/// Search-effort accounting (the warm-cache acceptance criterion reads
-/// `evaluations == 0`).
+/// Search-effort accounting. Since the analytic cost engine landed,
+/// `evaluations` (instrumented simulator runs) is **zero on cold and
+/// warm tunes alike** — the field remains so the CI gates and dashboards
+/// can pin that invariant; search effort shows up in `analytic` instead.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TuneStats {
-    /// Simulator evaluations performed (one per scored candidate).
+    /// Instrumented simulator evaluations (kernel executions under a
+    /// counting monitor). Always 0: scoring is analytic.
     pub evaluations: usize,
-    /// Layers answered from the cache without touching the simulator.
+    /// Candidates scored analytically (closed-form counts → cost model).
+    pub analytic: usize,
+    /// Layers answered from the cache without any scoring at all.
     pub cache_hits: usize,
     /// Candidates considered (scored + replayed).
     pub candidates: usize,
@@ -143,18 +155,16 @@ fn decision_from_entry(
     }
 }
 
-/// Score one candidate on one layer input: run the candidate kernel under
-/// the counting monitor, map the event vector through the simulator.
+/// Score one candidate on one layer shape: closed-form op counts mapped
+/// through the MCU cost model — O(1) shape arithmetic, no execution.
 fn score_candidate(
     layer: &crate::nn::Layer,
     cand: &Candidate,
-    x: &Tensor,
     in_shape: &Shape,
     cfg: &McuConfig,
 ) -> (CacheEntry, Measurement) {
-    let mut mon = CountingMonitor::new();
-    space::execute(layer, cand, x, &mut mon);
-    let m = measure(&mon.counts, cand.lowering.path_class(), cfg);
+    let counts = space::analytic_counts(layer, cand, in_shape);
+    let m = measure(&counts, cand.lowering.path_class(), cfg);
     (
         CacheEntry {
             candidate: *cand,
@@ -170,8 +180,9 @@ fn score_candidate(
 }
 
 /// Tune every layer of `model` for `objective` on `cfg`, consulting (and
-/// filling) `cache`. `x` is a representative input — event counts are
-/// shape-driven, so any correctly-shaped input yields the same schedule.
+/// filling) `cache`. `x` is a representative input — scoring is purely
+/// shape-driven (only `x.shape` is consulted; no forward is executed).
+/// Prefer [`tune_model_shape`] when no input tensor is at hand.
 pub fn tune_model(
     model: &Model,
     x: &Tensor,
@@ -180,14 +191,26 @@ pub fn tune_model(
     cache: &mut TuningCache,
 ) -> (TunedSchedule, TuneStats) {
     assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
+    tune_model_shape(model, cfg, objective, cache)
+}
+
+/// Tune from shapes alone: the analytic scoring needs no input data, so
+/// a cold tune performs zero forwards and zero allocations beyond the
+/// decision list itself.
+pub fn tune_model_shape(
+    model: &Model,
+    cfg: &McuConfig,
+    objective: Objective,
+    cache: &mut TuningCache,
+) -> (TunedSchedule, TuneStats) {
     let mcu_fp = mcu_fingerprint(cfg);
     let obj_name = objective.name();
     let mut stats = TuneStats::default();
     let mut decisions: Vec<LayerDecision> = Vec::with_capacity(model.layers.len());
 
-    let mut t = x.clone();
+    let mut shape = model.input_shape;
     for (index, layer) in model.layers.iter().enumerate() {
-        let in_shape = t.shape;
+        let in_shape = shape;
         let sig = space::layer_signature(layer, &in_shape);
         let key = cache_key(&sig, &mcu_fp, &obj_name);
 
@@ -203,9 +226,9 @@ pub fn tune_model(
             _ => {
                 let mut best: Option<(f64, CacheEntry)> = None;
                 for cand in space::candidates(layer) {
-                    let (entry, m) = score_candidate(layer, &cand, &t, &in_shape, cfg);
+                    let (entry, m) = score_candidate(layer, &cand, &in_shape, cfg);
                     let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
-                    stats.evaluations += 1;
+                    stats.analytic += 1;
                     stats.candidates += 1;
                     if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
                         best = Some((score, entry));
@@ -217,8 +240,9 @@ pub fn tune_model(
             }
         };
         decisions.push(decision);
-        // propagate the (path-independent) activation to the next layer
-        t = layer.forward(&t, false, &mut NoopMonitor);
+        // propagate the (path-independent) activation shape to the next
+        // layer — shapes, not tensors: nothing is executed
+        shape = layer.output_shape(&in_shape);
     }
 
     let latency_s = decisions.iter().map(|d| d.latency_s).sum();
@@ -255,10 +279,55 @@ mod tests {
     use crate::analytic::Primitive;
     use crate::harness::measure_model;
     use crate::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+    use crate::nn::{CountingMonitor, NoopMonitor};
 
     fn quick_layer() -> (Model, Tensor) {
         let p = LayerParams::new(2, 3, 8, 4, 4);
         (experiment_layer(&p, Primitive::Standard, 3), experiment_input(&p, 4))
+    }
+
+    #[test]
+    fn analytic_search_matches_instrumented_oracle_decisions() {
+        // The acceptance criterion: analytic scoring must reproduce the
+        // pre-change simulator-scored search byte for byte. The oracle
+        // below IS that search — execute every candidate under a counting
+        // monitor, map through the cost model, keep the argmin.
+        let cfg = McuConfig::default();
+        for prim in Primitive::ALL {
+            let p = LayerParams::new(2, 3, 8, 4, 4);
+            let model = experiment_layer(&p, prim, 11);
+            let x = experiment_input(&p, 12);
+            let mut cache = TuningCache::in_memory();
+            let (sched, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
+            assert_eq!(stats.evaluations, 0, "cold tune must not touch the simulator");
+            assert!(stats.analytic > 0);
+
+            let mut t = x.clone();
+            for (layer, d) in model.layers.iter().zip(&sched.layers) {
+                let in_shape = t.shape;
+                let mut best: Option<(f64, Candidate, Measurement)> = None;
+                for cand in space::candidates(layer) {
+                    let mut mon = CountingMonitor::new();
+                    space::execute(layer, &cand, &t, &mut mon);
+                    let m = measure(&mon.counts, cand.lowering.path_class(), &cfg);
+                    let ram = space::ram_bytes(layer, &cand, &in_shape);
+                    let score = Objective::Latency.score(m.latency_s, m.energy_mj, ram);
+                    if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
+                        best = Some((score, cand, m));
+                    }
+                }
+                let (_, cand, m) = best.expect("non-empty candidate space");
+                assert_eq!(d.candidate, cand, "{prim:?}/{}", layer.name());
+                // identical integer counts through identical arithmetic:
+                // the costs must match bitwise, not just approximately
+                assert_eq!(d.cycles, m.cycles, "{prim:?}/{}", layer.name());
+                assert_eq!(d.latency_s, m.latency_s, "{prim:?}/{}", layer.name());
+                assert_eq!(d.energy_mj, m.energy_mj, "{prim:?}/{}", layer.name());
+                assert_eq!(d.mem_accesses, m.mem_accesses, "{prim:?}/{}", layer.name());
+                assert_eq!(d.effective_macs, m.effective_macs, "{prim:?}/{}", layer.name());
+                t = layer.forward(&t, false, &mut NoopMonitor);
+            }
+        }
     }
 
     #[test]
@@ -310,10 +379,12 @@ mod tests {
         let (model, x) = quick_layer();
         let mut cache = TuningCache::in_memory();
         let (cold, s1) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
-        assert!(s1.evaluations > 0);
+        assert_eq!(s1.evaluations, 0, "analytic scoring never touches the simulator");
+        assert!(s1.analytic > 0);
         assert_eq!(s1.cache_hits, 0);
         let (warm, s2) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
         assert_eq!(s2.evaluations, 0, "warm cache must not touch the simulator");
+        assert_eq!(s2.analytic, 0, "warm cache must not score at all");
         assert_eq!(s2.cache_hits, model.layers.len());
         assert_eq!(cold.latency_s, warm.latency_s);
         assert_eq!(cold.layers.len(), warm.layers.len());
@@ -329,16 +400,17 @@ mod tests {
         let (model, x) = quick_layer();
         let mut cache = TuningCache::in_memory();
         let (_, s1) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
-        assert!(s1.evaluations > 0);
+        assert!(s1.analytic > 0);
         // same cache, different objective: misses
         let (_, s2) = tune_model(&model, &x, &cfg, Objective::Energy, &mut cache);
-        assert!(s2.evaluations > 0);
+        assert!(s2.analytic > 0);
         // same cache, different MCU config: misses
         let o0 = McuConfig { freq_mhz: 84.0, opt: crate::mcu::OptLevel::O0 };
         let (_, s3) = tune_model(&model, &x, &o0, Objective::Latency, &mut cache);
-        assert!(s3.evaluations > 0);
+        assert!(s3.analytic > 0);
         // and every combination is now warm
         let (_, w) = tune_model(&model, &x, &cfg, Objective::Energy, &mut cache);
+        assert_eq!(w.analytic, 0);
         assert_eq!(w.evaluations, 0);
     }
 
@@ -360,7 +432,8 @@ mod tests {
         let mut cache = TuningCache::in_memory();
         let (sched, stats) = tune_model(&model, &x, &cfg, Objective::Latency, &mut cache);
         assert_eq!(sched.layers.len(), model.layers.len());
-        assert!(stats.evaluations >= model.layers.len());
+        assert_eq!(stats.evaluations, 0);
+        assert!(stats.analytic >= model.layers.len());
         assert!(sched.latency_s > 0.0 && sched.energy_mj > 0.0);
         assert!(sched.peak_ram_bytes > 0);
         // schedule markdown renders a row per layer + header/totals

@@ -21,9 +21,10 @@
 
 use crate::mcu::PathClass;
 use crate::nn::blocking::{fits_register_file, mat_mult_block};
+use crate::nn::counts;
 use crate::nn::im2col::fill_patch_q15;
 use crate::nn::{
-    uniform_shifts, Layer, Monitor, QuantConv, QuantDepthwise, Shape, ShiftConv, Tensor,
+    uniform_shifts, Layer, Monitor, OpCounts, QuantConv, QuantDepthwise, Shape, ShiftConv, Tensor,
 };
 use crate::quant::{requantize, sat_i8};
 
@@ -188,10 +189,53 @@ pub fn candidates(layer: &Layer) -> Vec<Candidate> {
     out
 }
 
+/// Whether a (P, F) blocking is one the space enumerates: both in 1..=4
+/// and within the register file (mirrors [`blocking_options`]).
+fn legal_blocking(p: usize, f: usize) -> bool {
+    (1..=4).contains(&p) && (1..=4).contains(&f) && fits_register_file(p, f)
+}
+
 /// Whether (kernel, lowering) legally applies to `layer` (used when
-/// replaying cached schedules against a possibly-changed model).
+/// replaying cached schedules against a possibly-changed model). O(1) —
+/// the warm-cache replay path runs this per layer, so it must not
+/// enumerate the space; equivalence with `candidates(layer).contains`
+/// is pinned by a test below.
 pub fn applies(layer: &Layer, cand: &Candidate) -> bool {
-    candidates(layer).contains(cand)
+    match (layer, cand.kernel, cand.lowering) {
+        (Layer::Conv(_), KernelImpl::AsIs, Lowering::Direct) => true,
+        (Layer::Conv(_), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
+            legal_blocking(patches, filters)
+        }
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Direct) => {
+            conv_is_depthwise_shaped(c)
+        }
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Im2col { patches, filters }) => {
+            conv_is_depthwise_shaped(c) && (patches, filters) == DESIGN_POINT
+        }
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Direct) => conv_is_pointwise(c),
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Im2col { patches, filters }) => {
+            conv_is_pointwise(c) && (patches, filters) == DESIGN_POINT
+        }
+        (Layer::Depthwise(_), KernelImpl::AsIs, Lowering::Direct) => true,
+        (Layer::Depthwise(_), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
+            (patches, filters) == DESIGN_POINT
+        }
+        (Layer::Depthwise(_), KernelImpl::DepthwiseAsConv, Lowering::Direct) => true,
+        (Layer::Depthwise(_), KernelImpl::DepthwiseAsConv, Lowering::Im2col { patches, filters }) => {
+            legal_blocking(patches, filters)
+        }
+        (Layer::Shift(_), KernelImpl::AsIs, Lowering::Direct) => true,
+        (Layer::Shift(_), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
+            (patches, filters) == DESIGN_POINT
+        }
+        (Layer::Dense(_), KernelImpl::AsIs, Lowering::Direct) => true,
+        (Layer::Dense(_), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
+            (patches, filters) == (1, 2)
+        }
+        // glue layers: scalar only
+        (_, KernelImpl::AsIs, Lowering::Direct) => true,
+        _ => false,
+    }
 }
 
 /// Reinterpret a depthwise-shaped convolution as the depthwise kernel.
@@ -358,6 +402,79 @@ pub fn execute<M: Monitor>(layer: &Layer, cand: &Candidate, x: &Tensor, mon: &mu
     }
 }
 
+/// Analytic [`OpCounts`] for `layer` executed under a schedule-space
+/// candidate — exactly what [`execute`] emits into a `CountingMonitor`,
+/// derived in closed form from shapes by [`crate::nn::counts`]. This is
+/// what lets the search score the whole space with shape arithmetic
+/// instead of instrumented forwards (the equality is property-tested
+/// below across every candidate of every layer kind). Panics like
+/// [`execute`] if the candidate does not apply.
+pub fn analytic_counts(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> OpCounts {
+    match (layer, cand.kernel) {
+        (Layer::Conv(c), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => counts::conv_scalar_counts(
+                c.kernel, c.groups, c.in_channels, c.out_channels, c.pad, in_shape,
+            ),
+            Lowering::Im2col { patches, filters } => counts::conv_im2col_counts(
+                c.kernel, c.groups, c.in_channels, c.out_channels, c.pad, in_shape, patches,
+                filters,
+            ),
+        },
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise) => match cand.lowering {
+            Lowering::Direct => {
+                counts::depthwise_scalar_counts(c.kernel, c.in_channels, c.pad, in_shape)
+            }
+            Lowering::Im2col { .. } => {
+                counts::depthwise_simd_counts(c.kernel, c.in_channels, c.pad, in_shape)
+            }
+        },
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift) => {
+            // the substituted shift table is all-zero: every gather lands
+            // in bounds
+            let zero_shifts = vec![(0i8, 0i8); c.in_channels];
+            match cand.lowering {
+                Lowering::Direct => {
+                    counts::shift_scalar_counts(&zero_shifts, c.out_channels, in_shape)
+                }
+                Lowering::Im2col { .. } => {
+                    counts::shift_simd_counts(&zero_shifts, c.out_channels, in_shape)
+                }
+            }
+        }
+        (Layer::Depthwise(d), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => {
+                counts::depthwise_scalar_counts(d.kernel, d.channels, d.pad, in_shape)
+            }
+            Lowering::Im2col { .. } => {
+                counts::depthwise_simd_counts(d.kernel, d.channels, d.pad, in_shape)
+            }
+        },
+        (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv) => match cand.lowering {
+            Lowering::Direct => counts::conv_scalar_counts(
+                d.kernel, d.channels, d.channels, d.channels, d.pad, in_shape,
+            ),
+            Lowering::Im2col { patches, filters } => counts::conv_im2col_counts(
+                d.kernel, d.channels, d.channels, d.channels, d.pad, in_shape, patches, filters,
+            ),
+        },
+        (Layer::Shift(s), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => counts::shift_scalar_counts(&s.shifts, s.out_channels, in_shape),
+            Lowering::Im2col { .. } => {
+                counts::shift_simd_counts(&s.shifts, s.out_channels, in_shape)
+            }
+        },
+        (Layer::Dense(d), KernelImpl::AsIs) => match cand.lowering {
+            Lowering::Direct => counts::dense_scalar_counts(d.in_features, d.out_features),
+            Lowering::Im2col { .. } => counts::dense_simd_counts(d.in_features, d.out_features),
+        },
+        (l, KernelImpl::AsIs) => {
+            debug_assert_eq!(cand.lowering, Lowering::Direct);
+            counts::layer_counts(l, in_shape, false)
+        }
+        (l, k) => panic!("candidate {k:?} does not apply to layer {:?}", l.name()),
+    }
+}
+
 /// SRAM scratch a candidate needs beyond the activation ping-pong:
 /// the q15 im2col buffer (P columns), the widened dense input, or the
 /// shift-conv scalar path's materialized intermediate map.
@@ -419,16 +536,16 @@ pub fn layer_signature(layer: &Layer, in_shape: &Shape) -> String {
         Layer::Shift(s) => {
             // fold the shift table into the signature (it changes border
             // clipping and therefore the counted events)
-            let mut h: u64 = 0xcbf29ce484222325;
+            let mut h = crate::util::fnv::Fnv1a::new();
             for &(a, b) in &s.shifts {
-                h = (h ^ (a as u8 as u64)).wrapping_mul(0x100000001b3);
-                h = (h ^ (b as u8 as u64)).wrapping_mul(0x100000001b3);
+                h.byte(a as u8);
+                h.byte(b as u8);
             }
             format!(
                 "shift[ci{},co{},t{:016x},q{}/{}/{}]@{shape}",
                 s.in_channels,
                 s.out_channels,
-                h,
+                h.finish(),
                 s.q_in.frac_bits,
                 s.q_w.frac_bits,
                 s.q_out.frac_bits
@@ -627,6 +744,110 @@ mod tests {
             let got = execute(&layer, &cand, &x, &mut NoopMonitor);
             assert_eq!(want.data, got.data, "dense/{cand:?}");
         }
+    }
+
+    #[test]
+    fn applies_is_equivalent_to_space_membership() {
+        // the O(1) validator must agree with the enumerated space, both
+        // on every legal candidate and on representative illegal ones
+        let p = crate::models::LayerParams::new(2, 3, 6, 4, 4);
+        let mut rng = Rng::new(0xAB1);
+        let mut layers: Vec<Layer> = Vec::new();
+        for prim in crate::analytic::Primitive::ALL {
+            layers.extend(crate::models::experiment_layer(&p, prim, 21).layers);
+        }
+        layers.push(Layer::Conv(random_conv(&mut rng, 4, 3, 4, 4))); // depthwise-shaped
+        layers.push(Layer::Conv(random_conv(&mut rng, 1, 1, 5, 3))); // pointwise
+        let mut probes: Vec<Candidate> = Vec::new();
+        for kernel in [
+            KernelImpl::AsIs,
+            KernelImpl::ConvAsDepthwise,
+            KernelImpl::DepthwiseAsConv,
+            KernelImpl::PointwiseAsShift,
+        ] {
+            probes.push(Candidate { kernel, lowering: Lowering::Direct });
+            for patches in 1..=5usize {
+                for filters in 1..=5usize {
+                    probes.push(Candidate { kernel, lowering: Lowering::Im2col { patches, filters } });
+                }
+            }
+        }
+        for layer in &layers {
+            let space = candidates(layer);
+            for cand in &probes {
+                assert_eq!(
+                    applies(layer, cand),
+                    space.contains(cand),
+                    "{}/{cand:?}",
+                    layer.name()
+                );
+            }
+            // and every enumerated candidate validates
+            for cand in &space {
+                assert!(applies(layer, cand), "{}/{cand:?}", layer.name());
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_counts_equal_instrumented_counts_across_the_space() {
+        // The load-bearing equality behind analytic scoring: for every
+        // candidate of every layer kind, the closed-form counts are the
+        // counted event stream, bit for bit.
+        let p = crate::models::LayerParams::new(2, 3, 6, 4, 4);
+        for prim in crate::analytic::Primitive::ALL {
+            let model = crate::models::experiment_layer(&p, prim, 9);
+            let x = crate::models::experiment_input(&p, 10);
+            let mut t = x.clone();
+            for layer in &model.layers {
+                for cand in candidates(layer) {
+                    let mut mon = CountingMonitor::new();
+                    execute(layer, &cand, &t, &mut mon);
+                    let got = analytic_counts(layer, &cand, &t.shape);
+                    assert_eq!(got, mon.counts, "{prim:?}/{}/{cand:?}", layer.name());
+                }
+                t = layer.forward(&t, false, &mut NoopMonitor);
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_counts_equal_instrumented_counts_randomized() {
+        // randomized kernel / pad / groups / channels / H×W / blocking,
+        // including non-square inputs and pad-0 layers
+        check(
+            "space-analytic-vs-counted",
+            32,
+            |rng, i| {
+                let groups = [1usize, 2, 4][rng.range(0, 2)];
+                let cin = groups * rng.range(1, 4);
+                let cout = groups * rng.range(1, 4);
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                let w = rng.range(k, k + 4);
+                let mut conv = random_conv(rng, groups, k, cin, cout);
+                if i % 3 == 0 {
+                    conv.pad = 0;
+                }
+                let mut x = Tensor::zeros(Shape::new(h, w, cin), QParam::new(7));
+                rng.fill_i8(&mut x.data, -16, 16);
+                (Layer::Conv(conv), x)
+            },
+            |(layer, x)| {
+                for cand in candidates(layer) {
+                    let mut mon = CountingMonitor::new();
+                    execute(layer, &cand, x, &mut mon);
+                    let got = analytic_counts(layer, &cand, &x.shape);
+                    if got != mon.counts {
+                        return Err(format!(
+                            "{cand:?}: analytic {got:?} vs counted {:?}",
+                            mon.counts
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Shared 64-bit FNV-1a hashing — used wherever the repo needs a cheap,
+//! dependency-free, deterministic fingerprint (tuner layer signatures,
+//! workspace parameter fingerprints). One implementation, one pair of
+//! constants.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Incremental FNV-1a hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(FNV_OFFSET)
+    }
+
+    #[inline]
+    pub fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn i8s(&mut self, xs: &[i8]) {
+        for &x in xs {
+            self.byte(x as u8);
+        }
+    }
+
+    pub fn i16s(&mut self, xs: &[i16]) {
+        for &x in xs {
+            self.0 = (self.0 ^ (x as u16 as u64)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn i32s(&mut self, xs: &[i32]) {
+        for &x in xs {
+            self.0 = (self.0 ^ (x as u32 as u64)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv1a::new();
+        a.i8s(&[1, 2, 3]);
+        let mut b = Fnv1a::new();
+        b.i8s(&[1, 2, 3]);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv1a::new();
+        c.i8s(&[3, 2, 1]);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn width_matters() {
+        // the same numeric values hashed at different widths differ
+        let mut a = Fnv1a::new();
+        a.i8s(&[5]);
+        let mut b = Fnv1a::new();
+        b.i16s(&[5]);
+        assert_ne!(a.finish(), b.finish());
+        let mut d = Fnv1a::new();
+        d.i32s(&[-1]);
+        let mut e = Fnv1a::new();
+        e.i16s(&[-1]);
+        assert_ne!(d.finish(), e.finish());
+    }
+
+    #[test]
+    fn single_byte_reference_value() {
+        // FNV-1a('a') — the published test vector
+        let mut h = Fnv1a::new();
+        h.byte(b'a');
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod prng;
 pub mod prop;

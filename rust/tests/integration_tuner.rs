@@ -5,8 +5,10 @@
 //!    (under the latency objective) and energy (under the energy
 //!    objective) are ≤ the best fixed (path) configuration the sweep
 //!    harness measures for that primitive;
-//! 2. a second `tune` invocation with a warm cache performs **zero**
-//!    simulator evaluations, and the persisted cache file round-trips;
+//! 2. tuning is analytic: cold and warm runs alike perform **zero**
+//!    instrumented simulator evaluations (cold runs score the space in
+//!    closed form; warm runs replay the persisted cache without even
+//!    that), and the cache file round-trips;
 //! 3. tuned execution stays bit-exact with the engine.
 
 use convbench::analytic::Primitive;
@@ -73,12 +75,13 @@ fn warm_cache_file_round_trip_performs_zero_evaluations() {
     let _ = std::fs::remove_file(&path);
 
     let plans = quick_plans();
-    let cold_evals: usize;
     {
         let mut cache = TuningCache::load(&path);
         let rows = tuned_vs_fixed(&plans[..2], &cfg, &mut cache);
-        cold_evals = rows.iter().map(|r| r.stats.evaluations).sum();
-        assert!(cold_evals > 0);
+        let cold_evals: usize = rows.iter().map(|r| r.stats.evaluations).sum();
+        let cold_scored: usize = rows.iter().map(|r| r.stats.analytic).sum();
+        assert_eq!(cold_evals, 0, "cold tune must be analytic (zero instrumented forwards)");
+        assert!(cold_scored > 0, "cold tune must score the candidate space");
         cache.save().expect("persist tuning cache");
     }
     {
@@ -87,8 +90,10 @@ fn warm_cache_file_round_trip_performs_zero_evaluations() {
         assert!(!cache.is_empty());
         let rows = tuned_vs_fixed(&plans[..2], &cfg, &mut cache);
         let warm_evals: usize = rows.iter().map(|r| r.stats.evaluations).sum();
+        let warm_scored: usize = rows.iter().map(|r| r.stats.analytic).sum();
         let warm_hits: usize = rows.iter().map(|r| r.stats.cache_hits).sum();
         assert_eq!(warm_evals, 0, "warm cache must perform zero simulator evaluations");
+        assert_eq!(warm_scored, 0, "warm cache must not re-run the shape arithmetic");
         assert!(warm_hits > 0);
     }
     let _ = std::fs::remove_file(&path);
