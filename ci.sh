@@ -29,11 +29,14 @@ echo "==> smoke: warm-cache replay (gated: must re-score nothing)"
 # just printing it
 ./target/release/convbench tune --objective latency --quick --out results/ci --expect-warm
 
-echo "==> bench smoke: infer_hot (zero-alloc forward_in + analytic cold tune)"
+echo "==> bench smoke: infer_hot (zero-alloc fixed + tuned paths, analytic cold tune)"
 # quick mode keeps the sample count CI-sized; the binary asserts that
-# steady-state forward_in performs zero heap allocations and that the
-# cold tune runs zero instrumented simulator evaluations, then emits
-# results/BENCH_infer.json — the perf baseline future PRs regress against
+# steady-state forward_in AND the tuned-schedule run_in (compiled
+# ExecPlan engine) perform zero heap allocations — with the tuned path
+# first proven bit-exact and event-stream-identical to the allocating
+# TunedSchedule::run — and that the cold tune runs zero instrumented
+# simulator evaluations, then emits results/BENCH_infer.json — the perf
+# baseline future PRs regress against
 CONVBENCH_QUICK=1 cargo bench --bench infer_hot
 
 if [[ "${1:-}" == "--full" ]]; then

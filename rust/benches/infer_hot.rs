@@ -2,7 +2,7 @@
 //! trajectory (`results/BENCH_infer.json`), which future PRs regress
 //! against.
 //!
-//! Three headline quantities:
+//! Four headline quantities:
 //!
 //! 1. **steady-state allocations** of `Model::forward_in` inside a
 //!    pre-planned [`Workspace`] — pinned to **zero** with a counting
@@ -10,9 +10,14 @@
 //!    system allocator and counts every `alloc`/`realloc`); the legacy
 //!    `Model::forward` per-inference allocation count is reported next
 //!    to it for contrast;
-//! 2. **throughput** of the workspace path vs the legacy allocating
-//!    path (ns per inference, inferences/s);
-//! 3. **cold-tune cost** of the analytic schedule search: wall time and
+//! 2. **steady-state allocations of the tuned-schedule path** — the
+//!    compiled `ExecPlan` / `TunedSchedule::run_in` engine is pinned to
+//!    **zero** as well, after asserting bit-exact outputs and an
+//!    identical `CountingMonitor` event stream vs the allocating
+//!    reference `TunedSchedule::run`;
+//! 3. **throughput** of the workspace paths vs the legacy allocating
+//!    paths (ns per inference, inferences/s);
+//! 4. **cold-tune cost** of the analytic schedule search: wall time and
 //!    `TuneStats` for a cold `tune_model_shape` over MCU-Net —
 //!    `evaluations` (instrumented simulator runs) pinned to 0 — plus the
 //!    warm-cache replay time.
@@ -98,7 +103,48 @@ fn main() {
     }
     let legacy_allocs_per_inference = (allocations() - l0) / iters;
 
-    // --- 2. throughput ------------------------------------------------
+    // --- 2. tuned-schedule path: zero allocations too -----------------
+    // tune (cold), compile the schedule into the engine, bind an arena,
+    // then pin the steady-state tuned hot loop at zero heap allocations
+    // with outputs bit-exact and the monitor event stream identical to
+    // the allocating reference TunedSchedule::run
+    let mut cache = TuningCache::in_memory();
+    let t0 = Instant::now();
+    let (sched, cold) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+    let cold_tune_us = t0.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(cold.evaluations, 0, "cold tune must not run the simulator");
+    assert!(cold.analytic > 0);
+
+    let mut tws = sched.workspace(&model);
+    {
+        use convbench::nn::CountingMonitor;
+        let mut ma = CountingMonitor::new();
+        let want = sched.run(&model, &x, &mut ma);
+        let mut mb = CountingMonitor::new();
+        let got = sched.run_in(&x, &mut tws, &mut mb);
+        assert_eq!(want.data, got.data, "tuned run_in must stay bit-exact");
+        assert_eq!(
+            ma.counts, mb.counts,
+            "tuned run_in must emit the identical event stream"
+        );
+    }
+    let t_alloc0 = allocations();
+    for _ in 0..iters {
+        black_box(sched.run_in(&x, &mut tws, &mut NoopMonitor).data[0]);
+    }
+    let tuned_steady_allocs = allocations() - t_alloc0;
+    assert_eq!(
+        tuned_steady_allocs, 0,
+        "steady-state tuned run_in performed {tuned_steady_allocs} heap allocations"
+    );
+
+    let tl0 = allocations();
+    for _ in 0..iters {
+        black_box(sched.run(&model, &x, &mut NoopMonitor).data[0]);
+    }
+    let tuned_legacy_allocs_per_inference = (allocations() - tl0) / iters;
+
+    // --- 3. throughput ------------------------------------------------
     b.run("infer/forward_in/simd", || {
         model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]
     });
@@ -108,14 +154,14 @@ fn main() {
     b.run("infer/forward_in/scalar", || {
         model.forward_in(&x, false, &mut ws, &mut NoopMonitor).data[0]
     });
+    b.run("infer/tuned_run_in", || {
+        sched.run_in(&x, &mut tws, &mut NoopMonitor).data[0]
+    });
+    b.run("infer/tuned_run_legacy", || {
+        sched.run(&model, &x, &mut NoopMonitor).data[0]
+    });
 
-    // --- 3. cold / warm analytic tune ---------------------------------
-    let mut cache = TuningCache::in_memory();
-    let t0 = Instant::now();
-    let (sched, cold) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
-    let cold_tune_us = t0.elapsed().as_secs_f64() * 1e6;
-    assert_eq!(cold.evaluations, 0, "cold tune must not run the simulator");
-    assert!(cold.analytic > 0);
+    // --- 4. warm analytic tune ----------------------------------------
     let t1 = Instant::now();
     let (_, warm_stats) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
     let warm_tune_us = t1.elapsed().as_secs_f64() * 1e6;
@@ -134,35 +180,52 @@ fn main() {
     let in_ns = mean_ns("infer/forward_in/simd");
     let legacy_ns = mean_ns("infer/forward_legacy/simd");
     let scalar_ns = mean_ns("infer/forward_in/scalar");
+    let tuned_in_ns = mean_ns("infer/tuned_run_in");
+    let tuned_legacy_ns = mean_ns("infer/tuned_run_legacy");
     let plan = ws.plan();
+    let tplan = tws.plan();
 
     let json = Json::obj()
         .field("model", model.name.as_str())
         .field("steady_state_allocs_per_inference", steady_allocs / iters)
         .field("legacy_allocs_per_inference", legacy_allocs_per_inference)
+        .field("tuned_steady_state_allocs_per_inference", tuned_steady_allocs / iters)
+        .field("tuned_legacy_allocs_per_inference", tuned_legacy_allocs_per_inference)
         .field("forward_in_simd_ns", in_ns)
         .field("forward_legacy_simd_ns", legacy_ns)
         .field("forward_in_scalar_ns", scalar_ns)
         .field("forward_in_simd_ops_per_sec", 1e9 / in_ns)
         .field("alloc_free_speedup", legacy_ns / in_ns)
+        .field("tuned_run_in_ns", tuned_in_ns)
+        .field("tuned_run_legacy_ns", tuned_legacy_ns)
+        .field("tuned_run_in_ops_per_sec", 1e9 / tuned_in_ns)
+        .field("tuned_alloc_free_speedup", tuned_legacy_ns / tuned_in_ns)
         .field("cold_tune_us", cold_tune_us)
         .field("warm_tune_us", warm_tune_us)
         .field("cold_tune_simulator_evals", cold.evaluations)
         .field("cold_tune_analytic_scores", cold.analytic)
         .field("tuned_latency_s", sched.latency_s)
+        .field("tuned_peak_ram_claim_bytes", sched.peak_ram_bytes)
         .field("workspace_total_bytes", plan.total_bytes())
         .field("workspace_activation_bytes", plan.activation_bytes)
         .field("workspace_peak_pair_bytes", plan.peak_pair_bytes)
         .field("workspace_im2col_bytes", plan.im2col_bytes)
-        .field("workspace_widened_weight_bytes", plan.widened_weight_bytes);
+        .field("workspace_acc_bytes", plan.acc_bytes)
+        .field("workspace_widened_weight_bytes", plan.widened_weight_bytes)
+        .field("tuned_workspace_total_bytes", tplan.total_bytes())
+        .field("tuned_workspace_im2col_bytes", tplan.im2col_bytes)
+        .field("tuned_workspace_acc_bytes", tplan.acc_bytes);
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
     println!(
         "infer_hot: forward_in {in_ns:.0} ns ({:.0} inf/s, 0 allocs) vs legacy {legacy_ns:.0} ns \
-         ({legacy_allocs_per_inference} allocs) — {:.2}x; cold analytic tune {:.0} µs \
+         ({legacy_allocs_per_inference} allocs) — {:.2}x; tuned run_in {tuned_in_ns:.0} ns \
+         (0 allocs) vs tuned legacy {tuned_legacy_ns:.0} ns \
+         ({tuned_legacy_allocs_per_inference} allocs) — {:.2}x; cold analytic tune {:.0} µs \
          ({} scores, 0 simulator evals), warm replay {:.0} µs; {}",
         1e9 / in_ns,
         legacy_ns / in_ns,
+        tuned_legacy_ns / tuned_in_ns,
         cold_tune_us,
         cold.analytic,
         warm_tune_us,

@@ -206,6 +206,24 @@ impl FloatModel {
         let workspace = Workspace::new(&model);
         (model, workspace)
     }
+
+    /// [`FloatModel::deploy_tuned`] plus the compiled executor and its
+    /// bound arena: everything a serving worker needs to run the tuned
+    /// schedule allocation-free from the first request
+    /// (`TunedSchedule::run_in` / [`crate::nn::ExecPlan::run_in`]). The
+    /// workspace's plan is the deployment's exact peak-RAM report,
+    /// including blocked-candidate scratch.
+    pub fn deploy_tuned_planned(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, Workspace, TuneStats) {
+        let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
+        let workspace = schedule.workspace(&model);
+        (model, schedule, workspace, stats)
+    }
 }
 
 /// Raw (pre-BN) float add-convolution output — used by calibration.
@@ -640,6 +658,24 @@ mod tests {
         assert_eq!(warm.evaluations, 0);
         assert_eq!(warm.analytic, 0);
         assert_eq!(warm.cache_hits, qm.layers.len());
+    }
+
+    #[test]
+    fn deploy_tuned_planned_serves_bit_exact_from_a_bound_arena() {
+        let mut rng = Rng::new(12);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let (qm, schedule, mut ws, _) =
+            fm.deploy_tuned_planned(&calib, &cfg, Objective::Latency, &mut cache);
+        assert!(ws.plan().total_bytes() >= schedule.peak_ram_bytes);
+        for x in &calib {
+            let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let want = schedule.run(&qm, &xi, &mut NoopMonitor);
+            let got = schedule.run_in(&xi, &mut ws, &mut NoopMonitor);
+            assert_eq!(want.data, got.data);
+        }
     }
 
     #[test]

@@ -4,9 +4,17 @@
 //! simulated MCU energy are accounted from a one-time profile of the
 //! deployed model. Models can be registered with their paper-default
 //! schedule ([`InferenceServer::start`]) or auto-tuned per layer at
-//! registration ([`InferenceServer::start_tuned`]), in which case every
-//! inference executes the tuned kernels and the per-request MCU cost
-//! reflects the tuned schedule.
+//! registration ([`InferenceServer::start_tuned`]).
+//!
+//! Every registered model — tuned or not — is compiled once into an
+//! [`ExecPlan`] at registration, and every worker plans one arena per
+//! model at spawn ([`Workspace::for_plan`]), so the request path is a
+//! single engine call with **zero heap allocations** on the inference
+//! itself: no per-request arena, no kernel-dispatch `match`, no
+//! first-request weight-widening spike, for fixed and tuned schedules
+//! alike. Latency statistics live in a fixed-capacity seeded
+//! [`Reservoir`], so a long-lived server holds O(1) stats memory under
+//! unbounded traffic.
 //!
 //! (tokio is not in the offline vendor set — std threads + mpsc channels
 //! provide the same structure; see Cargo.toml note.)
@@ -18,8 +26,20 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, Model, NoopMonitor, Tensor, Workspace};
+use crate::nn::{argmax, ExecPlan, Model, NoopMonitor, Tensor, Workspace};
 use crate::tuner::{tune_model_shape, Objective, TunedSchedule, TuningCache};
+use crate::util::stats::Reservoir;
+
+/// Retained latency samples (Algorithm R past this point): enough for
+/// stable p99s, constant memory forever.
+const LATENCY_RESERVOIR_CAP: usize = 4096;
+/// Fixed seed: removes the sampler's PRNG as a variance source (a given
+/// observation sequence always retains the same subsample). With
+/// multiple workers the *sequence* itself still depends on thread
+/// interleaving and wall-clock service times, so cross-run percentile
+/// determinism only holds for single-worker/deterministic-time runs
+/// (what the tests exercise).
+const LATENCY_RESERVOIR_SEED: u64 = 0x1A7E_5EED;
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -60,8 +80,12 @@ struct Deployed {
     model: Model,
     /// One-time simulated measurement (SIMD path, or the tuned schedule).
     mcu: Measurement,
-    /// Tuned per-layer schedule; `None` serves the paper-default SIMD path.
+    /// Tuned per-layer schedule, kept for reporting; `None` means the
+    /// paper-default SIMD schedule. Execution never consults this —
+    /// both cases compile into `plan` at registration.
     schedule: Option<TunedSchedule>,
+    /// The compiled executor every request runs through.
+    plan: ExecPlan,
 }
 
 enum Job {
@@ -76,18 +100,24 @@ pub struct InferenceServer {
     workers: Vec<JoinHandle<()>>,
     served: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
-    latencies_us: Arc<Mutex<Vec<f64>>>,
+    latencies_us: Arc<Mutex<Reservoir>>,
     shutting_down: AtomicBool,
 }
 
 impl InferenceServer {
     /// Deploy a set of models and start `n_workers` workers. The
-    /// one-time MCU profile is priced analytically (exact, forward-free).
+    /// one-time MCU profile is priced analytically (exact, forward-free);
+    /// the paper-default SIMD schedule is compiled into the per-request
+    /// executor.
     pub fn start(models: Vec<Model>, n_workers: usize, cfg: &McuConfig) -> Self {
         let mut registry = HashMap::new();
         for m in models {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
-            registry.insert(m.name.clone(), Deployed { model: m, mcu, schedule: None });
+            let plan = ExecPlan::compile_default(&m, true);
+            registry.insert(
+                m.name.clone(),
+                Deployed { model: m, mcu, schedule: None, plan },
+            );
         }
         Self::spawn(registry, n_workers)
     }
@@ -95,7 +125,9 @@ impl InferenceServer {
     /// Deploy a set of models with per-layer auto-tuned schedules (the
     /// tuning cache is shared across the registered models, so repeated
     /// layer shapes tune once — and tuning is analytic: registration
-    /// executes no forwards at all).
+    /// executes no forwards at all). The tuned schedule is compiled into
+    /// the same engine the untuned path uses, so tuned inference is just
+    /// as allocation-free.
     pub fn start_tuned(
         models: Vec<Model>,
         n_workers: usize,
@@ -107,9 +139,10 @@ impl InferenceServer {
         for m in models {
             let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
             let mcu = schedule.as_measurement();
+            let plan = schedule.compile(&m);
             registry.insert(
                 m.name.clone(),
-                Deployed { model: m, mcu, schedule: Some(schedule) },
+                Deployed { model: m, mcu, schedule: Some(schedule), plan },
             );
         }
         Self::spawn(registry, n_workers)
@@ -121,7 +154,10 @@ impl InferenceServer {
         let rx = Arc::new(Mutex::new(rx));
         let served = Arc::new(AtomicU64::new(0));
         let errors = Arc::new(AtomicU64::new(0));
-        let latencies_us = Arc::new(Mutex::new(Vec::new()));
+        let latencies_us = Arc::new(Mutex::new(Reservoir::new(
+            LATENCY_RESERVOIR_CAP,
+            LATENCY_RESERVOIR_SEED,
+        )));
 
         let workers = (0..n_workers.max(1))
             .map(|_| {
@@ -131,16 +167,12 @@ impl InferenceServer {
                 let errors = Arc::clone(&errors);
                 let lats = Arc::clone(&latencies_us);
                 std::thread::spawn(move || {
-                    // per-worker inference workspaces, planned up front
-                    // for every untuned model (the registry is fixed
-                    // before spawn): the request path never allocates an
-                    // arena, clones a key, or pays a first-request
-                    // weight-widening spike
-                    let mut workspaces: HashMap<String, Workspace> = models
-                        .iter()
-                        .filter(|(_, d)| d.schedule.is_none())
-                        .map(|(name, d)| (name.clone(), Workspace::new(&d.model)))
-                        .collect();
+                    // per-worker inference arenas, planned up front for
+                    // EVERY registered model — tuned and untuned alike
+                    // (the registry is fixed before spawn): the request
+                    // path never allocates an arena, clones a key, or
+                    // pays a first-request weight-widening spike
+                    let mut workspaces = plan_worker_arenas(&models);
                     loop {
                         let job = {
                             let guard = rx.lock().unwrap();
@@ -155,7 +187,7 @@ impl InferenceServer {
                                         served.fetch_add(1, Ordering::Relaxed);
                                         lats.lock()
                                             .unwrap()
-                                            .push(r.service_time.as_secs_f64() * 1e6);
+                                            .offer(r.service_time.as_secs_f64() * 1e6);
                                     }
                                     Err(_) => {
                                         errors.fetch_add(1, Ordering::Relaxed);
@@ -188,45 +220,80 @@ impl InferenceServer {
         names
     }
 
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, req: Request) -> mpsc::Receiver<Result<Response, String>> {
+    /// Submit a request; returns a receiver for the response, or an
+    /// error once shutdown has begun (instead of silently enqueueing
+    /// into a dead queue).
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response, String>>, String> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err("server is shutting down".to_string());
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
-        // a shut-down queue drops the job; the caller sees a disconnect
+        // A submit racing begin_shutdown can enqueue its job behind the
+        // shutdown sentinels. That is safe: every worker exits on its
+        // sentinel, the job queue's Receiver (held only by the workers)
+        // is dropped, the buffered job — and with it this reply sender —
+        // is destroyed, and the caller's recv() sees a disconnect
+        // ("server shut down"), not a hang.
         let _ = self.tx.send(Job::Run(req, reply_tx));
-        reply_rx
+        Ok(reply_rx)
     }
 
     /// Submit and wait.
     pub fn infer(&self, req: Request) -> Result<Response, String> {
-        self.submit(req)
+        self.submit(req)?
             .recv()
             .map_err(|_| "server shut down".to_string())?
     }
 
-    /// Current statistics. Percentiles are computed from the sample
-    /// vector in place under the lock — no clone of the full history
-    /// (reordering is harmless: only pushes happen elsewhere, and a
-    /// mostly-sorted vector re-sorts cheaply).
+    /// Current statistics. Percentiles are computed from the retained
+    /// reservoir samples in place under the lock — no clone, O(capacity)
+    /// regardless of how long the server has been up (reordering is
+    /// harmless: the reservoir is unordered by construction). The mean
+    /// is NOT a subsample estimate: the reservoir keeps an exact running
+    /// sum over every served request.
     pub fn stats(&self) -> ServerStats {
         let mut lats = self.latencies_us.lock().unwrap();
-        compute_stats(
+        let mean_us = lats.mean();
+        let mut stats = compute_stats(
             self.served.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
-            &mut lats[..],
-        )
+            lats.samples_mut(),
+        );
+        stats.mean_us = mean_us;
+        stats
     }
 
-    /// Graceful shutdown: drain workers.
-    pub fn shutdown(mut self) -> ServerStats {
-        self.shutting_down.store(true, Ordering::SeqCst);
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Job::Shutdown);
+    /// Begin a graceful shutdown: new `submit`/`infer` calls fail fast,
+    /// workers drain the queue and exit after the sentinel jobs.
+    /// Idempotent; does not block (use [`InferenceServer::shutdown`] to
+    /// join the workers).
+    pub fn begin_shutdown(&self) {
+        if !self.shutting_down.swap(true, Ordering::SeqCst) {
+            for _ in 0..self.workers.len() {
+                let _ = self.tx.send(Job::Shutdown);
+            }
         }
+    }
+
+    /// Graceful shutdown: stop intake, drain workers, return the final
+    /// statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.begin_shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
         self.stats()
     }
+}
+
+/// Plan one inference arena per registered model from its compiled plan
+/// — what every worker does at spawn, so steady-state serving never
+/// allocates an arena (factored out for direct testing).
+fn plan_worker_arenas(models: &HashMap<String, Deployed>) -> HashMap<String, Workspace> {
+    models
+        .iter()
+        .map(|(name, d)| (name.clone(), Workspace::for_plan(&d.plan)))
+        .collect()
 }
 
 /// Summarize latency samples into [`ServerStats`]. Percentiles use
@@ -277,19 +344,13 @@ fn serve_one(
     let Request { id, model, input } = req;
     // the request buffer becomes the input tensor — no clone
     let x = Tensor::from_vec(m.input_shape, m.input_q, input);
-    let logits = match &deployed.schedule {
-        // tuned schedules still execute through TunedSchedule::run,
-        // which allocates per layer — zero-alloc execution of arbitrary
-        // (P, F)-blocked candidates is an open item (see ROADMAP)
-        Some(s) => s.run(m, &x, &mut NoopMonitor).data,
-        None => match workspaces.get_mut(&model) {
-            // steady-state path: run inside the worker's pre-planned
-            // arena (zero heap allocations); only the reply logits are
-            // copied out
-            Some(ws) => m.forward_in(&x, true, ws, &mut NoopMonitor).data.clone(),
-            None => m.forward(&x, true, &mut NoopMonitor).data,
-        },
-    };
+    // the single engine path: the compiled plan (fixed or tuned) runs
+    // inside the worker's pre-planned arena — zero heap allocations on
+    // the inference; only the reply logits are copied out
+    let ws = workspaces
+        .get_mut(&model)
+        .expect("worker arenas are planned for every registered model at spawn");
+    let logits = deployed.plan.run_in(&x, ws, &mut NoopMonitor).data.clone();
     let class = argmax(&logits);
     Ok(Response {
         id,
@@ -452,5 +513,100 @@ mod tests {
         let b = s.infer(Request { id: 2, ..req }).unwrap();
         assert_eq!(a.logits, b.logits);
         s.shutdown();
+    }
+
+    #[test]
+    fn submit_and_infer_fail_fast_after_shutdown_begins() {
+        let s = server();
+        let mut rng = Rng::new(6);
+        // a request served before shutdown succeeds
+        s.infer(request(0, "mcunet-standard", &mut rng)).unwrap();
+        s.begin_shutdown();
+        // intake is closed: both entry points error instead of enqueueing
+        // into a dead queue
+        let e = s.infer(request(1, "mcunet-standard", &mut rng)).unwrap_err();
+        assert!(e.contains("shutting down"), "{e}");
+        assert!(s
+            .submit(request(2, "mcunet-standard", &mut rng))
+            .unwrap_err()
+            .contains("shutting down"));
+        // begin_shutdown is idempotent and shutdown still drains cleanly
+        s.begin_shutdown();
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.errors, 0, "rejected submissions are not worker errors");
+    }
+
+    #[test]
+    fn latency_history_is_bounded_by_the_reservoir() {
+        // sustained traffic must not grow the stats memory: the retained
+        // sample count is capped at the reservoir capacity while `served`
+        // keeps counting
+        let s = server();
+        let mut rng = Rng::new(8);
+        let n = 64u64;
+        for i in 0..n {
+            s.infer(request(i, "mcunet-standard", &mut rng)).unwrap();
+        }
+        {
+            let lats = s.latencies_us.lock().unwrap();
+            assert_eq!(lats.seen(), n);
+            assert_eq!(lats.len(), (n as usize).min(LATENCY_RESERVOIR_CAP));
+            assert!(lats.len() <= LATENCY_RESERVOIR_CAP);
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, n);
+        assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
+    }
+
+    #[test]
+    fn workers_serve_through_pre_planned_arenas() {
+        // The spawn-time arena map covers EVERY registered model — tuned
+        // and untuned — and serve_one runs inside it (no per-request
+        // workspace construction, no `schedule.is_none()` asymmetry);
+        // outputs through the arena path are bit-exact with the legacy
+        // allocating executors, including on dirty arena reuse.
+        use crate::tuner::{Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let models = vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)];
+        let mut cache = TuningCache::in_memory();
+        let mut registry = HashMap::new();
+        for m in models {
+            let (schedule, _) = tune_model_shape(&m, &cfg, Objective::Latency, &mut cache);
+            let plan = schedule.compile(&m);
+            let mcu = schedule.as_measurement();
+            registry.insert(
+                m.name.clone(),
+                Deployed { model: m, mcu, schedule: Some(schedule), plan },
+            );
+        }
+        // one untuned deployment in the same registry
+        let plain = mcunet(Primitive::DepthwiseSeparable, 1);
+        registry.insert(
+            plain.name.clone(),
+            Deployed {
+                mcu: crate::harness::measure_model_analytic(&plain, true, &cfg),
+                plan: ExecPlan::compile_default(&plain, true),
+                model: plain,
+                schedule: None,
+            },
+        );
+        let mut arenas = plan_worker_arenas(&registry);
+        assert_eq!(arenas.len(), registry.len(), "every model gets an arena");
+        let mut rng = Rng::new(11);
+        for round in 0..3 {
+            for (name, d) in &registry {
+                let mut input = vec![0i8; d.model.input_shape.len()];
+                rng.fill_i8(&mut input, -64, 63);
+                let req = Request { id: round, model: name.clone(), input: input.clone() };
+                let got = serve_one(&registry, &mut arenas, req, Instant::now()).unwrap();
+                let x = Tensor::from_vec(d.model.input_shape, d.model.input_q, input);
+                let want = match &d.schedule {
+                    Some(s) => s.run(&d.model, &x, &mut NoopMonitor),
+                    None => d.model.forward(&x, true, &mut NoopMonitor),
+                };
+                assert_eq!(got.logits, want.data, "{name} round {round}");
+            }
+        }
     }
 }

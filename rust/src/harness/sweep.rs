@@ -74,9 +74,10 @@ pub fn measure_model(model: &Model, x: &crate::nn::Tensor, simd: bool, cfg: &Mcu
 }
 
 /// [`measure_model`] executing inside a reusable [`crate::nn::Workspace`]
-/// arena — identical numbers, zero per-layer heap allocations. The sweep
-/// runner uses this so a full Table 2 sweep reuses one arena per
-/// experiment model across both code paths.
+/// arena — identical numbers, zero per-layer heap allocations (the
+/// arena's compiled default [`crate::nn::ExecPlan`] drives the same
+/// kernels). The sweep runner uses this so a full Table 2 sweep reuses
+/// one arena per experiment model across both code paths.
 pub fn measure_model_in(
     model: &Model,
     x: &crate::nn::Tensor,

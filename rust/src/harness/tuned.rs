@@ -187,6 +187,29 @@ mod tests {
     }
 
     #[test]
+    fn tuned_workload_schedules_run_in_through_the_compiled_engine() {
+        // the harness's tuned schedules execute through the same engine
+        // the server deploys: compiled plan + bound arena, bit-exact with
+        // the allocating reference across every Table 2 workload row
+        use crate::models::experiment_input;
+        use crate::nn::NoopMonitor;
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let plans = quick_plans();
+        let rows = tuned_vs_fixed(&plans[..1], &cfg, &mut cache);
+        for r in &rows {
+            let model = experiment_layer(&r.params, r.primitive, 0xEC0 + r.experiment as u64);
+            let x = experiment_input(&r.params, 0x5EED);
+            for sched in [&r.tuned_latency, &r.tuned_energy] {
+                let mut ws = sched.workspace(&model);
+                let want = sched.run(&model, &x, &mut NoopMonitor);
+                let got = sched.run_in(&x, &mut ws, &mut NoopMonitor);
+                assert_eq!(want.data, got.data, "{:?} exp {}", r.primitive, r.experiment);
+            }
+        }
+    }
+
+    #[test]
     fn second_pass_is_fully_cached() {
         let cfg = McuConfig::default();
         let mut cache = TuningCache::in_memory();

@@ -408,5 +408,21 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
     );
     // the workspace plan is the byte-exact version of the SRAM estimate
     let ws = convbench::nn::Workspace::new(&model);
-    println!("exact {}", ws.plan().summary());
+    println!("exact (paper-default schedules) {}", ws.plan().summary());
+
+    // tuned deployment: reconcile the engine's arena report with the
+    // schedule's own peak-RAM claim (the test suite pins arena ≥ claim
+    // and per-layer scratch parity with the tuner's RAM model)
+    use convbench::nn::ExecPlan;
+    use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+    let mut cache = TuningCache::in_memory();
+    let (sched, _) = tune_model_shape(&model, cfg, Objective::Latency, &mut cache);
+    let plan = ExecPlan::compile(&model, &sched.candidates());
+    let wp = plan.workspace_plan();
+    println!("tuned ({} objective) {}", sched.objective, wp.summary());
+    println!(
+        "tuned schedule peak working RAM claim: {} B (arena covers claim: {})",
+        sched.peak_ram_bytes,
+        wp.total_bytes() >= sched.peak_ram_bytes
+    );
 }

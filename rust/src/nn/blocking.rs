@@ -41,18 +41,36 @@ pub fn mat_mult_block<M: Monitor>(
     biases: &[i32],
     mon: &mut M,
 ) -> Vec<i32> {
+    let mut acc = vec![0i32; w_rows.len() * cols.len()];
+    mat_mult_block_into(w_rows, cols, biases, &mut acc, mon);
+    acc
+}
+
+/// [`mat_mult_block`] into a caller-provided accumulator slice (row-major
+/// `[f][p]`, fully overwritten) — the allocation-free form the compiled
+/// [`crate::nn::plan::ExecPlan`] engine drives. Identical event stream to
+/// the allocating wrapper (which delegates here).
+pub fn mat_mult_block_into<M: Monitor>(
+    w_rows: &[&[i8]],
+    cols: &[&[i16]],
+    biases: &[i32],
+    acc: &mut [i32],
+    mon: &mut M,
+) {
     let f = w_rows.len();
     let p = cols.len();
     assert_eq!(biases.len(), f, "one bias per filter row");
+    assert_eq!(acc.len(), f * p, "f·p accumulators");
     let k = w_rows[0].len();
     debug_assert!(w_rows.iter().all(|r| r.len() == k));
     debug_assert!(cols.iter().all(|c| c.len() == k));
 
     mon.ld32(f as u64); // bias loads
-    let mut acc: Vec<i32> = biases
-        .iter()
-        .flat_map(|&b| std::iter::repeat_n(b, p))
-        .collect();
+    for (fi, &b) in biases.iter().enumerate() {
+        for pi in 0..p {
+            acc[fi * p + pi] = b;
+        }
+    }
 
     let k4 = k / 4;
     for blk in 0..k4 {
@@ -83,7 +101,6 @@ pub fn mat_mult_block<M: Monitor>(
             }
         }
     }
-    acc
 }
 
 /// Memory-access events per MAC of a (P, F) blocking over a length-K

@@ -155,29 +155,27 @@ impl Model {
         shapes
     }
 
-    /// Run an inference.
+    /// Run an inference. A thin (allocating) wrapper over the compiled
+    /// engine: compiles the paper-default schedule as a trivial
+    /// [`super::plan::ExecPlan`] and runs it in a fresh arena — bit-exact
+    /// and event-stream-identical to the historical per-layer loop
+    /// (pinned in `nn::plan`). Deployed paths compile once and reuse
+    /// ([`Model::forward_in`], `TunedSchedule::run_in`, the server).
     pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
         assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
-        let mut t = x.clone();
-        for l in &self.layers {
-            t = l.forward(&t, simd, mon);
-        }
-        t
+        let plan = super::plan::ExecPlan::compile_default(self, simd);
+        let mut ws = super::workspace::Workspace::for_plan(&plan);
+        plan.run_in(x, &mut ws, mon).clone()
     }
 
-    /// Run an inference collecting per-layer op counts.
+    /// Run an inference collecting per-layer op counts (same engine,
+    /// one `CountingMonitor` per layer).
     pub fn forward_profiled(&self, x: &Tensor, simd: bool) -> (Tensor, Vec<LayerProfile>) {
-        let mut t = x.clone();
-        let mut profiles = Vec::with_capacity(self.layers.len());
-        for l in &self.layers {
-            let mut mon = CountingMonitor::new();
-            t = l.forward(&t, simd, &mut mon);
-            profiles.push(LayerProfile {
-                name: l.name(),
-                counts: mon.counts,
-            });
-        }
-        (t, profiles)
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        let plan = super::plan::ExecPlan::compile_default(self, simd);
+        let mut ws = super::workspace::Workspace::for_plan(&plan);
+        let (out, profiles) = plan.run_profiled_in(x, &mut ws);
+        (out.clone(), profiles)
     }
 
     /// Total op counts for one inference.

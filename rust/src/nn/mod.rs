@@ -15,6 +15,7 @@ pub mod graph;
 pub mod im2col;
 pub mod monitor;
 pub mod ops;
+pub mod plan;
 pub mod shift;
 pub mod simd;
 pub mod tensor;
@@ -28,6 +29,7 @@ pub use depthwise::QuantDepthwise;
 pub use graph::{Layer, LayerProfile, Model};
 pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
 pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
+pub use plan::ExecPlan;
 pub use shift::{uniform_shifts, ShiftConv};
 pub use tensor::{Shape, Tensor};
 pub use workspace::{Workspace, WorkspacePlan};

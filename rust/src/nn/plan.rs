@@ -1,0 +1,868 @@
+//! Compiled execution plans — the **one** engine behind every inference
+//! path in the repo.
+//!
+//! An [`ExecPlan`] is a (Model × per-layer [`Candidate`] schedule)
+//! compiled once at deploy time: every layer's kernel/lowering dispatch
+//! is resolved up front into a [`CompiledKernel`] (no per-call `match`
+//! over `Candidate`), primitive substitutions (conv-as-depthwise,
+//! depthwise-as-conv, pointwise-as-shift) are materialized as owned
+//! kernel structs instead of being re-cloned per call, and the q7→q15
+//! weight widening the SIMD matmuls need is hoisted into the plan. The
+//! paper-default scalar/SIMD schedules are just the trivial plans
+//! ([`ExecPlan::compile_default`]), so `Model::forward`,
+//! `Model::forward_in` and `TunedSchedule::run_in` are all thin wrappers
+//! over [`ExecPlan::run_in`].
+//!
+//! Execution happens inside a [`Workspace`] arena
+//! ([`crate::nn::workspace`]) — ping-pong activation buffers, a flat
+//! (P, F)-blocked im2col column arena, `mat_mult_block` accumulators and
+//! the shift-conv intermediate map — sized from the plan's requirements,
+//! so steady-state inference performs **zero heap allocations** for
+//! *any* legal schedule, tuned or fixed (pinned by
+//! `benches/infer_hot.rs`).
+//!
+//! Outputs are bit-exact and `CountingMonitor`-event-identical to the
+//! pre-plan reference paths (`Model::forward` semantics and
+//! `TunedSchedule::run` → [`crate::tuner::space::execute`]); the
+//! property tests below pin both across the entire enumerated candidate
+//! space of [`crate::tuner::space`].
+
+use crate::quant::{requantize, sat_i8, QParam};
+use crate::tuner::space::{self, Candidate, KernelImpl, Lowering};
+use crate::util::fnv::Fnv1a;
+
+use super::add_conv::AddConv;
+use super::blocking::mat_mult_block_into;
+use super::bn::BnLayer;
+use super::conv::QuantConv;
+use super::depthwise::QuantDepthwise;
+use super::graph::{Layer, LayerProfile, Model};
+use super::im2col::fill_patch_q15;
+use super::monitor::{CountingMonitor, Monitor};
+use super::ops::{self, QuantDense};
+use super::shift::ShiftConv;
+use super::tensor::{Shape, Tensor};
+use super::workspace::{model_weight_fingerprint, prepare, Workspace, WorkspacePlan};
+
+/// Largest register blocking the engine provisions scratch for (the
+/// schedule space never enumerates beyond it — the register file spills).
+pub const MAX_BLOCK: usize = 4;
+
+/// A layer's dispatch, fully resolved at compile time. Substituted
+/// kernels ([`KernelImpl::ConvAsDepthwise`] etc.) own the reinterpreted
+/// struct, built once here instead of once per inference.
+#[derive(Clone, Debug)]
+enum CompiledKernel {
+    /// Direct scalar loops through the (possibly substituted) grouped
+    /// convolution kernel.
+    ConvScalar(QuantConv),
+    /// Generalized (P, F)-blocked im2col convolution (covers the 2×2
+    /// CMSIS design point — event-identical to `forward_simd`).
+    ConvBlocked { conv: QuantConv, p: usize, f: usize },
+    DepthwiseScalar(QuantDepthwise),
+    DepthwiseSimd(QuantDepthwise),
+    /// Scalar shift conv; materializes the intermediate map `I` (Eq. 2)
+    /// in the workspace's shift scratch.
+    ShiftScalar(ShiftConv),
+    /// SIMD shift conv: 2 gather columns + pre-widened weights.
+    ShiftSimd(ShiftConv),
+    AddConvScalar(AddConv),
+    Bn(BnLayer),
+    Relu,
+    MaxPool2,
+    GlobalAvgPool(Option<QParam>),
+    DenseScalar(QuantDense),
+    /// SIMD dense: 1 widened input column + pre-widened weights.
+    DenseSimd(QuantDense),
+}
+
+/// One compiled layer: resolved kernel, pre-widened weights where the
+/// fixed-function SIMD kernels need them, and the static shape chain.
+#[derive(Clone, Debug)]
+struct Step {
+    name: &'static str,
+    kernel: CompiledKernel,
+    /// Pre-widened q15 weights (empty unless the kernel is `ShiftSimd`
+    /// or `DenseSimd`; the blocked matmul consumes q7 rows directly).
+    wq: Vec<i16>,
+    in_shape: Shape,
+    out_shape: Shape,
+    candidate: Candidate,
+}
+
+/// A compiled (model × schedule) executor. Build once per deployment
+/// (`compile` / `compile_default`), run forever through
+/// [`ExecPlan::run_in`] with a [`Workspace`] sized by
+/// [`Workspace::for_plan`].
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    model_name: String,
+    input_shape: Shape,
+    input_q: QParam,
+    weight_fp: u64,
+    cand_fp: u64,
+    steps: Vec<Step>,
+    // scratch requirements (elements, not bytes)
+    max_act: usize,
+    peak_pair: usize,
+    col_len: usize,
+    acc_len: usize,
+    shift_len: usize,
+}
+
+/// Fingerprint of a candidate schedule (order-sensitive). Used to guard
+/// a workspace-bound plan against being replayed under a different
+/// [`crate::tuner::TunedSchedule`].
+pub fn candidate_fingerprint(cands: impl Iterator<Item = Candidate>) -> u64 {
+    let mut h = Fnv1a::new();
+    for c in cands {
+        h.byte(match c.kernel {
+            KernelImpl::AsIs => 0,
+            KernelImpl::ConvAsDepthwise => 1,
+            KernelImpl::DepthwiseAsConv => 2,
+            KernelImpl::PointwiseAsShift => 3,
+        });
+        match c.lowering {
+            Lowering::Direct => h.byte(0xD0),
+            Lowering::Im2col { patches, filters } => {
+                h.byte(0x1C);
+                h.byte(patches as u8);
+                h.byte(filters as u8);
+            }
+        }
+    }
+    h.finish()
+}
+
+fn widen(weights: &[i8]) -> Vec<i16> {
+    weights.iter().map(|&w| w as i16).collect()
+}
+
+/// The candidate the paper-default fixed path executes for `layer`:
+/// scalar everywhere, or the design-point im2col lowering wherever the
+/// layer has a SIMD implementation — exactly `Layer::forward`'s
+/// dispatch, expressed as schedule-space points.
+pub fn default_candidate(layer: &Layer, simd: bool) -> Candidate {
+    let lowering = if simd {
+        match layer {
+            Layer::Conv(_) | Layer::Depthwise(_) | Layer::Shift(_) => Lowering::Im2col {
+                patches: space::DESIGN_POINT.0,
+                filters: space::DESIGN_POINT.1,
+            },
+            // the CMSIS fully-connected kernel: 1 column × 2 weight rows
+            Layer::Dense(_) => Lowering::Im2col { patches: 1, filters: 2 },
+            _ => Lowering::Direct,
+        }
+    } else {
+        Lowering::Direct
+    };
+    Candidate { kernel: KernelImpl::AsIs, lowering }
+}
+
+fn compile_kernel(layer: &Layer, cand: &Candidate) -> CompiledKernel {
+    assert!(
+        space::applies(layer, cand),
+        "candidate {cand:?} does not apply to layer {:?}",
+        layer.name()
+    );
+    use CompiledKernel as CK;
+    match (layer, cand.kernel, cand.lowering) {
+        (Layer::Conv(c), KernelImpl::AsIs, Lowering::Direct) => CK::ConvScalar(c.clone()),
+        (Layer::Conv(c), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
+            CK::ConvBlocked { conv: c.clone(), p: patches, f: filters }
+        }
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Direct) => {
+            CK::DepthwiseScalar(space::conv_to_depthwise(c))
+        }
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Im2col { .. }) => {
+            CK::DepthwiseSimd(space::conv_to_depthwise(c))
+        }
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Direct) => {
+            CK::ShiftScalar(space::pointwise_to_shift(c))
+        }
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Im2col { .. }) => {
+            CK::ShiftSimd(space::pointwise_to_shift(c))
+        }
+        (Layer::Depthwise(d), KernelImpl::AsIs, Lowering::Direct) => CK::DepthwiseScalar(d.clone()),
+        (Layer::Depthwise(d), KernelImpl::AsIs, Lowering::Im2col { .. }) => {
+            CK::DepthwiseSimd(d.clone())
+        }
+        (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv, Lowering::Direct) => {
+            CK::ConvScalar(space::depthwise_to_conv(d))
+        }
+        (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv, Lowering::Im2col { patches, filters }) => {
+            CK::ConvBlocked { conv: space::depthwise_to_conv(d), p: patches, f: filters }
+        }
+        (Layer::Shift(s), KernelImpl::AsIs, Lowering::Direct) => CK::ShiftScalar(s.clone()),
+        (Layer::Shift(s), KernelImpl::AsIs, Lowering::Im2col { .. }) => CK::ShiftSimd(s.clone()),
+        (Layer::Dense(d), KernelImpl::AsIs, Lowering::Direct) => CK::DenseScalar(d.clone()),
+        (Layer::Dense(d), KernelImpl::AsIs, Lowering::Im2col { .. }) => CK::DenseSimd(d.clone()),
+        (Layer::AddConv(a), KernelImpl::AsIs, Lowering::Direct) => CK::AddConvScalar(a.clone()),
+        (Layer::Bn(b), KernelImpl::AsIs, Lowering::Direct) => CK::Bn(b.clone()),
+        (Layer::Relu, KernelImpl::AsIs, Lowering::Direct) => CK::Relu,
+        (Layer::MaxPool2, KernelImpl::AsIs, Lowering::Direct) => CK::MaxPool2,
+        (Layer::GlobalAvgPool(q), KernelImpl::AsIs, Lowering::Direct) => CK::GlobalAvgPool(*q),
+        (l, k, lo) => panic!(
+            "candidate ({k:?}, {lo:?}) does not apply to layer {:?}",
+            l.name()
+        ),
+    }
+}
+
+impl ExecPlan {
+    /// Compile `model` under a per-layer candidate schedule. Panics if
+    /// the schedule length does not match or a candidate is illegal for
+    /// its layer (validate with [`space::applies`] first when replaying
+    /// untrusted schedules).
+    pub fn compile(model: &Model, schedule: &[Candidate]) -> ExecPlan {
+        assert_eq!(
+            schedule.len(),
+            model.layers.len(),
+            "schedule/model length mismatch"
+        );
+        let shapes = model.shapes();
+        let mut steps = Vec::with_capacity(model.layers.len());
+        let (mut col_len, mut acc_len, mut shift_len) = (0usize, 0usize, 0usize);
+        for ((layer, cand), in_shape) in model.layers.iter().zip(schedule).zip(&shapes) {
+            let kernel = compile_kernel(layer, cand);
+            let wq = match &kernel {
+                CompiledKernel::ShiftSimd(s) => widen(&s.weights),
+                CompiledKernel::DenseSimd(d) => widen(&d.weights),
+                _ => Vec::new(),
+            };
+            match &kernel {
+                CompiledKernel::ConvBlocked { conv, p, f } => {
+                    let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+                    col_len = col_len.max(p * klen);
+                    acc_len = acc_len.max(p * f);
+                }
+                CompiledKernel::ShiftSimd(s) => col_len = col_len.max(2 * s.in_channels),
+                CompiledKernel::DenseSimd(d) => col_len = col_len.max(d.in_features),
+                CompiledKernel::ShiftScalar(_) => shift_len = shift_len.max(in_shape.len()),
+                _ => {}
+            }
+            steps.push(Step {
+                name: layer.name(),
+                kernel,
+                wq,
+                in_shape: *in_shape,
+                out_shape: layer.output_shape(in_shape),
+                candidate: *cand,
+            });
+        }
+        let max_act = shapes.iter().map(|s| s.len()).max().unwrap_or(0);
+        let peak_pair = shapes
+            .windows(2)
+            .map(|w| w[0].len() + w[1].len())
+            .max()
+            .unwrap_or(max_act);
+        ExecPlan {
+            model_name: model.name.clone(),
+            input_shape: model.input_shape,
+            input_q: model.input_q,
+            weight_fp: model_weight_fingerprint(model),
+            cand_fp: candidate_fingerprint(schedule.iter().copied()),
+            steps,
+            max_act,
+            peak_pair,
+            col_len,
+            acc_len,
+            shift_len,
+        }
+    }
+
+    /// Compile the paper-default fixed schedule (all-scalar, or the
+    /// design-point SIMD lowering wherever one exists) — the trivial
+    /// plan `Model::forward` / `Model::forward_in` wrap.
+    pub fn compile_default(model: &Model, simd: bool) -> ExecPlan {
+        let cands: Vec<Candidate> = model
+            .layers
+            .iter()
+            .map(|l| default_candidate(l, simd))
+            .collect();
+        Self::compile(model, &cands)
+    }
+
+    /// Name of the model this plan was compiled from.
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    /// Input shape the plan expects.
+    pub fn input_shape(&self) -> Shape {
+        self.input_shape
+    }
+
+    /// Input activation format of the compiled model.
+    pub fn input_q(&self) -> QParam {
+        self.input_q
+    }
+
+    /// Number of compiled layers.
+    pub fn n_layers(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// The per-layer candidate schedule this plan executes.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        self.steps.iter().map(|s| s.candidate).collect()
+    }
+
+    /// FNV-1a fingerprint of the model parameters the plan was compiled
+    /// from (guards stale-plan reuse after a same-shaped redeploy).
+    pub(crate) fn weight_fp(&self) -> u64 {
+        self.weight_fp
+    }
+
+    /// Fingerprint of the candidate schedule (see
+    /// [`candidate_fingerprint`]).
+    pub fn schedule_fingerprint(&self) -> u64 {
+        self.cand_fp
+    }
+
+    /// Arena requirements, in elements: (activations, im2col i16 cols,
+    /// i32 accumulators, shift-scratch i8).
+    pub(crate) fn requirements(&self) -> (usize, usize, usize, usize) {
+        (self.max_act, self.col_len, self.acc_len, self.shift_len)
+    }
+
+    /// Per-layer scratch bytes beyond the activation ping-pong — by
+    /// construction identical to [`space::scratch_bytes`] for the
+    /// layer's candidate (pinned by a property test below), so the
+    /// tuner's RAM accounting and the engine's arena sizing can never
+    /// drift apart.
+    pub fn layer_scratch_bytes(&self, idx: usize) -> usize {
+        let step = &self.steps[idx];
+        match &step.kernel {
+            CompiledKernel::ConvBlocked { conv, p, .. } => {
+                2 * p * conv.kernel * conv.kernel * conv.ch_per_group()
+            }
+            CompiledKernel::ShiftSimd(s) => 2 * 2 * s.in_channels,
+            CompiledKernel::DenseSimd(d) => 2 * d.in_features,
+            CompiledKernel::ShiftScalar(_) => step.in_shape.len(),
+            _ => 0,
+        }
+    }
+
+    /// Peak working RAM of layer `idx` under its compiled candidate:
+    /// input + output activations + candidate scratch (the quantity
+    /// `space::ram_bytes` prices and `TunedSchedule::peak_ram_bytes`
+    /// maximizes).
+    pub fn layer_ram_bytes(&self, idx: usize) -> usize {
+        let step = &self.steps[idx];
+        step.in_shape.len() + step.out_shape.len() + self.layer_scratch_bytes(idx)
+    }
+
+    /// Byte-exact arena breakdown for a workspace planned from this plan
+    /// — the deployment's peak-RAM report, now covering arbitrary
+    /// blocked-candidate scratch.
+    pub fn workspace_plan(&self) -> WorkspacePlan {
+        WorkspacePlan {
+            activation_bytes: 2 * self.max_act,
+            peak_pair_bytes: self.peak_pair,
+            shift_scratch_bytes: self.shift_len,
+            im2col_bytes: 2 * self.col_len,
+            acc_bytes: 4 * self.acc_len,
+            widened_weight_bytes: 2 * self.steps.iter().map(|s| s.wq.len()).sum::<usize>(),
+        }
+    }
+
+    /// Execute one inference inside a pre-planned workspace: bit-exact
+    /// with the reference paths, identical micro-op event stream, zero
+    /// heap allocations in steady state. The returned reference points
+    /// into the workspace's output buffer and is valid until the next
+    /// run.
+    pub fn run_in<'w, M: Monitor>(
+        &self,
+        x: &Tensor,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w Tensor {
+        let cur_is_a = self.run_steps(x, ws, mon);
+        ws.output(cur_is_a)
+    }
+
+    /// [`ExecPlan::run_in`] collecting per-layer op counts (one stack
+    /// [`CountingMonitor`] per layer — still allocation-free except the
+    /// returned profile vector).
+    pub fn run_profiled_in<'w>(
+        &self,
+        x: &Tensor,
+        ws: &'w mut Workspace,
+    ) -> (&'w Tensor, Vec<LayerProfile>) {
+        let (cur_is_a, profiles) = self.run_steps_profiled(x, ws);
+        (ws.output(cur_is_a), profiles)
+    }
+
+    /// Profiled step loop returning the output slot indicator instead of
+    /// a borrow (lets `forward_profiled_in` interleave its plan take/put
+    /// dance around the run).
+    pub(crate) fn run_steps_profiled(
+        &self,
+        x: &Tensor,
+        ws: &mut Workspace,
+    ) -> (bool, Vec<LayerProfile>) {
+        self.stage(x, ws);
+        let mut profiles = Vec::with_capacity(self.steps.len());
+        let mut cur_is_a = true;
+        for step in &self.steps {
+            let mut mon = CountingMonitor::new();
+            run_step(step, cur_is_a, ws, &mut mon);
+            profiles.push(LayerProfile { name: step.name, counts: mon.counts });
+            cur_is_a = !cur_is_a;
+        }
+        (cur_is_a, profiles)
+    }
+
+    /// Core loop: stage the input, run every compiled step ping-ponging
+    /// between the two activation buffers, return which buffer holds the
+    /// output. Shared by every public wrapper.
+    pub(crate) fn run_steps<M: Monitor>(&self, x: &Tensor, ws: &mut Workspace, mon: &mut M) -> bool {
+        self.stage(x, ws);
+        let mut cur_is_a = true;
+        for step in &self.steps {
+            run_step(step, cur_is_a, ws, mon);
+            cur_is_a = !cur_is_a;
+        }
+        cur_is_a
+    }
+
+    fn stage(&self, x: &Tensor, ws: &mut Workspace) {
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        assert!(
+            ws.fits_plan(self),
+            "workspace capacity is insufficient for plan of model {:?} (plan the arena with \
+             Workspace::for_plan)",
+            self.model_name
+        );
+        prepare(&mut ws.buf_a, x.shape, x.q);
+        ws.buf_a.data.copy_from_slice(&x.data);
+    }
+}
+
+/// Output format of a compiled kernel given its input format — mirrors
+/// `Layer::output_q` (format-preserving glue passes `in_q` through).
+fn step_out_q(kernel: &CompiledKernel, in_q: QParam) -> QParam {
+    use CompiledKernel as CK;
+    match kernel {
+        CK::ConvScalar(c) | CK::ConvBlocked { conv: c, .. } => c.q_out,
+        CK::DepthwiseScalar(d) | CK::DepthwiseSimd(d) => d.q_out,
+        CK::ShiftScalar(s) | CK::ShiftSimd(s) => s.q_out,
+        CK::AddConvScalar(a) => a.q_out,
+        CK::Bn(b) => b.q_out,
+        CK::Relu | CK::MaxPool2 => in_q,
+        CK::GlobalAvgPool(q) => q.unwrap_or(in_q),
+        CK::DenseScalar(d) | CK::DenseSimd(d) => d.q_out,
+    }
+}
+
+/// Execute one compiled step from the current ping-pong slot into the
+/// other, entirely inside the arena. Identical event stream to the
+/// reference executors ([`Layer::forward`] / [`space::execute`]).
+fn run_step<M: Monitor>(step: &Step, cur_is_a: bool, ws: &mut Workspace, mon: &mut M) {
+    let (xb, yb) = if cur_is_a {
+        (&ws.buf_a, &mut ws.buf_b)
+    } else {
+        (&ws.buf_b, &mut ws.buf_a)
+    };
+    debug_assert_eq!(xb.shape, step.in_shape, "activation chain drift");
+    prepare(yb, step.out_shape, step_out_q(&step.kernel, xb.q));
+    use CompiledKernel as CK;
+    match &step.kernel {
+        CK::ConvScalar(c) => c.forward_scalar_into(xb, yb, mon),
+        CK::ConvBlocked { conv, p, f } => {
+            let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+            conv_blocked_into(
+                conv,
+                xb,
+                yb,
+                *p,
+                *f,
+                &mut ws.cols[..p * klen],
+                &mut ws.acc[..p * f],
+                mon,
+            );
+        }
+        CK::DepthwiseScalar(d) => d.forward_scalar_into(xb, yb, mon),
+        CK::DepthwiseSimd(d) => d.forward_simd_into(xb, yb, mon),
+        CK::ShiftScalar(s) => {
+            prepare(&mut ws.shift_inter, xb.shape, xb.q);
+            s.forward_scalar_into(xb, yb, &mut ws.shift_inter, mon);
+        }
+        CK::ShiftSimd(s) => {
+            let klen = s.in_channels;
+            let (ca, cb) = ws.cols.split_at_mut(klen);
+            s.forward_simd_with(xb, yb, &mut ca[..klen], &mut cb[..klen], &step.wq, mon);
+        }
+        CK::AddConvScalar(a) => a.forward_scalar_into(xb, yb, mon),
+        CK::Bn(b) => b.forward_into(xb, yb, mon),
+        CK::Relu => ops::relu_into(xb, yb, mon),
+        CK::MaxPool2 => ops::maxpool2_into(xb, yb, mon),
+        CK::GlobalAvgPool(q) => ops::global_avgpool_into(xb, *q, yb, mon),
+        CK::DenseScalar(d) => d.forward_scalar_into(&xb.data, &mut yb.data, mon),
+        CK::DenseSimd(d) => d.forward_simd_with(
+            &xb.data,
+            &mut yb.data,
+            &mut ws.cols[..d.in_features],
+            &step.wq,
+            mon,
+        ),
+    }
+}
+
+/// Generalized (P, F)-blocked im2col convolution into caller-provided
+/// output, column arena (`p_blk · kernel²·Cx/G` q15 values) and
+/// accumulator slice (`p_blk · f_blk`) — the allocation-free core both
+/// the compiled engine and the allocating reference
+/// [`space::conv_im2col_blocked`] execute, so there is exactly one
+/// blocked-convolution implementation in the repo. Event stream: P×
+/// `fill_patch_q15`, [`mat_mult_block_into`] per filter block, then
+/// `alu(2)` + `st8(1)` per output element.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_blocked_into<M: Monitor>(
+    conv: &QuantConv,
+    x: &Tensor,
+    y: &mut Tensor,
+    p_blk: usize,
+    f_blk: usize,
+    cols: &mut [i16],
+    acc: &mut [i32],
+    mon: &mut M,
+) {
+    assert!(p_blk >= 1 && f_blk >= 1, "degenerate blocking");
+    assert!(
+        p_blk <= MAX_BLOCK && f_blk <= MAX_BLOCK,
+        "blocking ({p_blk},{f_blk}) beyond the provisioned maximum {MAX_BLOCK}"
+    );
+    conv.validate(&x.shape).expect("invalid conv configuration");
+    let out_shape = conv.output_shape(&x.shape);
+    debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+    debug_assert_eq!(y.q, conv.q_out, "output buffer format mismatch");
+    let shift = conv.out_shift();
+    let cpg = conv.ch_per_group();
+    let fpg = conv.filters_per_group();
+    let klen = conv.kernel * conv.kernel * cpg;
+    debug_assert!(cols.len() >= p_blk * klen, "column arena too small");
+    debug_assert!(acc.len() >= p_blk * f_blk, "accumulator arena too small");
+    let n_pix = out_shape.h * out_shape.w;
+
+    for g in 0..conv.groups {
+        let ch0 = g * cpg;
+        let n0 = g * fpg;
+        let mut pix = 0usize;
+        while pix < n_pix {
+            let pcnt = p_blk.min(n_pix - pix);
+            for (pi, col) in cols.chunks_mut(klen).take(pcnt).enumerate() {
+                let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                fill_patch_q15(x, oy, ox, conv.kernel, conv.pad, ch0, cpg, col, mon);
+            }
+            let mut col_refs: [&[i16]; MAX_BLOCK] = [&[]; MAX_BLOCK];
+            for (pi, col) in cols.chunks(klen).take(pcnt).enumerate() {
+                col_refs[pi] = col;
+            }
+            let mut f0 = 0usize;
+            while f0 < fpg {
+                let fcnt = f_blk.min(fpg - f0);
+                let mut w_rows: [&[i8]; MAX_BLOCK] = [&[]; MAX_BLOCK];
+                let mut biases = [0i32; MAX_BLOCK];
+                for fi in 0..fcnt {
+                    let n = n0 + f0 + fi;
+                    w_rows[fi] = &conv.weights[n * klen..(n + 1) * klen];
+                    biases[fi] = conv.bias[n];
+                }
+                mat_mult_block_into(
+                    &w_rows[..fcnt],
+                    &col_refs[..pcnt],
+                    &biases[..fcnt],
+                    &mut acc[..fcnt * pcnt],
+                    mon,
+                );
+                for fi in 0..fcnt {
+                    let n = n0 + f0 + fi;
+                    for pi in 0..pcnt {
+                        let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                        mon.alu(2);
+                        mon.st8(1);
+                        y.set(oy, ox, n, sat_i8(requantize(acc[fi * pcnt + pi], shift)));
+                    }
+                }
+                f0 += fcnt;
+            }
+            pix += pcnt;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Primitive;
+    use crate::mcu::McuConfig;
+    use crate::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+    use crate::nn::monitor::NoopMonitor;
+    use crate::tuner::{tune_model_shape, Objective, TuningCache};
+    use crate::util::prng::Rng;
+
+    /// Wrap one layer (with its in-flight input format) as a model so it
+    /// can be compiled stand-alone.
+    fn single_layer_model(layer: &Layer, x: &Tensor) -> Model {
+        let mut m = Model::new("single", x.shape, x.q);
+        m.push(layer.clone());
+        m
+    }
+
+    #[test]
+    fn run_in_matches_space_execute_across_the_entire_candidate_space() {
+        // Satellite: bit-exact AND CountingMonitor-event-identical to the
+        // allocating reference executor, for every candidate of every
+        // layer kind, on a dirty (reused) arena.
+        let p = LayerParams::new(2, 3, 6, 4, 4);
+        let mut rng = Rng::new(0x9A3);
+        for prim in Primitive::ALL {
+            let model = experiment_layer(&p, prim, 17);
+            let x = experiment_input(&p, 18);
+            let mut t = x.clone();
+            for layer in &model.layers {
+                let m1 = single_layer_model(layer, &t);
+                for cand in space::candidates(layer) {
+                    let plan = ExecPlan::compile(&m1, &[cand]);
+                    let mut ws = Workspace::for_plan(&plan);
+                    // two runs on the same arena: the second is dirty
+                    for trial in 0..2 {
+                        let mut xin = t.clone();
+                        if trial == 1 {
+                            rng.fill_i8(&mut xin.data, -32, 31);
+                        }
+                        let mut ma = CountingMonitor::new();
+                        let want = space::execute(layer, &cand, &xin, &mut ma);
+                        let mut mb = CountingMonitor::new();
+                        let got = plan.run_in(&xin, &mut ws, &mut mb);
+                        assert_eq!(
+                            want.data, got.data,
+                            "{prim:?}/{}/{cand:?} trial {trial}",
+                            layer.name()
+                        );
+                        assert_eq!(want.q, got.q, "{prim:?}/{}/{cand:?}", layer.name());
+                        assert_eq!(
+                            ma.counts, mb.counts,
+                            "event mismatch {prim:?}/{}/{cand:?}",
+                            layer.name()
+                        );
+                    }
+                }
+                t = layer.forward(&t, false, &mut NoopMonitor);
+            }
+        }
+        // dense too (not part of the single-layer experiments)
+        let mut dw = vec![0i8; 12 * 5];
+        rng.fill_i8(&mut dw, -10, 10);
+        let layer = Layer::Dense(QuantDense {
+            in_features: 12,
+            out_features: 5,
+            weights: dw,
+            bias: vec![3; 5],
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        });
+        let mut x = Tensor::zeros(Shape::new(1, 1, 12), QParam::new(7));
+        rng.fill_i8(&mut x.data, -16, 16);
+        let m1 = single_layer_model(&layer, &x);
+        for cand in space::candidates(&layer) {
+            let plan = ExecPlan::compile(&m1, &[cand]);
+            let mut ws = Workspace::for_plan(&plan);
+            let mut ma = CountingMonitor::new();
+            let want = space::execute(&layer, &cand, &x, &mut ma);
+            let mut mb = CountingMonitor::new();
+            let got = plan.run_in(&x, &mut ws, &mut mb);
+            assert_eq!(want.data, got.data, "dense/{cand:?}");
+            assert_eq!(ma.counts, mb.counts, "dense/{cand:?}");
+        }
+    }
+
+    #[test]
+    fn tuned_run_in_matches_tuned_run_whole_model() {
+        // Whole-schedule parity: ExecPlan::run_in (zero-alloc) vs
+        // TunedSchedule::run (allocating reference), bits and events.
+        let cfg = McuConfig::default();
+        let mut rng = Rng::new(0xEC7);
+        for prim in Primitive::ALL {
+            let model = mcunet(prim, 5);
+            let mut cache = TuningCache::in_memory();
+            for objective in [Objective::Latency, Objective::PeakRam] {
+                let (sched, _) = tune_model_shape(&model, &cfg, objective, &mut cache);
+                let plan = ExecPlan::compile(&model, &sched.candidates());
+                let mut ws = Workspace::for_plan(&plan);
+                for _ in 0..2 {
+                    let mut x = Tensor::zeros(model.input_shape, model.input_q);
+                    rng.fill_i8(&mut x.data, -64, 63);
+                    let mut ma = CountingMonitor::new();
+                    let want = sched.run(&model, &x, &mut ma);
+                    let mut mb = CountingMonitor::new();
+                    let got = plan.run_in(&x, &mut ws, &mut mb);
+                    assert_eq!(want.data, got.data, "{prim:?}/{objective:?}");
+                    assert_eq!(ma.counts, mb.counts, "{prim:?}/{objective:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_candidates_reuse_a_dirty_shared_arena() {
+        // One arena sized for the widest blocking serves every smaller
+        // blocked plan of the layer, dirty, without re-planning.
+        let mut rng = Rng::new(0xB10C);
+        let p = LayerParams::new(1, 3, 8, 6, 6);
+        let model = experiment_layer(&p, Primitive::Standard, 3);
+        let layer = &model.layers[0];
+        let x = experiment_input(&p, 4);
+        let m1 = single_layer_model(layer, &x);
+        let blockings = space::blocking_options();
+        // size one arena to dominate every blocking: a sizing plan whose
+        // steps carry the max-P and the max-P·F candidates of the space
+        // (no single (P, F) maximizes both columns and accumulators)
+        let max_p = blockings.iter().copied().max_by_key(|&(bp, _)| bp).unwrap();
+        let max_pf = blockings.iter().copied().max_by_key(|&(bp, bf)| bp * bf).unwrap();
+        let mut m2 = Model::new("sizing", x.shape, x.q);
+        m2.push(layer.clone());
+        m2.push(layer.clone()); // same-pad, Cin == Cout: stackable
+        let sizing_plan = ExecPlan::compile(
+            &m2,
+            &[max_p, max_pf].map(|(bp, bf)| Candidate {
+                kernel: KernelImpl::AsIs,
+                lowering: Lowering::Im2col { patches: bp, filters: bf },
+            }),
+        );
+        let mut ws = Workspace::for_plan(&sizing_plan);
+        for (bp, bf) in blockings {
+            let cand = Candidate {
+                kernel: KernelImpl::AsIs,
+                lowering: Lowering::Im2col { patches: bp, filters: bf },
+            };
+            let plan = ExecPlan::compile(&m1, &[cand]);
+            let mut xin = x.clone();
+            rng.fill_i8(&mut xin.data, -48, 47);
+            let want = space::execute(layer, &cand, &xin, &mut NoopMonitor);
+            let got = plan.run_in(&xin, &mut ws, &mut NoopMonitor);
+            assert_eq!(want.data, got.data, "({bp},{bf})");
+        }
+    }
+
+    #[test]
+    fn plan_scratch_accounting_matches_tuner_ram_model() {
+        // Satellite: the engine's per-layer scratch bytes must equal the
+        // schedule space's RAM pricing for every candidate — the two
+        // reports can never drift apart.
+        let p = LayerParams::new(2, 3, 6, 4, 4);
+        for prim in Primitive::ALL {
+            let model = experiment_layer(&p, prim, 23);
+            let x = experiment_input(&p, 24);
+            let mut t = x.clone();
+            for layer in &model.layers {
+                let m1 = single_layer_model(layer, &t);
+                for cand in space::candidates(layer) {
+                    let plan = ExecPlan::compile(&m1, &[cand]);
+                    assert_eq!(
+                        plan.layer_scratch_bytes(0),
+                        space::scratch_bytes(layer, &cand, &t.shape),
+                        "{prim:?}/{}/{cand:?}",
+                        layer.name()
+                    );
+                    assert_eq!(
+                        plan.layer_ram_bytes(0),
+                        space::ram_bytes(layer, &cand, &t.shape),
+                        "{prim:?}/{}/{cand:?}",
+                        layer.name()
+                    );
+                }
+                t = layer.forward(&t, false, &mut NoopMonitor);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_plan_covers_tuned_peak_ram_claim() {
+        // Satellite: the arena report for a tuned plan is an upper bound
+        // on the schedule's own peak-RAM claim (reconciling the two RAM
+        // reports), and the per-layer maxima agree.
+        let cfg = McuConfig::default();
+        for prim in Primitive::ALL {
+            let model = mcunet(prim, 7);
+            let mut cache = TuningCache::in_memory();
+            let (sched, _) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+            let plan = ExecPlan::compile(&model, &sched.candidates());
+            let wp = plan.workspace_plan();
+            assert!(
+                wp.total_bytes() >= sched.peak_ram_bytes,
+                "{prim:?}: arena {} B < schedule peak claim {} B",
+                wp.total_bytes(),
+                sched.peak_ram_bytes
+            );
+            // the schedule's peak is the max of the engine's per-layer RAM
+            let engine_peak = (0..plan.n_layers())
+                .map(|i| plan.layer_ram_bytes(i))
+                .max()
+                .unwrap();
+            assert_eq!(engine_peak, sched.peak_ram_bytes, "{prim:?}");
+        }
+    }
+
+    #[test]
+    fn default_plan_matches_legacy_forward_dispatch() {
+        // The trivial schedule IS the paper-default path: same bits,
+        // same events as Layer::forward-driven execution.
+        let mut rng = Rng::new(0xDEF);
+        for prim in Primitive::ALL {
+            let p = LayerParams::new(2, 3, 8, 4, 4);
+            let model = experiment_layer(&p, prim, 29);
+            let mut x = experiment_input(&p, 30);
+            rng.fill_i8(&mut x.data, -64, 63);
+            for simd in [false, true] {
+                let mut ma = CountingMonitor::new();
+                let mut want = x.clone();
+                for layer in &model.layers {
+                    want = layer.forward(&want, simd, &mut ma);
+                }
+                let plan = ExecPlan::compile_default(&model, simd);
+                let mut ws = Workspace::for_plan(&plan);
+                let mut mb = CountingMonitor::new();
+                let got = plan.run_in(&x, &mut ws, &mut mb);
+                assert_eq!(want.data, got.data, "{prim:?} simd={simd}");
+                assert_eq!(ma.counts, mb.counts, "{prim:?} simd={simd}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_fingerprint_discriminates() {
+        let a = [Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }];
+        let b = [Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Im2col { patches: 2, filters: 2 },
+        }];
+        let c = [Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Im2col { patches: 2, filters: 1 },
+        }];
+        let fp = |s: &[Candidate]| candidate_fingerprint(s.iter().copied());
+        assert_ne!(fp(&a), fp(&b));
+        assert_ne!(fp(&b), fp(&c));
+        assert_eq!(fp(&b), fp(&b));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not apply")]
+    fn compiling_an_illegal_candidate_panics() {
+        let p = LayerParams::new(1, 3, 6, 4, 4);
+        let model = experiment_layer(&p, Primitive::Standard, 1);
+        let bad: Vec<Candidate> = model
+            .layers
+            .iter()
+            .map(|_| Candidate {
+                kernel: KernelImpl::ConvAsDepthwise,
+                lowering: Lowering::Direct,
+            })
+            .collect();
+        ExecPlan::compile(&model, &bad);
+    }
+}

@@ -1,39 +1,43 @@
-//! Per-model scratch arena for allocation-free inference.
+//! Per-deployment scratch arena for allocation-free inference.
 //!
-//! [`Model::forward`] heap-allocates on every call: one fresh
-//! `Tensor::zeros` per layer, two im2col columns per SIMD convolution,
-//! the widened `wq` weight copy, the shift-conv intermediate map. A
-//! [`Workspace`] hoists all of that into state planned once at deploy
-//! time, so [`Model::forward_in`] performs **zero heap allocations** in
-//! steady state (pinned by `benches/infer_hot.rs` with a counting global
-//! allocator):
+//! A [`Workspace`] holds the mutable state one inference needs, planned
+//! once at deploy time so the hot path performs **zero heap
+//! allocations** (pinned by `benches/infer_hot.rs` with a counting
+//! global allocator) — for the paper-default fixed schedules *and* for
+//! arbitrary tuned per-layer schedules:
 //!
 //! * two ping-pong activation buffers sized to the largest activation of
 //!   the model (NNoM's layer-buffer scheme);
-//! * the two q15 im2col column slots of the widest layer (the paper's
-//!   2-patch cap is exactly what bounds them);
-//! * per-layer pre-widened q15 weights for the SIMD matmuls (widened once
-//!   per deployed model instead of once per call);
+//! * a flat q15 im2col column arena sized to the widest (P, F)-blocked
+//!   candidate of the plan (at the paper's 2-patch design point this is
+//!   exactly the CMSIS 2-column cap);
+//! * the [`mat_mult_block`](super::blocking::mat_mult_block)
+//!   accumulator block of the widest blocked layer;
 //! * the shift-convolution intermediate map `I` (Eq. 2) for the scalar
 //!   path.
+//!
+//! The *read-only* state — resolved dispatch, substituted kernel
+//! structs, pre-widened q15 weights — lives in the compiled
+//! [`ExecPlan`], not here, so the arena is content-free scratch: any
+//! plan whose requirements fit the capacities can run in it.
+//! [`Workspace::new`] additionally stores the model's two paper-default
+//! plans (scalar / SIMD), which is what keeps [`Model::forward_in`]
+//! allocation-free; [`Workspace::for_plan`] sizes a bare arena for one
+//! compiled plan (the serving path); a tuned workspace bound to its
+//! schedule comes from `TunedSchedule::workspace`.
 //!
 //! Because every byte is planned up front, the [`WorkspacePlan`] doubles
 //! as an **exact** peak-RAM report for the deployment — the quantity
 //! `mcu::footprint` estimates and the paper's §3.3 memory-footprint
-//! discussion bounds.
-//!
-//! Event streams are untouched: `forward_in` drives the same kernels
-//! through their `*_into` / `*_with` entry points, so outputs are
-//! bit-exact with [`Model::forward`] and a [`CountingMonitor`] sees the
-//! identical micro-op mix (both properties are tested below, including
-//! reuse of a dirty workspace).
+//! discussion bounds (and, for tuned plans, an upper bound on the
+//! schedule's own `peak_ram_bytes` claim — tested in `nn::plan`).
 
 use crate::quant::QParam;
 use crate::util::fnv::Fnv1a;
 
 use super::graph::{Layer, LayerProfile, Model};
-use super::monitor::{CountingMonitor, Monitor};
-use super::ops;
+use super::monitor::Monitor;
+use super::plan::ExecPlan;
 use super::tensor::{Shape, Tensor};
 
 /// Byte-exact breakdown of a planned arena — the deployment's peak-RAM
@@ -50,9 +54,13 @@ pub struct WorkspacePlan {
     /// Shift-convolution intermediate map `I` (scalar path), sized to the
     /// largest shift-layer input.
     pub shift_scratch_bytes: usize,
-    /// The two q15 im2col / gather / widen columns of the widest layer.
+    /// The q15 im2col / gather / widen column arena of the widest
+    /// (P, F)-blocked candidate in the plan.
     pub im2col_bytes: usize,
-    /// Pre-widened q15 weight copies for the SIMD matmul layers.
+    /// `mat_mult_block` accumulators of the widest blocked layer.
+    pub acc_bytes: usize,
+    /// Pre-widened q15 weight copies for the fixed-function SIMD matmul
+    /// layers (held by the compiled plan).
     pub widened_weight_bytes: usize,
 }
 
@@ -63,18 +71,33 @@ impl WorkspacePlan {
         self.activation_bytes
             + self.shift_scratch_bytes
             + self.im2col_bytes
+            + self.acc_bytes
             + self.widened_weight_bytes
+    }
+
+    /// Field-wise maximum of two plans (the arena a workspace serving
+    /// both must provision).
+    pub fn max(&self, other: &WorkspacePlan) -> WorkspacePlan {
+        WorkspacePlan {
+            activation_bytes: self.activation_bytes.max(other.activation_bytes),
+            peak_pair_bytes: self.peak_pair_bytes.max(other.peak_pair_bytes),
+            shift_scratch_bytes: self.shift_scratch_bytes.max(other.shift_scratch_bytes),
+            im2col_bytes: self.im2col_bytes.max(other.im2col_bytes),
+            acc_bytes: self.acc_bytes.max(other.acc_bytes),
+            widened_weight_bytes: self.widened_weight_bytes.max(other.widened_weight_bytes),
+        }
     }
 
     /// One-line report for logs and CLI output.
     pub fn summary(&self) -> String {
         format!(
             "arena {} B (activations {} B [peak pair {} B], im2col {} B, \
-             shift scratch {} B, widened weights {} B)",
+             block accumulators {} B, shift scratch {} B, widened weights {} B)",
             self.total_bytes(),
             self.activation_bytes,
             self.peak_pair_bytes,
             self.im2col_bytes,
+            self.acc_bytes,
             self.shift_scratch_bytes,
             self.widened_weight_bytes
         )
@@ -84,7 +107,7 @@ impl WorkspacePlan {
 /// Reshape a tensor in place without allocating (the target length must
 /// be within the capacity planned for it).
 #[inline]
-fn prepare(t: &mut Tensor, shape: Shape, q: QParam) {
+pub(crate) fn prepare(t: &mut Tensor, shape: Shape, q: QParam) {
     debug_assert!(
         shape.len() <= t.data.capacity(),
         "workspace buffer capacity {} < required {}",
@@ -104,18 +127,15 @@ fn tensor_with_capacity(cap: usize, q: QParam) -> Tensor {
     }
 }
 
-fn widen(weights: &[i8]) -> Vec<i16> {
-    weights.iter().map(|&w| w as i16).collect()
-}
-
-/// FNV-1a fingerprint of every parameter tensor in the model. The arena
-/// caches pre-widened weight copies, so reusing it against a model whose
-/// weights changed (same name, same shapes — e.g. a recalibrated
-/// redeployment) would silently compute with stale weights; the
-/// fingerprint turns that into a loud failure. Cost: linear in the
+/// FNV-1a fingerprint of every parameter tensor in the model. Compiled
+/// plans (and the workspace's stored default plans) cache substituted
+/// kernel structs and pre-widened weight copies, so reusing them against
+/// a model whose weights changed (same name, same shapes — e.g. a
+/// recalibrated redeployment) would silently compute with stale weights;
+/// the fingerprint turns that into a loud failure. Cost: linear in the
 /// parameter count, allocation-free — validated at bind time (and on
 /// every call in debug builds, which is what the test suite runs).
-fn model_weight_fingerprint(model: &Model) -> u64 {
+pub(crate) fn model_weight_fingerprint(model: &Model) -> u64 {
     let mut h = Fnv1a::new();
     for layer in &model.layers {
         match layer {
@@ -153,7 +173,7 @@ fn model_weight_fingerprint(model: &Model) -> u64 {
     h.finish()
 }
 
-/// The per-model scratch arena. Build once per deployed model (per
+/// The per-deployment scratch arena. Build once per deployed model (per
 /// serving worker); reuse across every inference. Deliberately not
 /// `Clone`: `Vec::clone` does not preserve spare capacity, which would
 /// silently reintroduce steady-state growth — plan a fresh arena per
@@ -161,81 +181,112 @@ fn model_weight_fingerprint(model: &Model) -> u64 {
 #[derive(Debug)]
 pub struct Workspace {
     /// Name, layer count, input shape and parameter fingerprint of the
-    /// model this arena was planned for (guards against cross-model
-    /// reuse — including a same-shaped redeployment with different
-    /// weights, which would otherwise silently hit the stale pre-widened
-    /// copies).
+    /// model this arena was planned for (guards the `forward_in` path
+    /// against cross-model reuse — including a same-shaped redeployment
+    /// with different weights, which would otherwise silently hit the
+    /// stale compiled default plans).
     model_name: String,
     n_layers: usize,
     input_shape: Shape,
     weight_fp: u64,
     /// Ping-pong activation buffers.
-    buf_a: Tensor,
-    buf_b: Tensor,
+    pub(crate) buf_a: Tensor,
+    pub(crate) buf_b: Tensor,
     /// Shift-conv scalar intermediate map `I`.
-    shift_inter: Tensor,
-    /// q15 im2col / gather columns (also the dense input-widening slot).
-    col_a: Vec<i16>,
-    col_b: Vec<i16>,
-    /// Per-layer pre-widened q15 weights (empty where not applicable).
-    wq: Vec<Vec<i16>>,
+    pub(crate) shift_inter: Tensor,
+    /// Flat q15 im2col / gather / widen column arena (fixed length =
+    /// capacity; kernels slice what they need).
+    pub(crate) cols: Vec<i16>,
+    /// `mat_mult_block` accumulators of the widest blocked layer.
+    pub(crate) acc: Vec<i32>,
+    /// The model's compiled paper-default plans (scalar / SIMD), present
+    /// only on [`Workspace::new`] arenas — what keeps `forward_in`
+    /// allocation-free without a per-call compile.
+    scalar_plan: Option<Box<ExecPlan>>,
+    simd_plan: Option<Box<ExecPlan>>,
+    /// A tuned plan bound to this arena (`TunedSchedule::workspace`).
+    pub(crate) bound: Option<Box<ExecPlan>>,
     plan: WorkspacePlan,
 }
 
 impl Workspace {
-    /// Plan and allocate the arena for `model` (both code paths: the
-    /// scalar path needs the shift scratch, the SIMD path the columns
-    /// and widened weights).
+    /// Plan and allocate the arena for `model`'s paper-default schedules
+    /// (both code paths: the scalar path needs the shift scratch, the
+    /// SIMD path the columns, accumulators and widened weights), and
+    /// compile those two default plans into the arena so
+    /// [`Model::forward_in`] stays allocation-free.
     pub fn new(model: &Model) -> Self {
-        let shapes = model.shapes();
-        let max_act = shapes.iter().map(|s| s.len()).max().unwrap_or(0);
-        let peak_pair = shapes
-            .windows(2)
-            .map(|w| w[0].len() + w[1].len())
-            .max()
-            .unwrap_or(max_act);
+        let scalar = ExecPlan::compile_default(model, false);
+        let simd = ExecPlan::compile_default(model, true);
+        let report = scalar.workspace_plan().max(&simd.workspace_plan());
+        let (sa, sc, sacc, ssh) = scalar.requirements();
+        let (ma, mc, macc, msh) = simd.requirements();
+        let mut ws = Self::with_capacities(
+            sa.max(ma),
+            sc.max(mc),
+            sacc.max(macc),
+            ssh.max(msh),
+            model.input_q,
+            report,
+        );
+        ws.model_name = model.name.clone();
+        ws.n_layers = model.layers.len();
+        ws.input_shape = model.input_shape;
+        ws.weight_fp = model_weight_fingerprint(model);
+        ws.scalar_plan = Some(Box::new(scalar));
+        ws.simd_plan = Some(Box::new(simd));
+        ws
+    }
 
-        let mut shift_inter_len = 0usize;
-        let mut col_len = 0usize;
-        let mut wq: Vec<Vec<i16>> = Vec::with_capacity(model.layers.len());
-        for (layer, in_shape) in model.layers.iter().zip(&shapes) {
-            match layer {
-                Layer::Conv(c) => {
-                    col_len = col_len.max(c.kernel * c.kernel * c.ch_per_group());
-                    wq.push(widen(&c.weights));
-                }
-                Layer::Shift(s) => {
-                    shift_inter_len = shift_inter_len.max(in_shape.len());
-                    col_len = col_len.max(s.in_channels);
-                    wq.push(widen(&s.weights));
-                }
-                Layer::Dense(d) => {
-                    col_len = col_len.max(d.in_features);
-                    wq.push(widen(&d.weights));
-                }
-                _ => wq.push(Vec::new()),
-            }
-        }
+    /// Plan a bare arena sized for one compiled plan — the serving path:
+    /// the caller keeps the plan and drives [`ExecPlan::run_in`].
+    pub fn for_plan(plan: &ExecPlan) -> Self {
+        let (max_act, col_len, acc_len, shift_len) = plan.requirements();
+        let mut ws = Self::with_capacities(
+            max_act,
+            col_len,
+            acc_len,
+            shift_len,
+            plan.input_q(),
+            plan.workspace_plan(),
+        );
+        ws.model_name = plan.model_name().to_string();
+        ws.n_layers = plan.n_layers();
+        ws.input_shape = plan.input_shape();
+        ws.weight_fp = plan.weight_fp();
+        ws
+    }
 
-        let plan = WorkspacePlan {
-            activation_bytes: 2 * max_act,
-            peak_pair_bytes: peak_pair,
-            shift_scratch_bytes: shift_inter_len,
-            im2col_bytes: 2 * col_len * 2,
-            widened_weight_bytes: 2 * wq.iter().map(|w| w.len()).sum::<usize>(),
-        };
+    /// [`Workspace::for_plan`], additionally binding the plan into the
+    /// arena (used by `TunedSchedule::run_in`, which has no other place
+    /// to keep the compiled executor without allocating per call).
+    pub fn bind(plan: ExecPlan) -> Self {
+        let mut ws = Self::for_plan(&plan);
+        ws.bound = Some(Box::new(plan));
+        ws
+    }
 
+    fn with_capacities(
+        max_act: usize,
+        col_len: usize,
+        acc_len: usize,
+        shift_len: usize,
+        q: QParam,
+        plan: WorkspacePlan,
+    ) -> Self {
         Self {
-            model_name: model.name.clone(),
-            n_layers: model.layers.len(),
-            input_shape: model.input_shape,
-            weight_fp: model_weight_fingerprint(model),
-            buf_a: tensor_with_capacity(max_act, model.input_q),
-            buf_b: tensor_with_capacity(max_act, model.input_q),
-            shift_inter: tensor_with_capacity(shift_inter_len, model.input_q),
-            col_a: vec![0i16; col_len],
-            col_b: vec![0i16; col_len],
-            wq,
+            model_name: String::new(),
+            n_layers: 0,
+            input_shape: Shape::new(0, 0, 0),
+            weight_fp: 0,
+            buf_a: tensor_with_capacity(max_act, q),
+            buf_b: tensor_with_capacity(max_act, q),
+            shift_inter: tensor_with_capacity(shift_len, q),
+            cols: vec![0i16; col_len],
+            acc: vec![0i32; acc_len],
+            scalar_plan: None,
+            simd_plan: None,
+            bound: None,
             plan,
         }
     }
@@ -243,6 +294,18 @@ impl Workspace {
     /// The byte-exact arena plan (the deployment's peak-RAM report).
     pub fn plan(&self) -> WorkspacePlan {
         self.plan
+    }
+
+    /// Whether the arena's capacities cover `plan`'s requirements
+    /// (scratch is content-free, so capacity is the only correctness
+    /// condition for [`ExecPlan::run_in`]).
+    pub fn fits_plan(&self, plan: &ExecPlan) -> bool {
+        let (max_act, col_len, acc_len, shift_len) = plan.requirements();
+        self.buf_a.data.capacity() >= max_act
+            && self.buf_b.data.capacity() >= max_act
+            && self.cols.len() >= col_len
+            && self.acc.len() >= acc_len
+            && self.shift_inter.data.capacity() >= shift_len
     }
 
     /// O(1) structural identity: name, layer count, input shape.
@@ -262,95 +325,22 @@ impl Workspace {
         self.fits_structurally(model) && self.weight_fp == model_weight_fingerprint(model)
     }
 
-    /// Execute one layer from the current ping-pong slot into the other,
-    /// entirely inside the arena. `cur_is_a` names the slot holding the
-    /// layer's input; `idx` is the layer index (for the pre-widened
-    /// weights). Identical event stream to [`Layer::forward`].
-    fn run_layer<M: Monitor>(
-        &mut self,
-        layer: &Layer,
-        idx: usize,
-        cur_is_a: bool,
-        simd: bool,
-        mon: &mut M,
-    ) {
-        let (xb, yb) = if cur_is_a {
-            (&self.buf_a, &mut self.buf_b)
+    /// The ping-pong slot holding the last run's output.
+    pub(crate) fn output(&self, cur_is_a: bool) -> &Tensor {
+        if cur_is_a {
+            &self.buf_a
         } else {
-            (&self.buf_b, &mut self.buf_a)
-        };
-        let out_shape = layer.output_shape(&xb.shape);
-        let out_q = layer.output_q(xb.q);
-        prepare(yb, out_shape, out_q);
-        match layer {
-            Layer::Conv(c) => {
-                if simd {
-                    let klen = c.kernel * c.kernel * c.ch_per_group();
-                    c.forward_simd_with(
-                        xb,
-                        yb,
-                        &mut self.col_a[..klen],
-                        &mut self.col_b[..klen],
-                        &self.wq[idx],
-                        mon,
-                    );
-                } else {
-                    c.forward_scalar_into(xb, yb, mon);
-                }
-            }
-            Layer::Depthwise(d) => {
-                if simd {
-                    d.forward_simd_into(xb, yb, mon);
-                } else {
-                    d.forward_scalar_into(xb, yb, mon);
-                }
-            }
-            Layer::Shift(s) => {
-                if simd {
-                    let klen = s.in_channels;
-                    s.forward_simd_with(
-                        xb,
-                        yb,
-                        &mut self.col_a[..klen],
-                        &mut self.col_b[..klen],
-                        &self.wq[idx],
-                        mon,
-                    );
-                } else {
-                    prepare(&mut self.shift_inter, xb.shape, xb.q);
-                    s.forward_scalar_into(xb, yb, &mut self.shift_inter, mon);
-                }
-            }
-            // add-convolution has no SIMD variant (§3.3)
-            Layer::AddConv(a) => a.forward_scalar_into(xb, yb, mon),
-            Layer::Bn(b) => b.forward_into(xb, yb, mon),
-            Layer::Relu => ops::relu_into(xb, yb, mon),
-            Layer::MaxPool2 => ops::maxpool2_into(xb, yb, mon),
-            Layer::GlobalAvgPool(qo) => ops::global_avgpool_into(xb, *qo, yb, mon),
-            Layer::Dense(d) => {
-                if simd {
-                    d.forward_simd_with(
-                        &xb.data,
-                        &mut yb.data,
-                        &mut self.col_a[..d.in_features],
-                        &self.wq[idx],
-                        mon,
-                    );
-                } else {
-                    d.forward_scalar_into(&xb.data, &mut yb.data, mon);
-                }
-            }
+            &self.buf_b
         }
     }
 
-    /// Stage the model input into the first ping-pong slot (the analogue
-    /// of `Model::forward`'s initial clone — not a counted event).
-    /// Structural identity is asserted on every call; the full parameter
-    /// fingerprint (stale pre-widened weights after a same-shaped
-    /// redeploy) is re-asserted in debug builds — release callers
-    /// validate at bind time via [`Workspace::fits`].
-    fn stage_input(&mut self, model: &Model, x: &Tensor) {
-        assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
+    /// Guard the `forward_in` family: the stored default plans were
+    /// compiled from the model this arena was planned for; running a
+    /// different (or redeployed) model through them would silently use
+    /// stale weights. Structural identity is asserted on every call; the
+    /// full parameter fingerprint is re-asserted in debug builds —
+    /// release callers validate at bind time via [`Workspace::fits`].
+    fn check_model(&self, model: &Model) {
         let ok = if cfg!(debug_assertions) {
             self.fits(model)
         } else {
@@ -359,20 +349,33 @@ impl Workspace {
         assert!(
             ok,
             "workspace was planned for model {:?}, not {:?} (stale parameters?)",
-            self.model_name,
-            model.name
+            self.model_name, model.name
         );
-        prepare(&mut self.buf_a, x.shape, x.q);
-        self.buf_a.data.copy_from_slice(&x.data);
+    }
+
+    /// Take one of the stored default plans out for a run (no
+    /// allocation; put back via [`Workspace::put_default_plan`]).
+    fn take_default_plan(&mut self, simd: bool) -> Box<ExecPlan> {
+        let slot = if simd { &mut self.simd_plan } else { &mut self.scalar_plan };
+        slot.take().expect(
+            "workspace holds no default plans (built with Workspace::for_plan?) — \
+             drive ExecPlan::run_in directly",
+        )
+    }
+
+    fn put_default_plan(&mut self, simd: bool, plan: Box<ExecPlan>) {
+        let slot = if simd { &mut self.simd_plan } else { &mut self.scalar_plan };
+        *slot = Some(plan);
     }
 }
 
 impl Model {
     /// Run an inference inside a pre-planned [`Workspace`]: bit-exact
     /// with [`Model::forward`], identical micro-op event stream, zero
-    /// heap allocations in steady state. The returned reference points
-    /// into the workspace's output buffer and is valid until the next
-    /// `forward_in` call.
+    /// heap allocations in steady state. A thin wrapper over the
+    /// workspace's compiled default [`ExecPlan`]. The returned reference
+    /// points into the workspace's output buffer and is valid until the
+    /// next run.
     pub fn forward_in<'w, M: Monitor>(
         &self,
         x: &Tensor,
@@ -380,22 +383,16 @@ impl Model {
         ws: &'w mut Workspace,
         mon: &mut M,
     ) -> &'w Tensor {
-        ws.stage_input(self, x);
-        let mut cur_is_a = true;
-        for (idx, layer) in self.layers.iter().enumerate() {
-            ws.run_layer(layer, idx, cur_is_a, simd, mon);
-            cur_is_a = !cur_is_a;
-        }
-        if cur_is_a {
-            &ws.buf_a
-        } else {
-            &ws.buf_b
-        }
+        ws.check_model(self);
+        let plan = ws.take_default_plan(simd);
+        let cur_is_a = plan.run_steps(x, ws, mon);
+        ws.put_default_plan(simd, plan);
+        ws.output(cur_is_a)
     }
 
     /// [`Model::forward_profiled`] inside a workspace: per-layer op
     /// counts with the same zero-allocation execution (one
-    /// [`CountingMonitor`] per layer is stack state, not heap). Used by
+    /// `CountingMonitor` per layer is stack state, not heap). Used by
     /// the sweep harness so a full Table 2 sweep reuses one arena per
     /// experiment model.
     pub fn forward_profiled_in<'w>(
@@ -404,20 +401,13 @@ impl Model {
         simd: bool,
         ws: &'w mut Workspace,
     ) -> (&'w Tensor, Vec<LayerProfile>) {
-        ws.stage_input(self, x);
-        let mut profiles = Vec::with_capacity(self.layers.len());
-        let mut cur_is_a = true;
-        for (idx, layer) in self.layers.iter().enumerate() {
-            let mut mon = CountingMonitor::new();
-            ws.run_layer(layer, idx, cur_is_a, simd, &mut mon);
-            profiles.push(LayerProfile {
-                name: layer.name(),
-                counts: mon.counts,
-            });
-            cur_is_a = !cur_is_a;
-        }
-        let out = if cur_is_a { &ws.buf_a } else { &ws.buf_b };
-        (out, profiles)
+        ws.check_model(self);
+        let plan = ws.take_default_plan(simd);
+        // run_profiled_in borrows ws for the output reference; go through
+        // the step loop manually to keep the take/put dance borrow-clean
+        let (cur_is_a, profiles) = plan.run_steps_profiled(x, ws);
+        ws.put_default_plan(simd, plan);
+        (ws.output(cur_is_a), profiles)
     }
 }
 
@@ -425,7 +415,7 @@ impl Model {
 mod tests {
     use super::*;
     use crate::nn::conv::test_random_conv;
-    use crate::nn::monitor::NoopMonitor;
+    use crate::nn::monitor::{CountingMonitor, NoopMonitor};
     use crate::nn::ops::QuantDense;
     use crate::nn::shift::test_random_shift_conv;
     use crate::nn::{uniform_shifts, AddConv, BnLayer, QuantDepthwise};
@@ -556,16 +546,21 @@ mod tests {
         assert_eq!(plan.activation_bytes, 2 * max_act);
         let peak_pair = shapes.windows(2).map(|w| w[0].len() + w[1].len()).max().unwrap();
         assert_eq!(plan.peak_pair_bytes, peak_pair);
-        // widest column: the 3×3×4 conv (36) vs shift gather (8) vs dense (6)
+        // widest column arena: the 3×3×4 conv blocked at the 2-patch
+        // design point (2 × 36 q15 values) vs shift gather (2 × 8) vs
+        // dense widening (6)
         assert_eq!(plan.im2col_bytes, 2 * 36 * 2);
+        // block accumulators: the 2×2 design point
+        assert_eq!(plan.acc_bytes, 4 * 4);
         // shift scratch = the shift layer's input map (8×8×8)
         assert_eq!(plan.shift_scratch_bytes, 8 * 8 * 8);
-        // widened weights: conv + shift + dense layers, 2 bytes each
+        // widened weights: the blocked conv matmul consumes q7 rows
+        // directly, so only the fixed-function shift and dense SIMD
+        // kernels hold q15 copies
         let expect_wq: usize = model
             .layers
             .iter()
             .map(|l| match l {
-                Layer::Conv(c) => c.weights.len(),
                 Layer::Shift(s) => s.weights.len(),
                 Layer::Dense(d) => d.weights.len(),
                 _ => 0,
@@ -577,6 +572,7 @@ mod tests {
             plan.activation_bytes
                 + plan.shift_scratch_bytes
                 + plan.im2col_bytes
+                + plan.acc_bytes
                 + plan.widened_weight_bytes
         );
         assert!(plan.summary().contains("arena"));
@@ -590,6 +586,8 @@ mod tests {
         let cap_a = ws.buf_a.data.capacity();
         let cap_b = ws.buf_b.data.capacity();
         let cap_i = ws.shift_inter.data.capacity();
+        let cap_c = ws.cols.len();
+        let cap_k = ws.acc.len();
         let mut x = Tensor::zeros(model.input_shape, model.input_q);
         for _ in 0..3 {
             rng.fill_i8(&mut x.data, -64, 63);
@@ -599,6 +597,8 @@ mod tests {
         assert_eq!(ws.buf_a.data.capacity(), cap_a);
         assert_eq!(ws.buf_b.data.capacity(), cap_b);
         assert_eq!(ws.shift_inter.data.capacity(), cap_i);
+        assert_eq!(ws.cols.len(), cap_c);
+        assert_eq!(ws.acc.len(), cap_k);
     }
 
     #[test]
@@ -616,8 +616,9 @@ mod tests {
     #[should_panic(expected = "workspace was planned for model")]
     fn same_shaped_redeployment_with_new_weights_is_rejected() {
         // the stale-arena trap: same name, same layer count, same input
-        // shape, different weight values — the cached pre-widened copies
-        // would silently be wrong, so the fingerprint must reject it
+        // shape, different weight values — the workspace's compiled
+        // default plans would silently execute the old weights, so the
+        // fingerprint must reject it
         let mut rng = Rng::new(0xF77);
         let model = kitchen_sink(&mut rng);
         let mut ws = Workspace::new(&model);
@@ -635,5 +636,16 @@ mod tests {
         let model = kitchen_sink(&mut rng);
         let ws = Workspace::new(&model);
         assert!(ws.fits(&model.clone()));
+    }
+
+    #[test]
+    #[should_panic(expected = "holds no default plans")]
+    fn bare_plan_arena_rejects_forward_in() {
+        let mut rng = Rng::new(0x288);
+        let model = kitchen_sink(&mut rng);
+        let plan = ExecPlan::compile_default(&model, true);
+        let mut ws = Workspace::for_plan(&plan);
+        let x = Tensor::zeros(model.input_shape, model.input_q);
+        model.forward_in(&x, true, &mut ws, &mut NoopMonitor);
     }
 }

@@ -15,7 +15,7 @@
 //! measures.
 
 use crate::mcu::{measure, McuConfig, Measurement};
-use crate::nn::{Model, Monitor, Shape, Tensor};
+use crate::nn::{ExecPlan, Model, Monitor, Shape, Tensor, Workspace};
 
 use super::cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
 use super::space::{self, Candidate};
@@ -72,8 +72,12 @@ pub struct TuneStats {
 }
 
 impl TunedSchedule {
-    /// Execute the model under this schedule (same bit-exact outputs as
-    /// `Model::forward`; only the event stream differs).
+    /// Execute the model under this schedule through the allocating
+    /// *reference* executor ([`space::execute`] per layer) — same
+    /// bit-exact outputs as `Model::forward`; only the event stream
+    /// differs. Deployed paths compile once and run allocation-free via
+    /// [`TunedSchedule::run_in`] / [`ExecPlan::run_in`]; this path stays
+    /// as the oracle those are property-tested against.
     pub fn run<M: Monitor>(&self, model: &Model, x: &Tensor, mon: &mut M) -> Tensor {
         assert_eq!(x.shape, model.input_shape, "model input shape mismatch");
         assert_eq!(self.layers.len(), model.layers.len(), "schedule/model mismatch");
@@ -82,6 +86,67 @@ impl TunedSchedule {
             t = space::execute(layer, &d.candidate, &t, mon);
         }
         t
+    }
+
+    /// The per-layer candidate schedule as a plain list (the input to
+    /// [`ExecPlan::compile`]).
+    pub fn candidates(&self) -> Vec<Candidate> {
+        self.layers.iter().map(|d| d.candidate).collect()
+    }
+
+    /// Compile this schedule against its model into the zero-allocation
+    /// engine executor.
+    pub fn compile(&self, model: &Model) -> ExecPlan {
+        assert_eq!(self.layers.len(), model.layers.len(), "schedule/model mismatch");
+        ExecPlan::compile(model, &self.candidates())
+    }
+
+    /// Plan (and bind) the inference arena for this schedule: the
+    /// workspace [`TunedSchedule::run_in`] needs, holding the compiled
+    /// plan so the steady-state path never recompiles or allocates.
+    pub fn workspace(&self, model: &Model) -> Workspace {
+        Workspace::bind(self.compile(model))
+    }
+
+    /// Execute one inference through the compiled engine inside a
+    /// pre-planned arena from [`TunedSchedule::workspace`]: bit-exact
+    /// and `CountingMonitor`-event-identical to [`TunedSchedule::run`]
+    /// (property-tested across the entire candidate space in
+    /// `nn::plan`), with **zero** heap allocations in steady state
+    /// (pinned by `benches/infer_hot.rs`).
+    ///
+    /// The executable weights live in the workspace's *bound plan*, not
+    /// in the schedule (a `TunedSchedule` is pure decision data), so the
+    /// workspace must be rebuilt on any redeployment: the asserts below
+    /// catch a mismatched model name or candidate schedule, but a
+    /// same-named, same-schedule redeploy with new weights must call
+    /// [`TunedSchedule::workspace`] again — the bound plan is the
+    /// deployment.
+    pub fn run_in<'w, M: Monitor>(
+        &self,
+        x: &Tensor,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w Tensor {
+        let plan = ws.bound.take().expect(
+            "workspace holds no bound plan — build it with TunedSchedule::workspace \
+             (or drive ExecPlan::run_in directly)",
+        );
+        assert_eq!(
+            plan.model_name(),
+            self.model,
+            "workspace-bound plan was compiled for a different model"
+        );
+        assert_eq!(
+            plan.schedule_fingerprint(),
+            crate::nn::plan::candidate_fingerprint(self.layers.iter().map(|d| d.candidate)),
+            "workspace-bound plan was compiled for a different schedule than {:?}/{}",
+            self.model,
+            self.objective
+        );
+        let cur_is_a = plan.run_steps(x, ws, mon);
+        ws.bound = Some(plan);
+        ws.output(cur_is_a)
     }
 
     /// Collapse the schedule totals into a [`Measurement`] (power is the

@@ -20,13 +20,11 @@
 //! only has its scalar implementation (§3.3: no SIMD add-convolution).
 
 use crate::mcu::PathClass;
-use crate::nn::blocking::{fits_register_file, mat_mult_block};
+use crate::nn::blocking::fits_register_file;
 use crate::nn::counts;
-use crate::nn::im2col::fill_patch_q15;
 use crate::nn::{
     uniform_shifts, Layer, Monitor, OpCounts, QuantConv, QuantDepthwise, Shape, ShiftConv, Tensor,
 };
-use crate::quant::{requantize, sat_i8};
 
 /// Which kernel implementation computes the layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -239,7 +237,7 @@ pub fn applies(layer: &Layer, cand: &Candidate) -> bool {
 }
 
 /// Reinterpret a depthwise-shaped convolution as the depthwise kernel.
-fn conv_to_depthwise(c: &QuantConv) -> QuantDepthwise {
+pub(crate) fn conv_to_depthwise(c: &QuantConv) -> QuantDepthwise {
     debug_assert!(conv_is_depthwise_shaped(c));
     QuantDepthwise {
         kernel: c.kernel,
@@ -255,7 +253,7 @@ fn conv_to_depthwise(c: &QuantConv) -> QuantDepthwise {
 }
 
 /// Reinterpret a depthwise layer as a grouped convolution with `G == C`.
-fn depthwise_to_conv(d: &QuantDepthwise) -> QuantConv {
+pub(crate) fn depthwise_to_conv(d: &QuantDepthwise) -> QuantConv {
     QuantConv {
         kernel: d.kernel,
         groups: d.channels,
@@ -271,7 +269,7 @@ fn depthwise_to_conv(d: &QuantDepthwise) -> QuantConv {
 }
 
 /// Reinterpret a `1×1, G == 1` convolution as a zero-shift shift conv.
-fn pointwise_to_shift(c: &QuantConv) -> ShiftConv {
+pub(crate) fn pointwise_to_shift(c: &QuantConv) -> ShiftConv {
     debug_assert!(conv_is_pointwise(c));
     ShiftConv {
         in_channels: c.in_channels,
@@ -287,10 +285,15 @@ fn pointwise_to_shift(c: &QuantConv) -> ShiftConv {
 }
 
 /// Generalized blocked im2col convolution: fill `p_blk` q15 columns, feed
-/// `f_blk` weight rows at a time through [`mat_mult_block`], requantize.
+/// `f_blk` weight rows at a time through
+/// [`mat_mult_block`](crate::nn::blocking::mat_mult_block), requantize.
 /// At the 2×2 design point this is event- and result-equivalent to
 /// [`QuantConv::forward_simd`] (tested); other blockings explore the §3.3
 /// trade between register-file reuse and im2col buffer size.
+///
+/// Allocating wrapper over the engine's single blocked-convolution core
+/// ([`crate::nn::plan::conv_blocked_into`]) — the compiled `ExecPlan`
+/// path runs the same code with workspace-resident scratch.
 pub fn conv_im2col_blocked<M: Monitor>(
     conv: &QuantConv,
     x: &Tensor,
@@ -300,51 +303,11 @@ pub fn conv_im2col_blocked<M: Monitor>(
 ) -> Tensor {
     assert!(p_blk >= 1 && f_blk >= 1, "degenerate blocking");
     conv.validate(&x.shape).expect("invalid conv configuration");
-    let out_shape = conv.output_shape(&x.shape);
-    let mut y = Tensor::zeros(out_shape, conv.q_out);
-    let shift = conv.out_shift();
-    let cpg = conv.ch_per_group();
-    let fpg = conv.filters_per_group();
-    let klen = conv.kernel * conv.kernel * cpg;
-    let n_pix = out_shape.h * out_shape.w;
-    let mut cols: Vec<Vec<i16>> = vec![vec![0i16; klen]; p_blk];
-
-    for g in 0..conv.groups {
-        let ch0 = g * cpg;
-        let n0 = g * fpg;
-        let mut pix = 0usize;
-        while pix < n_pix {
-            let pcnt = p_blk.min(n_pix - pix);
-            for (pi, col) in cols.iter_mut().take(pcnt).enumerate() {
-                let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
-                fill_patch_q15(x, oy, ox, conv.kernel, conv.pad, ch0, cpg, col, mon);
-            }
-            let col_refs: Vec<&[i16]> = cols[..pcnt].iter().map(|c| c.as_slice()).collect();
-            let mut f0 = 0usize;
-            while f0 < fpg {
-                let fcnt = f_blk.min(fpg - f0);
-                let w_rows: Vec<&[i8]> = (0..fcnt)
-                    .map(|fi| {
-                        let n = n0 + f0 + fi;
-                        &conv.weights[n * klen..(n + 1) * klen]
-                    })
-                    .collect();
-                let biases: Vec<i32> = (0..fcnt).map(|fi| conv.bias[n0 + f0 + fi]).collect();
-                let acc = mat_mult_block(&w_rows, &col_refs, &biases, mon);
-                for fi in 0..fcnt {
-                    let n = n0 + f0 + fi;
-                    for pi in 0..pcnt {
-                        let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
-                        mon.alu(2);
-                        mon.st8(1);
-                        y.set(oy, ox, n, sat_i8(requantize(acc[fi * pcnt + pi], shift)));
-                    }
-                }
-                f0 += fcnt;
-            }
-            pix += pcnt;
-        }
-    }
+    let mut y = Tensor::zeros(conv.output_shape(&x.shape), conv.q_out);
+    let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+    let mut cols = vec![0i16; p_blk * klen];
+    let mut acc = vec![0i32; p_blk * f_blk];
+    crate::nn::plan::conv_blocked_into(conv, x, &mut y, p_blk, f_blk, &mut cols, &mut acc, mon);
     y
 }
 

@@ -105,6 +105,87 @@ pub fn geomean(xs: &[f64]) -> Option<f64> {
     Some((xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp())
 }
 
+/// Fixed-capacity uniform reservoir (Vitter's Algorithm R), seeded and
+/// deterministic via [`crate::util::prng::Rng`]. Under capacity it keeps
+/// every sample verbatim — summaries over a short history are exact —
+/// and past capacity each of the `seen` values has equal probability of
+/// being retained, so a long-lived consumer (the inference server's
+/// latency statistics) holds O(capacity) memory under unbounded traffic.
+#[derive(Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    /// Exact running sum over ALL offered values (the mean never needs
+    /// to be approximated — only order statistics do).
+    sum: f64,
+    rng: crate::util::prng::Rng,
+    samples: Vec<f64>,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Self {
+            cap,
+            seen: 0,
+            sum: 0.0,
+            rng: crate::util::prng::Rng::new(seed),
+            samples: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Offer one observation. O(1), allocation-free once the reservoir
+    /// has filled its pre-reserved capacity.
+    pub fn offer(&mut self, v: f64) {
+        self.seen += 1;
+        self.sum += v;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Algorithm R: replace a random slot with probability cap/seen
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Total observations offered (≥ retained sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Exact mean over every value ever offered (not a subsample
+    /// estimate). 0.0 before the first observation.
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    /// Retained sample count (== min(seen, capacity)).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The retained samples (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Mutable view for in-place summarization (e.g. a sorting
+    /// percentile pass) — reordering does not bias the reservoir.
+    pub fn samples_mut(&mut self) -> &mut [f64] {
+        &mut self.samples
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +240,63 @@ mod tests {
         let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
         let down: Vec<f64> = xs.iter().map(|x| -x).collect();
         assert!(pearson(&xs, &down).unwrap() < -0.999);
+    }
+
+    #[test]
+    fn reservoir_is_exact_under_capacity() {
+        let mut r = Reservoir::new(100, 7);
+        for v in 1..=60 {
+            r.offer(v as f64);
+        }
+        assert_eq!(r.seen(), 60);
+        assert_eq!(r.len(), 60);
+        // verbatim history: every offered value retained, in order
+        let want: Vec<f64> = (1..=60).map(|v| v as f64).collect();
+        assert_eq!(r.samples(), &want[..]);
+        assert!((r.mean() - 30.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_mean_is_exact_past_capacity() {
+        let mut r = Reservoir::new(8, 3);
+        for v in 1..=1000 {
+            r.offer(v as f64);
+        }
+        // the retained set is a subsample, but the mean is the stream's
+        assert_eq!(r.len(), 8);
+        assert!((r.mean() - 500.5).abs() < 1e-9);
+        assert_eq!(Reservoir::new(4, 1).mean(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_memory_is_bounded_and_deterministic() {
+        let cap = 256;
+        let n = 100_000u64;
+        let mut a = Reservoir::new(cap, 0x5EED);
+        let mut b = Reservoir::new(cap, 0x5EED);
+        let cap0 = a.samples.capacity();
+        for v in 0..n {
+            a.offer(v as f64);
+            b.offer(v as f64);
+        }
+        assert_eq!(a.len(), cap);
+        assert_eq!(a.seen(), n);
+        assert_eq!(a.samples.capacity(), cap0, "reservoir must never regrow");
+        // seeded PRNG → identical retained set on identical input
+        assert_eq!(a.samples(), b.samples());
+        // the retained set stays representative of the uniform stream:
+        // its mean lands near the stream mean
+        let mean = a.samples().iter().sum::<f64>() / cap as f64;
+        let stream_mean = (n - 1) as f64 / 2.0;
+        assert!(
+            (mean - stream_mean).abs() < 0.15 * stream_mean,
+            "reservoir mean {mean} vs stream mean {stream_mean}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn reservoir_rejects_zero_capacity() {
+        Reservoir::new(0, 1);
     }
 }
