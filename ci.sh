@@ -11,6 +11,12 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+echo "==> gate: cargo fmt --check"
+cargo fmt --check
+
+echo "==> gate: cargo clippy --release -- -D warnings"
+cargo clippy --release -- -D warnings
+
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
@@ -18,14 +24,17 @@ echo "==> tier-1: cargo test -q"
 cargo test -q
 
 echo "==> smoke: convbench tune --objective latency --quick"
-# exercises the schedule auto-tuner end to end on the quick plans:
-# exits non-zero if any tuned schedule regresses vs the best fixed one
+# exercises the schedule auto-tuner end to end on the quick plans AND the
+# model zoo — including the residual mcunet-res-* graphs, whose per-node
+# cache keys fold the skip topology; exits non-zero if any tuned
+# schedule regresses vs the best fixed one
 ./target/release/convbench tune --objective latency --quick --out results/ci
 
 echo "==> smoke: warm-cache replay (gated: must re-score nothing)"
-# --expect-warm makes the run exit non-zero if the Table 2 comparison
-# scored any candidate (analytic or simulated) or hit the cache zero
-# times — i.e. it actually asserts the warm-replay invariant instead of
+# --expect-warm makes the run exit non-zero if the Table 2 comparison or
+# the zoo (residual graphs included) scored any candidate (analytic or
+# simulated) or hit the cache zero times — i.e. it actually asserts the
+# warm-replay invariant, per-node topology keys included, instead of
 # just printing it
 ./target/release/convbench tune --objective latency --quick --out results/ci --expect-warm
 

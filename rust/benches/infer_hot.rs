@@ -33,10 +33,10 @@ use std::time::Instant;
 
 use convbench::analytic::Primitive;
 use convbench::mcu::McuConfig;
-use convbench::models::mcunet;
-use convbench::nn::{NoopMonitor, Tensor, Workspace};
+use convbench::models::{mcunet, mcunet_residual};
+use convbench::nn::{ExecPlan, NoopMonitor, Tensor, Workspace};
 use convbench::report::write_report;
-use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+use convbench::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
 use convbench::util::bench::Bench;
 use convbench::util::json::Json;
 use convbench::util::prng::Rng;
@@ -144,6 +144,38 @@ fn main() {
     }
     let tuned_legacy_allocs_per_inference = (allocations() - tl0) / iters;
 
+    // --- 2b. residual (skip-connection) graph: zero allocations too ---
+    // the DAG engine's liveness-planned arena keeps the skip operand
+    // resident without any per-request allocation; pinned after proving
+    // bit-exactness + event-stream identity vs the reference executor
+    let res = mcunet_residual(Primitive::DepthwiseSeparable, 42);
+    let (rsched, rcold) = tune_graph_shape(&res, &cfg, Objective::Latency, &mut cache);
+    assert_eq!(rcold.evaluations, 0, "residual tune must not run the simulator");
+    let mut rws = rsched.workspace_graph(&res);
+    let mut rx = Tensor::zeros(res.input_shape, res.input_q);
+    Rng::new(9).fill_i8(&mut rx.data, -64, 63);
+    {
+        use convbench::nn::CountingMonitor;
+        let mut ma = CountingMonitor::new();
+        let want = rsched.run_graph(&res, &rx, &mut ma);
+        let mut mb = CountingMonitor::new();
+        let got = rsched.run_in(&rx, &mut rws, &mut mb);
+        assert_eq!(want.data, got.data, "residual tuned run_in must stay bit-exact");
+        assert_eq!(
+            ma.counts, mb.counts,
+            "residual tuned run_in must emit the identical event stream"
+        );
+    }
+    let r_alloc0 = allocations();
+    for _ in 0..iters {
+        black_box(rsched.run_in(&rx, &mut rws, &mut NoopMonitor).data[0]);
+    }
+    let residual_steady_allocs = allocations() - r_alloc0;
+    assert_eq!(
+        residual_steady_allocs, 0,
+        "steady-state residual run_in performed {residual_steady_allocs} heap allocations"
+    );
+
     // --- 3. throughput ------------------------------------------------
     b.run("infer/forward_in/simd", || {
         model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]
@@ -159,6 +191,9 @@ fn main() {
     });
     b.run("infer/tuned_run_legacy", || {
         sched.run(&model, &x, &mut NoopMonitor).data[0]
+    });
+    b.run("infer/residual_run_in", || {
+        rsched.run_in(&rx, &mut rws, &mut NoopMonitor).data[0]
     });
 
     // --- 4. warm analytic tune ----------------------------------------
@@ -182,8 +217,35 @@ fn main() {
     let scalar_ns = mean_ns("infer/forward_in/scalar");
     let tuned_in_ns = mean_ns("infer/tuned_run_in");
     let tuned_legacy_ns = mean_ns("infer/tuned_run_legacy");
+    let residual_in_ns = mean_ns("infer/residual_run_in");
     let plan = ws.plan();
     let tplan = tws.plan();
+    let rplan = rws.plan();
+
+    // per-model activation-arena figures (liveness-packed vs the legacy
+    // ping-pong provisioning) across the whole zoo — the memory baseline
+    // future PRs regress against
+    let mut arena_fields: Vec<(String, Json)> = Vec::new();
+    for prim in Primitive::ALL {
+        let m = mcunet(prim, 42);
+        let wp = ExecPlan::compile_default(&m, true).workspace_plan();
+        arena_fields.push((
+            m.name.clone(),
+            Json::obj()
+                .field("peak_arena_bytes", wp.activation_bytes)
+                .field("pingpong_bytes", wp.pingpong_bytes),
+        ));
+    }
+    for prim in Primitive::ALL {
+        let g = mcunet_residual(prim, 42);
+        let wp = ExecPlan::compile_graph_default(&g, true).workspace_plan();
+        arena_fields.push((
+            g.name.clone(),
+            Json::obj()
+                .field("peak_arena_bytes", wp.activation_bytes)
+                .field("pingpong_bytes", wp.pingpong_bytes),
+        ));
+    }
 
     let json = Json::obj()
         .field("model", model.name.as_str())
@@ -214,7 +276,17 @@ fn main() {
         .field("workspace_widened_weight_bytes", plan.widened_weight_bytes)
         .field("tuned_workspace_total_bytes", tplan.total_bytes())
         .field("tuned_workspace_im2col_bytes", tplan.im2col_bytes)
-        .field("tuned_workspace_acc_bytes", tplan.acc_bytes);
+        .field("tuned_workspace_acc_bytes", tplan.acc_bytes)
+        .field("workspace_pingpong_bytes", plan.pingpong_bytes)
+        .field("residual_run_in_ns", residual_in_ns)
+        .field(
+            "residual_steady_state_allocs_per_inference",
+            residual_steady_allocs / iters,
+        )
+        .field("residual_workspace_total_bytes", rplan.total_bytes())
+        .field("residual_peak_arena_bytes", rplan.activation_bytes)
+        .field("residual_pingpong_bytes", rplan.pingpong_bytes)
+        .field("peak_arena_bytes_per_model", Json::Obj(arena_fields));
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
     println!(
@@ -230,6 +302,10 @@ fn main() {
         cold.analytic,
         warm_tune_us,
         plan.summary()
+    );
+    println!(
+        "residual: tuned run_in {residual_in_ns:.0} ns (0 allocs); arena {} B vs ping-pong {} B",
+        rplan.activation_bytes, rplan.pingpong_bytes
     );
     println!("wrote results/BENCH_infer.json");
 }

@@ -199,8 +199,10 @@ impl FloatModel {
     /// Deploy and plan the per-model inference arena in one step. The
     /// returned [`Workspace`] drives [`Model::forward_in`] (zero heap
     /// allocations in steady state), and its plan is the deployment's
-    /// **exact** peak-RAM report — the byte-true version of the
-    /// [`crate::mcu::footprint`] SRAM estimate.
+    /// peak-RAM report: the liveness-packed activation arena (printed
+    /// next to the legacy ping-pong figure) — the byte-true version of
+    /// the [`crate::mcu::footprint`] SRAM estimate, which now runs the
+    /// same liveness planner.
     pub fn deploy_with_workspace(&self, calib: &[Vec<f32>]) -> (Model, Workspace) {
         let model = self.deploy(calib);
         let workspace = Workspace::new(&model);

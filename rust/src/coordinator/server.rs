@@ -3,8 +3,9 @@
 //! engine (zero-overhead [`NoopMonitor`]); per-request latency and
 //! simulated MCU energy are accounted from a one-time profile of the
 //! deployed model. Models can be registered with their paper-default
-//! schedule ([`InferenceServer::start`]) or auto-tuned per layer at
-//! registration ([`InferenceServer::start_tuned`]).
+//! schedule ([`InferenceServer::start`]), auto-tuned per layer at
+//! registration ([`InferenceServer::start_tuned`]), or as residual DAG
+//! graphs tuned per node ([`InferenceServer::start_graphs_tuned`]).
 //!
 //! Every registered model — tuned or not — is compiled once into an
 //! [`ExecPlan`] at registration, and every worker plans one arena per
@@ -26,8 +27,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, ExecPlan, Model, NoopMonitor, Tensor, Workspace};
-use crate::tuner::{tune_model_shape, Objective, TunedSchedule, TuningCache};
+use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, Tensor, Workspace};
+use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TunedSchedule, TuningCache};
 use crate::util::stats::Reservoir;
 
 /// Retained latency samples (Algorithm R past this point): enough for
@@ -77,14 +78,15 @@ pub struct ServerStats {
 }
 
 struct Deployed {
-    model: Model,
     /// One-time simulated measurement (SIMD path, or the tuned schedule).
     mcu: Measurement,
-    /// Tuned per-layer schedule, kept for reporting; `None` means the
+    /// Tuned per-node schedule, kept for reporting; `None` means the
     /// paper-default SIMD schedule. Execution never consults this —
     /// both cases compile into `plan` at registration.
     schedule: Option<TunedSchedule>,
-    /// The compiled executor every request runs through.
+    /// The compiled executor every request runs through — linear models
+    /// and residual graphs alike; its embedded input shape/format is
+    /// the request contract, so the registry needs no model copy.
     plan: ExecPlan,
 }
 
@@ -114,10 +116,7 @@ impl InferenceServer {
         for m in models {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
             let plan = ExecPlan::compile_default(&m, true);
-            registry.insert(
-                m.name.clone(),
-                Deployed { model: m, mcu, schedule: None, plan },
-            );
+            registry.insert(m.name.clone(), Deployed { mcu, schedule: None, plan });
         }
         Self::spawn(registry, n_workers)
     }
@@ -140,10 +139,29 @@ impl InferenceServer {
             let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile(&m);
-            registry.insert(
-                m.name.clone(),
-                Deployed { model: m, mcu, schedule: Some(schedule), plan },
-            );
+            registry.insert(m.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
+        }
+        Self::spawn(registry, n_workers)
+    }
+
+    /// Deploy residual (or any DAG) graph models with per-node
+    /// auto-tuned schedules — the graph analog of
+    /// [`InferenceServer::start_tuned`]. The compiled plans run through
+    /// the exact same worker/arena machinery: a skip-connection model
+    /// serves with zero per-request allocations like any chain.
+    pub fn start_graphs_tuned(
+        graphs: Vec<Graph>,
+        n_workers: usize,
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+    ) -> Self {
+        let mut registry = HashMap::new();
+        for g in graphs {
+            let (schedule, _) = tune_graph_shape(&g, cfg, objective, cache);
+            let mcu = schedule.as_measurement();
+            let plan = schedule.compile_graph(&g);
+            registry.insert(g.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
         }
         Self::spawn(registry, n_workers)
     }
@@ -333,17 +351,17 @@ fn serve_one(
     let deployed = models
         .get(&req.model)
         .ok_or_else(|| format!("unknown model {:?}", req.model))?;
-    let m = &deployed.model;
-    if req.input.len() != m.input_shape.len() {
+    let plan = &deployed.plan;
+    if req.input.len() != plan.input_shape().len() {
         return Err(format!(
             "input length {} != expected {}",
             req.input.len(),
-            m.input_shape.len()
+            plan.input_shape().len()
         ));
     }
     let Request { id, model, input } = req;
     // the request buffer becomes the input tensor — no clone
-    let x = Tensor::from_vec(m.input_shape, m.input_q, input);
+    let x = Tensor::from_vec(plan.input_shape(), plan.input_q(), input);
     // the single engine path: the compiled plan (fixed or tuned) runs
     // inside the worker's pre-planned arena — zero heap allocations on
     // the inference; only the reply logits are copied out
@@ -571,14 +589,13 @@ mod tests {
         let models = vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)];
         let mut cache = TuningCache::in_memory();
         let mut registry = HashMap::new();
+        let mut reference: HashMap<String, Model> = HashMap::new();
         for m in models {
             let (schedule, _) = tune_model_shape(&m, &cfg, Objective::Latency, &mut cache);
             let plan = schedule.compile(&m);
             let mcu = schedule.as_measurement();
-            registry.insert(
-                m.name.clone(),
-                Deployed { model: m, mcu, schedule: Some(schedule), plan },
-            );
+            registry.insert(m.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
+            reference.insert(m.name.clone(), m);
         }
         // one untuned deployment in the same registry
         let plain = mcunet(Primitive::DepthwiseSeparable, 1);
@@ -587,26 +604,58 @@ mod tests {
             Deployed {
                 mcu: crate::harness::measure_model_analytic(&plain, true, &cfg),
                 plan: ExecPlan::compile_default(&plain, true),
-                model: plain,
                 schedule: None,
             },
         );
+        reference.insert(plain.name.clone(), plain);
         let mut arenas = plan_worker_arenas(&registry);
         assert_eq!(arenas.len(), registry.len(), "every model gets an arena");
         let mut rng = Rng::new(11);
         for round in 0..3 {
             for (name, d) in &registry {
-                let mut input = vec![0i8; d.model.input_shape.len()];
+                let model = &reference[name];
+                let mut input = vec![0i8; model.input_shape.len()];
                 rng.fill_i8(&mut input, -64, 63);
                 let req = Request { id: round, model: name.clone(), input: input.clone() };
                 let got = serve_one(&registry, &mut arenas, req, Instant::now()).unwrap();
-                let x = Tensor::from_vec(d.model.input_shape, d.model.input_q, input);
+                let x = Tensor::from_vec(model.input_shape, model.input_q, input);
                 let want = match &d.schedule {
-                    Some(s) => s.run(&d.model, &x, &mut NoopMonitor),
-                    None => d.model.forward(&x, true, &mut NoopMonitor),
+                    Some(s) => s.run(model, &x, &mut NoopMonitor),
+                    None => model.forward(&x, true, &mut NoopMonitor),
                 };
                 assert_eq!(got.logits, want.data, "{name} round {round}");
             }
         }
+    }
+
+    #[test]
+    fn residual_graph_server_serves_bit_exact() {
+        // skip-connection models register, tune and serve through the
+        // same worker/arena machinery as the linear zoo
+        use crate::models::mcunet_residual;
+        use crate::tuner::{Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let graphs: Vec<crate::nn::Graph> =
+            Primitive::ALL.iter().map(|&p| mcunet_residual(p, 3)).collect();
+        let reference = graphs.clone();
+        let mut cache = TuningCache::in_memory();
+        let s = InferenceServer::start_graphs_tuned(graphs, 2, &cfg, Objective::Latency, &mut cache);
+        let mut rng = Rng::new(17);
+        for (i, g) in reference.iter().enumerate() {
+            let mut input = vec![0i8; g.input_shape.len()];
+            rng.fill_i8(&mut input, -64, 63);
+            let r = s
+                .infer(Request { id: i as u64, model: g.name.clone(), input: input.clone() })
+                .unwrap();
+            assert_eq!(r.logits.len(), 10, "{}", g.name);
+            assert!(r.mcu_latency_s > 0.0 && r.mcu_energy_mj > 0.0);
+            // tuned schedules are bit-exact with the untuned engine
+            let x = Tensor::from_vec(g.input_shape, g.input_q, input);
+            let want = g.forward(&x, true, &mut NoopMonitor);
+            assert_eq!(r.logits, want.data, "{}", g.name);
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, Primitive::ALL.len() as u64);
+        assert_eq!(stats.errors, 0);
     }
 }

@@ -14,12 +14,18 @@
 //! * [`nn`] — an NNoM-equivalent int8 inference engine with scalar and
 //!   SIMD (`__SMLAD`-semantics) code paths for all five primitives, an
 //!   analytic op-count engine deriving each kernel's exact micro-op mix
-//!   in closed form from shapes ([`nn::counts`]), and **one** compiled
+//!   in closed form from shapes ([`nn::counts`]), a DAG graph IR
+//!   ([`nn::Graph`]: explicit tensor value ids, residual
+//!   [`nn::ResidualAdd`] joins with requantization, fan-out; linear
+//!   [`nn::Model`]s lower 1:1 into chain graphs), and **one** compiled
 //!   execution path for every schedule: [`nn::plan::ExecPlan`] resolves
-//!   per-layer kernel/lowering dispatch once at deploy time and runs
-//!   fixed *and* tuned schedules inside the [`nn::workspace`] scratch
-//!   arena with zero steady-state allocations and a byte-exact peak-RAM
-//!   plan (`Model::forward_in`, `TunedSchedule::run_in`).
+//!   per-node kernel/lowering dispatch once at deploy time, plans the
+//!   activation arena by value liveness ([`nn::arena`]: greedy best-fit
+//!   offsets; degenerates to ≤ ping-pong on chains) and runs fixed
+//!   *and* tuned schedules inside the [`nn::workspace`] scratch arena
+//!   with zero steady-state allocations and a byte-exact peak-RAM plan
+//!   (`Model::forward_in`, `Graph::forward_in`,
+//!   `TunedSchedule::run_in`).
 //! * [`mcu`] — a Cortex-M4 instruction-cost + power/energy simulator
 //!   (the substitution for the paper's STM32F401-RE testbed).
 //! * [`analytic`] — Table 1 closed forms (parameters / theoretical MACs).

@@ -268,8 +268,8 @@ fn cmd_all(cfg: &McuConfig, quick: bool, out_dir: &str) {
 /// even the shape arithmetic.
 fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     use convbench::harness::{tuned_csv, tuned_markdown, tuned_vs_fixed};
-    use convbench::models::mcunet;
-    use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+    use convbench::models::{mcunet, mcunet_residual};
+    use convbench::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
 
     let objective = match Objective::parse(args.get("objective").unwrap_or("latency")) {
         Ok(o) => o,
@@ -302,11 +302,27 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     let hits: usize = rows.iter().map(|r| r.stats.cache_hits).sum();
     let regressions = rows.iter().filter(|r| !r.tuned_is_never_worse()).count();
 
-    // the model zoo under the requested --objective, layer by layer
+    // the model zoo under the requested --objective, node by node —
+    // linear variants plus the residual (skip-connection) graphs, so the
+    // per-node cache keys (topology included) get cold+warm coverage
     println!("MCU-Net zoo — objective {}\n", objective.name());
+    let mut zoo_scored = 0usize;
+    let mut zoo_evals = 0usize;
+    let mut zoo_hits = 0usize;
     for prim in Primitive::ALL {
         let model = mcunet(prim, 42);
-        let (schedule, _) = tune_model_shape(&model, cfg, objective, &mut cache);
+        let (schedule, s) = tune_model_shape(&model, cfg, objective, &mut cache);
+        zoo_scored += s.analytic;
+        zoo_evals += s.evaluations;
+        zoo_hits += s.cache_hits;
+        println!("{}", schedule.to_markdown());
+    }
+    for prim in Primitive::ALL {
+        let graph = mcunet_residual(prim, 42);
+        let (schedule, s) = tune_graph_shape(&graph, cfg, objective, &mut cache);
+        zoo_scored += s.analytic;
+        zoo_evals += s.evaluations;
+        zoo_hits += s.cache_hits;
         println!("{}", schedule.to_markdown());
     }
 
@@ -333,47 +349,60 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     }
     // --expect-warm: CI's warm-replay gate — a run against a cache that
     // should already hold every key must not score anything (cache
-    // keying drift would otherwise pass silently; see ci.sh)
-    if args.flag("expect-warm") && (scored > 0 || evals > 0 || hits == 0) {
+    // keying drift would otherwise pass silently; see ci.sh). The gate
+    // covers the Table 2 comparison AND the model zoo, residual graphs
+    // included, so the per-node topology keys get warm-replay coverage.
+    let gate_scored = scored + zoo_scored;
+    let gate_evals = evals + zoo_evals;
+    let gate_hits = hits + zoo_hits;
+    if args.flag("expect-warm") && (gate_scored > 0 || gate_evals > 0 || gate_hits == 0) {
         eprintln!(
-            "ERROR: --expect-warm but the Table 2 comparison re-scored {scored} candidates \
-             ({evals} simulator evals, {hits} cache hits) — tuning cache keying regressed"
+            "ERROR: --expect-warm but the Table 2 + zoo run re-scored {gate_scored} candidates \
+             ({gate_evals} simulator evals, {gate_hits} cache hits) — tuning cache keying \
+             regressed"
         );
         std::process::exit(1);
     }
 }
 
-/// `convbench profile --model mcunet-shift [--scalar]` — per-layer
+/// `convbench profile --model mcunet-shift [--scalar]` — per-node
 /// simulated cycle/energy/memory breakdown of a zoo model (the NNoM
-/// `model_stat()` equivalent on the simulated MCU).
+/// `model_stat()` equivalent on the simulated MCU). Covers the linear
+/// variants and the residual `mcunet-res-*` graphs; every model profiles
+/// through the graph engine, and the RAM report prints the liveness
+/// arena next to the legacy largest×2 ping-pong figure.
 fn cmd_profile(args: &Args, cfg: &McuConfig) {
     use convbench::analytic::Primitive;
-    use convbench::mcu::{footprint, measure, PathClass};
-    use convbench::models::mcunet;
-    use convbench::nn::Tensor;
+    use convbench::mcu::{footprint_graph, measure, PathClass};
+    use convbench::models::{mcunet, mcunet_residual};
+    use convbench::nn::{Graph, Tensor};
 
     let name = args.get("model").unwrap_or("mcunet-standard");
     let simd = !args.flag("scalar");
-    let model = Primitive::ALL
+    let graph = Primitive::ALL
         .iter()
-        .map(|&p| mcunet(p, 42))
-        .find(|m| m.name == name)
+        .map(|&p| Graph::from_model(&mcunet(p, 42)))
+        .chain(Primitive::ALL.iter().map(|&p| mcunet_residual(p, 42)))
+        .find(|g| g.name == name)
         .unwrap_or_else(|| {
-            eprintln!("unknown model {name:?}; available: mcunet-<standard|grouped|dws|shift|add>");
+            eprintln!(
+                "unknown model {name:?}; available: mcunet-<standard|grouped|dws|shift|add> \
+                 or mcunet-res-<standard|grouped|dws|shift|add>"
+            );
             std::process::exit(2);
         });
-    let x = Tensor::zeros(model.input_shape, model.input_q);
-    let (_, profiles) = model.forward_profiled(&x, simd);
+    let x = Tensor::zeros(graph.input_shape, graph.input_q);
+    let (_, profiles) = graph.forward_profiled(&x, simd);
     println!(
-        "{name} ({} path) — per-layer simulated profile @ {:.0} MHz\n",
+        "{name} ({} path) — per-node simulated profile @ {:.0} MHz\n",
         if simd { "SIMD" } else { "scalar" },
         cfg.freq_mhz
     );
     println!("| layer | cycles | latency (ms) | energy (µJ) | mem accesses | eff. MACs |");
     println!("|---|---|---|---|---|---|");
     let mut total = Vec::new();
-    for (prof, layer) in profiles.iter().zip(&model.layers) {
-        let path = if simd && layer.has_simd() {
+    for (prof, node) in profiles.iter().zip(&graph.nodes) {
+        let path = if simd && node.op.has_simd() {
             PathClass::Simd
         } else {
             PathClass::Scalar
@@ -399,25 +428,33 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         sum.mem_accesses,
         sum.effective_macs
     );
-    let mem = footprint(&model);
+    let mem = footprint_graph(&graph);
     println!(
         "\nflash {:.1} KiB, SRAM {:.1} KiB — fits STM32F401: {}",
         mem.flash_bytes as f64 / 1024.0,
         mem.sram_bytes as f64 / 1024.0,
         mem.fits_f401()
     );
-    // the workspace plan is the byte-exact version of the SRAM estimate
-    let ws = convbench::nn::Workspace::new(&model);
-    println!("exact (paper-default schedules) {}", ws.plan().summary());
+    // the workspace plan is the byte-exact version of the SRAM estimate:
+    // liveness-packed arena vs the legacy ping-pong provisioning
+    let ws = convbench::nn::Workspace::new_graph(&graph);
+    let wp = ws.plan();
+    println!("exact (paper-default schedules) {}", wp.summary());
+    println!(
+        "liveness arena {} B vs ping-pong {} B (Δ {} B)",
+        wp.activation_bytes,
+        wp.pingpong_bytes,
+        wp.pingpong_bytes as i64 - wp.activation_bytes as i64
+    );
 
     // tuned deployment: reconcile the engine's arena report with the
     // schedule's own peak-RAM claim (the test suite pins arena ≥ claim
-    // and per-layer scratch parity with the tuner's RAM model)
+    // and per-node scratch parity with the tuner's RAM model)
     use convbench::nn::ExecPlan;
-    use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+    use convbench::tuner::{tune_graph_shape, Objective, TuningCache};
     let mut cache = TuningCache::in_memory();
-    let (sched, _) = tune_model_shape(&model, cfg, Objective::Latency, &mut cache);
-    let plan = ExecPlan::compile(&model, &sched.candidates());
+    let (sched, _) = tune_graph_shape(&graph, cfg, Objective::Latency, &mut cache);
+    let plan = ExecPlan::compile_graph(&graph, &sched.candidates());
     let wp = plan.workspace_plan();
     println!("tuned ({} objective) {}", sched.objective, wp.summary());
     println!(

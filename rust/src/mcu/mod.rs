@@ -16,5 +16,5 @@ pub mod power;
 pub use calib::kappa;
 pub use cycles::{cycles, ideal_cycles, Kappa, OptLevel, PathClass};
 pub use device::{combine, measure, McuConfig, Measurement};
-pub use memory::{footprint, MemoryReport, F401_FLASH_BYTES, F401_SRAM_BYTES};
+pub use memory::{footprint, footprint_graph, MemoryReport, F401_FLASH_BYTES, F401_SRAM_BYTES};
 pub use power::{PowerModel, F401_MAX_MHZ};

@@ -1,12 +1,15 @@
 //! The model zoo: single-layer experiment models (one per primitive, used
-//! by the sweeps) and "MCU-Net" — a small CIFAR-shaped CNN whose
+//! by the sweeps), "MCU-Net" — a small CIFAR-shaped CNN whose
 //! convolution stages can be instantiated with any of the five primitives
-//! (the end-to-end deployment workload).
+//! (the end-to-end deployment workload) — and its residual variant
+//! ([`mcunet_residual`]): MCUNet-style blocks with skip connections
+//! joined by requantized [`crate::nn::ResidualAdd`] nodes, expressed in
+//! the DAG graph IR.
 
 use crate::analytic::Primitive;
 use crate::nn::{
-    uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
-    QuantDepthwise, Shape, ShiftConv,
+    uniform_shifts, AddConv, BatchNorm, BnLayer, Graph, Layer, Model, QuantConv, QuantDense,
+    QuantDepthwise, Shape, ShiftConv, ValueId,
 };
 use crate::quant::QParam;
 use crate::util::prng::Rng;
@@ -234,6 +237,127 @@ pub fn mcunet_with(
     m
 }
 
+/// Residual MCU-Net: the skip-connection variant of [`mcunet`], in the
+/// DAG graph IR. Two MCUNet-style residual blocks (a channel-preserving
+/// body built from `prim`, joined back onto its own input by a
+/// requantized residual add), around the same stem/head as the linear
+/// zoo:
+///
+/// `stem 3→16` → pool → `resblock(prim) @16×16×16` → pool →
+/// `resblock(prim) @8×8×16` → gavg → dense 16→10.
+///
+/// The add emits one bit coarser than its operands (`Q_OUT − 1`), the
+/// realistic requantization choice that keeps the join from saturating
+/// pervasively; the head consumes that format.
+pub fn mcunet_residual(prim: Primitive, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0x5E51_DDA7);
+    let mut g = Graph::new(
+        format!("mcunet-res-{}", prim.name()),
+        Shape::new(32, 32, 3),
+        QParam::new(Q_IN),
+    );
+    // stem: always a standard conv (first layer stays dense, as in the
+    // source architectures)
+    let v = g.input();
+    let stem = make_conv(&LayerParams::new(1, 3, 32, 3, 16), 1, Q_IN, &mut rng);
+    let v = g.layer(v, Layer::Conv(stem));
+    let v = g.layer(v, Layer::Relu);
+    let v = g.layer(v, Layer::MaxPool2); // 16×16×16 @ Q_OUT
+
+    let v = push_residual_block(&mut g, v, prim, &LayerParams::new(2, 3, 16, 16, 16), &mut rng);
+    let v = g.layer(v, Layer::Relu);
+    let v = g.layer(v, Layer::MaxPool2); // 8×8×16 @ Q_OUT − 1
+
+    let v = push_residual_block2(&mut g, v, prim, &LayerParams::new(2, 3, 8, 16, 16), &mut rng);
+    let v = g.layer(v, Layer::Relu);
+    let v = g.layer(v, Layer::GlobalAvgPool(None)); // 1×1×16
+
+    let mut w = vec![0i8; 16 * 10];
+    rng.fill_i8(&mut w, -64, 63);
+    g.layer(
+        v,
+        Layer::Dense(QuantDense {
+            in_features: 16,
+            out_features: 10,
+            weights: w,
+            bias: (0..10).map(|_| rng.range(0, 256) as i32 - 128).collect(),
+            q_in: QParam::new(Q_OUT - 2),
+            q_w: QParam::new(Q_W),
+            q_out: QParam::new(Q_OUT),
+        }),
+    );
+    g
+}
+
+/// One residual block: a channel-preserving body built from `prim`
+/// (consuming `q_in`-format activations, emitting `Q_OUT`), joined back
+/// onto the block input by a requantized add at `q_add`.
+fn push_residual_body(
+    g: &mut Graph,
+    skip: ValueId,
+    prim: Primitive,
+    p: &LayerParams,
+    q_in: i32,
+    q_add: i32,
+    rng: &mut Rng,
+) -> ValueId {
+    assert_eq!(p.in_channels, p.filters, "residual body must preserve channels");
+    let mut v = skip;
+    match prim {
+        Primitive::Standard => {
+            v = g.layer(v, Layer::Conv(make_conv(p, 1, q_in, rng)));
+        }
+        Primitive::Grouped => {
+            v = g.layer(v, Layer::Conv(make_conv(p, p.groups, q_in, rng)));
+        }
+        Primitive::DepthwiseSeparable => {
+            v = g.layer(v, Layer::Depthwise(make_depthwise(p, q_in, rng)));
+            v = g.layer(v, Layer::Conv(make_pointwise(p.in_channels, p.filters, q_in, rng)));
+        }
+        Primitive::Shift => {
+            v = g.layer(v, Layer::Shift(make_shift(p, q_in, rng)));
+        }
+        Primitive::Add => {
+            v = g.layer(v, Layer::AddConv(make_add(p, q_in, rng)));
+            let bn = BatchNorm {
+                gamma: vec![1.0; p.filters],
+                beta: vec![0.7; p.filters],
+                mean: vec![-1.5; p.filters],
+                var: vec![1.0; p.filters],
+                eps: 1e-5,
+            };
+            v = g.layer(
+                v,
+                Layer::Bn(BnLayer::quantize(&bn, QParam::new(Q_OUT), QParam::new(Q_OUT))),
+            );
+        }
+    }
+    g.add(skip, v, QParam::new(q_add))
+}
+
+fn push_residual_block(
+    g: &mut Graph,
+    skip: ValueId,
+    prim: Primitive,
+    p: &LayerParams,
+    rng: &mut Rng,
+) -> ValueId {
+    // block 1 consumes the stem's Q_OUT activations; the join emits one
+    // bit coarser
+    push_residual_body(g, skip, prim, p, Q_OUT, Q_OUT - 1, rng)
+}
+
+fn push_residual_block2(
+    g: &mut Graph,
+    skip: ValueId,
+    prim: Primitive,
+    p: &LayerParams,
+    rng: &mut Rng,
+) -> ValueId {
+    // block 2 consumes block 1's coarser format and coarsens once more
+    push_residual_body(g, skip, prim, p, Q_OUT - 1, Q_OUT - 2, rng)
+}
+
 fn push_stage(m: &mut Model, prim: Primitive, p: &LayerParams, rng: &mut Rng) {
     // stages consume the previous stage's Q_OUT-format activations
     let qi = Q_OUT;
@@ -319,6 +443,80 @@ mod tests {
         for prim in Primitive::ALL {
             let m = mcunet(prim, 7);
             assert!(m.weight_bytes() < 256 * 1024, "{prim:?}: {}", m.weight_bytes());
+        }
+    }
+
+    #[test]
+    fn mcunet_residual_shapes_joins_and_parity() {
+        use crate::nn::{CountingMonitor, NodeOp};
+        for prim in Primitive::ALL {
+            let g = mcunet_residual(prim, 7);
+            let shapes = g.value_shapes();
+            assert_eq!(*shapes.last().unwrap(), Shape::new(1, 1, 10), "{prim:?}");
+            // two residual joins, each consuming a genuine skip edge
+            // (the skip operand is defined more than one step earlier)
+            let adds: Vec<(usize, &crate::nn::Node)> = g
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| matches!(n.op, NodeOp::Add(_)))
+                .collect();
+            assert_eq!(adds.len(), 2, "{prim:?}");
+            for (i, node) in &adds {
+                assert_eq!(node.inputs.len(), 2);
+                let skip = node.inputs[0];
+                assert!(*i + 1 - skip > 1, "{prim:?}: node {i} skip edge is not a skip");
+                assert_eq!(shapes[node.inputs[0]], shapes[node.inputs[1]], "{prim:?}");
+            }
+            // scalar-vs-SIMD parity through the skip-connection path,
+            // with identical per-path event streams on repeat runs
+            let mut x = crate::nn::Tensor::zeros(g.input_shape, g.input_q);
+            let mut rng = Rng::new(3);
+            rng.fill_i8(&mut x.data, -64, 63);
+            let mut ma = CountingMonitor::new();
+            let a = g.forward(&x, false, &mut ma);
+            let mut mb = CountingMonitor::new();
+            let b = g.forward(&x, true, &mut mb);
+            assert_eq!(a.data, b.data, "{prim:?} residual simd parity");
+            assert!(ma.counts.mem_accesses() > mb.counts.mem_accesses() || prim == Primitive::Add,
+                "{prim:?}: SIMD path should reduce memory accesses");
+        }
+    }
+
+    #[test]
+    fn mcunet_residual_tuned_matches_reference_golden() {
+        // tuned-vs-reference golden on the skip-connection path: the
+        // tuned schedule through the compiled engine (bound arena,
+        // dirty reuse) stays bit-exact with both the reference executor
+        // and the untuned engine output
+        use crate::mcu::McuConfig;
+        use crate::nn::NoopMonitor;
+        use crate::tuner::{tune_graph_shape, Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        for prim in Primitive::ALL {
+            let g = mcunet_residual(prim, 13);
+            let (sched, stats) = tune_graph_shape(&g, &cfg, Objective::Latency, &mut cache);
+            assert_eq!(stats.evaluations, 0, "{prim:?}");
+            let mut ws = sched.workspace_graph(&g);
+            let mut rng = Rng::new(11);
+            for trial in 0..2 {
+                let mut x = crate::nn::Tensor::zeros(g.input_shape, g.input_q);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let want = g.forward(&x, true, &mut NoopMonitor);
+                let reference = sched.run_graph(&g, &x, &mut NoopMonitor);
+                assert_eq!(want.data, reference.data, "{prim:?} trial {trial}");
+                let got = sched.run_in(&x, &mut ws, &mut NoopMonitor);
+                assert_eq!(want.data, got.data, "{prim:?} trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn mcunet_residual_weight_budget_is_mcu_scale() {
+        for prim in Primitive::ALL {
+            let g = mcunet_residual(prim, 7);
+            assert!(g.weight_bytes() < 256 * 1024, "{prim:?}: {}", g.weight_bytes());
         }
     }
 }

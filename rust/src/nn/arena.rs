@@ -1,0 +1,322 @@
+//! Liveness-driven activation-arena planning (TFLite-Micro style).
+//!
+//! The graph engine executes a [`crate::nn::Graph`] in a fixed
+//! topological order, so every activation value has a known *live
+//! interval* over the step sequence: it is written during its defining
+//! step and must survive until its last consumer runs. This module turns
+//! those intervals into two layouts:
+//!
+//! * [`best_fit_layout`] — greedy best-fit **offset assignment** into one
+//!   flat byte arena: values are placed in decreasing size order at the
+//!   lowest-offset gap left by lifetime-overlapping neighbours. This is
+//!   the packed figure an MCU deployment actually provisions, and on
+//!   residual graphs it is usually well below the legacy "two buffers of
+//!   the largest activation" ping-pong scheme.
+//! * [`slot_layout`] — first-fit interval colouring into shared buffers
+//!   ("slots"). Two values share a slot iff their lifetimes are disjoint.
+//!   On a linear chain this degenerates to exactly the classic two-slot
+//!   ping-pong (even/odd values), with each slot sized to the largest
+//!   value it hosts — so the slot total is never worse than 2× the
+//!   largest activation. The host engine executes in slot buffers (one
+//!   `Tensor` per slot keeps the kernels' `&Tensor`/`&mut Tensor`
+//!   signatures borrow-safe); the packed offsets are the deployment
+//!   report.
+//!
+//! [`plan_arena`] combines the two: it returns the slot layout for
+//! execution and whichever packing is tighter as the reported arena —
+//! the slot partition *is* a valid offset assignment, so the reported
+//! peak is ≤ the slot total by construction, and therefore ≤ ping-pong
+//! provisioning on linear chains (property-tested in `nn::plan`).
+//! [`validate_layout`] replays the step sequence against a layout,
+//! asserting that no two concurrently-live values overlap and returning
+//! the byte-exact high-water mark (equal to the reported peak, since
+//! every value is live at some step).
+
+/// One activation value's size and live interval over the topo order.
+/// `def` is the step that writes the value (the graph input is staged
+/// for step 0); `last_use` is the last step that reads it (the graph
+/// output is held through the final step so the caller can read it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ValueInterval {
+    /// Size in bytes (i8 activations: one byte per element).
+    pub size: usize,
+    /// Defining step (inclusive).
+    pub def: usize,
+    /// Last consuming step (inclusive, ≥ `def`).
+    pub last_use: usize,
+}
+
+impl ValueInterval {
+    /// Whether two values are ever live during the same step.
+    #[inline]
+    pub fn overlaps(&self, other: &ValueInterval) -> bool {
+        self.def <= other.last_use && other.def <= self.last_use
+    }
+}
+
+/// A packed arena layout: per-value byte offsets plus the total arena
+/// size (`max(offset + size)` over all values).
+#[derive(Clone, Debug)]
+pub struct ArenaLayout {
+    pub offsets: Vec<usize>,
+    pub peak_bytes: usize,
+}
+
+/// A shared-buffer layout: per-value slot index plus per-slot capacity
+/// (the largest value the slot ever hosts).
+#[derive(Clone, Debug)]
+pub struct SlotLayout {
+    pub slot_of: Vec<usize>,
+    pub caps: Vec<usize>,
+}
+
+fn peak_of(vals: &[ValueInterval], offsets: &[usize]) -> usize {
+    vals.iter()
+        .zip(offsets)
+        .map(|(v, &o)| o + v.size)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Greedy best-fit offset assignment: place values in decreasing size
+/// order (ties broken by index for determinism) at the smallest gap
+/// between lifetime-overlapping already-placed values that fits.
+pub fn best_fit_layout(vals: &[ValueInterval]) -> ArenaLayout {
+    let mut order: Vec<usize> = (0..vals.len()).collect();
+    order.sort_by(|&a, &b| vals[b].size.cmp(&vals[a].size).then(a.cmp(&b)));
+    let mut offsets = vec![0usize; vals.len()];
+    let mut placed: Vec<usize> = Vec::new();
+    for &i in &order {
+        if vals[i].size > 0 {
+            // busy byte ranges of lifetime-overlapping placed values
+            let mut busy: Vec<(usize, usize)> = placed
+                .iter()
+                .copied()
+                .filter(|&j| vals[j].size > 0 && vals[i].overlaps(&vals[j]))
+                .map(|j| (offsets[j], offsets[j] + vals[j].size))
+                .collect();
+            busy.sort_unstable();
+            let mut best: Option<(usize, usize)> = None; // (gap, offset)
+            let mut cursor = 0usize;
+            for &(s, e) in &busy {
+                if s > cursor {
+                    let gap = s - cursor;
+                    if gap >= vals[i].size && best.map(|(g, _)| gap < g).unwrap_or(true) {
+                        best = Some((gap, cursor));
+                    }
+                }
+                cursor = cursor.max(e);
+            }
+            offsets[i] = best.map(|(_, o)| o).unwrap_or(cursor);
+        }
+        placed.push(i);
+    }
+    let peak_bytes = peak_of(vals, &offsets);
+    ArenaLayout { offsets, peak_bytes }
+}
+
+/// First-fit interval colouring in def order. Correct because values are
+/// indexed in defining order: a slot is reusable exactly when its latest
+/// occupant's lifetime ended before the new value's `def`.
+pub fn slot_layout(vals: &[ValueInterval]) -> SlotLayout {
+    let mut slot_of = vec![0usize; vals.len()];
+    let mut last_use: Vec<usize> = Vec::new();
+    let mut caps: Vec<usize> = Vec::new();
+    for (v, val) in vals.iter().enumerate() {
+        let slot = match (0..last_use.len()).find(|&s| last_use[s] < val.def) {
+            Some(s) => s,
+            None => {
+                last_use.push(0);
+                caps.push(0);
+                last_use.len() - 1
+            }
+        };
+        slot_of[v] = slot;
+        last_use[slot] = val.last_use;
+        caps[slot] = caps[slot].max(val.size);
+    }
+    SlotLayout { slot_of, caps }
+}
+
+/// Plan the activation arena: the slot layout drives execution; the
+/// reported packed layout is the tighter of greedy best-fit and the slot
+/// partition itself (so the report is never worse than the slot total).
+pub fn plan_arena(vals: &[ValueInterval]) -> (ArenaLayout, SlotLayout) {
+    let slots = slot_layout(vals);
+    let best = best_fit_layout(vals);
+    let slot_total: usize = slots.caps.iter().sum();
+    let layout = if best.peak_bytes <= slot_total {
+        best
+    } else {
+        // fall back to the slot partition expressed as offsets
+        let mut slot_off = vec![0usize; slots.caps.len()];
+        let mut acc = 0usize;
+        for (off, cap) in slot_off.iter_mut().zip(&slots.caps) {
+            *off = acc;
+            acc += cap;
+        }
+        let offsets: Vec<usize> = slots.slot_of.iter().map(|&s| slot_off[s]).collect();
+        ArenaLayout { offsets, peak_bytes: slot_total }
+    };
+    (layout, slots)
+}
+
+/// Replay the step sequence against a layout: at every step, assert that
+/// no two live values overlap in the arena, and return the byte-exact
+/// high-water mark of live bytes under the layout. Panics on overlap.
+pub fn validate_layout(vals: &[ValueInterval], offsets: &[usize]) -> usize {
+    assert_eq!(vals.len(), offsets.len(), "layout/value count mismatch");
+    let n_steps = vals
+        .iter()
+        .map(|v| v.last_use + 1)
+        .max()
+        .unwrap_or(0);
+    let mut high_water = 0usize;
+    for step in 0..n_steps {
+        let live: Vec<usize> = (0..vals.len())
+            .filter(|&v| vals[v].size > 0 && vals[v].def <= step && step <= vals[v].last_use)
+            .collect();
+        for (ai, &a) in live.iter().enumerate() {
+            for &b in &live[ai + 1..] {
+                let (sa, ea) = (offsets[a], offsets[a] + vals[a].size);
+                let (sb, eb) = (offsets[b], offsets[b] + vals[b].size);
+                assert!(
+                    ea <= sb || eb <= sa,
+                    "values {a} [{sa}, {ea}) and {b} [{sb}, {eb}) are live together at step \
+                     {step} but overlap in the arena"
+                );
+            }
+        }
+        for &v in &live {
+            high_water = high_water.max(offsets[v] + vals[v].size);
+        }
+    }
+    high_water
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn chain(sizes: &[usize]) -> Vec<ValueInterval> {
+        // value 0 = input (live for step 0), value i+1 = output of step i,
+        // each consumed only by the next step; the last value is held
+        // through the final step
+        let n = sizes.len();
+        (0..n)
+            .map(|v| ValueInterval {
+                size: sizes[v],
+                def: v.saturating_sub(1),
+                last_use: if v + 1 < n { v } else { (n - 1).saturating_sub(1) },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn linear_chain_degenerates_to_ping_pong_slots() {
+        let vals = chain(&[256, 512, 512, 96, 10]);
+        let slots = slot_layout(&vals);
+        assert_eq!(slots.caps.len(), 2, "a chain needs exactly two slots");
+        // even values share slot 0, odd values slot 1
+        for (v, &s) in slots.slot_of.iter().enumerate() {
+            assert_eq!(s, v % 2, "value {v}");
+        }
+        assert_eq!(slots.caps[0], 512);
+        assert_eq!(slots.caps[1], 512);
+    }
+
+    #[test]
+    fn chain_packing_never_exceeds_ping_pong_and_validates() {
+        let mut rng = Rng::new(0xA7E4A);
+        for trial in 0..64 {
+            let n = rng.range(1, 9);
+            let sizes: Vec<usize> = (0..n).map(|_| rng.range(1, 4096)).collect();
+            let vals = chain(&sizes);
+            let (layout, slots) = plan_arena(&vals);
+            let max = *sizes.iter().max().unwrap();
+            let slot_total: usize = slots.caps.iter().sum();
+            assert!(
+                layout.peak_bytes <= slot_total,
+                "trial {trial}: packed {} > slot total {slot_total}",
+                layout.peak_bytes
+            );
+            assert!(
+                layout.peak_bytes <= 2 * max,
+                "trial {trial}: packed {} > ping-pong {}",
+                layout.peak_bytes,
+                2 * max
+            );
+            // lower bound: the largest adjacent (input, output) pair
+            let peak_pair = sizes.windows(2).map(|w| w[0] + w[1]).max().unwrap_or(max);
+            assert!(layout.peak_bytes >= peak_pair, "trial {trial}");
+            assert_eq!(validate_layout(&vals, &layout.offsets), layout.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn skip_lifetimes_share_space_once_dead() {
+        // v0 input feeds step 0 AND step 3 (a skip edge): it must stay
+        // resident across the whole body, so the packed arena holds three
+        // values at the add step — and still validates
+        let vals = vec![
+            ValueInterval { size: 100, def: 0, last_use: 3 }, // input, skip-consumed at 3
+            ValueInterval { size: 100, def: 0, last_use: 1 },
+            ValueInterval { size: 100, def: 1, last_use: 2 },
+            ValueInterval { size: 100, def: 2, last_use: 3 },
+            ValueInterval { size: 100, def: 3, last_use: 3 }, // add output
+        ];
+        let (layout, _) = plan_arena(&vals);
+        // at step 3, v0 + v3 + v4 are live: 300 bytes is the floor
+        assert!(layout.peak_bytes >= 300);
+        // and dead bodies were recycled: strictly less than sum of all
+        assert!(layout.peak_bytes < 500);
+        assert_eq!(validate_layout(&vals, &layout.offsets), layout.peak_bytes);
+    }
+
+    #[test]
+    fn random_dags_validate_against_their_own_layout() {
+        let mut rng = Rng::new(0xDA6);
+        for _ in 0..64 {
+            let n_vals = rng.range(2, 12);
+            let vals: Vec<ValueInterval> = (0..n_vals)
+                .map(|v| {
+                    let def = if v == 0 { 0 } else { v - 1 };
+                    let last = def + rng.range(0, 4);
+                    ValueInterval { size: rng.range(0, 512), def, last_use: last }
+                })
+                .collect();
+            let (layout, slots) = plan_arena(&vals);
+            assert_eq!(validate_layout(&vals, &layout.offsets), layout.peak_bytes);
+            // slots are themselves overlap-free
+            let mut slot_off = vec![0usize; slots.caps.len()];
+            let mut acc = 0usize;
+            for (off, cap) in slot_off.iter_mut().zip(&slots.caps) {
+                *off = acc;
+                acc += cap;
+            }
+            let offs: Vec<usize> = slots.slot_of.iter().map(|&s| slot_off[s]).collect();
+            assert_eq!(validate_layout(&vals, &offs), peak_of(&vals, &offs));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap in the arena")]
+    fn overlapping_live_values_are_rejected() {
+        let vals = vec![
+            ValueInterval { size: 10, def: 0, last_use: 1 },
+            ValueInterval { size: 10, def: 0, last_use: 1 },
+        ];
+        validate_layout(&vals, &[0, 5]);
+    }
+
+    #[test]
+    fn zero_sized_values_are_free() {
+        let vals = vec![
+            ValueInterval { size: 0, def: 0, last_use: 5 },
+            ValueInterval { size: 8, def: 0, last_use: 1 },
+        ];
+        let (layout, _) = plan_arena(&vals);
+        assert_eq!(layout.peak_bytes, 8);
+    }
+}

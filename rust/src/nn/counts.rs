@@ -347,6 +347,22 @@ pub fn add_conv_counts(
     }
 }
 
+/// Residual (elementwise) sum with requantization — the event stream of
+/// [`super::graph::ResidualAdd::forward_into`]: per element two operand
+/// loads, two unconditional alignment shifts, the add, a two-op
+/// requantize (shift + saturate), one store and the loop back-edge.
+/// Data- and format-independent, so the closed form is trivially exact.
+pub fn residual_add_counts(in_shape: &Shape) -> OpCounts {
+    let n = in_shape.len() as u64;
+    OpCounts {
+        ld8: 2 * n,
+        alu: 5 * n,
+        st8: n,
+        branch: n,
+        ..OpCounts::default()
+    }
+}
+
 /// Integer batch-norm layer — [`super::bn::BnLayer::forward`].
 pub fn bn_counts(in_shape: &Shape) -> OpCounts {
     let n = in_shape.len() as u64;

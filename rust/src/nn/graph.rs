@@ -1,8 +1,17 @@
-//! Sequential model graph — the NNoM-equivalent "compiled model": a list
-//! of quantized layers with fixed formats, executed with either code path
-//! (scalar / SIMD) under any [`Monitor`].
+//! Model IR: quantized layer ops ([`Layer`]), the linear [`Model`]
+//! builder, and the DAG [`Graph`] the engine actually compiles.
+//!
+//! A [`Graph`] is a list of [`Node`]s in fixed topological order; each
+//! node consumes explicit tensor *value ids* (value 0 is the graph
+//! input, value `i + 1` is node `i`'s output) and produces exactly one
+//! new value. Skip connections and fan-out are just a node referencing a
+//! value defined more than one step earlier — which is what the
+//! [`ResidualAdd`] node (elementwise residual sum with power-of-two
+//! requantization) exists to consume. A linear [`Model`] lowers 1:1 into
+//! a chain graph ([`Graph::from_model`]), so the historical builders
+//! remain the special case of the DAG IR, byte-identical in behaviour.
 
-use crate::quant::QParam;
+use crate::quant::{requantize, sat_i8, QParam};
 
 use super::add_conv::AddConv;
 use super::bn::BnLayer;
@@ -187,18 +196,320 @@ impl Model {
 
     /// Total weight bytes (flash footprint).
     pub fn weight_bytes(&self) -> usize {
-        self.layers
+        self.layers.iter().map(layer_weight_bytes).sum()
+    }
+}
+
+/// Flash bytes of one layer's parameters (weights + bias + tables).
+pub(crate) fn layer_weight_bytes(layer: &Layer) -> usize {
+    match layer {
+        Layer::Conv(c) => c.weights.len() + 4 * c.bias.len(),
+        Layer::Depthwise(d) => d.weights.len() + 4 * d.bias.len(),
+        Layer::Shift(s) => s.weights.len() + 4 * s.bias.len() + 2 * s.shifts.len(),
+        Layer::AddConv(a) => a.weights.len() + 4 * a.bias.len(),
+        Layer::Bn(b) => 2 * b.m.len() + 4 * b.b.len(),
+        Layer::Dense(d) => d.weights.len() + 4 * d.bias.len(),
+        _ => 0,
+    }
+}
+
+/// Elementwise residual sum with requantization: both operands are
+/// aligned to the finer of their two power-of-two formats, added in i32,
+/// then shifted and saturated into `q_out` (the skip-connection join of
+/// the MobileNet/MCUNet-class residual topologies the paper benchmarks).
+#[derive(Clone, Debug)]
+pub struct ResidualAdd {
+    pub q_out: QParam,
+}
+
+impl ResidualAdd {
+    /// Output shape: both operands must agree; the sum preserves it.
+    pub fn output_shape(&self, a: &Shape, b: &Shape) -> Shape {
+        assert_eq!(a, b, "residual add operand shapes differ");
+        *a
+    }
+
+    /// Allocating reference path.
+    pub fn forward<M: Monitor>(&self, a: &Tensor, b: &Tensor, mon: &mut M) -> Tensor {
+        let mut y = Tensor::zeros(self.output_shape(&a.shape, &b.shape), self.q_out);
+        self.forward_into(a, b, &mut y, mon);
+        y
+    }
+
+    /// [`ResidualAdd::forward`] into a caller-provided output tensor
+    /// (allocation-free workspace path; identical event stream). Per
+    /// element: two operand loads, two unconditional alignment shifts,
+    /// the add, a two-op requantize (shift + saturate), one store and
+    /// the loop back-edge — data-independent, so the analytic counts
+    /// ([`super::counts::residual_add_counts`]) are exact.
+    pub fn forward_into<M: Monitor>(&self, a: &Tensor, b: &Tensor, y: &mut Tensor, mon: &mut M) {
+        assert_eq!(a.shape, b.shape, "residual add operand shapes differ");
+        debug_assert_eq!(y.shape, a.shape, "output buffer shape mismatch");
+        debug_assert_eq!(y.q, self.q_out, "output buffer format mismatch");
+        let common = a.q.frac_bits.max(b.q.frac_bits);
+        let sa = common - a.q.frac_bits;
+        let sb = common - b.q.frac_bits;
+        let shift = common - self.q_out.frac_bits;
+        for i in 0..a.data.len() {
+            mon.ld8(2);
+            mon.alu(5);
+            mon.st8(1);
+            mon.branch(1);
+            let av = (a.data[i] as i32) << sa;
+            let bv = (b.data[i] as i32) << sb;
+            y.data[i] = sat_i8(requantize(av + bv, shift));
+        }
+    }
+}
+
+/// The operation a graph node computes.
+#[derive(Clone, Debug)]
+pub enum NodeOp {
+    /// A single-input quantized layer (all historical ops).
+    Layer(Layer),
+    /// Two-input residual sum with requantization.
+    Add(ResidualAdd),
+}
+
+impl NodeOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeOp::Layer(l) => l.name(),
+            NodeOp::Add(_) => "add",
+        }
+    }
+
+    /// Number of tensor inputs the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            NodeOp::Layer(_) => 1,
+            NodeOp::Add(_) => 2,
+        }
+    }
+
+    /// Whether the op has a distinct SIMD implementation.
+    pub fn has_simd(&self) -> bool {
+        match self {
+            NodeOp::Layer(l) => l.has_simd(),
+            // the residual join is pure elementwise glue (scalar only)
+            NodeOp::Add(_) => false,
+        }
+    }
+}
+
+/// Identifier of an activation value: 0 is the graph input, `i + 1` is
+/// the output of node `i`.
+pub type ValueId = usize;
+
+/// One node of the DAG IR: an op plus the value ids it consumes.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: NodeOp,
+    pub inputs: Vec<ValueId>,
+}
+
+/// A deployed model as a DAG over explicit tensor values, executed in
+/// the fixed topological order `nodes[0..n)`. The last node's output is
+/// the graph output. Built directly ([`Graph::layer`] / [`Graph::add`])
+/// or lowered from a linear [`Model`] ([`Graph::from_model`]).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: Shape,
+    pub input_q: QParam,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, input_shape: Shape, input_q: QParam) -> Self {
+        Self {
+            name: name.into(),
+            input_shape,
+            input_q,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// The graph input's value id.
+    pub fn input(&self) -> ValueId {
+        0
+    }
+
+    /// Number of tensor values (input + one per node).
+    pub fn n_values(&self) -> usize {
+        self.nodes.len() + 1
+    }
+
+    /// Value id of the graph output (the last node's output; the input
+    /// itself for an empty graph).
+    pub fn output_value(&self) -> ValueId {
+        self.nodes.len()
+    }
+
+    fn push_node(&mut self, node: Node) -> ValueId {
+        assert_eq!(
+            node.inputs.len(),
+            node.op.arity(),
+            "node {:?} expects {} inputs, got {}",
+            node.op.name(),
+            node.op.arity(),
+            node.inputs.len()
+        );
+        for &v in &node.inputs {
+            assert!(
+                v <= self.nodes.len(),
+                "node input references value {v}, which is not defined yet"
+            );
+        }
+        self.nodes.push(node);
+        self.nodes.len()
+    }
+
+    /// Append a single-input layer consuming `input`; returns the new
+    /// value id.
+    pub fn layer(&mut self, input: ValueId, layer: Layer) -> ValueId {
+        self.push_node(Node { op: NodeOp::Layer(layer), inputs: vec![input] })
+    }
+
+    /// Append a residual add joining values `a` and `b` at format
+    /// `q_out`; returns the new value id. The operands must be distinct
+    /// values (a self-join `y = 2x` is not a residual topology, and the
+    /// engine's slot executor requires distinct operand buffers).
+    pub fn add(&mut self, a: ValueId, b: ValueId, q_out: QParam) -> ValueId {
+        assert_ne!(a, b, "residual add operands must be distinct values");
+        self.push_node(Node {
+            op: NodeOp::Add(ResidualAdd { q_out }),
+            inputs: vec![a, b],
+        })
+    }
+
+    /// Lower a linear model into the 1:1 chain graph (node `i` consumes
+    /// value `i`). The historical sequential builders are exactly this
+    /// special case of the DAG IR.
+    pub fn from_model(model: &Model) -> Graph {
+        let mut g = Graph::new(model.name.clone(), model.input_shape, model.input_q);
+        let mut v = g.input();
+        for l in &model.layers {
+            v = g.layer(v, l.clone());
+        }
+        g
+    }
+
+    /// Shape of every value (index 0 = input). Panics if a residual
+    /// add's operand shapes differ.
+    pub fn value_shapes(&self) -> Vec<Shape> {
+        let mut shapes = vec![self.input_shape];
+        for node in &self.nodes {
+            let s = match &node.op {
+                NodeOp::Layer(l) => l.output_shape(&shapes[node.inputs[0]]),
+                NodeOp::Add(a) => {
+                    let (sa, sb) = (shapes[node.inputs[0]], shapes[node.inputs[1]]);
+                    a.output_shape(&sa, &sb)
+                }
+            };
+            shapes.push(s);
+        }
+        shapes
+    }
+
+    /// Activation format of every value (index 0 = input).
+    pub fn value_qs(&self) -> Vec<QParam> {
+        let mut qs = vec![self.input_q];
+        for node in &self.nodes {
+            let q = match &node.op {
+                NodeOp::Layer(l) => l.output_q(qs[node.inputs[0]]),
+                NodeOp::Add(a) => a.q_out,
+            };
+            qs.push(q);
+        }
+        qs
+    }
+
+    /// Last step (inclusive) each value must stay resident for: its
+    /// defining step, extended over every consumer; the graph output is
+    /// held through the final step so the caller can read it.
+    pub fn last_uses(&self) -> Vec<usize> {
+        let mut last: Vec<usize> = (0..self.n_values())
+            .map(|v| v.saturating_sub(1))
+            .collect();
+        for (step, node) in self.nodes.iter().enumerate() {
+            for &v in &node.inputs {
+                last[v] = last[v].max(step);
+            }
+        }
+        let out = self.output_value();
+        last[out] = last[out].max(self.nodes.len().saturating_sub(1));
+        last
+    }
+
+    /// Total weight bytes (flash footprint); the residual join is
+    /// parameter-free.
+    pub fn weight_bytes(&self) -> usize {
+        self.nodes
             .iter()
-            .map(|l| match l {
-                Layer::Conv(c) => c.weights.len() + 4 * c.bias.len(),
-                Layer::Depthwise(d) => d.weights.len() + 4 * d.bias.len(),
-                Layer::Shift(s) => s.weights.len() + 4 * s.bias.len() + 2 * s.shifts.len(),
-                Layer::AddConv(a) => a.weights.len() + 4 * a.bias.len(),
-                Layer::Bn(b) => 2 * b.m.len() + 4 * b.b.len(),
-                Layer::Dense(d) => d.weights.len() + 4 * d.bias.len(),
-                _ => 0,
+            .map(|n| match &n.op {
+                NodeOp::Layer(l) => layer_weight_bytes(l),
+                NodeOp::Add(_) => 0,
             })
             .sum()
+    }
+
+    /// Run an inference through the compiled engine (fresh plan + arena
+    /// per call — the allocating convenience wrapper, like
+    /// [`Model::forward`]). Deployed paths compile once and reuse
+    /// ([`Graph::forward_in`], `TunedSchedule::run_in`, the server).
+    pub fn forward<M: Monitor>(&self, x: &Tensor, simd: bool, mon: &mut M) -> Tensor {
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        let plan = super::plan::ExecPlan::compile_graph_default(self, simd);
+        let mut ws = super::workspace::Workspace::for_plan(&plan);
+        plan.run_in(x, &mut ws, mon).clone()
+    }
+
+    /// Run an inference collecting per-node op counts (same engine, one
+    /// `CountingMonitor` per node).
+    pub fn forward_profiled(&self, x: &Tensor, simd: bool) -> (Tensor, Vec<LayerProfile>) {
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        let plan = super::plan::ExecPlan::compile_graph_default(self, simd);
+        let mut ws = super::workspace::Workspace::for_plan(&plan);
+        let (out, profiles) = plan.run_profiled_in(x, &mut ws);
+        (out.clone(), profiles)
+    }
+
+    /// Total op counts for one inference.
+    pub fn count_ops(&self, x: &Tensor, simd: bool) -> OpCounts {
+        let mut mon = CountingMonitor::new();
+        self.forward(x, simd, &mut mon);
+        mon.counts
+    }
+
+    /// Reference executor: run the graph node by node under a per-node
+    /// candidate schedule through the *allocating* oracle
+    /// ([`crate::tuner::space::execute`] per layer node, the scalar
+    /// [`ResidualAdd`] for joins), keeping every intermediate value
+    /// alive. The compiled engine ([`super::plan::ExecPlan::run_in`]) is
+    /// property-tested bit-exact and event-stream-identical to this.
+    pub fn execute_reference<M: Monitor>(
+        &self,
+        schedule: &[crate::tuner::space::Candidate],
+        x: &Tensor,
+        mon: &mut M,
+    ) -> Tensor {
+        use crate::tuner::space::{self, Lowering};
+        assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+        assert_eq!(schedule.len(), self.nodes.len(), "schedule/graph mismatch");
+        let mut values: Vec<Tensor> = Vec::with_capacity(self.n_values());
+        values.push(x.clone());
+        for (node, cand) in self.nodes.iter().zip(schedule) {
+            let out = match &node.op {
+                NodeOp::Layer(l) => space::execute(l, cand, &values[node.inputs[0]], mon),
+                NodeOp::Add(a) => {
+                    debug_assert_eq!(cand.lowering, Lowering::Direct);
+                    a.forward(&values[node.inputs[0]], &values[node.inputs[1]], mon)
+                }
+            };
+            values.push(out);
+        }
+        values.pop().unwrap()
     }
 }
 
@@ -280,5 +591,158 @@ mod tests {
         let m = tiny_model(&mut rng);
         let x = Tensor::zeros(Shape::new(4, 4, 4), QParam::new(7));
         m.forward(&x, false, &mut NoopMonitor);
+    }
+
+    #[test]
+    fn lowered_model_graph_is_byte_identical_to_the_model() {
+        let mut rng = Rng::new(6);
+        let m = tiny_model(&mut rng);
+        let g = Graph::from_model(&m);
+        assert_eq!(g.nodes.len(), m.layers.len());
+        assert_eq!(g.value_shapes(), m.shapes());
+        assert_eq!(g.weight_bytes(), m.weight_bytes());
+        let mut x = Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -48, 47);
+        for simd in [false, true] {
+            let mut ma = CountingMonitor::new();
+            let want = m.forward(&x, simd, &mut ma);
+            let mut mb = CountingMonitor::new();
+            let got = g.forward(&x, simd, &mut mb);
+            assert_eq!(want.data, got.data, "simd={simd}");
+            assert_eq!(want.q, got.q, "simd={simd}");
+            assert_eq!(ma.counts, mb.counts, "simd={simd}");
+        }
+    }
+
+    /// A small residual graph: conv → relu → Add(skip) → dense head.
+    fn tiny_residual(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("tiny-res", Shape::new(6, 6, 4), QParam::new(5));
+        let skip = g.input();
+        let mut conv = test_random_conv(rng, 1, 3, 4, 4);
+        conv.q_in = QParam::new(5);
+        conv.q_out = QParam::new(5);
+        let v = g.layer(skip, Layer::Conv(conv));
+        let v = g.layer(v, Layer::Relu);
+        let v = g.add(skip, v, QParam::new(4));
+        let mut w = vec![0i8; 6 * 6 * 4 * 3];
+        rng.fill_i8(&mut w, -8, 8);
+        g.layer(
+            v,
+            Layer::Dense(QuantDense {
+                in_features: 6 * 6 * 4,
+                out_features: 3,
+                weights: w,
+                bias: vec![0; 3],
+                q_in: QParam::new(4),
+                q_w: QParam::new(7),
+                q_out: QParam::new(5),
+            }),
+        );
+        g
+    }
+
+    #[test]
+    fn residual_graph_shapes_formats_and_liveness() {
+        let mut rng = Rng::new(7);
+        let g = tiny_residual(&mut rng);
+        let shapes = g.value_shapes();
+        assert_eq!(shapes.len(), 5);
+        assert_eq!(shapes[3], Shape::new(6, 6, 4)); // add output
+        assert_eq!(shapes[4], Shape::new(1, 1, 3)); // head
+        let qs = g.value_qs();
+        assert_eq!(qs[3], QParam::new(4));
+        // the input is skip-consumed by the add at step 2
+        let last = g.last_uses();
+        assert_eq!(last[0], 2);
+        assert_eq!(last[1], 1);
+        assert_eq!(last[4], 3);
+    }
+
+    #[test]
+    fn residual_graph_engine_matches_reference_executor() {
+        let mut rng = Rng::new(8);
+        let g = tiny_residual(&mut rng);
+        for simd in [false, true] {
+            let sched: Vec<_> = g
+                .nodes
+                .iter()
+                .map(|n| crate::nn::plan::default_node_candidate(n, simd))
+                .collect();
+            for trial in 0..3 {
+                let mut x = Tensor::zeros(g.input_shape, g.input_q);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let mut ma = CountingMonitor::new();
+                let want = g.execute_reference(&sched, &x, &mut ma);
+                let mut mb = CountingMonitor::new();
+                let got = g.forward(&x, simd, &mut mb);
+                assert_eq!(want.data, got.data, "simd={simd} trial={trial}");
+                assert_eq!(want.q, got.q, "simd={simd}");
+                assert_eq!(ma.counts, mb.counts, "simd={simd} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_add_requantizes_with_alignment_and_saturates() {
+        let q = |f: i32| QParam::new(f);
+        let t = |f: i32, v: i8| {
+            let mut t = Tensor::zeros(Shape::new(1, 1, 1), q(f));
+            t.data[0] = v;
+            t
+        };
+        // same format, same output format: plain saturating add
+        let add5 = ResidualAdd { q_out: q(5) };
+        assert_eq!(add5.forward(&t(5, 127), &t(5, 127), &mut NoopMonitor).data, vec![127]);
+        assert_eq!(add5.forward(&t(5, -128), &t(5, -128), &mut NoopMonitor).data, vec![-128]);
+        assert_eq!(add5.forward(&t(5, 100), &t(5, -30), &mut NoopMonitor).data, vec![70]);
+        // mixed formats align to the finer operand: 0.5 at Q7 (64) plus
+        // 0.5 at Q5 (16) is 1.0, emitted at Q6 as 64
+        let add6 = ResidualAdd { q_out: q(6) };
+        assert_eq!(add6.forward(&t(7, 64), &t(5, 16), &mut NoopMonitor).data, vec![64]);
+        // a coarser output format halves instead of saturating
+        let add4 = ResidualAdd { q_out: q(4) };
+        assert_eq!(add4.forward(&t(5, 127), &t(5, 127), &mut NoopMonitor).data, vec![127]);
+        assert_eq!(add4.forward(&t(5, 100), &t(5, 100), &mut NoopMonitor).data, vec![100]);
+        // and a finer output format saturates on magnitudes ≥ 1 (shift
+        // left before the clamp)
+        let add7 = ResidualAdd { q_out: q(7) };
+        assert_eq!(add7.forward(&t(5, 64), &t(5, 64), &mut NoopMonitor).data, vec![127]);
+        assert_eq!(add7.forward(&t(5, -64), &t(5, -64), &mut NoopMonitor).data, vec![-128]);
+    }
+
+    #[test]
+    fn residual_add_counts_are_exact() {
+        let mut rng = Rng::new(9);
+        for _ in 0..8 {
+            let shape = Shape::new(rng.range(1, 5), rng.range(1, 5), rng.range(1, 6));
+            let mut a = Tensor::zeros(shape, QParam::new(5));
+            let mut b = Tensor::zeros(shape, QParam::new(7));
+            rng.fill_i8(&mut a.data, -64, 63);
+            rng.fill_i8(&mut b.data, -64, 63);
+            let add = ResidualAdd { q_out: QParam::new(4) };
+            let mut mon = CountingMonitor::new();
+            add.forward(&a, &b, &mut mon);
+            assert_eq!(mon.counts, crate::nn::counts::residual_add_counts(&shape));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not defined yet")]
+    fn forward_references_are_rejected() {
+        let mut g = Graph::new("bad", Shape::new(2, 2, 1), QParam::new(7));
+        g.add(0, 3, QParam::new(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "operand shapes differ")]
+    fn mismatched_add_operands_are_rejected() {
+        let mut rng = Rng::new(10);
+        let mut g = Graph::new("bad-add", Shape::new(4, 4, 2), QParam::new(7));
+        let skip = g.input();
+        let v = g.layer(skip, Layer::MaxPool2); // 2×2×2: shape now differs
+        let conv = test_random_conv(&mut rng, 1, 3, 2, 2);
+        let v = g.layer(v, Layer::Conv(conv));
+        g.add(skip, v, QParam::new(5));
+        g.value_shapes();
     }
 }

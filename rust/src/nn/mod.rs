@@ -1,11 +1,16 @@
 //! The NNoM-equivalent int8 inference engine: the five convolution
-//! primitives (§2.2) in scalar and SIMD (`__SMLAD`) variants, glue layers,
-//! and a sequential model graph — all generic over a [`Monitor`] so the
+//! primitives (§2.2) in scalar and SIMD (`__SMLAD`) variants, glue
+//! layers, and a DAG graph IR ([`Graph`]: explicit tensor value ids,
+//! residual [`ResidualAdd`] joins and fan-out; linear [`Model`]s lower
+//! 1:1 into chain graphs) executed by one compiled engine
+//! ([`ExecPlan`]) inside a liveness-planned activation arena
+//! ([`arena`], [`Workspace`]) — all generic over a [`Monitor`] so the
 //! same code serves both the deployment hot path (zero-cost
 //! [`NoopMonitor`]) and the characterization harness
 //! ([`CountingMonitor`] → [`crate::mcu`] cycle/energy models).
 
 pub mod add_conv;
+pub mod arena;
 pub mod blocking;
 pub mod bn;
 pub mod conv;
@@ -26,7 +31,7 @@ pub use bn::{BatchNorm, BnLayer};
 pub use conv::QuantConv;
 pub use counts::{layer_counts, model_counts, model_layer_counts};
 pub use depthwise::QuantDepthwise;
-pub use graph::{Layer, LayerProfile, Model};
+pub use graph::{Graph, Layer, LayerProfile, Model, Node, NodeOp, ResidualAdd, ValueId};
 pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
 pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
 pub use plan::ExecPlan;

@@ -1,54 +1,66 @@
 //! Compiled execution plans — the **one** engine behind every inference
 //! path in the repo.
 //!
-//! An [`ExecPlan`] is a (Model × per-layer [`Candidate`] schedule)
-//! compiled once at deploy time: every layer's kernel/lowering dispatch
+//! An [`ExecPlan`] is a ([`Graph`] × per-node [`Candidate`] schedule)
+//! compiled once at deploy time: every node's kernel/lowering dispatch
 //! is resolved up front into a [`CompiledKernel`] (no per-call `match`
 //! over `Candidate`), primitive substitutions (conv-as-depthwise,
 //! depthwise-as-conv, pointwise-as-shift) are materialized as owned
 //! kernel structs instead of being re-cloned per call, and the q7→q15
-//! weight widening the SIMD matmuls need is hoisted into the plan. The
-//! paper-default scalar/SIMD schedules are just the trivial plans
-//! ([`ExecPlan::compile_default`]), so `Model::forward`,
-//! `Model::forward_in` and `TunedSchedule::run_in` are all thin wrappers
-//! over [`ExecPlan::run_in`].
+//! weight widening the SIMD matmuls need is hoisted into the plan.
+//! Linear models lower 1:1 into chain graphs ([`ExecPlan::compile`]
+//! wraps [`ExecPlan::compile_graph`]), and the paper-default scalar/SIMD
+//! schedules are just the trivial plans ([`ExecPlan::compile_default`]),
+//! so `Model::forward`, `Model::forward_in`, `Graph::forward` and
+//! `TunedSchedule::run_in` are all thin wrappers over
+//! [`ExecPlan::run_in`].
+//!
+//! Each step's operands are **value slots**: compile time runs the
+//! liveness planner ([`crate::nn::arena`]) over every value's live
+//! interval in the topo order, so skip operands stay resident exactly as
+//! long as a consumer needs them, lifetime-disjoint values share slot
+//! buffers, and [`ExecPlan::workspace_plan`] reports the greedy best-fit
+//! *packed* activation arena (≤ the slot total, and ≤ the legacy
+//! largest×2 ping-pong provisioning on linear chains — both
+//! property-tested below, along with the packed layout's byte-exact
+//! high-water mark via [`ExecPlan::arena_high_water`]).
 //!
 //! Execution happens inside a [`Workspace`] arena
-//! ([`crate::nn::workspace`]) — ping-pong activation buffers, a flat
-//! (P, F)-blocked im2col column arena, `mat_mult_block` accumulators and
-//! the shift-conv intermediate map — sized from the plan's requirements,
-//! so steady-state inference performs **zero heap allocations** for
-//! *any* legal schedule, tuned or fixed (pinned by
+//! ([`crate::nn::workspace`]) sized from the plan's requirements, so
+//! steady-state inference performs **zero heap allocations** for *any*
+//! legal schedule, tuned or fixed, linear or residual (pinned by
 //! `benches/infer_hot.rs`).
 //!
 //! Outputs are bit-exact and `CountingMonitor`-event-identical to the
-//! pre-plan reference paths (`Model::forward` semantics and
-//! `TunedSchedule::run` → [`crate::tuner::space::execute`]); the
-//! property tests below pin both across the entire enumerated candidate
-//! space of [`crate::tuner::space`].
+//! reference paths (`Model::forward` semantics,
+//! [`Graph::execute_reference`] and `TunedSchedule::run` →
+//! [`crate::tuner::space::execute`]); the property tests below pin both
+//! across the entire enumerated candidate space of
+//! [`crate::tuner::space`], on linear and residual graphs.
 
 use crate::quant::{requantize, sat_i8, QParam};
 use crate::tuner::space::{self, Candidate, KernelImpl, Lowering};
 use crate::util::fnv::Fnv1a;
 
 use super::add_conv::AddConv;
+use super::arena::{self, ValueInterval};
 use super::blocking::mat_mult_block_into;
 use super::bn::BnLayer;
 use super::conv::QuantConv;
 use super::depthwise::QuantDepthwise;
-use super::graph::{Layer, LayerProfile, Model};
+use super::graph::{Graph, Layer, LayerProfile, Model, Node, NodeOp, ResidualAdd};
 use super::im2col::fill_patch_q15;
 use super::monitor::{CountingMonitor, Monitor};
 use super::ops::{self, QuantDense};
 use super::shift::ShiftConv;
 use super::tensor::{Shape, Tensor};
-use super::workspace::{model_weight_fingerprint, prepare, Workspace, WorkspacePlan};
+use super::workspace::{graph_weight_fingerprint, prepare, Workspace, WorkspacePlan};
 
 /// Largest register blocking the engine provisions scratch for (the
 /// schedule space never enumerates beyond it — the register file spills).
 pub const MAX_BLOCK: usize = 4;
 
-/// A layer's dispatch, fully resolved at compile time. Substituted
+/// A node's dispatch, fully resolved at compile time. Substituted
 /// kernels ([`KernelImpl::ConvAsDepthwise`] etc.) own the reinterpreted
 /// struct, built once here instead of once per inference.
 #[derive(Clone, Debug)]
@@ -74,10 +86,13 @@ enum CompiledKernel {
     DenseScalar(QuantDense),
     /// SIMD dense: 1 widened input column + pre-widened weights.
     DenseSimd(QuantDense),
+    /// Residual elementwise sum with requantization (scalar only).
+    Add(ResidualAdd),
 }
 
-/// One compiled layer: resolved kernel, pre-widened weights where the
-/// fixed-function SIMD kernels need them, and the static shape chain.
+/// One compiled node: resolved kernel, pre-widened weights where the
+/// fixed-function SIMD kernels need them, the static shape/format chain
+/// and the operand/result value slots.
 #[derive(Clone, Debug)]
 struct Step {
     name: &'static str,
@@ -85,14 +100,20 @@ struct Step {
     /// Pre-widened q15 weights (empty unless the kernel is `ShiftSimd`
     /// or `DenseSimd`; the blocked matmul consumes q7 rows directly).
     wq: Vec<i16>,
-    in_shape: Shape,
+    /// Input shape per operand (one entry for layers, two for `Add`).
+    in_shapes: Vec<Shape>,
     out_shape: Shape,
+    /// Output format, resolved statically from the value-format chain.
+    out_q: QParam,
+    /// Workspace slot per operand.
+    in_slots: Vec<usize>,
+    out_slot: usize,
     candidate: Candidate,
 }
 
-/// A compiled (model × schedule) executor. Build once per deployment
-/// (`compile` / `compile_default`), run forever through
-/// [`ExecPlan::run_in`] with a [`Workspace`] sized by
+/// A compiled (graph × schedule) executor. Build once per deployment
+/// (`compile` / `compile_graph` / the `_default` variants), run forever
+/// through [`ExecPlan::run_in`] with a [`Workspace`] sized by
 /// [`Workspace::for_plan`].
 #[derive(Clone, Debug)]
 pub struct ExecPlan {
@@ -102,9 +123,17 @@ pub struct ExecPlan {
     weight_fp: u64,
     cand_fp: u64,
     steps: Vec<Step>,
-    // scratch requirements (elements, not bytes)
-    max_act: usize,
+    // liveness bookkeeping (per value)
+    intervals: Vec<ValueInterval>,
+    value_offsets: Vec<usize>,
+    arena_peak: usize,
+    slot_caps: Vec<usize>,
+    in_slot: usize,
+    out_slot: usize,
+    // legacy/report figures
+    pingpong: usize,
     peak_pair: usize,
+    // scratch requirements (elements, not bytes)
     col_len: usize,
     acc_len: usize,
     shift_len: usize,
@@ -159,6 +188,15 @@ pub fn default_candidate(layer: &Layer, simd: bool) -> Candidate {
     Candidate { kernel: KernelImpl::AsIs, lowering }
 }
 
+/// [`default_candidate`] for graph nodes: the residual join only has its
+/// scalar implementation.
+pub fn default_node_candidate(node: &Node, simd: bool) -> Candidate {
+    match &node.op {
+        NodeOp::Layer(l) => default_candidate(l, simd),
+        NodeOp::Add(_) => Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct },
+    }
+}
+
 fn compile_kernel(layer: &Layer, cand: &Candidate) -> CompiledKernel {
     assert!(
         space::applies(layer, cand),
@@ -209,27 +247,65 @@ fn compile_kernel(layer: &Layer, cand: &Candidate) -> CompiledKernel {
     }
 }
 
+fn compile_node_kernel(node: &Node, cand: &Candidate) -> CompiledKernel {
+    match &node.op {
+        NodeOp::Layer(l) => compile_kernel(l, cand),
+        NodeOp::Add(a) => {
+            assert!(
+                cand.kernel == KernelImpl::AsIs && cand.lowering == Lowering::Direct,
+                "candidate {cand:?} does not apply to node \"add\""
+            );
+            CompiledKernel::Add(a.clone())
+        }
+    }
+}
+
 impl ExecPlan {
-    /// Compile `model` under a per-layer candidate schedule. Panics if
-    /// the schedule length does not match or a candidate is illegal for
-    /// its layer (validate with [`space::applies`] first when replaying
-    /// untrusted schedules).
+    /// Compile a linear `model` under a per-layer candidate schedule
+    /// (the 1:1 chain-graph special case of [`ExecPlan::compile_graph`]).
+    /// Panics if the schedule length does not match or a candidate is
+    /// illegal for its layer (validate with [`space::applies`] first
+    /// when replaying untrusted schedules).
     pub fn compile(model: &Model, schedule: &[Candidate]) -> ExecPlan {
         assert_eq!(
             schedule.len(),
             model.layers.len(),
             "schedule/model length mismatch"
         );
-        let shapes = model.shapes();
-        let mut steps = Vec::with_capacity(model.layers.len());
+        Self::compile_graph(&Graph::from_model(model), schedule)
+    }
+
+    /// Compile a graph under a per-node candidate schedule.
+    pub fn compile_graph(graph: &Graph, schedule: &[Candidate]) -> ExecPlan {
+        assert_eq!(
+            schedule.len(),
+            graph.nodes.len(),
+            "schedule/model length mismatch"
+        );
+        let shapes = graph.value_shapes();
+        let qs = graph.value_qs();
+        let last_use = graph.last_uses();
+        let intervals: Vec<ValueInterval> = shapes
+            .iter()
+            .enumerate()
+            .map(|(v, s)| ValueInterval {
+                size: s.len(),
+                def: v.saturating_sub(1),
+                last_use: last_use[v],
+            })
+            .collect();
+        let (layout, slots) = arena::plan_arena(&intervals);
+
+        let mut steps = Vec::with_capacity(graph.nodes.len());
         let (mut col_len, mut acc_len, mut shift_len) = (0usize, 0usize, 0usize);
-        for ((layer, cand), in_shape) in model.layers.iter().zip(schedule).zip(&shapes) {
-            let kernel = compile_kernel(layer, cand);
+        for (i, (node, cand)) in graph.nodes.iter().zip(schedule).enumerate() {
+            let kernel = compile_node_kernel(node, cand);
             let wq = match &kernel {
                 CompiledKernel::ShiftSimd(s) => widen(&s.weights),
                 CompiledKernel::DenseSimd(d) => widen(&d.weights),
                 _ => Vec::new(),
             };
+            let in_shape = shapes[node.inputs[0]];
             match &kernel {
                 CompiledKernel::ConvBlocked { conv, p, f } => {
                     let klen = conv.kernel * conv.kernel * conv.ch_per_group();
@@ -242,28 +318,41 @@ impl ExecPlan {
                 _ => {}
             }
             steps.push(Step {
-                name: layer.name(),
+                name: node.op.name(),
                 kernel,
                 wq,
-                in_shape: *in_shape,
-                out_shape: layer.output_shape(in_shape),
+                in_shapes: node.inputs.iter().map(|&v| shapes[v]).collect(),
+                out_shape: shapes[i + 1],
+                out_q: qs[i + 1],
+                in_slots: node.inputs.iter().map(|&v| slots.slot_of[v]).collect(),
+                out_slot: slots.slot_of[i + 1],
                 candidate: *cand,
             });
         }
         let max_act = shapes.iter().map(|s| s.len()).max().unwrap_or(0);
-        let peak_pair = shapes
-            .windows(2)
-            .map(|w| w[0].len() + w[1].len())
+        let peak_pair = graph
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                node.inputs.iter().map(|&v| shapes[v].len()).sum::<usize>() + shapes[i + 1].len()
+            })
             .max()
             .unwrap_or(max_act);
         ExecPlan {
-            model_name: model.name.clone(),
-            input_shape: model.input_shape,
-            input_q: model.input_q,
-            weight_fp: model_weight_fingerprint(model),
+            model_name: graph.name.clone(),
+            input_shape: graph.input_shape,
+            input_q: graph.input_q,
+            weight_fp: graph_weight_fingerprint(graph),
             cand_fp: candidate_fingerprint(schedule.iter().copied()),
             steps,
-            max_act,
+            intervals,
+            value_offsets: layout.offsets,
+            arena_peak: layout.peak_bytes,
+            slot_caps: slots.caps,
+            in_slot: slots.slot_of[0],
+            out_slot: slots.slot_of[graph.output_value()],
+            pingpong: 2 * max_act,
             peak_pair,
             col_len,
             acc_len,
@@ -283,6 +372,16 @@ impl ExecPlan {
         Self::compile(model, &cands)
     }
 
+    /// [`ExecPlan::compile_default`] for graphs.
+    pub fn compile_graph_default(graph: &Graph, simd: bool) -> ExecPlan {
+        let cands: Vec<Candidate> = graph
+            .nodes
+            .iter()
+            .map(|n| default_node_candidate(n, simd))
+            .collect();
+        Self::compile_graph(graph, &cands)
+    }
+
     /// Name of the model this plan was compiled from.
     pub fn model_name(&self) -> &str {
         &self.model_name
@@ -298,18 +397,19 @@ impl ExecPlan {
         self.input_q
     }
 
-    /// Number of compiled layers.
+    /// Number of compiled nodes.
     pub fn n_layers(&self) -> usize {
         self.steps.len()
     }
 
-    /// The per-layer candidate schedule this plan executes.
+    /// The per-node candidate schedule this plan executes.
     pub fn candidates(&self) -> Vec<Candidate> {
         self.steps.iter().map(|s| s.candidate).collect()
     }
 
-    /// FNV-1a fingerprint of the model parameters the plan was compiled
-    /// from (guards stale-plan reuse after a same-shaped redeploy).
+    /// FNV-1a fingerprint of the parameters (and, for graphs, wiring)
+    /// the plan was compiled from (guards stale-plan reuse after a
+    /// same-shaped redeploy).
     pub(crate) fn weight_fp(&self) -> u64 {
         self.weight_fp
     }
@@ -320,15 +420,29 @@ impl ExecPlan {
         self.cand_fp
     }
 
-    /// Arena requirements, in elements: (activations, im2col i16 cols,
-    /// i32 accumulators, shift-scratch i8).
-    pub(crate) fn requirements(&self) -> (usize, usize, usize, usize) {
-        (self.max_act, self.col_len, self.acc_len, self.shift_len)
+    /// Per-slot activation capacities (elements) of the liveness plan.
+    pub(crate) fn slot_caps(&self) -> &[usize] {
+        &self.slot_caps
     }
 
-    /// Per-layer scratch bytes beyond the activation ping-pong — by
+    /// Scratch requirements beyond the activation slots, in elements:
+    /// (im2col i16 cols, i32 accumulators, shift-scratch i8).
+    pub(crate) fn scratch_req(&self) -> (usize, usize, usize) {
+        (self.col_len, self.acc_len, self.shift_len)
+    }
+
+    /// Replay the execution order against the packed arena layout:
+    /// asserts no two concurrently-live values overlap and returns the
+    /// byte-exact high-water mark — equal to
+    /// [`WorkspacePlan::activation_bytes`] by construction (pinned by a
+    /// property test on residual graphs).
+    pub fn arena_high_water(&self) -> usize {
+        arena::validate_layout(&self.intervals, &self.value_offsets)
+    }
+
+    /// Per-node scratch bytes beyond the activation arena — by
     /// construction identical to [`space::scratch_bytes`] for the
-    /// layer's candidate (pinned by a property test below), so the
+    /// node's candidate (pinned by a property test below), so the
     /// tuner's RAM accounting and the engine's arena sizing can never
     /// drift apart.
     pub fn layer_scratch_bytes(&self, idx: usize) -> usize {
@@ -339,26 +453,30 @@ impl ExecPlan {
             }
             CompiledKernel::ShiftSimd(s) => 2 * 2 * s.in_channels,
             CompiledKernel::DenseSimd(d) => 2 * d.in_features,
-            CompiledKernel::ShiftScalar(_) => step.in_shape.len(),
+            CompiledKernel::ShiftScalar(_) => step.in_shapes[0].len(),
             _ => 0,
         }
     }
 
-    /// Peak working RAM of layer `idx` under its compiled candidate:
-    /// input + output activations + candidate scratch (the quantity
-    /// `space::ram_bytes` prices and `TunedSchedule::peak_ram_bytes`
-    /// maximizes).
+    /// Peak working RAM of node `idx` under its compiled candidate:
+    /// input operand(s) + output activations + candidate scratch (the
+    /// quantity `space::ram_bytes` prices and
+    /// `TunedSchedule::peak_ram_bytes` maximizes).
     pub fn layer_ram_bytes(&self, idx: usize) -> usize {
         let step = &self.steps[idx];
-        step.in_shape.len() + step.out_shape.len() + self.layer_scratch_bytes(idx)
+        step.in_shapes.iter().map(|s| s.len()).sum::<usize>()
+            + step.out_shape.len()
+            + self.layer_scratch_bytes(idx)
     }
 
     /// Byte-exact arena breakdown for a workspace planned from this plan
-    /// — the deployment's peak-RAM report, now covering arbitrary
+    /// — the deployment's peak-RAM report: the liveness-packed
+    /// activation arena next to the legacy ping-pong figure, plus
     /// blocked-candidate scratch.
     pub fn workspace_plan(&self) -> WorkspacePlan {
         WorkspacePlan {
-            activation_bytes: 2 * self.max_act,
+            activation_bytes: self.arena_peak,
+            pingpong_bytes: self.pingpong,
             peak_pair_bytes: self.peak_pair,
             shift_scratch_bytes: self.shift_len,
             im2col_bytes: 2 * self.col_len,
@@ -378,53 +496,54 @@ impl ExecPlan {
         ws: &'w mut Workspace,
         mon: &mut M,
     ) -> &'w Tensor {
-        let cur_is_a = self.run_steps(x, ws, mon);
-        ws.output(cur_is_a)
+        let out_slot = self.run_steps(x, ws, mon);
+        ws.output(out_slot)
     }
 
-    /// [`ExecPlan::run_in`] collecting per-layer op counts (one stack
-    /// [`CountingMonitor`] per layer — still allocation-free except the
+    /// [`ExecPlan::run_in`] collecting per-node op counts (one stack
+    /// [`CountingMonitor`] per node — still allocation-free except the
     /// returned profile vector).
     pub fn run_profiled_in<'w>(
         &self,
         x: &Tensor,
         ws: &'w mut Workspace,
     ) -> (&'w Tensor, Vec<LayerProfile>) {
-        let (cur_is_a, profiles) = self.run_steps_profiled(x, ws);
-        (ws.output(cur_is_a), profiles)
+        let (out_slot, profiles) = self.run_steps_profiled(x, ws);
+        (ws.output(out_slot), profiles)
     }
 
-    /// Profiled step loop returning the output slot indicator instead of
-    /// a borrow (lets `forward_profiled_in` interleave its plan take/put
+    /// Profiled step loop returning the output slot index instead of a
+    /// borrow (lets `forward_profiled_in` interleave its plan take/put
     /// dance around the run).
     pub(crate) fn run_steps_profiled(
         &self,
         x: &Tensor,
         ws: &mut Workspace,
-    ) -> (bool, Vec<LayerProfile>) {
+    ) -> (usize, Vec<LayerProfile>) {
         self.stage(x, ws);
         let mut profiles = Vec::with_capacity(self.steps.len());
-        let mut cur_is_a = true;
         for step in &self.steps {
             let mut mon = CountingMonitor::new();
-            run_step(step, cur_is_a, ws, &mut mon);
+            run_step(step, ws, &mut mon);
             profiles.push(LayerProfile { name: step.name, counts: mon.counts });
-            cur_is_a = !cur_is_a;
         }
-        (cur_is_a, profiles)
+        (self.out_slot, profiles)
     }
 
-    /// Core loop: stage the input, run every compiled step ping-ponging
-    /// between the two activation buffers, return which buffer holds the
-    /// output. Shared by every public wrapper.
-    pub(crate) fn run_steps<M: Monitor>(&self, x: &Tensor, ws: &mut Workspace, mon: &mut M) -> bool {
+    /// Core loop: stage the input into its slot, run every compiled step
+    /// between value slots, return the slot holding the output. Shared
+    /// by every public wrapper.
+    pub(crate) fn run_steps<M: Monitor>(
+        &self,
+        x: &Tensor,
+        ws: &mut Workspace,
+        mon: &mut M,
+    ) -> usize {
         self.stage(x, ws);
-        let mut cur_is_a = true;
         for step in &self.steps {
-            run_step(step, cur_is_a, ws, mon);
-            cur_is_a = !cur_is_a;
+            run_step(step, ws, mon);
         }
-        cur_is_a
+        self.out_slot
     }
 
     fn stage(&self, x: &Tensor, ws: &mut Workspace) {
@@ -435,40 +554,67 @@ impl ExecPlan {
              Workspace::for_plan)",
             self.model_name
         );
-        prepare(&mut ws.buf_a, x.shape, x.q);
-        ws.buf_a.data.copy_from_slice(&x.data);
+        let slot = &mut ws.slots[self.in_slot];
+        prepare(slot, x.shape, x.q);
+        slot.data.copy_from_slice(&x.data);
     }
 }
 
-/// Output format of a compiled kernel given its input format — mirrors
-/// `Layer::output_q` (format-preserving glue passes `in_q` through).
-fn step_out_q(kernel: &CompiledKernel, in_q: QParam) -> QParam {
-    use CompiledKernel as CK;
-    match kernel {
-        CK::ConvScalar(c) | CK::ConvBlocked { conv: c, .. } => c.q_out,
-        CK::DepthwiseScalar(d) | CK::DepthwiseSimd(d) => d.q_out,
-        CK::ShiftScalar(s) | CK::ShiftSimd(s) => s.q_out,
-        CK::AddConvScalar(a) => a.q_out,
-        CK::Bn(b) => b.q_out,
-        CK::Relu | CK::MaxPool2 => in_q,
-        CK::GlobalAvgPool(q) => q.unwrap_or(in_q),
-        CK::DenseScalar(d) | CK::DenseSimd(d) => d.q_out,
-    }
-}
-
-/// Execute one compiled step from the current ping-pong slot into the
-/// other, entirely inside the arena. Identical event stream to the
-/// reference executors ([`Layer::forward`] / [`space::execute`]).
-fn run_step<M: Monitor>(step: &Step, cur_is_a: bool, ws: &mut Workspace, mon: &mut M) {
-    let (xb, yb) = if cur_is_a {
-        (&ws.buf_a, &mut ws.buf_b)
+/// Split one slot out mutably (the step output) while borrowing another
+/// immutably (the input). The liveness planner never assigns a step's
+/// input and output to the same slot (their lifetimes overlap at the
+/// step), so the indices are always distinct.
+fn pair_slots(slots: &mut [Tensor], i: usize, o: usize) -> (&Tensor, &mut Tensor) {
+    assert_ne!(i, o, "step would read and write the same arena slot");
+    if i < o {
+        let (a, b) = slots.split_at_mut(o);
+        (&a[i], &mut b[0])
     } else {
-        (&ws.buf_b, &mut ws.buf_a)
-    };
-    debug_assert_eq!(xb.shape, step.in_shape, "activation chain drift");
-    prepare(yb, step.out_shape, step_out_q(&step.kernel, xb.q));
+        let (a, b) = slots.split_at_mut(i);
+        (&b[0], &mut a[o])
+    }
+}
+
+/// [`pair_slots`] for the two-operand residual join: all three slots are
+/// pairwise distinct (both operands and the output are live during the
+/// step).
+fn tri_slots(slots: &mut [Tensor], a: usize, b: usize, o: usize) -> (&Tensor, &Tensor, &mut Tensor) {
+    assert!(
+        a != b && a != o && b != o,
+        "residual add operands must occupy distinct arena slots"
+    );
+    let mut idx = [a, b, o];
+    idx.sort_unstable();
+    let (lo, rest) = slots.split_at_mut(idx[1]);
+    let (mid, hi) = rest.split_at_mut(idx[2] - idx[1]);
+    let mut sorted: [Option<&mut Tensor>; 3] =
+        [Some(&mut lo[idx[0]]), Some(&mut mid[0]), Some(&mut hi[0])];
+    let pos = |k: usize| idx.iter().position(|&v| v == k).unwrap();
+    let ra = sorted[pos(a)].take().unwrap();
+    let rb = sorted[pos(b)].take().unwrap();
+    let ro = sorted[pos(o)].take().unwrap();
+    (&*ra, &*rb, ro)
+}
+
+/// Execute one compiled step from its input slot(s) into its output
+/// slot, entirely inside the arena. Identical event stream to the
+/// reference executors ([`Layer::forward`] / [`space::execute`] /
+/// [`ResidualAdd::forward`]).
+fn run_step<M: Monitor>(step: &Step, ws: &mut Workspace, mon: &mut M) {
     use CompiledKernel as CK;
+    if let CK::Add(a) = &step.kernel {
+        let (xa, xb, yb) = tri_slots(&mut ws.slots, step.in_slots[0], step.in_slots[1], step.out_slot);
+        debug_assert_eq!(xa.shape, step.in_shapes[0], "activation chain drift");
+        debug_assert_eq!(xb.shape, step.in_shapes[1], "activation chain drift");
+        prepare(yb, step.out_shape, step.out_q);
+        a.forward_into(xa, xb, yb, mon);
+        return;
+    }
+    let (xb, yb) = pair_slots(&mut ws.slots, step.in_slots[0], step.out_slot);
+    debug_assert_eq!(xb.shape, step.in_shapes[0], "activation chain drift");
+    prepare(yb, step.out_shape, step.out_q);
     match &step.kernel {
+        CK::Add(_) => unreachable!("handled above"),
         CK::ConvScalar(c) => c.forward_scalar_into(xb, yb, mon),
         CK::ConvBlocked { conv, p, f } => {
             let klen = conv.kernel * conv.kernel * conv.ch_per_group();
@@ -598,9 +744,11 @@ mod tests {
     use super::*;
     use crate::analytic::Primitive;
     use crate::mcu::McuConfig;
-    use crate::models::{experiment_input, experiment_layer, mcunet, LayerParams};
+    use crate::models::{
+        experiment_input, experiment_layer, mcunet, mcunet_residual, LayerParams,
+    };
     use crate::nn::monitor::NoopMonitor;
-    use crate::tuner::{tune_model_shape, Objective, TuningCache};
+    use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
     use crate::util::prng::Rng;
 
     /// Wrap one layer (with its in-flight input format) as a model so it
@@ -613,7 +761,7 @@ mod tests {
 
     #[test]
     fn run_in_matches_space_execute_across_the_entire_candidate_space() {
-        // Satellite: bit-exact AND CountingMonitor-event-identical to the
+        // Bit-exact AND CountingMonitor-event-identical to the
         // allocating reference executor, for every candidate of every
         // layer kind, on a dirty (reused) arena.
         let p = LayerParams::new(2, 3, 6, 4, 4);
@@ -707,6 +855,188 @@ mod tests {
         }
     }
 
+    /// A small residual graph exercising skip liveness with every stage
+    /// primitive available for per-node substitution.
+    fn small_residual(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("small-res", Shape::new(8, 8, 8), QParam::new(5));
+        let skip = g.input();
+        let mut dww = vec![0i8; 8 * 9];
+        rng.fill_i8(&mut dww, -8, 8);
+        let v = g.layer(
+            skip,
+            Layer::Depthwise(QuantDepthwise {
+                kernel: 3,
+                channels: 8,
+                pad: 1,
+                weights: dww,
+                bias: vec![0; 8],
+                q_in: QParam::new(5),
+                q_w: QParam::new(7),
+                q_out: QParam::new(5),
+            }),
+        );
+        let mut pww = vec![0i8; 8 * 8];
+        rng.fill_i8(&mut pww, -16, 16);
+        let v = g.layer(
+            v,
+            Layer::Conv(QuantConv {
+                kernel: 1,
+                groups: 1,
+                in_channels: 8,
+                out_channels: 8,
+                pad: 0,
+                weights: pww,
+                bias: vec![0; 8],
+                q_in: QParam::new(5),
+                q_w: QParam::new(7),
+                q_out: QParam::new(5),
+            }),
+        );
+        let v = g.add(skip, v, QParam::new(4));
+        let v = g.layer(v, Layer::Relu);
+        let v = g.layer(v, Layer::GlobalAvgPool(None));
+        let mut dw = vec![0i8; 8 * 4];
+        rng.fill_i8(&mut dw, -10, 10);
+        g.layer(
+            v,
+            Layer::Dense(QuantDense {
+                in_features: 8,
+                out_features: 4,
+                weights: dw,
+                bias: vec![0; 4],
+                q_in: QParam::new(4),
+                q_w: QParam::new(7),
+                q_out: QParam::new(5),
+            }),
+        );
+        g
+    }
+
+    fn node_candidates(node: &Node) -> Vec<Candidate> {
+        match &node.op {
+            NodeOp::Layer(l) => space::candidates(l),
+            NodeOp::Add(_) => {
+                vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }]
+            }
+        }
+    }
+
+    #[test]
+    fn residual_run_in_matches_reference_across_per_node_candidate_space() {
+        // The graph acceptance criterion: for every node, for every
+        // candidate of that node (others at default), the compiled
+        // engine is bit-exact and event-stream-identical to the
+        // reference executor — on a dirty shared arena where feasible.
+        let mut rng = Rng::new(0x2E5);
+        let g = small_residual(&mut rng);
+        let defaults: Vec<Candidate> = g
+            .nodes
+            .iter()
+            .map(|n| default_node_candidate(n, true))
+            .collect();
+        let mut x = Tensor::zeros(g.input_shape, g.input_q);
+        rng.fill_i8(&mut x.data, -64, 63);
+        for (i, node) in g.nodes.iter().enumerate() {
+            for cand in node_candidates(node) {
+                let mut sched = defaults.clone();
+                sched[i] = cand;
+                let plan = ExecPlan::compile_graph(&g, &sched);
+                let mut ws = Workspace::for_plan(&plan);
+                for trial in 0..2 {
+                    let mut xin = x.clone();
+                    if trial == 1 {
+                        rng.fill_i8(&mut xin.data, -48, 47);
+                    }
+                    let mut ma = CountingMonitor::new();
+                    let want = g.execute_reference(&sched, &xin, &mut ma);
+                    let mut mb = CountingMonitor::new();
+                    let got = plan.run_in(&xin, &mut ws, &mut mb);
+                    assert_eq!(want.data, got.data, "node {i}/{cand:?} trial {trial}");
+                    assert_eq!(want.q, got.q, "node {i}/{cand:?}");
+                    assert_eq!(ma.counts, mb.counts, "node {i}/{cand:?} trial {trial}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_mcunet_tunes_compiles_and_runs_event_identical() {
+        // End-to-end residual acceptance: tune → compile → zero-alloc
+        // run_in, bit-exact and event-identical to the reference, with
+        // the arena report's high-water mark byte-exact.
+        let cfg = McuConfig::default();
+        let mut rng = Rng::new(0x3E5);
+        for prim in Primitive::ALL {
+            let g = mcunet_residual(prim, 11);
+            let mut cache = TuningCache::in_memory();
+            for objective in [Objective::Latency, Objective::PeakRam] {
+                let (sched, _) = tune_graph_shape(&g, &cfg, objective, &mut cache);
+                let plan = ExecPlan::compile_graph(&g, &sched.candidates());
+                let mut ws = Workspace::for_plan(&plan);
+                for _ in 0..2 {
+                    let mut x = Tensor::zeros(g.input_shape, g.input_q);
+                    rng.fill_i8(&mut x.data, -64, 63);
+                    let mut ma = CountingMonitor::new();
+                    let want = g.execute_reference(&sched.candidates(), &x, &mut ma);
+                    let mut mb = CountingMonitor::new();
+                    let got = plan.run_in(&x, &mut ws, &mut mb);
+                    assert_eq!(want.data, got.data, "{prim:?}/{objective:?}");
+                    assert_eq!(ma.counts, mb.counts, "{prim:?}/{objective:?}");
+                }
+                let wp = plan.workspace_plan();
+                assert_eq!(plan.arena_high_water(), wp.activation_bytes, "{prim:?}");
+                assert!(wp.activation_bytes >= wp.peak_pair_bytes, "{prim:?}");
+                assert!(wp.total_bytes() >= sched.peak_ram_bytes, "{prim:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn liveness_arena_never_exceeds_ping_pong_on_linear_models() {
+        // Satellite: on every Table 2 workload and every mcunet zoo
+        // model (all linear chains), the liveness-planned activation
+        // arena is ≤ the legacy two-buffers-of-the-largest provisioning
+        // and ≥ the live-pair lower bound, for both default schedules.
+        let check = |model: &Model| {
+            for simd in [false, true] {
+                let wp = ExecPlan::compile_default(model, simd).workspace_plan();
+                assert!(
+                    wp.activation_bytes <= wp.pingpong_bytes,
+                    "{} simd={simd}: arena {} > ping-pong {}",
+                    model.name,
+                    wp.activation_bytes,
+                    wp.pingpong_bytes
+                );
+                assert!(
+                    wp.activation_bytes >= wp.peak_pair_bytes,
+                    "{} simd={simd}",
+                    model.name
+                );
+            }
+        };
+        for plan in crate::harness::table2_plans() {
+            for prim in Primitive::ALL {
+                check(&experiment_layer(&plan.base, prim, 1));
+            }
+        }
+        for prim in Primitive::ALL {
+            check(&mcunet(prim, 3));
+        }
+    }
+
+    #[test]
+    fn linear_chain_arena_high_water_is_byte_exact_too() {
+        for prim in Primitive::ALL {
+            let model = mcunet(prim, 7);
+            let plan = ExecPlan::compile_default(&model, true);
+            assert_eq!(
+                plan.arena_high_water(),
+                plan.workspace_plan().activation_bytes,
+                "{prim:?}"
+            );
+        }
+    }
+
     #[test]
     fn blocked_candidates_reuse_a_dirty_shared_arena() {
         // One arena sized for the widest blocking serves every smaller
@@ -750,9 +1080,9 @@ mod tests {
 
     #[test]
     fn plan_scratch_accounting_matches_tuner_ram_model() {
-        // Satellite: the engine's per-layer scratch bytes must equal the
-        // schedule space's RAM pricing for every candidate — the two
-        // reports can never drift apart.
+        // The engine's per-layer scratch bytes must equal the schedule
+        // space's RAM pricing for every candidate — the two reports can
+        // never drift apart.
         let p = LayerParams::new(2, 3, 6, 4, 4);
         for prim in Primitive::ALL {
             let model = experiment_layer(&p, prim, 23);
@@ -782,8 +1112,8 @@ mod tests {
 
     #[test]
     fn workspace_plan_covers_tuned_peak_ram_claim() {
-        // Satellite: the arena report for a tuned plan is an upper bound
-        // on the schedule's own peak-RAM claim (reconciling the two RAM
+        // The arena report for a tuned plan is an upper bound on the
+        // schedule's own peak-RAM claim (reconciling the two RAM
         // reports), and the per-layer maxima agree.
         let cfg = McuConfig::default();
         for prim in Primitive::ALL {
@@ -864,5 +1194,21 @@ mod tests {
             })
             .collect();
         ExecPlan::compile(&model, &bad);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not apply")]
+    fn compiling_an_illegal_add_candidate_panics() {
+        let mut rng = Rng::new(0x4E5);
+        let g = small_residual(&mut rng);
+        let bad: Vec<Candidate> = g
+            .nodes
+            .iter()
+            .map(|_| Candidate {
+                kernel: KernelImpl::AsIs,
+                lowering: Lowering::Im2col { patches: 2, filters: 2 },
+            })
+            .collect();
+        ExecPlan::compile_graph(&g, &bad);
     }
 }

@@ -4,10 +4,22 @@
 //! once at deploy time so the hot path performs **zero heap
 //! allocations** (pinned by `benches/infer_hot.rs` with a counting
 //! global allocator) — for the paper-default fixed schedules *and* for
-//! arbitrary tuned per-layer schedules:
+//! arbitrary tuned per-node schedules, on linear chains and residual
+//! graphs alike:
 //!
-//! * two ping-pong activation buffers sized to the largest activation of
-//!   the model (NNoM's layer-buffer scheme);
+//! * activation buffers laid out by the **liveness planner**
+//!   ([`crate::nn::arena`]): each graph value's live interval over the
+//!   topological order is computed at compile time and values with
+//!   disjoint lifetimes share storage. On a linear chain this
+//!   degenerates to the classic two-buffer scheme; on residual graphs
+//!   the skip operand is kept resident exactly as long as its consumer
+//!   needs it. The host engine realizes the plan as one `Tensor` per
+//!   lifetime-disjoint *slot* (keeping the kernels' `&Tensor` /
+//!   `&mut Tensor` signatures borrow-safe), while [`WorkspacePlan`]
+//!   reports the greedy best-fit *packed* arena an MCU deployment
+//!   provisions — never larger than the slot total, and on chains never
+//!   larger than the legacy 2× largest-activation provisioning (both
+//!   property-tested in `nn::plan`);
 //! * a flat q15 im2col column arena sized to the widest (P, F)-blocked
 //!   candidate of the plan (at the paper's 2-patch design point this is
 //!   exactly the CMSIS 2-column cap);
@@ -20,22 +32,23 @@
 //! structs, pre-widened q15 weights — lives in the compiled
 //! [`ExecPlan`], not here, so the arena is content-free scratch: any
 //! plan whose requirements fit the capacities can run in it.
-//! [`Workspace::new`] additionally stores the model's two paper-default
-//! plans (scalar / SIMD), which is what keeps [`Model::forward_in`]
-//! allocation-free; [`Workspace::for_plan`] sizes a bare arena for one
-//! compiled plan (the serving path); a tuned workspace bound to its
-//! schedule comes from `TunedSchedule::workspace`.
+//! [`Workspace::new`] / [`Workspace::new_graph`] additionally store the
+//! deployment's two paper-default plans (scalar / SIMD), which is what
+//! keeps [`Model::forward_in`] / [`Graph::forward_in`] allocation-free;
+//! [`Workspace::for_plan`] sizes a bare arena for one compiled plan (the
+//! serving path); a tuned workspace bound to its schedule comes from
+//! `TunedSchedule::workspace`.
 //!
 //! Because every byte is planned up front, the [`WorkspacePlan`] doubles
-//! as an **exact** peak-RAM report for the deployment — the quantity
-//! `mcu::footprint` estimates and the paper's §3.3 memory-footprint
-//! discussion bounds (and, for tuned plans, an upper bound on the
-//! schedule's own `peak_ram_bytes` claim — tested in `nn::plan`).
+//! as the deployment's peak-RAM report — the quantity `mcu::footprint`
+//! estimates and the paper's §3.3 memory-footprint discussion bounds
+//! (and, for tuned plans, an upper bound on the schedule's own
+//! `peak_ram_bytes` claim — tested in `nn::plan`).
 
 use crate::quant::QParam;
 use crate::util::fnv::Fnv1a;
 
-use super::graph::{Layer, LayerProfile, Model};
+use super::graph::{Graph, Layer, LayerProfile, Model, NodeOp};
 use super::monitor::Monitor;
 use super::plan::ExecPlan;
 use super::tensor::{Shape, Tensor};
@@ -44,12 +57,18 @@ use super::tensor::{Shape, Tensor};
 /// report. All quantities are bytes.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkspacePlan {
-    /// The two ping-pong activation buffers (each sized to the largest
-    /// activation, input included).
+    /// Liveness-planned activation arena: greedy best-fit offsets over
+    /// each value's live interval (TFLite-Micro style), capped by the
+    /// lifetime-disjoint slot partition. This is the activation RAM an
+    /// MCU deployment provisions.
     pub activation_bytes: usize,
-    /// Largest input+output activation pair — the tight lower bound an
-    /// in-place ping-pong deployment must provision (`mcu::footprint`'s
-    /// estimate of the same quantity).
+    /// The legacy provisioning figure — two buffers of the largest
+    /// activation (the historical ping-pong scheme). Kept so reports can
+    /// show the liveness plan's saving; `activation_bytes` ≤ this on
+    /// every linear chain.
+    pub pingpong_bytes: usize,
+    /// Largest concurrently-live (inputs + output) byte sum of any
+    /// single step — the liveness lower bound no layout can beat.
     pub peak_pair_bytes: usize,
     /// Shift-convolution intermediate map `I` (scalar path), sized to the
     /// largest shift-layer input.
@@ -65,8 +84,9 @@ pub struct WorkspacePlan {
 }
 
 impl WorkspacePlan {
-    /// Total arena bytes held at run time (weights in flash excluded;
-    /// the widened copies are SRAM on our host-side engine).
+    /// Total arena bytes a deployment provisions at run time (weights in
+    /// flash excluded; the widened copies are SRAM on our host-side
+    /// engine).
     pub fn total_bytes(&self) -> usize {
         self.activation_bytes
             + self.shift_scratch_bytes
@@ -80,6 +100,7 @@ impl WorkspacePlan {
     pub fn max(&self, other: &WorkspacePlan) -> WorkspacePlan {
         WorkspacePlan {
             activation_bytes: self.activation_bytes.max(other.activation_bytes),
+            pingpong_bytes: self.pingpong_bytes.max(other.pingpong_bytes),
             peak_pair_bytes: self.peak_pair_bytes.max(other.peak_pair_bytes),
             shift_scratch_bytes: self.shift_scratch_bytes.max(other.shift_scratch_bytes),
             im2col_bytes: self.im2col_bytes.max(other.im2col_bytes),
@@ -88,13 +109,18 @@ impl WorkspacePlan {
         }
     }
 
-    /// One-line report for logs and CLI output.
+    /// One-line report for logs and CLI output: the liveness arena next
+    /// to the legacy largest×2 figure, with the per-model delta.
     pub fn summary(&self) -> String {
+        let delta = self.pingpong_bytes as i64 - self.activation_bytes as i64;
         format!(
-            "arena {} B (activations {} B [peak pair {} B], im2col {} B, \
-             block accumulators {} B, shift scratch {} B, widened weights {} B)",
+            "arena {} B (liveness activations {} B vs ping-pong {} B [Δ {} B], \
+             peak live pair {} B, im2col {} B, block accumulators {} B, \
+             shift scratch {} B, widened weights {} B)",
             self.total_bytes(),
             self.activation_bytes,
+            self.pingpong_bytes,
+            delta,
             self.peak_pair_bytes,
             self.im2col_bytes,
             self.acc_bytes,
@@ -127,6 +153,41 @@ fn tensor_with_capacity(cap: usize, q: QParam) -> Tensor {
     }
 }
 
+/// Fold one layer's parameter tensors into a fingerprint stream.
+fn hash_layer_params(h: &mut Fnv1a, layer: &Layer) {
+    match layer {
+        Layer::Conv(c) => {
+            h.i8s(&c.weights);
+            h.i32s(&c.bias);
+        }
+        Layer::Depthwise(d) => {
+            h.i8s(&d.weights);
+            h.i32s(&d.bias);
+        }
+        Layer::Shift(s) => {
+            h.i8s(&s.weights);
+            h.i32s(&s.bias);
+        }
+        Layer::AddConv(a) => {
+            h.i8s(&a.weights);
+            h.i32s(&a.bias);
+        }
+        Layer::Bn(b) => {
+            h.i16s(&b.m);
+            h.i32s(&b.b);
+        }
+        Layer::Dense(d) => {
+            h.i8s(&d.weights);
+            h.i32s(&d.bias);
+        }
+        // parameterless layers still advance the stream so layer
+        // reordering changes the fingerprint
+        Layer::Relu | Layer::MaxPool2 | Layer::GlobalAvgPool(_) => {
+            h.byte(0x9e);
+        }
+    }
+}
+
 /// FNV-1a fingerprint of every parameter tensor in the model. Compiled
 /// plans (and the workspace's stored default plans) cache substituted
 /// kernel structs and pre-widened weight copies, so reusing them against
@@ -138,35 +199,31 @@ fn tensor_with_capacity(cap: usize, q: QParam) -> Tensor {
 pub(crate) fn model_weight_fingerprint(model: &Model) -> u64 {
     let mut h = Fnv1a::new();
     for layer in &model.layers {
-        match layer {
-            Layer::Conv(c) => {
-                h.i8s(&c.weights);
-                h.i32s(&c.bias);
+        hash_layer_params(&mut h, layer);
+    }
+    h.finish()
+}
+
+/// [`model_weight_fingerprint`] for graphs: parameters plus wiring. The
+/// linear default (node `i` consuming value `i`) contributes nothing to
+/// the stream, so a lowered `Model` fingerprints identically to the
+/// model itself; any skip edge, fan-out or residual join perturbs the
+/// hash — a workspace planned for a chain cannot be silently reused for
+/// a rewired graph with the same ops.
+pub(crate) fn graph_weight_fingerprint(graph: &Graph) -> u64 {
+    let mut h = Fnv1a::new();
+    for (i, node) in graph.nodes.iter().enumerate() {
+        match &node.op {
+            NodeOp::Layer(layer) => hash_layer_params(&mut h, layer),
+            NodeOp::Add(a) => {
+                h.byte(0xAD);
+                h.i32s(&[a.q_out.frac_bits]);
             }
-            Layer::Depthwise(d) => {
-                h.i8s(&d.weights);
-                h.i32s(&d.bias);
-            }
-            Layer::Shift(s) => {
-                h.i8s(&s.weights);
-                h.i32s(&s.bias);
-            }
-            Layer::AddConv(a) => {
-                h.i8s(&a.weights);
-                h.i32s(&a.bias);
-            }
-            Layer::Bn(b) => {
-                h.i16s(&b.m);
-                h.i32s(&b.b);
-            }
-            Layer::Dense(d) => {
-                h.i8s(&d.weights);
-                h.i32s(&d.bias);
-            }
-            // parameterless layers still advance the stream so layer
-            // reordering changes the fingerprint
-            Layer::Relu | Layer::MaxPool2 | Layer::GlobalAvgPool(_) => {
-                h.byte(0x9e);
+        }
+        if node.inputs.len() != 1 || node.inputs[0] != i {
+            h.byte(0x7E);
+            for &v in &node.inputs {
+                h.i32s(&[v as i32]);
             }
         }
     }
@@ -180,18 +237,18 @@ pub(crate) fn model_weight_fingerprint(model: &Model) -> u64 {
 /// worker instead.
 #[derive(Debug)]
 pub struct Workspace {
-    /// Name, layer count, input shape and parameter fingerprint of the
-    /// model this arena was planned for (guards the `forward_in` path
-    /// against cross-model reuse — including a same-shaped redeployment
-    /// with different weights, which would otherwise silently hit the
-    /// stale compiled default plans).
+    /// Name, node count, input shape and parameter fingerprint of the
+    /// deployment this arena was planned for (guards the `forward_in`
+    /// path against cross-model reuse — including a same-shaped
+    /// redeployment with different weights, which would otherwise
+    /// silently hit the stale compiled default plans).
     model_name: String,
-    n_layers: usize,
+    n_nodes: usize,
     input_shape: Shape,
     weight_fp: u64,
-    /// Ping-pong activation buffers.
-    pub(crate) buf_a: Tensor,
-    pub(crate) buf_b: Tensor,
+    /// Activation slot buffers: one tensor per lifetime-disjoint slot of
+    /// the liveness plan (two for any linear chain).
+    pub(crate) slots: Vec<Tensor>,
     /// Shift-conv scalar intermediate map `I`.
     pub(crate) shift_inter: Tensor,
     /// Flat q15 im2col / gather / widen column arena (fixed length =
@@ -199,9 +256,10 @@ pub struct Workspace {
     pub(crate) cols: Vec<i16>,
     /// `mat_mult_block` accumulators of the widest blocked layer.
     pub(crate) acc: Vec<i32>,
-    /// The model's compiled paper-default plans (scalar / SIMD), present
-    /// only on [`Workspace::new`] arenas — what keeps `forward_in`
-    /// allocation-free without a per-call compile.
+    /// The deployment's compiled paper-default plans (scalar / SIMD),
+    /// present only on [`Workspace::new`] / [`Workspace::new_graph`]
+    /// arenas — what keeps `forward_in` allocation-free without a
+    /// per-call compile.
     scalar_plan: Option<Box<ExecPlan>>,
     simd_plan: Option<Box<ExecPlan>>,
     /// A tuned plan bound to this arena (`TunedSchedule::workspace`).
@@ -216,23 +274,40 @@ impl Workspace {
     /// compile those two default plans into the arena so
     /// [`Model::forward_in`] stays allocation-free.
     pub fn new(model: &Model) -> Self {
-        let scalar = ExecPlan::compile_default(model, false);
-        let simd = ExecPlan::compile_default(model, true);
+        let mut ws = Self::new_graph(&Graph::from_model(model));
+        // the model lane validates against the model-side fingerprint
+        // (identical to the lowered graph's by construction)
+        ws.weight_fp = model_weight_fingerprint(model);
+        ws
+    }
+
+    /// [`Workspace::new`] for a DAG deployment: plan the liveness arena
+    /// for `graph` and store its two compiled default plans so
+    /// [`Graph::forward_in`] stays allocation-free.
+    pub fn new_graph(graph: &Graph) -> Self {
+        let scalar = ExecPlan::compile_graph_default(graph, false);
+        let simd = ExecPlan::compile_graph_default(graph, true);
         let report = scalar.workspace_plan().max(&simd.workspace_plan());
-        let (sa, sc, sacc, ssh) = scalar.requirements();
-        let (ma, mc, macc, msh) = simd.requirements();
+        let caps: Vec<usize> = scalar
+            .slot_caps()
+            .iter()
+            .zip(simd.slot_caps())
+            .map(|(a, b)| *a.max(b))
+            .collect();
+        let (sc, sacc, ssh) = scalar.scratch_req();
+        let (mc, macc, msh) = simd.scratch_req();
         let mut ws = Self::with_capacities(
-            sa.max(ma),
+            &caps,
             sc.max(mc),
             sacc.max(macc),
             ssh.max(msh),
-            model.input_q,
+            graph.input_q,
             report,
         );
-        ws.model_name = model.name.clone();
-        ws.n_layers = model.layers.len();
-        ws.input_shape = model.input_shape;
-        ws.weight_fp = model_weight_fingerprint(model);
+        ws.model_name = graph.name.clone();
+        ws.n_nodes = graph.nodes.len();
+        ws.input_shape = graph.input_shape;
+        ws.weight_fp = graph_weight_fingerprint(graph);
         ws.scalar_plan = Some(Box::new(scalar));
         ws.simd_plan = Some(Box::new(simd));
         ws
@@ -241,9 +316,9 @@ impl Workspace {
     /// Plan a bare arena sized for one compiled plan — the serving path:
     /// the caller keeps the plan and drives [`ExecPlan::run_in`].
     pub fn for_plan(plan: &ExecPlan) -> Self {
-        let (max_act, col_len, acc_len, shift_len) = plan.requirements();
+        let (col_len, acc_len, shift_len) = plan.scratch_req();
         let mut ws = Self::with_capacities(
-            max_act,
+            plan.slot_caps(),
             col_len,
             acc_len,
             shift_len,
@@ -251,7 +326,7 @@ impl Workspace {
             plan.workspace_plan(),
         );
         ws.model_name = plan.model_name().to_string();
-        ws.n_layers = plan.n_layers();
+        ws.n_nodes = plan.n_layers();
         ws.input_shape = plan.input_shape();
         ws.weight_fp = plan.weight_fp();
         ws
@@ -267,7 +342,7 @@ impl Workspace {
     }
 
     fn with_capacities(
-        max_act: usize,
+        slot_caps: &[usize],
         col_len: usize,
         acc_len: usize,
         shift_len: usize,
@@ -276,11 +351,10 @@ impl Workspace {
     ) -> Self {
         Self {
             model_name: String::new(),
-            n_layers: 0,
+            n_nodes: 0,
             input_shape: Shape::new(0, 0, 0),
             weight_fp: 0,
-            buf_a: tensor_with_capacity(max_act, q),
-            buf_b: tensor_with_capacity(max_act, q),
+            slots: slot_caps.iter().map(|&c| tensor_with_capacity(c, q)).collect(),
             shift_inter: tensor_with_capacity(shift_len, q),
             cols: vec![0i16; col_len],
             acc: vec![0i32; acc_len],
@@ -291,7 +365,7 @@ impl Workspace {
         }
     }
 
-    /// The byte-exact arena plan (the deployment's peak-RAM report).
+    /// The planned arena breakdown (the deployment's peak-RAM report).
     pub fn plan(&self) -> WorkspacePlan {
         self.plan
     }
@@ -300,19 +374,24 @@ impl Workspace {
     /// (scratch is content-free, so capacity is the only correctness
     /// condition for [`ExecPlan::run_in`]).
     pub fn fits_plan(&self, plan: &ExecPlan) -> bool {
-        let (max_act, col_len, acc_len, shift_len) = plan.requirements();
-        self.buf_a.data.capacity() >= max_act
-            && self.buf_b.data.capacity() >= max_act
+        let (col_len, acc_len, shift_len) = plan.scratch_req();
+        plan.slot_caps()
+            .iter()
+            .enumerate()
+            .all(|(s, &cap)| {
+                self.slots
+                    .get(s)
+                    .map(|t| t.data.capacity() >= cap)
+                    .unwrap_or(false)
+            })
             && self.cols.len() >= col_len
             && self.acc.len() >= acc_len
             && self.shift_inter.data.capacity() >= shift_len
     }
 
-    /// O(1) structural identity: name, layer count, input shape.
-    fn fits_structurally(&self, model: &Model) -> bool {
-        self.model_name == model.name
-            && self.n_layers == model.layers.len()
-            && self.input_shape == model.input_shape
+    /// O(1) structural identity: name, node count, input shape.
+    fn fits_structurally(&self, name: &str, n_nodes: usize, input_shape: Shape) -> bool {
+        self.model_name == name && self.n_nodes == n_nodes && self.input_shape == input_shape
     }
 
     /// Whether this arena was planned for `model` — structure **and**
@@ -322,34 +401,51 @@ impl Workspace {
     /// structure every call and re-validates the fingerprint only in
     /// debug builds, so the release hot path pays O(1).
     pub fn fits(&self, model: &Model) -> bool {
-        self.fits_structurally(model) && self.weight_fp == model_weight_fingerprint(model)
+        self.fits_structurally(&model.name, model.layers.len(), model.input_shape)
+            && self.weight_fp == model_weight_fingerprint(model)
     }
 
-    /// The ping-pong slot holding the last run's output.
-    pub(crate) fn output(&self, cur_is_a: bool) -> &Tensor {
-        if cur_is_a {
-            &self.buf_a
-        } else {
-            &self.buf_b
-        }
+    /// [`Workspace::fits`] for graph deployments (parameters + wiring).
+    pub fn fits_graph(&self, graph: &Graph) -> bool {
+        self.fits_structurally(&graph.name, graph.nodes.len(), graph.input_shape)
+            && self.weight_fp == graph_weight_fingerprint(graph)
+    }
+
+    /// The slot holding the last run's output.
+    pub(crate) fn output(&self, slot: usize) -> &Tensor {
+        &self.slots[slot]
     }
 
     /// Guard the `forward_in` family: the stored default plans were
-    /// compiled from the model this arena was planned for; running a
-    /// different (or redeployed) model through them would silently use
+    /// compiled from the deployment this arena was planned for; running
+    /// a different (or redeployed) model through them would silently use
     /// stale weights. Structural identity is asserted on every call; the
     /// full parameter fingerprint is re-asserted in debug builds —
-    /// release callers validate at bind time via [`Workspace::fits`].
+    /// release callers validate at bind time via [`Workspace::fits`] /
+    /// [`Workspace::fits_graph`].
     fn check_model(&self, model: &Model) {
         let ok = if cfg!(debug_assertions) {
             self.fits(model)
         } else {
-            self.fits_structurally(model)
+            self.fits_structurally(&model.name, model.layers.len(), model.input_shape)
         };
         assert!(
             ok,
             "workspace was planned for model {:?}, not {:?} (stale parameters?)",
             self.model_name, model.name
+        );
+    }
+
+    fn check_graph(&self, graph: &Graph) {
+        let ok = if cfg!(debug_assertions) {
+            self.fits_graph(graph)
+        } else {
+            self.fits_structurally(&graph.name, graph.nodes.len(), graph.input_shape)
+        };
+        assert!(
+            ok,
+            "workspace was planned for model {:?}, not {:?} (stale parameters or rewired graph?)",
+            self.model_name, graph.name
         );
     }
 
@@ -385,9 +481,9 @@ impl Model {
     ) -> &'w Tensor {
         ws.check_model(self);
         let plan = ws.take_default_plan(simd);
-        let cur_is_a = plan.run_steps(x, ws, mon);
+        let out_slot = plan.run_steps(x, ws, mon);
         ws.put_default_plan(simd, plan);
-        ws.output(cur_is_a)
+        ws.output(out_slot)
     }
 
     /// [`Model::forward_profiled`] inside a workspace: per-layer op
@@ -405,9 +501,43 @@ impl Model {
         let plan = ws.take_default_plan(simd);
         // run_profiled_in borrows ws for the output reference; go through
         // the step loop manually to keep the take/put dance borrow-clean
-        let (cur_is_a, profiles) = plan.run_steps_profiled(x, ws);
+        let (out_slot, profiles) = plan.run_steps_profiled(x, ws);
         ws.put_default_plan(simd, plan);
-        (ws.output(cur_is_a), profiles)
+        (ws.output(out_slot), profiles)
+    }
+}
+
+impl Graph {
+    /// [`Model::forward_in`] for DAG deployments: run inside a
+    /// [`Workspace::new_graph`] arena — bit-exact with
+    /// [`Graph::forward`], identical event stream, zero steady-state
+    /// heap allocations.
+    pub fn forward_in<'w, M: Monitor>(
+        &self,
+        x: &Tensor,
+        simd: bool,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w Tensor {
+        ws.check_graph(self);
+        let plan = ws.take_default_plan(simd);
+        let out_slot = plan.run_steps(x, ws, mon);
+        ws.put_default_plan(simd, plan);
+        ws.output(out_slot)
+    }
+
+    /// [`Model::forward_profiled_in`] for DAG deployments.
+    pub fn forward_profiled_in<'w>(
+        &self,
+        x: &Tensor,
+        simd: bool,
+        ws: &'w mut Workspace,
+    ) -> (&'w Tensor, Vec<LayerProfile>) {
+        ws.check_graph(self);
+        let plan = ws.take_default_plan(simd);
+        let (out_slot, profiles) = plan.run_steps_profiled(x, ws);
+        ws.put_default_plan(simd, plan);
+        (ws.output(out_slot), profiles)
     }
 }
 
@@ -536,16 +666,21 @@ mod tests {
     }
 
     #[test]
-    fn plan_reports_exact_arena_breakdown() {
+    fn plan_reports_liveness_arena_breakdown() {
         let mut rng = Rng::new(0xC33);
         let model = kitchen_sink(&mut rng);
         let ws = Workspace::new(&model);
         let plan = ws.plan();
         let shapes = model.shapes();
         let max_act = shapes.iter().map(|s| s.len()).max().unwrap();
-        assert_eq!(plan.activation_bytes, 2 * max_act);
+        // the legacy figure is still reported for the delta
+        assert_eq!(plan.pingpong_bytes, 2 * max_act);
         let peak_pair = shapes.windows(2).map(|w| w[0].len() + w[1].len()).max().unwrap();
         assert_eq!(plan.peak_pair_bytes, peak_pair);
+        // liveness packing on a chain: bounded below by the largest live
+        // pair and above by the ping-pong provisioning
+        assert!(plan.activation_bytes >= peak_pair);
+        assert!(plan.activation_bytes <= plan.pingpong_bytes);
         // widest column arena: the 3×3×4 conv blocked at the 2-patch
         // design point (2 × 36 q15 values) vs shift gather (2 × 8) vs
         // dense widening (6)
@@ -576,6 +711,19 @@ mod tests {
                 + plan.widened_weight_bytes
         );
         assert!(plan.summary().contains("arena"));
+        assert!(plan.summary().contains("ping-pong"));
+    }
+
+    #[test]
+    fn chain_workspaces_keep_exactly_two_slots() {
+        // linear chains must not regress past the historical two-buffer
+        // scheme: the liveness slot partition degenerates to ping-pong
+        let mut rng = Rng::new(0x2C4);
+        let model = kitchen_sink(&mut rng);
+        let ws = Workspace::new(&model);
+        assert_eq!(ws.slots.len(), 2);
+        let max_act = model.shapes().iter().map(|s| s.len()).max().unwrap();
+        assert!(ws.slots.iter().all(|t| t.data.capacity() <= max_act));
     }
 
     #[test]
@@ -583,8 +731,7 @@ mod tests {
         let mut rng = Rng::new(0xD44);
         let model = kitchen_sink(&mut rng);
         let mut ws = Workspace::new(&model);
-        let cap_a = ws.buf_a.data.capacity();
-        let cap_b = ws.buf_b.data.capacity();
+        let caps: Vec<usize> = ws.slots.iter().map(|t| t.data.capacity()).collect();
         let cap_i = ws.shift_inter.data.capacity();
         let cap_c = ws.cols.len();
         let cap_k = ws.acc.len();
@@ -594,8 +741,8 @@ mod tests {
             model.forward_in(&x, true, &mut ws, &mut NoopMonitor);
             model.forward_in(&x, false, &mut ws, &mut NoopMonitor);
         }
-        assert_eq!(ws.buf_a.data.capacity(), cap_a);
-        assert_eq!(ws.buf_b.data.capacity(), cap_b);
+        let caps_after: Vec<usize> = ws.slots.iter().map(|t| t.data.capacity()).collect();
+        assert_eq!(caps, caps_after);
         assert_eq!(ws.shift_inter.data.capacity(), cap_i);
         assert_eq!(ws.cols.len(), cap_c);
         assert_eq!(ws.acc.len(), cap_k);
@@ -628,6 +775,66 @@ mod tests {
         }
         let x = Tensor::zeros(redeployed.input_shape, redeployed.input_q);
         redeployed.forward_in(&x, true, &mut ws, &mut NoopMonitor);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace was planned for model")]
+    fn rewired_graph_with_same_ops_is_rejected() {
+        // same ops, same shapes — but a skip edge: the wiring enters the
+        // graph fingerprint, so the chain-planned workspace must refuse
+        let mut rng = Rng::new(0x3AA);
+        let mut conv = test_random_conv(&mut rng, 1, 3, 4, 4);
+        conv.q_in = QParam::new(5);
+        conv.q_out = QParam::new(5);
+        let mut chain = Graph::new("wired", Shape::new(6, 6, 4), QParam::new(5));
+        let v = chain.layer(chain.input(), Layer::Conv(conv.clone()));
+        let v = chain.layer(v, Layer::Relu);
+        chain.layer(v, Layer::Relu); // consumes the previous value
+        let mut fanout = Graph::new("wired", Shape::new(6, 6, 4), QParam::new(5));
+        let s0 = fanout.input();
+        let v = fanout.layer(s0, Layer::Conv(conv));
+        let _ = fanout.layer(v, Layer::Relu);
+        fanout.layer(v, Layer::Relu); // skip edge: consumes the conv output
+        let mut ws = Workspace::new_graph(&chain);
+        let x = Tensor::zeros(fanout.input_shape, fanout.input_q);
+        fanout.forward_in(&x, false, &mut ws, &mut NoopMonitor);
+    }
+
+    #[test]
+    fn graph_fingerprint_matches_model_fingerprint_on_chains() {
+        let mut rng = Rng::new(0x4BB);
+        let model = kitchen_sink(&mut rng);
+        let graph = Graph::from_model(&model);
+        assert_eq!(model_weight_fingerprint(&model), graph_weight_fingerprint(&graph));
+    }
+
+    #[test]
+    fn graph_forward_in_matches_graph_forward_dirty() {
+        // residual graph through the stored default plans: bit-exact and
+        // event-identical on a dirty arena, both code paths
+        let mut rng = Rng::new(0x5CC);
+        let mut g = Graph::new("res-ws", Shape::new(6, 6, 4), QParam::new(5));
+        let skip = g.input();
+        let mut conv = test_random_conv(&mut rng, 1, 3, 4, 4);
+        conv.q_in = QParam::new(5);
+        conv.q_out = QParam::new(5);
+        let v = g.layer(skip, Layer::Conv(conv));
+        let v = g.layer(v, Layer::Relu);
+        g.add(skip, v, QParam::new(4));
+        let mut ws = Workspace::new_graph(&g);
+        assert!(ws.fits_graph(&g));
+        for simd in [false, true] {
+            for trial in 0..3 {
+                let mut x = Tensor::zeros(g.input_shape, g.input_q);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let mut ma = CountingMonitor::new();
+                let want = g.forward(&x, simd, &mut ma);
+                let mut mb = CountingMonitor::new();
+                let got = g.forward_in(&x, simd, &mut ws, &mut mb);
+                assert_eq!(want.data, got.data, "simd={simd} trial={trial}");
+                assert_eq!(ma.counts, mb.counts, "simd={simd} trial={trial}");
+            }
+        }
     }
 
     #[test]

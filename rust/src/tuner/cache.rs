@@ -18,8 +18,12 @@ use crate::util::json::Json;
 use super::space::{Candidate, KernelImpl, Lowering};
 
 /// Cache file format version (bump on incompatible schema changes —
-/// mismatching files are discarded wholesale).
-pub const CACHE_VERSION: i64 = 1;
+/// mismatching files are discarded wholesale). v2: keys switched from
+/// per-layer to per-node signatures, which fold the node's input
+/// topology (`~in<d1[,d2]>` producer-distance suffix) so graph rewiring
+/// invalidates by construction; v1 files hold orphaned keys and are
+/// discarded.
+pub const CACHE_VERSION: i64 = 2;
 
 /// A cached per-layer decision: the winning candidate plus its simulated
 /// measurement (all inputs to the objective, so replay needs no simulator).
@@ -280,5 +284,55 @@ mod tests {
         assert!(c.get(&k_f20).is_none(), "20 MHz must miss an 84 MHz entry");
         // objective change misses too
         assert!(c.get(&cache_key(sig, &mcu_fingerprint(&os), "energy")).is_none());
+    }
+
+    #[test]
+    fn graph_topology_change_invalidates_by_key() {
+        // Same ops, same shapes — but a skip edge rewires one node's
+        // input. The per-node signature folds the producer distance, so
+        // the rewired node composes a different cache key instead of
+        // silently replaying the linear schedule; the untouched prefix
+        // keeps sharing its entries.
+        use crate::models::{experiment_layer, LayerParams};
+        use crate::nn::{Graph, Layer};
+        use crate::quant::QParam;
+        use crate::tuner::space::node_signature;
+
+        let p = LayerParams::new(1, 3, 6, 4, 4);
+        let model = experiment_layer(&p, crate::analytic::Primitive::Standard, 9);
+        let conv = model.layers[0].clone();
+        let build = |skip: bool| {
+            let mut g = Graph::new("topo", crate::nn::Shape::new(6, 6, 4), QParam::new(7));
+            let v0 = g.input();
+            let v1 = g.layer(v0, conv.clone());
+            let v2 = g.layer(v1, Layer::Relu);
+            // linear: consume the relu output; skip: consume the conv
+            // output from two steps back (same 6×6×4 shape either way)
+            g.layer(if skip { v1 } else { v2 }, Layer::Relu);
+            g
+        };
+        let chain = build(false);
+        let skip = build(true);
+        let (cs, ss) = (chain.value_shapes(), skip.value_shapes());
+        assert_eq!(cs, ss, "the rewiring must not change any shape");
+        let mcu = mcu_fingerprint(&McuConfig::default());
+        // untouched nodes share keys across the two graphs
+        for i in 0..2 {
+            assert_eq!(
+                cache_key(&node_signature(&chain.nodes[i], i, &cs), &mcu, "latency"),
+                cache_key(&node_signature(&skip.nodes[i], i, &ss), &mcu, "latency"),
+                "node {i}"
+            );
+        }
+        // the rewired consumer re-keys
+        let k_chain = cache_key(&node_signature(&chain.nodes[2], 2, &cs), &mcu, "latency");
+        let k_skip = cache_key(&node_signature(&skip.nodes[2], 2, &ss), &mcu, "latency");
+        assert_ne!(k_chain, k_skip);
+        // a cache warmed on the chain answers the chain key but misses
+        // the skip key — no silent linear-schedule replay
+        let mut c = TuningCache::in_memory();
+        c.put(k_chain.clone(), entry(0.004));
+        assert!(c.get(&k_chain).is_some());
+        assert!(c.get(&k_skip).is_none());
     }
 }

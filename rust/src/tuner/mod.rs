@@ -23,9 +23,15 @@
 //!   but a **cold tune executes zero forwards** (shapes propagate via
 //!   `Layer::output_shape`; `TuneStats::evaluations` pins 0 on cold and
 //!   warm runs alike, with effort reported in `TuneStats::analytic`);
-//! * [`cache`] persists decisions as JSON keyed by layer shape +
-//!   [`crate::mcu::McuConfig`] + objective, so a warm re-deployment
-//!   does not even re-run the shape arithmetic.
+//! * [`cache`] persists decisions as JSON keyed by per-node signature
+//!   (op + input shape + producer-distance topology, so residual
+//!   rewirings re-key) + [`crate::mcu::McuConfig`] + objective, so a
+//!   warm re-deployment does not even re-run the shape arithmetic.
+//!
+//! Tuning operates on the DAG graph IR ([`tune_graph_shape`]); linear
+//! models are the chain-graph special case ([`tune_model_shape`]).
+//! Residual joins ([`crate::nn::ResidualAdd`]) have a single scalar
+//! implementation, priced by the same analytic engine.
 //!
 //! Wiring: `coordinator::pipeline::FloatModel::deploy_tuned` tunes at
 //! deployment, `coordinator::server::InferenceServer::start_tuned`
@@ -40,7 +46,8 @@ pub mod space;
 
 pub use cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
 pub use search::{
-    simd_flags, tune_model, tune_model_shape, LayerDecision, TuneStats, TunedSchedule,
+    simd_flags, tune_graph_shape, tune_model, tune_model_shape, LayerDecision, TuneStats,
+    TunedSchedule,
 };
 pub use space::{analytic_counts, candidates, Candidate, KernelImpl, Lowering};
 

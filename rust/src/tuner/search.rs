@@ -1,24 +1,29 @@
-//! The schedule search: for every layer of a model, score every
-//! schedule-space candidate **analytically** — closed-form op counts
-//! ([`crate::tuner::space::analytic_counts`]) mapped through the MCU
-//! cycle/energy model ([`crate::mcu::measure`]) — under the configured
-//! objective, keep the winner, and assemble a [`TunedSchedule`]. The
-//! analytic counts equal the instrumented ones exactly (property-tested),
-//! so the decisions are byte-identical to the original simulator-scored
-//! search while a cold tune costs shape arithmetic instead of thousands
-//! of instrumented forwards; activation shapes propagate through
-//! [`crate::nn::Layer::output_shape`], so tuning executes **zero**
-//! forwards. Layer decisions are independent because the engine fixes
-//! activation formats at deployment time, so per-layer minimization is
-//! globally optimal for additive objectives — and therefore never worse
-//! than any fixed (primitive, path) configuration the sweep harness
-//! measures.
+//! The schedule search: for every node of a graph (linear models lower
+//! to chain graphs), score every schedule-space candidate
+//! **analytically** — closed-form op counts
+//! ([`crate::tuner::space::analytic_counts`], plus
+//! [`crate::nn::counts::residual_add_counts`] for residual joins) mapped
+//! through the MCU cycle/energy model ([`crate::mcu::measure`]) — under
+//! the configured objective, keep the winner, and assemble a
+//! [`TunedSchedule`]. The analytic counts equal the instrumented ones
+//! exactly (property-tested), so the decisions are byte-identical to the
+//! original simulator-scored search while a cold tune costs shape
+//! arithmetic instead of thousands of instrumented forwards; activation
+//! shapes propagate through [`crate::nn::Graph::value_shapes`], so
+//! tuning executes **zero** forwards. Node decisions are independent
+//! because the engine fixes activation formats at deployment time, so
+//! per-node minimization is globally optimal for additive objectives —
+//! and therefore never worse than any fixed (primitive, path)
+//! configuration the sweep harness measures. Cache keys are per-node
+//! signatures ([`space::node_signature`]), which fold the node's input
+//! topology: adding a skip edge re-keys, so a linear schedule is never
+//! silently replayed onto a rewired graph.
 
 use crate::mcu::{measure, McuConfig, Measurement};
-use crate::nn::{ExecPlan, Model, Monitor, Shape, Tensor, Workspace};
+use crate::nn::{counts, ExecPlan, Graph, Model, Monitor, Node, NodeOp, Shape, Tensor, Workspace};
 
 use super::cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
-use super::space::{self, Candidate};
+use super::space::{self, Candidate, KernelImpl, Lowering};
 use super::Objective;
 
 /// The tuned decision for one layer.
@@ -88,8 +93,17 @@ impl TunedSchedule {
         t
     }
 
-    /// The per-layer candidate schedule as a plain list (the input to
-    /// [`ExecPlan::compile`]).
+    /// Execute a *graph* under this schedule through the allocating
+    /// reference executor ([`Graph::execute_reference`]) — the DAG
+    /// analog of [`TunedSchedule::run`], and the oracle the compiled
+    /// engine is property-tested against on residual topologies.
+    pub fn run_graph<M: Monitor>(&self, graph: &Graph, x: &Tensor, mon: &mut M) -> Tensor {
+        assert_eq!(self.layers.len(), graph.nodes.len(), "schedule/graph mismatch");
+        graph.execute_reference(&self.candidates(), x, mon)
+    }
+
+    /// The per-node candidate schedule as a plain list (the input to
+    /// [`ExecPlan::compile`] / [`ExecPlan::compile_graph`]).
     pub fn candidates(&self) -> Vec<Candidate> {
         self.layers.iter().map(|d| d.candidate).collect()
     }
@@ -101,11 +115,22 @@ impl TunedSchedule {
         ExecPlan::compile(model, &self.candidates())
     }
 
+    /// [`TunedSchedule::compile`] for graph deployments.
+    pub fn compile_graph(&self, graph: &Graph) -> ExecPlan {
+        assert_eq!(self.layers.len(), graph.nodes.len(), "schedule/graph mismatch");
+        ExecPlan::compile_graph(graph, &self.candidates())
+    }
+
     /// Plan (and bind) the inference arena for this schedule: the
     /// workspace [`TunedSchedule::run_in`] needs, holding the compiled
     /// plan so the steady-state path never recompiles or allocates.
     pub fn workspace(&self, model: &Model) -> Workspace {
         Workspace::bind(self.compile(model))
+    }
+
+    /// [`TunedSchedule::workspace`] for graph deployments.
+    pub fn workspace_graph(&self, graph: &Graph) -> Workspace {
+        Workspace::bind(self.compile_graph(graph))
     }
 
     /// Execute one inference through the compiled engine inside a
@@ -144,9 +169,9 @@ impl TunedSchedule {
             self.model,
             self.objective
         );
-        let cur_is_a = plan.run_steps(x, ws, mon);
+        let out_slot = plan.run_steps(x, ws, mon);
         ws.bound = Some(plan);
-        ws.output(cur_is_a)
+        ws.output(out_slot)
     }
 
     /// Collapse the schedule totals into a [`Measurement`] (power is the
@@ -260,10 +285,82 @@ pub fn tune_model(
 }
 
 /// Tune from shapes alone: the analytic scoring needs no input data, so
-/// a cold tune performs zero forwards and zero allocations beyond the
-/// decision list itself.
+/// a cold tune performs zero forwards. Linear models are the chain-graph
+/// special case of [`tune_graph_shape`]; the lowering clones the layer
+/// list once per call (deploy-time cost, not on any inference path).
 pub fn tune_model_shape(
     model: &Model,
+    cfg: &McuConfig,
+    objective: Objective,
+    cache: &mut TuningCache,
+) -> (TunedSchedule, TuneStats) {
+    tune_graph_shape(&Graph::from_model(model), cfg, objective, cache)
+}
+
+/// Legal candidates of a graph node: the layer's schedule space, or the
+/// single scalar implementation of the residual join.
+fn node_candidates(node: &Node) -> Vec<Candidate> {
+    match &node.op {
+        NodeOp::Layer(l) => space::candidates(l),
+        NodeOp::Add(_) => {
+            vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }]
+        }
+    }
+}
+
+/// [`space::applies`] for graph nodes (cache-replay validation).
+fn node_applies(node: &Node, cand: &Candidate) -> bool {
+    match &node.op {
+        NodeOp::Layer(l) => space::applies(l, cand),
+        NodeOp::Add(_) => cand.kernel == KernelImpl::AsIs && cand.lowering == Lowering::Direct,
+    }
+}
+
+/// Score one candidate on one graph node: closed-form op counts mapped
+/// through the MCU cost model — O(1) shape arithmetic, no execution.
+/// The residual join's RAM charges both operands plus the output (the
+/// skip operand stays resident through the join).
+fn score_node_candidate(
+    node: &Node,
+    cand: &Candidate,
+    value_shapes: &[Shape],
+    cfg: &McuConfig,
+) -> (CacheEntry, Measurement) {
+    match &node.op {
+        NodeOp::Layer(l) => score_candidate(l, cand, &value_shapes[node.inputs[0]], cfg),
+        NodeOp::Add(_) => {
+            let in_shape = value_shapes[node.inputs[0]];
+            let c = counts::residual_add_counts(&in_shape);
+            let m = measure(&c, cand.lowering.path_class(), cfg);
+            let ram = node
+                .inputs
+                .iter()
+                .map(|&v| value_shapes[v].len())
+                .sum::<usize>()
+                + in_shape.len();
+            (
+                CacheEntry {
+                    candidate: *cand,
+                    cycles: m.cycles,
+                    latency_s: m.latency_s,
+                    energy_mj: m.energy_mj,
+                    mem_accesses: m.mem_accesses,
+                    effective_macs: m.effective_macs,
+                    ram_bytes: ram,
+                },
+                m,
+            )
+        }
+    }
+}
+
+/// Tune every node of a graph for `objective` on `cfg`, consulting (and
+/// filling) `cache`. Cache keys are per-node signatures
+/// ([`space::node_signature`]): op + input shape + producer-distance
+/// topology, so chains share entries across models/positions while any
+/// rewiring (skip edges, residual joins) re-keys and re-tunes.
+pub fn tune_graph_shape(
+    graph: &Graph,
     cfg: &McuConfig,
     objective: Objective,
     cache: &mut TuningCache,
@@ -271,27 +368,27 @@ pub fn tune_model_shape(
     let mcu_fp = mcu_fingerprint(cfg);
     let obj_name = objective.name();
     let mut stats = TuneStats::default();
-    let mut decisions: Vec<LayerDecision> = Vec::with_capacity(model.layers.len());
+    let mut decisions: Vec<LayerDecision> = Vec::with_capacity(graph.nodes.len());
+    // shapes, not tensors: nothing is executed
+    let shapes = graph.value_shapes();
 
-    let mut shape = model.input_shape;
-    for (index, layer) in model.layers.iter().enumerate() {
-        let in_shape = shape;
-        let sig = space::layer_signature(layer, &in_shape);
+    for (index, node) in graph.nodes.iter().enumerate() {
+        let sig = space::node_signature(node, index, &shapes);
         let key = cache_key(&sig, &mcu_fp, &obj_name);
 
         let cached = cache.get(&key).copied();
         let decision = match cached {
             // replay only candidates that still apply (a schema change in
             // the space enum would otherwise panic at execution time)
-            Some(e) if space::applies(layer, &e.candidate) => {
+            Some(e) if node_applies(node, &e.candidate) => {
                 stats.cache_hits += 1;
                 stats.candidates += 1;
-                decision_from_entry(index, layer.name(), &e, true)
+                decision_from_entry(index, node.op.name(), &e, true)
             }
             _ => {
                 let mut best: Option<(f64, CacheEntry)> = None;
-                for cand in space::candidates(layer) {
-                    let (entry, m) = score_candidate(layer, &cand, &in_shape, cfg);
+                for cand in node_candidates(node) {
+                    let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
                     let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
                     stats.analytic += 1;
                     stats.candidates += 1;
@@ -299,15 +396,12 @@ pub fn tune_model_shape(
                         best = Some((score, entry));
                     }
                 }
-                let (_, entry) = best.expect("every layer has at least one candidate");
+                let (_, entry) = best.expect("every node has at least one candidate");
                 cache.put(key, entry);
-                decision_from_entry(index, layer.name(), &entry, false)
+                decision_from_entry(index, node.op.name(), &entry, false)
             }
         };
         decisions.push(decision);
-        // propagate the (path-independent) activation shape to the next
-        // layer — shapes, not tensors: nothing is executed
-        shape = layer.output_shape(&in_shape);
     }
 
     let latency_s = decisions.iter().map(|d| d.latency_s).sum();
@@ -315,7 +409,7 @@ pub fn tune_model_shape(
     let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
     (
         TunedSchedule {
-            model: model.name.clone(),
+            model: graph.name.clone(),
             mcu: mcu_fp,
             objective: obj_name,
             layers: decisions,
@@ -507,5 +601,42 @@ mod tests {
         // the flags view matches the decisions
         let flags = simd_flags(&sched);
         assert_eq!(flags.len(), model.layers.len());
+    }
+
+    #[test]
+    fn residual_graph_tuning_covers_add_nodes_and_replays_warm() {
+        use crate::models::mcunet_residual;
+        let cfg = McuConfig::default();
+        let g = mcunet_residual(Primitive::DepthwiseSeparable, 5);
+        let mut cache = TuningCache::in_memory();
+        let (sched, cold) = tune_graph_shape(&g, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(sched.layers.len(), g.nodes.len());
+        assert_eq!(cold.evaluations, 0, "graph tuning is analytic too");
+        assert!(cold.analytic > 0);
+        // residual joins tuned to their only (scalar) implementation,
+        // with RAM charging both operands + the output
+        let adds: Vec<_> = sched.layers.iter().filter(|d| d.layer == "add").collect();
+        assert!(!adds.is_empty(), "residual model must contain add joins");
+        for d in &adds {
+            assert_eq!(d.candidate.kernel, KernelImpl::AsIs);
+            assert_eq!(d.candidate.lowering, Lowering::Direct);
+            assert!(d.ram_bytes > 0 && d.latency_s > 0.0);
+        }
+        // bit-exact: tuned reference executor vs the default engine path
+        let mut rng = crate::util::prng::Rng::new(4);
+        let mut x = Tensor::zeros(g.input_shape, g.input_q);
+        rng.fill_i8(&mut x.data, -64, 63);
+        let want = g.forward(&x, true, &mut NoopMonitor);
+        let got = sched.run_graph(&g, &x, &mut NoopMonitor);
+        assert_eq!(want.data, got.data);
+        // and through the compiled engine from a bound arena
+        let mut ws = sched.workspace_graph(&g);
+        let got2 = sched.run_in(&x, &mut ws, &mut NoopMonitor).clone();
+        assert_eq!(want.data, got2.data);
+        // warm replay: the per-node cache keys (topology included) hit
+        let (_, warm) = tune_graph_shape(&g, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(warm.analytic, 0, "warm graph tune must not re-score");
+        assert_eq!(warm.evaluations, 0);
+        assert_eq!(warm.cache_hits, g.nodes.len());
     }
 }

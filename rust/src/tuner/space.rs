@@ -23,7 +23,8 @@ use crate::mcu::PathClass;
 use crate::nn::blocking::fits_register_file;
 use crate::nn::counts;
 use crate::nn::{
-    uniform_shifts, Layer, Monitor, OpCounts, QuantConv, QuantDepthwise, Shape, ShiftConv, Tensor,
+    uniform_shifts, Layer, Monitor, Node, NodeOp, OpCounts, QuantConv, QuantDepthwise, Shape,
+    ShiftConv, Tensor,
 };
 
 /// Which kernel implementation computes the layer.
@@ -68,7 +69,7 @@ pub enum Lowering {
     Direct,
     /// im2col + `__SMLAD` matmul, blocked at `patches × filters`
     /// (CMSIS-NN's design point is 2×2; the generalized blocking runs
-    /// through [`mat_mult_block`]).
+    /// through [`crate::nn::blocking::mat_mult_block`]).
     Im2col { patches: usize, filters: usize },
 }
 
@@ -538,6 +539,35 @@ pub fn layer_signature(layer: &Layer, in_shape: &Shape) -> String {
     }
 }
 
+/// [`layer_signature`] for graph nodes: the op signature plus the node's
+/// input *topology* — the producer distance of every operand (how many
+/// steps back each consumed value was defined; 1 everywhere on a linear
+/// chain). Two structurally identical ops wired differently (a skip
+/// edge, fan-out, a residual join) therefore key differently in the
+/// tuning cache, so a linear schedule is never silently replayed onto a
+/// rewired graph — while chains keep sharing entries across models and
+/// positions exactly as before (the suffix is position-relative).
+pub fn node_signature(node: &Node, index: usize, value_shapes: &[Shape]) -> String {
+    let topo: Vec<String> = node
+        .inputs
+        .iter()
+        .map(|&v| (index + 1 - v).to_string())
+        .collect();
+    let topo = topo.join(",");
+    match &node.op {
+        NodeOp::Layer(l) => {
+            format!("{}~in{topo}", layer_signature(l, &value_shapes[node.inputs[0]]))
+        }
+        NodeOp::Add(a) => {
+            let s = value_shapes[node.inputs[0]];
+            format!(
+                "resadd[q{}]@{}x{}x{}~in{topo}",
+                a.q_out.frac_bits, s.h, s.w, s.c
+            )
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -867,5 +897,50 @@ mod tests {
             scratch_bytes(&pw, &Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }, &shape),
             0
         );
+    }
+
+    #[test]
+    fn node_signatures_fold_wiring_but_share_across_chains() {
+        use crate::nn::Graph;
+        use crate::quant::QParam;
+        let mut rng = Rng::new(0x51D);
+        let conv = random_conv(&mut rng, 1, 3, 4, 4);
+        // chain: conv → relu → relu(previous value)
+        let mut chain = Graph::new("c", Shape::new(6, 6, 4), QParam::new(7));
+        let v = chain.layer(chain.input(), Layer::Conv(conv.clone()));
+        let v = chain.layer(v, Layer::Relu);
+        chain.layer(v, Layer::Relu);
+        // fan-out: the last relu consumes the conv output instead (same
+        // ops, same shapes, different wiring)
+        let mut fanout = Graph::new("f", Shape::new(6, 6, 4), QParam::new(7));
+        let v = fanout.layer(fanout.input(), Layer::Conv(conv));
+        let _ = fanout.layer(v, Layer::Relu);
+        fanout.layer(v, Layer::Relu);
+        let cs = chain.value_shapes();
+        let fs = fanout.value_shapes();
+        // node 0 and 1 are wired identically: signatures shared
+        for i in 0..2 {
+            assert_eq!(
+                node_signature(&chain.nodes[i], i, &cs),
+                node_signature(&fanout.nodes[i], i, &fs),
+                "node {i}"
+            );
+        }
+        // node 2's producer distance differs: the key must too
+        assert_ne!(
+            node_signature(&chain.nodes[2], 2, &cs),
+            node_signature(&fanout.nodes[2], 2, &fs)
+        );
+        // linear chains carry the unit-distance suffix (cache sharing
+        // with every other chain position is preserved)
+        assert!(node_signature(&chain.nodes[2], 2, &cs).ends_with("~in1"));
+        // and a residual join folds both operand distances
+        let mut res = chain.clone();
+        let out = res.output_value();
+        res.add(1, out, QParam::new(5));
+        let rs = res.value_shapes();
+        let sig = node_signature(&res.nodes[3], 3, &rs);
+        assert!(sig.starts_with("resadd[q5]@6x6x4"), "{sig}");
+        assert!(sig.ends_with("~in3,1"), "{sig}");
     }
 }
