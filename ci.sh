@@ -17,6 +17,13 @@ cargo fmt --check
 echo "==> gate: cargo clippy --release -- -D warnings"
 cargo clippy --release -- -D warnings
 
+echo "==> gate: cargo doc --no-deps (rustdoc warnings denied)"
+# -D warnings turns broken intra-doc links into hard failures; the
+# public-API rustdoc (incl. the runnable examples on
+# ExecPlan::compile_graph and TunedSchedule::run_in, which cargo test
+# executes as doctests) must stay coherent
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
@@ -47,6 +54,14 @@ echo "==> bench smoke: infer_hot (zero-alloc fixed + tuned paths, analytic cold 
 # simulator evaluations, then emits results/BENCH_infer.json — the perf
 # baseline future PRs regress against
 CONVBENCH_QUICK=1 cargo bench --bench infer_hot
+
+echo "==> smoke: micro-batched serving (deadline-aware queue end to end)"
+# async request storm through the micro-batch queue: batches form (the
+# report prints the batch-size histogram), the admission controller and
+# queue-wait/exec split are exercised, and any lost reply would hang the
+# collect loop — a liveness smoke as much as a correctness one
+./target/release/convbench serve --requests 48 --workers 2 \
+    --max-batch 8 --deadline-us 500 --queue-depth 64
 
 if [[ "${1:-}" == "--full" ]]; then
     echo "==> full: convbench tune over the full Table 2 plans"

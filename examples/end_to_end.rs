@@ -114,7 +114,7 @@ fn main() {
         let (x, _) = &test[(i as usize) % test.len()];
         let input: Vec<i8> = x.iter().map(|&v| (v * 64.0) as i8).collect();
         let model = names[(i as usize) % names.len()].clone();
-        server.infer(Request { id: i, model, input }).expect("inference");
+        server.infer(Request::new(i, model, input)).expect("inference");
     }
     let stats = server.shutdown();
     println!(

@@ -1,15 +1,18 @@
-//! Serving demo: deploy all five MCU-Net variants behind the threaded
-//! inference service and fire a random request mix — the L3 "router"
-//! loop with per-model simulated MCU cost accounting.
+//! Serving demo: deploy all five MCU-Net variants behind the
+//! deadline-aware micro-batched inference service and fire a random
+//! request mix — the L3 "router" loop with per-model simulated MCU cost
+//! accounting, queue-wait/execution latency split and batch-size
+//! histogram.
 //!
-//! Run: `cargo run --release --example serve -- [--requests N] [--workers W]`
+//! Run: `cargo run --release --example serve -- [--requests N] [--workers W]
+//!       [--max-batch B] [--deadline-us D] [--queue-depth Q]`
 
-use convbench::coordinator::serve_cli;
+use convbench::coordinator::{serve_cli, ServeOptions};
 use convbench::util::cli::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let requests = args.get_or("requests", 200usize);
     let workers = args.get_or("workers", 4usize);
-    serve_cli(requests, workers);
+    serve_cli(requests, workers, ServeOptions::from_args(&args));
 }

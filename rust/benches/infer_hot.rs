@@ -15,9 +15,16 @@
 //!    **zero** as well, after asserting bit-exact outputs and an
 //!    identical `CountingMonitor` event stream vs the allocating
 //!    reference `TunedSchedule::run`;
-//! 3. **throughput** of the workspace paths vs the legacy allocating
+//! 3. **micro-batched execution** — `ExecPlan::run_batch_in` with N=8
+//!    through one batch arena is asserted bit-exact per lane with 8
+//!    sequential `run_in` calls and pinned at **zero** steady-state
+//!    allocations; its per-inference throughput is recorded next to the
+//!    sequential path, and a request storm against a micro-batching
+//!    server (`max_batch` 8) vs a sequential one (`max_batch` 1)
+//!    records served req/s for both;
+//! 4. **throughput** of the workspace paths vs the legacy allocating
 //!    paths (ns per inference, inferences/s);
-//! 4. **cold-tune cost** of the analytic schedule search: wall time and
+//! 5. **cold-tune cost** of the analytic schedule search: wall time and
 //!    `TuneStats` for a cold `tune_model_shape` over MCU-Net —
 //!    `evaluations` (instrumented simulator runs) pinned to 0 — plus the
 //!    warm-cache replay time.
@@ -176,6 +183,44 @@ fn main() {
         "steady-state residual run_in performed {residual_steady_allocs} heap allocations"
     );
 
+    // --- 2c. micro-batched execution: bit-exact + zero allocations ----
+    // run_batch_in pushes N samples through ONE bound arena (batch loop
+    // outside the per-node dispatch): first prove every lane bit-exact
+    // with N sequential run_in calls, then pin the steady-state batch
+    // loop at zero heap allocations
+    const BATCH: usize = 8;
+    let bplan = ExecPlan::compile_default(&model, true);
+    let mut bws = Workspace::for_plan_batch(&bplan, BATCH);
+    let mut seq_ws = Workspace::for_plan(&bplan);
+    let batch: Vec<Tensor> = (0..BATCH as u64)
+        .map(|i| {
+            let mut t = Tensor::zeros(model.input_shape, model.input_q);
+            Rng::new(100 + i).fill_i8(&mut t.data, -64, 63);
+            t
+        })
+        .collect();
+    {
+        let olen = bplan.output_len();
+        let out = bplan.run_batch_in(&batch, &mut bws, &mut NoopMonitor).to_vec();
+        for (i, x) in batch.iter().enumerate() {
+            let want = bplan.run_in(x, &mut seq_ws, &mut NoopMonitor);
+            assert_eq!(
+                &out[i * olen..(i + 1) * olen],
+                &want.data[..],
+                "batched lane {i} must be bit-exact with sequential run_in"
+            );
+        }
+    }
+    let b_alloc0 = allocations();
+    for _ in 0..iters {
+        black_box(bplan.run_batch_in(&batch, &mut bws, &mut NoopMonitor)[0]);
+    }
+    let batch_steady_allocs = allocations() - b_alloc0;
+    assert_eq!(
+        batch_steady_allocs, 0,
+        "steady-state run_batch_in performed {batch_steady_allocs} heap allocations"
+    );
+
     // --- 3. throughput ------------------------------------------------
     b.run("infer/forward_in/simd", || {
         model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]
@@ -195,6 +240,54 @@ fn main() {
     b.run("infer/residual_run_in", || {
         rsched.run_in(&rx, &mut rws, &mut NoopMonitor).data[0]
     });
+    b.run("infer/batch8_run_batch_in", || {
+        // one call = BATCH inferences; divide by BATCH when comparing
+        bplan.run_batch_in(&batch, &mut bws, &mut NoopMonitor)[0]
+    });
+    b.run("infer/batch8_sequential_run_in", || {
+        let mut last = 0i8;
+        for x in &batch {
+            last = bplan.run_in(x, &mut seq_ws, &mut NoopMonitor).data[0];
+        }
+        last
+    });
+
+    // --- 3b. served throughput: micro-batched vs sequential serving ---
+    // the same request storm against a max_batch=1 server (classic
+    // one-request-per-engine-call serving) and a micro-batching one;
+    // async submission so batches actually form
+    let serve_n: usize = if std::env::var("CONVBENCH_QUICK").is_ok() { 64 } else { 256 };
+    let served_rps = |max_batch: usize| -> f64 {
+        use convbench::coordinator::{InferenceServer, Request, ServeOptions};
+        let opts = ServeOptions {
+            max_batch,
+            deadline_us: 200,
+            queue_depth: serve_n,
+        };
+        let server = InferenceServer::start_with(
+            vec![mcunet(Primitive::DepthwiseSeparable, 42)],
+            2,
+            &cfg,
+            opts,
+        );
+        let mut rng = Rng::new(0x5E12);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..serve_n)
+            .map(|i| {
+                let mut input = vec![0i8; 32 * 32 * 3];
+                rng.fill_i8(&mut input, -64, 63);
+                server.submit(Request::new(i as u64, "mcunet-dws", input)).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        serve_n as f64 / secs
+    };
+    let served_seq_rps = served_rps(1);
+    let served_batch_rps = served_rps(BATCH);
 
     // --- 4. warm analytic tune ----------------------------------------
     let t1 = Instant::now();
@@ -218,6 +311,8 @@ fn main() {
     let tuned_in_ns = mean_ns("infer/tuned_run_in");
     let tuned_legacy_ns = mean_ns("infer/tuned_run_legacy");
     let residual_in_ns = mean_ns("infer/residual_run_in");
+    let batch_ns_per_inf = mean_ns("infer/batch8_run_batch_in") / BATCH as f64;
+    let batch_seq_ns_per_inf = mean_ns("infer/batch8_sequential_run_in") / BATCH as f64;
     let plan = ws.plan();
     let tplan = tws.plan();
     let rplan = rws.plan();
@@ -286,6 +381,14 @@ fn main() {
         .field("residual_workspace_total_bytes", rplan.total_bytes())
         .field("residual_peak_arena_bytes", rplan.activation_bytes)
         .field("residual_pingpong_bytes", rplan.pingpong_bytes)
+        .field("batch8_steady_state_allocs_per_batch", batch_steady_allocs / iters)
+        .field("batch8_ns_per_inference", batch_ns_per_inf)
+        .field("batch8_sequential_ns_per_inference", batch_seq_ns_per_inf)
+        .field("batch8_ops_per_sec", 1e9 / batch_ns_per_inf)
+        .field("batch8_engine_speedup", batch_seq_ns_per_inf / batch_ns_per_inf)
+        .field("served_seq_rps", served_seq_rps)
+        .field("served_batch8_rps", served_batch_rps)
+        .field("served_batch_speedup", served_batch_rps / served_seq_rps)
         .field("peak_arena_bytes_per_model", Json::Obj(arena_fields));
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
@@ -306,6 +409,14 @@ fn main() {
     println!(
         "residual: tuned run_in {residual_in_ns:.0} ns (0 allocs); arena {} B vs ping-pong {} B",
         rplan.activation_bytes, rplan.pingpong_bytes
+    );
+    println!(
+        "batched: run_batch_in {batch_ns_per_inf:.0} ns/inf (batch {BATCH}, 0 allocs) vs \
+         sequential run_in {batch_seq_ns_per_inf:.0} ns/inf — {:.3}x; served throughput \
+         {served_batch_rps:.0} req/s (max-batch {BATCH}) vs {served_seq_rps:.0} req/s \
+         (max-batch 1) — {:.2}x",
+        batch_seq_ns_per_inf / batch_ns_per_inf,
+        served_batch_rps / served_seq_rps
     );
     println!("wrote results/BENCH_infer.json");
 }

@@ -1,6 +1,7 @@
 //! L3 coordinator: the deployment pipeline (float model → calibrated int8
-//! engine model), the threaded inference service, and the cross-layer
-//! validation against the JAX/Pallas HLO artifacts.
+//! engine model), the deadline-aware micro-batched inference service
+//! ([`server`]), and the cross-layer validation against the JAX/Pallas
+//! HLO artifacts.
 
 pub mod pipeline;
 pub mod server;
@@ -9,7 +10,7 @@ pub mod validate;
 pub use pipeline::{
     FloatAddConv, FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift,
 };
-pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use server::{InferenceServer, Request, Response, ServeOptions, ServerStats};
 pub use validate::{artifact_inputs, kernel_layer, validate_cli};
 #[cfg(feature = "pjrt")]
 pub use validate::{validate_all, validate_primitive};
@@ -20,25 +21,36 @@ use crate::models::mcunet;
 use crate::util::prng::Rng;
 
 /// CLI entry point for `convbench serve`: deploy all five MCU-Net
-/// variants, fire `n` random requests through `workers` workers, print
-/// the service report.
-pub fn serve_cli(n: usize, workers: usize) {
+/// variants behind the deadline-aware micro-batch queue, fire `n`
+/// random requests through `workers` workers **asynchronously** (so
+/// batches actually form), and print the service report — end-to-end
+/// latency split into queue wait and execution, plus the batch-size
+/// histogram.
+pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions) {
     let models: Vec<_> = Primitive::ALL.iter().map(|&p| mcunet(p, 42)).collect();
     let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
-    let server = InferenceServer::start(models, workers, &McuConfig::default());
-    println!("deployed: {names:?} ({workers} workers)");
+    let server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
+    println!(
+        "deployed: {names:?} ({workers} workers, max-batch {}, deadline {} µs, queue depth {})",
+        opts.max_batch, opts.deadline_us, opts.queue_depth
+    );
 
     let mut rng = Rng::new(7);
-    let mut per_model: std::collections::BTreeMap<String, (u64, f64, f64)> = Default::default();
+    // submit everything up front, then collect — micro-batches form
+    // whenever several requests for one model are in flight together
+    let mut in_flight = Vec::with_capacity(n);
     for i in 0..n {
         let model = names[rng.range(0, names.len() - 1)].clone();
         let mut input = vec![0i8; 32 * 32 * 3];
         rng.fill_i8(&mut input, -64, 63);
-        match server.infer(Request {
-            id: i as u64,
-            model: model.clone(),
-            input,
-        }) {
+        match server.submit(Request::new(i as u64, model.clone(), input)) {
+            Ok(rx) => in_flight.push((i, model, rx)),
+            Err(e) => eprintln!("request {i} rejected: {e}"),
+        }
+    }
+    let mut per_model: std::collections::BTreeMap<String, (u64, f64, f64)> = Default::default();
+    for (i, model, rx) in in_flight {
+        match rx.recv().map_err(|_| "server shut down".to_string()).and_then(|r| r) {
             Ok(r) => {
                 let e = per_model.entry(model).or_default();
                 e.0 += 1;
@@ -50,9 +62,24 @@ pub fn serve_cli(n: usize, workers: usize) {
     }
     let stats = server.shutdown();
     println!(
-        "served {} requests, {} errors; host latency p50 {:.1} µs p99 {:.1} µs",
-        stats.served, stats.errors, stats.p50_us, stats.p99_us
+        "served {} requests, {} errors, {} shed; host latency p50 {:.1} µs p99 {:.1} µs \
+         (queue wait p50 {:.1} µs / exec p50 {:.1} µs)",
+        stats.served,
+        stats.errors,
+        stats.shed,
+        stats.p50_us,
+        stats.p99_us,
+        stats.queue_p50_us,
+        stats.exec_p50_us
     );
+    let hist: Vec<String> = stats
+        .batch_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| format!("{}×{c}", i + 1))
+        .collect();
+    println!("batch sizes (size×count): {}", hist.join(" "));
     println!("\n| model | requests | simulated MCU latency (ms) | simulated energy (mJ) |");
     println!("|---|---|---|---|");
     for (m, (cnt, lat, en)) in per_model {

@@ -226,6 +226,26 @@ impl FloatModel {
         let workspace = schedule.workspace(&model);
         (model, schedule, workspace, stats)
     }
+
+    /// [`FloatModel::deploy_tuned_planned`] for a **micro-batched**
+    /// serving worker: the returned arena carries input/output staging
+    /// lanes for up to `max_batch` samples, so
+    /// `TunedSchedule::run_batch_in` can push a whole drained batch
+    /// through the compiled plan with zero steady-state allocations.
+    /// Compute capacity is per-sample — batching widens only the I/O
+    /// staging, never the activation slots, columns or accumulators.
+    pub fn deploy_tuned_batched(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+        max_batch: usize,
+    ) -> (Model, TunedSchedule, Workspace, TuneStats) {
+        let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
+        let workspace = schedule.workspace_batch(&model, max_batch);
+        (model, schedule, workspace, stats)
+    }
 }
 
 /// Raw (pre-BN) float add-convolution output — used by calibration.
@@ -678,6 +698,31 @@ mod tests {
             let got = schedule.run_in(&xi, &mut ws, &mut NoopMonitor);
             assert_eq!(want.data, got.data);
         }
+    }
+
+    #[test]
+    fn deploy_tuned_batched_runs_whole_calib_set_in_one_call() {
+        // the batched pipeline flavor: one run_batch_in over the whole
+        // calibration set is bit-exact per lane with the sequential
+        // reference executor
+        let mut rng = Rng::new(14);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let (qm, schedule, mut ws, _) =
+            fm.deploy_tuned_batched(&calib, &cfg, Objective::Latency, &mut cache, calib.len());
+        assert_eq!(ws.max_batch(), calib.len());
+        let batch: Vec<crate::nn::Tensor> = calib
+            .iter()
+            .map(|x| crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x))
+            .collect();
+        let got = schedule.run_batch_in(&batch, &mut ws, &mut NoopMonitor).to_vec();
+        let mut want = Vec::new();
+        for x in &batch {
+            want.extend_from_slice(&schedule.run(&qm, x, &mut NoopMonitor).data);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,38 +1,59 @@
-//! Threaded inference service — the L3 request path. A leader thread owns
-//! the request queue and batches requests; worker threads run the int8
-//! engine (zero-overhead [`NoopMonitor`]); per-request latency and
-//! simulated MCU energy are accounted from a one-time profile of the
-//! deployed model. Models can be registered with their paper-default
-//! schedule ([`InferenceServer::start`]), auto-tuned per layer at
-//! registration ([`InferenceServer::start_tuned`]), or as residual DAG
-//! graphs tuned per node ([`InferenceServer::start_graphs_tuned`]).
+//! Threaded inference service — the L3 request path, built around a
+//! **deadline-aware micro-batch queue**. Submitters validate and enqueue
+//! requests into per-model FIFO queues guarded by an admission
+//! controller; worker threads drain a model's queue as a *micro-batch*
+//! — up to [`ServeOptions::max_batch`] requests, or earlier once the
+//! oldest request's queue-wait budget (its *deadline*) is exhausted —
+//! and run the whole batch through one compiled [`ExecPlan`] in one
+//! pre-planned arena ([`ExecPlan::run_batch_staged`]). Per-request
+//! latency and simulated MCU energy are accounted from a one-time
+//! analytic profile of the deployed model.
+//!
+//! Models can be registered with their paper-default schedule
+//! ([`InferenceServer::start`]), auto-tuned per layer at registration
+//! ([`InferenceServer::start_tuned`]), or as residual DAG graphs tuned
+//! per node ([`InferenceServer::start_graphs_tuned`]); each flavor has a
+//! `_with` variant taking explicit [`ServeOptions`].
+//!
+//! Why micro-batch at all? The same data-reuse argument the paper makes
+//! *inside* a kernel (SIMD + im2col amortization) applies *across*
+//! requests: one arena bind, one plan-capacity validation and one
+//! worker wake-up serve `max_batch` inferences, and the pre-widened
+//! weights and column arena stay hot across the whole batch. With
+//! `max_batch == 1` the server degenerates byte-identically to
+//! single-request serving (tested below).
 //!
 //! Every registered model — tuned or not — is compiled once into an
-//! [`ExecPlan`] at registration, and every worker plans one arena per
-//! model at spawn ([`Workspace::for_plan`]), so the request path is a
-//! single engine call with **zero heap allocations** on the inference
-//! itself: no per-request arena, no kernel-dispatch `match`, no
-//! first-request weight-widening spike, for fixed and tuned schedules
-//! alike. Latency statistics live in a fixed-capacity seeded
-//! [`Reservoir`], so a long-lived server holds O(1) stats memory under
-//! unbounded traffic.
+//! [`ExecPlan`] at registration, and every worker plans one batch-capable
+//! arena per model at spawn ([`Workspace::for_plan_batch`]), so the
+//! request path performs **zero heap allocations** on the inference
+//! itself: request payloads are copied into the arena's staging lanes,
+//! the batch runs through the compiled engine, and only the reply logits
+//! are copied out. Overload is handled at admission: past
+//! [`ServeOptions::queue_depth`] queued requests, the controller sheds
+//! by **analytic cost** (the `nn::counts`-derived cycle price of each
+//! model's compiled schedule — cheap work is preferred under pressure,
+//! after "Not All Ops Are Created Equal"). Latency statistics live in
+//! fixed-capacity seeded [`Reservoir`]s — split into queue-wait and
+//! execution time, next to a batch-size histogram — so a long-lived
+//! server holds O(1) stats memory under unbounded traffic.
 //!
-//! (tokio is not in the offline vendor set — std threads + mpsc channels
-//! provide the same structure; see Cargo.toml note.)
+//! (tokio is not in the offline vendor set — std threads + a
+//! mutex/condvar queue provide the same structure; see Cargo.toml note.)
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, Tensor, Workspace};
+use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, Workspace};
 use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TunedSchedule, TuningCache};
 use crate::util::stats::Reservoir;
 
-/// Retained latency samples (Algorithm R past this point): enough for
-/// stable p99s, constant memory forever.
+/// Retained latency samples per reservoir (Algorithm R past this point):
+/// enough for stable p99s, constant memory forever.
 const LATENCY_RESERVOIR_CAP: usize = 4096;
 /// Fixed seed: removes the sampler's PRNG as a variance source (a given
 /// observation sequence always retains the same subsample). With
@@ -42,24 +63,92 @@ const LATENCY_RESERVOIR_CAP: usize = 4096;
 /// (what the tests exercise).
 const LATENCY_RESERVOIR_SEED: u64 = 0x1A7E_5EED;
 
+/// Micro-batching and admission-control knobs for one server instance
+/// (the `convbench serve --max-batch/--deadline-us/--queue-depth`
+/// flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Largest micro-batch a worker drains per wake-up; also the size of
+    /// the per-worker staging lanes ([`Workspace::for_plan_batch`]).
+    /// `1` reproduces classic one-request-per-engine-call serving
+    /// byte-identically.
+    pub max_batch: usize,
+    /// Default queue-wait budget in µs for requests that do not carry
+    /// their own ([`Request::deadline_us`] = 0): a batch is forced as
+    /// soon as its oldest request has waited this long, even below
+    /// `max_batch`.
+    pub deadline_us: u64,
+    /// Admission cap on the total number of queued requests across all
+    /// models. Past it, the controller sheds by analytic cost (see
+    /// module docs).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_batch: 8, deadline_us: 200, queue_depth: 256 }
+    }
+}
+
+impl ServeOptions {
+    /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth`
+    /// flags (defaults where absent) — shared by `convbench serve` and
+    /// the serving example so the flag set cannot drift.
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let d = Self::default();
+        Self {
+            max_batch: args.get_or("max-batch", d.max_batch),
+            deadline_us: args.get_or("deadline-us", d.deadline_us),
+            queue_depth: args.get_or("queue-depth", d.queue_depth),
+        }
+    }
+}
+
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen correlation id, echoed in the [`Response`].
     pub id: u64,
     /// Which deployed model variant to run (e.g. "mcunet-shift").
     pub model: String,
+    /// Row-major HWC int8 input, length = the model's input shape.
     pub input: Vec<i8>,
+    /// Queue-wait budget in µs; `0` means "use the server default"
+    /// ([`ServeOptions::deadline_us`]). The scheduler drains a model's
+    /// batch no later than its oldest request's budget expiry, so a
+    /// tighter per-request deadline trades batching efficiency for
+    /// latency.
+    pub deadline_us: u64,
+}
+
+impl Request {
+    /// Build a request with the server-default deadline.
+    pub fn new(id: u64, model: impl Into<String>, input: Vec<i8>) -> Self {
+        Self { id, model: model.into(), input, deadline_us: 0 }
+    }
 }
 
 /// An inference response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Correlation id copied from the [`Request`].
     pub id: u64,
+    /// Model that served the request.
     pub model: String,
+    /// Output activations (the classifier logits).
     pub logits: Vec<i8>,
+    /// `argmax` of the logits.
     pub class: usize,
-    /// Host wall-clock service time.
+    /// Host wall-clock service time as the client observes it: queue
+    /// wait plus the full execution time of the batch this request rode
+    /// in (replies are sent after the whole batch finishes; divide by
+    /// [`Response::batch_size`] for the amortized per-request cost).
     pub service_time: Duration,
+    /// Host wall-clock time the request spent queued before its batch
+    /// started executing.
+    pub queue_wait: Duration,
+    /// Size of the micro-batch this request was served in.
+    pub batch_size: usize,
     /// Simulated on-MCU latency for this model (from the deployment
     /// profile).
     pub mcu_latency_s: f64,
@@ -67,18 +156,47 @@ pub struct Response {
     pub mcu_energy_mj: f64,
 }
 
-/// Server statistics.
+/// Server statistics. End-to-end service time (`p50_us`/`p99_us`/
+/// `mean_us`) is split into its queue-wait and execution components;
+/// percentiles are nearest-rank over fixed-capacity reservoirs, means
+/// are exact over all served requests.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// Requests served successfully.
     pub served: u64,
+    /// Requests rejected at admission for being invalid (unknown model,
+    /// wrong input length).
     pub errors: u64,
+    /// Requests shed by the admission controller (queue depth reached).
+    pub shed: u64,
+    /// End-to-end service-time median (µs).
     pub p50_us: f64,
+    /// End-to-end service-time 99th percentile (µs).
     pub p99_us: f64,
+    /// End-to-end service-time mean (µs; exact, not subsampled).
     pub mean_us: f64,
+    /// Queue-wait median (µs).
+    pub queue_p50_us: f64,
+    /// Queue-wait 99th percentile (µs).
+    pub queue_p99_us: f64,
+    /// Queue-wait mean (µs; exact).
+    pub queue_mean_us: f64,
+    /// Batch-execution-time median (µs; the full batch, as the client
+    /// observes it).
+    pub exec_p50_us: f64,
+    /// Batch-execution-time 99th percentile (µs).
+    pub exec_p99_us: f64,
+    /// Batch-execution-time mean (µs; exact).
+    pub exec_mean_us: f64,
+    /// Batch-size distribution: `batch_hist[i]` counts executed batches
+    /// of size `i + 1` (length = the server's `max_batch`).
+    pub batch_hist: Vec<u64>,
 }
 
 struct Deployed {
-    /// One-time simulated measurement (SIMD path, or the tuned schedule).
+    /// One-time simulated measurement (SIMD path, or the tuned
+    /// schedule), priced analytically from `nn::counts`. Its `cycles`
+    /// field doubles as the admission controller's cost estimate.
     mcu: Measurement,
     /// Tuned per-node schedule, kept for reporting; `None` means the
     /// paper-default SIMD schedule. Execution never consults this —
@@ -90,35 +208,189 @@ struct Deployed {
     plan: ExecPlan,
 }
 
-enum Job {
-    Run(Request, mpsc::Sender<Result<Response, String>>),
-    Shutdown,
+/// One queued request with its reply channel and deadline bookkeeping.
+struct Pending {
+    req: Request,
+    reply: mpsc::Sender<Result<Response, String>>,
+    enqueued: Instant,
+    /// Forced-drain instant: `enqueued + queue-wait budget`.
+    deadline: Instant,
 }
 
-/// The inference server: a registry of deployed models and a worker pool.
+/// The per-model micro-batch queues plus shutdown flag, guarded by one
+/// mutex + condvar pair. `BTreeMap` keeps iteration order (and thus
+/// tie-breaking) deterministic.
+#[derive(Default)]
+struct QueueState {
+    queues: BTreeMap<String, VecDeque<Pending>>,
+    queued: usize,
+    shutdown: bool,
+}
+
+impl QueueState {
+    fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    fn push(&mut self, p: Pending) {
+        self.queues.entry(p.req.model.clone()).or_default().push_back(p);
+        self.queued += 1;
+    }
+
+    /// Admission controller. Below `depth` total queued requests the
+    /// incoming request is enqueued and `None` returned. At the cap,
+    /// the controller sheds by analytic cost (`cost_of` prices a model
+    /// in simulated cycles, derived from `nn::counts` at registration):
+    /// if the incoming request's model is cheaper than the most
+    /// expensive queued class, that class's newest entry is evicted to
+    /// make room (and returned for the caller to fail); otherwise the
+    /// incoming request itself is returned. Under overload the queue
+    /// therefore drifts toward cheap work — maximum served throughput
+    /// for the same budget.
+    fn admit(
+        &mut self,
+        p: Pending,
+        depth: usize,
+        cost_of: &dyn Fn(&str) -> f64,
+    ) -> Option<Pending> {
+        if self.queued < depth {
+            self.push(p);
+            return None;
+        }
+        let victim_model = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(name, _)| name)
+            .max_by(|a, b| {
+                cost_of(a.as_str())
+                    .partial_cmp(&cost_of(b.as_str()))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.cmp(b))
+            })
+            .cloned();
+        match victim_model {
+            Some(m) if cost_of(&m) > cost_of(&p.req.model) => {
+                let victim = self
+                    .queues
+                    .get_mut(&m)
+                    .and_then(|q| q.pop_back())
+                    .expect("victim queue is nonempty");
+                self.queued -= 1;
+                self.push(p);
+                Some(victim)
+            }
+            _ => Some(p),
+        }
+    }
+
+    /// The model a worker should drain at `now`, if any queue is
+    /// *ready*: at or above `max_batch` entries, or with its oldest
+    /// request's queue-wait budget exhausted. Among ready queues the
+    /// earliest head deadline wins (ties broken by model name — the
+    /// `BTreeMap` order — for determinism).
+    fn ready_model(&self, now: Instant, max_batch: usize) -> Option<String> {
+        self.queues
+            .iter()
+            .filter_map(|(name, q)| {
+                let head = q.front()?;
+                (q.len() >= max_batch || head.deadline <= now).then_some((head.deadline, name))
+            })
+            .min_by(|(da, na), (db, nb)| da.cmp(db).then_with(|| na.cmp(nb)))
+            .map(|(_, name)| name.clone())
+    }
+
+    /// Any nonempty queue (the shutdown flush path), earliest head
+    /// deadline first.
+    fn any_model(&self) -> Option<String> {
+        self.queues
+            .iter()
+            .filter_map(|(name, q)| q.front().map(|h| (h.deadline, name)))
+            .min_by(|(da, na), (db, nb)| da.cmp(db).then_with(|| na.cmp(nb)))
+            .map(|(_, name)| name.clone())
+    }
+
+    /// Earliest forced-drain instant over all queued requests — the
+    /// worker's condvar timeout. `None` when nothing is queued.
+    fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|h| h.deadline))
+            .min()
+    }
+
+    /// Pop up to `max_batch` oldest requests of `model` (FIFO, so the
+    /// drain order is deadline order within a model).
+    fn pop_batch(&mut self, model: &str, max_batch: usize) -> Vec<Pending> {
+        let q = match self.queues.get_mut(model) {
+            Some(q) => q,
+            None => return Vec::new(),
+        };
+        let n = q.len().min(max_batch);
+        self.queued -= n;
+        q.drain(..n).collect()
+    }
+}
+
+/// Split-reservoir statistics: end-to-end service time, queue wait and
+/// execution share, plus the batch-size histogram.
+struct StatsInner {
+    service_us: Reservoir,
+    queue_us: Reservoir,
+    exec_us: Reservoir,
+    batch_hist: Vec<u64>,
+}
+
+impl StatsInner {
+    fn new(max_batch: usize) -> Self {
+        let res = || Reservoir::new(LATENCY_RESERVOIR_CAP, LATENCY_RESERVOIR_SEED);
+        Self {
+            service_us: res(),
+            queue_us: res(),
+            exec_us: res(),
+            batch_hist: vec![0; max_batch],
+        }
+    }
+}
+
+/// The inference server: a registry of deployed models, per-model
+/// micro-batch queues and a worker pool.
 pub struct InferenceServer {
     models: Arc<HashMap<String, Deployed>>,
-    tx: mpsc::Sender<Job>,
+    queue: Arc<(Mutex<QueueState>, Condvar)>,
+    opts: ServeOptions,
     workers: Vec<JoinHandle<()>>,
     served: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
-    latencies_us: Arc<Mutex<Reservoir>>,
+    shed: Arc<AtomicU64>,
+    stats: Arc<Mutex<StatsInner>>,
     shutting_down: AtomicBool,
 }
 
 impl InferenceServer {
-    /// Deploy a set of models and start `n_workers` workers. The
-    /// one-time MCU profile is priced analytically (exact, forward-free);
-    /// the paper-default SIMD schedule is compiled into the per-request
-    /// executor.
+    /// Deploy a set of models and start `n_workers` workers with the
+    /// default [`ServeOptions`]. The one-time MCU profile is priced
+    /// analytically (exact, forward-free); the paper-default SIMD
+    /// schedule is compiled into the per-request executor.
     pub fn start(models: Vec<Model>, n_workers: usize, cfg: &McuConfig) -> Self {
+        Self::start_with(models, n_workers, cfg, ServeOptions::default())
+    }
+
+    /// [`InferenceServer::start`] with explicit micro-batching /
+    /// admission options.
+    pub fn start_with(
+        models: Vec<Model>,
+        n_workers: usize,
+        cfg: &McuConfig,
+        opts: ServeOptions,
+    ) -> Self {
         let mut registry = HashMap::new();
         for m in models {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
             let plan = ExecPlan::compile_default(&m, true);
             registry.insert(m.name.clone(), Deployed { mcu, schedule: None, plan });
         }
-        Self::spawn(registry, n_workers)
+        Self::spawn(registry, n_workers, opts)
     }
 
     /// Deploy a set of models with per-layer auto-tuned schedules (the
@@ -134,6 +406,18 @@ impl InferenceServer {
         objective: Objective,
         cache: &mut TuningCache,
     ) -> Self {
+        Self::start_tuned_with(models, n_workers, cfg, objective, cache, ServeOptions::default())
+    }
+
+    /// [`InferenceServer::start_tuned`] with explicit options.
+    pub fn start_tuned_with(
+        models: Vec<Model>,
+        n_workers: usize,
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+        opts: ServeOptions,
+    ) -> Self {
         let mut registry = HashMap::new();
         for m in models {
             let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
@@ -141,20 +425,40 @@ impl InferenceServer {
             let plan = schedule.compile(&m);
             registry.insert(m.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
         }
-        Self::spawn(registry, n_workers)
+        Self::spawn(registry, n_workers, opts)
     }
 
     /// Deploy residual (or any DAG) graph models with per-node
     /// auto-tuned schedules — the graph analog of
     /// [`InferenceServer::start_tuned`]. The compiled plans run through
     /// the exact same worker/arena machinery: a skip-connection model
-    /// serves with zero per-request allocations like any chain.
+    /// serves micro-batches with zero per-request allocations like any
+    /// chain.
     pub fn start_graphs_tuned(
         graphs: Vec<Graph>,
         n_workers: usize,
         cfg: &McuConfig,
         objective: Objective,
         cache: &mut TuningCache,
+    ) -> Self {
+        Self::start_graphs_tuned_with(
+            graphs,
+            n_workers,
+            cfg,
+            objective,
+            cache,
+            ServeOptions::default(),
+        )
+    }
+
+    /// [`InferenceServer::start_graphs_tuned`] with explicit options.
+    pub fn start_graphs_tuned_with(
+        graphs: Vec<Graph>,
+        n_workers: usize,
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+        opts: ServeOptions,
     ) -> Self {
         let mut registry = HashMap::new();
         for g in graphs {
@@ -163,70 +467,37 @@ impl InferenceServer {
             let plan = schedule.compile_graph(&g);
             registry.insert(g.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
         }
-        Self::spawn(registry, n_workers)
+        Self::spawn(registry, n_workers, opts)
     }
 
-    fn spawn(registry: HashMap<String, Deployed>, n_workers: usize) -> Self {
+    fn spawn(registry: HashMap<String, Deployed>, n_workers: usize, opts: ServeOptions) -> Self {
+        let opts = ServeOptions { max_batch: opts.max_batch.max(1), ..opts };
         let models = Arc::new(registry);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new((Mutex::new(QueueState::default()), Condvar::new()));
         let served = Arc::new(AtomicU64::new(0));
         let errors = Arc::new(AtomicU64::new(0));
-        let latencies_us = Arc::new(Mutex::new(Reservoir::new(
-            LATENCY_RESERVOIR_CAP,
-            LATENCY_RESERVOIR_SEED,
-        )));
+        let shed = Arc::new(AtomicU64::new(0));
+        let stats = Arc::new(Mutex::new(StatsInner::new(opts.max_batch)));
 
         let workers = (0..n_workers.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
                 let models = Arc::clone(&models);
+                let queue = Arc::clone(&queue);
                 let served = Arc::clone(&served);
-                let errors = Arc::clone(&errors);
-                let lats = Arc::clone(&latencies_us);
-                std::thread::spawn(move || {
-                    // per-worker inference arenas, planned up front for
-                    // EVERY registered model — tuned and untuned alike
-                    // (the registry is fixed before spawn): the request
-                    // path never allocates an arena, clones a key, or
-                    // pays a first-request weight-widening spike
-                    let mut workspaces = plan_worker_arenas(&models);
-                    loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(Job::Run(req, reply)) => {
-                                let t0 = Instant::now();
-                                let result = serve_one(&models, &mut workspaces, req, t0);
-                                match &result {
-                                    Ok(r) => {
-                                        served.fetch_add(1, Ordering::Relaxed);
-                                        lats.lock()
-                                            .unwrap()
-                                            .offer(r.service_time.as_secs_f64() * 1e6);
-                                    }
-                                    Err(_) => {
-                                        errors.fetch_add(1, Ordering::Relaxed);
-                                    }
-                                }
-                                let _ = reply.send(result);
-                            }
-                            Ok(Job::Shutdown) | Err(_) => break,
-                        }
-                    }
-                })
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || worker_loop(&models, &queue, opts, &served, &stats))
             })
             .collect();
 
         Self {
             models,
-            tx,
+            queue,
+            opts,
             workers,
             served,
             errors,
-            latencies_us,
+            shed,
+            stats,
             shutting_down: AtomicBool::new(false),
         }
     }
@@ -238,21 +509,73 @@ impl InferenceServer {
         names
     }
 
+    /// The micro-batching / admission options this server runs with.
+    pub fn options(&self) -> ServeOptions {
+        self.opts
+    }
+
     /// Submit a request; returns a receiver for the response, or an
     /// error once shutdown has begun (instead of silently enqueueing
-    /// into a dead queue).
+    /// into a dead queue). Validation (model, input length) and
+    /// admission control run on the submitter's thread: an invalid
+    /// request is answered through the receiver immediately without
+    /// touching the queue, and a shed request (queue full) gets its
+    /// rejection the same way.
     pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response, String>>, String> {
         if self.shutting_down.load(Ordering::SeqCst) {
             return Err("server is shutting down".to_string());
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        // A submit racing begin_shutdown can enqueue its job behind the
-        // shutdown sentinels. That is safe: every worker exits on its
-        // sentinel, the job queue's Receiver (held only by the workers)
-        // is dropped, the buffered job — and with it this reply sender —
-        // is destroyed, and the caller's recv() sees a disconnect
-        // ("server shut down"), not a hang.
-        let _ = self.tx.send(Job::Run(req, reply_tx));
+        // admission-time validation: workers only ever see well-formed
+        // requests for registered models
+        let deployed = match self.models.get(&req.model) {
+            Some(d) => d,
+            None => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply_tx.send(Err(format!("unknown model {:?}", req.model)));
+                return Ok(reply_rx);
+            }
+        };
+        let expected = deployed.plan.input_shape().len();
+        if req.input.len() != expected {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply_tx.send(Err(format!(
+                "input length {} != expected {expected}",
+                req.input.len()
+            )));
+            return Ok(reply_rx);
+        }
+        let now = Instant::now();
+        let budget = if req.deadline_us == 0 { self.opts.deadline_us } else { req.deadline_us };
+        // a huge budget (u64::MAX µs spells "never force-drain me")
+        // must not overflow the Instant — saturate to a year out
+        let deadline = now
+            .checked_add(Duration::from_micros(budget))
+            .unwrap_or_else(|| now + Duration::from_secs(365 * 24 * 3600));
+        let pending = Pending {
+            deadline,
+            enqueued: now,
+            reply: reply_tx,
+            req,
+        };
+        let (lock, cv) = &*self.queue;
+        let mut st = lock.lock().unwrap();
+        if st.shutdown {
+            // lost the race with begin_shutdown: fail fast (the queue
+            // flush may already be past this model's queue)
+            return Err("server is shutting down".to_string());
+        }
+        let models = &self.models;
+        let victim = st.admit(pending, self.opts.queue_depth, &|m| models[m].mcu.cycles);
+        drop(st);
+        cv.notify_one();
+        if let Some(v) = victim {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = v.reply.send(Err(format!(
+                "request shed: queue depth {} reached",
+                self.opts.queue_depth
+            )));
+        }
         Ok(reply_rx)
     }
 
@@ -266,30 +589,36 @@ impl InferenceServer {
     /// Current statistics. Percentiles are computed from the retained
     /// reservoir samples in place under the lock — no clone, O(capacity)
     /// regardless of how long the server has been up (reordering is
-    /// harmless: the reservoir is unordered by construction). The mean
-    /// is NOT a subsample estimate: the reservoir keeps an exact running
-    /// sum over every served request.
+    /// harmless: the reservoirs are unordered by construction). Means
+    /// are NOT subsample estimates: each reservoir keeps an exact
+    /// running sum over every served request.
     pub fn stats(&self) -> ServerStats {
-        let mut lats = self.latencies_us.lock().unwrap();
-        let mean_us = lats.mean();
+        let mut inner = self.stats.lock().unwrap();
+        let mean_us = inner.service_us.mean();
         let mut stats = compute_stats(
             self.served.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
-            lats.samples_mut(),
+            inner.service_us.samples_mut(),
         );
         stats.mean_us = mean_us;
+        stats.shed = self.shed.load(Ordering::Relaxed);
+        stats.queue_mean_us = inner.queue_us.mean();
+        (stats.queue_p50_us, stats.queue_p99_us) = percentile_pair(inner.queue_us.samples_mut());
+        stats.exec_mean_us = inner.exec_us.mean();
+        (stats.exec_p50_us, stats.exec_p99_us) = percentile_pair(inner.exec_us.samples_mut());
+        stats.batch_hist = inner.batch_hist.clone();
         stats
     }
 
     /// Begin a graceful shutdown: new `submit`/`infer` calls fail fast,
-    /// workers drain the queue and exit after the sentinel jobs.
-    /// Idempotent; does not block (use [`InferenceServer::shutdown`] to
-    /// join the workers).
+    /// workers flush the queued requests (in micro-batches, deadline
+    /// order) and exit. Idempotent; does not block (use
+    /// [`InferenceServer::shutdown`] to join the workers).
     pub fn begin_shutdown(&self) {
         if !self.shutting_down.swap(true, Ordering::SeqCst) {
-            for _ in 0..self.workers.len() {
-                let _ = self.tx.send(Job::Shutdown);
-            }
+            let (lock, cv) = &*self.queue;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
         }
     }
 
@@ -304,81 +633,164 @@ impl InferenceServer {
     }
 }
 
-/// Plan one inference arena per registered model from its compiled plan
-/// — what every worker does at spawn, so steady-state serving never
-/// allocates an arena (factored out for direct testing).
-fn plan_worker_arenas(models: &HashMap<String, Deployed>) -> HashMap<String, Workspace> {
+/// Plan one batch-capable inference arena per registered model from its
+/// compiled plan — what every worker does at spawn, so steady-state
+/// serving never allocates an arena (factored out for direct testing).
+/// Compute capacity is per-sample; only the I/O staging lanes scale with
+/// `max_batch`.
+fn plan_worker_arenas(
+    models: &HashMap<String, Deployed>,
+    max_batch: usize,
+) -> HashMap<String, Workspace> {
     models
         .iter()
-        .map(|(name, d)| (name.clone(), Workspace::for_plan(&d.plan)))
+        .map(|(name, d)| (name.clone(), Workspace::for_plan_batch(&d.plan, max_batch)))
         .collect()
 }
 
-/// Summarize latency samples into [`ServerStats`]. Percentiles use
-/// nearest-rank on the sorted samples: index `round((n - 1) · p)` — so
-/// p50 of 1..=100 µs is 51 µs and p99 is 99 µs (pinned by a unit test;
-/// the serving hot path depends on this staying stable under future
-/// batching work). Operates on a borrowed slice, sorting it in place —
-/// callers no longer clone the whole latency history per stats() call.
-fn compute_stats(served: u64, errors: u64, lats_us: &mut [f64]) -> ServerStats {
-    lats_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| -> f64 {
-        if lats_us.is_empty() {
-            return 0.0;
+/// One worker thread: wait until some model's queue is *ready* (full
+/// micro-batch, or oldest request out of queue-wait budget), drain it,
+/// execute the batch through the compiled engine in the pre-planned
+/// arena, reply. On shutdown, flush the remaining queues in deadline
+/// order before exiting.
+fn worker_loop(
+    models: &HashMap<String, Deployed>,
+    queue: &(Mutex<QueueState>, Condvar),
+    opts: ServeOptions,
+    served: &AtomicU64,
+    stats: &Mutex<StatsInner>,
+) {
+    let mut workspaces = plan_worker_arenas(models, opts.max_batch);
+    let (lock, cv) = queue;
+    'serve: loop {
+        let (name, batch) = {
+            let mut st = lock.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                let pick = st
+                    .ready_model(now, opts.max_batch)
+                    .or_else(|| if st.shutdown { st.any_model() } else { None });
+                if let Some(m) = pick {
+                    let b = st.pop_batch(&m, opts.max_batch);
+                    if !st.is_empty() {
+                        // more work remains: wake a peer before serving
+                        cv.notify_one();
+                    }
+                    break (m, b);
+                }
+                if st.shutdown {
+                    break 'serve;
+                }
+                st = match st.next_deadline() {
+                    // sleep exactly until the earliest forced drain …
+                    Some(t) => cv.wait_timeout(st, t.saturating_duration_since(now)).unwrap().0,
+                    // … or indefinitely when nothing is queued
+                    None => cv.wait(st).unwrap(),
+                };
+            }
+        };
+        serve_batch(models, &mut workspaces, &name, batch, served, stats);
+    }
+}
+
+/// Execute one drained micro-batch: stage every request payload into the
+/// worker's arena lanes, run the whole batch through the compiled plan
+/// (zero heap allocations on the inference), then reply per request with
+/// its queue-wait and the batch's execution time.
+fn serve_batch(
+    models: &HashMap<String, Deployed>,
+    workspaces: &mut HashMap<String, Workspace>,
+    name: &str,
+    batch: Vec<Pending>,
+    served: &AtomicU64,
+    stats: &Mutex<StatsInner>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let deployed = &models[name]; // requests are validated at admission
+    let plan = &deployed.plan;
+    let ws = workspaces
+        .get_mut(name)
+        .expect("worker arenas are planned for every registered model at spawn");
+    let n = batch.len();
+    let t0 = Instant::now();
+    for (lane, p) in batch.iter().enumerate() {
+        ws.stage_batch_input(lane, &p.req.input);
+    }
+    let out = plan.run_batch_staged(n, ws, &mut NoopMonitor);
+    // every reply goes out after the WHOLE batch finished, so the
+    // client-observed latency of each lane is queue wait + the full
+    // batch execution time — that is what the stats record (the
+    // amortized per-request cost is visible via batch_size / the
+    // throughput benches, not hidden in the latency split)
+    let exec = t0.elapsed();
+    let olen = plan.output_len();
+    {
+        // O(1)-per-lane critical section: reservoir offers + histogram
+        // only; response construction and channel sends happen outside
+        let mut inner = stats.lock().unwrap();
+        inner.batch_hist[n - 1] += 1;
+        for p in &batch {
+            let queue_wait = t0.saturating_duration_since(p.enqueued);
+            inner.service_us.offer((queue_wait + exec).as_secs_f64() * 1e6);
+            inner.queue_us.offer(queue_wait.as_secs_f64() * 1e6);
+            inner.exec_us.offer(exec.as_secs_f64() * 1e6);
         }
-        let idx = ((lats_us.len() as f64 - 1.0) * p).round() as usize;
-        lats_us[idx.min(lats_us.len() - 1)]
-    };
+    }
+    served.fetch_add(n as u64, Ordering::Relaxed);
+    for (lane, p) in batch.into_iter().enumerate() {
+        let logits = out[lane * olen..(lane + 1) * olen].to_vec();
+        let class = argmax(&logits);
+        let queue_wait = t0.saturating_duration_since(p.enqueued);
+        let _ = p.reply.send(Ok(Response {
+            id: p.req.id,
+            model: p.req.model,
+            logits,
+            class,
+            service_time: queue_wait + exec,
+            queue_wait,
+            batch_size: n,
+            mcu_latency_s: deployed.mcu.latency_s,
+            mcu_energy_mj: deployed.mcu.energy_mj,
+        }));
+    }
+}
+
+/// Nearest-rank percentile on sorted samples: index `round((n - 1) · p)`
+/// — so p50 of 1..=100 µs is 51 µs and p99 is 99 µs (pinned by a unit
+/// test; the batching scheduler depends on this staying stable).
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Sort a reservoir's samples in place and return `(p50, p99)`.
+fn percentile_pair(lats_us: &mut [f64]) -> (f64, f64) {
+    lats_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (nearest_rank(lats_us, 0.5), nearest_rank(lats_us, 0.99))
+}
+
+/// Summarize end-to-end latency samples into [`ServerStats`] (queue/exec
+/// split fields are left for the caller to fill). Operates on a borrowed
+/// slice, sorting it in place — no clone per `stats()` call.
+fn compute_stats(served: u64, errors: u64, lats_us: &mut [f64]) -> ServerStats {
+    let (p50_us, p99_us) = percentile_pair(lats_us);
     ServerStats {
         served,
         errors,
-        p50_us: pct(0.5),
-        p99_us: pct(0.99),
+        p50_us,
+        p99_us,
         mean_us: if lats_us.is_empty() {
             0.0
         } else {
             lats_us.iter().sum::<f64>() / lats_us.len() as f64
         },
+        ..ServerStats::default()
     }
-}
-
-fn serve_one(
-    models: &HashMap<String, Deployed>,
-    workspaces: &mut HashMap<String, Workspace>,
-    req: Request,
-    t0: Instant,
-) -> Result<Response, String> {
-    let deployed = models
-        .get(&req.model)
-        .ok_or_else(|| format!("unknown model {:?}", req.model))?;
-    let plan = &deployed.plan;
-    if req.input.len() != plan.input_shape().len() {
-        return Err(format!(
-            "input length {} != expected {}",
-            req.input.len(),
-            plan.input_shape().len()
-        ));
-    }
-    let Request { id, model, input } = req;
-    // the request buffer becomes the input tensor — no clone
-    let x = Tensor::from_vec(plan.input_shape(), plan.input_q(), input);
-    // the single engine path: the compiled plan (fixed or tuned) runs
-    // inside the worker's pre-planned arena — zero heap allocations on
-    // the inference; only the reply logits are copied out
-    let ws = workspaces
-        .get_mut(&model)
-        .expect("worker arenas are planned for every registered model at spawn");
-    let logits = deployed.plan.run_in(&x, ws, &mut NoopMonitor).data.clone();
-    let class = argmax(&logits);
-    Ok(Response {
-        id,
-        model,
-        class,
-        logits,
-        service_time: t0.elapsed(),
-        mcu_latency_s: deployed.mcu.latency_s,
-        mcu_energy_mj: deployed.mcu.energy_mj,
-    })
 }
 
 #[cfg(test)]
@@ -386,6 +798,7 @@ mod tests {
     use super::*;
     use crate::analytic::Primitive;
     use crate::models::mcunet;
+    use crate::nn::Tensor;
     use crate::util::prng::Rng;
 
     fn server() -> InferenceServer {
@@ -399,11 +812,7 @@ mod tests {
     fn request(id: u64, model: &str, rng: &mut Rng) -> Request {
         let mut input = vec![0i8; 32 * 32 * 3];
         rng.fill_i8(&mut input, -64, 63);
-        Request {
-            id,
-            model: model.to_string(),
-            input,
-        }
+        Request::new(id, model, input)
     }
 
     #[test]
@@ -416,13 +825,22 @@ mod tests {
             assert_eq!(r.id, i);
             assert_eq!(r.logits.len(), 10);
             assert!(r.class < 10);
+            assert!(r.batch_size >= 1);
             assert!(r.mcu_latency_s > 0.0);
             assert!(r.mcu_energy_mj > 0.0);
         }
         let stats = s.shutdown();
         assert_eq!(stats.served, 8);
         assert_eq!(stats.errors, 0);
+        assert_eq!(stats.shed, 0);
         assert!(stats.p99_us >= stats.p50_us);
+        // every served request fell into some batch bucket
+        assert_eq!(hist_requests(&stats.batch_hist), 8);
+    }
+
+    /// Total requests accounted by a batch-size histogram.
+    fn hist_requests(hist: &[u64]) -> u64 {
+        hist.iter().enumerate().map(|(i, &c)| (i as u64 + 1) * c).sum()
     }
 
     #[test]
@@ -438,11 +856,7 @@ mod tests {
     #[test]
     fn bad_input_length_is_an_error() {
         let s = server();
-        let r = Request {
-            id: 0,
-            model: "mcunet-standard".into(),
-            input: vec![0; 7],
-        };
+        let r = Request::new(0, "mcunet-standard", vec![0; 7]);
         assert!(s.infer(r).unwrap_err().contains("input length"));
         s.shutdown();
     }
@@ -556,10 +970,11 @@ mod tests {
     }
 
     #[test]
-    fn latency_history_is_bounded_by_the_reservoir() {
+    fn latency_history_is_bounded_by_the_reservoirs() {
         // sustained traffic must not grow the stats memory: the retained
         // sample count is capped at the reservoir capacity while `served`
-        // keeps counting
+        // keeps counting — for the end-to-end samples and the split
+        // queue/exec reservoirs alike
         let s = server();
         let mut rng = Rng::new(8);
         let n = 64u64;
@@ -567,23 +982,233 @@ mod tests {
             s.infer(request(i, "mcunet-standard", &mut rng)).unwrap();
         }
         {
-            let lats = s.latencies_us.lock().unwrap();
-            assert_eq!(lats.seen(), n);
-            assert_eq!(lats.len(), (n as usize).min(LATENCY_RESERVOIR_CAP));
-            assert!(lats.len() <= LATENCY_RESERVOIR_CAP);
+            let inner = s.stats.lock().unwrap();
+            for res in [&inner.service_us, &inner.queue_us, &inner.exec_us] {
+                assert_eq!(res.seen(), n);
+                assert_eq!(res.len(), (n as usize).min(LATENCY_RESERVOIR_CAP));
+            }
         }
         let stats = s.shutdown();
         assert_eq!(stats.served, n);
         assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
+        assert!(stats.exec_p99_us >= stats.exec_p50_us);
+        assert!(stats.queue_p99_us >= stats.queue_p50_us);
+    }
+
+    // ---- micro-batch queue scheduling (pure QueueState units) --------
+
+    fn pending_for(
+        model: &str,
+        id: u64,
+        enqueued: Instant,
+        deadline: Instant,
+    ) -> (Pending, mpsc::Receiver<Result<Response, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: Request::new(id, model, vec![0i8; 4]),
+                reply: tx,
+                enqueued,
+                deadline,
+            },
+            rx,
+        )
     }
 
     #[test]
-    fn workers_serve_through_pre_planned_arenas() {
+    fn drain_is_deadline_ordered_across_models() {
+        let base = Instant::now();
+        let ms = Duration::from_millis(1);
+        let mut st = QueueState::default();
+        let (pa, _ra) = pending_for("a", 0, base, base + 30 * ms);
+        let (pb, _rb) = pending_for("b", 1, base, base + 10 * ms);
+        st.push(pa);
+        st.push(pb);
+        // neither deadline has passed and no queue is full: nothing ready
+        assert_eq!(st.ready_model(base, 4), None);
+        assert_eq!(st.next_deadline(), Some(base + 10 * ms));
+        // once b's budget expires, b drains first even though a was
+        // submitted first …
+        assert_eq!(st.ready_model(base + 15 * ms, 4).as_deref(), Some("b"));
+        // … and with both expired, the earlier deadline still wins
+        assert_eq!(st.ready_model(base + 60 * ms, 4).as_deref(), Some("b"));
+        let b = st.pop_batch("b", 4);
+        assert_eq!(b.len(), 1);
+        assert_eq!(st.ready_model(base + 60 * ms, 4).as_deref(), Some("a"));
+        let a = st.pop_batch("a", 4);
+        assert_eq!(a.len(), 1);
+        assert!(st.is_empty());
+    }
+
+    #[test]
+    fn full_queue_is_ready_before_its_deadline_and_drains_fifo_capped() {
+        let base = Instant::now();
+        let far = base + Duration::from_secs(3600);
+        let mut st = QueueState::default();
+        let mut rxs = Vec::new();
+        for id in 0..5 {
+            let (p, r) = pending_for("m", id, base, far);
+            st.push(p);
+            rxs.push(r);
+        }
+        // 5 queued ≥ max_batch 4: ready immediately, no deadline needed
+        assert_eq!(st.ready_model(base, 4).as_deref(), Some("m"));
+        let batch = st.pop_batch("m", 4);
+        // FIFO drain, capped at max_batch
+        assert_eq!(batch.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(st.queued, 1);
+        // the remainder is below the cap and within budget: not ready
+        assert_eq!(st.ready_model(base, 4), None);
+        assert_eq!(st.any_model().as_deref(), Some("m"));
+    }
+
+    #[test]
+    fn admission_sheds_by_analytic_cost_past_the_depth_cap() {
+        let base = Instant::now();
+        let far = base + Duration::from_secs(3600);
+        let cost = |m: &str| if m == "cheap" { 1.0 } else { 100.0 };
+        let mut st = QueueState::default();
+        // fill to depth 2 with expensive work
+        for id in 0..2 {
+            let (p, _r) = pending_for("pricey", id, base, far);
+            assert!(st.admit(p, 2, &cost).is_none(), "below the cap nothing sheds");
+        }
+        // a cheap request past the cap evicts the newest expensive one
+        let (p, _r) = pending_for("cheap", 10, base, far);
+        let victim = st.admit(p, 2, &cost).expect("cap reached: someone sheds");
+        assert_eq!(victim.req.model, "pricey");
+        assert_eq!(victim.req.id, 1, "the newest entry of the costliest class sheds");
+        assert_eq!(st.queued, 2);
+        assert_eq!(st.queues["cheap"].len(), 1, "the cheap request was admitted");
+        // an expensive request past the cap sheds itself (nothing queued
+        // is costlier)
+        let (p, _r) = pending_for("pricey", 11, base, far);
+        let victim = st.admit(p, 2, &cost).expect("cap reached");
+        assert_eq!(victim.req.id, 11, "incoming expensive request is the victim");
+        assert_eq!(st.queued, 2);
+        // depth 0 always sheds the incoming request
+        let mut empty = QueueState::default();
+        let (p, _r) = pending_for("cheap", 12, base, far);
+        assert_eq!(empty.admit(p, 0, &cost).expect("shed").req.id, 12);
+    }
+
+    #[test]
+    fn batch_of_one_degenerates_to_sequential_serving_byte_identically() {
+        use crate::nn::NoopMonitor;
+        let cfg = McuConfig::default();
+        let model = mcunet(Primitive::Standard, 1);
+        let reference = model.clone();
+        let opts = ServeOptions { max_batch: 1, ..ServeOptions::default() };
+        let s = InferenceServer::start_with(vec![model], 1, &cfg, opts);
+        let mut rng = Rng::new(9);
+        for i in 0..6u64 {
+            let req = request(i, "mcunet-standard", &mut rng);
+            let x = Tensor::from_vec(reference.input_shape, reference.input_q, req.input.clone());
+            let want = reference.forward(&x, true, &mut NoopMonitor);
+            let r = s.infer(req).unwrap();
+            assert_eq!(r.logits, want.data, "request {i}");
+            assert_eq!(r.batch_size, 1);
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.batch_hist, vec![6], "every batch has size exactly 1");
+    }
+
+    #[test]
+    fn seeded_load_forms_full_batches_with_pinned_histogram_and_split_stats() {
+        // Deterministic micro-batching: one worker, max_batch 4, an
+        // effectively-infinite queue-wait budget and 8 asynchronous
+        // submissions MUST form exactly two batches of four — the drain
+        // condition (len ≥ max_batch) is the only trigger that can fire.
+        use crate::nn::NoopMonitor;
+        let cfg = McuConfig::default();
+        let model = mcunet(Primitive::DepthwiseSeparable, 3);
+        let reference = model.clone();
+        let opts = ServeOptions {
+            max_batch: 4,
+            deadline_us: 3_600_000_000, // one hour: never the trigger
+            queue_depth: 64,
+        };
+        let s = InferenceServer::start_with(vec![model], 1, &cfg, opts);
+        let mut rng = Rng::new(0x5EED);
+        let mut inputs = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            let req = request(i, "mcunet-dws", &mut rng);
+            inputs.push(req.input.clone());
+            rxs.push(s.submit(req).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.batch_size, 4, "request {i} must ride a full batch");
+            // byte-identical to the engine under batching
+            let x = Tensor::from_vec(
+                reference.input_shape,
+                reference.input_q,
+                inputs[i].clone(),
+            );
+            let want = reference.forward(&x, true, &mut NoopMonitor);
+            assert_eq!(r.logits, want.data, "request {i}");
+            assert!(r.service_time >= r.queue_wait);
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 8);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.batch_hist, vec![0, 0, 0, 2], "two batches of four, nothing else");
+        // the queue-wait/execution split: every request waited for its
+        // batch to fill and executed for a nonzero share, and the means
+        // recompose into the end-to-end mean exactly (service = queue +
+        // share per request, all reservoirs under capacity)
+        assert!(stats.queue_mean_us > 0.0);
+        assert!(stats.exec_mean_us > 0.0);
+        assert!((stats.mean_us - (stats.queue_mean_us + stats.exec_mean_us)).abs() < 1e-6);
+        assert!(stats.queue_p99_us >= stats.queue_p50_us);
+    }
+
+    #[test]
+    fn deadline_drains_partial_batches() {
+        // max_batch 8 but only 3 requests: without the deadline trigger
+        // the worker would wait forever; the queue-wait budget forces the
+        // partial drain.
+        let cfg = McuConfig::default();
+        let opts = ServeOptions { max_batch: 8, deadline_us: 1_000, queue_depth: 64 };
+        let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
+        let mut rng = Rng::new(12);
+        let rxs: Vec<_> = (0..3u64)
+            .map(|i| s.submit(request(i, "mcunet-standard", &mut rng)).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert!(r.batch_size <= 3, "only three requests exist");
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 3);
+        assert_eq!(hist_requests(&stats.batch_hist), 3);
+    }
+
+    #[test]
+    fn zero_depth_sheds_every_submission() {
+        let cfg = McuConfig::default();
+        let opts = ServeOptions { max_batch: 1, deadline_us: 100, queue_depth: 0 };
+        let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
+        let mut rng = Rng::new(13);
+        let rx = s.submit(request(0, "mcunet-standard", &mut rng)).unwrap();
+        let e = rx.recv().unwrap().unwrap_err();
+        assert!(e.contains("shed"), "{e}");
+        let stats = s.shutdown();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.errors, 0, "shed requests are not validation errors");
+    }
+
+    #[test]
+    fn workers_serve_through_pre_planned_batch_arenas() {
         // The spawn-time arena map covers EVERY registered model — tuned
-        // and untuned — and serve_one runs inside it (no per-request
-        // workspace construction, no `schedule.is_none()` asymmetry);
-        // outputs through the arena path are bit-exact with the legacy
-        // allocating executors, including on dirty arena reuse.
+        // and untuned — with batch staging; serve_batch runs inside it
+        // (no per-request workspace construction); outputs through the
+        // batched arena path are bit-exact with the legacy allocating
+        // executors, including on dirty arena reuse across rounds.
         use crate::tuner::{Objective, TuningCache};
         let cfg = McuConfig::default();
         let models = vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)];
@@ -608,31 +1233,54 @@ mod tests {
             },
         );
         reference.insert(plain.name.clone(), plain);
-        let mut arenas = plan_worker_arenas(&registry);
+        let max_batch = 3;
+        let mut arenas = plan_worker_arenas(&registry, max_batch);
         assert_eq!(arenas.len(), registry.len(), "every model gets an arena");
+        let served = AtomicU64::new(0);
+        let stats = Mutex::new(StatsInner::new(max_batch));
         let mut rng = Rng::new(11);
-        for round in 0..3 {
+        let base = Instant::now();
+        for round in 0..3u64 {
             for (name, d) in &registry {
                 let model = &reference[name];
-                let mut input = vec![0i8; model.input_shape.len()];
-                rng.fill_i8(&mut input, -64, 63);
-                let req = Request { id: round, model: name.clone(), input: input.clone() };
-                let got = serve_one(&registry, &mut arenas, req, Instant::now()).unwrap();
-                let x = Tensor::from_vec(model.input_shape, model.input_q, input);
-                let want = match &d.schedule {
-                    Some(s) => s.run(model, &x, &mut NoopMonitor),
-                    None => model.forward(&x, true, &mut NoopMonitor),
-                };
-                assert_eq!(got.logits, want.data, "{name} round {round}");
+                let mut batch = Vec::new();
+                let mut rx_inputs = Vec::new();
+                for lane in 0..max_batch as u64 {
+                    let mut input = vec![0i8; model.input_shape.len()];
+                    rng.fill_i8(&mut input, -64, 63);
+                    let (tx, rx) = mpsc::channel();
+                    batch.push(Pending {
+                        req: Request::new(round * 10 + lane, name.clone(), input.clone()),
+                        reply: tx,
+                        enqueued: base,
+                        deadline: base,
+                    });
+                    rx_inputs.push((rx, input));
+                }
+                serve_batch(&registry, &mut arenas, name, batch, &served, &stats);
+                for (i, (rx, input)) in rx_inputs.into_iter().enumerate() {
+                    let got = rx.recv().unwrap().unwrap();
+                    assert_eq!(got.batch_size, max_batch);
+                    let x = Tensor::from_vec(model.input_shape, model.input_q, input);
+                    let want = match &d.schedule {
+                        Some(s) => s.run(model, &x, &mut NoopMonitor),
+                        None => model.forward(&x, true, &mut NoopMonitor),
+                    };
+                    assert_eq!(got.logits, want.data, "{name} round {round} lane {i}");
+                }
             }
         }
+        assert_eq!(served.load(Ordering::Relaxed), 3 * 3 * registry.len() as u64);
+        assert_eq!(stats.lock().unwrap().batch_hist, vec![0, 0, 3 * registry.len() as u64]);
     }
 
     #[test]
     fn residual_graph_server_serves_bit_exact() {
         // skip-connection models register, tune and serve through the
-        // same worker/arena machinery as the linear zoo
+        // same worker/arena machinery as the linear zoo — micro-batch
+        // queue included
         use crate::models::mcunet_residual;
+        use crate::nn::NoopMonitor;
         use crate::tuner::{Objective, TuningCache};
         let cfg = McuConfig::default();
         let graphs: Vec<crate::nn::Graph> =
@@ -645,7 +1293,7 @@ mod tests {
             let mut input = vec![0i8; g.input_shape.len()];
             rng.fill_i8(&mut input, -64, 63);
             let r = s
-                .infer(Request { id: i as u64, model: g.name.clone(), input: input.clone() })
+                .infer(Request::new(i as u64, g.name.clone(), input.clone()))
                 .unwrap();
             assert_eq!(r.logits.len(), 10, "{}", g.name);
             assert!(r.mcu_latency_s > 0.0 && r.mcu_energy_mj > 0.0);
@@ -657,5 +1305,25 @@ mod tests {
         let stats = s.shutdown();
         assert_eq!(stats.served, Primitive::ALL.len() as u64);
         assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_the_server_default() {
+        // the server default would hold a lone request for an hour; the
+        // request's own tight budget forces the drain
+        let cfg = McuConfig::default();
+        let opts = ServeOptions {
+            max_batch: 8,
+            deadline_us: 3_600_000_000,
+            queue_depth: 64,
+        };
+        let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
+        let mut rng = Rng::new(19);
+        let mut req = request(0, "mcunet-standard", &mut rng);
+        req.deadline_us = 500;
+        let r = s.infer(req).unwrap();
+        assert_eq!(r.batch_size, 1);
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 1);
     }
 }

@@ -25,7 +25,9 @@
 //!   *and* tuned schedules inside the [`nn::workspace`] scratch arena
 //!   with zero steady-state allocations and a byte-exact peak-RAM plan
 //!   (`Model::forward_in`, `Graph::forward_in`,
-//!   `TunedSchedule::run_in`).
+//!   `TunedSchedule::run_in`), including whole micro-batches through
+//!   one bound arena (`ExecPlan::run_batch_in` — bit-exact per lane
+//!   with sequential execution).
 //! * [`mcu`] — a Cortex-M4 instruction-cost + power/energy simulator
 //!   (the substitution for the paper's STM32F401-RE testbed).
 //! * [`analytic`] — Table 1 closed forms (parameters / theoretical MACs).
@@ -42,8 +44,14 @@
 //! * [`runtime`] — artifact bookkeeping for the JAX/Pallas-lowered HLO
 //!   models; the PJRT client (via the `xla` crate) sits behind the
 //!   `pjrt` cargo feature for cross-layer validation.
-//! * [`coordinator`] — deployment pipeline + threaded inference server
-//!   (both can deploy tuned schedules).
+//! * [`coordinator`] — deployment pipeline + the deadline-aware
+//!   micro-batched inference server (per-model batch queues drained
+//!   through [`nn::plan::ExecPlan::run_batch_staged`], analytic-cost
+//!   admission control, queue-wait/execution latency split; both
+//!   pipeline and server can deploy tuned schedules).
+//!
+//! See `docs/ARCHITECTURE.md` for the module-by-module handbook, the
+//! request-lifecycle walkthrough and the code↔paper map.
 //! * [`report`] — CSV / markdown emitters for EXPERIMENTS.md.
 //! * [`util`] — offline substitutes for clap/criterion/proptest/serde.
 

@@ -16,7 +16,9 @@
 //!                                  # per-layer schedule auto-tuner over
 //!                                  # the Table 2 workloads + model zoo
 //! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
-//! convbench serve [--requests N] [--workers W] # inference service demo
+//! convbench serve [--requests N] [--workers W] [--max-batch B]
+//!                 [--deadline-us D] [--queue-depth Q]
+//!                                  # micro-batched inference service demo
 //! ```
 
 use convbench::analytic::Primitive;
@@ -54,12 +56,13 @@ fn main() {
         Some("serve") => {
             let n = args.get_or("requests", 64usize);
             let workers = args.get_or("workers", 2usize);
-            coordinator::serve_cli(n, workers);
+            coordinator::serve_cli(n, workers, coordinator::ServeOptions::from_args(&args));
         }
         _ => {
             eprintln!(
                 "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve> \
-                 [--exp N] [--out DIR] [--quick]"
+                 [--exp N] [--out DIR] [--quick] \
+                 (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] [--queue-depth Q])"
             );
             std::process::exit(2);
         }

@@ -58,7 +58,10 @@ impl ValueInterval {
 /// size (`max(offset + size)` over all values).
 #[derive(Clone, Debug)]
 pub struct ArenaLayout {
+    /// Byte offset of each value in the flat arena (indexed by value id).
     pub offsets: Vec<usize>,
+    /// Total arena size: `max(offset + size)` over all values — the
+    /// activation RAM an MCU deployment provisions.
     pub peak_bytes: usize,
 }
 
@@ -66,7 +69,10 @@ pub struct ArenaLayout {
 /// (the largest value the slot ever hosts).
 #[derive(Clone, Debug)]
 pub struct SlotLayout {
+    /// Slot index of each value (indexed by value id); lifetime-disjoint
+    /// values share a slot.
     pub slot_of: Vec<usize>,
+    /// Per-slot byte capacity (the largest value the slot ever hosts).
     pub caps: Vec<usize>,
 }
 

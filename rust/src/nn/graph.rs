@@ -25,18 +25,32 @@ use super::tensor::{Shape, Tensor};
 /// One layer of a deployed model.
 #[derive(Clone, Debug)]
 pub enum Layer {
+    /// Standard / grouped / pointwise convolution (§2.2, groups ≥ 1).
     Conv(QuantConv),
+    /// Depthwise convolution (one filter per channel).
     Depthwise(QuantDepthwise),
+    /// Shift convolution: per-channel spatial shift + pointwise mix
+    /// (Eq. 2).
     Shift(ShiftConv),
+    /// Add-convolution (L1-distance kernel, §2.2; scalar only, §3.3).
     AddConv(AddConv),
+    /// Integer batch-norm kept separate where folding is unsuitable
+    /// (§3.2).
     Bn(BnLayer),
+    /// Format-preserving rectifier.
     Relu,
+    /// 2×2 max pooling (stride 2).
     MaxPool2,
+    /// Global average pooling, optionally requantizing into the given
+    /// output format.
     GlobalAvgPool(Option<crate::quant::QParam>),
+    /// Fully-connected classifier head.
     Dense(QuantDense),
 }
 
 impl Layer {
+    /// Human-readable kernel name (also the tuning-cache signature
+    /// prefix and the profile row label).
     pub fn name(&self) -> &'static str {
         match self {
             Layer::Conv(c) if c.kernel == 1 => "pointwise",
@@ -126,20 +140,27 @@ impl Layer {
 /// Per-layer profile from an instrumented inference.
 #[derive(Clone, Debug)]
 pub struct LayerProfile {
+    /// Kernel name ([`Layer::name`] / [`NodeOp::name`]).
     pub name: &'static str,
+    /// Micro-op event totals of the layer's execution.
     pub counts: OpCounts,
 }
 
 /// A deployed sequential model.
 #[derive(Clone, Debug)]
 pub struct Model {
+    /// Deployment name (the serving registry key).
     pub name: String,
+    /// HWC input shape.
     pub input_shape: Shape,
+    /// Power-of-two input activation format.
     pub input_q: QParam,
+    /// The layer chain, executed in order.
     pub layers: Vec<Layer>,
 }
 
 impl Model {
+    /// Start an empty model with the given input contract.
     pub fn new(name: impl Into<String>, input_shape: Shape, input_q: QParam) -> Self {
         Self {
             name: name.into(),
@@ -149,6 +170,7 @@ impl Model {
         }
     }
 
+    /// Append a layer (builder style; returns `self` for chaining).
     pub fn push(&mut self, layer: Layer) -> &mut Self {
         self.layers.push(layer);
         self
@@ -219,6 +241,7 @@ pub(crate) fn layer_weight_bytes(layer: &Layer) -> usize {
 /// the MobileNet/MCUNet-class residual topologies the paper benchmarks).
 #[derive(Clone, Debug)]
 pub struct ResidualAdd {
+    /// Power-of-two format the requantized sum is emitted in.
     pub q_out: QParam,
 }
 
@@ -272,6 +295,8 @@ pub enum NodeOp {
 }
 
 impl NodeOp {
+    /// Human-readable op name (the layer's kernel name, or `"add"` for
+    /// the residual join).
     pub fn name(&self) -> &'static str {
         match self {
             NodeOp::Layer(l) => l.name(),
@@ -304,7 +329,10 @@ pub type ValueId = usize;
 /// One node of the DAG IR: an op plus the value ids it consumes.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// The operation this node computes.
     pub op: NodeOp,
+    /// Consumed value ids, length = [`NodeOp::arity`]. A reference to a
+    /// value defined more than one step back is a skip edge.
     pub inputs: Vec<ValueId>,
 }
 
@@ -314,13 +342,18 @@ pub struct Node {
 /// or lowered from a linear [`Model`] ([`Graph::from_model`]).
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Deployment name (the serving registry key).
     pub name: String,
+    /// HWC input shape (value 0's shape).
     pub input_shape: Shape,
+    /// Power-of-two input activation format (value 0's format).
     pub input_q: QParam,
+    /// Topologically-ordered nodes; node `i` defines value `i + 1`.
     pub nodes: Vec<Node>,
 }
 
 impl Graph {
+    /// Start an empty graph with the given input contract (value 0).
     pub fn new(name: impl Into<String>, input_shape: Shape, input_q: QParam) -> Self {
         Self {
             name: name.into(),

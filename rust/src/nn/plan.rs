@@ -276,6 +276,40 @@ impl ExecPlan {
     }
 
     /// Compile a graph under a per-node candidate schedule.
+    ///
+    /// The compiled plan is immutable decision + parameter data; bind it
+    /// to a [`Workspace`] once and run forever with zero steady-state
+    /// heap allocations:
+    ///
+    /// ```
+    /// use convbench::nn::{ExecPlan, Graph, Layer, NoopMonitor, QuantDense, Shape, Tensor,
+    ///                     Workspace};
+    /// use convbench::quant::QParam;
+    /// use convbench::tuner::{Candidate, KernelImpl, Lowering};
+    ///
+    /// // a one-node graph: input -> dense(4 -> 2)
+    /// let mut g = Graph::new("doc", Shape::new(1, 1, 4), QParam::new(6));
+    /// let v = g.input();
+    /// g.layer(v, Layer::Dense(QuantDense {
+    ///     in_features: 4,
+    ///     out_features: 2,
+    ///     weights: vec![1, -2, 3, -4, 5, -6, 7, -8],
+    ///     bias: vec![0, 0],
+    ///     q_in: QParam::new(6),
+    ///     q_w: QParam::new(7),
+    ///     q_out: QParam::new(5),
+    /// }));
+    ///
+    /// // schedule: one candidate per node (here: the scalar kernel)
+    /// let schedule = vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }];
+    /// let plan = ExecPlan::compile_graph(&g, &schedule);
+    ///
+    /// // bind an arena sized from the plan, then run allocation-free
+    /// let mut ws = Workspace::for_plan(&plan);
+    /// let x = Tensor::from_vec(Shape::new(1, 1, 4), QParam::new(6), vec![10, -20, 30, -40]);
+    /// let y = plan.run_in(&x, &mut ws, &mut NoopMonitor);
+    /// assert_eq!(y.shape, Shape::new(1, 1, 2));
+    /// ```
     pub fn compile_graph(graph: &Graph, schedule: &[Candidate]) -> ExecPlan {
         assert_eq!(
             schedule.len(),
@@ -400,6 +434,15 @@ impl ExecPlan {
     /// Number of compiled nodes.
     pub fn n_layers(&self) -> usize {
         self.steps.len()
+    }
+
+    /// Output length in elements (the logits the serving path copies
+    /// out; for an empty graph the input passes through).
+    pub fn output_len(&self) -> usize {
+        self.steps
+            .last()
+            .map(|s| s.out_shape.len())
+            .unwrap_or_else(|| self.input_shape.len())
     }
 
     /// The per-node candidate schedule this plan executes.
@@ -544,6 +587,103 @@ impl ExecPlan {
             run_step(step, ws, mon);
         }
         self.out_slot
+    }
+
+    /// Execute a **micro-batch** of inferences through one bound
+    /// workspace: every sample runs the full compiled step sequence
+    /// before the next starts (the batch loop sits *outside* the
+    /// per-node kernel dispatch, so the compiled kernels are untouched),
+    /// and the per-call cost the single-inference path pays once per
+    /// request — plan/arena capacity validation and slot binding — is
+    /// paid once per batch. The pre-widened weights, im2col column
+    /// arena and liveness slots are reused across all samples, so the
+    /// working-set RAM is that of the widest *single* sample.
+    ///
+    /// Outputs land in the workspace's output staging lanes; the
+    /// returned slice is the concatenation of the `batch.len()` logits
+    /// vectors, valid until the next run. Bit-exact with — and
+    /// `CountingMonitor`-event-identical to — `batch.len()` sequential
+    /// [`ExecPlan::run_in`] calls (property-tested below), with zero
+    /// steady-state heap allocations (pinned in `benches/infer_hot.rs`).
+    /// Requires an arena with staging lanes
+    /// ([`Workspace::for_plan_batch`] with `max_batch ≥ batch.len()`).
+    pub fn run_batch_in<'w, M: Monitor>(
+        &self,
+        batch: &[Tensor],
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w [i8] {
+        self.run_batch_steps(batch, ws, mon);
+        &ws.batch_out[..batch.len() * self.output_len()]
+    }
+
+    /// [`ExecPlan::run_batch_in`] without the output borrow (lets
+    /// `TunedSchedule::run_batch_in` interleave its bound-plan take/put
+    /// dance around the run).
+    pub(crate) fn run_batch_steps<M: Monitor>(
+        &self,
+        batch: &[Tensor],
+        ws: &mut Workspace,
+        mon: &mut M,
+    ) {
+        self.check_batch(batch.len(), ws);
+        for (lane, x) in batch.iter().enumerate() {
+            assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
+            let slot = &mut ws.slots[self.in_slot];
+            prepare(slot, x.shape, x.q);
+            slot.data.copy_from_slice(&x.data);
+            for step in &self.steps {
+                run_step(step, ws, mon);
+            }
+            ws.copy_slot_to_lane(self.out_slot, lane);
+        }
+    }
+
+    /// Execute a micro-batch of `n` samples previously copied into the
+    /// workspace's input staging lanes ([`Workspace::stage_batch_input`])
+    /// — the serving-worker flavor of [`ExecPlan::run_batch_in`]: the
+    /// request payloads never materialize as tensors, and the whole
+    /// request→logits path stays allocation-free. Same bit-exactness and
+    /// event-stream guarantees as the tensor-slice variant.
+    pub fn run_batch_staged<'w, M: Monitor>(
+        &self,
+        n: usize,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w [i8] {
+        self.check_batch(n, ws);
+        for lane in 0..n {
+            ws.fill_slot_from_lane(self.in_slot, lane, self.input_shape, self.input_q);
+            for step in &self.steps {
+                run_step(step, ws, mon);
+            }
+            ws.copy_slot_to_lane(self.out_slot, lane);
+        }
+        &ws.batch_out[..n * self.output_len()]
+    }
+
+    /// Batch-wide validation, hoisted out of the per-sample loop: arena
+    /// capacity, staging lane coverage and stride agreement.
+    fn check_batch(&self, n: usize, ws: &Workspace) {
+        assert!(
+            n <= ws.max_batch(),
+            "batch of {n} exceeds the workspace's staged capacity {} (plan the arena with \
+             Workspace::for_plan_batch)",
+            ws.max_batch()
+        );
+        assert!(
+            ws.fits_plan(self),
+            "workspace capacity is insufficient for plan of model {:?} (plan the arena with \
+             Workspace::for_plan_batch)",
+            self.model_name
+        );
+        let (in_len, out_len) = ws.batch_lane_lens();
+        assert_eq!(
+            (in_len, out_len),
+            (self.input_shape.len(), self.output_len()),
+            "staging lane strides were planned for a different model than {:?}",
+            self.model_name
+        );
     }
 
     fn stage(&self, x: &Tensor, ws: &mut Workspace) {
@@ -1076,6 +1216,106 @@ mod tests {
             let got = plan.run_in(&xin, &mut ws, &mut NoopMonitor);
             assert_eq!(want.data, got.data, "({bp},{bf})");
         }
+    }
+
+    #[test]
+    fn run_batch_in_bit_exact_and_event_identical_to_sequential() {
+        // The batched acceptance criterion: N samples through one batch
+        // arena are bit-exact per lane with N sequential run_in calls,
+        // and the shared monitor sees the identical event stream —
+        // fixed, tuned, and residual-graph plans alike, on a dirty
+        // (reused) batch arena.
+        const N: usize = 8;
+        let cfg = McuConfig::default();
+        let mut rng = Rng::new(0xBA7C);
+        let mut check = |plan: &ExecPlan, input_shape: Shape, input_q: QParam| {
+            let mut bws = Workspace::for_plan_batch(plan, N);
+            let mut sws = Workspace::for_plan(plan);
+            for trial in 0..2 {
+                let batch: Vec<Tensor> = (0..N)
+                    .map(|_| {
+                        let mut x = Tensor::zeros(input_shape, input_q);
+                        rng.fill_i8(&mut x.data, -64, 63);
+                        x
+                    })
+                    .collect();
+                let mut ma = CountingMonitor::new();
+                let mut want = Vec::new();
+                for x in &batch {
+                    want.extend_from_slice(&plan.run_in(x, &mut sws, &mut ma).data);
+                }
+                let mut mb = CountingMonitor::new();
+                let got = plan.run_batch_in(&batch, &mut bws, &mut mb);
+                assert_eq!(want.as_slice(), got, "{} trial {trial}", plan.model_name());
+                assert_eq!(ma.counts, mb.counts, "{} trial {trial}", plan.model_name());
+                // the staged (serving-worker) flavor is the same engine
+                for (lane, x) in batch.iter().enumerate() {
+                    bws.stage_batch_input(lane, &x.data);
+                }
+                let staged = plan.run_batch_staged(N, &mut bws, &mut NoopMonitor);
+                assert_eq!(want.as_slice(), staged, "{} staged trial {trial}", plan.model_name());
+            }
+        };
+        for prim in [Primitive::Standard, Primitive::Shift] {
+            let model = mcunet(prim, 31);
+            let mut cache = TuningCache::in_memory();
+            let (sched, _) = tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+            check(
+                &ExecPlan::compile_default(&model, true),
+                model.input_shape,
+                model.input_q,
+            );
+            check(
+                &ExecPlan::compile(&model, &sched.candidates()),
+                model.input_shape,
+                model.input_q,
+            );
+            let g = mcunet_residual(prim, 31);
+            check(
+                &ExecPlan::compile_graph_default(&g, true),
+                g.input_shape,
+                g.input_q,
+            );
+        }
+    }
+
+    #[test]
+    fn batch_of_one_and_zero_degenerate_cleanly() {
+        let model = mcunet(Primitive::DepthwiseSeparable, 13);
+        let plan = ExecPlan::compile_default(&model, true);
+        let mut bws = Workspace::for_plan_batch(&plan, 4);
+        let mut sws = Workspace::for_plan(&plan);
+        let mut x = Tensor::zeros(model.input_shape, model.input_q);
+        Rng::new(0x1B).fill_i8(&mut x.data, -64, 63);
+        let want = plan.run_in(&x, &mut sws, &mut NoopMonitor).data.clone();
+        let got = plan.run_batch_in(std::slice::from_ref(&x), &mut bws, &mut NoopMonitor);
+        assert_eq!(want.as_slice(), got, "batch of one == run_in");
+        let empty = plan.run_batch_in(&[], &mut bws, &mut NoopMonitor);
+        assert!(empty.is_empty(), "batch of zero returns no logits");
+    }
+
+    #[test]
+    #[should_panic(expected = "staged capacity")]
+    fn batch_beyond_staged_capacity_panics() {
+        let model = mcunet(Primitive::Standard, 13);
+        let plan = ExecPlan::compile_default(&model, true);
+        let mut bws = Workspace::for_plan_batch(&plan, 2);
+        let batch: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::zeros(model.input_shape, model.input_q))
+            .collect();
+        plan.run_batch_in(&batch, &mut bws, &mut NoopMonitor);
+    }
+
+    #[test]
+    #[should_panic(expected = "staged capacity")]
+    fn single_inference_arena_rejects_batches() {
+        // a bare for_plan arena has no staging lanes — the batch path
+        // must refuse instead of indexing empty buffers
+        let model = mcunet(Primitive::Standard, 13);
+        let plan = ExecPlan::compile_default(&model, true);
+        let mut ws = Workspace::for_plan(&plan);
+        let x = Tensor::zeros(model.input_shape, model.input_q);
+        plan.run_batch_in(std::slice::from_ref(&x), &mut ws, &mut NoopMonitor);
     }
 
     #[test]

@@ -264,6 +264,25 @@ pub struct Workspace {
     simd_plan: Option<Box<ExecPlan>>,
     /// A tuned plan bound to this arena (`TunedSchedule::workspace`).
     pub(crate) bound: Option<Box<ExecPlan>>,
+    /// Batched-input staging lanes ([`Workspace::for_plan_batch`]):
+    /// `max_batch` contiguous copies of the model input, filled by
+    /// [`Workspace::stage_batch_input`] and consumed by
+    /// [`ExecPlan::run_batch_staged`]. Empty on single-inference arenas.
+    pub(crate) batch_in: Vec<i8>,
+    /// Batched-output lanes: `max_batch` contiguous copies of the model
+    /// output, filled by the batch executors. Empty on single-inference
+    /// arenas.
+    pub(crate) batch_out: Vec<i8>,
+    /// Per-sample staging stride of `batch_in` (the planned input
+    /// length).
+    batch_in_len: usize,
+    /// Per-sample staging stride of `batch_out` (the planned output
+    /// length).
+    batch_out_len: usize,
+    /// Largest batch the staging lanes cover; 0 on single-inference
+    /// arenas (the compute arena itself is always per-sample — batching
+    /// never widens slots, columns or accumulators).
+    max_batch: usize,
     plan: WorkspacePlan,
 }
 
@@ -341,6 +360,88 @@ impl Workspace {
         ws
     }
 
+    /// [`Workspace::for_plan`] plus batched-I/O staging for up to
+    /// `max_batch` samples — the arena [`ExecPlan::run_batch_in`] /
+    /// [`ExecPlan::run_batch_staged`] require.
+    ///
+    /// The *compute* capacities are identical to a single-inference
+    /// arena: the batch loop runs one sample at a time through the same
+    /// liveness slots, im2col column arena and accumulators, so the
+    /// working-set RAM scales only with the widest single sample, never
+    /// with the batch. The only addition is the contiguous input/output
+    /// staging (`max_batch · input_len` + `max_batch · output_len`
+    /// bytes) that lets a serving worker copy request payloads in and
+    /// reply logits out without any steady-state allocation.
+    pub fn for_plan_batch(plan: &ExecPlan, max_batch: usize) -> Self {
+        let mut ws = Self::for_plan(plan);
+        ws.max_batch = max_batch.max(1);
+        ws.batch_in_len = plan.input_shape().len();
+        ws.batch_out_len = plan.output_len();
+        ws.batch_in = vec![0i8; ws.max_batch * ws.batch_in_len];
+        ws.batch_out = vec![0i8; ws.max_batch * ws.batch_out_len];
+        ws
+    }
+
+    /// [`Workspace::bind`] with batched-I/O staging
+    /// ([`Workspace::for_plan_batch`]) — the arena
+    /// `TunedSchedule::run_batch_in` drives.
+    pub fn bind_batch(plan: ExecPlan, max_batch: usize) -> Self {
+        let mut ws = Self::for_plan_batch(&plan, max_batch);
+        ws.bound = Some(Box::new(plan));
+        ws
+    }
+
+    /// Largest batch the staging lanes cover (0: single-inference arena
+    /// without staging — plan one with [`Workspace::for_plan_batch`]).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Per-sample staging strides `(input_len, output_len)` in elements
+    /// (both 0 on single-inference arenas).
+    pub(crate) fn batch_lane_lens(&self) -> (usize, usize) {
+        (self.batch_in_len, self.batch_out_len)
+    }
+
+    /// Copy one request payload into staging lane `lane` (allocation
+    /// free). Lanes are consumed in order by
+    /// [`ExecPlan::run_batch_staged`]; staging a lane ≥ the batch size
+    /// actually run is harmless.
+    pub fn stage_batch_input(&mut self, lane: usize, input: &[i8]) {
+        assert!(
+            lane < self.max_batch,
+            "staging lane {lane} out of range (arena planned for max_batch {})",
+            self.max_batch
+        );
+        assert_eq!(
+            input.len(),
+            self.batch_in_len,
+            "staged input length mismatch (lane {lane})"
+        );
+        self.batch_in[lane * self.batch_in_len..(lane + 1) * self.batch_in_len]
+            .copy_from_slice(input);
+    }
+
+    /// Stage activation slot `slot` for a new sample and fill it from
+    /// input staging lane `lane` (split-borrow helper for the batch
+    /// executors; the lane stride is the planned input length).
+    pub(crate) fn fill_slot_from_lane(&mut self, slot: usize, lane: usize, shape: Shape, q: QParam) {
+        let Workspace { slots, batch_in, batch_in_len, .. } = self;
+        let t = &mut slots[slot];
+        prepare(t, shape, q);
+        t.data
+            .copy_from_slice(&batch_in[lane * *batch_in_len..(lane + 1) * *batch_in_len]);
+    }
+
+    /// Copy activation slot `slot` (holding a finished sample's output)
+    /// into output staging lane `lane`.
+    pub(crate) fn copy_slot_to_lane(&mut self, slot: usize, lane: usize) {
+        let Workspace { slots, batch_out, batch_out_len, .. } = self;
+        let d = &slots[slot].data;
+        debug_assert_eq!(d.len(), *batch_out_len, "output length drifted from the plan");
+        batch_out[lane * *batch_out_len..(lane + 1) * *batch_out_len].copy_from_slice(d);
+    }
+
     fn with_capacities(
         slot_caps: &[usize],
         col_len: usize,
@@ -361,6 +462,11 @@ impl Workspace {
             scalar_plan: None,
             simd_plan: None,
             bound: None,
+            batch_in: Vec::new(),
+            batch_out: Vec::new(),
+            batch_in_len: 0,
+            batch_out_len: 0,
+            max_batch: 0,
             plan,
         }
     }

@@ -133,6 +133,20 @@ impl TunedSchedule {
         Workspace::bind(self.compile_graph(graph))
     }
 
+    /// [`TunedSchedule::workspace`] with batched-I/O staging for up to
+    /// `max_batch` samples — the arena
+    /// [`TunedSchedule::run_batch_in`] drives. Compute capacity is
+    /// per-sample (batching never widens the arena); only the
+    /// input/output staging lanes scale with `max_batch`.
+    pub fn workspace_batch(&self, model: &Model, max_batch: usize) -> Workspace {
+        Workspace::bind_batch(self.compile(model), max_batch)
+    }
+
+    /// [`TunedSchedule::workspace_batch`] for graph deployments.
+    pub fn workspace_graph_batch(&self, graph: &Graph, max_batch: usize) -> Workspace {
+        Workspace::bind_batch(self.compile_graph(graph), max_batch)
+    }
+
     /// Execute one inference through the compiled engine inside a
     /// pre-planned arena from [`TunedSchedule::workspace`]: bit-exact
     /// and `CountingMonitor`-event-identical to [`TunedSchedule::run`]
@@ -147,6 +161,28 @@ impl TunedSchedule {
     /// same-named, same-schedule redeploy with new weights must call
     /// [`TunedSchedule::workspace`] again — the bound plan is the
     /// deployment.
+    ///
+    /// ```
+    /// use convbench::analytic::Primitive;
+    /// use convbench::mcu::McuConfig;
+    /// use convbench::models::mcunet;
+    /// use convbench::nn::{NoopMonitor, Tensor};
+    /// use convbench::tuner::{tune_model_shape, Objective, TuningCache};
+    ///
+    /// let model = mcunet(Primitive::DepthwiseSeparable, 42);
+    /// let mut cache = TuningCache::in_memory();
+    /// let (sched, _) =
+    ///     tune_model_shape(&model, &McuConfig::default(), Objective::Latency, &mut cache);
+    ///
+    /// // bind the compiled plan + arena once, run forever without allocating
+    /// let mut ws = sched.workspace(&model);
+    /// let x = Tensor::zeros(model.input_shape, model.input_q);
+    /// let tuned = sched.run_in(&x, &mut ws, &mut NoopMonitor).data.clone();
+    ///
+    /// // bit-exact with the allocating reference executor
+    /// let reference = sched.run(&model, &x, &mut NoopMonitor);
+    /// assert_eq!(tuned, reference.data);
+    /// ```
     pub fn run_in<'w, M: Monitor>(
         &self,
         x: &Tensor,
@@ -172,6 +208,44 @@ impl TunedSchedule {
         let out_slot = plan.run_steps(x, ws, mon);
         ws.bound = Some(plan);
         ws.output(out_slot)
+    }
+
+    /// Execute a **micro-batch** through the bound plan
+    /// ([`crate::nn::ExecPlan::run_batch_in`]): every sample runs the
+    /// full compiled schedule before the next starts, reusing the
+    /// arena's liveness slots, column arena and pre-widened weights
+    /// across the batch. Bit-exact per lane with `batch.len()`
+    /// sequential [`TunedSchedule::run_in`] calls, zero steady-state
+    /// allocations. Requires an arena with staging lanes
+    /// ([`TunedSchedule::workspace_batch`]); the same
+    /// rebuild-on-redeploy contract as [`TunedSchedule::run_in`]
+    /// applies.
+    pub fn run_batch_in<'w, M: Monitor>(
+        &self,
+        batch: &[Tensor],
+        ws: &'w mut Workspace,
+        mon: &mut M,
+    ) -> &'w [i8] {
+        let plan = ws.bound.take().expect(
+            "workspace holds no bound plan — build it with TunedSchedule::workspace_batch \
+             (or drive ExecPlan::run_batch_in directly)",
+        );
+        assert_eq!(
+            plan.model_name(),
+            self.model,
+            "workspace-bound plan was compiled for a different model"
+        );
+        assert_eq!(
+            plan.schedule_fingerprint(),
+            crate::nn::plan::candidate_fingerprint(self.layers.iter().map(|d| d.candidate)),
+            "workspace-bound plan was compiled for a different schedule than {:?}/{}",
+            self.model,
+            self.objective
+        );
+        plan.run_batch_steps(batch, ws, mon);
+        let out_len = batch.len() * plan.output_len();
+        ws.bound = Some(plan);
+        &ws.batch_out[..out_len]
     }
 
     /// Collapse the schedule totals into a [`Measurement`] (power is the

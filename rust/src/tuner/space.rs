@@ -439,9 +439,10 @@ pub fn analytic_counts(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> OpC
     }
 }
 
-/// SRAM scratch a candidate needs beyond the activation ping-pong:
-/// the q15 im2col buffer (P columns), the widened dense input, or the
-/// shift-conv scalar path's materialized intermediate map.
+/// SRAM scratch a candidate needs beyond the liveness-planned
+/// activation arena: the q15 im2col buffer (P columns), the widened
+/// dense input, or the shift-conv scalar path's materialized
+/// intermediate map.
 pub fn scratch_bytes(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> usize {
     match (layer, cand.lowering) {
         // the shift-conv scalar path materializes the shifted intermediate

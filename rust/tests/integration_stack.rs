@@ -117,11 +117,7 @@ fn pipeline_to_server_loop() {
             "mcunet-dws"
         };
         let r = server
-            .infer(Request {
-                id: i,
-                model: model.into(),
-                input,
-            })
+            .infer(Request::new(i, model, input))
             .expect("inference");
         assert_eq!(r.logits.len(), 10);
     }
