@@ -63,6 +63,20 @@ echo "==> smoke: micro-batched serving (deadline-aware queue end to end)"
 ./target/release/convbench serve --requests 48 --workers 2 \
     --max-batch 8 --deadline-us 500 --queue-depth 64
 
+echo "==> smoke: traced serve + observability artifact validation"
+# every drained batch sampled (--trace-sample 1): the exported Chrome
+# trace must hold at least one complete request span tree (queue-wait,
+# batch-drain, per-node exec with monotonic timestamps) and the metrics
+# snapshot must be structurally sound (bucket sums == counts, served
+# requests recorded) — check-obs re-parses both through util::json and
+# exits non-zero on any violation
+./target/release/convbench serve --requests 48 --workers 2 \
+    --max-batch 8 --deadline-us 500 --queue-depth 64 --trace-sample 1 \
+    --trace-out results/ci/trace.json --metrics-out results/ci/metrics.json \
+    --out results/ci
+./target/release/convbench check-obs \
+    --trace results/ci/trace.json --metrics results/ci/metrics.json
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "==> full: convbench tune over the full Table 2 plans"
     ./target/release/convbench tune --objective energy --out results/ci-full

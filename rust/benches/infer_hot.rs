@@ -27,7 +27,16 @@
 //! 5. **cold-tune cost** of the analytic schedule search: wall time and
 //!    `TuneStats` for a cold `tune_model_shape` over MCU-Net —
 //!    `evaluations` (instrumented simulator runs) pinned to 0 — plus the
-//!    warm-cache replay time.
+//!    warm-cache replay time;
+//! 6. **tracing and drift** — `run_in_traced` with the no-op
+//!    `TraceSink` is asserted bit-exact and event-stream-identical to
+//!    `run_in` and pinned at zero steady-state allocations (tracing
+//!    compiled in, sampled off); a live `ExecTracer` is pinned at zero
+//!    too (its timing buffer is preallocated and `reset()` keeps the
+//!    capacity), and a `DriftMonitor` over the whole zoo accumulates
+//!    three traced runs per model — every node's measured-ns /
+//!    predicted-cycles ratio must be finite, and the model-wide
+//!    measured-vs-analytic linear fit is recorded in the JSON.
 //!
 //! Run: `cargo bench --bench infer_hot` (CI runs it with
 //! `CONVBENCH_QUICK=1`; see `ci.sh`). Writes `results/BENCH_infer.json`
@@ -41,7 +50,8 @@ use std::time::Instant;
 use convbench::analytic::Primitive;
 use convbench::mcu::McuConfig;
 use convbench::models::{mcunet, mcunet_residual};
-use convbench::nn::{ExecPlan, NoopMonitor, Tensor, Workspace};
+use convbench::nn::{ExecPlan, Graph, NoopMonitor, Tensor, Workspace};
+use convbench::obs::{plan_node_costs, DriftMonitor, ExecTracer, NoopTraceSink};
 use convbench::report::write_report;
 use convbench::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
 use convbench::util::bench::Bench;
@@ -221,6 +231,57 @@ fn main() {
         "steady-state run_batch_in performed {batch_steady_allocs} heap allocations"
     );
 
+    // --- 2d. tracing hooks: zero-cost when off, zero-alloc when on ----
+    // the no-op TraceSink must monomorphize to the untraced path: same
+    // bits and an identical CountingMonitor event stream as run_in, and
+    // the steady-state loop stays pinned at zero heap allocations with
+    // tracing compiled in; a live ExecTracer reuses its preallocated
+    // timing buffer (reset() keeps capacity), so sampled batches are
+    // allocation-free too
+    {
+        use convbench::nn::CountingMonitor;
+        let mut ma = CountingMonitor::new();
+        let want = bplan.run_in(&x, &mut seq_ws, &mut ma).data.clone();
+        let mut mb = CountingMonitor::new();
+        let out = bplan.run_in_traced(&x, &mut seq_ws, &mut mb, &mut NoopTraceSink);
+        assert_eq!(want, out.data, "no-op-sink run_in_traced must stay bit-exact");
+        assert_eq!(
+            ma.counts, mb.counts,
+            "no-op-sink run_in_traced must emit the identical event stream"
+        );
+    }
+    let n_alloc0 = allocations();
+    for _ in 0..iters {
+        let out = bplan.run_in_traced(&x, &mut seq_ws, &mut NoopMonitor, &mut NoopTraceSink);
+        black_box(out.data[0]);
+    }
+    let traced_off_steady_allocs = allocations() - n_alloc0;
+    assert_eq!(
+        traced_off_steady_allocs, 0,
+        "steady-state run_in_traced (no-op sink) performed {traced_off_steady_allocs} \
+         heap allocations"
+    );
+
+    let mut tracer = ExecTracer::with_capacity(Instant::now(), bplan.n_layers());
+    {
+        let out = bplan.run_in_traced(&x, &mut seq_ws, &mut NoopMonitor, &mut tracer);
+        black_box(out.data[0]);
+    }
+    assert_eq!(tracer.timings().len(), bplan.n_layers(), "tracer must record every node");
+    let tr_alloc0 = allocations();
+    for _ in 0..iters {
+        tracer.reset();
+        let out = bplan.run_in_traced(&x, &mut seq_ws, &mut NoopMonitor, &mut tracer);
+        black_box(out.data[0]);
+    }
+    let traced_on_steady_allocs = allocations() - tr_alloc0;
+    assert_eq!(
+        traced_on_steady_allocs, 0,
+        "steady-state run_in_traced (live tracer) performed {traced_on_steady_allocs} \
+         heap allocations"
+    );
+    assert_eq!(tracer.dropped(), 0, "tracer buffer must cover every plan node");
+
     // --- 3. throughput ------------------------------------------------
     b.run("infer/forward_in/simd", || {
         model.forward_in(&x, true, &mut ws, &mut NoopMonitor).data[0]
@@ -263,6 +324,7 @@ fn main() {
             max_batch,
             deadline_us: 200,
             queue_depth: serve_n,
+            trace_sample: 0,
         };
         let server = InferenceServer::start_with(
             vec![mcunet(Primitive::DepthwiseSeparable, 42)],
@@ -295,6 +357,42 @@ fn main() {
     let warm_tune_us = t1.elapsed().as_secs_f64() * 1e6;
     assert_eq!(warm_stats.evaluations, 0);
     assert_eq!(warm_stats.analytic, 0);
+
+    // --- 5. drift monitor over the zoo --------------------------------
+    // every zoo model's per-node analytic costs registered against three
+    // traced host executions each: every node must accumulate samples
+    // with a finite measured-ns / predicted-cycles ratio, and the
+    // model-wide measured-vs-analytic linear fit (the §4.1 linearity
+    // claim replayed on host wall times) lands in BENCH_infer.json
+    let mut zoo_graphs: Vec<Graph> = Primitive::ALL
+        .iter()
+        .map(|&p| Graph::from_model(&mcunet(p, 42)))
+        .collect();
+    zoo_graphs.extend(Primitive::ALL.iter().map(|&p| mcunet_residual(p, 42)));
+    let mut drift = DriftMonitor::new();
+    let epoch = Instant::now();
+    for g in &zoo_graphs {
+        let p = ExecPlan::compile_graph_default(g, true);
+        drift.register(&g.name, plan_node_costs(g, &p.candidates(), &p, &cfg));
+        let mut dws = Workspace::for_plan(&p);
+        let mut dx = Tensor::zeros(g.input_shape, g.input_q);
+        Rng::new(11).fill_i8(&mut dx.data, -64, 63);
+        let mut dtracer = ExecTracer::with_capacity(epoch, p.n_layers());
+        for _ in 0..3 {
+            dtracer.reset();
+            let out = p.run_in_traced(&dx, &mut dws, &mut NoopMonitor, &mut dtracer);
+            black_box(out.data[0]);
+            for t in dtracer.timings() {
+                drift.record(&g.name, t.node as usize, t.dur_us * 1e3);
+            }
+        }
+    }
+    let drift_report = drift.report(0.5);
+    assert!(drift_report.all_ratios_finite(), "zoo drift ratios must all be finite");
+    let zoo_nodes: usize = zoo_graphs.iter().map(|g| g.nodes.len()).sum();
+    assert_eq!(drift_report.records.len(), zoo_nodes, "every zoo node must be measured");
+    assert!(drift_report.records.iter().all(|r| r.samples == 3));
+    let dfit = drift_report.fit.as_ref().expect("model-wide fit over the zoo");
 
     b.write_csv("results/bench_infer_hot.csv");
 
@@ -389,6 +487,14 @@ fn main() {
         .field("served_seq_rps", served_seq_rps)
         .field("served_batch8_rps", served_batch_rps)
         .field("served_batch_speedup", served_batch_rps / served_seq_rps)
+        .field("traced_off_steady_state_allocs", traced_off_steady_allocs / iters)
+        .field("traced_on_steady_state_allocs", traced_on_steady_allocs / iters)
+        .field("drift_fit_ns_per_cycle", dfit.a)
+        .field("drift_fit_intercept_ns", dfit.b)
+        .field("drift_fit_r2", dfit.r2)
+        .field("drift_nodes_measured", drift_report.records.len())
+        .field("drift_nodes_flagged", drift_report.flagged())
+        .field("drift_all_ratios_finite", drift_report.all_ratios_finite())
         .field("peak_arena_bytes_per_model", Json::Obj(arena_fields));
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
@@ -417,6 +523,14 @@ fn main() {
          (max-batch 1) — {:.2}x",
         batch_seq_ns_per_inf / batch_ns_per_inf,
         served_batch_rps / served_seq_rps
+    );
+    println!(
+        "tracing: run_in_traced 0 allocs with the no-op sink and with a live tracer; \
+         drift over {} zoo nodes: fit {:.2} ns/cycle (r² {:.3}), {} flagged at ±50%",
+        drift_report.records.len(),
+        dfit.a,
+        dfit.r2,
+        drift_report.flagged()
     );
     println!("wrote results/BENCH_infer.json");
 }

@@ -18,18 +18,57 @@ pub use validate::{validate_all, validate_primitive};
 use crate::analytic::Primitive;
 use crate::mcu::McuConfig;
 use crate::models::mcunet;
+use crate::util::cli::Args;
 use crate::util::prng::Rng;
+
+/// Where `convbench serve` writes its observability artifacts on
+/// shutdown. All three are optional; `None` means "don't emit".
+#[derive(Clone, Debug, Default)]
+pub struct ServeOutputs {
+    /// Chrome trace-event JSON (Perfetto-loadable) from the sampled
+    /// span rings (`--trace-out`).
+    pub trace_out: Option<String>,
+    /// Metrics snapshot as JSON; the Prometheus text exposition lands
+    /// next to it at `<path>.prom` (`--metrics-out`).
+    pub metrics_out: Option<String>,
+    /// Final [`ServerStats`] as JSON — shed/error counters plus the
+    /// batch-size histogram (`--stats-out`).
+    pub stats_out: Option<String>,
+}
+
+impl ServeOutputs {
+    /// Parse `--trace-out` / `--metrics-out` / `--stats-out`.
+    pub fn from_args(args: &Args) -> Self {
+        Self {
+            trace_out: args.get("trace-out").map(|s| s.to_string()),
+            metrics_out: args.get("metrics-out").map(|s| s.to_string()),
+            stats_out: args.get("stats-out").map(|s| s.to_string()),
+        }
+    }
+}
+
+/// Write one serve artifact, logging rather than aborting on I/O error
+/// (the stats printout should still happen if e.g. the directory is
+/// read-only).
+fn emit_artifact(path: &str, content: &str, what: &str) {
+    match crate::report::write_report(path, content) {
+        Ok(()) => println!("wrote {what} to {path}"),
+        Err(e) => eprintln!("failed to write {what} to {path}: {e}"),
+    }
+}
 
 /// CLI entry point for `convbench serve`: deploy all five MCU-Net
 /// variants behind the deadline-aware micro-batch queue, fire `n`
 /// random requests through `workers` workers **asynchronously** (so
 /// batches actually form), and print the service report — end-to-end
 /// latency split into queue wait and execution, plus the batch-size
-/// histogram.
-pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions) {
+/// histogram. Workers are joined before the trace/metrics/stats
+/// artifacts in `outs` are emitted, so every span and counter from the
+/// run is visible in them.
+pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions, outs: &ServeOutputs) {
     let models: Vec<_> = Primitive::ALL.iter().map(|&p| mcunet(p, 42)).collect();
     let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
-    let server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
+    let mut server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
     println!(
         "deployed: {names:?} ({workers} workers, max-batch {}, deadline {} µs, queue depth {})",
         opts.max_batch, opts.deadline_us, opts.queue_depth
@@ -60,7 +99,34 @@ pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions) {
             Err(e) => eprintln!("request {i} failed: {e}"),
         }
     }
+    // Quiesce the workers first: trace rings and drift accumulators are
+    // flushed by the workers themselves, so artifacts drained before the
+    // join could miss the final batches.
+    server.join();
+    if opts.trace_sample > 0 {
+        let drift = server.drift_report(0.5);
+        match &drift.fit {
+            Some(f) => println!(
+                "drift: {} nodes measured, {} flagged; fit {:.2} ns/cycle (r² {:.3})",
+                drift.records.len(),
+                drift.flagged(),
+                f.a,
+                f.r2
+            ),
+            None => println!("drift: {} nodes measured, no model-wide fit", drift.records.len()),
+        }
+    }
+    if let Some(path) = &outs.trace_out {
+        emit_artifact(path, &server.drain_traces().to_string(), "chrome trace");
+    }
+    if let Some(path) = &outs.metrics_out {
+        emit_artifact(path, &server.metrics_json().to_string(), "metrics json");
+        emit_artifact(&format!("{path}.prom"), &server.metrics_text(), "metrics text");
+    }
     let stats = server.shutdown();
+    if let Some(path) = &outs.stats_out {
+        emit_artifact(path, &crate::report::server_stats_json(&stats), "server stats");
+    }
     println!(
         "served {} requests, {} errors, {} shed; host latency p50 {:.1} µs p99 {:.1} µs \
          (queue wait p50 {:.1} µs / exec p50 {:.1} µs)",

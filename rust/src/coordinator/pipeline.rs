@@ -7,9 +7,10 @@
 
 use crate::mcu::McuConfig;
 use crate::nn::{
-    uniform_shifts, AddConv, BatchNorm, BnLayer, Layer, Model, QuantConv, QuantDense,
-    QuantDepthwise, Shape, ShiftConv, Workspace,
+    uniform_shifts, AddConv, BatchNorm, BnLayer, ExecPlan, Graph, Layer, Model, QuantConv,
+    QuantDense, QuantDepthwise, Shape, ShiftConv, Workspace,
 };
+use crate::obs::{plan_node_costs, NodeCost};
 use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
 use crate::tuner::{tune_model_shape, Objective, TuneStats, TunedSchedule, TuningCache};
 
@@ -245,6 +246,22 @@ impl FloatModel {
         let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
         let workspace = schedule.workspace_batch(&model, max_batch);
         (model, schedule, workspace, stats)
+    }
+
+    /// [`FloatModel::deploy`] plus the observability hand-off: the
+    /// compiled default-SIMD executor and the per-node analytic cost
+    /// records ([`NodeCost`]) that a [`crate::obs::DriftMonitor`]
+    /// registers for this model — so a deployment carries its drift
+    /// baseline from day one instead of recomputing counts at runtime.
+    pub fn deploy_observed(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+    ) -> (Model, ExecPlan, Vec<NodeCost>) {
+        let model = self.deploy(calib);
+        let plan = ExecPlan::compile_default(&model, true);
+        let costs = plan_node_costs(&Graph::from_model(&model), &plan.candidates(), &plan, cfg);
+        (model, plan, costs)
     }
 }
 
@@ -759,5 +776,28 @@ mod tests {
             tot += out.data.len();
         }
         assert!(sat * 50 < tot, "saturation {sat}/{tot}");
+    }
+
+    #[test]
+    fn deploy_observed_costs_align_with_the_compiled_plan() {
+        let mut rng = Rng::new(15);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let (qm, plan, costs) = fm.deploy_observed(&calib, &McuConfig::default());
+        assert_eq!(qm.layers.len(), plan.n_layers());
+        assert_eq!(costs.len(), plan.n_layers());
+        let names = plan.node_names();
+        for (i, c) in costs.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.node, names[i], "cost {i} names the plan step");
+            assert!(c.cycles > 0.0, "node {} has zero predicted cycles", c.node);
+            assert_eq!(c.arena_bytes, plan.layer_ram_bytes(i));
+        }
+        // the deployment is still the same bit-exact engine model
+        let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, &calib[0]);
+        let want = qm.forward(&xi, true, &mut NoopMonitor);
+        let mut ws = crate::nn::Workspace::for_plan(&plan);
+        let got = plan.run_in(&xi, &mut ws, &mut NoopMonitor);
+        assert_eq!(want.data, got.data);
     }
 }

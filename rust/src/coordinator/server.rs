@@ -38,18 +38,35 @@
 //! execution time, next to a batch-size histogram — so a long-lived
 //! server holds O(1) stats memory under unbounded traffic.
 //!
+//! The server is fully observable (see [`crate::obs`] and
+//! docs/ARCHITECTURE.md "Observability"): every submit/serve/shed/error
+//! lands in a sharded lock-free metrics [`Registry`] (shard 0 for the
+//! frontend, one shard per worker — Prometheus text and JSON exposition
+//! via [`InferenceServer::metrics_text`]/[`InferenceServer::metrics_json`]),
+//! every [`ServeOptions::trace_sample`]-th drained batch per worker is
+//! traced into a preallocated span ring (request → queue-wait →
+//! batch-drain → per-node exec → respond; exported Perfetto-loadable by
+//! [`InferenceServer::drain_traces`]), and sampled per-node wall times
+//! feed a [`DriftMonitor`] that re-checks the paper's analytic-cycles ↔
+//! measured-latency linearity live ([`InferenceServer::drift_report`]).
+//!
 //! (tokio is not in the offline vendor set — std threads + a
 //! mutex/condvar queue provide the same structure; see Cargo.toml note.)
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
 use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, Workspace};
+use crate::obs::{
+    chrome_trace_json, plan_node_costs, DriftMonitor, DriftReport, ExecTracer, NodeCost, Registry,
+    Shard, SpanKind, TraceEvent, TraceModelMeta, TraceRing,
+};
 use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TunedSchedule, TuningCache};
+use crate::util::json::Json;
 use crate::util::stats::Reservoir;
 
 /// Retained latency samples per reservoir (Algorithm R past this point):
@@ -63,9 +80,54 @@ const LATENCY_RESERVOIR_CAP: usize = 4096;
 /// (what the tests exercise).
 const LATENCY_RESERVOIR_SEED: u64 = 0x1A7E_5EED;
 
+/// Capacity of each worker's span ring: old sampled spans are
+/// overwritten, never grown into, so trace memory is O(1) forever.
+const TRACE_RING_CAP: usize = 4096;
+
+// Metric slot indices into `server_registry`'s name tables — the record
+// path addresses instruments by index (one array access + relaxed add),
+// names only matter at scrape time.
+const C_SUBMITTED: usize = 0;
+const C_SERVED: usize = 1;
+const C_SHED: usize = 2;
+const C_ERRORS: usize = 3;
+const C_DEADLINE_MISS: usize = 4;
+const C_TRACE_BATCHES: usize = 5;
+const C_TRACE_DROPPED: usize = 6;
+const G_QUEUE_DEPTH: usize = 0;
+const H_BATCH_SIZE: usize = 0;
+const H_QUEUE_DEPTH: usize = 1;
+const H_QUEUE_WAIT_US: usize = 2;
+const H_EXEC_US: usize = 3;
+const H_SERVICE_US: usize = 4;
+
+const COUNTER_NAMES: &[&str] = &[
+    "requests_submitted_total",
+    "requests_served_total",
+    "requests_shed_total",
+    "request_errors_total",
+    "deadline_miss_total",
+    "trace_batches_sampled_total",
+    "trace_events_dropped_total",
+];
+const GAUGE_NAMES: &[&str] = &["queue_depth"];
+const HIST_NAMES: &[&str] = &[
+    "batch_size",
+    "queue_depth_at_admission",
+    "queue_wait_us",
+    "exec_us",
+    "service_us",
+];
+
+/// The server's metric registry: shard 0 belongs to the frontend
+/// (submitter side), shard `w + 1` to worker `w`.
+fn server_registry(n_workers: usize) -> Registry {
+    Registry::new(COUNTER_NAMES, GAUGE_NAMES, HIST_NAMES, n_workers + 1)
+}
+
 /// Micro-batching and admission-control knobs for one server instance
-/// (the `convbench serve --max-batch/--deadline-us/--queue-depth`
-/// flags).
+/// (the `convbench serve --max-batch/--deadline-us/--queue-depth/
+/// --trace-sample` flags).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// Largest micro-batch a worker drains per wake-up; also the size of
@@ -82,24 +144,33 @@ pub struct ServeOptions {
     /// models. Past it, the controller sheds by analytic cost (see
     /// module docs).
     pub queue_depth: usize,
+    /// Trace sampling rate: every Nth drained batch per worker gets its
+    /// full span tree (queue-wait, batch-drain, per-node exec, respond)
+    /// recorded into that worker's ring and its per-node wall times fed
+    /// to the drift monitor. `0` disables tracing entirely — the engine
+    /// then runs the no-op sink path, which monomorphizes to the
+    /// untraced code.
+    pub trace_sample: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_batch: 8, deadline_us: 200, queue_depth: 256 }
+        Self { max_batch: 8, deadline_us: 200, queue_depth: 256, trace_sample: 0 }
     }
 }
 
 impl ServeOptions {
-    /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth`
-    /// flags (defaults where absent) — shared by `convbench serve` and
-    /// the serving example so the flag set cannot drift.
+    /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth` /
+    /// `--trace-sample` flags (defaults where absent) — shared by
+    /// `convbench serve` and the serving example so the flag set cannot
+    /// drift.
     pub fn from_args(args: &crate::util::cli::Args) -> Self {
         let d = Self::default();
         Self {
             max_batch: args.get_or("max-batch", d.max_batch),
             deadline_us: args.get_or("deadline-us", d.deadline_us),
             queue_depth: args.get_or("queue-depth", d.queue_depth),
+            trace_sample: args.get_or("trace-sample", d.trace_sample),
         }
     }
 }
@@ -206,6 +277,10 @@ struct Deployed {
     /// and residual graphs alike; its embedded input shape/format is
     /// the request contract, so the registry needs no model copy.
     plan: ExecPlan,
+    /// Per-node analytic costs of the compiled schedule
+    /// ([`plan_node_costs`]) — the drift monitor's prediction side,
+    /// registered once at deployment.
+    costs: Vec<NodeCost>,
 }
 
 /// One queued request with its reply channel and deadline bookkeeping.
@@ -353,6 +428,28 @@ impl StatsInner {
     }
 }
 
+/// Everything one worker thread owns besides the shared queue: its
+/// pre-planned arenas, its metric shard, its latency-stats shard, its
+/// span ring and tracer, and a handle on the shared drift monitor. All
+/// of it is preallocated at spawn — the serve path allocates nothing.
+struct WorkerState {
+    workspaces: HashMap<String, Workspace>,
+    shard: Arc<Shard>,
+    stats: Arc<Mutex<StatsInner>>,
+    ring: Arc<Mutex<TraceRing>>,
+    drift: Arc<Mutex<DriftMonitor>>,
+    /// Preallocated for the largest plan × `max_batch` lanes, so a
+    /// sampled batch never drops node timings.
+    tracer: ExecTracer,
+    /// Sample every Nth drained batch into the span ring (0 = never).
+    sample_every: u64,
+    batches_drained: u64,
+    epoch: Instant,
+    /// Chrome-trace thread id (worker index + 1; 0 is the frontend).
+    tid: u32,
+    model_idx: Arc<HashMap<String, u16>>,
+}
+
 /// The inference server: a registry of deployed models, per-model
 /// micro-batch queues and a worker pool.
 pub struct InferenceServer {
@@ -360,10 +457,14 @@ pub struct InferenceServer {
     queue: Arc<(Mutex<QueueState>, Condvar)>,
     opts: ServeOptions,
     workers: Vec<JoinHandle<()>>,
-    served: Arc<AtomicU64>,
-    errors: Arc<AtomicU64>,
-    shed: Arc<AtomicU64>,
-    stats: Arc<Mutex<StatsInner>>,
+    metrics: Arc<Registry>,
+    /// The submitters' metric shard (shard 0 of `metrics`).
+    frontend: Arc<Shard>,
+    stats_shards: Vec<Arc<Mutex<StatsInner>>>,
+    rings: Vec<Arc<Mutex<TraceRing>>>,
+    drift: Arc<Mutex<DriftMonitor>>,
+    /// Sorted model naming table trace events index into.
+    model_meta: Arc<Vec<TraceModelMeta>>,
     shutting_down: AtomicBool,
 }
 
@@ -388,7 +489,8 @@ impl InferenceServer {
         for m in models {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
             let plan = ExecPlan::compile_default(&m, true);
-            registry.insert(m.name.clone(), Deployed { mcu, schedule: None, plan });
+            let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
+            registry.insert(m.name.clone(), Deployed { mcu, schedule: None, plan, costs });
         }
         Self::spawn(registry, n_workers, opts)
     }
@@ -423,7 +525,11 @@ impl InferenceServer {
             let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile(&m);
-            registry.insert(m.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
+            let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
+            registry.insert(
+                m.name.clone(),
+                Deployed { mcu, schedule: Some(schedule), plan, costs },
+            );
         }
         Self::spawn(registry, n_workers, opts)
     }
@@ -465,27 +571,69 @@ impl InferenceServer {
             let (schedule, _) = tune_graph_shape(&g, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile_graph(&g);
-            registry.insert(g.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
+            let costs = plan_node_costs(&g, &plan.candidates(), &plan, cfg);
+            registry.insert(
+                g.name.clone(),
+                Deployed { mcu, schedule: Some(schedule), plan, costs },
+            );
         }
         Self::spawn(registry, n_workers, opts)
     }
 
     fn spawn(registry: HashMap<String, Deployed>, n_workers: usize, opts: ServeOptions) -> Self {
         let opts = ServeOptions { max_batch: opts.max_batch.max(1), ..opts };
+        let n_workers = n_workers.max(1);
         let models = Arc::new(registry);
         let queue = Arc::new((Mutex::new(QueueState::default()), Condvar::new()));
-        let served = Arc::new(AtomicU64::new(0));
-        let errors = Arc::new(AtomicU64::new(0));
-        let shed = Arc::new(AtomicU64::new(0));
-        let stats = Arc::new(Mutex::new(StatsInner::new(opts.max_batch)));
+        let metrics = Arc::new(server_registry(n_workers));
+        let frontend = metrics.shard(0);
+        let epoch = Instant::now();
+        let mut names: Vec<String> = models.keys().cloned().collect();
+        names.sort();
+        let model_meta: Arc<Vec<TraceModelMeta>> = Arc::new(
+            names
+                .iter()
+                .map(|n| TraceModelMeta { name: n.clone(), nodes: models[n].plan.node_names() })
+                .collect(),
+        );
+        let mut model_idx = HashMap::new();
+        for (i, n) in names.iter().enumerate() {
+            model_idx.insert(n.clone(), i as u16);
+        }
+        let model_idx = Arc::new(model_idx);
+        let drift = Arc::new(Mutex::new(DriftMonitor::new()));
+        {
+            let mut dm = drift.lock().unwrap();
+            for n in &names {
+                dm.register(n, models[n].costs.clone());
+            }
+        }
+        let max_nodes = models.values().map(|d| d.plan.n_layers()).max().unwrap_or(0);
+        let stats_shards: Vec<Arc<Mutex<StatsInner>>> = (0..n_workers)
+            .map(|_| Arc::new(Mutex::new(StatsInner::new(opts.max_batch))))
+            .collect();
+        let rings: Vec<Arc<Mutex<TraceRing>>> = (0..n_workers)
+            .map(|_| Arc::new(Mutex::new(TraceRing::with_capacity(TRACE_RING_CAP))))
+            .collect();
 
-        let workers = (0..n_workers.max(1))
-            .map(|_| {
+        let workers = (0..n_workers)
+            .map(|w| {
                 let models = Arc::clone(&models);
                 let queue = Arc::clone(&queue);
-                let served = Arc::clone(&served);
-                let stats = Arc::clone(&stats);
-                std::thread::spawn(move || worker_loop(&models, &queue, opts, &served, &stats))
+                let state = WorkerState {
+                    workspaces: HashMap::new(), // planned inside the worker
+                    shard: metrics.shard(w + 1),
+                    stats: Arc::clone(&stats_shards[w]),
+                    ring: Arc::clone(&rings[w]),
+                    drift: Arc::clone(&drift),
+                    tracer: ExecTracer::with_capacity(epoch, (max_nodes * opts.max_batch).max(1)),
+                    sample_every: opts.trace_sample,
+                    batches_drained: 0,
+                    epoch,
+                    tid: (w + 1) as u32,
+                    model_idx: Arc::clone(&model_idx),
+                };
+                std::thread::spawn(move || worker_loop(&models, &queue, opts, state))
             })
             .collect();
 
@@ -494,10 +642,12 @@ impl InferenceServer {
             queue,
             opts,
             workers,
-            served,
-            errors,
-            shed,
-            stats,
+            metrics,
+            frontend,
+            stats_shards,
+            rings,
+            drift,
+            model_meta,
             shutting_down: AtomicBool::new(false),
         }
     }
@@ -525,20 +675,21 @@ impl InferenceServer {
         if self.shutting_down.load(Ordering::SeqCst) {
             return Err("server is shutting down".to_string());
         }
+        self.frontend.counter_add(C_SUBMITTED, 1);
         let (reply_tx, reply_rx) = mpsc::channel();
         // admission-time validation: workers only ever see well-formed
         // requests for registered models
         let deployed = match self.models.get(&req.model) {
             Some(d) => d,
             None => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
+                self.frontend.counter_add(C_ERRORS, 1);
                 let _ = reply_tx.send(Err(format!("unknown model {:?}", req.model)));
                 return Ok(reply_rx);
             }
         };
         let expected = deployed.plan.input_shape().len();
         if req.input.len() != expected {
-            self.errors.fetch_add(1, Ordering::Relaxed);
+            self.frontend.counter_add(C_ERRORS, 1);
             let _ = reply_tx.send(Err(format!(
                 "input length {} != expected {expected}",
                 req.input.len()
@@ -567,10 +718,13 @@ impl InferenceServer {
         }
         let models = &self.models;
         let victim = st.admit(pending, self.opts.queue_depth, &|m| models[m].mcu.cycles);
+        let depth_now = st.queued as u64;
         drop(st);
+        self.frontend.gauge_set(G_QUEUE_DEPTH, depth_now);
+        self.frontend.observe(H_QUEUE_DEPTH, depth_now);
         cv.notify_one();
         if let Some(v) = victim {
-            self.shed.fetch_add(1, Ordering::Relaxed);
+            self.frontend.counter_add(C_SHED, 1);
             let _ = v.reply.send(Err(format!(
                 "request shed: queue depth {} reached",
                 self.opts.queue_depth
@@ -586,28 +740,71 @@ impl InferenceServer {
             .map_err(|_| "server shut down".to_string())?
     }
 
-    /// Current statistics. Percentiles are computed from the retained
-    /// reservoir samples in place under the lock — no clone, O(capacity)
-    /// regardless of how long the server has been up (reordering is
-    /// harmless: the reservoirs are unordered by construction). Means
-    /// are NOT subsample estimates: each reservoir keeps an exact
-    /// running sum over every served request.
+    /// Current statistics. Each worker owns a private stats shard
+    /// (reservoirs + batch histogram, never contended across workers);
+    /// this merges them via [`Reservoir::merge`] — counts and means stay
+    /// exact (running sums add), percentiles are nearest-rank over the
+    /// merged fixed-capacity subsample. Served/error/shed counts come
+    /// from the metric registry (summed across shards).
     pub fn stats(&self) -> ServerStats {
-        let mut inner = self.stats.lock().unwrap();
-        let mean_us = inner.service_us.mean();
+        let res = || Reservoir::new(LATENCY_RESERVOIR_CAP, LATENCY_RESERVOIR_SEED);
+        let (mut service, mut queue, mut exec) = (res(), res(), res());
+        let mut batch_hist = vec![0u64; self.opts.max_batch];
+        for shard in &self.stats_shards {
+            let inner = shard.lock().unwrap();
+            service.merge(&inner.service_us);
+            queue.merge(&inner.queue_us);
+            exec.merge(&inner.exec_us);
+            for (acc, &c) in batch_hist.iter_mut().zip(&inner.batch_hist) {
+                *acc += c;
+            }
+        }
+        let mean_us = service.mean();
         let mut stats = compute_stats(
-            self.served.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            inner.service_us.samples_mut(),
+            self.metrics.counter(C_SERVED),
+            self.metrics.counter(C_ERRORS),
+            service.samples_mut(),
         );
         stats.mean_us = mean_us;
-        stats.shed = self.shed.load(Ordering::Relaxed);
-        stats.queue_mean_us = inner.queue_us.mean();
-        (stats.queue_p50_us, stats.queue_p99_us) = percentile_pair(inner.queue_us.samples_mut());
-        stats.exec_mean_us = inner.exec_us.mean();
-        (stats.exec_p50_us, stats.exec_p99_us) = percentile_pair(inner.exec_us.samples_mut());
-        stats.batch_hist = inner.batch_hist.clone();
+        stats.shed = self.metrics.counter(C_SHED);
+        stats.queue_mean_us = queue.mean();
+        (stats.queue_p50_us, stats.queue_p99_us) = percentile_pair(queue.samples_mut());
+        stats.exec_mean_us = exec.mean();
+        (stats.exec_p50_us, stats.exec_p99_us) = percentile_pair(exec.samples_mut());
+        stats.batch_hist = batch_hist;
         stats
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every server
+    /// metric, merged across the frontend and worker shards.
+    pub fn metrics_text(&self) -> String {
+        self.metrics.snapshot().to_prometheus("convbench")
+    }
+
+    /// JSON form of the same merged metric view (validated by
+    /// [`crate::obs::validate_metrics_json`]).
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.snapshot().to_json()
+    }
+
+    /// Drain every worker's span ring into one Chrome trace-event JSON
+    /// document (Perfetto-loadable), globally ordered by start time.
+    /// Rings are emptied (their capacity is retained), so consecutive
+    /// calls export disjoint windows. Call after
+    /// [`InferenceServer::join`] for a quiescent final trace.
+    pub fn drain_traces(&self) -> Json {
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for ring in &self.rings {
+            events.extend(ring.lock().unwrap().drain());
+        }
+        events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+        chrome_trace_json(&events, &self.model_meta)
+    }
+
+    /// Snapshot of the analytic-vs-measured drift monitor (fed by
+    /// sampled batches; empty when [`ServeOptions::trace_sample`] is 0).
+    pub fn drift_report(&self, tolerance: f64) -> DriftReport {
+        self.drift.lock().unwrap().report(tolerance)
     }
 
     /// Begin a graceful shutdown: new `submit`/`infer` calls fail fast,
@@ -622,13 +819,23 @@ impl InferenceServer {
         }
     }
 
-    /// Graceful shutdown: stop intake, drain workers, return the final
-    /// statistics.
-    pub fn shutdown(mut self) -> ServerStats {
+    /// Stop intake and join the worker pool (idempotent). After `join`
+    /// returns, the metric shards, trace rings and drift monitor are
+    /// quiescent — [`InferenceServer::drain_traces`],
+    /// [`InferenceServer::metrics_json`] and
+    /// [`InferenceServer::drift_report`] observe the final state (the
+    /// pattern `convbench serve` uses to emit artifacts on shutdown).
+    pub fn join(&mut self) {
         self.begin_shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Graceful shutdown: stop intake, drain workers, return the final
+    /// statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.join();
         self.stats()
     }
 }
@@ -657,10 +864,9 @@ fn worker_loop(
     models: &HashMap<String, Deployed>,
     queue: &(Mutex<QueueState>, Condvar),
     opts: ServeOptions,
-    served: &AtomicU64,
-    stats: &Mutex<StatsInner>,
+    mut state: WorkerState,
 ) {
-    let mut workspaces = plan_worker_arenas(models, opts.max_batch);
+    state.workspaces = plan_worker_arenas(models, opts.max_batch);
     let (lock, cv) = queue;
     'serve: loop {
         let (name, batch) = {
@@ -689,28 +895,34 @@ fn worker_loop(
                 };
             }
         };
-        serve_batch(models, &mut workspaces, &name, batch, served, stats);
+        serve_batch(models, &mut state, &name, batch);
     }
 }
 
 /// Execute one drained micro-batch: stage every request payload into the
 /// worker's arena lanes, run the whole batch through the compiled plan
 /// (zero heap allocations on the inference), then reply per request with
-/// its queue-wait and the batch's execution time.
+/// its queue-wait and the batch's execution time. On every
+/// `sample_every`-th drain the batch runs with the worker's
+/// [`ExecTracer`] bound (per-node wall times), and after the replies go
+/// out its full span tree is pushed into the worker's ring and the node
+/// timings into the drift monitor — tracing costs land outside the
+/// reply path's critical sections.
 fn serve_batch(
     models: &HashMap<String, Deployed>,
-    workspaces: &mut HashMap<String, Workspace>,
+    state: &mut WorkerState,
     name: &str,
     batch: Vec<Pending>,
-    served: &AtomicU64,
-    stats: &Mutex<StatsInner>,
 ) {
     if batch.is_empty() {
         return;
     }
+    let sampled = state.sample_every > 0 && state.batches_drained % state.sample_every == 0;
+    state.batches_drained += 1;
     let deployed = &models[name]; // requests are validated at admission
     let plan = &deployed.plan;
-    let ws = workspaces
+    let ws = state
+        .workspaces
         .get_mut(name)
         .expect("worker arenas are planned for every registered model at spawn");
     let n = batch.len();
@@ -718,18 +930,36 @@ fn serve_batch(
     for (lane, p) in batch.iter().enumerate() {
         ws.stage_batch_input(lane, &p.req.input);
     }
-    let out = plan.run_batch_staged(n, ws, &mut NoopMonitor);
+    let out = if sampled {
+        state.tracer.reset();
+        plan.run_batch_staged_traced(n, ws, &mut NoopMonitor, &mut state.tracer)
+    } else {
+        plan.run_batch_staged(n, ws, &mut NoopMonitor)
+    };
     // every reply goes out after the WHOLE batch finished, so the
     // client-observed latency of each lane is queue wait + the full
     // batch execution time — that is what the stats record (the
     // amortized per-request cost is visible via batch_size / the
     // throughput benches, not hidden in the latency split)
     let exec = t0.elapsed();
+    let exec_us = exec.as_secs_f64() * 1e6;
     let olen = plan.output_len();
+    state.shard.counter_add(C_SERVED, n as u64);
+    state.shard.observe(H_BATCH_SIZE, n as u64);
+    state.shard.observe(H_EXEC_US, exec_us as u64);
+    let misses = batch.iter().filter(|p| t0 > p.deadline).count();
+    if misses > 0 {
+        state.shard.counter_add(C_DEADLINE_MISS, misses as u64);
+    }
+    for p in &batch {
+        let qw_us = t0.saturating_duration_since(p.enqueued).as_secs_f64() * 1e6;
+        state.shard.observe(H_QUEUE_WAIT_US, qw_us as u64);
+        state.shard.observe(H_SERVICE_US, (qw_us + exec_us) as u64);
+    }
     {
         // O(1)-per-lane critical section: reservoir offers + histogram
         // only; response construction and channel sends happen outside
-        let mut inner = stats.lock().unwrap();
+        let mut inner = state.stats.lock().unwrap();
         inner.batch_hist[n - 1] += 1;
         for p in &batch {
             let queue_wait = t0.saturating_duration_since(p.enqueued);
@@ -738,14 +968,14 @@ fn serve_batch(
             inner.exec_us.offer(exec.as_secs_f64() * 1e6);
         }
     }
-    served.fetch_add(n as u64, Ordering::Relaxed);
-    for (lane, p) in batch.into_iter().enumerate() {
+    let reply_t0 = Instant::now();
+    for (lane, p) in batch.iter().enumerate() {
         let logits = out[lane * olen..(lane + 1) * olen].to_vec();
         let class = argmax(&logits);
         let queue_wait = t0.saturating_duration_since(p.enqueued);
         let _ = p.reply.send(Ok(Response {
             id: p.req.id,
-            model: p.req.model,
+            model: p.req.model.clone(),
             logits,
             class,
             service_time: queue_wait + exec,
@@ -754,6 +984,71 @@ fn serve_batch(
             mcu_latency_s: deployed.mcu.latency_s,
             mcu_energy_mj: deployed.mcu.energy_mj,
         }));
+    }
+    if !sampled {
+        return;
+    }
+    // span assembly for the sampled batch, after the replies are out
+    let t_end = Instant::now();
+    let epoch = state.epoch;
+    let us = |i: Instant| i.duration_since(epoch).as_secs_f64() * 1e6;
+    let model = state.model_idx.get(name).copied().unwrap_or(0);
+    let tid = state.tid;
+    state.shard.counter_add(C_TRACE_BATCHES, 1);
+    if state.tracer.dropped() > 0 {
+        state.shard.counter_add(C_TRACE_DROPPED, state.tracer.dropped());
+    }
+    {
+        let mut dm = state.drift.lock().unwrap();
+        for t in state.tracer.timings() {
+            dm.record(name, t.node as usize, t.dur_us * 1e3);
+        }
+    }
+    let mut ring = state.ring.lock().unwrap();
+    ring.push(TraceEvent {
+        kind: SpanKind::BatchDrain,
+        ts_us: us(t0),
+        dur_us: exec_us,
+        tid,
+        model,
+        detail: n as u64,
+    });
+    for t in state.tracer.timings() {
+        ring.push(TraceEvent {
+            kind: SpanKind::ExecNode,
+            ts_us: t.start_us,
+            dur_us: t.dur_us,
+            tid,
+            model,
+            detail: t.node as u64,
+        });
+    }
+    ring.push(TraceEvent {
+        kind: SpanKind::Respond,
+        ts_us: us(reply_t0),
+        dur_us: t_end.duration_since(reply_t0).as_secs_f64() * 1e6,
+        tid,
+        model,
+        detail: n as u64,
+    });
+    for p in &batch {
+        let enq = us(p.enqueued);
+        ring.push(TraceEvent {
+            kind: SpanKind::QueueWait,
+            ts_us: enq,
+            dur_us: us(t0) - enq,
+            tid,
+            model,
+            detail: p.req.id,
+        });
+        ring.push(TraceEvent {
+            kind: SpanKind::Request,
+            ts_us: enq,
+            dur_us: us(t_end) - enq,
+            tid,
+            model,
+            detail: p.req.id,
+        });
     }
 }
 
@@ -982,11 +1277,18 @@ mod tests {
             s.infer(request(i, "mcunet-standard", &mut rng)).unwrap();
         }
         {
-            let inner = s.stats.lock().unwrap();
-            for res in [&inner.service_us, &inner.queue_us, &inner.exec_us] {
-                assert_eq!(res.seen(), n);
-                assert_eq!(res.len(), (n as usize).min(LATENCY_RESERVOIR_CAP));
+            // per-worker stats shards: every observation is accounted in
+            // exactly one shard, and no shard outgrows its reservoirs
+            let mut seen = 0;
+            for shard in &s.stats_shards {
+                let inner = shard.lock().unwrap();
+                for res in [&inner.service_us, &inner.queue_us, &inner.exec_us] {
+                    assert!(res.len() <= LATENCY_RESERVOIR_CAP);
+                    assert_eq!(res.seen(), inner.service_us.seen(), "splits stay in lockstep");
+                }
+                seen += inner.service_us.seen();
             }
+            assert_eq!(seen, n);
         }
         let stats = s.shutdown();
         assert_eq!(stats.served, n);
@@ -1128,6 +1430,7 @@ mod tests {
             max_batch: 4,
             deadline_us: 3_600_000_000, // one hour: never the trigger
             queue_depth: 64,
+            ..ServeOptions::default()
         };
         let s = InferenceServer::start_with(vec![model], 1, &cfg, opts);
         let mut rng = Rng::new(0x5EED);
@@ -1172,7 +1475,8 @@ mod tests {
         // the worker would wait forever; the queue-wait budget forces the
         // partial drain.
         let cfg = McuConfig::default();
-        let opts = ServeOptions { max_batch: 8, deadline_us: 1_000, queue_depth: 64 };
+        let opts =
+            ServeOptions { max_batch: 8, deadline_us: 1_000, queue_depth: 64, trace_sample: 0 };
         let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(12);
         let rxs: Vec<_> = (0..3u64)
@@ -1190,7 +1494,8 @@ mod tests {
     #[test]
     fn zero_depth_sheds_every_submission() {
         let cfg = McuConfig::default();
-        let opts = ServeOptions { max_batch: 1, deadline_us: 100, queue_depth: 0 };
+        let opts =
+            ServeOptions { max_batch: 1, deadline_us: 100, queue_depth: 0, trace_sample: 0 };
         let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(13);
         let rx = s.submit(request(0, "mcunet-standard", &mut rng)).unwrap();
@@ -1219,25 +1524,54 @@ mod tests {
             let (schedule, _) = tune_model_shape(&m, &cfg, Objective::Latency, &mut cache);
             let plan = schedule.compile(&m);
             let mcu = schedule.as_measurement();
-            registry.insert(m.name.clone(), Deployed { mcu, schedule: Some(schedule), plan });
+            let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, &cfg);
+            registry.insert(
+                m.name.clone(),
+                Deployed { mcu, schedule: Some(schedule), plan, costs },
+            );
             reference.insert(m.name.clone(), m);
         }
         // one untuned deployment in the same registry
         let plain = mcunet(Primitive::DepthwiseSeparable, 1);
+        let plain_plan = ExecPlan::compile_default(&plain, true);
         registry.insert(
             plain.name.clone(),
             Deployed {
                 mcu: crate::harness::measure_model_analytic(&plain, true, &cfg),
-                plan: ExecPlan::compile_default(&plain, true),
+                costs: plan_node_costs(
+                    &Graph::from_model(&plain),
+                    &plain_plan.candidates(),
+                    &plain_plan,
+                    &cfg,
+                ),
+                plan: plain_plan,
                 schedule: None,
             },
         );
         reference.insert(plain.name.clone(), plain);
         let max_batch = 3;
-        let mut arenas = plan_worker_arenas(&registry, max_batch);
+        let arenas = plan_worker_arenas(&registry, max_batch);
         assert_eq!(arenas.len(), registry.len(), "every model gets an arena");
-        let served = AtomicU64::new(0);
-        let stats = Mutex::new(StatsInner::new(max_batch));
+        let metrics = server_registry(1);
+        let model_idx: HashMap<String, u16> = registry
+            .keys()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i as u16))
+            .collect();
+        let epoch = Instant::now();
+        let mut state = WorkerState {
+            workspaces: arenas,
+            shard: metrics.shard(1),
+            stats: Arc::new(Mutex::new(StatsInner::new(max_batch))),
+            ring: Arc::new(Mutex::new(TraceRing::with_capacity(16))),
+            drift: Arc::new(Mutex::new(DriftMonitor::new())),
+            tracer: ExecTracer::with_capacity(epoch, 64),
+            sample_every: 0,
+            batches_drained: 0,
+            epoch,
+            tid: 1,
+            model_idx: Arc::new(model_idx),
+        };
         let mut rng = Rng::new(11);
         let base = Instant::now();
         for round in 0..3u64 {
@@ -1257,7 +1591,7 @@ mod tests {
                     });
                     rx_inputs.push((rx, input));
                 }
-                serve_batch(&registry, &mut arenas, name, batch, &served, &stats);
+                serve_batch(&registry, &mut state, name, batch);
                 for (i, (rx, input)) in rx_inputs.into_iter().enumerate() {
                     let got = rx.recv().unwrap().unwrap();
                     assert_eq!(got.batch_size, max_batch);
@@ -1270,8 +1604,11 @@ mod tests {
                 }
             }
         }
-        assert_eq!(served.load(Ordering::Relaxed), 3 * 3 * registry.len() as u64);
-        assert_eq!(stats.lock().unwrap().batch_hist, vec![0, 0, 3 * registry.len() as u64]);
+        assert_eq!(metrics.counter(C_SERVED), 3 * 3 * registry.len() as u64);
+        assert_eq!(state.stats.lock().unwrap().batch_hist, vec![0, 0, 3 * registry.len() as u64]);
+        // sampling disabled: nothing traced, no drift samples
+        assert!(state.ring.lock().unwrap().is_empty());
+        assert_eq!(metrics.counter(C_TRACE_BATCHES), 0);
     }
 
     #[test]
@@ -1316,6 +1653,7 @@ mod tests {
             max_batch: 8,
             deadline_us: 3_600_000_000,
             queue_depth: 64,
+            ..ServeOptions::default()
         };
         let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(19);
@@ -1325,5 +1663,78 @@ mod tests {
         assert_eq!(r.batch_size, 1);
         let stats = s.shutdown();
         assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn metrics_registry_counts_and_exposes() {
+        let mut s = server();
+        let mut rng = Rng::new(21);
+        for i in 0..6 {
+            s.infer(request(i, "mcunet-standard", &mut rng)).unwrap();
+        }
+        let _ = s.infer(request(99, "nope", &mut rng)).unwrap_err();
+        s.join();
+        let j = s.metrics_json();
+        crate::obs::validate_metrics_json(&j).expect("valid metrics json");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.counter("requests_served_total"), Some(6));
+        assert_eq!(snap.counter("requests_submitted_total"), Some(7));
+        assert_eq!(snap.counter("request_errors_total"), Some(1));
+        assert_eq!(snap.counter("requests_shed_total"), Some(0));
+        assert!(snap.counter("deadline_miss_total").is_some());
+        let h = snap.hist("batch_size").expect("batch_size histogram");
+        assert_eq!(h.sum, 6, "batch sizes sum to the served requests");
+        assert!(h.count >= 1 && h.count <= 6, "one batch per drain");
+        let text = s.metrics_text();
+        assert!(text.contains("# TYPE convbench_requests_served_total counter"));
+        assert!(text.contains("convbench_requests_served_total 6"));
+        assert!(text.contains("# TYPE convbench_batch_size histogram"));
+        assert!(text.contains("convbench_batch_size_sum 6"));
+        // tracing is off by default: no sampled batches, empty trace
+        assert_eq!(snap.counter("trace_batches_sampled_total"), Some(0));
+        let trace = s.drain_traces();
+        let events = trace.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(events.is_empty(), "no spans without --trace-sample");
+        assert!(s.drift_report(0.5).records.is_empty(), "no drift samples either");
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn sampled_serve_produces_a_valid_chrome_trace_and_finite_drift() {
+        let cfg = McuConfig::default();
+        let opts =
+            ServeOptions { max_batch: 4, deadline_us: 500, queue_depth: 64, trace_sample: 1 };
+        let mut s =
+            InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
+        let mut rng = Rng::new(23);
+        let rxs: Vec<_> = (0..8u64)
+            .map(|i| s.submit(request(i, "mcunet-standard", &mut rng)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        s.join();
+        // the exported trace round-trips through the JSON parser and
+        // contains at least one complete request span tree
+        let text = s.drain_traces().to_string();
+        let trace = Json::parse(&text).expect("valid trace json");
+        crate::obs::validate_chrome_trace(&trace).expect("complete sampled trace");
+        // every plan node of the served model accumulated drift samples
+        // with finite ns-per-cycle ratios
+        let report = s.drift_report(0.5);
+        assert!(report.all_ratios_finite());
+        assert!(report.records.iter().all(|r| r.samples > 0));
+        assert_eq!(report.records.len(), s.models["mcunet-standard"].plan.n_layers());
+        assert!(report.to_json().to_string().contains("ns_per_cycle"));
+        // rings were consumed: a second drain exports an empty window
+        let again = s.drain_traces();
+        let events = again.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(events.is_empty());
+        let snap = s.metrics.snapshot();
+        assert!(snap.counter("trace_batches_sampled_total").unwrap() >= 1);
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 8);
     }
 }

@@ -49,6 +49,12 @@
 //!   through [`nn::plan::ExecPlan::run_batch_staged`], analytic-cost
 //!   admission control, queue-wait/execution latency split; both
 //!   pipeline and server can deploy tuned schedules).
+//! * [`obs`] — observability: a sharded lock-free metrics registry
+//!   (Prometheus text + JSON exposition), sampled request tracing
+//!   (span rings per worker, Chrome trace-event export, zero-cost
+//!   [`obs::TraceSink`] engine hooks) and an analytic-vs-measured
+//!   drift monitor that re-checks the paper's MACs↔latency linearity
+//!   claim against live per-node timings.
 //!
 //! See `docs/ARCHITECTURE.md` for the module-by-module handbook, the
 //! request-lifecycle walkthrough and the code↔paper map.
@@ -61,6 +67,7 @@ pub mod harness;
 pub mod mcu;
 pub mod models;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -16,9 +16,16 @@
 //!                                  # per-layer schedule auto-tuner over
 //!                                  # the Table 2 workloads + model zoo
 //! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
+//! convbench profile [--model M] [--scalar] [--json]
+//!                                  # per-node simulated profile (markdown,
+//!                                  # or NodeCost JSON with --json)
 //! convbench serve [--requests N] [--workers W] [--max-batch B]
-//!                 [--deadline-us D] [--queue-depth Q]
-//!                                  # micro-batched inference service demo
+//!                 [--deadline-us D] [--queue-depth Q] [--trace-sample N]
+//!                 [--trace-out F] [--metrics-out F] [--stats-out F]
+//!                                  # micro-batched inference service demo;
+//!                                  # emits trace/metrics/stats artifacts
+//! convbench check-obs [--trace F] [--metrics F]
+//!                                  # validate exported observability JSON
 //! ```
 
 use convbench::analytic::Primitive;
@@ -56,13 +63,23 @@ fn main() {
         Some("serve") => {
             let n = args.get_or("requests", 64usize);
             let workers = args.get_or("workers", 2usize);
-            coordinator::serve_cli(n, workers, coordinator::ServeOptions::from_args(&args));
+            let mut outs = coordinator::ServeOutputs::from_args(&args);
+            if outs.stats_out.is_none() {
+                outs.stats_out = Some(format!("{out_dir}/server_stats.json"));
+            }
+            let opts = coordinator::ServeOptions::from_args(&args);
+            coordinator::serve_cli(n, workers, opts, &outs);
         }
+        Some("check-obs") => cmd_check_obs(&args),
         _ => {
             eprintln!(
-                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve> \
+                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve|check-obs> \
                  [--exp N] [--out DIR] [--quick] \
-                 (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] [--queue-depth Q])"
+                 (profile: [--model M] [--scalar] [--json]) \
+                 (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] \
+                 [--queue-depth Q] [--trace-sample N] [--trace-out F] [--metrics-out F] \
+                 [--stats-out F]) \
+                 (check-obs: [--trace F] [--metrics F])"
             );
             std::process::exit(2);
         }
@@ -368,12 +385,16 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     }
 }
 
-/// `convbench profile --model mcunet-shift [--scalar]` — per-node
-/// simulated cycle/energy/memory breakdown of a zoo model (the NNoM
-/// `model_stat()` equivalent on the simulated MCU). Covers the linear
-/// variants and the residual `mcunet-res-*` graphs; every model profiles
-/// through the graph engine, and the RAM report prints the liveness
-/// arena next to the legacy largest×2 ping-pong figure.
+/// `convbench profile --model mcunet-shift [--scalar] [--json]` —
+/// per-node simulated cycle/energy/memory breakdown of a zoo model (the
+/// NNoM `model_stat()` equivalent on the simulated MCU). Covers the
+/// linear variants and the residual `mcunet-res-*` graphs; every model
+/// profiles through the graph engine, and the RAM report prints the
+/// liveness arena next to the legacy largest×2 ping-pong figure.
+/// `--json` emits the machine-readable form instead: one
+/// [`convbench::obs::NodeCost`] record per node — the same serializer
+/// the runtime drift monitor uses, so offline profiles diff directly
+/// against `DriftReport` node records.
 fn cmd_profile(args: &Args, cfg: &McuConfig) {
     use convbench::analytic::Primitive;
     use convbench::mcu::{footprint_graph, measure, PathClass};
@@ -396,6 +417,37 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         });
     let x = Tensor::zeros(graph.input_shape, graph.input_q);
     let (_, profiles) = graph.forward_profiled(&x, simd);
+    if args.flag("json") {
+        use convbench::nn::ExecPlan;
+        use convbench::obs::NodeCost;
+        use convbench::util::json::Json;
+        let plan = ExecPlan::compile_graph_default(&graph, simd);
+        let mut nodes = Vec::new();
+        let mut total = Vec::new();
+        for (i, (prof, node)) in profiles.iter().zip(&graph.nodes).enumerate() {
+            let path = if simd && node.op.has_simd() {
+                PathClass::Simd
+            } else {
+                PathClass::Scalar
+            };
+            let m = measure(&prof.counts, path, cfg);
+            let cost = NodeCost::from_measurement(prof.name, i, &m, plan.layer_ram_bytes(i));
+            nodes.push(cost.to_json());
+            total.push(m);
+        }
+        let sum = convbench::mcu::combine(&total, cfg);
+        let j = Json::obj()
+            .field("model", name)
+            .field("freq_mhz", cfg.freq_mhz)
+            .field("simd", simd)
+            .field("nodes", Json::Arr(nodes))
+            .field("total_cycles", sum.cycles)
+            .field("total_latency_us", sum.latency_s * 1e6)
+            .field("total_energy_uj", sum.energy_mj * 1e3)
+            .field("total_mem_accesses", sum.mem_accesses);
+        println!("{}", j.to_string());
+        return;
+    }
     println!(
         "{name} ({} path) — per-node simulated profile @ {:.0} MHz\n",
         if simd { "SIMD" } else { "scalar" },
@@ -465,4 +517,53 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         sched.peak_ram_bytes,
         wp.total_bytes() >= sched.peak_ram_bytes
     );
+}
+
+/// `convbench check-obs [--trace FILE] [--metrics FILE]` — parse and
+/// validate observability artifacts exported by `convbench serve`: the
+/// Chrome trace must contain at least one complete sampled request span
+/// tree (queue-wait, batch-drain and per-node exec spans nested
+/// consistently) and the metrics JSON must be a structurally sound
+/// snapshot (bucket sums matching counts, served requests present).
+/// Exit 0 on success, 1 on any validation failure — CI runs this
+/// against a short traced serve.
+fn cmd_check_obs(args: &Args) {
+    use convbench::obs::{validate_chrome_trace, validate_metrics_json};
+    use convbench::util::json::Json;
+
+    let load = |path: &str| -> Json {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("check-obs: cannot read {path}: {e}");
+            std::process::exit(1);
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("check-obs: {path} is not valid JSON: {e}");
+            std::process::exit(1);
+        })
+    };
+    let mut checked = 0usize;
+    if let Some(path) = args.get("trace") {
+        match validate_chrome_trace(&load(path)) {
+            Ok(()) => println!("check-obs: {path}: valid chrome trace"),
+            Err(e) => {
+                eprintln!("check-obs: {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+        checked += 1;
+    }
+    if let Some(path) = args.get("metrics") {
+        match validate_metrics_json(&load(path)) {
+            Ok(()) => println!("check-obs: {path}: valid metrics snapshot"),
+            Err(e) => {
+                eprintln!("check-obs: {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+        checked += 1;
+    }
+    if checked == 0 {
+        eprintln!("usage: convbench check-obs [--trace FILE] [--metrics FILE]");
+        std::process::exit(2);
+    }
 }

@@ -38,6 +38,7 @@
 //! across the entire enumerated candidate space of
 //! [`crate::tuner::space`], on linear and residual graphs.
 
+use crate::obs::trace::{NoopTraceSink, TraceSink};
 use crate::quant::{requantize, sat_i8, QParam};
 use crate::tuner::space::{self, Candidate, KernelImpl, Lowering};
 use crate::util::fnv::Fnv1a;
@@ -450,6 +451,12 @@ impl ExecPlan {
         self.steps.iter().map(|s| s.candidate).collect()
     }
 
+    /// Kernel name per compiled step, in execution order (the labels
+    /// the observability layer resolves trace/drift node indices with).
+    pub fn node_names(&self) -> Vec<&'static str> {
+        self.steps.iter().map(|s| s.name).collect()
+    }
+
     /// FNV-1a fingerprint of the parameters (and, for graphs, wiring)
     /// the plan was compiled from (guards stale-plan reuse after a
     /// same-shaped redeploy).
@@ -539,7 +546,23 @@ impl ExecPlan {
         ws: &'w mut Workspace,
         mon: &mut M,
     ) -> &'w Tensor {
-        let out_slot = self.run_steps(x, ws, mon);
+        self.run_in_traced(x, ws, mon, &mut NoopTraceSink)
+    }
+
+    /// [`ExecPlan::run_in`] with per-node wall-time hooks: `sink`
+    /// observes every step's start and end. [`NoopTraceSink`]
+    /// monomorphizes this to exactly the untraced path (bit-exact and
+    /// event-stream-identical — pinned in `benches/infer_hot.rs`); a
+    /// live [`crate::obs::ExecTracer`] records into preallocated
+    /// buffers, keeping the path allocation-free either way.
+    pub fn run_in_traced<'w, M: Monitor, T: TraceSink>(
+        &self,
+        x: &Tensor,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+        sink: &mut T,
+    ) -> &'w Tensor {
+        let out_slot = self.run_steps_traced(x, ws, mon, sink);
         ws.output(out_slot)
     }
 
@@ -582,9 +605,23 @@ impl ExecPlan {
         ws: &mut Workspace,
         mon: &mut M,
     ) -> usize {
+        self.run_steps_traced(x, ws, mon, &mut NoopTraceSink)
+    }
+
+    /// [`ExecPlan::run_steps`] with [`TraceSink`] hooks around every
+    /// step (the traced core loop every traced wrapper shares).
+    pub(crate) fn run_steps_traced<M: Monitor, T: TraceSink>(
+        &self,
+        x: &Tensor,
+        ws: &mut Workspace,
+        mon: &mut M,
+        sink: &mut T,
+    ) -> usize {
         self.stage(x, ws);
-        for step in &self.steps {
+        for (idx, step) in self.steps.iter().enumerate() {
+            sink.node_start(idx, step.name);
             run_step(step, ws, mon);
+            sink.node_end(idx, step.name);
         }
         self.out_slot
     }
@@ -613,7 +650,20 @@ impl ExecPlan {
         ws: &'w mut Workspace,
         mon: &mut M,
     ) -> &'w [i8] {
-        self.run_batch_steps(batch, ws, mon);
+        self.run_batch_in_traced(batch, ws, mon, &mut NoopTraceSink)
+    }
+
+    /// [`ExecPlan::run_batch_in`] with [`TraceSink`] hooks around every
+    /// step of every lane (node indices repeat per lane; a sink infers
+    /// lane boundaries from the index resetting).
+    pub fn run_batch_in_traced<'w, M: Monitor, T: TraceSink>(
+        &self,
+        batch: &[Tensor],
+        ws: &'w mut Workspace,
+        mon: &mut M,
+        sink: &mut T,
+    ) -> &'w [i8] {
+        self.run_batch_steps_traced(batch, ws, mon, sink);
         &ws.batch_out[..batch.len() * self.output_len()]
     }
 
@@ -626,14 +676,27 @@ impl ExecPlan {
         ws: &mut Workspace,
         mon: &mut M,
     ) {
+        self.run_batch_steps_traced(batch, ws, mon, &mut NoopTraceSink);
+    }
+
+    /// Traced batch step loop shared by the tensor-slice batch wrappers.
+    fn run_batch_steps_traced<M: Monitor, T: TraceSink>(
+        &self,
+        batch: &[Tensor],
+        ws: &mut Workspace,
+        mon: &mut M,
+        sink: &mut T,
+    ) {
         self.check_batch(batch.len(), ws);
         for (lane, x) in batch.iter().enumerate() {
             assert_eq!(x.shape, self.input_shape, "model input shape mismatch");
             let slot = &mut ws.slots[self.in_slot];
             prepare(slot, x.shape, x.q);
             slot.data.copy_from_slice(&x.data);
-            for step in &self.steps {
+            for (idx, step) in self.steps.iter().enumerate() {
+                sink.node_start(idx, step.name);
                 run_step(step, ws, mon);
+                sink.node_end(idx, step.name);
             }
             ws.copy_slot_to_lane(self.out_slot, lane);
         }
@@ -651,11 +714,28 @@ impl ExecPlan {
         ws: &'w mut Workspace,
         mon: &mut M,
     ) -> &'w [i8] {
+        self.run_batch_staged_traced(n, ws, mon, &mut NoopTraceSink)
+    }
+
+    /// [`ExecPlan::run_batch_staged`] with [`TraceSink`] hooks around
+    /// every step of every lane — what the serving workers run on
+    /// sampled batches (an [`crate::obs::ExecTracer`] sink); unsampled
+    /// batches take [`ExecPlan::run_batch_staged`], whose
+    /// [`NoopTraceSink`] monomorphizes the hooks away.
+    pub fn run_batch_staged_traced<'w, M: Monitor, T: TraceSink>(
+        &self,
+        n: usize,
+        ws: &'w mut Workspace,
+        mon: &mut M,
+        sink: &mut T,
+    ) -> &'w [i8] {
         self.check_batch(n, ws);
         for lane in 0..n {
             ws.fill_slot_from_lane(self.in_slot, lane, self.input_shape, self.input_q);
-            for step in &self.steps {
+            for (idx, step) in self.steps.iter().enumerate() {
+                sink.node_start(idx, step.name);
                 run_step(step, ws, mon);
+                sink.node_end(idx, step.name);
             }
             ws.copy_slot_to_lane(self.out_slot, lane);
         }
@@ -1316,6 +1396,47 @@ mod tests {
         let mut ws = Workspace::for_plan(&plan);
         let x = Tensor::zeros(model.input_shape, model.input_q);
         plan.run_batch_in(std::slice::from_ref(&x), &mut ws, &mut NoopMonitor);
+    }
+
+    #[test]
+    fn traced_paths_are_bit_exact_and_record_every_node() {
+        use crate::obs::{ExecTracer, NoopTraceSink};
+        use std::time::Instant;
+        let g = mcunet_residual(Primitive::Standard, 23);
+        let plan = ExecPlan::compile_graph_default(&g, true);
+        let mut ws = Workspace::for_plan(&plan);
+        let mut x = Tensor::zeros(g.input_shape, g.input_q);
+        Rng::new(0x7ACE).fill_i8(&mut x.data, -64, 63);
+        let mut ma = CountingMonitor::new();
+        let want = plan.run_in(&x, &mut ws, &mut ma).data.clone();
+        // no-op sink: identical output and micro-op event stream
+        let mut mb = CountingMonitor::new();
+        let got = plan.run_in_traced(&x, &mut ws, &mut mb, &mut NoopTraceSink).data.clone();
+        assert_eq!(want, got);
+        assert_eq!(ma.counts, mb.counts);
+        // live tracer: still bit-exact, one timing per node in step order
+        let mut tracer = ExecTracer::with_capacity(Instant::now(), plan.n_layers());
+        let traced = plan.run_in_traced(&x, &mut ws, &mut NoopMonitor, &mut tracer).data.clone();
+        assert_eq!(want, traced);
+        assert_eq!(tracer.timings().len(), plan.n_layers());
+        assert_eq!(tracer.dropped(), 0);
+        for (i, t) in tracer.timings().iter().enumerate() {
+            assert_eq!(t.node as usize, i);
+            assert!(t.start_us >= 0.0 && t.dur_us >= 0.0);
+        }
+        // staged batch: the node index sequence repeats per lane
+        const N: usize = 3;
+        let mut bws = Workspace::for_plan_batch(&plan, N);
+        for lane in 0..N {
+            bws.stage_batch_input(lane, &x.data);
+        }
+        let mut btracer = ExecTracer::with_capacity(Instant::now(), N * plan.n_layers());
+        let staged = plan.run_batch_staged_traced(N, &mut bws, &mut NoopMonitor, &mut btracer);
+        assert_eq!(&staged[..plan.output_len()], want.as_slice());
+        assert_eq!(btracer.timings().len(), N * plan.n_layers());
+        for (i, t) in btracer.timings().iter().enumerate() {
+            assert_eq!(t.node as usize, i % plan.n_layers());
+        }
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Analytic-vs-measured drift monitor: the paper's headline claim — a
+//! *linear relationship between theoretical complexity and measured
+//! latency* (§4.1, regression scores ≥0.95) — turned into a runtime
+//! invariant. Every sampled batch contributes per-node measured host
+//! wall times; each node also has an analytic prediction (its
+//! [`crate::nn::OpCounts`] pushed through the [`crate::mcu`] cycle
+//! model). If the paper's linearity holds on the host too, measured
+//! nanoseconds should be an affine function of predicted cycles across
+//! all nodes of all models; [`DriftMonitor::report`] fits that line
+//! with [`crate::util::stats::linreg`] and flags nodes that depart from
+//! it by more than a configurable relative tolerance — the calibration
+//! signal the ROADMAP's host-SIMD backend comparison needs.
+//!
+//! [`NodeCost`] is the one serializer for per-node cost records: the
+//! offline `convbench profile --json` view and the runtime drift report
+//! emit the same fields, so the two are diffable directly.
+
+use std::collections::BTreeMap;
+
+use crate::mcu::{measure, McuConfig, Measurement, PathClass};
+use crate::nn::{counts, ExecPlan, Graph, NodeOp};
+use crate::tuner::space::{self, Candidate};
+use crate::util::json::Json;
+use crate::util::stats::{linreg, LinearFit};
+
+/// Per-node cost record: analytic prediction plus memory footprint.
+/// Shared between `convbench profile --json` and the drift monitor so
+/// offline and runtime views are field-compatible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeCost {
+    /// Kernel name (plan step name).
+    pub node: String,
+    /// Step index in the plan / node index in the graph.
+    pub index: usize,
+    /// Predicted cycles on the modeled MCU.
+    pub cycles: f64,
+    /// Predicted latency at the configured clock, µs.
+    pub latency_us: f64,
+    /// Predicted energy, µJ.
+    pub energy_uj: f64,
+    /// Memory-access events (the paper's Fig. 3 quantity).
+    pub mem_accesses: u64,
+    /// Effective multiply-accumulates (`__SMLAD` counts double).
+    pub effective_macs: u64,
+    /// Activation arena bytes live while this node runs.
+    pub arena_bytes: usize,
+}
+
+impl NodeCost {
+    /// Build from a measurement (shared by the profile CLI and
+    /// [`plan_node_costs`]).
+    pub fn from_measurement(node: &str, index: usize, m: &Measurement, arena_bytes: usize) -> Self {
+        Self {
+            node: node.to_string(),
+            index,
+            cycles: m.cycles,
+            latency_us: m.latency_s * 1e6,
+            energy_uj: m.energy_mj * 1e3,
+            mem_accesses: m.mem_accesses,
+            effective_macs: m.effective_macs,
+            arena_bytes,
+        }
+    }
+
+    /// The shared per-node JSON serialization.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("node", self.node.as_str())
+            .field("index", self.index)
+            .field("cycles", self.cycles)
+            .field("latency_us", self.latency_us)
+            .field("energy_uj", self.energy_uj)
+            .field("mem_accesses", self.mem_accesses)
+            .field("effective_macs", self.effective_macs)
+            .field("arena_bytes", self.arena_bytes)
+    }
+}
+
+/// Analytic per-node costs for a compiled plan: each node's op counts
+/// under its scheduled candidate (`counts × McuConfig`), in plan step
+/// order. `schedule` must align with the graph's nodes (e.g.
+/// [`ExecPlan::candidates`]).
+pub fn plan_node_costs(
+    graph: &Graph,
+    schedule: &[Candidate],
+    plan: &ExecPlan,
+    cfg: &McuConfig,
+) -> Vec<NodeCost> {
+    let shapes = graph.value_shapes();
+    graph
+        .nodes
+        .iter()
+        .zip(schedule)
+        .enumerate()
+        .map(|(i, (node, cand))| {
+            let in_shape = &shapes[node.inputs[0]];
+            let (op_counts, path) = match &node.op {
+                NodeOp::Layer(l) => {
+                    (space::analytic_counts(l, cand, in_shape), cand.lowering.path_class())
+                }
+                NodeOp::Add(_) => (counts::residual_add_counts(in_shape), PathClass::Scalar),
+            };
+            let m = measure(&op_counts, path, cfg);
+            NodeCost::from_measurement(node.op.name(), i, &m, plan.layer_ram_bytes(i))
+        })
+        .collect()
+}
+
+/// Rolling measured-time accumulator for one node.
+#[derive(Clone, Debug)]
+struct NodeAccum {
+    cost: NodeCost,
+    measured_ns_sum: f64,
+    samples: u64,
+}
+
+/// One node's row in a [`DriftReport`].
+#[derive(Clone, Debug)]
+pub struct DriftRecord {
+    /// Owning model name.
+    pub model: String,
+    /// Analytic side (the shared [`NodeCost`] record).
+    pub cost: NodeCost,
+    /// Mean measured host wall time, ns.
+    pub mean_measured_ns: f64,
+    /// Measured batches contributing to the mean.
+    pub samples: u64,
+    /// Rolling ratio: mean measured ns ÷ predicted cycles.
+    pub ns_per_cycle: f64,
+    /// True when this node departs from the model-wide fit by more
+    /// than the report's tolerance.
+    pub flagged: bool,
+}
+
+/// Snapshot of the drift state: the model-wide linear fit of measured
+/// ns against predicted cycles, plus every measured node's record.
+#[derive(Clone, Debug)]
+pub struct DriftReport {
+    /// Relative tolerance used for flagging.
+    pub tolerance: f64,
+    /// OLS fit of measured ns vs predicted cycles across all measured
+    /// nodes (`None` below 2 points or under degenerate variance).
+    pub fit: Option<LinearFit>,
+    /// Per-node records, in (model, node index) order.
+    pub records: Vec<DriftRecord>,
+}
+
+impl DriftReport {
+    /// Number of flagged nodes.
+    pub fn flagged(&self) -> usize {
+        self.records.iter().filter(|r| r.flagged).count()
+    }
+
+    /// True when every measured node's ns-per-cycle ratio is finite —
+    /// the acceptance invariant benches assert over the model zoo.
+    pub fn all_ratios_finite(&self) -> bool {
+        self.records.iter().all(|r| r.ns_per_cycle.is_finite())
+    }
+
+    /// JSON form: the fit, per-node records (each embedding the shared
+    /// [`NodeCost::to_json`] fields), and the flag count.
+    pub fn to_json(&self) -> Json {
+        let fit = match &self.fit {
+            Some(f) => Json::obj()
+                .field("ns_per_cycle", f.a)
+                .field("intercept_ns", f.b)
+                .field("r2", f.r2)
+                .field("n", f.n),
+            None => Json::Null,
+        };
+        let nodes: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                r.cost
+                    .to_json()
+                    .field("model", r.model.as_str())
+                    .field("mean_measured_ns", r.mean_measured_ns)
+                    .field("samples", r.samples)
+                    .field("ns_per_cycle", r.ns_per_cycle)
+                    .field("flagged", r.flagged)
+            })
+            .collect();
+        Json::obj()
+            .field("tolerance", self.tolerance)
+            .field("fit", fit)
+            .field("nodes", Json::Arr(nodes))
+            .field("flagged", self.flagged())
+    }
+}
+
+/// Accumulates per-(model, node) measured wall times against registered
+/// analytic costs. The server holds one behind a mutex touched only on
+/// sampled batches; benches drive it directly.
+#[derive(Debug, Default)]
+pub struct DriftMonitor {
+    models: BTreeMap<String, Vec<NodeAccum>>,
+}
+
+impl DriftMonitor {
+    /// Empty monitor; call [`DriftMonitor::register`] per model.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model's analytic node costs (replaces any previous
+    /// registration and its accumulated measurements).
+    pub fn register(&mut self, model: &str, costs: Vec<NodeCost>) {
+        let accums = costs
+            .into_iter()
+            .map(|cost| NodeAccum {
+                cost,
+                measured_ns_sum: 0.0,
+                samples: 0,
+            })
+            .collect();
+        self.models.insert(model.to_string(), accums);
+    }
+
+    /// Record one measured execution of `node_index` (plan step) of
+    /// `model`. Unregistered models/nodes are ignored.
+    pub fn record(&mut self, model: &str, node_index: usize, measured_ns: f64) {
+        if let Some(accums) = self.models.get_mut(model) {
+            if let Some(a) = accums.get_mut(node_index) {
+                a.measured_ns_sum += measured_ns;
+                a.samples += 1;
+            }
+        }
+    }
+
+    /// Fit measured ns against predicted cycles across every measured
+    /// node and flag nodes whose mean departs from the fit by more than
+    /// `tolerance` (relative to the fitted value).
+    pub fn report(&self, tolerance: f64) -> DriftReport {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for accums in self.models.values() {
+            for a in accums {
+                if a.samples > 0 {
+                    xs.push(a.cost.cycles);
+                    ys.push(a.measured_ns_sum / a.samples as f64);
+                }
+            }
+        }
+        let fit = linreg(&xs, &ys);
+        let mut records = Vec::new();
+        for (model, accums) in &self.models {
+            for a in accums {
+                if a.samples == 0 {
+                    continue;
+                }
+                let mean_ns = a.measured_ns_sum / a.samples as f64;
+                let flagged = match &fit {
+                    Some(f) => {
+                        let expected = f.a * a.cost.cycles + f.b;
+                        (mean_ns - expected).abs() > tolerance * expected.abs().max(f64::EPSILON)
+                    }
+                    None => false,
+                };
+                records.push(DriftRecord {
+                    model: model.clone(),
+                    cost: a.cost.clone(),
+                    mean_measured_ns: mean_ns,
+                    samples: a.samples,
+                    ns_per_cycle: mean_ns / a.cost.cycles,
+                    flagged,
+                });
+            }
+        }
+        DriftReport {
+            tolerance,
+            fit,
+            records,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(name: &str, index: usize, cycles: f64) -> NodeCost {
+        NodeCost {
+            node: name.to_string(),
+            index,
+            cycles,
+            latency_us: cycles / 84.0,
+            energy_uj: cycles * 0.5e-3,
+            mem_accesses: cycles as u64 / 2,
+            effective_macs: cycles as u64 / 4,
+            arena_bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn linear_measurements_fit_with_no_flags() {
+        let mut mon = DriftMonitor::new();
+        mon.register(
+            "m",
+            vec![cost("conv", 0, 1000.0), cost("relu", 1, 100.0), cost("dense", 2, 5000.0)],
+        );
+        // measured = 12 ns/cycle exactly → perfect fit, nothing flagged
+        for _ in 0..3 {
+            mon.record("m", 0, 12_000.0);
+            mon.record("m", 1, 1_200.0);
+            mon.record("m", 2, 60_000.0);
+        }
+        let rep = mon.report(0.25);
+        let fit = rep.fit.expect("fit over 3 nodes");
+        assert!((fit.a - 12.0).abs() < 1e-6, "slope {}", fit.a);
+        assert!(fit.r2 > 0.999);
+        assert_eq!(rep.flagged(), 0);
+        assert!(rep.all_ratios_finite());
+        assert_eq!(rep.records.len(), 3);
+        assert!((rep.records[0].ns_per_cycle - 12.0).abs() < 1e-9);
+        assert_eq!(rep.records[0].samples, 3);
+    }
+
+    #[test]
+    fn outlier_node_is_flagged() {
+        let mut mon = DriftMonitor::new();
+        mon.register(
+            "m",
+            vec![
+                cost("a", 0, 1000.0),
+                cost("b", 1, 2000.0),
+                cost("c", 2, 3000.0),
+                cost("d", 3, 4000.0),
+            ],
+        );
+        mon.record("m", 0, 10_000.0);
+        mon.record("m", 1, 20_000.0);
+        mon.record("m", 2, 90_000.0); // 3× the trend
+        mon.record("m", 3, 40_000.0);
+        let rep = mon.report(0.25);
+        let c = rep.records.iter().find(|r| r.cost.node == "c").unwrap();
+        assert!(c.flagged, "outlier must be flagged");
+        let a = rep.records.iter().find(|r| r.cost.node == "a").unwrap();
+        assert!(!a.flagged, "on-trend node must not be flagged");
+    }
+
+    #[test]
+    fn unmeasured_and_unknown_nodes_are_ignored() {
+        let mut mon = DriftMonitor::new();
+        mon.register("m", vec![cost("a", 0, 1000.0), cost("b", 1, 2000.0)]);
+        mon.record("m", 0, 5_000.0);
+        mon.record("m", 99, 5_000.0); // out of range: ignored
+        mon.record("ghost", 0, 5_000.0); // unregistered: ignored
+        let rep = mon.report(0.5);
+        assert_eq!(rep.records.len(), 1, "only the measured node reports");
+        assert!(rep.fit.is_none(), "one point cannot fit a line");
+        assert_eq!(rep.flagged(), 0);
+    }
+
+    #[test]
+    fn report_serializes_and_parses_back() {
+        let mut mon = DriftMonitor::new();
+        mon.register("m", vec![cost("a", 0, 1000.0), cost("b", 1, 4000.0)]);
+        mon.record("m", 0, 11_000.0);
+        mon.record("m", 1, 44_000.0);
+        let rep = mon.report(0.25);
+        let j = Json::parse(&rep.to_json().to_string()).expect("valid json");
+        assert_eq!(j.get("flagged").and_then(|v| v.as_i64()), Some(0));
+        let nodes = j.get("nodes").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(nodes.len(), 2);
+        // the shared NodeCost fields are present on every record
+        for n in nodes {
+            for key in ["node", "cycles", "latency_us", "energy_uj", "arena_bytes"] {
+                assert!(n.get(key).is_some(), "missing {key}");
+            }
+        }
+        let fit = j.get("fit").unwrap();
+        assert!((fit.get("ns_per_cycle").unwrap().as_f64().unwrap() - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zoo_plans_produce_positive_costs() {
+        use crate::analytic::Primitive;
+        use crate::models::mcunet;
+        let cfg = McuConfig::default();
+        let graph = Graph::from_model(&mcunet(Primitive::Standard, 42));
+        let plan = ExecPlan::compile_graph_default(&graph, true);
+        let costs = plan_node_costs(&graph, &plan.candidates(), &plan, &cfg);
+        assert_eq!(costs.len(), graph.nodes.len());
+        for c in &costs {
+            assert!(c.cycles > 0.0, "node {} has zero predicted cycles", c.node);
+            assert!(c.latency_us > 0.0);
+            assert!(c.mem_accesses > 0);
+        }
+        // plan step names and cost names line up
+        let names = plan.node_names();
+        assert_eq!(names.len(), costs.len());
+        for (c, n) in costs.iter().zip(&names) {
+            assert_eq!(c.node, *n);
+        }
+    }
+}

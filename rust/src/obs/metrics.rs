@@ -1,0 +1,449 @@
+//! Sharded metrics registry: counters, gauges and fixed log₂-bucketed
+//! histograms, recorded lock-free on the hot path and merged at scrape
+//! time into a Prometheus-style text exposition plus a JSON form.
+//!
+//! Layout follows the serving engine's threading model: the registry
+//! owns one [`Shard`] per recording thread (shard 0 is the frontend /
+//! submitter side, shards 1..=N belong to the N workers), every shard
+//! holds the full set of instruments preallocated at spawn, and a
+//! record is a single relaxed atomic add on the recording thread's own
+//! shard — no locks, no allocation, no cross-core contention. A scrape
+//! walks all shards and sums: counters and histogram buckets add
+//! exactly; gauges also add, which is correct under the convention that
+//! exactly one shard writes any given gauge (the server's `queue_depth`
+//! is written only by the frontend shard).
+//!
+//! Histograms use 32 fixed power-of-two buckets: an observation `v`
+//! lands in bucket `floor(log2(v))` (bucket 0 also catches 0 and 1),
+//! clamped to the last bucket, so bucket `i` spans `[2^i, 2^(i+1))`.
+//! That covers u64 microsecond latencies from 1 µs to ~1.2 hours with a
+//! fixed footprint and a ≤2× relative quantization error, while the
+//! exact `sum`/`count` pair keeps the mean error-free.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// Number of log₂ buckets per histogram (fixed at construction).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Bucket index for an observation: `floor(log2(v))` clamped to the
+/// last bucket; 0 and 1 both land in bucket 0.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        (63 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the Prometheus `le` label).
+#[inline]
+fn bucket_le(i: usize) -> u64 {
+    if i + 1 >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// One histogram: exact count/sum plus fixed log₂ buckets.
+#[derive(Debug)]
+struct Hist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Hist {
+    fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One recording thread's slice of the registry. All instruments are
+/// preallocated when the registry is built; recording is a relaxed
+/// atomic add — no locks, no allocation.
+#[derive(Debug)]
+pub struct Shard {
+    counters: Vec<AtomicU64>,
+    gauges: Vec<AtomicU64>,
+    hists: Vec<Hist>,
+}
+
+impl Shard {
+    fn new(n_counters: usize, n_gauges: usize, n_hists: usize) -> Self {
+        Self {
+            counters: (0..n_counters).map(|_| AtomicU64::new(0)).collect(),
+            gauges: (0..n_gauges).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..n_hists).map(|_| Hist::new()).collect(),
+        }
+    }
+
+    /// Add `n` to counter `idx` (indices come from registry order).
+    #[inline]
+    pub fn counter_add(&self, idx: usize, n: u64) {
+        self.counters[idx].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Set gauge `idx` to `v`. By convention a given gauge has exactly
+    /// one writing shard so the scrape-time sum reads back `v`.
+    #[inline]
+    pub fn gauge_set(&self, idx: usize, v: u64) {
+        self.gauges[idx].store(v, Ordering::Relaxed);
+    }
+
+    /// Record one observation into histogram `idx`.
+    #[inline]
+    pub fn observe(&self, idx: usize, v: u64) {
+        self.hists[idx].observe(v);
+    }
+}
+
+/// Point-in-time merge of one histogram across all shards.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Total observations.
+    pub count: u64,
+    /// Exact sum of all observations.
+    pub sum: u64,
+    /// Per-bucket counts (`buckets[i]` spans `[2^i, 2^(i+1))`).
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Exact mean of the observations (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Point-in-time merge of every instrument across all shards.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// `(name, summed value)` per counter, in registration order.
+    pub counters: Vec<(&'static str, u64)>,
+    /// `(name, summed value)` per gauge, in registration order.
+    pub gauges: Vec<(&'static str, u64)>,
+    /// `(name, merged histogram)` per histogram, in registration order.
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+}
+
+impl Snapshot {
+    /// Value of a counter by name (`None` if unregistered).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// Merged histogram by name (`None` if unregistered).
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Prometheus text exposition (format version 0.0.4). Histogram
+    /// buckets are emitted cumulatively with power-of-two `le` labels,
+    /// truncated after the highest non-empty bucket, then `+Inf`.
+    pub fn to_prometheus(&self, namespace: &str) -> String {
+        let mut s = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(s, "# TYPE {namespace}_{name} counter");
+            let _ = writeln!(s, "{namespace}_{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(s, "# TYPE {namespace}_{name} gauge");
+            let _ = writeln!(s, "{namespace}_{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(s, "# TYPE {namespace}_{name} histogram");
+            let last = h.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate().take(last + 1) {
+                cum += c;
+                let _ = writeln!(s, "{namespace}_{name}_bucket{{le=\"{}\"}} {cum}", bucket_le(i));
+            }
+            let _ = writeln!(s, "{namespace}_{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(s, "{namespace}_{name}_sum {}", h.sum);
+            let _ = writeln!(s, "{namespace}_{name}_count {}", h.count);
+        }
+        s
+    }
+
+    /// JSON form of the same merged view (parseable by
+    /// [`crate::util::json::Json::parse`]).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, v) in &self.counters {
+            counters = counters.field(name, *v);
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &self.gauges {
+            gauges = gauges.field(name, *v);
+        }
+        let mut hists = Json::obj();
+        for (name, h) in &self.hists {
+            let buckets: Vec<Json> = h.buckets.iter().map(|&c| Json::from(c)).collect();
+            hists = hists.field(
+                name,
+                Json::obj()
+                    .field("count", h.count)
+                    .field("sum", h.sum)
+                    .field("mean", h.mean())
+                    .field("buckets", Json::Arr(buckets)),
+            );
+        }
+        Json::obj()
+            .field("counters", counters)
+            .field("gauges", gauges)
+            .field("histograms", hists)
+    }
+}
+
+/// Metric names plus per-thread shards. Built once at server spawn;
+/// instruments are addressed by their registration index (cheap and
+/// allocation-free on the record path), names only matter at scrape.
+#[derive(Debug)]
+pub struct Registry {
+    counter_names: Vec<&'static str>,
+    gauge_names: Vec<&'static str>,
+    hist_names: Vec<&'static str>,
+    shards: Vec<Arc<Shard>>,
+}
+
+impl Registry {
+    /// Build a registry with the given instrument names and `n_shards`
+    /// preallocated shards (one per recording thread).
+    pub fn new(
+        counters: &[&'static str],
+        gauges: &[&'static str],
+        hists: &[&'static str],
+        n_shards: usize,
+    ) -> Self {
+        assert!(n_shards > 0, "registry needs at least one shard");
+        Self {
+            counter_names: counters.to_vec(),
+            gauge_names: gauges.to_vec(),
+            hist_names: hists.to_vec(),
+            shards: (0..n_shards)
+                .map(|_| Arc::new(Shard::new(counters.len(), gauges.len(), hists.len())))
+                .collect(),
+        }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Handle to shard `i` for a recording thread to keep.
+    pub fn shard(&self, i: usize) -> Arc<Shard> {
+        Arc::clone(&self.shards[i])
+    }
+
+    /// Sum of counter `idx` across all shards.
+    pub fn counter(&self, idx: usize) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.counters[idx].load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Merge every instrument across all shards.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counter_names
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| (name, self.counter(i)))
+            .collect();
+        let gauges = self
+            .gauge_names
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| {
+                let v = self
+                    .shards
+                    .iter()
+                    .map(|s| s.gauges[i].load(Ordering::Relaxed))
+                    .sum();
+                (name, v)
+            })
+            .collect();
+        let hists = self
+            .hist_names
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| {
+                let mut h = HistSnapshot {
+                    count: 0,
+                    sum: 0,
+                    buckets: vec![0u64; HIST_BUCKETS],
+                };
+                for s in &self.shards {
+                    h.count += s.hists[i].count.load(Ordering::Relaxed);
+                    h.sum += s.hists[i].sum.load(Ordering::Relaxed);
+                    for (acc, b) in h.buckets.iter_mut().zip(&s.hists[i].buckets) {
+                        *acc += b.load(Ordering::Relaxed);
+                    }
+                }
+                (name, h)
+            })
+            .collect();
+        Snapshot {
+            counters,
+            gauges,
+            hists,
+        }
+    }
+}
+
+/// Validate a metrics JSON document produced by [`Snapshot::to_json`]:
+/// the three sections exist, every histogram's buckets sum to its
+/// count, and at least one request was served.
+pub fn validate_metrics_json(j: &Json) -> Result<(), String> {
+    let counters = j
+        .get("counters")
+        .and_then(|v| v.as_obj())
+        .ok_or("missing counters object")?;
+    j.get("gauges")
+        .and_then(|v| v.as_obj())
+        .ok_or("missing gauges object")?;
+    let hists = j
+        .get("histograms")
+        .and_then(|v| v.as_obj())
+        .ok_or("missing histograms object")?;
+    for (name, h) in hists {
+        let count = h
+            .get("count")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| format!("histogram {name} lacks a count"))?;
+        let buckets = h
+            .get("buckets")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("histogram {name} lacks buckets"))?;
+        let total: i64 = buckets.iter().filter_map(|b| b.as_i64()).sum();
+        if total != count {
+            return Err(format!(
+                "histogram {name}: buckets sum to {total}, count says {count}"
+            ));
+        }
+    }
+    let served = counters
+        .iter()
+        .find(|(k, _)| k == "requests_served_total")
+        .and_then(|(_, v)| v.as_i64())
+        .ok_or("missing requests_served_total counter")?;
+    if served < 1 {
+        return Err("requests_served_total is zero".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_le(0), 1);
+        assert_eq!(bucket_le(1), 3);
+        assert_eq!(bucket_le(9), 1023);
+    }
+
+    #[test]
+    fn shards_merge_at_scrape() {
+        let r = Registry::new(&["served"], &["depth"], &["lat_us"], 3);
+        r.shard(0).counter_add(0, 2);
+        r.shard(1).counter_add(0, 3);
+        r.shard(2).counter_add(0, 5);
+        r.shard(0).gauge_set(0, 7);
+        r.shard(1).observe(0, 100);
+        r.shard(2).observe(0, 100);
+        r.shard(2).observe(0, 5000);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("served"), Some(10));
+        assert_eq!(snap.gauges[0], ("depth", 7));
+        let h = snap.hist("lat_us").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 5200);
+        assert_eq!(h.buckets[bucket_of(100)], 2);
+        assert_eq!(h.buckets[bucket_of(5000)], 1);
+        assert!((h.mean() - 5200.0 / 3.0).abs() < 1e-9);
+        assert_eq!(r.counter(0), 10);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new(&["served"], &["depth"], &["lat_us"], 1);
+        r.shard(0).counter_add(0, 4);
+        r.shard(0).observe(0, 3);
+        r.shard(0).observe(0, 9);
+        let text = r.snapshot().to_prometheus("convbench");
+        assert!(text.contains("# TYPE convbench_served counter"));
+        assert!(text.contains("convbench_served 4"));
+        assert!(text.contains("# TYPE convbench_lat_us histogram"));
+        // cumulative buckets: le=3 covers the 3, le=15 covers both
+        assert!(text.contains("convbench_lat_us_bucket{le=\"3\"} 1"));
+        assert!(text.contains("convbench_lat_us_bucket{le=\"15\"} 2"));
+        assert!(text.contains("convbench_lat_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("convbench_lat_us_sum 12"));
+        assert!(text.contains("convbench_lat_us_count 2"));
+    }
+
+    #[test]
+    fn json_round_trips_and_validates() {
+        let r = Registry::new(
+            &["requests_served_total", "requests_shed_total"],
+            &["queue_depth"],
+            &["batch_size"],
+            2,
+        );
+        r.shard(0).counter_add(0, 6);
+        r.shard(1).observe(0, 4);
+        let text = r.snapshot().to_json().to_string();
+        let j = Json::parse(&text).expect("valid json");
+        validate_metrics_json(&j).expect("valid metrics");
+        let served = j
+            .get("counters")
+            .and_then(|c| c.get("requests_served_total"))
+            .and_then(|v| v.as_i64());
+        assert_eq!(served, Some(6));
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_inconsistent() {
+        let r = Registry::new(&["requests_served_total"], &[], &["batch_size"], 1);
+        let j = Json::parse(&r.snapshot().to_json().to_string()).unwrap();
+        assert!(validate_metrics_json(&j).is_err(), "zero served must fail");
+        let bad = Json::parse(
+            r#"{"counters":{"requests_served_total":1},"gauges":{},
+                "histograms":{"h":{"count":2,"sum":0,"buckets":[1]}}}"#,
+        )
+        .unwrap();
+        assert!(validate_metrics_json(&bad).is_err(), "bucket/count mismatch must fail");
+    }
+}

@@ -1,0 +1,29 @@
+//! Observability for the serving engine, in three pillars (see
+//! docs/ARCHITECTURE.md "Observability"):
+//!
+//! 1. **Metrics** ([`metrics`]): a sharded registry of counters, gauges
+//!    and log₂-bucketed histograms — lock-free relaxed-atomic recording
+//!    on per-worker shards, merged at scrape into Prometheus text and a
+//!    JSON form.
+//! 2. **Tracing** ([`trace`]): a request → queue-wait → batch-drain →
+//!    per-node exec → respond span model, recorded into preallocated
+//!    per-worker rings at a 1-in-N batch sampling rate and exported as
+//!    Chrome trace-event JSON (Perfetto-loadable). The engine hooks are
+//!    a [`TraceSink`] type parameter on [`crate::nn::ExecPlan`]'s run
+//!    loops whose no-op instantiation monomorphizes to nothing, exactly
+//!    like [`crate::nn::NoopMonitor`].
+//! 3. **Drift** ([`drift`]): per-(model, node) measured host time
+//!    against the analytic cycle prediction, with a model-wide linear
+//!    fit and per-node departure flags — the paper's MACs↔latency
+//!    linearity claim (§4.1) evaluated continuously at runtime.
+
+pub mod drift;
+pub mod metrics;
+pub mod trace;
+
+pub use drift::{plan_node_costs, DriftMonitor, DriftRecord, DriftReport, NodeCost};
+pub use metrics::{validate_metrics_json, HistSnapshot, Registry, Shard, Snapshot, HIST_BUCKETS};
+pub use trace::{
+    chrome_trace_json, validate_chrome_trace, ExecTracer, NodeTiming, NoopTraceSink, SpanKind,
+    TraceEvent, TraceModelMeta, TraceRing, TraceSink,
+};

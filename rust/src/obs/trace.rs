@@ -1,0 +1,481 @@
+//! Sampled request tracing: a span model for the serving engine
+//! (request → queue-wait → batch-drain → per-node exec → respond),
+//! recorded into preallocated per-worker ring buffers and exported as
+//! Chrome trace-event JSON (loadable in Perfetto or `chrome://tracing`).
+//!
+//! The per-node hooks follow the [`crate::nn::Monitor`] discipline: the
+//! engine's run loops are generic over a [`TraceSink`], the trait's
+//! methods have empty inline default bodies, and [`NoopTraceSink`]
+//! overrides nothing — so the untraced instantiation monomorphizes to
+//! exactly the code that existed before tracing, and the hot-path
+//! zero-allocation and event-stream-identity pins in
+//! `benches/infer_hot.rs` keep holding with tracing compiled in.
+//!
+//! Timestamps are `f64` microseconds relative to a caller-chosen epoch
+//! (the server uses its spawn instant), which is both what the Chrome
+//! trace-event format wants in its `ts`/`dur` fields and precise to
+//! well under a nanosecond for any realistic process lifetime.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-node wall-time hooks on the engine's run loops. The default
+/// bodies are empty and `#[inline(always)]`, so a sink that overrides
+/// nothing costs nothing.
+pub trait TraceSink {
+    /// Node `idx` (step index in the plan) is about to execute.
+    #[inline(always)]
+    fn node_start(&mut self, _idx: usize, _name: &'static str) {}
+    /// Node `idx` finished executing.
+    #[inline(always)]
+    fn node_end(&mut self, _idx: usize, _name: &'static str) {}
+}
+
+/// Zero-cost sink for the untraced hot path (the [`crate::nn::NoopMonitor`]
+/// of tracing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopTraceSink;
+impl TraceSink for NoopTraceSink {}
+
+/// One timed node execution captured by [`ExecTracer`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeTiming {
+    /// Step index in the plan.
+    pub node: u16,
+    /// Start, µs since the tracer's epoch.
+    pub start_us: f64,
+    /// Duration, µs.
+    pub dur_us: f64,
+}
+
+/// A [`TraceSink`] that records per-node wall times into a
+/// preallocated buffer. `reset()` between inferences keeps the buffer's
+/// capacity, so steady-state recording is allocation-free; timings past
+/// capacity are counted as dropped rather than grown into.
+#[derive(Debug)]
+pub struct ExecTracer {
+    epoch: Instant,
+    open_start: Instant,
+    timings: Vec<NodeTiming>,
+    dropped: u64,
+}
+
+impl ExecTracer {
+    /// Tracer with room for `cap` node timings (e.g. plan node count ×
+    /// batch lanes), all allocated up front.
+    pub fn with_capacity(epoch: Instant, cap: usize) -> Self {
+        Self {
+            epoch,
+            open_start: epoch,
+            timings: Vec::with_capacity(cap),
+            dropped: 0,
+        }
+    }
+
+    /// Clear recorded timings for the next inference. Keeps capacity.
+    pub fn reset(&mut self) {
+        self.timings.clear();
+        self.dropped = 0;
+    }
+
+    /// Timings recorded since the last [`ExecTracer::reset`].
+    pub fn timings(&self) -> &[NodeTiming] {
+        &self.timings
+    }
+
+    /// Node executions that did not fit the preallocated buffer.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl TraceSink for ExecTracer {
+    #[inline(always)]
+    fn node_start(&mut self, _idx: usize, _name: &'static str) {
+        self.open_start = Instant::now();
+    }
+
+    #[inline(always)]
+    fn node_end(&mut self, idx: usize, _name: &'static str) {
+        let dur = self.open_start.elapsed();
+        if self.timings.len() < self.timings.capacity() {
+            let start = self.open_start.duration_since(self.epoch);
+            self.timings.push(NodeTiming {
+                node: idx as u16,
+                start_us: start.as_secs_f64() * 1e6,
+                dur_us: dur.as_secs_f64() * 1e6,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Span taxonomy for one served request (see docs/ARCHITECTURE.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submission to reply send, one per request.
+    Request,
+    /// Enqueue to batch-drain start, one per request.
+    QueueWait,
+    /// Stage + execute of one drained micro-batch, one per batch.
+    BatchDrain,
+    /// One node (plan step) execution inside a batch drain.
+    ExecNode,
+    /// Reply fan-out for one drained batch.
+    Respond,
+}
+
+impl SpanKind {
+    /// Stable span name used in trace events and validation.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchDrain => "batch_drain",
+            SpanKind::ExecNode => "exec_node",
+            SpanKind::Respond => "respond",
+        }
+    }
+}
+
+/// One recorded span. `detail` is kind-dependent: the request id for
+/// `Request`/`QueueWait`, the node index for `ExecNode`, and the batch
+/// size for `BatchDrain`/`Respond`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Which span this is.
+    pub kind: SpanKind,
+    /// Start, µs since the server epoch.
+    pub ts_us: f64,
+    /// Duration, µs.
+    pub dur_us: f64,
+    /// Recording thread (0 = frontend, 1.. = workers).
+    pub tid: u32,
+    /// Model index into the server's sorted model table.
+    pub model: u16,
+    /// Kind-dependent payload (see type docs).
+    pub detail: u64,
+}
+
+/// Fixed-capacity ring of trace events: preallocated at worker spawn,
+/// overwrites the oldest events when full (dropping history, never
+/// growing), drained oldest-first by the exporter.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// Ring with room for `cap` events (> 0), allocated up front.
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "trace ring capacity must be positive");
+        Self {
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record one span. O(1), allocation-free; overwrites the oldest
+    /// event once the ring is full.
+    pub fn push(&mut self, e: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.dropped += 1;
+        }
+        self.head = (self.head + 1) % self.cap;
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten before they could be drained.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take all buffered events, oldest first, leaving the ring empty
+    /// (capacity retained).
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() < self.cap {
+            out.extend_from_slice(&self.buf);
+        } else {
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+        }
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+/// Per-model naming metadata the Chrome exporter resolves span labels
+/// from: the model's name and its plan's per-node kernel names.
+#[derive(Clone, Debug)]
+pub struct TraceModelMeta {
+    /// Model name (the serving registry key).
+    pub name: String,
+    /// Kernel name per plan step, in step order.
+    pub nodes: Vec<&'static str>,
+}
+
+/// Render recorded spans as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}` with complete `ph:"X"` events), loadable
+/// in Perfetto. `models[e.model]` supplies display names; events with
+/// out-of-range model indices fall back to the raw index.
+pub fn chrome_trace_json(events: &[TraceEvent], models: &[TraceModelMeta]) -> Json {
+    let out: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let meta = models.get(e.model as usize);
+            let model_name = match meta {
+                Some(m) => m.name.clone(),
+                None => format!("model#{}", e.model),
+            };
+            let name = match e.kind {
+                SpanKind::ExecNode => meta
+                    .and_then(|m| m.nodes.get(e.detail as usize).copied())
+                    .unwrap_or("node"),
+                k => k.name(),
+            };
+            let mut args = Json::obj().field("model", model_name);
+            args = match e.kind {
+                SpanKind::Request | SpanKind::QueueWait => args.field("request_id", e.detail),
+                SpanKind::ExecNode => args.field("node_index", e.detail),
+                SpanKind::BatchDrain | SpanKind::Respond => args.field("batch_size", e.detail),
+            };
+            Json::obj()
+                .field("name", name)
+                .field("cat", e.kind.name())
+                .field("ph", "X")
+                .field("ts", e.ts_us)
+                .field("dur", e.dur_us)
+                .field("pid", 1u64)
+                .field("tid", u64::from(e.tid))
+                .field("args", args)
+        })
+        .collect();
+    Json::obj()
+        .field("traceEvents", Json::Arr(out))
+        .field("displayTimeUnit", "ms")
+}
+
+/// Timestamp slack (µs) allowed between spans that were computed from
+/// the same instants but rounded independently to f64 microseconds.
+const TS_EPS_US: f64 = 2.0;
+
+fn span_f64(e: &Json, key: &str) -> Option<f64> {
+    e.get(key).and_then(|v| v.as_f64())
+}
+
+fn arg_str<'a>(e: &'a Json, key: &str) -> Option<&'a str> {
+    e.get("args").and_then(|a| a.get(key)).and_then(|v| v.as_str())
+}
+
+fn arg_i64(e: &Json, key: &str) -> Option<i64> {
+    e.get("args").and_then(|a| a.get(key)).and_then(|v| v.as_i64())
+}
+
+fn cat(e: &Json) -> Option<&str> {
+    e.get("cat").and_then(|v| v.as_str())
+}
+
+/// Validate a Chrome trace produced by [`chrome_trace_json`]: every
+/// event is a complete (`ph:"X"`) span with finite non-negative
+/// timestamps, and at least one request span is *complete* — its
+/// queue-wait ends where a batch-drain for the same model begins, that
+/// batch contains at least one per-node exec span, and the request
+/// envelope covers the batch, all monotonically ordered.
+pub fn validate_chrome_trace(j: &Json) -> Result<(), String> {
+    let events = j
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing traceEvents array")?;
+    if events.is_empty() {
+        return Err("empty traceEvents".into());
+    }
+    for (i, e) in events.iter().enumerate() {
+        if e.get("ph").and_then(|v| v.as_str()) != Some("X") {
+            return Err(format!("event {i}: not a complete (ph=X) span"));
+        }
+        let ts = span_f64(e, "ts").ok_or_else(|| format!("event {i}: missing ts"))?;
+        let dur = span_f64(e, "dur").ok_or_else(|| format!("event {i}: missing dur"))?;
+        if !ts.is_finite() || !dur.is_finite() || ts < 0.0 || dur < 0.0 {
+            return Err(format!("event {i}: bad ts/dur ({ts}, {dur})"));
+        }
+    }
+    let requests: Vec<&Json> = events.iter().filter(|e| cat(e) == Some("request")).collect();
+    if requests.is_empty() {
+        return Err("no request spans".into());
+    }
+    for r in &requests {
+        if request_is_complete(r, events) {
+            return Ok(());
+        }
+    }
+    Err("no complete request span (queue-wait → batch-drain → exec-node nesting) found".into())
+}
+
+/// True when `r`'s queue-wait, batch-drain and per-node exec spans are
+/// all present and monotonically nested.
+fn request_is_complete(r: &Json, events: &[Json]) -> bool {
+    let (Some(id), Some(model)) = (arg_i64(r, "request_id"), arg_str(r, "model")) else {
+        return false;
+    };
+    let (Some(r_ts), Some(r_dur)) = (span_f64(r, "ts"), span_f64(r, "dur")) else {
+        return false;
+    };
+    // the request's queue-wait: same id, starts with the request
+    let Some(q) = events.iter().find(|e| {
+        cat(e) == Some("queue_wait")
+            && arg_i64(e, "request_id") == Some(id)
+            && span_f64(e, "ts").is_some_and(|t| (t - r_ts).abs() <= TS_EPS_US)
+    }) else {
+        return false;
+    };
+    let q_end = span_f64(q, "ts").unwrap_or(0.0) + span_f64(q, "dur").unwrap_or(0.0);
+    // the batch the request rode in starts exactly where its wait ends
+    let Some(b) = events.iter().find(|e| {
+        cat(e) == Some("batch_drain")
+            && arg_str(e, "model") == Some(model)
+            && span_f64(e, "ts").is_some_and(|t| (t - q_end).abs() <= TS_EPS_US)
+    }) else {
+        return false;
+    };
+    let (Some(b_ts), Some(b_dur)) = (span_f64(b, "ts"), span_f64(b, "dur")) else {
+        return false;
+    };
+    // at least one per-node exec span nested inside the batch drain
+    let has_exec = events.iter().any(|e| {
+        cat(e) == Some("exec_node")
+            && arg_str(e, "model") == Some(model)
+            && span_f64(e, "ts").is_some_and(|t| t + TS_EPS_US >= b_ts)
+            && span_f64(e, "ts").zip(span_f64(e, "dur")).is_some_and(|(t, d)| {
+                t + d <= b_ts + b_dur + TS_EPS_US
+            })
+    });
+    // the request envelope covers the whole batch
+    has_exec && r_ts <= b_ts + TS_EPS_US && r_ts + r_dur + TS_EPS_US >= b_ts + b_dur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: SpanKind, ts_us: f64, dur_us: f64, model: u16, detail: u64) -> TraceEvent {
+        TraceEvent {
+            kind,
+            ts_us,
+            dur_us,
+            tid: 1,
+            model,
+            detail,
+        }
+    }
+
+    fn meta() -> Vec<TraceModelMeta> {
+        vec![TraceModelMeta {
+            name: "mcunet-standard".into(),
+            nodes: vec!["conv3x3", "relu", "dense"],
+        }]
+    }
+
+    /// A minimal complete request: wait 10..20, batch 20..50 with one
+    /// node span inside, respond after, request envelope 10..55.
+    fn complete_request() -> Vec<TraceEvent> {
+        vec![
+            ev(SpanKind::QueueWait, 10.0, 10.0, 0, 42),
+            ev(SpanKind::BatchDrain, 20.0, 30.0, 0, 2),
+            ev(SpanKind::ExecNode, 21.0, 8.0, 0, 0),
+            ev(SpanKind::ExecNode, 29.5, 15.0, 0, 2),
+            ev(SpanKind::Respond, 50.0, 4.0, 0, 2),
+            ev(SpanKind::Request, 10.0, 45.0, 0, 42),
+        ]
+    }
+
+    #[test]
+    fn ring_preserves_order_and_wraps() {
+        let mut r = TraceRing::with_capacity(3);
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(ev(SpanKind::Request, i as f64, 1.0, 0, i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let out = r.drain();
+        let ids: Vec<u64> = out.iter().map(|e| e.detail).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest-first after wrap");
+        assert!(r.is_empty());
+        assert_eq!(r.drain().len(), 0);
+    }
+
+    #[test]
+    fn tracer_records_and_resets_without_regrowing() {
+        let mut t = ExecTracer::with_capacity(Instant::now(), 2);
+        t.node_start(0, "a");
+        t.node_end(0, "a");
+        t.node_start(1, "b");
+        t.node_end(1, "b");
+        t.node_start(2, "c");
+        t.node_end(2, "c");
+        assert_eq!(t.timings().len(), 2, "third timing must drop, not grow");
+        assert_eq!(t.dropped(), 1);
+        assert_eq!(t.timings()[0].node, 0);
+        assert!(t.timings().iter().all(|n| n.start_us >= 0.0 && n.dur_us >= 0.0));
+        let cap0 = t.timings.capacity();
+        t.reset();
+        assert!(t.timings().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.timings.capacity(), cap0);
+    }
+
+    #[test]
+    fn chrome_export_validates() {
+        let j = chrome_trace_json(&complete_request(), &meta());
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("valid json");
+        validate_chrome_trace(&parsed).expect("complete trace");
+        // node names resolve through the model metadata
+        assert!(text.contains("\"conv3x3\""));
+        assert!(text.contains("\"dense\""));
+        assert!(text.contains("mcunet-standard"));
+    }
+
+    #[test]
+    fn validation_rejects_incomplete_traces() {
+        // no exec span inside the batch window
+        let mut evs = complete_request();
+        evs.retain(|e| e.kind != SpanKind::ExecNode);
+        let j = chrome_trace_json(&evs, &meta());
+        assert!(validate_chrome_trace(&j).is_err());
+        // queue-wait does not butt up against any batch drain
+        let mut evs = complete_request();
+        evs[0].dur_us = 3.0;
+        let j = chrome_trace_json(&evs, &meta());
+        assert!(validate_chrome_trace(&j).is_err());
+        // empty trace
+        let j = chrome_trace_json(&[], &meta());
+        assert!(validate_chrome_trace(&j).is_err());
+        // negative duration
+        let mut evs = complete_request();
+        evs[1].dur_us = -1.0;
+        let j = chrome_trace_json(&evs, &meta());
+        assert!(validate_chrome_trace(&j).is_err());
+    }
+}

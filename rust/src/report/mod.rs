@@ -208,6 +208,30 @@ pub fn tuned_summary_json(rows: &[crate::harness::TunedCmpRow]) -> String {
         .to_string()
 }
 
+/// Machine-readable dump of the serving engine's final
+/// [`crate::coordinator::ServerStats`] — shed/error counters, the
+/// latency split and the batch-size histogram. Emitted by
+/// `convbench serve` on shutdown next to the trace/metrics artifacts.
+pub fn server_stats_json(stats: &crate::coordinator::ServerStats) -> String {
+    use crate::util::json::Json;
+    let hist: Vec<Json> = stats.batch_hist.iter().map(|&c| Json::Num(c as f64)).collect();
+    Json::obj()
+        .field("served", stats.served)
+        .field("errors", stats.errors)
+        .field("shed", stats.shed)
+        .field("p50_us", stats.p50_us)
+        .field("p99_us", stats.p99_us)
+        .field("mean_us", stats.mean_us)
+        .field("queue_p50_us", stats.queue_p50_us)
+        .field("queue_p99_us", stats.queue_p99_us)
+        .field("queue_mean_us", stats.queue_mean_us)
+        .field("exec_p50_us", stats.exec_p50_us)
+        .field("exec_p99_us", stats.exec_p99_us)
+        .field("exec_mean_us", stats.exec_mean_us)
+        .field("batch_hist", Json::Arr(hist))
+        .to_string()
+}
+
 /// Write a string to a file, creating parent directories.
 pub fn write_report(path: &str, content: &str) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
@@ -264,6 +288,35 @@ mod tests {
         let pts = fig4_frequency_sweep(&[10.0, 80.0]);
         let csv = fig4_csv(&pts);
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn server_stats_json_parses_back() {
+        use crate::coordinator::ServerStats;
+        use crate::util::json::Json;
+        let stats = ServerStats {
+            served: 12,
+            errors: 1,
+            shed: 2,
+            p50_us: 410.0,
+            p99_us: 900.0,
+            mean_us: 450.5,
+            queue_p50_us: 100.0,
+            queue_p99_us: 220.0,
+            queue_mean_us: 120.0,
+            exec_p50_us: 300.0,
+            exec_p99_us: 700.0,
+            exec_mean_us: 330.5,
+            batch_hist: vec![4, 2, 0, 1],
+        };
+        let j = Json::parse(&server_stats_json(&stats)).expect("valid json");
+        assert_eq!(j.get("served").and_then(|v| v.as_i64()), Some(12));
+        assert_eq!(j.get("errors").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(j.get("shed").and_then(|v| v.as_i64()), Some(2));
+        let hist = j.get("batch_hist").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(hist.len(), 4);
+        assert_eq!(hist[0].as_i64(), Some(4));
+        assert!((j.get("mean_us").unwrap().as_f64().unwrap() - 450.5).abs() < 1e-9);
     }
 
     #[test]

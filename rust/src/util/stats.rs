@@ -174,6 +174,36 @@ impl Reservoir {
         self.samples.is_empty()
     }
 
+    /// Merge another reservoir into this one (cross-worker stat
+    /// aggregation — the inference server merges per-worker shards at
+    /// scrape time).
+    ///
+    /// The exact quantities stay exact: `seen` and the running sum add,
+    /// so [`Reservoir::mean`] after a merge equals the mean over the
+    /// union of both full streams. The retained subsample follows a
+    /// deterministic policy: `other`'s retained samples are offered
+    /// through this reservoir's seeded Algorithm-R machinery — appended
+    /// verbatim while under capacity, then each replaces a
+    /// PRNG-selected slot with probability `cap / seen_so_far` against
+    /// the already-merged population. Order statistics remain subsample
+    /// estimates exactly as for a single reservoir, results are
+    /// identical across runs for identical inputs, and capacity never
+    /// regrows.
+    pub fn merge(&mut self, other: &Reservoir) {
+        self.sum += other.sum;
+        self.seen += other.seen;
+        for &v in other.samples() {
+            if self.samples.len() < self.cap {
+                self.samples.push(v);
+            } else {
+                let j = self.rng.below(self.seen);
+                if (j as usize) < self.cap {
+                    self.samples[j as usize] = v;
+                }
+            }
+        }
+    }
+
     /// The retained samples (unordered).
     pub fn samples(&self) -> &[f64] {
         &self.samples
@@ -298,5 +328,67 @@ mod tests {
     #[should_panic(expected = "capacity must be positive")]
     fn reservoir_rejects_zero_capacity() {
         Reservoir::new(0, 1);
+    }
+
+    #[test]
+    fn reservoir_merge_mean_is_exact_past_capacity() {
+        let mut a = Reservoir::new(8, 1);
+        for v in 1..=100 {
+            a.offer(v as f64);
+        }
+        let mut b = Reservoir::new(8, 2);
+        for v in 101..=300 {
+            b.offer(v as f64);
+        }
+        a.merge(&b);
+        // both reservoirs are far past capacity, yet the merged mean is
+        // the exact mean of the union of both streams
+        assert_eq!(a.seen(), 300);
+        assert!((a.mean() - 150.5).abs() < 1e-9);
+        assert_eq!(a.len(), 8, "merge must not grow the retained set");
+    }
+
+    #[test]
+    fn reservoir_merge_handles_empty_edges() {
+        // empty into empty
+        let mut a = Reservoir::new(4, 1);
+        a.merge(&Reservoir::new(4, 2));
+        assert_eq!(a.seen(), 0);
+        assert_eq!(a.mean(), 0.0);
+        assert!(a.is_empty());
+        // non-empty into empty: retained verbatim, mean exact
+        a.offer(2.0);
+        a.offer(4.0);
+        let mut c = Reservoir::new(4, 3);
+        c.merge(&a);
+        assert_eq!(c.samples(), &[2.0, 4.0]);
+        assert!((c.mean() - 3.0).abs() < 1e-12);
+        // empty other is a no-op
+        c.merge(&Reservoir::new(4, 4));
+        assert_eq!(c.seen(), 2);
+        assert_eq!(c.samples(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn reservoir_merge_is_deterministic_and_bounded() {
+        let build = || {
+            let mut r = Reservoir::new(4, 10);
+            let mut big = Reservoir::new(4, 11);
+            for v in 0..1000 {
+                big.offer(v as f64);
+            }
+            r.offer(1.0);
+            r.merge(&big);
+            r
+        };
+        let x = build();
+        let y = build();
+        assert_eq!(x.samples(), y.samples(), "seeded merge must be reproducible");
+        assert_eq!(x.seen(), 1001);
+        assert_eq!(x.len(), 4);
+        let cap0 = x.samples.capacity();
+        let mut z = build();
+        z.merge(&build());
+        assert_eq!(z.samples.capacity(), cap0, "merge must never regrow capacity");
     }
 }
