@@ -77,6 +77,21 @@ echo "==> smoke: traced serve + observability artifact validation"
 ./target/release/convbench check-obs \
     --trace results/ci/trace.json --metrics results/ci/metrics.json
 
+echo "==> smoke: seeded chaos (supervised workers, breaker, exactly-one-reply)"
+# deterministic fault storm: workers panic/stall/fail mid-batch, the
+# supervisor respawns them with backoff and the per-model breaker
+# degrades to the compiled-default plan. The harness itself asserts the
+# invariants and exits non-zero on any violation: every accepted request
+# gets exactly one reply, the metrics snapshot conserves
+# served + shed + errors == submitted, and the respawn/breaker counters
+# are nonzero (--min-respawns; panic_ppm at 30% with breaker threshold 1
+# makes a zero-trip run implausible by construction)
+./target/release/convbench chaos --seed 7 --requests 96 --workers 2 \
+    --max-batch 4 --deadline-us 400 --queue-depth 64 \
+    --panic-ppm 300000 --delay-ppm 100000 --error-ppm 100000 --fault-delay-us 100 \
+    --breaker-threshold 1 --min-respawns 1 \
+    --metrics-out results/ci/chaos_metrics.json
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "==> full: convbench tune over the full Table 2 plans"
     ./target/release/convbench tune --objective energy --out results/ci-full

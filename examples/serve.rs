@@ -2,17 +2,26 @@
 //! deadline-aware micro-batched inference service and fire a random
 //! request mix — the L3 "router" loop with per-model simulated MCU cost
 //! accounting, queue-wait/execution latency split and batch-size
-//! histogram.
+//! histogram. Observability flags work here too: `--trace-sample 1
+//! --trace-out trace.json` exports a Perfetto-loadable span tree,
+//! `--metrics-out metrics.json` the counter/histogram snapshot. The
+//! fault-tolerance knobs are also live: `--panic-ppm 200000` makes one
+//! in five batches kill its worker, and the supervisor/breaker keep the
+//! demo serving anyway (see `convbench chaos` for the asserting
+//! harness).
 //!
 //! Run: `cargo run --release --example serve -- [--requests N] [--workers W]
-//!       [--max-batch B] [--deadline-us D] [--queue-depth Q]`
+//!       [--max-batch B] [--deadline-us D] [--queue-depth Q]
+//!       [--trace-sample N] [--trace-out F] [--metrics-out F] [--stats-out F]
+//!       [--breaker-threshold K] [--panic-ppm P] [--delay-ppm P] [--error-ppm P]`
 
-use convbench::coordinator::{serve_cli, ServeOptions};
+use convbench::coordinator::{serve_cli, ServeOptions, ServeOutputs};
 use convbench::util::cli::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let requests = args.get_or("requests", 200usize);
     let workers = args.get_or("workers", 4usize);
-    serve_cli(requests, workers, ServeOptions::from_args(&args));
+    let opts = ServeOptions::from_args(&args);
+    serve_cli(requests, workers, opts, &ServeOutputs::from_args(&args));
 }

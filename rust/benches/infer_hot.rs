@@ -2,7 +2,7 @@
 //! trajectory (`results/BENCH_infer.json`), which future PRs regress
 //! against.
 //!
-//! Four headline quantities:
+//! Headline quantities:
 //!
 //! 1. **steady-state allocations** of `Model::forward_in` inside a
 //!    pre-planned [`Workspace`] — pinned to **zero** with a counting
@@ -36,7 +36,12 @@
 //!    capacity), and a `DriftMonitor` over the whole zoo accumulates
 //!    three traced runs per model — every node's measured-ns /
 //!    predicted-cycles ratio must be finite, and the model-wide
-//!    measured-vs-analytic linear fit is recorded in the JSON.
+//!    measured-vs-analytic linear fit is recorded in the JSON;
+//! 7. **chaos-harness overhead** — served throughput with an
+//!    armed-but-benign `FaultPlan` (SeededFaults on the hot path,
+//!    faults effectively never firing) vs the faults-disabled baseline
+//!    (NoopFaults monomorphization); the ratio is the cost of leaving
+//!    the chaos scaffolding compiled in.
 //!
 //! Run: `cargo bench --bench infer_hot` (CI runs it with
 //! `CONVBENCH_QUICK=1`; see `ci.sh`). Writes `results/BENCH_infer.json`
@@ -318,13 +323,15 @@ fn main() {
     // one-request-per-engine-call serving) and a micro-batching one;
     // async submission so batches actually form
     let serve_n: usize = if std::env::var("CONVBENCH_QUICK").is_ok() { 64 } else { 256 };
-    let served_rps = |max_batch: usize| -> f64 {
+    let served_rps = |max_batch: usize, faults: convbench::util::fault::FaultPlan| -> f64 {
         use convbench::coordinator::{InferenceServer, Request, ServeOptions};
         let opts = ServeOptions {
             max_batch,
             deadline_us: 200,
             queue_depth: serve_n,
             trace_sample: 0,
+            faults,
+            ..ServeOptions::default()
         };
         let server = InferenceServer::start_with(
             vec![mcunet(Primitive::DepthwiseSeparable, 42)],
@@ -348,8 +355,25 @@ fn main() {
         server.shutdown();
         serve_n as f64 / secs
     };
-    let served_seq_rps = served_rps(1);
-    let served_batch_rps = served_rps(BATCH);
+    let served_seq_rps = served_rps(1, convbench::util::fault::FaultPlan::default());
+    let served_batch_rps = served_rps(BATCH, convbench::util::fault::FaultPlan::default());
+
+    // --- 3c. chaos-harness overhead -----------------------------------
+    // the fault injector is a monomorphized trait: with the plan
+    // disabled the workers compile against NoopFaults (identically the
+    // baseline above), and even *armed* the per-site cost is one PRNG
+    // draw. Arm a benign plan (one-in-a-million zero-length delay, so
+    // SeededFaults is on the hot path but effectively never fires) and
+    // record the served-throughput ratio vs the disabled baseline —
+    // the figure the chaos harness costs when you leave it compiled in
+    let benign = convbench::util::fault::FaultPlan {
+        seed: 7,
+        delay_ppm: 1,
+        delay_us: 0,
+        ..convbench::util::fault::FaultPlan::default()
+    };
+    let served_chaos_armed_rps = served_rps(BATCH, benign);
+    let chaos_armed_overhead = served_batch_rps / served_chaos_armed_rps;
 
     // --- 4. warm analytic tune ----------------------------------------
     let t1 = Instant::now();
@@ -487,6 +511,8 @@ fn main() {
         .field("served_seq_rps", served_seq_rps)
         .field("served_batch8_rps", served_batch_rps)
         .field("served_batch_speedup", served_batch_rps / served_seq_rps)
+        .field("served_chaos_armed_rps", served_chaos_armed_rps)
+        .field("chaos_armed_overhead", chaos_armed_overhead)
         .field("traced_off_steady_state_allocs", traced_off_steady_allocs / iters)
         .field("traced_on_steady_state_allocs", traced_on_steady_allocs / iters)
         .field("drift_fit_ns_per_cycle", dfit.a)
@@ -523,6 +549,10 @@ fn main() {
          (max-batch 1) — {:.2}x",
         batch_seq_ns_per_inf / batch_ns_per_inf,
         served_batch_rps / served_seq_rps
+    );
+    println!(
+        "chaos: armed-but-benign fault plan serves {served_chaos_armed_rps:.0} req/s vs \
+         {served_batch_rps:.0} req/s disabled — {chaos_armed_overhead:.3}x overhead"
     );
     println!(
         "tracing: run_in_traced 0 allocs with the no-op sink and with a live tracer; \

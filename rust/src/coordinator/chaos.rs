@@ -1,0 +1,393 @@
+//! Seeded chaos harness for the serving engine (`convbench chaos`).
+//!
+//! Deploys tuned models (so every deployment carries a compiled-default
+//! fallback plan for the circuit breaker to degrade to), fires a seeded
+//! request storm through the public [`InferenceServer::submit`] API
+//! while a [`FaultPlan`](crate::util::fault::FaultPlan) injects worker
+//! panics, stalls and error returns, and then asserts the engine's
+//! fault-tolerance invariants:
+//!
+//! * **exactly-one-reply** — every accepted request receives exactly
+//!   one reply (success or typed error), even when its worker dies;
+//! * **conservation** — `served + shed + errors == submitted` on the
+//!   exported metrics snapshot
+//!   ([`validate_request_conservation`](super::validate_request_conservation));
+//! * **bounded supervision** — respawn and breaker-trip counters meet
+//!   the run's configured floors (CI pins nonzero floors so the smoke
+//!   actually exercised the supervisor) and every caught panic is paired
+//!   with a respawn.
+//!
+//! Retriable failures are resubmitted under the run's
+//! [`RetryPolicy`] attempt budget with the *same request id*, which is
+//! what drives repeat offenders into quarantine. With an inert fault
+//! plan the harness degenerates to a plain load test — useful as the
+//! baseline leg of the chaos-overhead benchmark.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::analytic::Primitive;
+use crate::coordinator::server::{
+    InferenceServer, Request, Response, RetryPolicy, ServeError, ServeOptions,
+};
+use crate::mcu::McuConfig;
+use crate::models::mcunet;
+use crate::obs::validate_metrics_json;
+use crate::tuner::{Objective, TuningCache};
+use crate::util::cli::Args;
+use crate::util::prng::Rng;
+
+use super::validate_request_conservation;
+
+/// One chaos run's configuration: storm shape, invariant floors, and
+/// the serving/fault knobs (the [`ServeOptions`] carry the
+/// [`FaultPlan`](crate::util::fault::FaultPlan)).
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// Seed for the request storm (model choice and payloads); also the
+    /// default fault seed when `--fault-seed` is not given.
+    pub seed: u64,
+    /// Number of requests in the storm.
+    pub requests: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Fail the run unless at least this many worker respawns happened.
+    pub min_respawns: u64,
+    /// Fail the run unless at least this many breaker trips happened.
+    pub min_breaker_trips: u64,
+    /// Where to write the post-run metrics snapshot (JSON), if anywhere.
+    pub metrics_out: Option<String>,
+    /// Resubmission budget for retriable failures (same request id, so
+    /// repeat crashers walk into quarantine).
+    pub retry: RetryPolicy,
+    /// Serving knobs, including the fault plan.
+    pub serve: ServeOptions,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            requests: 64,
+            workers: 2,
+            min_respawns: 0,
+            min_breaker_trips: 0,
+            metrics_out: None,
+            retry: RetryPolicy::default(),
+            serve: ServeOptions::default(),
+        }
+    }
+}
+
+impl ChaosOptions {
+    /// Parse `--seed`, `--requests`, `--workers`, `--min-respawns`,
+    /// `--min-breaker-trips` and `--metrics-out` on top of the full
+    /// [`ServeOptions::from_args`] / [`RetryPolicy::from_args`] flag
+    /// sets. When no fault rate is given the storm arms a default mixed
+    /// plan (panics, delays and error returns) — a chaos run with no
+    /// faults would prove nothing.
+    pub fn from_args(args: &Args) -> Self {
+        let seed = args.get_or("seed", 7u64);
+        let mut serve = ServeOptions::from_args(args);
+        if !serve.faults.enabled() {
+            serve.faults.panic_ppm = 200_000;
+            serve.faults.delay_ppm = 100_000;
+            serve.faults.error_ppm = 100_000;
+            serve.faults.delay_us = 100;
+        }
+        if args.get("fault-seed").is_none() {
+            serve.faults.seed = seed;
+        }
+        Self {
+            seed,
+            requests: args.get_or("requests", 64usize),
+            workers: args.get_or("workers", 2usize),
+            min_respawns: args.get_or("min-respawns", 0u64),
+            min_breaker_trips: args.get_or("min-breaker-trips", 0u64),
+            metrics_out: args.get("metrics-out").map(|s| s.to_string()),
+            retry: RetryPolicy::from_args(args),
+            serve,
+        }
+    }
+}
+
+/// Outcome of one chaos run: client-side reply accounting, the final
+/// supervision counters, and every invariant violation observed.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    /// Requests submitted (initial storm + retries).
+    pub submitted: u64,
+    /// Replies that carried a successful [`Response`].
+    pub ok: u64,
+    /// Replies that carried a typed error and were not retried again.
+    pub failed: u64,
+    /// Resubmissions of retriable failures.
+    pub retried: u64,
+    /// Worker panics caught by the supervisor.
+    pub worker_panics: u64,
+    /// Worker respawns after caught panics.
+    pub respawns: u64,
+    /// Requests quarantined after crashing two workers.
+    pub quarantined: u64,
+    /// Circuit-breaker trips to the fallback plan.
+    pub breaker_trips: u64,
+    /// Batches served degraded on the compiled-default fallback.
+    pub degraded: u64,
+    /// Every invariant violation observed; empty means the run passed.
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    /// True when no invariant was violated.
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// How long the harness waits for any single reply before declaring the
+/// exactly-one-reply invariant broken. Generous: a violation here means
+/// a reply was *lost*, not slow.
+const REPLY_WAIT: Duration = Duration::from_secs(30);
+
+type InFlight = (u64, String, mpsc::Receiver<Result<Response, ServeError>>);
+
+/// Run one seeded chaos storm and collect the report. Pure library
+/// entry point — [`chaos_cli`] adds the printing and exit codes, tests
+/// call this directly.
+pub fn run_chaos(opts: &ChaosOptions) -> ChaosReport {
+    let mut report = ChaosReport::default();
+    let cfg = McuConfig::default();
+    let variants = [Primitive::Standard, Primitive::Shift, Primitive::DepthwiseSeparable];
+    let models: Vec<_> = variants.iter().map(|&p| mcunet(p, 42)).collect();
+    let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    let input_len = models[0].input_shape.len();
+    let mut cache = TuningCache::in_memory();
+    let mut server = InferenceServer::start_tuned_with(
+        models,
+        opts.workers,
+        &cfg,
+        Objective::Latency,
+        &mut cache,
+        opts.serve,
+    );
+
+    let mut rng = Rng::new(opts.seed);
+    let submit = |server: &InferenceServer,
+                      report: &mut ChaosReport,
+                      id: u64,
+                      model: &str,
+                      rng: &mut Rng|
+     -> Option<InFlight> {
+        let mut input = vec![0i8; input_len];
+        rng.fill_i8(&mut input, -64, 63);
+        report.submitted += 1;
+        match server.submit(Request::new(id, model, input)) {
+            Ok(rx) => Some((id, model.to_string(), rx)),
+            Err(e) => {
+                report
+                    .violations
+                    .push(format!("request {id}: refused outside shutdown: {e}"));
+                None
+            }
+        }
+    };
+
+    let mut round: Vec<InFlight> = Vec::with_capacity(opts.requests);
+    for i in 0..opts.requests {
+        let model = names[rng.below(names.len() as u64) as usize].clone();
+        if let Some(f) = submit(&server, &mut report, i as u64, &model, &mut rng) {
+            round.push(f);
+        }
+    }
+
+    // collect replies; retriable failures get resubmitted with the SAME
+    // id up to the retry attempt budget — repeat crashers must end in
+    // quarantine, not in an infinite crash loop
+    let attempts = opts.retry.max_attempts.max(1);
+    for attempt in 0..attempts {
+        let mut next = Vec::new();
+        for (id, model, rx) in round {
+            let reply = match rx.recv_timeout(REPLY_WAIT) {
+                Ok(r) => r,
+                Err(_) => {
+                    report.violations.push(format!(
+                        "request {id}: no reply within {REPLY_WAIT:?} — exactly-one-reply broken"
+                    ));
+                    continue;
+                }
+            };
+            if rx.try_recv().is_ok() {
+                report.violations.push(format!(
+                    "request {id}: a second reply arrived — exactly-one-reply broken"
+                ));
+            }
+            match reply {
+                Ok(r) => {
+                    if r.id != id {
+                        report
+                            .violations
+                            .push(format!("request {id}: reply carries id {}", r.id));
+                    }
+                    report.ok += 1;
+                }
+                Err(e) if e.retriable() && attempt + 1 < attempts => {
+                    report.retried += 1;
+                    if let Some(f) = submit(&server, &mut report, id, &model, &mut rng) {
+                        next.push(f);
+                    }
+                }
+                Err(_) => report.failed += 1,
+            }
+        }
+        round = next;
+        if round.is_empty() {
+            break;
+        }
+    }
+
+    server.join();
+    let metrics = server.metrics_json();
+    if let Err(e) = validate_request_conservation(&metrics) {
+        report.violations.push(e);
+    }
+    if let Some(path) = &opts.metrics_out {
+        super::emit_artifact(path, &metrics.to_string(), "chaos metrics json");
+    }
+    let stats = server.shutdown();
+    report.worker_panics = stats.worker_panics;
+    report.respawns = stats.respawns;
+    report.quarantined = stats.quarantined;
+    report.breaker_trips = stats.breaker_trips;
+    report.degraded = stats.degraded_batches;
+    if stats.served > 0 {
+        if let Err(e) = validate_metrics_json(&metrics) {
+            report.violations.push(format!("metrics snapshot invalid: {e}"));
+        }
+    }
+    if report.ok != stats.served {
+        report.violations.push(format!(
+            "client saw {} successful replies but the server counted {} served",
+            report.ok, stats.served
+        ));
+    }
+    if stats.respawns != stats.worker_panics {
+        report.violations.push(format!(
+            "{} caught panics but {} respawns — supervision must pair them",
+            stats.worker_panics, stats.respawns
+        ));
+    }
+    if stats.respawns < opts.min_respawns {
+        report.violations.push(format!(
+            "only {} respawns, floor is {} — the storm never exercised the supervisor",
+            stats.respawns, opts.min_respawns
+        ));
+    }
+    if stats.breaker_trips < opts.min_breaker_trips {
+        report.violations.push(format!(
+            "only {} breaker trips, floor is {} — degradation never engaged",
+            stats.breaker_trips, opts.min_breaker_trips
+        ));
+    }
+    report
+}
+
+/// CLI entry point for `convbench chaos`: run the storm, print the
+/// report, exit 1 on any invariant violation.
+pub fn chaos_cli(args: &Args) {
+    let opts = ChaosOptions::from_args(args);
+    let f = opts.serve.faults;
+    println!(
+        "chaos: seed {}, {} requests, {} workers, faults panic {} / delay {} / error {} ppm \
+         (delay {} µs), breaker threshold {}",
+        opts.seed,
+        opts.requests,
+        opts.workers,
+        f.panic_ppm,
+        f.delay_ppm,
+        f.error_ppm,
+        f.delay_us,
+        opts.serve.breaker_threshold
+    );
+    let report = run_chaos(&opts);
+    println!(
+        "chaos: {} submitted ({} retries), {} ok, {} failed; {} panics, {} respawns, \
+         {} quarantined, {} breaker trips, {} degraded batches",
+        report.submitted,
+        report.retried,
+        report.ok,
+        report.failed,
+        report.worker_panics,
+        report.respawns,
+        report.quarantined,
+        report.breaker_trips,
+        report.degraded
+    );
+    if report.passed() {
+        println!(
+            "chaos: PASS — exactly-one-reply and served + shed + errors == submitted held"
+        );
+    } else {
+        for v in report.violations.iter().take(10) {
+            eprintln!("chaos: VIOLATION: {v}");
+        }
+        if report.violations.len() > 10 {
+            eprintln!("chaos: … and {} more", report.violations.len() - 10);
+        }
+        eprintln!("chaos: FAIL ({} violations)", report.violations.len());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fault::FaultPlan;
+
+    #[test]
+    fn seeded_storm_upholds_the_invariants() {
+        let opts = ChaosOptions {
+            seed: 7,
+            requests: 24,
+            workers: 2,
+            retry: RetryPolicy { max_attempts: 2, ..RetryPolicy::default() },
+            serve: ServeOptions {
+                max_batch: 2,
+                deadline_us: 200,
+                queue_depth: 32,
+                breaker_threshold: 1,
+                respawn_base_us: 50,
+                respawn_max_us: 400,
+                faults: FaultPlan {
+                    seed: 7,
+                    panic_ppm: 200_000,
+                    delay_ppm: 50_000,
+                    error_ppm: 100_000,
+                    delay_us: 50,
+                },
+                ..ServeOptions::default()
+            },
+            ..ChaosOptions::default()
+        };
+        let report = run_chaos(&opts);
+        assert!(report.passed(), "violations: {:?}", report.violations);
+        assert_eq!(report.ok + report.failed + report.retried, report.submitted);
+        assert!(report.submitted >= 24);
+    }
+
+    #[test]
+    fn an_inert_fault_plan_is_a_clean_load_test() {
+        let opts = ChaosOptions {
+            seed: 11,
+            requests: 12,
+            workers: 1,
+            serve: ServeOptions { max_batch: 2, ..ServeOptions::default() },
+            ..ChaosOptions::default()
+        };
+        let report = run_chaos(&opts);
+        assert!(report.passed(), "violations: {:?}", report.violations);
+        assert_eq!(report.ok, 12, "nothing injects, everything serves");
+        assert_eq!(report.worker_panics, 0);
+        assert_eq!(report.respawns, 0);
+        assert_eq!(report.retried, 0);
+    }
+}

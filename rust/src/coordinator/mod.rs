@@ -1,17 +1,22 @@
 //! L3 coordinator: the deployment pipeline (float model → calibrated int8
 //! engine model), the deadline-aware micro-batched inference service
-//! ([`server`]), and the cross-layer validation against the JAX/Pallas
-//! HLO artifacts.
+//! ([`server`]), the seeded chaos harness that proves the service's
+//! fault-tolerance invariants ([`chaos`]), and the cross-layer
+//! validation against the JAX/Pallas HLO artifacts.
 
+pub mod chaos;
 pub mod pipeline;
 pub mod server;
 pub mod validate;
 
+pub use chaos::{chaos_cli, ChaosOptions, ChaosReport};
 pub use pipeline::{
     FloatAddConv, FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift,
 };
-pub use server::{InferenceServer, Request, Response, ServeOptions, ServerStats};
-pub use validate::{artifact_inputs, kernel_layer, validate_cli};
+pub use server::{
+    InferenceServer, Request, Response, RetryPolicy, ServeError, ServeOptions, ServerStats,
+};
+pub use validate::{artifact_inputs, kernel_layer, validate_cli, validate_request_conservation};
 #[cfg(feature = "pjrt")]
 pub use validate::{validate_all, validate_primitive};
 
@@ -89,14 +94,15 @@ pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions, outs: &ServeOutpu
     }
     let mut per_model: std::collections::BTreeMap<String, (u64, f64, f64)> = Default::default();
     for (i, model, rx) in in_flight {
-        match rx.recv().map_err(|_| "server shut down".to_string()).and_then(|r| r) {
-            Ok(r) => {
+        match rx.recv() {
+            Ok(Ok(r)) => {
                 let e = per_model.entry(model).or_default();
                 e.0 += 1;
                 e.1 += r.mcu_latency_s;
                 e.2 += r.mcu_energy_mj;
             }
-            Err(e) => eprintln!("request {i} failed: {e}"),
+            Ok(Err(e)) => eprintln!("request {i} failed: {e}"),
+            Err(_) => eprintln!("request {i} failed: server shut down"),
         }
     }
     // Quiesce the workers first: trace rings and drift accumulators are

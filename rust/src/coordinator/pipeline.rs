@@ -7,8 +7,8 @@
 
 use crate::mcu::McuConfig;
 use crate::nn::{
-    uniform_shifts, AddConv, BatchNorm, BnLayer, ExecPlan, Graph, Layer, Model, QuantConv,
-    QuantDense, QuantDepthwise, Shape, ShiftConv, Workspace,
+    uniform_shifts, AddConv, BatchNorm, BnLayer, ExecPlan, Graph, Layer, Model, PlanPair,
+    QuantConv, QuantDense, QuantDepthwise, Shape, ShiftConv, Workspace,
 };
 use crate::obs::{plan_node_costs, NodeCost};
 use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
@@ -246,6 +246,26 @@ impl FloatModel {
         let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
         let workspace = schedule.workspace_batch(&model, max_batch);
         (model, schedule, workspace, stats)
+    }
+
+    /// [`FloatModel::deploy_tuned`] plus the serving layer's degradation
+    /// pair: the tuned schedule compiled as the primary executor and
+    /// the paper-default SIMD plan as the circuit breaker's known-good
+    /// fallback ([`PlanPair`]). Both plans are compiled from the same
+    /// deployed model, so degrading under repeated worker panics
+    /// changes latency, never logits — the bit-exactness the serving
+    /// breaker relies on.
+    pub fn deploy_resilient(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, PlanPair, TuneStats) {
+        let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
+        let primary = schedule.compile(&model);
+        let fallback = ExecPlan::compile_default(&model, true);
+        (model, schedule, PlanPair::tuned(primary, fallback), stats)
     }
 
     /// [`FloatModel::deploy`] plus the observability hand-off: the
@@ -740,6 +760,27 @@ mod tests {
             want.extend_from_slice(&schedule.run(&qm, x, &mut NoopMonitor).data);
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn deploy_resilient_fallback_is_bit_exact_with_the_tuned_primary() {
+        let mut rng = Rng::new(21);
+        let fm = small_float_model(&mut rng);
+        let calib = calib_set(&mut rng, &fm, 4);
+        let cfg = McuConfig::default();
+        let mut cache = TuningCache::in_memory();
+        let (qm, schedule, pair, _) =
+            fm.deploy_resilient(&calib, &cfg, Objective::Latency, &mut cache);
+        assert!(pair.has_fallback(), "tuned deployments carry a degradation target");
+        assert_eq!(schedule.layers.len(), qm.layers.len());
+        let mut ws_primary = Workspace::for_plan(pair.primary());
+        let mut ws_fallback = Workspace::for_plan(pair.fallback().unwrap());
+        for x in &calib {
+            let xi = crate::nn::Tensor::from_f32(fm.input_shape, qm.input_q, x);
+            let a = pair.select(false).run_in(&xi, &mut ws_primary, &mut NoopMonitor);
+            let b = pair.select(true).run_in(&xi, &mut ws_fallback, &mut NoopMonitor);
+            assert_eq!(a.data, b.data, "degraded serving must not change logits");
+        }
     }
 
     #[test]

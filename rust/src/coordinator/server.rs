@@ -50,22 +50,38 @@
 //! feed a [`DriftMonitor`] that re-checks the paper's analytic-cycles ↔
 //! measured-latency linearity live ([`InferenceServer::drift_report`]).
 //!
+//! The server is also **fault tolerant** (docs/ARCHITECTURE.md "Fault
+//! tolerance"): every drained batch runs under `catch_unwind` behind a
+//! reply guard, so a worker panic answers every in-flight lane with a
+//! typed [`ServeError`] instead of dropping reply channels; the worker
+//! then respawns after a seeded jittered [`Backoff`] delay. Requests
+//! that crash workers repeatedly are quarantined
+//! ([`ServeError::Poisoned`]), a per-model circuit breaker degrades a
+//! tuned plan to its compiled default ([`PlanPair`]) after repeated
+//! panics, and a zero-cost [`FaultInjector`] hook (the `TraceSink`
+//! pattern again) lets `convbench chaos` inject deterministic panics,
+//! delays and error returns to prove the exactly-one-reply and
+//! request-conservation invariants under fire.
+//!
 //! (tokio is not in the offline vendor set — std threads + a
 //! mutex/condvar queue provide the same structure; see Cargo.toml note.)
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, Workspace};
+use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, PlanPair, Workspace};
 use crate::obs::{
     chrome_trace_json, plan_node_costs, DriftMonitor, DriftReport, ExecTracer, NodeCost, Registry,
     Shard, SpanKind, TraceEvent, TraceModelMeta, TraceRing,
 };
 use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TunedSchedule, TuningCache};
+use crate::util::backoff::Backoff;
+use crate::util::fault::{FaultAction, FaultInjector, FaultPlan, FaultSite, NoopFaults, SeededFaults};
 use crate::util::json::Json;
 use crate::util::stats::Reservoir;
 
@@ -94,7 +110,15 @@ const C_ERRORS: usize = 3;
 const C_DEADLINE_MISS: usize = 4;
 const C_TRACE_BATCHES: usize = 5;
 const C_TRACE_DROPPED: usize = 6;
+const C_WORKER_PANICS: usize = 7;
+const C_RESPAWNS: usize = 8;
+const C_QUARANTINED: usize = 9;
+const C_BREAKER_TRIPS: usize = 10;
+const C_BREAKER_PROBES: usize = 11;
+const C_BREAKER_RECOVERIES: usize = 12;
+const C_DEGRADED_BATCHES: usize = 13;
 const G_QUEUE_DEPTH: usize = 0;
+const G_BREAKER_STATE: usize = 1;
 const H_BATCH_SIZE: usize = 0;
 const H_QUEUE_DEPTH: usize = 1;
 const H_QUEUE_WAIT_US: usize = 2;
@@ -109,8 +133,15 @@ const COUNTER_NAMES: &[&str] = &[
     "deadline_miss_total",
     "trace_batches_sampled_total",
     "trace_events_dropped_total",
+    "worker_panics_total",
+    "worker_respawns_total",
+    "quarantined_total",
+    "breaker_trips_total",
+    "breaker_probes_total",
+    "breaker_recoveries_total",
+    "degraded_batches_total",
 ];
-const GAUGE_NAMES: &[&str] = &["queue_depth"];
+const GAUGE_NAMES: &[&str] = &["queue_depth", "breaker_state"];
 const HIST_NAMES: &[&str] = &[
     "batch_size",
     "queue_depth_at_admission",
@@ -120,9 +151,21 @@ const HIST_NAMES: &[&str] = &[
 ];
 
 /// The server's metric registry: shard 0 belongs to the frontend
-/// (submitter side), shard `w + 1` to worker `w`.
+/// (submitter side), shard `w + 1` to worker `w`, and the last shard
+/// (`n_workers + 1`) to the supervisor (breaker / quarantine counters
+/// and the `breaker_state` gauge, written only under the breaker lock
+/// so the one-writer-per-gauge convention holds).
 fn server_registry(n_workers: usize) -> Registry {
-    Registry::new(COUNTER_NAMES, GAUGE_NAMES, HIST_NAMES, n_workers + 1)
+    Registry::new(COUNTER_NAMES, GAUGE_NAMES, HIST_NAMES, n_workers + 2)
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked. A
+/// worker panic (real or injected) must never wedge the stats, trace or
+/// queue locks — the data is either untouched (the panic sites run
+/// outside these critical sections) or monotonic counters where a torn
+/// update is harmless.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Micro-batching and admission-control knobs for one server instance
@@ -151,19 +194,46 @@ pub struct ServeOptions {
     /// then runs the no-op sink path, which monomorphizes to the
     /// untraced code.
     pub trace_sample: u64,
+    /// Consecutive primary-plan worker panics before a model's circuit
+    /// breaker trips to the compiled-default fallback plan.
+    pub breaker_threshold: usize,
+    /// How long a tripped breaker serves the fallback before a half-open
+    /// probe re-tries the tuned primary (µs).
+    pub breaker_cooldown_us: u64,
+    /// First respawn delay after a worker panic (µs); doubles per
+    /// consecutive panic with jitter ([`Backoff`]).
+    pub respawn_base_us: u64,
+    /// Respawn-delay ceiling (µs).
+    pub respawn_max_us: u64,
+    /// Deterministic fault injection for chaos runs. The default
+    /// ([`FaultPlan::disabled`]) spawns workers on the no-op injector
+    /// path, which monomorphizes to the fault-free worker loop.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_batch: 8, deadline_us: 200, queue_depth: 256, trace_sample: 0 }
+        Self {
+            max_batch: 8,
+            deadline_us: 200,
+            queue_depth: 256,
+            trace_sample: 0,
+            breaker_threshold: 3,
+            breaker_cooldown_us: 50_000,
+            respawn_base_us: 100,
+            respawn_max_us: 20_000,
+            faults: FaultPlan::disabled(),
+        }
     }
 }
 
 impl ServeOptions {
     /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth` /
-    /// `--trace-sample` flags (defaults where absent) — shared by
-    /// `convbench serve` and the serving example so the flag set cannot
-    /// drift.
+    /// `--trace-sample` / `--breaker-threshold` / `--breaker-cooldown-us`
+    /// / `--respawn-base-us` / `--respawn-max-us` flags plus the
+    /// [`FaultPlan`] flags (defaults where absent) — shared by
+    /// `convbench serve`, `convbench chaos` and the serving example so
+    /// the flag set cannot drift.
     pub fn from_args(args: &crate::util::cli::Args) -> Self {
         let d = Self::default();
         Self {
@@ -171,6 +241,11 @@ impl ServeOptions {
             deadline_us: args.get_or("deadline-us", d.deadline_us),
             queue_depth: args.get_or("queue-depth", d.queue_depth),
             trace_sample: args.get_or("trace-sample", d.trace_sample),
+            breaker_threshold: args.get_or("breaker-threshold", d.breaker_threshold),
+            breaker_cooldown_us: args.get_or("breaker-cooldown-us", d.breaker_cooldown_us),
+            respawn_base_us: args.get_or("respawn-base-us", d.respawn_base_us),
+            respawn_max_us: args.get_or("respawn-max-us", d.respawn_max_us),
+            faults: FaultPlan::from_args(args),
         }
     }
 }
@@ -196,6 +271,119 @@ impl Request {
     /// Build a request with the server-default deadline.
     pub fn new(id: u64, model: impl Into<String>, input: Vec<i8>) -> Self {
         Self { id, model: model.into(), input, deadline_us: 0 }
+    }
+}
+
+/// Typed serving failure. Every reply channel carries
+/// `Result<Response, ServeError>`; [`ServeError::retriable`] tells a
+/// client whether resubmitting the same request can succeed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at validation: unknown model or wrong input length.
+    /// Permanent — the request itself is malformed.
+    Rejected(String),
+    /// Shed by the admission controller at the queue-depth cap.
+    /// Retriable: pressure may have passed.
+    Shed {
+        /// The [`ServeOptions::queue_depth`] cap that was hit.
+        queue_depth: usize,
+    },
+    /// The client-side reply wait ran out of budget
+    /// ([`RetryPolicy::overall_deadline_us`]). Retriable with a fresh
+    /// budget.
+    DeadlineExceeded,
+    /// The worker serving this request's batch panicked (or an injected
+    /// fault failed the batch). Retriable: the respawned worker will
+    /// usually serve a resubmission — unless the request itself is the
+    /// killer, in which case quarantine turns it into
+    /// [`ServeError::Poisoned`].
+    WorkerPanic {
+        /// Model whose batch crashed.
+        model: String,
+    },
+    /// The request crashed a worker twice and is quarantined: it is
+    /// rejected at admission from now on. Permanent.
+    Poisoned {
+        /// The quarantined request id.
+        id: u64,
+    },
+    /// Intake is closed ([`InferenceServer::begin_shutdown`]).
+    /// Permanent for this server instance.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Whether resubmitting the same request can plausibly succeed.
+    pub fn retriable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Shed { .. } | ServeError::DeadlineExceeded | ServeError::WorkerPanic { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected(msg) => write!(f, "{msg}"),
+            ServeError::Shed { queue_depth } => {
+                write!(f, "request shed: queue depth {queue_depth} reached")
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded waiting for a reply"),
+            ServeError::WorkerPanic { model } => {
+                write!(f, "worker panicked while serving model {model:?}")
+            }
+            ServeError::Poisoned { id } => {
+                write!(f, "request {id} is quarantined: it crashed a worker twice")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Client-side retry policy for [`InferenceServer::infer_with_retry`]:
+/// bounded attempts under one overall reply deadline, with seeded
+/// jittered backoff between attempts (no more unbounded `recv()`).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total submission attempts (first try included). Clamped to ≥ 1.
+    pub max_attempts: u32,
+    /// First inter-attempt backoff delay (µs).
+    pub backoff_base_us: u64,
+    /// Inter-attempt backoff ceiling (µs).
+    pub backoff_max_us: u64,
+    /// Overall budget across all attempts, waiting included (µs).
+    pub overall_deadline_us: u64,
+    /// Seed for the backoff jitter (deterministic retry schedules).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            backoff_base_us: 200,
+            backoff_max_us: 10_000,
+            overall_deadline_us: 2_000_000,
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Parse `--retry-attempts`, `--retry-base-us`, `--retry-max-us` and
+    /// `--retry-deadline-us` (defaults where absent).
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let d = Self::default();
+        Self {
+            max_attempts: args.get_or("retry-attempts", d.max_attempts),
+            backoff_base_us: args.get_or("retry-base-us", d.backoff_base_us),
+            backoff_max_us: args.get_or("retry-max-us", d.backoff_max_us),
+            overall_deadline_us: args.get_or("retry-deadline-us", d.overall_deadline_us),
+            seed: args.get_or("retry-seed", d.seed),
+        }
     }
 }
 
@@ -225,6 +413,10 @@ pub struct Response {
     pub mcu_latency_s: f64,
     /// Simulated on-MCU energy (mJ).
     pub mcu_energy_mj: f64,
+    /// Whether this request was served by the model's compiled-default
+    /// fallback plan (circuit breaker open) rather than its tuned
+    /// primary. Logits are bit-exact either way.
+    pub degraded: bool,
 }
 
 /// Server statistics. End-to-end service time (`p50_us`/`p99_us`/
@@ -262,6 +454,19 @@ pub struct ServerStats {
     /// Batch-size distribution: `batch_hist[i]` counts executed batches
     /// of size `i + 1` (length = the server's `max_batch`).
     pub batch_hist: Vec<u64>,
+    /// Worker panics caught by the supervisor (real or injected).
+    pub worker_panics: u64,
+    /// Worker respawns (one per caught panic; the incarnation restarts
+    /// after a jittered backoff delay).
+    pub respawns: u64,
+    /// Requests quarantined for crashing a worker twice.
+    pub quarantined: u64,
+    /// Circuit-breaker trips from a tuned primary plan to its
+    /// compiled-default fallback.
+    pub breaker_trips: u64,
+    /// Batches served degraded on the compiled-default fallback while a
+    /// breaker was open.
+    pub degraded_batches: u64,
 }
 
 struct Deployed {
@@ -271,12 +476,15 @@ struct Deployed {
     mcu: Measurement,
     /// Tuned per-node schedule, kept for reporting; `None` means the
     /// paper-default SIMD schedule. Execution never consults this —
-    /// both cases compile into `plan` at registration.
+    /// both cases compile into `plans` at registration.
     schedule: Option<TunedSchedule>,
-    /// The compiled executor every request runs through — linear models
-    /// and residual graphs alike; its embedded input shape/format is
-    /// the request contract, so the registry needs no model copy.
-    plan: ExecPlan,
+    /// The compiled executors every request runs through — linear models
+    /// and residual graphs alike; the primary's embedded input
+    /// shape/format is the request contract, so the registry needs no
+    /// model copy. Tuned deployments pair the tuned primary with its
+    /// compiled-default fallback (the circuit breaker's degradation
+    /// target); untuned deployments are [`PlanPair::solo`].
+    plans: PlanPair,
     /// Per-node analytic costs of the compiled schedule
     /// ([`plan_node_costs`]) — the drift monitor's prediction side,
     /// registered once at deployment.
@@ -286,7 +494,7 @@ struct Deployed {
 /// One queued request with its reply channel and deadline bookkeeping.
 struct Pending {
     req: Request,
-    reply: mpsc::Sender<Result<Response, String>>,
+    reply: mpsc::Sender<Result<Response, ServeError>>,
     enqueued: Instant,
     /// Forced-drain instant: `enqueued + queue-wait budget`.
     deadline: Instant,
@@ -346,14 +554,18 @@ impl QueueState {
             .cloned();
         match victim_model {
             Some(m) if cost_of(&m) > cost_of(&p.req.model) => {
-                let victim = self
-                    .queues
-                    .get_mut(&m)
-                    .and_then(|q| q.pop_back())
-                    .expect("victim queue is nonempty");
-                self.queued -= 1;
-                self.push(p);
-                Some(victim)
+                match self.queues.get_mut(&m).and_then(|q| q.pop_back()) {
+                    Some(victim) => {
+                        self.queued -= 1;
+                        self.push(p);
+                        Some(victim)
+                    }
+                    // the victim queue raced to empty between the scan
+                    // and the eviction (a drain got there first): shed
+                    // the incoming request instead of panicking — under
+                    // pressure a conservative shed is always safe
+                    None => Some(p),
+                }
             }
             _ => Some(p),
         }
@@ -407,6 +619,220 @@ impl QueueState {
     }
 }
 
+/// Circuit-breaker state for one model's tuned primary plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    /// Healthy: serve the tuned primary.
+    Closed,
+    /// Tripped: serve the compiled-default fallback until `until`.
+    Open {
+        /// When the cooldown expires and a half-open probe may run.
+        until: Instant,
+    },
+    /// Cooldown expired: one probe batch runs on the primary; success
+    /// closes the breaker, a panic re-opens it.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Gauge encoding: Closed = 0, HalfOpen = 1, Open = 2 (the
+    /// `breaker_state` gauge exposes the sum over models).
+    fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open { .. } => 2,
+        }
+    }
+}
+
+/// Per-model breaker bookkeeping.
+#[derive(Clone, Copy, Debug)]
+struct Breaker {
+    state: BreakerState,
+    /// Consecutive primary-plan panics since the last clean batch.
+    consecutive: usize,
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Self { state: BreakerState::Closed, consecutive: 0 }
+    }
+}
+
+/// Shared supervision state: per-request crash strikes (quarantine) and
+/// per-model circuit breakers. Workers consult it per drained batch;
+/// the frontend consults the quarantine set at admission. All counters
+/// and the `breaker_state` gauge land on the supervisor's dedicated
+/// metric shard, written only under these mutexes.
+struct Supervisor {
+    /// Crashing-batch count per request id. A request present in two
+    /// crashed batches is quarantined (batch-granular blame: innocent
+    /// batchmates collect a strike too, but only a repeat offender
+    /// reaches two).
+    strikes: Mutex<HashMap<u64, u32>>,
+    breakers: Mutex<BTreeMap<String, Breaker>>,
+    shard: Arc<Shard>,
+    threshold: usize,
+    cooldown: Duration,
+}
+
+impl Supervisor {
+    fn new(shard: Arc<Shard>, opts: &ServeOptions) -> Self {
+        Self {
+            strikes: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(BTreeMap::new()),
+            shard,
+            threshold: opts.breaker_threshold.max(1),
+            cooldown: Duration::from_micros(opts.breaker_cooldown_us),
+        }
+    }
+
+    /// Whether `id` has crashed workers twice and is banned at admission.
+    fn is_quarantined(&self, id: u64) -> bool {
+        relock(&self.strikes).get(&id).copied().unwrap_or(0) >= 2
+    }
+
+    /// Republish the `breaker_state` gauge (sum of per-model codes).
+    /// Callers hold the breaker lock, so the gauge has one writer.
+    fn publish_gauge(&self, breakers: &BTreeMap<String, Breaker>) {
+        let sum: u64 = breakers.values().map(|b| b.state.code()).sum();
+        self.shard.gauge_set(G_BREAKER_STATE, sum);
+    }
+
+    /// Resolve whether `model`'s next batch runs degraded (on the
+    /// fallback plan). Handles the Open → HalfOpen transition when the
+    /// cooldown has expired (counting the probe). Models without a
+    /// fallback never degrade and skip the lock entirely.
+    fn plan_mode(&self, model: &str, has_fallback: bool, now: Instant) -> bool {
+        if !has_fallback {
+            return false;
+        }
+        let mut breakers = relock(&self.breakers);
+        let b = breakers.entry(model.to_string()).or_default();
+        match b.state {
+            BreakerState::Closed => false,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open { until } if now >= until => {
+                b.state = BreakerState::HalfOpen;
+                self.shard.counter_add(C_BREAKER_PROBES, 1);
+                self.publish_gauge(&breakers);
+                false
+            }
+            BreakerState::Open { .. } => true,
+        }
+    }
+
+    /// A batch of `model` completed cleanly on the plan selected by
+    /// `degraded`. A clean primary batch resets the panic streak and
+    /// closes a half-open breaker (recovery).
+    fn on_batch_ok(&self, model: &str, has_fallback: bool, degraded: bool) {
+        if !has_fallback || degraded {
+            return;
+        }
+        let mut breakers = relock(&self.breakers);
+        let b = breakers.entry(model.to_string()).or_default();
+        b.consecutive = 0;
+        if b.state == BreakerState::HalfOpen {
+            b.state = BreakerState::Closed;
+            self.shard.counter_add(C_BREAKER_RECOVERIES, 1);
+            self.publish_gauge(&breakers);
+        }
+    }
+
+    /// A batch of `model` crashed its worker. Feeds the breaker (only
+    /// primary-plan panics count toward tripping; a fallback-plan panic
+    /// leaves the breaker open) and assigns one strike per unreplied
+    /// lane, returning `true` per lane if that request is now
+    /// quarantined.
+    fn on_batch_panic(
+        &self,
+        model: &str,
+        has_fallback: bool,
+        degraded: bool,
+        now: Instant,
+        lane_ids: &[u64],
+    ) -> Vec<bool> {
+        if has_fallback && !degraded {
+            let mut breakers = relock(&self.breakers);
+            let b = breakers.entry(model.to_string()).or_default();
+            b.consecutive += 1;
+            let reopen = b.state == BreakerState::HalfOpen;
+            if reopen || b.consecutive >= self.threshold {
+                b.state = BreakerState::Open { until: now + self.cooldown };
+                b.consecutive = 0;
+                self.shard.counter_add(C_BREAKER_TRIPS, 1);
+                self.publish_gauge(&breakers);
+            }
+        }
+        let mut strikes = relock(&self.strikes);
+        lane_ids
+            .iter()
+            .map(|id| {
+                let s = strikes.entry(*id).or_insert(0);
+                *s += 1;
+                if *s == 2 {
+                    self.shard.counter_add(C_QUARANTINED, 1);
+                }
+                *s >= 2
+            })
+            .collect()
+    }
+}
+
+/// A worker's pre-planned arenas for one model: one for the tuned
+/// primary plan and (tuned deployments only) one for the
+/// compiled-default fallback — different schedules need different
+/// scratch capacities, and degradation must not allocate.
+struct ModelArenas {
+    primary: Workspace,
+    fallback: Option<Workspace>,
+}
+
+/// Exactly-one-reply guard for a drained batch. `serve_batch` replies
+/// lanes front to back and marks each; if the worker panics (or an
+/// injected fault fails the batch), the unreplied tail is still owned
+/// here and the supervisor answers it with a typed error — no reply
+/// channel is ever dropped silently. The `Drop` impl is the last-resort
+/// backstop should the supervision path itself fail.
+struct ReplyGuard {
+    lanes: Vec<Pending>,
+    replied: usize,
+    /// Set by `serve_batch` once it has resolved the plan mode, so the
+    /// panic path knows whether the crash hit the primary or fallback.
+    degraded: bool,
+}
+
+impl ReplyGuard {
+    fn new(lanes: Vec<Pending>) -> Self {
+        Self { lanes, replied: 0, degraded: false }
+    }
+
+    fn lanes(&self) -> &[Pending] {
+        &self.lanes
+    }
+
+    /// Record that the next lane (in order) has been answered.
+    fn mark_replied(&mut self) {
+        self.replied += 1;
+    }
+
+    /// Take ownership of every lane not yet answered.
+    fn take_unreplied(&mut self) -> Vec<Pending> {
+        self.lanes.split_off(self.replied.min(self.lanes.len()))
+    }
+}
+
+impl Drop for ReplyGuard {
+    fn drop(&mut self) {
+        for p in self.lanes.drain(self.replied.min(self.lanes.len())..) {
+            let _ = p
+                .reply
+                .send(Err(ServeError::WorkerPanic { model: p.req.model.clone() }));
+        }
+    }
+}
+
 /// Split-reservoir statistics: end-to-end service time, queue wait and
 /// execution share, plus the batch-size histogram.
 struct StatsInner {
@@ -433,7 +859,8 @@ impl StatsInner {
 /// span ring and tracer, and a handle on the shared drift monitor. All
 /// of it is preallocated at spawn — the serve path allocates nothing.
 struct WorkerState {
-    workspaces: HashMap<String, Workspace>,
+    workspaces: HashMap<String, ModelArenas>,
+    supervisor: Arc<Supervisor>,
     shard: Arc<Shard>,
     stats: Arc<Mutex<StatsInner>>,
     ring: Arc<Mutex<TraceRing>>,
@@ -465,6 +892,7 @@ pub struct InferenceServer {
     drift: Arc<Mutex<DriftMonitor>>,
     /// Sorted model naming table trace events index into.
     model_meta: Arc<Vec<TraceModelMeta>>,
+    supervisor: Arc<Supervisor>,
     shutting_down: AtomicBool,
 }
 
@@ -490,7 +918,10 @@ impl InferenceServer {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
             let plan = ExecPlan::compile_default(&m, true);
             let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
-            registry.insert(m.name.clone(), Deployed { mcu, schedule: None, plan, costs });
+            registry.insert(
+                m.name.clone(),
+                Deployed { mcu, schedule: None, plans: PlanPair::solo(plan), costs },
+            );
         }
         Self::spawn(registry, n_workers, opts)
     }
@@ -525,10 +956,18 @@ impl InferenceServer {
             let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile(&m);
+            // the degradation target: the paper-default SIMD schedule,
+            // bit-exact with the tuned plan (PR 3's invariant)
+            let fallback = ExecPlan::compile_default(&m, true);
             let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
             registry.insert(
                 m.name.clone(),
-                Deployed { mcu, schedule: Some(schedule), plan, costs },
+                Deployed {
+                    mcu,
+                    schedule: Some(schedule),
+                    plans: PlanPair::tuned(plan, fallback),
+                    costs,
+                },
             );
         }
         Self::spawn(registry, n_workers, opts)
@@ -571,10 +1010,16 @@ impl InferenceServer {
             let (schedule, _) = tune_graph_shape(&g, cfg, objective, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile_graph(&g);
+            let fallback = ExecPlan::compile_graph_default(&g, true);
             let costs = plan_node_costs(&g, &plan.candidates(), &plan, cfg);
             registry.insert(
                 g.name.clone(),
-                Deployed { mcu, schedule: Some(schedule), plan, costs },
+                Deployed {
+                    mcu,
+                    schedule: Some(schedule),
+                    plans: PlanPair::tuned(plan, fallback),
+                    costs,
+                },
             );
         }
         Self::spawn(registry, n_workers, opts)
@@ -593,7 +1038,10 @@ impl InferenceServer {
         let model_meta: Arc<Vec<TraceModelMeta>> = Arc::new(
             names
                 .iter()
-                .map(|n| TraceModelMeta { name: n.clone(), nodes: models[n].plan.node_names() })
+                .map(|n| TraceModelMeta {
+                    name: n.clone(),
+                    nodes: models[n].plans.primary().node_names(),
+                })
                 .collect(),
         );
         let mut model_idx = HashMap::new();
@@ -608,7 +1056,12 @@ impl InferenceServer {
                 dm.register(n, models[n].costs.clone());
             }
         }
-        let max_nodes = models.values().map(|d| d.plan.n_layers()).max().unwrap_or(0);
+        let supervisor = Arc::new(Supervisor::new(metrics.shard(n_workers + 1), &opts));
+        let max_nodes = models
+            .values()
+            .map(|d| d.plans.primary().n_layers())
+            .max()
+            .unwrap_or(0);
         let stats_shards: Vec<Arc<Mutex<StatsInner>>> = (0..n_workers)
             .map(|_| Arc::new(Mutex::new(StatsInner::new(opts.max_batch))))
             .collect();
@@ -622,6 +1075,7 @@ impl InferenceServer {
                 let queue = Arc::clone(&queue);
                 let state = WorkerState {
                     workspaces: HashMap::new(), // planned inside the worker
+                    supervisor: Arc::clone(&supervisor),
                     shard: metrics.shard(w + 1),
                     stats: Arc::clone(&stats_shards[w]),
                     ring: Arc::clone(&rings[w]),
@@ -633,7 +1087,16 @@ impl InferenceServer {
                     tid: (w + 1) as u32,
                     model_idx: Arc::clone(&model_idx),
                 };
-                std::thread::spawn(move || worker_loop(&models, &queue, opts, state))
+                // monomorphize the worker loop on the injector: the
+                // production path carries no fault branches at all
+                if opts.faults.enabled() {
+                    let faults = SeededFaults::new(opts.faults, w as u64);
+                    std::thread::spawn(move || worker_loop(&models, &queue, opts, state, faults))
+                } else {
+                    std::thread::spawn(move || {
+                        worker_loop(&models, &queue, opts, state, NoopFaults)
+                    })
+                }
             })
             .collect();
 
@@ -648,6 +1111,7 @@ impl InferenceServer {
             rings,
             drift,
             model_meta,
+            supervisor,
             shutting_down: AtomicBool::new(false),
         }
     }
@@ -664,16 +1128,20 @@ impl InferenceServer {
         self.opts
     }
 
-    /// Submit a request; returns a receiver for the response, or an
-    /// error once shutdown has begun (instead of silently enqueueing
-    /// into a dead queue). Validation (model, input length) and
-    /// admission control run on the submitter's thread: an invalid
-    /// request is answered through the receiver immediately without
-    /// touching the queue, and a shed request (queue full) gets its
-    /// rejection the same way.
-    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response, String>>, String> {
+    /// Submit a request; returns a receiver for the response, or
+    /// [`ServeError::ShuttingDown`] once shutdown has begun (instead of
+    /// silently enqueueing into a dead queue). Validation (model, input
+    /// length), the quarantine gate and admission control run on the
+    /// submitter's thread: an invalid, quarantined or shed request is
+    /// answered through the receiver immediately without touching the
+    /// queue.
+    #[allow(clippy::type_complexity)]
+    pub fn submit(
+        &self,
+        req: Request,
+    ) -> Result<mpsc::Receiver<Result<Response, ServeError>>, ServeError> {
         if self.shutting_down.load(Ordering::SeqCst) {
-            return Err("server is shutting down".to_string());
+            return Err(ServeError::ShuttingDown);
         }
         self.frontend.counter_add(C_SUBMITTED, 1);
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -683,17 +1151,27 @@ impl InferenceServer {
             Some(d) => d,
             None => {
                 self.frontend.counter_add(C_ERRORS, 1);
-                let _ = reply_tx.send(Err(format!("unknown model {:?}", req.model)));
+                let _ = reply_tx.send(Err(ServeError::Rejected(format!(
+                    "unknown model {:?}",
+                    req.model
+                ))));
                 return Ok(reply_rx);
             }
         };
-        let expected = deployed.plan.input_shape().len();
+        let expected = deployed.plans.primary().input_shape().len();
         if req.input.len() != expected {
             self.frontend.counter_add(C_ERRORS, 1);
-            let _ = reply_tx.send(Err(format!(
+            let _ = reply_tx.send(Err(ServeError::Rejected(format!(
                 "input length {} != expected {expected}",
                 req.input.len()
-            )));
+            ))));
+            return Ok(reply_rx);
+        }
+        // the quarantine gate: a request that already crashed workers
+        // twice never reaches a queue again
+        if self.supervisor.is_quarantined(req.id) {
+            self.frontend.counter_add(C_ERRORS, 1);
+            let _ = reply_tx.send(Err(ServeError::Poisoned { id: req.id }));
             return Ok(reply_rx);
         }
         let now = Instant::now();
@@ -710,11 +1188,14 @@ impl InferenceServer {
             req,
         };
         let (lock, cv) = &*self.queue;
-        let mut st = lock.lock().unwrap();
+        let mut st = relock(lock);
         if st.shutdown {
             // lost the race with begin_shutdown: fail fast (the queue
-            // flush may already be past this model's queue)
-            return Err("server is shutting down".to_string());
+            // flush may already be past this model's queue). The request
+            // was already counted as submitted, so count the rejection
+            // too — `served + shed + errors == submitted` must hold
+            self.frontend.counter_add(C_ERRORS, 1);
+            return Err(ServeError::ShuttingDown);
         }
         let models = &self.models;
         let victim = st.admit(pending, self.opts.queue_depth, &|m| models[m].mcu.cycles);
@@ -725,19 +1206,72 @@ impl InferenceServer {
         cv.notify_one();
         if let Some(v) = victim {
             self.frontend.counter_add(C_SHED, 1);
-            let _ = v.reply.send(Err(format!(
-                "request shed: queue depth {} reached",
-                self.opts.queue_depth
-            )));
+            let _ = v
+                .reply
+                .send(Err(ServeError::Shed { queue_depth: self.opts.queue_depth }));
         }
         Ok(reply_rx)
     }
 
-    /// Submit and wait.
-    pub fn infer(&self, req: Request) -> Result<Response, String> {
+    /// Submit and wait for the single reply.
+    pub fn infer(&self, req: Request) -> Result<Response, ServeError> {
         self.submit(req)?
             .recv()
-            .map_err(|_| "server shut down".to_string())?
+            .map_err(|_| ServeError::ShuttingDown)?
+    }
+
+    /// Submit with bounded, deadline-capped retries: retriable failures
+    /// ([`ServeError::retriable`] — shed, worker panic, reply timeout)
+    /// are resubmitted after a seeded jittered backoff delay, up to
+    /// [`RetryPolicy::max_attempts`] attempts and
+    /// [`RetryPolicy::overall_deadline_us`] total wall time. Permanent
+    /// errors (rejection, quarantine, shutdown) return immediately. The
+    /// reply wait itself is bounded by the remaining overall budget —
+    /// this entry point can never block forever, even if a reply is
+    /// lost.
+    pub fn infer_with_retry(
+        &self,
+        req: Request,
+        policy: &RetryPolicy,
+    ) -> Result<Response, ServeError> {
+        let start = Instant::now();
+        let overall = Duration::from_micros(policy.overall_deadline_us.max(1));
+        let mut backoff = Backoff::new(policy.backoff_base_us, policy.backoff_max_us, policy.seed);
+        let mut last = ServeError::DeadlineExceeded;
+        for attempt in 0..policy.max_attempts.max(1) {
+            let remaining = match overall.checked_sub(start.elapsed()) {
+                Some(r) if r > Duration::ZERO => r,
+                _ => return Err(ServeError::DeadlineExceeded),
+            };
+            if attempt > 0 {
+                let delay = backoff.next_delay().min(remaining);
+                std::thread::sleep(delay);
+            }
+            let remaining = match overall.checked_sub(start.elapsed()) {
+                Some(r) if r > Duration::ZERO => r,
+                _ => return Err(ServeError::DeadlineExceeded),
+            };
+            let rx = match self.submit(req.clone()) {
+                Ok(rx) => rx,
+                Err(e) if e.retriable() => {
+                    last = e;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            match rx.recv_timeout(remaining) {
+                Ok(Ok(r)) => return Ok(r),
+                Ok(Err(e)) if e.retriable() => last = e,
+                Ok(Err(e)) => return Err(e),
+                Err(mpsc::RecvTimeoutError::Timeout) => return Err(ServeError::DeadlineExceeded),
+                // a dropped channel without a reply means the server
+                // died around this request — treat as a worker failure
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    last = ServeError::WorkerPanic { model: req.model.clone() }
+                }
+            }
+        }
+        Err(last)
     }
 
     /// Current statistics. Each worker owns a private stats shard
@@ -751,7 +1285,7 @@ impl InferenceServer {
         let (mut service, mut queue, mut exec) = (res(), res(), res());
         let mut batch_hist = vec![0u64; self.opts.max_batch];
         for shard in &self.stats_shards {
-            let inner = shard.lock().unwrap();
+            let inner = relock(shard);
             service.merge(&inner.service_us);
             queue.merge(&inner.queue_us);
             exec.merge(&inner.exec_us);
@@ -772,6 +1306,11 @@ impl InferenceServer {
         stats.exec_mean_us = exec.mean();
         (stats.exec_p50_us, stats.exec_p99_us) = percentile_pair(exec.samples_mut());
         stats.batch_hist = batch_hist;
+        stats.worker_panics = self.metrics.counter(C_WORKER_PANICS);
+        stats.respawns = self.metrics.counter(C_RESPAWNS);
+        stats.quarantined = self.metrics.counter(C_QUARANTINED);
+        stats.breaker_trips = self.metrics.counter(C_BREAKER_TRIPS);
+        stats.degraded_batches = self.metrics.counter(C_DEGRADED_BATCHES);
         stats
     }
 
@@ -795,7 +1334,7 @@ impl InferenceServer {
     pub fn drain_traces(&self) -> Json {
         let mut events: Vec<TraceEvent> = Vec::new();
         for ring in &self.rings {
-            events.extend(ring.lock().unwrap().drain());
+            events.extend(relock(ring).drain());
         }
         events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
         chrome_trace_json(&events, &self.model_meta)
@@ -804,7 +1343,7 @@ impl InferenceServer {
     /// Snapshot of the analytic-vs-measured drift monitor (fed by
     /// sampled batches; empty when [`ServeOptions::trace_sample`] is 0).
     pub fn drift_report(&self, tolerance: f64) -> DriftReport {
-        self.drift.lock().unwrap().report(tolerance)
+        relock(&self.drift).report(tolerance)
     }
 
     /// Begin a graceful shutdown: new `submit`/`infer` calls fail fast,
@@ -814,7 +1353,7 @@ impl InferenceServer {
     pub fn begin_shutdown(&self) {
         if !self.shutting_down.swap(true, Ordering::SeqCst) {
             let (lock, cv) = &*self.queue;
-            lock.lock().unwrap().shutdown = true;
+            relock(lock).shutdown = true;
             cv.notify_all();
         }
     }
@@ -848,10 +1387,21 @@ impl InferenceServer {
 fn plan_worker_arenas(
     models: &HashMap<String, Deployed>,
     max_batch: usize,
-) -> HashMap<String, Workspace> {
+) -> HashMap<String, ModelArenas> {
     models
         .iter()
-        .map(|(name, d)| (name.clone(), Workspace::for_plan_batch(&d.plan, max_batch)))
+        .map(|(name, d)| {
+            (
+                name.clone(),
+                ModelArenas {
+                    primary: Workspace::for_plan_batch(d.plans.primary(), max_batch),
+                    fallback: d
+                        .plans
+                        .fallback()
+                        .map(|p| Workspace::for_plan_batch(p, max_batch)),
+                },
+            )
+        })
         .collect()
 }
 
@@ -860,17 +1410,33 @@ fn plan_worker_arenas(
 /// execute the batch through the compiled engine in the pre-planned
 /// arena, reply. On shutdown, flush the remaining queues in deadline
 /// order before exiting.
-fn worker_loop(
+///
+/// Every batch runs **supervised**: `serve_batch` executes under
+/// `catch_unwind` behind a [`ReplyGuard`], so a panic (an engine
+/// assertion, or an injected fault) answers every unreplied lane with a
+/// typed error, feeds the crash into the supervisor (quarantine
+/// strikes, circuit breaker) and *respawns* the worker — a fresh
+/// incarnation in the same thread, entered after a seeded jittered
+/// [`Backoff`] delay that resets on the first clean batch. Generic over
+/// [`FaultInjector`]: the production monomorphization ([`NoopFaults`])
+/// contains no injection branches.
+fn worker_loop<F: FaultInjector>(
     models: &HashMap<String, Deployed>,
     queue: &(Mutex<QueueState>, Condvar),
     opts: ServeOptions,
     mut state: WorkerState,
+    mut faults: F,
 ) {
     state.workspaces = plan_worker_arenas(models, opts.max_batch);
+    let mut backoff = Backoff::new(
+        opts.respawn_base_us,
+        opts.respawn_max_us,
+        opts.faults.seed ^ u64::from(state.tid),
+    );
     let (lock, cv) = queue;
     'serve: loop {
         let (name, batch) = {
-            let mut st = lock.lock().unwrap();
+            let mut st = relock(lock);
             loop {
                 let now = Instant::now();
                 let pick = st
@@ -889,46 +1455,158 @@ fn worker_loop(
                 }
                 st = match st.next_deadline() {
                     // sleep exactly until the earliest forced drain …
-                    Some(t) => cv.wait_timeout(st, t.saturating_duration_since(now)).unwrap().0,
+                    Some(t) => cv
+                        .wait_timeout(st, t.saturating_duration_since(now))
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0,
                     // … or indefinitely when nothing is queued
-                    None => cv.wait(st).unwrap(),
+                    None => cv.wait(st).unwrap_or_else(|e| e.into_inner()),
                 };
             }
         };
-        serve_batch(models, &mut state, &name, batch);
+        let mut guard = ReplyGuard::new(batch);
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            serve_batch(models, &mut state, &name, &mut guard, &mut faults)
+        }))
+        .is_err();
+        if panicked {
+            supervise_panic(&mut state, &name, &mut guard);
+            // respawn: this incarnation is done; the next one starts
+            // after a jittered exponential delay (skipped when shutdown
+            // is flushing — drains must not dawdle)
+            state.shard.counter_add(C_RESPAWNS, 1);
+            let delay = backoff.next_delay();
+            if !relock(lock).shutdown {
+                std::thread::sleep(delay);
+            }
+        } else {
+            backoff.reset();
+        }
     }
 }
 
-/// Execute one drained micro-batch: stage every request payload into the
-/// worker's arena lanes, run the whole batch through the compiled plan
-/// (zero heap allocations on the inference), then reply per request with
-/// its queue-wait and the batch's execution time. On every
-/// `sample_every`-th drain the batch runs with the worker's
-/// [`ExecTracer`] bound (per-node wall times), and after the replies go
-/// out its full span tree is pushed into the worker's ring and the node
-/// timings into the drift monitor — tracing costs land outside the
-/// reply path's critical sections.
-fn serve_batch(
+/// Supervisor half of a caught worker panic: blame every unreplied lane
+/// (a second crashing batch quarantines a request), feed the model's
+/// circuit breaker (primary-plan crashes only), and answer each lane
+/// with [`ServeError::Poisoned`] or [`ServeError::WorkerPanic`] — the
+/// exactly-one-reply invariant holds through worker death.
+fn supervise_panic(state: &mut WorkerState, name: &str, guard: &mut ReplyGuard) {
+    let degraded = guard.degraded;
+    let lanes = guard.take_unreplied();
+    state.shard.counter_add(C_WORKER_PANICS, 1);
+    if lanes.is_empty() {
+        return;
+    }
+    state.shard.counter_add(C_ERRORS, lanes.len() as u64);
+    let ids: Vec<u64> = lanes.iter().map(|p| p.req.id).collect();
+    let quarantined = state.supervisor.on_batch_panic(
+        name,
+        guard_model_has_fallback(state, name),
+        degraded,
+        Instant::now(),
+        &ids,
+    );
+    for (p, poisoned) in lanes.into_iter().zip(quarantined) {
+        let err = if poisoned {
+            ServeError::Poisoned { id: p.req.id }
+        } else {
+            ServeError::WorkerPanic { model: p.req.model.clone() }
+        };
+        let _ = p.reply.send(Err(err));
+    }
+}
+
+/// Whether `name`'s deployment carries a fallback plan (resolved via
+/// the worker's arena map, which mirrors the registry).
+fn guard_model_has_fallback(state: &WorkerState, name: &str) -> bool {
+    state
+        .workspaces
+        .get(name)
+        .map(|a| a.fallback.is_some())
+        .unwrap_or(false)
+}
+
+/// Act on one injector roll: `Panic` unwinds (the supervisor catches
+/// it), `Delay` sleeps in place, `Error` returns `true` so the caller
+/// fails the batch with typed retriable errors instead.
+fn apply_fault<F: FaultInjector>(faults: &mut F, site: FaultSite) -> bool {
+    match faults.roll(site) {
+        FaultAction::None => false,
+        FaultAction::Panic => panic!("injected fault: panic at {site:?}"),
+        FaultAction::Delay(d) => {
+            std::thread::sleep(d);
+            false
+        }
+        FaultAction::Error => true,
+    }
+}
+
+/// Fail every unreplied lane of the batch with a typed retriable error
+/// (the injected-error path: the engine reports failure without the
+/// thread dying, so no respawn and no breaker feed).
+fn fail_batch(state: &mut WorkerState, guard: &mut ReplyGuard) {
+    let lanes = guard.take_unreplied();
+    state.shard.counter_add(C_ERRORS, lanes.len() as u64);
+    for p in lanes {
+        let _ = p
+            .reply
+            .send(Err(ServeError::WorkerPanic { model: p.req.model.clone() }));
+    }
+}
+
+/// Execute one drained micro-batch: resolve the plan (tuned primary, or
+/// the compiled-default fallback while the model's breaker is open),
+/// stage every request payload into the matching arena lanes, run the
+/// whole batch through the compiled plan (zero heap allocations on the
+/// inference), then reply per request with its queue-wait and the
+/// batch's execution time. On every `sample_every`-th drain the batch
+/// runs with the worker's [`ExecTracer`] bound (per-node wall times),
+/// and after the replies go out its full span tree is pushed into the
+/// worker's ring and the node timings into the drift monitor — tracing
+/// costs land outside the reply path's critical sections. The
+/// [`FaultSite`] rolls (`Stage`/`Exec`/`Respond`) are no-ops on the
+/// production injector.
+fn serve_batch<F: FaultInjector>(
     models: &HashMap<String, Deployed>,
     state: &mut WorkerState,
     name: &str,
-    batch: Vec<Pending>,
+    guard: &mut ReplyGuard,
+    faults: &mut F,
 ) {
-    if batch.is_empty() {
+    let n = guard.lanes().len();
+    if n == 0 {
         return;
     }
     let sampled = state.sample_every > 0 && state.batches_drained % state.sample_every == 0;
     state.batches_drained += 1;
     let deployed = &models[name]; // requests are validated at admission
-    let plan = &deployed.plan;
-    let ws = state
+    let has_fallback = deployed.plans.has_fallback();
+    let degraded = state.supervisor.plan_mode(name, has_fallback, Instant::now());
+    guard.degraded = degraded;
+    if degraded {
+        state.shard.counter_add(C_DEGRADED_BATCHES, 1);
+    }
+    let plan = deployed.plans.select(degraded);
+    let arenas = state
         .workspaces
         .get_mut(name)
         .expect("worker arenas are planned for every registered model at spawn");
-    let n = batch.len();
+    let ws = if degraded {
+        arenas.fallback.as_mut().unwrap_or(&mut arenas.primary)
+    } else {
+        &mut arenas.primary
+    };
+    if apply_fault(faults, FaultSite::Stage) {
+        fail_batch(state, guard);
+        return;
+    }
     let t0 = Instant::now();
-    for (lane, p) in batch.iter().enumerate() {
+    for (lane, p) in guard.lanes().iter().enumerate() {
         ws.stage_batch_input(lane, &p.req.input);
+    }
+    if apply_fault(faults, FaultSite::Exec) {
+        fail_batch(state, guard);
+        return;
     }
     let out = if sampled {
         state.tracer.reset();
@@ -942,16 +1620,22 @@ fn serve_batch(
     // amortized per-request cost is visible via batch_size / the
     // throughput benches, not hidden in the latency split)
     let exec = t0.elapsed();
+    if apply_fault(faults, FaultSite::Respond) {
+        // rolled before any served accounting, so the conservation
+        // invariant (served + shed + errors == submitted) stays exact
+        fail_batch(state, guard);
+        return;
+    }
     let exec_us = exec.as_secs_f64() * 1e6;
     let olen = plan.output_len();
     state.shard.counter_add(C_SERVED, n as u64);
     state.shard.observe(H_BATCH_SIZE, n as u64);
     state.shard.observe(H_EXEC_US, exec_us as u64);
-    let misses = batch.iter().filter(|p| t0 > p.deadline).count();
+    let misses = guard.lanes().iter().filter(|p| t0 > p.deadline).count();
     if misses > 0 {
         state.shard.counter_add(C_DEADLINE_MISS, misses as u64);
     }
-    for p in &batch {
+    for p in guard.lanes() {
         let qw_us = t0.saturating_duration_since(p.enqueued).as_secs_f64() * 1e6;
         state.shard.observe(H_QUEUE_WAIT_US, qw_us as u64);
         state.shard.observe(H_SERVICE_US, (qw_us + exec_us) as u64);
@@ -959,9 +1643,9 @@ fn serve_batch(
     {
         // O(1)-per-lane critical section: reservoir offers + histogram
         // only; response construction and channel sends happen outside
-        let mut inner = state.stats.lock().unwrap();
+        let mut inner = relock(&state.stats);
         inner.batch_hist[n - 1] += 1;
-        for p in &batch {
+        for p in guard.lanes() {
             let queue_wait = t0.saturating_duration_since(p.enqueued);
             inner.service_us.offer((queue_wait + exec).as_secs_f64() * 1e6);
             inner.queue_us.offer(queue_wait.as_secs_f64() * 1e6);
@@ -969,7 +1653,8 @@ fn serve_batch(
         }
     }
     let reply_t0 = Instant::now();
-    for (lane, p) in batch.iter().enumerate() {
+    for lane in 0..n {
+        let p = &guard.lanes[lane];
         let logits = out[lane * olen..(lane + 1) * olen].to_vec();
         let class = argmax(&logits);
         let queue_wait = t0.saturating_duration_since(p.enqueued);
@@ -983,8 +1668,11 @@ fn serve_batch(
             batch_size: n,
             mcu_latency_s: deployed.mcu.latency_s,
             mcu_energy_mj: deployed.mcu.energy_mj,
+            degraded,
         }));
+        guard.mark_replied();
     }
+    state.supervisor.on_batch_ok(name, has_fallback, degraded);
     if !sampled {
         return;
     }
@@ -999,12 +1687,12 @@ fn serve_batch(
         state.shard.counter_add(C_TRACE_DROPPED, state.tracer.dropped());
     }
     {
-        let mut dm = state.drift.lock().unwrap();
+        let mut dm = relock(&state.drift);
         for t in state.tracer.timings() {
             dm.record(name, t.node as usize, t.dur_us * 1e3);
         }
     }
-    let mut ring = state.ring.lock().unwrap();
+    let mut ring = relock(&state.ring);
     ring.push(TraceEvent {
         kind: SpanKind::BatchDrain,
         ts_us: us(t0),
@@ -1031,7 +1719,7 @@ fn serve_batch(
         model,
         detail: n as u64,
     });
-    for p in &batch {
+    for p in guard.lanes() {
         let enq = us(p.enqueued);
         ring.push(TraceEvent {
             kind: SpanKind::QueueWait,
@@ -1143,7 +1831,9 @@ mod tests {
         let s = server();
         let mut rng = Rng::new(2);
         let e = s.infer(request(0, "nope", &mut rng)).unwrap_err();
-        assert!(e.contains("unknown model"));
+        assert!(e.to_string().contains("unknown model"));
+        assert!(matches!(e, ServeError::Rejected(_)));
+        assert!(!e.retriable(), "a malformed request never succeeds on retry");
         let stats = s.shutdown();
         assert_eq!(stats.errors, 1);
     }
@@ -1152,7 +1842,7 @@ mod tests {
     fn bad_input_length_is_an_error() {
         let s = server();
         let r = Request::new(0, "mcunet-standard", vec![0; 7]);
-        assert!(s.infer(r).unwrap_err().contains("input length"));
+        assert!(s.infer(r).unwrap_err().to_string().contains("input length"));
         s.shutdown();
     }
 
@@ -1252,11 +1942,11 @@ mod tests {
         // intake is closed: both entry points error instead of enqueueing
         // into a dead queue
         let e = s.infer(request(1, "mcunet-standard", &mut rng)).unwrap_err();
-        assert!(e.contains("shutting down"), "{e}");
-        assert!(s
-            .submit(request(2, "mcunet-standard", &mut rng))
-            .unwrap_err()
-            .contains("shutting down"));
+        assert!(e.to_string().contains("shutting down"), "{e}");
+        assert_eq!(
+            s.submit(request(2, "mcunet-standard", &mut rng)).unwrap_err(),
+            ServeError::ShuttingDown
+        );
         // begin_shutdown is idempotent and shutdown still drains cleanly
         s.begin_shutdown();
         let stats = s.shutdown();
@@ -1304,7 +1994,7 @@ mod tests {
         id: u64,
         enqueued: Instant,
         deadline: Instant,
-    ) -> (Pending, mpsc::Receiver<Result<Response, String>>) {
+    ) -> (Pending, mpsc::Receiver<Result<Response, ServeError>>) {
         let (tx, rx) = mpsc::channel();
         (
             Pending {
@@ -1475,8 +2165,12 @@ mod tests {
         // the worker would wait forever; the queue-wait budget forces the
         // partial drain.
         let cfg = McuConfig::default();
-        let opts =
-            ServeOptions { max_batch: 8, deadline_us: 1_000, queue_depth: 64, trace_sample: 0 };
+        let opts = ServeOptions {
+            max_batch: 8,
+            deadline_us: 1_000,
+            queue_depth: 64,
+            ..ServeOptions::default()
+        };
         let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(12);
         let rxs: Vec<_> = (0..3u64)
@@ -1494,13 +2188,19 @@ mod tests {
     #[test]
     fn zero_depth_sheds_every_submission() {
         let cfg = McuConfig::default();
-        let opts =
-            ServeOptions { max_batch: 1, deadline_us: 100, queue_depth: 0, trace_sample: 0 };
+        let opts = ServeOptions {
+            max_batch: 1,
+            deadline_us: 100,
+            queue_depth: 0,
+            ..ServeOptions::default()
+        };
         let s = InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(13);
         let rx = s.submit(request(0, "mcunet-standard", &mut rng)).unwrap();
         let e = rx.recv().unwrap().unwrap_err();
-        assert!(e.contains("shed"), "{e}");
+        assert_eq!(e, ServeError::Shed { queue_depth: 0 });
+        assert!(e.retriable(), "a shed request may succeed once pressure passes");
+        assert!(e.to_string().contains("shed"), "{e}");
         let stats = s.shutdown();
         assert_eq!(stats.shed, 1);
         assert_eq!(stats.served, 0);
@@ -1523,11 +2223,17 @@ mod tests {
         for m in models {
             let (schedule, _) = tune_model_shape(&m, &cfg, Objective::Latency, &mut cache);
             let plan = schedule.compile(&m);
+            let fallback = ExecPlan::compile_default(&m, true);
             let mcu = schedule.as_measurement();
             let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, &cfg);
             registry.insert(
                 m.name.clone(),
-                Deployed { mcu, schedule: Some(schedule), plan, costs },
+                Deployed {
+                    mcu,
+                    schedule: Some(schedule),
+                    plans: PlanPair::tuned(plan, fallback),
+                    costs,
+                },
             );
             reference.insert(m.name.clone(), m);
         }
@@ -1544,7 +2250,7 @@ mod tests {
                     &plain_plan,
                     &cfg,
                 ),
-                plan: plain_plan,
+                plans: PlanPair::solo(plain_plan),
                 schedule: None,
             },
         );
@@ -1561,6 +2267,7 @@ mod tests {
         let epoch = Instant::now();
         let mut state = WorkerState {
             workspaces: arenas,
+            supervisor: Arc::new(Supervisor::new(metrics.shard(2), &ServeOptions::default())),
             shard: metrics.shard(1),
             stats: Arc::new(Mutex::new(StatsInner::new(max_batch))),
             ring: Arc::new(Mutex::new(TraceRing::with_capacity(16))),
@@ -1591,7 +2298,9 @@ mod tests {
                     });
                     rx_inputs.push((rx, input));
                 }
-                serve_batch(&registry, &mut state, name, batch);
+                let mut guard = ReplyGuard::new(batch);
+                serve_batch(&registry, &mut state, name, &mut guard, &mut NoopFaults);
+                drop(guard);
                 for (i, (rx, input)) in rx_inputs.into_iter().enumerate() {
                     let got = rx.recv().unwrap().unwrap();
                     assert_eq!(got.batch_size, max_batch);
@@ -1704,8 +2413,13 @@ mod tests {
     #[test]
     fn sampled_serve_produces_a_valid_chrome_trace_and_finite_drift() {
         let cfg = McuConfig::default();
-        let opts =
-            ServeOptions { max_batch: 4, deadline_us: 500, queue_depth: 64, trace_sample: 1 };
+        let opts = ServeOptions {
+            max_batch: 4,
+            deadline_us: 500,
+            queue_depth: 64,
+            trace_sample: 1,
+            ..ServeOptions::default()
+        };
         let mut s =
             InferenceServer::start_with(vec![mcunet(Primitive::Standard, 1)], 1, &cfg, opts);
         let mut rng = Rng::new(23);
@@ -1726,7 +2440,10 @@ mod tests {
         let report = s.drift_report(0.5);
         assert!(report.all_ratios_finite());
         assert!(report.records.iter().all(|r| r.samples > 0));
-        assert_eq!(report.records.len(), s.models["mcunet-standard"].plan.n_layers());
+        assert_eq!(
+            report.records.len(),
+            s.models["mcunet-standard"].plans.primary().n_layers()
+        );
         assert!(report.to_json().to_string().contains("ns_per_cycle"));
         // rings were consumed: a second drain exports an empty window
         let again = s.drain_traces();
@@ -1736,5 +2453,375 @@ mod tests {
         assert!(snap.counter("trace_batches_sampled_total").unwrap() >= 1);
         let stats = s.shutdown();
         assert_eq!(stats.served, 8);
+    }
+
+    // ---- fault tolerance: supervision, breaker, quarantine, chaos ----
+
+    #[test]
+    fn serve_error_retriability_table() {
+        // the retry loop's contract: transient failures retry, permanent
+        // ones return immediately — pinned here so a new variant cannot
+        // silently default the wrong way
+        assert!(ServeError::Shed { queue_depth: 4 }.retriable());
+        assert!(ServeError::DeadlineExceeded.retriable());
+        assert!(ServeError::WorkerPanic { model: "m".into() }.retriable());
+        assert!(!ServeError::Rejected("bad".into()).retriable());
+        assert!(!ServeError::Poisoned { id: 7 }.retriable());
+        assert!(!ServeError::ShuttingDown.retriable());
+    }
+
+    #[test]
+    fn admission_survives_a_victim_queue_raced_to_empty() {
+        // the regression behind the old `.expect("victim queue is
+        // nonempty")`: a drain can empty the would-be victim queue while
+        // an admission decision is in flight. Model the inconsistent
+        // state directly (empty victim VecDeque, depth counter still at
+        // the cap) and assert the controller sheds the incoming request
+        // instead of panicking.
+        let base = Instant::now();
+        let far = base + Duration::from_secs(3600);
+        let cost = |m: &str| if m == "cheap" { 1.0 } else { 100.0 };
+        let mut st = QueueState::default();
+        let (p, _r0) = pending_for("pricey", 0, base, far);
+        st.push(p);
+        st.queues.get_mut("pricey").unwrap().clear();
+        assert_eq!(st.queued, 1, "depth counter still claims the cap is reached");
+        let (p, _r1) = pending_for("cheap", 1, base, far);
+        let victim = st.admit(p, 1, &cost).expect("at the cap someone sheds");
+        assert_eq!(victim.req.id, 1, "the incoming request sheds; no panic");
+    }
+
+    /// Fault-heavy serve options: tiny respawn delays so panic storms
+    /// stay fast, single-lane batches so crash blame is per-request.
+    fn chaos_opts(faults: FaultPlan) -> ServeOptions {
+        ServeOptions {
+            max_batch: 1,
+            deadline_us: 200,
+            queue_depth: 64,
+            respawn_base_us: 50,
+            respawn_max_us: 400,
+            faults,
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn worker_panic_replies_instead_of_hanging_and_quarantines_repeat_killers() {
+        // every batch panics: the reply guard must answer anyway (the
+        // old engine dropped the channel and `infer` blocked forever),
+        // and a request that crashes two workers is quarantined
+        let faults = FaultPlan {
+            seed: 7,
+            panic_ppm: 1_000_000,
+            delay_ppm: 0,
+            error_ppm: 0,
+            delay_us: 0,
+        };
+        let cfg = McuConfig::default();
+        let s = InferenceServer::start_with(
+            vec![mcunet(Primitive::Standard, 1)],
+            1,
+            &cfg,
+            chaos_opts(faults),
+        );
+        let mut rng = Rng::new(31);
+        // first crash: a typed, retriable error — not a hang
+        let e = s.infer(request(42, "mcunet-standard", &mut rng)).unwrap_err();
+        assert_eq!(e, ServeError::WorkerPanic { model: "mcunet-standard".into() });
+        assert!(e.retriable());
+        // second crash of the same id: quarantined
+        let e = s.infer(request(42, "mcunet-standard", &mut rng)).unwrap_err();
+        assert_eq!(e, ServeError::Poisoned { id: 42 });
+        assert!(!e.retriable());
+        // third submission is rejected at admission — it never reaches a
+        // worker again
+        let e = s.infer(request(42, "mcunet-standard", &mut rng)).unwrap_err();
+        assert_eq!(e, ServeError::Poisoned { id: 42 });
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 0);
+        assert!(stats.worker_panics >= 2, "both crashes were caught");
+        assert!(stats.respawns >= 2, "the worker respawned after each");
+        assert_eq!(stats.quarantined, 1);
+        // conservation: all three submissions are accounted as errors
+        assert_eq!(stats.errors, 3);
+    }
+
+    #[test]
+    fn injected_error_returns_fail_batches_without_respawns() {
+        let faults = FaultPlan {
+            seed: 5,
+            panic_ppm: 0,
+            delay_ppm: 0,
+            error_ppm: 1_000_000,
+            delay_us: 0,
+        };
+        let cfg = McuConfig::default();
+        let s = InferenceServer::start_with(
+            vec![mcunet(Primitive::Standard, 1)],
+            1,
+            &cfg,
+            chaos_opts(faults),
+        );
+        let mut rng = Rng::new(33);
+        let e = s.infer(request(0, "mcunet-standard", &mut rng)).unwrap_err();
+        assert!(matches!(e, ServeError::WorkerPanic { .. }), "{e}");
+        assert!(e.retriable());
+        let stats = s.shutdown();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.respawns, 0, "error returns do not kill the thread");
+        assert_eq!(stats.worker_panics, 0);
+    }
+
+    #[test]
+    fn retry_is_bounded_and_returns_the_last_retriable_error() {
+        // every batch fails with a retriable error; the retry loop must
+        // make exactly max_attempts submissions and then give up
+        let faults = FaultPlan {
+            seed: 3,
+            panic_ppm: 0,
+            delay_ppm: 0,
+            error_ppm: 1_000_000,
+            delay_us: 0,
+        };
+        let cfg = McuConfig::default();
+        let s = InferenceServer::start_with(
+            vec![mcunet(Primitive::Standard, 1)],
+            1,
+            &cfg,
+            chaos_opts(faults),
+        );
+        let mut rng = Rng::new(35);
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            backoff_base_us: 10,
+            backoff_max_us: 50,
+            overall_deadline_us: 10_000_000,
+            seed: 1,
+        };
+        let e = s
+            .infer_with_retry(request(0, "mcunet-standard", &mut rng), &policy)
+            .unwrap_err();
+        assert!(matches!(e, ServeError::WorkerPanic { .. }), "{e}");
+        assert_eq!(s.metrics.counter(C_SUBMITTED), 3, "one submission per attempt");
+        // a healthy server serves on the first attempt
+        let healthy = server();
+        let r = healthy
+            .infer_with_retry(request(1, "mcunet-standard", &mut rng), &policy)
+            .unwrap();
+        assert_eq!(r.id, 1);
+        assert_eq!(healthy.metrics.counter(C_SUBMITTED), 1);
+        healthy.shutdown();
+        // permanent errors return without retrying
+        let e = s
+            .infer_with_retry(request(2, "nope", &mut rng), &policy)
+            .unwrap_err();
+        assert!(matches!(e, ServeError::Rejected(_)));
+        assert_eq!(s.metrics.counter(C_SUBMITTED), 4, "no second attempt for a rejection");
+        s.shutdown();
+    }
+
+    #[test]
+    fn breaker_trips_to_fallback_probes_and_recovers() {
+        use crate::tuner::{Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let model = mcunet(Primitive::Standard, 1);
+        let reference = model.clone();
+        let mut cache = TuningCache::in_memory();
+        let opts = ServeOptions {
+            max_batch: 1,
+            breaker_threshold: 3,
+            // effectively infinite: the test rewinds the cooldown by hand
+            // so it cannot race the (debug-build) inference speed
+            breaker_cooldown_us: 3_600_000_000,
+            ..ServeOptions::default()
+        };
+        let s = InferenceServer::start_tuned_with(
+            vec![model],
+            1,
+            &cfg,
+            Objective::Latency,
+            &mut cache,
+            opts,
+        );
+        let name = "mcunet-standard";
+        // three consecutive primary-plan panics trip the breaker
+        for _ in 0..3 {
+            s.supervisor.on_batch_panic(name, true, false, Instant::now(), &[]);
+        }
+        assert_eq!(s.metrics.counter(C_BREAKER_TRIPS), 1);
+        // while open: requests serve degraded on the compiled-default
+        // fallback, bit-exact with the plain engine (PR 3's invariant)
+        let mut rng = Rng::new(41);
+        let req = request(0, name, &mut rng);
+        let x = Tensor::from_vec(reference.input_shape, reference.input_q, req.input.clone());
+        let want = reference.forward(&x, true, &mut NoopMonitor);
+        let r = s.infer(req).unwrap();
+        assert!(r.degraded, "breaker open: the fallback plan serves");
+        assert_eq!(r.logits, want.data, "degraded serving stays bit-exact");
+        assert!(s.metrics.counter(C_DEGRADED_BATCHES) >= 1);
+        // expire the cooldown by hand: the next batch is a half-open
+        // probe on the tuned primary; its success closes the breaker
+        relock(&s.supervisor.breakers)
+            .get_mut(name)
+            .expect("the trip created the breaker entry")
+            .state = BreakerState::Open { until: Instant::now() };
+        let r = s.infer(request(1, name, &mut rng)).unwrap();
+        assert!(!r.degraded, "the probe runs the tuned primary again");
+        assert_eq!(s.metrics.counter(C_BREAKER_PROBES), 1);
+        assert_eq!(s.metrics.counter(C_BREAKER_RECOVERIES), 1);
+        // closed again: serving continues on the primary
+        let r = s.infer(request(2, name, &mut rng)).unwrap();
+        assert!(!r.degraded);
+        let stats = s.shutdown();
+        assert_eq!(stats.breaker_trips, 1);
+        assert_eq!(stats.served, 3);
+    }
+
+    #[test]
+    fn a_halfopen_probe_panic_reopens_the_breaker() {
+        let shard_registry = server_registry(1);
+        let sup = Supervisor::new(
+            shard_registry.shard(2),
+            &ServeOptions {
+                breaker_threshold: 2,
+                breaker_cooldown_us: 1_000,
+                ..ServeOptions::default()
+            },
+        );
+        let now = Instant::now();
+        // two consecutive primary-plan panics reach the threshold
+        sup.on_batch_panic("m", true, false, now, &[]);
+        assert!(!sup.plan_mode("m", true, now), "one panic is below the threshold");
+        sup.on_batch_panic("m", true, false, now, &[]);
+        assert_eq!(shard_registry.counter(C_BREAKER_TRIPS), 1);
+        assert!(sup.plan_mode("m", true, now), "open: degraded until the cooldown passes");
+        // cooldown expiry: the next resolution is a half-open probe
+        let later = now + Duration::from_micros(2_000);
+        assert!(!sup.plan_mode("m", true, later), "half-open: probe the primary");
+        assert_eq!(shard_registry.counter(C_BREAKER_PROBES), 1);
+        // the probe crashes: straight back to open, counted as a trip
+        sup.on_batch_panic("m", true, false, later, &[]);
+        assert_eq!(shard_registry.counter(C_BREAKER_TRIPS), 2);
+        assert!(sup.plan_mode("m", true, later), "reopened immediately");
+        // models without a fallback never degrade and never touch state
+        assert!(!sup.plan_mode("solo-model", false, now));
+        sup.on_batch_ok("solo-model", false, false);
+        assert!(relock(&sup.breakers).get("solo-model").is_none());
+    }
+
+    #[test]
+    fn shutdown_under_failure_drains_replies_exactly_once_and_joins() {
+        // a panic storm while shutting down: the flush must still answer
+        // every accepted request exactly once, join() must terminate,
+        // and the quarantine state must survive into the final stats
+        let faults = FaultPlan {
+            seed: 11,
+            panic_ppm: 1_000_000,
+            delay_ppm: 0,
+            error_ppm: 0,
+            delay_us: 0,
+        };
+        let cfg = McuConfig::default();
+        let mut s = InferenceServer::start_with(
+            vec![mcunet(Primitive::Standard, 1)],
+            2,
+            &cfg,
+            chaos_opts(faults),
+        );
+        let mut rng = Rng::new(43);
+        // quarantine one id up front (two crashing batches)
+        for _ in 0..2 {
+            let _ = s.infer(request(9, "mcunet-standard", &mut rng));
+        }
+        // now a burst, immediately followed by shutdown
+        let rxs: Vec<_> = (10..20u64)
+            .filter_map(|i| s.submit(request(i, "mcunet-standard", &mut rng)).ok())
+            .collect();
+        s.begin_shutdown();
+        let accepted = rxs.len() as u64;
+        for rx in &rxs {
+            // exactly one reply per accepted request, even mid-storm
+            rx.recv_timeout(Duration::from_secs(30))
+                .expect("an accepted request must be answered during the flush")
+                .expect_err("every batch panics in this storm");
+        }
+        for rx in &rxs {
+            assert!(
+                rx.try_recv().is_err(),
+                "no request may be answered twice"
+            );
+        }
+        s.join();
+        let stats = s.stats();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.quarantined, 1, "quarantine survives into the final stats");
+        assert!(stats.worker_panics >= 2 + accepted, "every batch crashed");
+        // conservation over the whole run, rejected race-path included
+        let submitted = s.metrics.counter(C_SUBMITTED);
+        assert_eq!(
+            stats.served + stats.shed + stats.errors,
+            submitted,
+            "served + shed + errors == submitted"
+        );
+    }
+
+    #[test]
+    fn seeded_chaos_conserves_requests_and_replies_exactly_once() {
+        // the in-process version of `convbench chaos`: mixed panics,
+        // delays and error returns under seeded dice; every accepted
+        // request gets exactly one reply and the counters conserve
+        let faults = FaultPlan {
+            seed: 7,
+            panic_ppm: 250_000,
+            delay_ppm: 150_000,
+            error_ppm: 150_000,
+            delay_us: 100,
+        };
+        let cfg = McuConfig::default();
+        let mut s = InferenceServer::start_with(
+            vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)],
+            2,
+            &cfg,
+            ServeOptions {
+                max_batch: 4,
+                deadline_us: 300,
+                queue_depth: 16,
+                respawn_base_us: 50,
+                respawn_max_us: 400,
+                faults,
+                ..ServeOptions::default()
+            },
+        );
+        let mut rng = Rng::new(0xC4A05);
+        let mut rxs = Vec::new();
+        for i in 0..48u64 {
+            let model = if i % 2 == 0 { "mcunet-standard" } else { "mcunet-shift" };
+            if let Ok(rx) = s.submit(request(i, model, &mut rng)) {
+                rxs.push(rx);
+            }
+        }
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        for rx in &rxs {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(_)) => failed += 1,
+                Err(_) => panic!("an accepted request never got its reply"),
+            }
+        }
+        for rx in &rxs {
+            assert!(rx.try_recv().is_err(), "exactly one reply per request");
+        }
+        s.join();
+        let submitted = s.metrics.counter(C_SUBMITTED);
+        let served = s.metrics.counter(C_SERVED);
+        let shed = s.metrics.counter(C_SHED);
+        let errors = s.metrics.counter(C_ERRORS);
+        assert_eq!(served + shed + errors, submitted, "request conservation");
+        assert_eq!(ok, served, "client-side and server-side served counts agree");
+        assert_eq!(failed + ok, rxs.len() as u64);
+        let stats = s.shutdown();
+        assert_eq!(stats.respawns, stats.worker_panics, "one respawn per caught panic");
     }
 }

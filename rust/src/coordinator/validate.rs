@@ -9,6 +9,7 @@
 use crate::models::LayerParams;
 use crate::nn::Tensor;
 use crate::runtime::InputI32;
+use crate::util::json::Json;
 #[cfg(feature = "pjrt")]
 use crate::{
     models::{experiment_input, experiment_layer},
@@ -179,6 +180,37 @@ pub fn validate_all(dir: &str) -> Result<(Vec<Validation>, bool), String> {
     Ok((results, all_ok))
 }
 
+/// Check the serving conservation invariant on an exported metrics
+/// snapshot: every submitted request is accounted exactly once, so
+/// `requests_served_total + requests_shed_total + request_errors_total
+/// == requests_submitted_total`. The chaos harness (`convbench chaos`,
+/// and CI's seeded smoke) runs this against the post-run snapshot — a
+/// worker that loses a reply or double-counts one breaks the equation.
+pub fn validate_request_conservation(j: &Json) -> Result<(), String> {
+    let counters = j
+        .get("counters")
+        .and_then(|v| v.as_obj())
+        .ok_or("missing counters object")?;
+    let read = |name: &str| -> Result<i64, String> {
+        counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_i64())
+            .ok_or_else(|| format!("missing {name} counter"))
+    };
+    let submitted = read("requests_submitted_total")?;
+    let served = read("requests_served_total")?;
+    let shed = read("requests_shed_total")?;
+    let errors = read("request_errors_total")?;
+    if served + shed + errors != submitted {
+        return Err(format!(
+            "request conservation violated: served {served} + shed {shed} + errors {errors} \
+             != submitted {submitted}"
+        ));
+    }
+    Ok(())
+}
+
 /// CLI entry point for `convbench validate` in builds without the PJRT
 /// runtime: report how to enable it and exit non-zero.
 #[cfg(not(feature = "pjrt"))]
@@ -245,5 +277,23 @@ mod tests {
             ..v
         };
         assert!(!v2.passed());
+    }
+
+    #[test]
+    fn request_conservation_checks_the_counter_equation() {
+        let ok = Json::parse(
+            r#"{"counters": {"requests_submitted_total": 10, "requests_served_total": 6,
+                "requests_shed_total": 3, "request_errors_total": 1}}"#,
+        )
+        .unwrap();
+        assert!(validate_request_conservation(&ok).is_ok());
+        let bad = Json::parse(
+            r#"{"counters": {"requests_submitted_total": 10, "requests_served_total": 6,
+                "requests_shed_total": 3, "request_errors_total": 2}}"#,
+        )
+        .unwrap();
+        let e = validate_request_conservation(&bad).unwrap_err();
+        assert!(e.contains("conservation violated"), "{e}");
+        assert!(validate_request_conservation(&Json::parse("{}").unwrap()).is_err());
     }
 }

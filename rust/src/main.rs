@@ -24,6 +24,15 @@
 //!                 [--trace-out F] [--metrics-out F] [--stats-out F]
 //!                                  # micro-batched inference service demo;
 //!                                  # emits trace/metrics/stats artifacts
+//! convbench chaos [--seed S] [--requests N] [--workers W]
+//!                 [--panic-ppm P] [--delay-ppm P] [--error-ppm P]
+//!                 [--fault-delay-us D] [--fault-seed S]
+//!                 [--breaker-threshold K] [--breaker-cooldown-us C]
+//!                 [--retry-attempts A] [--min-respawns R]
+//!                 [--min-breaker-trips T] [--metrics-out F]
+//!                                  # seeded fault-injection storm; fails
+//!                                  # unless exactly-one-reply and request
+//!                                  # conservation hold
 //! convbench check-obs [--trace F] [--metrics F]
 //!                                  # validate exported observability JSON
 //! ```
@@ -70,15 +79,20 @@ fn main() {
             let opts = coordinator::ServeOptions::from_args(&args);
             coordinator::serve_cli(n, workers, opts, &outs);
         }
+        Some("chaos") => coordinator::chaos_cli(&args),
         Some("check-obs") => cmd_check_obs(&args),
         _ => {
             eprintln!(
-                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve|check-obs> \
+                "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve|chaos|check-obs> \
                  [--exp N] [--out DIR] [--quick] \
                  (profile: [--model M] [--scalar] [--json]) \
                  (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] \
                  [--queue-depth Q] [--trace-sample N] [--trace-out F] [--metrics-out F] \
                  [--stats-out F]) \
+                 (chaos: [--seed S] [--requests N] [--workers W] [--panic-ppm P] \
+                 [--delay-ppm P] [--error-ppm P] [--fault-delay-us D] [--breaker-threshold K] \
+                 [--retry-attempts A] [--min-respawns R] [--min-breaker-trips T] \
+                 [--metrics-out F]) \
                  (check-obs: [--trace F] [--metrics F])"
             );
             std::process::exit(2);

@@ -34,7 +34,7 @@ pub use depthwise::QuantDepthwise;
 pub use graph::{Graph, Layer, LayerProfile, Model, Node, NodeOp, ResidualAdd, ValueId};
 pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
 pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
-pub use plan::ExecPlan;
+pub use plan::{ExecPlan, PlanPair};
 pub use shift::{uniform_shifts, ShiftConv};
 pub use tensor::{Shape, Tensor};
 pub use workspace::{Workspace, WorkspacePlan};

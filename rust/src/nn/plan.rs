@@ -959,6 +959,73 @@ pub fn conv_blocked_into<M: Monitor>(
     }
 }
 
+/// A tuned execution plan paired with its known-good fallback.
+///
+/// The serving layer's per-model circuit breaker degrades from the
+/// tuned `primary` to the compiled-default `fallback` after repeated
+/// worker panics (PR 3 pins the two bit-exact, so degradation changes
+/// latency, never logits). Untuned deployments carry no fallback — the
+/// default plan *is* the primary — and [`PlanPair::select`] then always
+/// returns the primary.
+#[derive(Clone, Debug)]
+pub struct PlanPair {
+    primary: ExecPlan,
+    fallback: Option<ExecPlan>,
+}
+
+impl PlanPair {
+    /// Pair a tuned primary with its compiled-default fallback. Both
+    /// plans must share the model's input/output contract — they were
+    /// compiled from the same model, only the per-node schedule differs.
+    pub fn tuned(primary: ExecPlan, fallback: ExecPlan) -> Self {
+        assert_eq!(
+            primary.model_name(),
+            fallback.model_name(),
+            "plan pair must be compiled from the same model"
+        );
+        assert_eq!(primary.input_shape(), fallback.input_shape());
+        assert_eq!(primary.output_len(), fallback.output_len());
+        Self {
+            primary,
+            fallback: Some(fallback),
+        }
+    }
+
+    /// A pair with no degradation target: the primary is already the
+    /// compiled default.
+    pub fn solo(primary: ExecPlan) -> Self {
+        Self {
+            primary,
+            fallback: None,
+        }
+    }
+
+    /// The plan served while the model's breaker is closed.
+    pub fn primary(&self) -> &ExecPlan {
+        &self.primary
+    }
+
+    /// The known-good plan served while the breaker is open, if any.
+    pub fn fallback(&self) -> Option<&ExecPlan> {
+        self.fallback.as_ref()
+    }
+
+    /// Whether a degradation target exists.
+    pub fn has_fallback(&self) -> bool {
+        self.fallback.is_some()
+    }
+
+    /// Resolve the plan for the current breaker state: the fallback when
+    /// `degraded` (and one exists), the primary otherwise.
+    pub fn select(&self, degraded: bool) -> &ExecPlan {
+        if degraded {
+            self.fallback.as_ref().unwrap_or(&self.primary)
+        } else {
+            &self.primary
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

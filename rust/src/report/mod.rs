@@ -229,6 +229,11 @@ pub fn server_stats_json(stats: &crate::coordinator::ServerStats) -> String {
         .field("exec_p99_us", stats.exec_p99_us)
         .field("exec_mean_us", stats.exec_mean_us)
         .field("batch_hist", Json::Arr(hist))
+        .field("worker_panics", stats.worker_panics)
+        .field("respawns", stats.respawns)
+        .field("quarantined", stats.quarantined)
+        .field("breaker_trips", stats.breaker_trips)
+        .field("degraded_batches", stats.degraded_batches)
         .to_string()
 }
 
@@ -308,6 +313,11 @@ mod tests {
             exec_p99_us: 700.0,
             exec_mean_us: 330.5,
             batch_hist: vec![4, 2, 0, 1],
+            worker_panics: 3,
+            respawns: 3,
+            quarantined: 1,
+            breaker_trips: 2,
+            degraded_batches: 5,
         };
         let j = Json::parse(&server_stats_json(&stats)).expect("valid json");
         assert_eq!(j.get("served").and_then(|v| v.as_i64()), Some(12));
@@ -317,6 +327,12 @@ mod tests {
         assert_eq!(hist.len(), 4);
         assert_eq!(hist[0].as_i64(), Some(4));
         assert!((j.get("mean_us").unwrap().as_f64().unwrap() - 450.5).abs() < 1e-9);
+        // the fault-tolerance counters survive the round trip
+        assert_eq!(j.get("worker_panics").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(j.get("respawns").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(j.get("quarantined").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(j.get("breaker_trips").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(j.get("degraded_batches").and_then(|v| v.as_i64()), Some(5));
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Seeded, jittered exponential backoff — substitute for the `backoff`
+//! crate in the offline vendor set.
+//!
+//! Used by the worker supervisor (respawn delays after a panic) and by
+//! the client-side retry helper. The delay sequence is exponential with
+//! *full-range-halved* jitter: attempt `k` draws uniformly from
+//! `[base·2^k / 2, base·2^k]`, clamped to a configured ceiling. The
+//! jitter source is the deterministic [`crate::util::prng::Rng`], so a
+//! seeded chaos run replays the exact same respawn schedule.
+
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+
+/// Jittered exponential backoff with a deterministic jitter source.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base_us: u64,
+    max_us: u64,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Create a policy starting at `base_us` and clamped to `max_us`.
+    ///
+    /// `seed` drives the jitter; two instances with the same parameters
+    /// and seed produce identical delay sequences.
+    pub fn new(base_us: u64, max_us: u64, seed: u64) -> Self {
+        Self {
+            base_us: base_us.max(1),
+            max_us: max_us.max(1),
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Number of delays handed out since construction or the last
+    /// [`Backoff::reset`].
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Forget the failure streak: the next delay starts from `base_us`
+    /// again. Called after a worker incarnation serves a batch cleanly.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Next delay in the sequence: uniform in `[d/2, d]` where
+    /// `d = min(base · 2^attempt, max)`. Advances the attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(32);
+        self.attempt = self.attempt.saturating_add(1);
+        let ceiling = self
+            .base_us
+            .saturating_mul(1u64 << exp)
+            .min(self.max_us)
+            .max(1);
+        let floor = (ceiling / 2).max(1);
+        let jittered = floor + self.rng.below(ceiling - floor + 1);
+        Duration::from_micros(jittered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_exponentially_until_the_clamp() {
+        let mut b = Backoff::new(100, 1_600, 7);
+        let mut prev_ceiling = 0u64;
+        for k in 0..8u32 {
+            let d = b.next_delay().as_micros() as u64;
+            let ceiling = (100u64 << k.min(32)).min(1_600);
+            let floor = (ceiling / 2).max(1);
+            assert!(
+                d >= floor && d <= ceiling,
+                "attempt {k}: delay {d} outside [{floor}, {ceiling}]"
+            );
+            // the clamp makes the ceiling monotone non-decreasing
+            assert!(ceiling >= prev_ceiling);
+            prev_ceiling = ceiling;
+        }
+        // well past the clamp: still bounded by max_us
+        for _ in 0..20 {
+            assert!(b.next_delay().as_micros() as u64 <= 1_600);
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let mut a = Backoff::new(50, 10_000, 0xC0FFEE);
+        let mut b = Backoff::new(50, 10_000, 0xC0FFEE);
+        for _ in 0..16 {
+            assert_eq!(a.next_delay(), b.next_delay());
+        }
+    }
+
+    #[test]
+    fn reset_restarts_from_the_base_delay() {
+        let mut b = Backoff::new(100, 1 << 20, 3);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        assert_eq!(b.attempts(), 6);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let d = b.next_delay().as_micros() as u64;
+        assert!((50..=100).contains(&d), "post-reset delay {d} not in [50, 100]");
+    }
+
+    #[test]
+    fn degenerate_parameters_stay_positive() {
+        let mut b = Backoff::new(0, 0, 1);
+        for _ in 0..4 {
+            assert!(b.next_delay() >= Duration::from_micros(1));
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Deterministic fault injection for the serving worker loop.
+//!
+//! The chaos harness (`convbench chaos`) needs to provoke worker panics,
+//! stalls and error returns *reproducibly*, without taxing the
+//! production path. The design mirrors the zero-cost `TraceSink`
+//! pattern from `obs::trace`: a [`FaultInjector`] trait whose no-op
+//! implementation ([`NoopFaults`]) inlines away entirely, and a seeded
+//! implementation ([`SeededFaults`]) that rolls a deterministic die at
+//! each named [`FaultSite`] in the worker loop. The worker loop is
+//! generic over the injector, so a server started without a
+//! [`FaultPlan`] monomorphises to exactly the code it had before this
+//! module existed.
+
+use std::time::Duration;
+
+use crate::util::cli::Args;
+use crate::util::prng::Rng;
+
+/// Named injection points inside the worker batch-serving path.
+///
+/// Each drained batch passes the sites in order; the catalog is part of
+/// the documented fault model (see `docs/ARCHITECTURE.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Before inputs are staged into the batch arena.
+    Stage,
+    /// Before the compiled plan executes the staged batch.
+    Exec,
+    /// Before per-lane replies are sent.
+    Respond,
+}
+
+/// What the injector decided for one pass through a site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Proceed normally.
+    None,
+    /// Panic at the site (caught by the worker supervisor).
+    Panic,
+    /// Sleep for the given duration, then proceed.
+    Delay(Duration),
+    /// Fail the batch with a typed retriable error instead of panicking.
+    Error,
+}
+
+/// Injection rates and seed for a chaos run. Rates are per-million per
+/// site visit; the all-zero default ([`FaultPlan::disabled`]) injects
+/// nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the per-worker dice (worker id is folded in).
+    pub seed: u64,
+    /// Probability of a panic per site visit, in parts per million.
+    pub panic_ppm: u32,
+    /// Probability of a delay per site visit, in parts per million.
+    pub delay_ppm: u32,
+    /// Probability of an error return per site visit, in parts per million.
+    pub error_ppm: u32,
+    /// Duration of an injected delay, in microseconds.
+    pub delay_us: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: all rates zero.
+    pub fn disabled() -> Self {
+        Self {
+            seed: 0,
+            panic_ppm: 0,
+            delay_ppm: 0,
+            error_ppm: 0,
+            delay_us: 0,
+        }
+    }
+
+    /// True when any injection rate is nonzero — the server only pays
+    /// for fault dice when this holds.
+    pub fn enabled(&self) -> bool {
+        self.panic_ppm > 0 || self.delay_ppm > 0 || self.error_ppm > 0
+    }
+
+    /// Parse `--fault-seed`, `--panic-ppm`, `--delay-ppm`,
+    /// `--error-ppm` and `--fault-delay-us` from CLI arguments.
+    pub fn from_args(args: &Args) -> Self {
+        Self {
+            seed: args.get_or("fault-seed", 0u64),
+            panic_ppm: args.get_or("panic-ppm", 0u32),
+            delay_ppm: args.get_or("delay-ppm", 0u32),
+            error_ppm: args.get_or("error-ppm", 0u32),
+            delay_us: args.get_or("fault-delay-us", 200u64),
+        }
+    }
+}
+
+/// Zero-cost fault hook for the worker loop.
+///
+/// The default method body is the production behaviour; `NoopFaults`
+/// adds nothing on top, so the non-chaos monomorphisation of the worker
+/// loop contains no branches for injection.
+pub trait FaultInjector: Send + 'static {
+    /// Roll the dice at `site`; the worker acts on the returned action.
+    #[inline]
+    fn roll(&mut self, _site: FaultSite) -> FaultAction {
+        FaultAction::None
+    }
+}
+
+/// The production injector: never injects, compiles away.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopFaults;
+
+impl FaultInjector for NoopFaults {}
+
+/// Seeded injector: one deterministic die per worker, partitioned into
+/// panic / delay / error bands so a single draw decides the action.
+#[derive(Clone, Debug)]
+pub struct SeededFaults {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl SeededFaults {
+    /// Build the injector for one worker; `worker_id` is folded into the
+    /// plan seed so workers roll independent but reproducible dice.
+    pub fn new(plan: FaultPlan, worker_id: u64) -> Self {
+        let rng = Rng::new(plan.seed ^ worker_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Self { plan, rng }
+    }
+}
+
+impl FaultInjector for SeededFaults {
+    fn roll(&mut self, _site: FaultSite) -> FaultAction {
+        let draw = self.rng.below(1_000_000) as u32;
+        let panic_hi = self.plan.panic_ppm;
+        let delay_hi = panic_hi.saturating_add(self.plan.delay_ppm);
+        let error_hi = delay_hi.saturating_add(self.plan.error_ppm);
+        if draw < panic_hi {
+            FaultAction::Panic
+        } else if draw < delay_hi {
+            FaultAction::Delay(Duration::from_micros(self.plan.delay_us))
+        } else if draw < error_hi {
+            FaultAction::Error
+        } else {
+            FaultAction::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_reports_disabled_and_noop_never_injects() {
+        assert!(!FaultPlan::disabled().enabled());
+        let mut noop = NoopFaults;
+        for site in [FaultSite::Stage, FaultSite::Exec, FaultSite::Respond] {
+            assert_eq!(noop.roll(site), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn seeded_faults_replay_identically() {
+        let plan = FaultPlan {
+            seed: 42,
+            panic_ppm: 300_000,
+            delay_ppm: 200_000,
+            error_ppm: 100_000,
+            delay_us: 50,
+        };
+        assert!(plan.enabled());
+        let mut a = SeededFaults::new(plan, 1);
+        let mut b = SeededFaults::new(plan, 1);
+        for _ in 0..256 {
+            assert_eq!(a.roll(FaultSite::Exec), b.roll(FaultSite::Exec));
+        }
+    }
+
+    #[test]
+    fn distinct_workers_roll_distinct_dice() {
+        let plan = FaultPlan {
+            seed: 42,
+            panic_ppm: 500_000,
+            delay_ppm: 0,
+            error_ppm: 0,
+            delay_us: 0,
+        };
+        let mut a = SeededFaults::new(plan, 0);
+        let mut b = SeededFaults::new(plan, 1);
+        let same = (0..64)
+            .filter(|_| a.roll(FaultSite::Stage) == b.roll(FaultSite::Stage))
+            .count();
+        assert!(same < 64, "two workers rolled 64 identical actions");
+    }
+
+    #[test]
+    fn rates_partition_the_draw_space() {
+        // with panic+delay+error == 1_000_000 every roll injects something
+        let plan = FaultPlan {
+            seed: 9,
+            panic_ppm: 400_000,
+            delay_ppm: 300_000,
+            error_ppm: 300_000,
+            delay_us: 10,
+        };
+        let mut f = SeededFaults::new(plan, 3);
+        let (mut p, mut d, mut e) = (0u32, 0u32, 0u32);
+        for _ in 0..1_000 {
+            match f.roll(FaultSite::Respond) {
+                FaultAction::Panic => p += 1,
+                FaultAction::Delay(dur) => {
+                    assert_eq!(dur, Duration::from_micros(10));
+                    d += 1;
+                }
+                FaultAction::Error => e += 1,
+                FaultAction::None => panic!("saturated plan rolled None"),
+            }
+        }
+        assert!(p > 0 && d > 0 && e > 0);
+    }
+}

@@ -1,8 +1,10 @@
 //! Small self-contained utilities substituting for crates that are not
 //! available in the offline vendor set (clap, criterion, proptest, serde).
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod fnv;
 pub mod json;
 pub mod prng;
