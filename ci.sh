@@ -45,6 +45,21 @@ echo "==> smoke: warm-cache replay (gated: must re-score nothing)"
 # just printing it
 ./target/release/convbench tune --objective latency --quick --out results/ci --expect-warm
 
+echo "==> smoke: convbench tune --backend vec --quick (host-vectorized backend over the zoo)"
+# the backend axis end to end: the whole zoo (residual graphs included)
+# tuned under the vec policy deploys the lane kernels wherever im2col
+# admits them; the vec policy's cache keys are disjoint from the scalar
+# runs above, so the zoo portion is a cold tune by construction (the
+# Table 2 comparison always tunes scalar and replays warm from run one)
+./target/release/convbench tune --objective latency --backend vec --quick --out results/ci
+
+echo "==> smoke: vec-policy warm-cache replay (gated, proves backend-keyed entries round-trip)"
+# re-running under the same policy must replay every decision from the
+# CACHE_VERSION-3 entries written by the cold run — including their
+# "backend" field; a parse regression (e.g. after a cache-version bump)
+# would re-score and fail the gate
+./target/release/convbench tune --objective latency --backend vec --quick --out results/ci --expect-warm
+
 echo "==> bench smoke: infer_hot (zero-alloc fixed + tuned paths, analytic cold tune)"
 # quick mode keeps the sample count CI-sized; the binary asserts that
 # steady-state forward_in AND the tuned-schedule run_in (compiled

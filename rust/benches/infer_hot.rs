@@ -41,7 +41,15 @@
 //!    armed-but-benign `FaultPlan` (SeededFaults on the hot path,
 //!    faults effectively never firing) vs the faults-disabled baseline
 //!    (NoopFaults monomorphization); the ratio is the cost of leaving
-//!    the chaos scaffolding compiled in.
+//!    the chaos scaffolding compiled in;
+//! 8. **host-backend speedup** — per-kernel scalar-reference vs
+//!    vec-lanes wall time on paper-shaped workloads (blocked im2col
+//!    matmul, depthwise, shift, dense; bit-exactness asserted first,
+//!    min-of-samples ratios recorded as `backend_speedup_*`, with the
+//!    blocked-matmul and depthwise ratios asserted > 1.0), the whole
+//!    zoo tuned and run under the `scalar` and `vec` backend policies
+//!    (bit-exact per graph), and the vec-backend `run_in` hot loop
+//!    pinned at **zero** steady-state allocations like the scalar one.
 //!
 //! Run: `cargo bench --bench infer_hot` (CI runs it with
 //! `CONVBENCH_QUICK=1`; see `ci.sh`). Writes `results/BENCH_infer.json`
@@ -55,10 +63,18 @@ use std::time::Instant;
 use convbench::analytic::Primitive;
 use convbench::mcu::McuConfig;
 use convbench::models::{mcunet, mcunet_residual};
-use convbench::nn::{ExecPlan, Graph, NoopMonitor, Tensor, Workspace};
+use convbench::nn::plan::conv_blocked_into;
+use convbench::nn::{
+    uniform_shifts, vec as veck, ExecPlan, Graph, NoopMonitor, QuantConv, QuantDense,
+    QuantDepthwise, Shape, ShiftConv, Tensor, Workspace,
+};
 use convbench::obs::{plan_node_costs, DriftMonitor, ExecTracer, NoopTraceSink};
+use convbench::quant::QParam;
 use convbench::report::write_report;
-use convbench::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
+use convbench::tuner::{
+    tune_graph_shape, tune_graph_shape_backend, tune_model_shape, BackendSel, Objective,
+    TuningCache,
+};
 use convbench::util::bench::Bench;
 use convbench::util::json::Json;
 use convbench::util::prng::Rng;
@@ -418,6 +434,222 @@ fn main() {
     assert!(drift_report.records.iter().all(|r| r.samples == 3));
     let dfit = drift_report.fit.as_ref().expect("model-wide fit over the zoo");
 
+    // --- 6. host-backend speedup: scalar reference vs vec lanes -------
+    // per-kernel wall time on paper-shaped workloads, bit-exactness
+    // asserted before any timing; ratios use min-of-samples (the least
+    // noise-contaminated observation of each kernel)
+    let widen16 = |w: &[i8]| -> Vec<i16> { w.iter().map(|&v| v as i16).collect() };
+    let rand_i8 = |rng: &mut Rng, n: usize, lim: i8| -> Vec<i8> {
+        let mut v = vec![0i8; n];
+        rng.fill_i8(&mut v, -lim, lim);
+        v
+    };
+    let rand_bias = |rng: &mut Rng, n: usize| -> Vec<i32> {
+        rand_i8(rng, n, 16).iter().map(|&b| b as i32).collect()
+    };
+    let mut krng = Rng::new(0xBEC);
+
+    // blocked im2col matmul: 16×16×32 → 32, k=3 (the zoo torso shape),
+    // CMSIS design-point (2, 2) blocking
+    let conv = QuantConv {
+        kernel: 3,
+        groups: 1,
+        in_channels: 32,
+        out_channels: 32,
+        pad: 1,
+        weights: rand_i8(&mut krng, 32 * 3 * 3 * 32, 8),
+        bias: rand_bias(&mut krng, 32),
+        q_in: QParam::new(7),
+        q_w: QParam::new(7),
+        q_out: QParam::new(5),
+    };
+    let mut cx = Tensor::zeros(Shape::new(16, 16, 32), QParam::new(7));
+    Rng::new(0xC0).fill_i8(&mut cx.data, -16, 16);
+    let (pb, fb) = (2usize, 2usize);
+    let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+    let mut kcols = vec![0i16; pb * klen];
+    let mut kacc = vec![0i32; pb * fb];
+    let conv_wq = widen16(&conv.weights);
+    let mut cy_s = Tensor::zeros(conv.output_shape(&cx.shape), conv.q_out);
+    let mut cy_v = cy_s.clone();
+    conv_blocked_into(&conv, &cx, &mut cy_s, pb, fb, &mut kcols, &mut kacc, &mut NoopMonitor);
+    veck::conv_blocked_vec_into(
+        &conv, &cx, &mut cy_v, pb, fb, &mut kcols, &mut kacc, &conv_wq, &mut NoopMonitor,
+    );
+    assert_eq!(cy_s.data, cy_v.data, "vec blocked conv must stay bit-exact");
+    b.run("kernel/conv_blocked_2x2/scalar", || {
+        conv_blocked_into(&conv, &cx, &mut cy_s, pb, fb, &mut kcols, &mut kacc, &mut NoopMonitor);
+        cy_s.data[0]
+    });
+    b.run("kernel/conv_blocked_2x2/vec", || {
+        veck::conv_blocked_vec_into(
+            &conv, &cx, &mut cy_v, pb, fb, &mut kcols, &mut kacc, &conv_wq, &mut NoopMonitor,
+        );
+        cy_v.data[0]
+    });
+
+    // depthwise: C = 64 across the host lanes, 16×16, k=3
+    let dw = QuantDepthwise {
+        kernel: 3,
+        channels: 64,
+        pad: 1,
+        weights: rand_i8(&mut krng, 64 * 3 * 3, 8),
+        bias: rand_bias(&mut krng, 64),
+        q_in: QParam::new(7),
+        q_w: QParam::new(7),
+        q_out: QParam::new(5),
+    };
+    let mut dwx = Tensor::zeros(Shape::new(16, 16, 64), QParam::new(7));
+    Rng::new(0xD0).fill_i8(&mut dwx.data, -16, 16);
+    let dw_wq = veck::depthwise_wq(&dw);
+    let mut dacc = vec![0i32; dw.channels];
+    let mut dy_s = Tensor::zeros(dw.output_shape(&dwx.shape), dw.q_out);
+    let mut dy_v = dy_s.clone();
+    dw.forward_simd_into(&dwx, &mut dy_s, &mut NoopMonitor);
+    veck::depthwise_vec_into(&dw, &dwx, &mut dy_v, &dw_wq, &mut dacc, &mut NoopMonitor);
+    assert_eq!(dy_s.data, dy_v.data, "vec depthwise must stay bit-exact");
+    b.run("kernel/depthwise_c64/scalar", || {
+        dw.forward_simd_into(&dwx, &mut dy_s, &mut NoopMonitor);
+        dy_s.data[0]
+    });
+    b.run("kernel/depthwise_c64/vec", || {
+        veck::depthwise_vec_into(&dw, &dwx, &mut dy_v, &dw_wq, &mut dacc, &mut NoopMonitor);
+        dy_v.data[0]
+    });
+
+    // shift: 64 → 64 pointwise with per-channel shift gather, 16×16
+    let sc = ShiftConv {
+        in_channels: 64,
+        out_channels: 64,
+        shifts: uniform_shifts(64, 3),
+        weights: rand_i8(&mut krng, 64 * 64, 8),
+        bias: rand_bias(&mut krng, 64),
+        q_in: QParam::new(7),
+        q_w: QParam::new(7),
+        q_out: QParam::new(5),
+    };
+    let mut sx = Tensor::zeros(Shape::new(16, 16, 64), QParam::new(7));
+    Rng::new(0xE0).fill_i8(&mut sx.data, -16, 16);
+    let s_wq = widen16(&sc.weights);
+    let mut sca = vec![0i16; sc.in_channels];
+    let mut scb = vec![0i16; sc.in_channels];
+    let mut sy_s = Tensor::zeros(Shape::new(16, 16, 64), sc.q_out);
+    let mut sy_v = sy_s.clone();
+    sc.forward_simd_with(&sx, &mut sy_s, &mut sca, &mut scb, &s_wq, &mut NoopMonitor);
+    veck::shift_vec_with(&sc, &sx, &mut sy_v, &mut sca, &mut scb, &s_wq, &mut NoopMonitor);
+    assert_eq!(sy_s.data, sy_v.data, "vec shift must stay bit-exact");
+    b.run("kernel/shift_64/scalar", || {
+        sc.forward_simd_with(&sx, &mut sy_s, &mut sca, &mut scb, &s_wq, &mut NoopMonitor);
+        sy_s.data[0]
+    });
+    b.run("kernel/shift_64/vec", || {
+        veck::shift_vec_with(&sc, &sx, &mut sy_v, &mut sca, &mut scb, &s_wq, &mut NoopMonitor);
+        sy_v.data[0]
+    });
+
+    // dense: 256 → 64 (the zoo classifier head, scaled up)
+    let dn = QuantDense {
+        in_features: 256,
+        out_features: 64,
+        weights: rand_i8(&mut krng, 64 * 256, 8),
+        bias: rand_bias(&mut krng, 64),
+        q_in: QParam::new(7),
+        q_w: QParam::new(7),
+        q_out: QParam::new(5),
+    };
+    let dn_x = rand_i8(&mut krng, 256, 16);
+    let dn_wq = widen16(&dn.weights);
+    let mut dn_xq = vec![0i16; dn.in_features];
+    let mut dn_s = vec![0i8; dn.out_features];
+    let mut dn_v = vec![0i8; dn.out_features];
+    dn.forward_simd_with(&dn_x, &mut dn_s, &mut dn_xq, &dn_wq, &mut NoopMonitor);
+    veck::dense_vec_with(&dn, &dn_x, &mut dn_v, &mut dn_xq, &dn_wq, &mut NoopMonitor);
+    assert_eq!(dn_s, dn_v, "vec dense must stay bit-exact");
+    b.run("kernel/dense_256x64/scalar", || {
+        dn.forward_simd_with(&dn_x, &mut dn_s, &mut dn_xq, &dn_wq, &mut NoopMonitor);
+        dn_s[0]
+    });
+    b.run("kernel/dense_256x64/vec", || {
+        veck::dense_vec_with(&dn, &dn_x, &mut dn_v, &mut dn_xq, &dn_wq, &mut NoopMonitor);
+        dn_v[0]
+    });
+
+    // --- 6b. whole zoo tuned + run under both backend policies --------
+    // each graph tuned twice (scalar / vec policy, shared cache), every
+    // vec plan proven bit-exact and event-stream-identical to its
+    // scalar twin, then the full zoo timed back-to-back per policy
+    let mut zcache = TuningCache::in_memory();
+    let mut zoo_scalar: Vec<(ExecPlan, Workspace)> = Vec::new();
+    let mut zoo_vec: Vec<(ExecPlan, Workspace)> = Vec::new();
+    let mut zoo_inputs: Vec<Tensor> = Vec::new();
+    for g in &zoo_graphs {
+        let (ss, _) =
+            tune_graph_shape_backend(g, &cfg, Objective::Latency, BackendSel::Scalar, &mut zcache);
+        let (sv, _) =
+            tune_graph_shape_backend(g, &cfg, Objective::Latency, BackendSel::Vec, &mut zcache);
+        let ps = ss.compile_graph(g);
+        let pv = sv.compile_graph(g);
+        let mut ws_s = Workspace::for_plan(&ps);
+        let mut ws_v = Workspace::for_plan(&pv);
+        let mut zx = Tensor::zeros(g.input_shape, g.input_q);
+        Rng::new(13).fill_i8(&mut zx.data, -64, 63);
+        {
+            use convbench::nn::CountingMonitor;
+            let mut ma = CountingMonitor::new();
+            let want = ps.run_in(&zx, &mut ws_s, &mut ma).data.clone();
+            let mut mb = CountingMonitor::new();
+            let got = pv.run_in(&zx, &mut ws_v, &mut mb);
+            assert_eq!(want, got.data, "{}: vec policy must stay bit-exact", g.name);
+            assert_eq!(
+                ma.counts, mb.counts,
+                "{}: vec policy must emit the identical event stream",
+                g.name
+            );
+        }
+        zoo_scalar.push((ps, ws_s));
+        zoo_vec.push((pv, ws_v));
+        zoo_inputs.push(zx);
+    }
+    b.run("zoo/tuned_run_in/backend_scalar", || {
+        let mut last = 0i8;
+        for ((p, ws), zx) in zoo_scalar.iter_mut().zip(&zoo_inputs) {
+            last = p.run_in(zx, ws, &mut NoopMonitor).data[0];
+        }
+        last
+    });
+    b.run("zoo/tuned_run_in/backend_vec", || {
+        let mut last = 0i8;
+        for ((p, ws), zx) in zoo_vec.iter_mut().zip(&zoo_inputs) {
+            last = p.run_in(zx, ws, &mut NoopMonitor).data[0];
+        }
+        last
+    });
+
+    // --- 6c. vec hot path: zero steady-state allocations too ----------
+    let vplan = ExecPlan::compile_default_vec(&model, true);
+    let mut vws = Workspace::for_plan(&vplan);
+    {
+        use convbench::nn::CountingMonitor;
+        let mut ma = CountingMonitor::new();
+        let want = bplan.run_in(&x, &mut seq_ws, &mut ma).data.clone();
+        let mut mb = CountingMonitor::new();
+        let got = vplan.run_in(&x, &mut vws, &mut mb);
+        assert_eq!(want, got.data, "default-vec plan must stay bit-exact");
+        assert_eq!(
+            ma.counts, mb.counts,
+            "default-vec plan must emit the identical event stream"
+        );
+    }
+    let v_alloc0 = allocations();
+    for _ in 0..iters {
+        black_box(vplan.run_in(&x, &mut vws, &mut NoopMonitor).data[0]);
+    }
+    let vec_steady_allocs = allocations() - v_alloc0;
+    assert_eq!(
+        vec_steady_allocs, 0,
+        "steady-state vec-backend run_in performed {vec_steady_allocs} heap allocations"
+    );
+
     b.write_csv("results/bench_infer_hot.csv");
 
     let mean_ns = |name: &str| -> f64 {
@@ -438,6 +670,38 @@ fn main() {
     let plan = ws.plan();
     let tplan = tws.plan();
     let rplan = rws.plan();
+
+    // host-backend speedups on min-of-samples (least noise); the paper's
+    // two SMLAD showcase kernels must actually win on the host, the
+    // gather-heavy shift and the small dense head are recorded as-is
+    let min_ns = |name: &str| -> f64 {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.ns.min)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = |base: &str, fast: &str| min_ns(base) / min_ns(fast);
+    let backend_speedup_matmul =
+        speedup("kernel/conv_blocked_2x2/scalar", "kernel/conv_blocked_2x2/vec");
+    let backend_speedup_depthwise =
+        speedup("kernel/depthwise_c64/scalar", "kernel/depthwise_c64/vec");
+    let backend_speedup_shift = speedup("kernel/shift_64/scalar", "kernel/shift_64/vec");
+    let backend_speedup_dense = speedup("kernel/dense_256x64/scalar", "kernel/dense_256x64/vec");
+    let backend_zoo_scalar_ns = mean_ns("zoo/tuned_run_in/backend_scalar");
+    let backend_zoo_vec_ns = mean_ns("zoo/tuned_run_in/backend_vec");
+    let backend_speedup_zoo =
+        min_ns("zoo/tuned_run_in/backend_scalar") / min_ns("zoo/tuned_run_in/backend_vec");
+    assert!(
+        backend_speedup_matmul > 1.0,
+        "vec blocked matmul must beat the scalar reference on the host \
+         (got {backend_speedup_matmul:.3}x)"
+    );
+    assert!(
+        backend_speedup_depthwise > 1.0,
+        "vec depthwise must beat the scalar reference on the host \
+         (got {backend_speedup_depthwise:.3}x)"
+    );
 
     // per-model activation-arena figures (liveness-packed vs the legacy
     // ping-pong provisioning) across the whole zoo — the memory baseline
@@ -515,6 +779,14 @@ fn main() {
         .field("chaos_armed_overhead", chaos_armed_overhead)
         .field("traced_off_steady_state_allocs", traced_off_steady_allocs / iters)
         .field("traced_on_steady_state_allocs", traced_on_steady_allocs / iters)
+        .field("backend_speedup_matmul", backend_speedup_matmul)
+        .field("backend_speedup_depthwise", backend_speedup_depthwise)
+        .field("backend_speedup_shift", backend_speedup_shift)
+        .field("backend_speedup_dense", backend_speedup_dense)
+        .field("backend_zoo_scalar_ns", backend_zoo_scalar_ns)
+        .field("backend_zoo_vec_ns", backend_zoo_vec_ns)
+        .field("backend_speedup_zoo", backend_speedup_zoo)
+        .field("vec_steady_state_allocs_per_inference", vec_steady_allocs / iters)
         .field("drift_fit_ns_per_cycle", dfit.a)
         .field("drift_fit_intercept_ns", dfit.b)
         .field("drift_fit_r2", dfit.r2)
@@ -561,6 +833,12 @@ fn main() {
         dfit.a,
         dfit.r2,
         drift_report.flagged()
+    );
+    println!(
+        "backend: scalar vs vec — blocked matmul {backend_speedup_matmul:.2}x, depthwise \
+         {backend_speedup_depthwise:.2}x, shift {backend_speedup_shift:.2}x, dense \
+         {backend_speedup_dense:.2}x; whole zoo tuned {backend_zoo_scalar_ns:.0} ns (scalar) \
+         vs {backend_zoo_vec_ns:.0} ns (vec) — {backend_speedup_zoo:.2}x, vec run_in 0 allocs"
     );
     println!("wrote results/BENCH_infer.json");
 }

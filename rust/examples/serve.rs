@@ -8,10 +8,14 @@
 //! fault-tolerance knobs are also live: `--panic-ppm 200000` makes one
 //! in five batches kill its worker, and the supervisor/breaker keep the
 //! demo serving anyway (see `convbench chaos` for the asserting
-//! harness).
+//! harness). `--backend vec` (or `auto`) deploys the host-vectorized
+//! kernels — logits and simulated MCU costs are bit-identical to
+//! scalar; the startup banner and the `--stats-out` JSON show which
+//! backend each model deployed with.
 //!
 //! Run: `cargo run --release --example serve -- [--requests N] [--workers W]
 //!       [--max-batch B] [--deadline-us D] [--queue-depth Q]
+//!       [--backend scalar|vec|auto]
 //!       [--trace-sample N] [--trace-out F] [--metrics-out F] [--stats-out F]
 //!       [--breaker-threshold K] [--panic-ppm P] [--delay-ppm P] [--error-ppm P]`
 

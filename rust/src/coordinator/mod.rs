@@ -14,7 +14,8 @@ pub use pipeline::{
     FloatAddConv, FloatConv, FloatDense, FloatDepthwise, FloatLayer, FloatModel, FloatShift,
 };
 pub use server::{
-    InferenceServer, Request, Response, RetryPolicy, ServeError, ServeOptions, ServerStats,
+    backend_summary, InferenceServer, Request, Response, RetryPolicy, ServeError, ServeOptions,
+    ServerStats,
 };
 pub use validate::{artifact_inputs, kernel_layer, validate_cli, validate_request_conservation};
 #[cfg(feature = "pjrt")]
@@ -75,9 +76,16 @@ pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions, outs: &ServeOutpu
     let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
     let mut server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
     println!(
-        "deployed: {names:?} ({workers} workers, max-batch {}, deadline {} µs, queue depth {})",
-        opts.max_batch, opts.deadline_us, opts.queue_depth
+        "deployed: {names:?} ({workers} workers, max-batch {}, deadline {} µs, queue depth {}, \
+         backend {})",
+        opts.max_batch,
+        opts.deadline_us,
+        opts.queue_depth,
+        opts.backend.as_str()
     );
+    for (model, backend) in server.stats().backends {
+        println!("  {model}: backend {backend}");
+    }
 
     let mut rng = Rng::new(7);
     // submit everything up front, then collect — micro-batches form

@@ -74,12 +74,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mcu::{McuConfig, Measurement};
-use crate::nn::{argmax, ExecPlan, Graph, Model, NoopMonitor, PlanPair, Workspace};
+use crate::nn::{argmax, Backend, ExecPlan, Graph, Model, NoopMonitor, PlanPair, Workspace};
 use crate::obs::{
     chrome_trace_json, plan_node_costs, DriftMonitor, DriftReport, ExecTracer, NodeCost, Registry,
     Shard, SpanKind, TraceEvent, TraceModelMeta, TraceRing,
 };
-use crate::tuner::{tune_graph_shape, tune_model_shape, Objective, TunedSchedule, TuningCache};
+use crate::tuner::{
+    tune_graph_shape_backend, tune_model_shape, tune_model_shape_backend, BackendSel, Objective,
+    TunedSchedule, TuningCache,
+};
 use crate::util::backoff::Backoff;
 use crate::util::fault::{FaultAction, FaultInjector, FaultPlan, FaultSite, NoopFaults, SeededFaults};
 use crate::util::json::Json;
@@ -209,6 +212,13 @@ pub struct ServeOptions {
     /// ([`FaultPlan::disabled`]) spawns workers on the no-op injector
     /// path, which monomorphizes to the fault-free worker loop.
     pub faults: FaultPlan,
+    /// Host-backend policy for the deployed kernels (`--backend
+    /// scalar|vec|auto`). Tuned deployments fold it into the search (and
+    /// its cache keys); untuned deployments flip the paper-default
+    /// schedule onto the vec backend wherever admissible for `vec`/
+    /// `auto`. Logits and modeled MCU costs are identical either way —
+    /// only host wall-clock changes.
+    pub backend: BackendSel,
 }
 
 impl Default for ServeOptions {
@@ -223,6 +233,7 @@ impl Default for ServeOptions {
             respawn_base_us: 100,
             respawn_max_us: 20_000,
             faults: FaultPlan::disabled(),
+            backend: BackendSel::Scalar,
         }
     }
 }
@@ -230,12 +241,19 @@ impl Default for ServeOptions {
 impl ServeOptions {
     /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth` /
     /// `--trace-sample` / `--breaker-threshold` / `--breaker-cooldown-us`
-    /// / `--respawn-base-us` / `--respawn-max-us` flags plus the
-    /// [`FaultPlan`] flags (defaults where absent) — shared by
+    /// / `--respawn-base-us` / `--respawn-max-us` / `--backend` flags
+    /// plus the [`FaultPlan`] flags (defaults where absent) — shared by
     /// `convbench serve`, `convbench chaos` and the serving example so
     /// the flag set cannot drift.
     pub fn from_args(args: &crate::util::cli::Args) -> Self {
         let d = Self::default();
+        let backend = match args.get("backend") {
+            None => d.backend,
+            Some(v) => match BackendSel::parse(v) {
+                Ok(b) => b,
+                Err(e) => panic!("invalid value for --backend: {e}"),
+            },
+        };
         Self {
             max_batch: args.get_or("max-batch", d.max_batch),
             deadline_us: args.get_or("deadline-us", d.deadline_us),
@@ -246,6 +264,7 @@ impl ServeOptions {
             respawn_base_us: args.get_or("respawn-base-us", d.respawn_base_us),
             respawn_max_us: args.get_or("respawn-max-us", d.respawn_max_us),
             faults: FaultPlan::from_args(args),
+            backend,
         }
     }
 }
@@ -467,6 +486,24 @@ pub struct ServerStats {
     /// Batches served degraded on the compiled-default fallback while a
     /// breaker was open.
     pub degraded_batches: u64,
+    /// Per-model host-backend summary of the deployed primary plan,
+    /// sorted by model name: `"scalar"` when every node runs the scalar
+    /// reference, else `"vec:<n>/<total>"` counting vec-backend nodes
+    /// (see [`backend_summary`]).
+    pub backends: Vec<(String, String)>,
+}
+
+/// Summarize which host backend a compiled schedule's nodes execute on:
+/// `"scalar"` if no node runs vectorized, else `"vec:<n>/<total>"`.
+/// Direct-lowered nodes and residual joins have no vec twin, so even an
+/// all-vec policy reports `n < total` on models with such nodes.
+pub fn backend_summary(cands: &[crate::tuner::Candidate]) -> String {
+    let vec_nodes = cands.iter().filter(|c| c.backend == Backend::VecLanes).count();
+    if vec_nodes == 0 {
+        "scalar".to_string()
+    } else {
+        format!("vec:{vec_nodes}/{}", cands.len())
+    }
 }
 
 struct Deployed {
@@ -916,7 +953,14 @@ impl InferenceServer {
         let mut registry = HashMap::new();
         for m in models {
             let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
-            let plan = ExecPlan::compile_default(&m, true);
+            // vec/auto flip the paper-default schedule onto the vec
+            // backend at its im2col nodes; the modeled MCU profile above
+            // is backend-invariant, so `mcu` needs no recompute.
+            let plan = if opts.backend == BackendSel::Scalar {
+                ExecPlan::compile_default(&m, true)
+            } else {
+                ExecPlan::compile_default_vec(&m, true)
+            };
             let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
             registry.insert(
                 m.name.clone(),
@@ -953,7 +997,7 @@ impl InferenceServer {
     ) -> Self {
         let mut registry = HashMap::new();
         for m in models {
-            let (schedule, _) = tune_model_shape(&m, cfg, objective, cache);
+            let (schedule, _) = tune_model_shape_backend(&m, cfg, objective, opts.backend, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile(&m);
             // the degradation target: the paper-default SIMD schedule,
@@ -1007,7 +1051,7 @@ impl InferenceServer {
     ) -> Self {
         let mut registry = HashMap::new();
         for g in graphs {
-            let (schedule, _) = tune_graph_shape(&g, cfg, objective, cache);
+            let (schedule, _) = tune_graph_shape_backend(&g, cfg, objective, opts.backend, cache);
             let mcu = schedule.as_measurement();
             let plan = schedule.compile_graph(&g);
             let fallback = ExecPlan::compile_graph_default(&g, true);
@@ -1311,6 +1355,12 @@ impl InferenceServer {
         stats.quarantined = self.metrics.counter(C_QUARANTINED);
         stats.breaker_trips = self.metrics.counter(C_BREAKER_TRIPS);
         stats.degraded_batches = self.metrics.counter(C_DEGRADED_BATCHES);
+        stats.backends = self
+            .models
+            .iter()
+            .map(|(name, d)| (name.clone(), backend_summary(&d.plans.primary().candidates())))
+            .collect();
+        stats.backends.sort();
         stats
     }
 
@@ -1918,6 +1968,55 @@ mod tests {
             assert!(b.mcu_energy_mj <= a.mcu_energy_mj + 1e-12, "{name}");
         }
         plain.shutdown();
+        tuned.shutdown();
+    }
+
+    #[test]
+    fn vec_backend_server_is_bit_exact_and_surfaced() {
+        use crate::tuner::{Objective, TuningCache};
+        let cfg = McuConfig::default();
+        let models = || vec![mcunet(Primitive::Standard, 1), mcunet(Primitive::Shift, 1)];
+        let scalar = InferenceServer::start(models(), 1, &cfg);
+        let vec_srv = InferenceServer::start_with(
+            models(),
+            1,
+            &cfg,
+            ServeOptions { backend: BackendSel::Vec, ..ServeOptions::default() },
+        );
+        // the deployed backend is surfaced per model, sorted by name
+        assert!(scalar.stats().backends.iter().all(|(_, s)| s == "scalar"));
+        let backends = vec_srv.stats().backends;
+        assert_eq!(backends.len(), 2);
+        assert!(backends.windows(2).all(|w| w[0].0 <= w[1].0));
+        for (model, summary) in &backends {
+            assert!(summary.starts_with("vec:"), "{model} deployed as {summary}");
+        }
+        let mut rng = Rng::new(9);
+        for (i, name) in ["mcunet-standard", "mcunet-shift"].iter().enumerate() {
+            let req = request(i as u64, name, &mut rng);
+            let a = scalar.infer(req.clone()).unwrap();
+            let b = vec_srv.infer(req).unwrap();
+            // the host backend changes wall-clock only: logits and the
+            // modeled MCU accounting are identical
+            assert_eq!(a.logits, b.logits, "{name}");
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.mcu_latency_s, b.mcu_latency_s, "{name}");
+            assert_eq!(a.mcu_energy_mj, b.mcu_energy_mj, "{name}");
+        }
+        scalar.shutdown();
+        vec_srv.shutdown();
+
+        // tuned under the auto policy: vec deploys at im2col winners
+        let mut cache = TuningCache::in_memory();
+        let tuned = InferenceServer::start_tuned_with(
+            models(),
+            1,
+            &cfg,
+            Objective::Latency,
+            &mut cache,
+            ServeOptions { backend: BackendSel::Auto, ..ServeOptions::default() },
+        );
+        assert!(tuned.stats().backends.iter().any(|(_, s)| s.starts_with("vec:")));
         tuned.shutdown();
     }
 

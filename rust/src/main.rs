@@ -12,18 +12,23 @@
 //! convbench regressions            # §4.1 linearity scores
 //! convbench all [--out results]    # everything above into --out
 //! convbench tune [--objective latency|energy|ram|weighted[:L,E,R]]
+//!                [--backend scalar|vec|auto]
 //!                [--cache PATH] [--quick] [--out results]
 //!                                  # per-layer schedule auto-tuner over
 //!                                  # the Table 2 workloads + model zoo
 //! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
 //! convbench profile [--model M] [--scalar] [--json]
+//!                   [--backend scalar|vec|auto]
 //!                                  # per-node simulated profile (markdown,
-//!                                  # or NodeCost JSON with --json)
+//!                                  # or NodeCost JSON with --json), with
+//!                                  # the deployed host backend per node
 //! convbench serve [--requests N] [--workers W] [--max-batch B]
 //!                 [--deadline-us D] [--queue-depth Q] [--trace-sample N]
+//!                 [--backend scalar|vec|auto]
 //!                 [--trace-out F] [--metrics-out F] [--stats-out F]
 //!                                  # micro-batched inference service demo;
 //!                                  # emits trace/metrics/stats artifacts
+//!                                  # (stats carry the deployed backends)
 //! convbench chaos [--seed S] [--requests N] [--workers W]
 //!                 [--panic-ppm P] [--delay-ppm P] [--error-ppm P]
 //!                 [--fault-delay-us D] [--fault-seed S]
@@ -85,10 +90,11 @@ fn main() {
             eprintln!(
                 "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve|chaos|check-obs> \
                  [--exp N] [--out DIR] [--quick] \
-                 (profile: [--model M] [--scalar] [--json]) \
+                 (tune: [--objective O] [--backend scalar|vec|auto] [--cache PATH]) \
+                 (profile: [--model M] [--scalar] [--json] [--backend scalar|vec|auto]) \
                  (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] \
-                 [--queue-depth Q] [--trace-sample N] [--trace-out F] [--metrics-out F] \
-                 [--stats-out F]) \
+                 [--queue-depth Q] [--trace-sample N] [--backend scalar|vec|auto] \
+                 [--trace-out F] [--metrics-out F] [--stats-out F]) \
                  (chaos: [--seed S] [--requests N] [--workers W] [--panic-ppm P] \
                  [--delay-ppm P] [--error-ppm P] [--fault-delay-us D] [--breaker-threshold K] \
                  [--retry-attempts A] [--min-respawns R] [--min-breaker-trips T] \
@@ -303,10 +309,19 @@ fn cmd_all(cfg: &McuConfig, quick: bool, out_dir: &str) {
 fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     use convbench::harness::{tuned_csv, tuned_markdown, tuned_vs_fixed};
     use convbench::models::{mcunet, mcunet_residual};
-    use convbench::tuner::{tune_graph_shape, tune_model_shape, Objective, TuningCache};
+    use convbench::tuner::{
+        tune_graph_shape_backend, tune_model_shape_backend, BackendSel, Objective, TuningCache,
+    };
 
     let objective = match Objective::parse(args.get("objective").unwrap_or("latency")) {
         Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let backend = match BackendSel::parse(args.get("backend").unwrap_or("scalar")) {
+        Ok(b) => b,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
@@ -318,13 +333,15 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     };
     let warm_entries = cache.len();
     eprintln!(
-        "tuning on {:.0} MHz/-{:?} ({} cached entries); --objective {} applies to the \
-         model-zoo schedules below — the Table 2 comparison always tunes both the \
-         latency and the energy objective (the acceptance inequality needs both)",
+        "tuning on {:.0} MHz/-{:?} ({} cached entries); --objective {} and --backend {} \
+         apply to the model-zoo schedules below — the Table 2 comparison always tunes \
+         both the latency and the energy objective under the scalar backend (the \
+         acceptance inequality compares modeled MCU costs, which are backend-invariant)",
         cfg.freq_mhz,
         cfg.opt,
         warm_entries,
         objective.name(),
+        backend.as_str(),
     );
 
     // Table 2 workloads: tuned (latency + energy) vs fixed schedules
@@ -339,13 +356,13 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     // the model zoo under the requested --objective, node by node —
     // linear variants plus the residual (skip-connection) graphs, so the
     // per-node cache keys (topology included) get cold+warm coverage
-    println!("MCU-Net zoo — objective {}\n", objective.name());
+    println!("MCU-Net zoo — objective {}, backend {}\n", objective.name(), backend.as_str());
     let mut zoo_scored = 0usize;
     let mut zoo_evals = 0usize;
     let mut zoo_hits = 0usize;
     for prim in Primitive::ALL {
         let model = mcunet(prim, 42);
-        let (schedule, s) = tune_model_shape(&model, cfg, objective, &mut cache);
+        let (schedule, s) = tune_model_shape_backend(&model, cfg, objective, backend, &mut cache);
         zoo_scored += s.analytic;
         zoo_evals += s.evaluations;
         zoo_hits += s.cache_hits;
@@ -353,7 +370,7 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     }
     for prim in Primitive::ALL {
         let graph = mcunet_residual(prim, 42);
-        let (schedule, s) = tune_graph_shape(&graph, cfg, objective, &mut cache);
+        let (schedule, s) = tune_graph_shape_backend(&graph, cfg, objective, backend, &mut cache);
         zoo_scored += s.analytic;
         zoo_evals += s.evaluations;
         zoo_hits += s.cache_hits;
@@ -399,24 +416,36 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
     }
 }
 
-/// `convbench profile --model mcunet-shift [--scalar] [--json]` —
-/// per-node simulated cycle/energy/memory breakdown of a zoo model (the
-/// NNoM `model_stat()` equivalent on the simulated MCU). Covers the
-/// linear variants and the residual `mcunet-res-*` graphs; every model
+/// `convbench profile --model mcunet-shift [--scalar] [--json]
+/// [--backend scalar|vec|auto]` — per-node simulated
+/// cycle/energy/memory breakdown of a zoo model (the NNoM
+/// `model_stat()` equivalent on the simulated MCU). Covers the linear
+/// variants and the residual `mcunet-res-*` graphs; every model
 /// profiles through the graph engine, and the RAM report prints the
-/// liveness arena next to the legacy largest×2 ping-pong figure.
-/// `--json` emits the machine-readable form instead: one
-/// [`convbench::obs::NodeCost`] record per node — the same serializer
-/// the runtime drift monitor uses, so offline profiles diff directly
-/// against `DriftReport` node records.
+/// liveness arena next to the legacy largest×2 ping-pong figure. Each
+/// node's row names the host backend its kernel deploys with —
+/// `--backend vec|auto` profiles the schedule a same-policy `tune`
+/// would deploy (modeled costs are backend-invariant; only the host
+/// kernel changes). `--json` emits the machine-readable form instead:
+/// one [`convbench::obs::NodeCost`] record per node — the same
+/// serializer the runtime drift monitor uses, so offline profiles diff
+/// directly against `DriftReport` node records.
 fn cmd_profile(args: &Args, cfg: &McuConfig) {
     use convbench::analytic::Primitive;
     use convbench::mcu::{footprint_graph, measure, PathClass};
     use convbench::models::{mcunet, mcunet_residual};
-    use convbench::nn::{Graph, Tensor};
+    use convbench::nn::{ExecPlan, Graph, Tensor};
+    use convbench::tuner::{tune_graph_shape_backend, BackendSel, Objective, TuningCache};
 
     let name = args.get("model").unwrap_or("mcunet-standard");
     let simd = !args.flag("scalar");
+    let backend = match BackendSel::parse(args.get("backend").unwrap_or("scalar")) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let graph = Primitive::ALL
         .iter()
         .map(|&p| Graph::from_model(&mcunet(p, 42)))
@@ -431,11 +460,22 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         });
     let x = Tensor::zeros(graph.input_shape, graph.input_q);
     let (_, profiles) = graph.forward_profiled(&x, simd);
+    // the deployed plan: the default compile under --backend scalar, or
+    // the schedule a same-policy tune deploys under --backend vec|auto
+    let plan = match backend {
+        BackendSel::Scalar => ExecPlan::compile_graph_default(&graph, simd),
+        _ => {
+            let mut cache = TuningCache::in_memory();
+            let (sched, _) =
+                tune_graph_shape_backend(&graph, cfg, Objective::Latency, backend, &mut cache);
+            sched.compile_graph(&graph)
+        }
+    };
+    let node_backends: Vec<&'static str> =
+        plan.candidates().iter().map(|c| c.backend.as_str()).collect();
     if args.flag("json") {
-        use convbench::nn::ExecPlan;
         use convbench::obs::NodeCost;
         use convbench::util::json::Json;
-        let plan = ExecPlan::compile_graph_default(&graph, simd);
         let mut nodes = Vec::new();
         let mut total = Vec::new();
         for (i, (prof, node)) in profiles.iter().zip(&graph.nodes).enumerate() {
@@ -445,7 +485,13 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
                 PathClass::Scalar
             };
             let m = measure(&prof.counts, path, cfg);
-            let cost = NodeCost::from_measurement(prof.name, i, &m, plan.layer_ram_bytes(i));
+            let cost = NodeCost::from_measurement(
+                prof.name,
+                i,
+                &m,
+                plan.layer_ram_bytes(i),
+                node_backends[i],
+            );
             nodes.push(cost.to_json());
             total.push(m);
         }
@@ -467,10 +513,12 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         if simd { "SIMD" } else { "scalar" },
         cfg.freq_mhz
     );
-    println!("| layer | cycles | latency (ms) | energy (µJ) | mem accesses | eff. MACs |");
-    println!("|---|---|---|---|---|---|");
+    println!(
+        "| layer | backend | cycles | latency (ms) | energy (µJ) | mem accesses | eff. MACs |"
+    );
+    println!("|---|---|---|---|---|---|---|");
     let mut total = Vec::new();
-    for (prof, node) in profiles.iter().zip(&graph.nodes) {
+    for (i, (prof, node)) in profiles.iter().zip(&graph.nodes).enumerate() {
         let path = if simd && node.op.has_simd() {
             PathClass::Simd
         } else {
@@ -478,8 +526,9 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         };
         let m = measure(&prof.counts, path, cfg);
         println!(
-            "| {} | {:.0} | {:.3} | {:.2} | {} | {} |",
+            "| {} | {} | {:.0} | {:.3} | {:.2} | {} | {} |",
             prof.name,
+            node_backends[i],
             m.cycles,
             1e3 * m.latency_s,
             1e3 * m.energy_mj,
@@ -490,7 +539,7 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
     }
     let sum = convbench::mcu::combine(&total, cfg);
     println!(
-        "| **total** | {:.0} | {:.3} | {:.2} | {} | {} |",
+        "| **total** | | {:.0} | {:.3} | {:.2} | {} | {} |",
         sum.cycles,
         1e3 * sum.latency_s,
         1e3 * sum.energy_mj,

@@ -49,7 +49,9 @@ pub fn mat_mult_block<M: Monitor>(
 /// [`mat_mult_block`] into a caller-provided accumulator slice (row-major
 /// `[f][p]`, fully overwritten) — the allocation-free form the compiled
 /// [`crate::nn::plan::ExecPlan`] engine drives. Identical event stream to
-/// the allocating wrapper (which delegates here).
+/// the allocating wrapper (which delegates here). The host-vectorized
+/// twin (same events, same results, lane compute over pre-widened q15
+/// rows) is [`crate::nn::vec::mat_mult_block_vec_into`].
 pub fn mat_mult_block_into<M: Monitor>(
     w_rows: &[&[i8]],
     cols: &[&[i16]],

@@ -7,7 +7,10 @@
 //! ([`arena`], [`Workspace`]) — all generic over a [`Monitor`] so the
 //! same code serves both the deployment hot path (zero-cost
 //! [`NoopMonitor`]) and the characterization harness
-//! ([`CountingMonitor`] → [`crate::mcu`] cycle/energy models).
+//! ([`CountingMonitor`] → [`crate::mcu`] cycle/energy models). The
+//! [`vec`] module adds a second *host execution* backend ([`Backend`])
+//! for the hot kernels — bit-exact and event-stream-identical to the
+//! scalar reference, only faster on the host.
 
 pub mod add_conv;
 pub mod arena;
@@ -24,6 +27,7 @@ pub mod plan;
 pub mod shift;
 pub mod simd;
 pub mod tensor;
+pub mod vec;
 pub mod workspace;
 
 pub use add_conv::AddConv;
@@ -37,4 +41,5 @@ pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
 pub use plan::{ExecPlan, PlanPair};
 pub use shift::{uniform_shifts, ShiftConv};
 pub use tensor::{Shape, Tensor};
+pub use vec::Backend;
 pub use workspace::{Workspace, WorkspacePlan};

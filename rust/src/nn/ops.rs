@@ -172,6 +172,20 @@ impl QuantDense {
         wq: &[i16],
         mon: &mut M,
     ) {
+        self.forward_simd_mm::<super::vec::ScalarMm, M>(x, out, xq, wq, mon)
+    }
+
+    /// [`QuantDense::forward_simd_with`] generic over the matmul backend
+    /// ([`super::vec::Mm`]): one loop structure serves the scalar
+    /// reference and the host-vectorized lane backend.
+    pub(crate) fn forward_simd_mm<K: super::vec::Mm, M: Monitor>(
+        &self,
+        x: &[i8],
+        out: &mut [i8],
+        xq: &mut [i16],
+        wq: &[i16],
+        mon: &mut M,
+    ) {
         assert_eq!(x.len(), self.in_features);
         debug_assert_eq!(out.len(), self.out_features, "output buffer length mismatch");
         debug_assert_eq!(xq.len(), self.in_features, "widen buffer length mismatch");
@@ -184,8 +198,7 @@ impl QuantDense {
         while n + 1 < self.out_features {
             let ra = &wq[n * self.in_features..(n + 1) * self.in_features];
             let rb = &wq[(n + 1) * self.in_features..(n + 2) * self.in_features];
-            let acc =
-                super::im2col::mat_mult_2x1(ra, rb, &xq, self.bias[n], self.bias[n + 1], mon);
+            let acc = K::m2x1(ra, rb, xq, self.bias[n], self.bias[n + 1], mon);
             mon.alu(4);
             mon.st8(2);
             out[n] = sat_i8(requantize(acc[0], shift));
@@ -194,7 +207,7 @@ impl QuantDense {
         }
         if n < self.out_features {
             let row = &wq[n * self.in_features..(n + 1) * self.in_features];
-            let acc = super::im2col::mat_mult_1x1(row, xq, self.bias[n], mon);
+            let acc = K::m1x1(row, xq, self.bias[n], mon);
             mon.alu(2);
             mon.st8(1);
             out[n] = sat_i8(requantize(acc, shift));

@@ -55,6 +55,7 @@ use super::monitor::{CountingMonitor, Monitor};
 use super::ops::{self, QuantDense};
 use super::shift::ShiftConv;
 use super::tensor::{Shape, Tensor};
+use super::vec::{self, Backend};
 use super::workspace::{graph_weight_fingerprint, prepare, Workspace, WorkspacePlan};
 
 /// Largest register blocking the engine provisions scratch for (the
@@ -72,13 +73,22 @@ enum CompiledKernel {
     /// Generalized (P, F)-blocked im2col convolution (covers the 2×2
     /// CMSIS design point — event-identical to `forward_simd`).
     ConvBlocked { conv: QuantConv, p: usize, f: usize },
+    /// Host-vectorized blocked im2col convolution: same blocking and
+    /// events as `ConvBlocked`, lane compute over pre-widened q15 rows
+    /// ([`crate::nn::vec::conv_blocked_vec_into`]).
+    ConvBlockedVec { conv: QuantConv, p: usize, f: usize },
     DepthwiseScalar(QuantDepthwise),
     DepthwiseSimd(QuantDepthwise),
+    /// Host-vectorized depthwise: channel-lane loops over tap-major
+    /// reordered q15 weights ([`crate::nn::vec::depthwise_vec_into`]).
+    DepthwiseVec(QuantDepthwise),
     /// Scalar shift conv; materializes the intermediate map `I` (Eq. 2)
     /// in the workspace's shift scratch.
     ShiftScalar(ShiftConv),
     /// SIMD shift conv: 2 gather columns + pre-widened weights.
     ShiftSimd(ShiftConv),
+    /// Host-vectorized shift conv ([`crate::nn::vec::shift_vec_with`]).
+    ShiftVec(ShiftConv),
     AddConvScalar(AddConv),
     Bn(BnLayer),
     Relu,
@@ -87,6 +97,8 @@ enum CompiledKernel {
     DenseScalar(QuantDense),
     /// SIMD dense: 1 widened input column + pre-widened weights.
     DenseSimd(QuantDense),
+    /// Host-vectorized dense ([`crate::nn::vec::dense_vec_with`]).
+    DenseVec(QuantDense),
     /// Residual elementwise sum with requantization (scalar only).
     Add(ResidualAdd),
 }
@@ -98,8 +110,10 @@ enum CompiledKernel {
 struct Step {
     name: &'static str,
     kernel: CompiledKernel,
-    /// Pre-widened q15 weights (empty unless the kernel is `ShiftSimd`
-    /// or `DenseSimd`; the blocked matmul consumes q7 rows directly).
+    /// Pre-widened q15 weights (empty unless the kernel is `ShiftSimd`,
+    /// `DenseSimd` or one of the vec-backend kernels, which consume q15
+    /// rows — `DepthwiseVec` additionally reorders them tap-major; the
+    /// scalar blocked matmul consumes q7 rows directly).
     wq: Vec<i16>,
     /// Input shape per operand (one entry for layers, two for `Add`).
     in_shapes: Vec<Shape>,
@@ -160,6 +174,10 @@ pub fn candidate_fingerprint(cands: impl Iterator<Item = Candidate>) -> u64 {
                 h.byte(filters as u8);
             }
         }
+        h.byte(match c.backend {
+            Backend::ScalarRef => 0xA0,
+            Backend::VecLanes => 0xA1,
+        });
     }
     h.finish()
 }
@@ -186,7 +204,17 @@ pub fn default_candidate(layer: &Layer, simd: bool) -> Candidate {
     } else {
         Lowering::Direct
     };
-    Candidate { kernel: KernelImpl::AsIs, lowering }
+    Candidate { kernel: KernelImpl::AsIs, lowering, backend: Backend::ScalarRef }
+}
+
+/// Flip a candidate onto the vec backend exactly where the backend is
+/// admissible (im2col lowerings — the same rule `space::applies`
+/// enforces and `space::candidates` enumerates).
+pub fn vec_backend_where_admissible(cand: Candidate) -> Candidate {
+    match cand.lowering {
+        Lowering::Im2col { .. } => Candidate { backend: Backend::VecLanes, ..cand },
+        Lowering::Direct => cand,
+    }
 }
 
 /// [`default_candidate`] for graph nodes: the residual join only has its
@@ -194,7 +222,11 @@ pub fn default_candidate(layer: &Layer, simd: bool) -> Candidate {
 pub fn default_node_candidate(node: &Node, simd: bool) -> Candidate {
     match &node.op {
         NodeOp::Layer(l) => default_candidate(l, simd),
-        NodeOp::Add(_) => Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct },
+        NodeOp::Add(_) => Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Direct,
+            backend: Backend::ScalarRef,
+        },
     }
 }
 
@@ -205,13 +237,20 @@ fn compile_kernel(layer: &Layer, cand: &Candidate) -> CompiledKernel {
         layer.name()
     );
     use CompiledKernel as CK;
+    let vec_b = cand.backend == Backend::VecLanes;
     match (layer, cand.kernel, cand.lowering) {
         (Layer::Conv(c), KernelImpl::AsIs, Lowering::Direct) => CK::ConvScalar(c.clone()),
+        (Layer::Conv(c), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) if vec_b => {
+            CK::ConvBlockedVec { conv: c.clone(), p: patches, f: filters }
+        }
         (Layer::Conv(c), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
             CK::ConvBlocked { conv: c.clone(), p: patches, f: filters }
         }
         (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Direct) => {
             CK::DepthwiseScalar(space::conv_to_depthwise(c))
+        }
+        (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Im2col { .. }) if vec_b => {
+            CK::DepthwiseVec(space::conv_to_depthwise(c))
         }
         (Layer::Conv(c), KernelImpl::ConvAsDepthwise, Lowering::Im2col { .. }) => {
             CK::DepthwiseSimd(space::conv_to_depthwise(c))
@@ -219,22 +258,39 @@ fn compile_kernel(layer: &Layer, cand: &Candidate) -> CompiledKernel {
         (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Direct) => {
             CK::ShiftScalar(space::pointwise_to_shift(c))
         }
+        (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Im2col { .. }) if vec_b => {
+            CK::ShiftVec(space::pointwise_to_shift(c))
+        }
         (Layer::Conv(c), KernelImpl::PointwiseAsShift, Lowering::Im2col { .. }) => {
             CK::ShiftSimd(space::pointwise_to_shift(c))
         }
         (Layer::Depthwise(d), KernelImpl::AsIs, Lowering::Direct) => CK::DepthwiseScalar(d.clone()),
+        (Layer::Depthwise(d), KernelImpl::AsIs, Lowering::Im2col { .. }) if vec_b => {
+            CK::DepthwiseVec(d.clone())
+        }
         (Layer::Depthwise(d), KernelImpl::AsIs, Lowering::Im2col { .. }) => {
             CK::DepthwiseSimd(d.clone())
         }
         (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv, Lowering::Direct) => {
             CK::ConvScalar(space::depthwise_to_conv(d))
         }
+        (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv, Lowering::Im2col { patches, filters })
+            if vec_b =>
+        {
+            CK::ConvBlockedVec { conv: space::depthwise_to_conv(d), p: patches, f: filters }
+        }
         (Layer::Depthwise(d), KernelImpl::DepthwiseAsConv, Lowering::Im2col { patches, filters }) => {
             CK::ConvBlocked { conv: space::depthwise_to_conv(d), p: patches, f: filters }
         }
         (Layer::Shift(s), KernelImpl::AsIs, Lowering::Direct) => CK::ShiftScalar(s.clone()),
+        (Layer::Shift(s), KernelImpl::AsIs, Lowering::Im2col { .. }) if vec_b => {
+            CK::ShiftVec(s.clone())
+        }
         (Layer::Shift(s), KernelImpl::AsIs, Lowering::Im2col { .. }) => CK::ShiftSimd(s.clone()),
         (Layer::Dense(d), KernelImpl::AsIs, Lowering::Direct) => CK::DenseScalar(d.clone()),
+        (Layer::Dense(d), KernelImpl::AsIs, Lowering::Im2col { .. }) if vec_b => {
+            CK::DenseVec(d.clone())
+        }
         (Layer::Dense(d), KernelImpl::AsIs, Lowering::Im2col { .. }) => CK::DenseSimd(d.clone()),
         (Layer::AddConv(a), KernelImpl::AsIs, Lowering::Direct) => CK::AddConvScalar(a.clone()),
         (Layer::Bn(b), KernelImpl::AsIs, Lowering::Direct) => CK::Bn(b.clone()),
@@ -286,7 +342,7 @@ impl ExecPlan {
     /// use convbench::nn::{ExecPlan, Graph, Layer, NoopMonitor, QuantDense, Shape, Tensor,
     ///                     Workspace};
     /// use convbench::quant::QParam;
-    /// use convbench::tuner::{Candidate, KernelImpl, Lowering};
+    /// use convbench::tuner::{Backend, Candidate, KernelImpl, Lowering};
     ///
     /// // a one-node graph: input -> dense(4 -> 2)
     /// let mut g = Graph::new("doc", Shape::new(1, 1, 4), QParam::new(6));
@@ -302,7 +358,11 @@ impl ExecPlan {
     /// }));
     ///
     /// // schedule: one candidate per node (here: the scalar kernel)
-    /// let schedule = vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }];
+    /// let schedule = vec![Candidate {
+    ///     kernel: KernelImpl::AsIs,
+    ///     lowering: Lowering::Direct,
+    ///     backend: Backend::ScalarRef,
+    /// }];
     /// let plan = ExecPlan::compile_graph(&g, &schedule);
     ///
     /// // bind an arena sized from the plan, then run allocation-free
@@ -336,19 +396,30 @@ impl ExecPlan {
         for (i, (node, cand)) in graph.nodes.iter().zip(schedule).enumerate() {
             let kernel = compile_node_kernel(node, cand);
             let wq = match &kernel {
-                CompiledKernel::ShiftSimd(s) => widen(&s.weights),
-                CompiledKernel::DenseSimd(d) => widen(&d.weights),
+                CompiledKernel::ShiftSimd(s) | CompiledKernel::ShiftVec(s) => widen(&s.weights),
+                CompiledKernel::DenseSimd(d) | CompiledKernel::DenseVec(d) => widen(&d.weights),
+                // the vec blocked matmul consumes pre-widened q15 rows
+                CompiledKernel::ConvBlockedVec { conv, .. } => widen(&conv.weights),
+                // tap-major reorder so each tap is one contiguous lane run
+                CompiledKernel::DepthwiseVec(d) => vec::depthwise_wq(d),
                 _ => Vec::new(),
             };
             let in_shape = shapes[node.inputs[0]];
             match &kernel {
-                CompiledKernel::ConvBlocked { conv, p, f } => {
+                CompiledKernel::ConvBlocked { conv, p, f }
+                | CompiledKernel::ConvBlockedVec { conv, p, f } => {
                     let klen = conv.kernel * conv.kernel * conv.ch_per_group();
                     col_len = col_len.max(p * klen);
                     acc_len = acc_len.max(p * f);
                 }
-                CompiledKernel::ShiftSimd(s) => col_len = col_len.max(2 * s.in_channels),
-                CompiledKernel::DenseSimd(d) => col_len = col_len.max(d.in_features),
+                CompiledKernel::ShiftSimd(s) | CompiledKernel::ShiftVec(s) => {
+                    col_len = col_len.max(2 * s.in_channels)
+                }
+                CompiledKernel::DenseSimd(d) | CompiledKernel::DenseVec(d) => {
+                    col_len = col_len.max(d.in_features)
+                }
+                // per-channel i32 accumulator strip for the lane kernel
+                CompiledKernel::DepthwiseVec(d) => acc_len = acc_len.max(d.channels),
                 CompiledKernel::ShiftScalar(_) => shift_len = shift_len.max(in_shape.len()),
                 _ => {}
             }
@@ -413,6 +484,30 @@ impl ExecPlan {
             .nodes
             .iter()
             .map(|n| default_node_candidate(n, simd))
+            .collect();
+        Self::compile_graph(graph, &cands)
+    }
+
+    /// [`ExecPlan::compile_default`] with the host-vectorized backend on
+    /// every node where it is admissible (the default schedule's im2col
+    /// lowerings); direct-lowered nodes keep the scalar reference. Same
+    /// modeled MCU event stream and bit-exact outputs as
+    /// [`ExecPlan::compile_default`] — only the host kernels differ.
+    pub fn compile_default_vec(model: &Model, simd: bool) -> ExecPlan {
+        let cands: Vec<Candidate> = model
+            .layers
+            .iter()
+            .map(|l| vec_backend_where_admissible(default_candidate(l, simd)))
+            .collect();
+        Self::compile(model, &cands)
+    }
+
+    /// [`ExecPlan::compile_default_vec`] for graphs.
+    pub fn compile_graph_default_vec(graph: &Graph, simd: bool) -> ExecPlan {
+        let cands: Vec<Candidate> = graph
+            .nodes
+            .iter()
+            .map(|n| vec_backend_where_admissible(default_node_candidate(n, simd)))
             .collect();
         Self::compile_graph(graph, &cands)
     }
@@ -498,11 +593,13 @@ impl ExecPlan {
     pub fn layer_scratch_bytes(&self, idx: usize) -> usize {
         let step = &self.steps[idx];
         match &step.kernel {
-            CompiledKernel::ConvBlocked { conv, p, .. } => {
+            CompiledKernel::ConvBlocked { conv, p, .. }
+            | CompiledKernel::ConvBlockedVec { conv, p, .. } => {
                 2 * p * conv.kernel * conv.kernel * conv.ch_per_group()
             }
-            CompiledKernel::ShiftSimd(s) => 2 * 2 * s.in_channels,
-            CompiledKernel::DenseSimd(d) => 2 * d.in_features,
+            CompiledKernel::ShiftSimd(s) | CompiledKernel::ShiftVec(s) => 2 * 2 * s.in_channels,
+            CompiledKernel::DenseSimd(d) | CompiledKernel::DenseVec(d) => 2 * d.in_features,
+            CompiledKernel::DepthwiseVec(d) => 4 * d.channels,
             CompiledKernel::ShiftScalar(_) => step.in_shapes[0].len(),
             _ => 0,
         }
@@ -849,8 +946,25 @@ fn run_step<M: Monitor>(step: &Step, ws: &mut Workspace, mon: &mut M) {
                 mon,
             );
         }
+        CK::ConvBlockedVec { conv, p, f } => {
+            let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+            vec::conv_blocked_vec_into(
+                conv,
+                xb,
+                yb,
+                *p,
+                *f,
+                &mut ws.cols[..p * klen],
+                &mut ws.acc[..p * f],
+                &step.wq,
+                mon,
+            );
+        }
         CK::DepthwiseScalar(d) => d.forward_scalar_into(xb, yb, mon),
         CK::DepthwiseSimd(d) => d.forward_simd_into(xb, yb, mon),
+        CK::DepthwiseVec(d) => {
+            vec::depthwise_vec_into(d, xb, yb, &step.wq, &mut ws.acc[..d.channels], mon)
+        }
         CK::ShiftScalar(s) => {
             prepare(&mut ws.shift_inter, xb.shape, xb.q);
             s.forward_scalar_into(xb, yb, &mut ws.shift_inter, mon);
@@ -860,6 +974,11 @@ fn run_step<M: Monitor>(step: &Step, ws: &mut Workspace, mon: &mut M) {
             let (ca, cb) = ws.cols.split_at_mut(klen);
             s.forward_simd_with(xb, yb, &mut ca[..klen], &mut cb[..klen], &step.wq, mon);
         }
+        CK::ShiftVec(s) => {
+            let klen = s.in_channels;
+            let (ca, cb) = ws.cols.split_at_mut(klen);
+            vec::shift_vec_with(s, xb, yb, &mut ca[..klen], &mut cb[..klen], &step.wq, mon);
+        }
         CK::AddConvScalar(a) => a.forward_scalar_into(xb, yb, mon),
         CK::Bn(b) => b.forward_into(xb, yb, mon),
         CK::Relu => ops::relu_into(xb, yb, mon),
@@ -867,6 +986,14 @@ fn run_step<M: Monitor>(step: &Step, ws: &mut Workspace, mon: &mut M) {
         CK::GlobalAvgPool(q) => ops::global_avgpool_into(xb, *q, yb, mon),
         CK::DenseScalar(d) => d.forward_scalar_into(&xb.data, &mut yb.data, mon),
         CK::DenseSimd(d) => d.forward_simd_with(
+            &xb.data,
+            &mut yb.data,
+            &mut ws.cols[..d.in_features],
+            &step.wq,
+            mon,
+        ),
+        CK::DenseVec(d) => vec::dense_vec_with(
+            d,
             &xb.data,
             &mut yb.data,
             &mut ws.cols[..d.in_features],
@@ -1203,7 +1330,11 @@ mod tests {
         match &node.op {
             NodeOp::Layer(l) => space::candidates(l),
             NodeOp::Add(_) => {
-                vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }]
+                vec![Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Direct,
+                    backend: Backend::ScalarRef,
+                }]
             }
         }
     }
@@ -1348,6 +1479,7 @@ mod tests {
             &[max_p, max_pf].map(|(bp, bf)| Candidate {
                 kernel: KernelImpl::AsIs,
                 lowering: Lowering::Im2col { patches: bp, filters: bf },
+                backend: Backend::ScalarRef,
             }),
         );
         let mut ws = Workspace::for_plan(&sizing_plan);
@@ -1355,6 +1487,7 @@ mod tests {
             let cand = Candidate {
                 kernel: KernelImpl::AsIs,
                 lowering: Lowering::Im2col { patches: bp, filters: bf },
+                backend: Backend::ScalarRef,
             };
             let plan = ExecPlan::compile(&m1, &[cand]);
             let mut xin = x.clone();
@@ -1593,14 +1726,20 @@ mod tests {
 
     #[test]
     fn schedule_fingerprint_discriminates() {
-        let a = [Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }];
+        let a = [Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Direct,
+            backend: Backend::ScalarRef,
+        }];
         let b = [Candidate {
             kernel: KernelImpl::AsIs,
             lowering: Lowering::Im2col { patches: 2, filters: 2 },
+            backend: Backend::ScalarRef,
         }];
         let c = [Candidate {
             kernel: KernelImpl::AsIs,
             lowering: Lowering::Im2col { patches: 2, filters: 1 },
+            backend: Backend::ScalarRef,
         }];
         let fp = |s: &[Candidate]| candidate_fingerprint(s.iter().copied());
         assert_ne!(fp(&a), fp(&b));
@@ -1619,6 +1758,7 @@ mod tests {
             .map(|_| Candidate {
                 kernel: KernelImpl::ConvAsDepthwise,
                 lowering: Lowering::Direct,
+                backend: Backend::ScalarRef,
             })
             .collect();
         ExecPlan::compile(&model, &bad);
@@ -1635,6 +1775,7 @@ mod tests {
             .map(|_| Candidate {
                 kernel: KernelImpl::AsIs,
                 lowering: Lowering::Im2col { patches: 2, filters: 2 },
+                backend: Backend::ScalarRef,
             })
             .collect();
         ExecPlan::compile_graph(&g, &bad);

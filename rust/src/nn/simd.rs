@@ -174,6 +174,22 @@ impl ShiftConv {
         wq: &[i16],
         mon: &mut M,
     ) {
+        self.forward_simd_mm::<super::vec::ScalarMm, M>(x, y, col_a, col_b, wq, mon)
+    }
+
+    /// [`ShiftConv::forward_simd_with`] generic over the matmul backend
+    /// ([`super::vec::Mm`]): one loop structure serves the scalar
+    /// reference and the host-vectorized lane backend, so the two stay
+    /// structurally identical by construction.
+    pub(crate) fn forward_simd_mm<K: super::vec::Mm, M: Monitor>(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        col_a: &mut [i16],
+        col_b: &mut [i16],
+        wq: &[i16],
+        mon: &mut M,
+    ) {
         self.validate(&x.shape).expect("invalid shift-conv configuration");
         let out_shape = self.output_shape(&x.shape);
         debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
@@ -194,11 +210,11 @@ impl ShiftConv {
             fill_patch_shifted_q15(x, by, bx, &self.shifts, &mut col_b, mon);
             let mut f = 0usize;
             while f + 1 < self.out_channels {
-                let acc = mat_mult_2x2(
+                let acc = K::m2x2(
                     wrow(f),
                     wrow(f + 1),
-                    &col_a,
-                    &col_b,
+                    col_a,
+                    col_b,
                     self.bias[f],
                     self.bias[f + 1],
                     mon,
@@ -212,7 +228,7 @@ impl ShiftConv {
                 f += 2;
             }
             if f < self.out_channels {
-                let acc = mat_mult_1x2(wrow(f), &col_a, &col_b, self.bias[f], mon);
+                let acc = K::m1x2(wrow(f), col_a, col_b, self.bias[f], mon);
                 mon.alu(4);
                 mon.st8(2);
                 y.set(ay, ax, f, sat_i8(requantize(acc[0], shift)));
@@ -226,7 +242,7 @@ impl ShiftConv {
             let mut f = 0usize;
             while f + 1 < self.out_channels {
                 let acc =
-                    mat_mult_2x1(wrow(f), wrow(f + 1), &col_a, self.bias[f], self.bias[f + 1], mon);
+                    K::m2x1(wrow(f), wrow(f + 1), col_a, self.bias[f], self.bias[f + 1], mon);
                 mon.alu(4);
                 mon.st8(2);
                 y.set(ay, ax, f, sat_i8(requantize(acc[0], shift)));
@@ -234,7 +250,7 @@ impl ShiftConv {
                 f += 2;
             }
             if f < self.out_channels {
-                let acc = mat_mult_1x1(wrow(f), col_a, self.bias[f], mon);
+                let acc = K::m1x1(wrow(f), col_a, self.bias[f], mon);
                 mon.alu(2);
                 mon.st8(1);
                 y.set(ay, ax, f, sat_i8(requantize(acc, shift)));

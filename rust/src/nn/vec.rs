@@ -1,0 +1,761 @@
+//! Host-vectorized (`VecLanes`) kernel backend.
+//!
+//! Every "SIMD" forward in this engine models the paper's Cortex-M
+//! `__SMLAD` kernels in the **micro-op event stream** while the host
+//! executes plain scalar Rust. This module adds a second *host execution*
+//! backend for the hot inner loops — blocked im2col matmul, depthwise,
+//! shift and dense — written as fixed-width i16 lane blocks that LLVM's
+//! autovectorizer reliably lowers to real SIMD (`pmaddwd`-class on
+//! x86-64 SSE2, `smlal`-class on AArch64 NEON). The lane width is picked
+//! per architecture by `cfg` ([`LANES`]); there is no `unsafe` and no
+//! intrinsic call, keeping the crate's zero-`unsafe` invariant.
+//!
+//! Two invariants pin the backend to the scalar reference (both
+//! property-tested here and across the whole tuner candidate space in
+//! [`super::plan`]):
+//!
+//! 1. **Bit-exactness** — i16×i16→i32 products accumulated in i32 are
+//!    order-independent (integer addition is associative and commutative,
+//!    and the magnitudes involved cannot overflow i32), so lane-parallel
+//!    accumulation produces the same logits as the sequential scalar
+//!    loops, requantization included.
+//! 2. **Event-stream identity** — the modeled MCU micro-op stream is a
+//!    function of shapes only, so each vec kernel emits the *aggregate*
+//!    of the events its scalar twin interleaves with compute (see
+//!    [`mm_events`]). The [`crate::mcu`] cost model therefore prices a
+//!    `VecLanes` schedule identically to its `ScalarRef` twin: only the
+//!    *host* wall-clock changes, which is exactly what the
+//!    `obs::drift` monitor and `benches/infer_hot.rs` measure.
+
+use crate::quant::{requantize, sat_i8};
+
+use super::conv::QuantConv;
+use super::depthwise::QuantDepthwise;
+use super::im2col::{
+    fill_patch_q15, mat_mult_1x1, mat_mult_1x2, mat_mult_2x1, mat_mult_2x2,
+};
+use super::monitor::Monitor;
+use super::ops::QuantDense;
+use super::plan::MAX_BLOCK;
+use super::shift::ShiftConv;
+use super::tensor::Tensor;
+
+/// Host execution backend for a compiled kernel.
+///
+/// `ScalarRef` is the reference implementation every numerical claim is
+/// pinned against; `VecLanes` is the autovectorizer-friendly lane
+/// backend in this module. Both produce identical logits and identical
+/// modeled MCU event streams — the tuner's analytic scores do not depend
+/// on the backend, so the axis only changes measured host throughput.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar reference loops (the default; bit-exactness oracle).
+    #[default]
+    ScalarRef,
+    /// Fixed-width i16 lane loops (host-vectorized).
+    VecLanes,
+}
+
+impl Backend {
+    /// CLI / cache-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::ScalarRef => "scalar",
+            Backend::VecLanes => "vec",
+        }
+    }
+
+    /// Parse the CLI / cache-file spelling.
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "scalar" => Ok(Backend::ScalarRef),
+            "vec" => Ok(Backend::VecLanes),
+            other => Err(format!("unknown backend '{other}' (scalar|vec)")),
+        }
+    }
+}
+
+/// i16 lane width of the vec backend on this architecture: 8 lanes where
+/// a 128-bit integer unit is baseline (one `pmaddwd`/`smlal2` feeds all
+/// eight 16-bit lanes), 4 elsewhere so the fallback still fits a 64-bit
+/// datapath.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub const LANES: usize = 8;
+/// i16 lane width of the vec backend on this architecture (see the
+/// x86-64/AArch64 definition).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub const LANES: usize = 4;
+
+/// Fixed-width i32 accumulator block — the lane struct the whole backend
+/// is built from. Keeping the accumulators in one `[i32; LANES]` value
+/// (instead of a running scalar) removes the loop-carried dependency
+/// that blocks autovectorization of dot products.
+#[derive(Clone, Copy)]
+struct AccLanes([i32; LANES]);
+
+impl AccLanes {
+    #[inline(always)]
+    fn zero() -> Self {
+        AccLanes([0; LANES])
+    }
+
+    /// Lane-wise multiply-accumulate of one `LANES`-wide q15 block.
+    #[inline(always)]
+    fn madd(&mut self, w: &[i16], c: &[i16]) {
+        debug_assert!(w.len() == LANES && c.len() == LANES);
+        for ((a, &wv), &cv) in self.0.iter_mut().zip(w).zip(c) {
+            *a += wv as i32 * cv as i32;
+        }
+    }
+
+    /// Horizontal sum of the lanes.
+    #[inline(always)]
+    fn sum(&self) -> i32 {
+        self.0.iter().sum()
+    }
+}
+
+/// Lane dot product of two q15 rows (`chunks_exact(LANES)` body + scalar
+/// remainder). Bit-exact with the sequential scalar sum for all q15
+/// operands this engine produces (see the module docs).
+#[inline]
+pub(crate) fn dot_q15(w: &[i16], c: &[i16]) -> i32 {
+    debug_assert_eq!(w.len(), c.len());
+    let mut lanes = AccLanes::zero();
+    let mut wi = w.chunks_exact(LANES);
+    let mut ci = c.chunks_exact(LANES);
+    for (wb, cb) in (&mut wi).zip(&mut ci) {
+        lanes.madd(wb, cb);
+    }
+    let mut acc = lanes.sum();
+    for (&wv, &cv) in wi.remainder().iter().zip(ci.remainder()) {
+        acc += wv as i32 * cv as i32;
+    }
+    acc
+}
+
+/// Emit the aggregate modeled-MCU event stream of an `R×C`-block matmul
+/// over a length-`k` reduction — the closed form every
+/// `im2col::mat_mult_*` kernel and [`super::blocking::mat_mult_block_into`]
+/// interleave with their compute (`R` filter rows, `C` im2col columns):
+/// per 4-wide `__SMLAD` block one q7x4 word per row (`+ 2×SXTB16`), two
+/// q15 words per column and `2RC` SMLADs; per scalar-tail element one
+/// q7 byte per row, one q15 half per column and `RC` MACs.
+pub(crate) fn mm_events<M: Monitor>(rows: usize, cols: usize, k: usize, mon: &mut M) {
+    let k4 = (k / 4) as u64;
+    let tail = (k - (k / 4) * 4) as u64;
+    let (r, c) = (rows as u64, cols as u64);
+    mon.ld32(r + k4 * (r + 2 * c)); // bias words + per-block row/column words
+    mon.alu(2 * r * k4); // SXTB16 widening
+    mon.smlad(2 * r * c * k4);
+    mon.branch(k4 + tail);
+    mon.ld8(r * tail);
+    mon.ld16(c * tail);
+    mon.mac(r * c * tail);
+}
+
+/// The 2×2-family matmul micro-kernels behind the shift and dense SIMD
+/// loop structure, abstracted so one loop body serves both backends:
+/// [`ScalarMm`] delegates to the event-interleaved `im2col::mat_mult_*`
+/// reference kernels, [`VecMm`] emits the same events in aggregate
+/// ([`mm_events`]) and computes with [`dot_q15`] lanes.
+pub(crate) trait Mm {
+    fn m2x2<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        pa: &[i16],
+        pb: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 4];
+    fn m1x2<M: Monitor>(w: &[i16], pa: &[i16], pb: &[i16], bias: i32, mon: &mut M) -> [i32; 2];
+    fn m2x1<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        p: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 2];
+    fn m1x1<M: Monitor>(w: &[i16], p: &[i16], bias: i32, mon: &mut M) -> i32;
+}
+
+/// [`Mm`] backed by the scalar reference kernels.
+pub(crate) struct ScalarMm;
+
+impl Mm for ScalarMm {
+    #[inline(always)]
+    fn m2x2<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        pa: &[i16],
+        pb: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 4] {
+        mat_mult_2x2(wa, wb, pa, pb, bias_a, bias_b, mon)
+    }
+
+    #[inline(always)]
+    fn m1x2<M: Monitor>(w: &[i16], pa: &[i16], pb: &[i16], bias: i32, mon: &mut M) -> [i32; 2] {
+        mat_mult_1x2(w, pa, pb, bias, mon)
+    }
+
+    #[inline(always)]
+    fn m2x1<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        p: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 2] {
+        mat_mult_2x1(wa, wb, p, bias_a, bias_b, mon)
+    }
+
+    #[inline(always)]
+    fn m1x1<M: Monitor>(w: &[i16], p: &[i16], bias: i32, mon: &mut M) -> i32 {
+        mat_mult_1x1(w, p, bias, mon)
+    }
+}
+
+/// [`Mm`] backed by the lane kernels.
+pub(crate) struct VecMm;
+
+impl Mm for VecMm {
+    #[inline(always)]
+    fn m2x2<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        pa: &[i16],
+        pb: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 4] {
+        mm_events(2, 2, wa.len(), mon);
+        [
+            bias_a + dot_q15(wa, pa),
+            bias_a + dot_q15(wa, pb),
+            bias_b + dot_q15(wb, pa),
+            bias_b + dot_q15(wb, pb),
+        ]
+    }
+
+    #[inline(always)]
+    fn m1x2<M: Monitor>(w: &[i16], pa: &[i16], pb: &[i16], bias: i32, mon: &mut M) -> [i32; 2] {
+        mm_events(1, 2, w.len(), mon);
+        [bias + dot_q15(w, pa), bias + dot_q15(w, pb)]
+    }
+
+    #[inline(always)]
+    fn m2x1<M: Monitor>(
+        wa: &[i16],
+        wb: &[i16],
+        p: &[i16],
+        bias_a: i32,
+        bias_b: i32,
+        mon: &mut M,
+    ) -> [i32; 2] {
+        mm_events(2, 1, wa.len(), mon);
+        [bias_a + dot_q15(wa, p), bias_b + dot_q15(wb, p)]
+    }
+
+    #[inline(always)]
+    fn m1x1<M: Monitor>(w: &[i16], p: &[i16], bias: i32, mon: &mut M) -> i32 {
+        mm_events(1, 1, w.len(), mon);
+        bias + dot_q15(w, p)
+    }
+}
+
+/// Lane twin of [`super::blocking::mat_mult_block_into`]: `F` pre-widened
+/// q15 filter rows against `P` q15 im2col columns. Event stream and
+/// results are identical to the scalar kernel; the compute is `F·P`
+/// independent [`dot_q15`] lane reductions instead of one interleaved
+/// `f·p`-accumulator loop.
+pub fn mat_mult_block_vec_into<M: Monitor>(
+    w_rows: &[&[i16]],
+    cols: &[&[i16]],
+    biases: &[i32],
+    acc: &mut [i32],
+    mon: &mut M,
+) {
+    let f = w_rows.len();
+    let p = cols.len();
+    assert_eq!(biases.len(), f, "one bias per filter row");
+    assert_eq!(acc.len(), f * p, "f·p accumulators");
+    let k = w_rows[0].len();
+    debug_assert!(w_rows.iter().all(|r| r.len() == k));
+    debug_assert!(cols.iter().all(|c| c.len() == k));
+
+    mm_events(f, p, k, mon);
+    for (fi, (w, &b)) in w_rows.iter().zip(biases).enumerate() {
+        for (pi, c) in cols.iter().enumerate() {
+            acc[fi * p + pi] = b + dot_q15(w, c);
+        }
+    }
+}
+
+/// Lane twin of [`super::plan::conv_blocked_into`] — identical blocking
+/// structure, `fill_patch_q15` gathers and epilogue, with the inner
+/// matmul swapped for [`mat_mult_block_vec_into`] over pre-widened q15
+/// weight rows (`wq`, one i16 per q7 weight, as assembled at deploy
+/// time by `ExecPlan`).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_blocked_vec_into<M: Monitor>(
+    conv: &QuantConv,
+    x: &Tensor,
+    y: &mut Tensor,
+    p_blk: usize,
+    f_blk: usize,
+    cols: &mut [i16],
+    acc: &mut [i32],
+    wq: &[i16],
+    mon: &mut M,
+) {
+    assert!(p_blk >= 1 && f_blk >= 1, "degenerate blocking");
+    assert!(
+        p_blk <= MAX_BLOCK && f_blk <= MAX_BLOCK,
+        "blocking ({p_blk},{f_blk}) beyond the provisioned maximum {MAX_BLOCK}"
+    );
+    conv.validate(&x.shape).expect("invalid conv configuration");
+    debug_assert_eq!(wq.len(), conv.weights.len(), "pre-widened weight length");
+    let out_shape = conv.output_shape(&x.shape);
+    debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+    debug_assert_eq!(y.q, conv.q_out, "output buffer format mismatch");
+    let shift = conv.out_shift();
+    let cpg = conv.ch_per_group();
+    let fpg = conv.filters_per_group();
+    let klen = conv.kernel * conv.kernel * cpg;
+    debug_assert!(cols.len() >= p_blk * klen, "column arena too small");
+    debug_assert!(acc.len() >= p_blk * f_blk, "accumulator arena too small");
+    let n_pix = out_shape.h * out_shape.w;
+
+    for g in 0..conv.groups {
+        let ch0 = g * cpg;
+        let n0 = g * fpg;
+        let mut pix = 0usize;
+        while pix < n_pix {
+            let pcnt = p_blk.min(n_pix - pix);
+            for (pi, col) in cols.chunks_mut(klen).take(pcnt).enumerate() {
+                let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                fill_patch_q15(x, oy, ox, conv.kernel, conv.pad, ch0, cpg, col, mon);
+            }
+            let mut col_refs: [&[i16]; MAX_BLOCK] = [&[]; MAX_BLOCK];
+            for (pi, col) in cols.chunks(klen).take(pcnt).enumerate() {
+                col_refs[pi] = col;
+            }
+            let mut f0 = 0usize;
+            while f0 < fpg {
+                let fcnt = f_blk.min(fpg - f0);
+                let mut w_rows: [&[i16]; MAX_BLOCK] = [&[]; MAX_BLOCK];
+                let mut biases = [0i32; MAX_BLOCK];
+                for fi in 0..fcnt {
+                    let n = n0 + f0 + fi;
+                    w_rows[fi] = &wq[n * klen..(n + 1) * klen];
+                    biases[fi] = conv.bias[n];
+                }
+                mat_mult_block_vec_into(
+                    &w_rows[..fcnt],
+                    &col_refs[..pcnt],
+                    &biases[..fcnt],
+                    &mut acc[..fcnt * pcnt],
+                    mon,
+                );
+                for fi in 0..fcnt {
+                    let n = n0 + f0 + fi;
+                    for pi in 0..pcnt {
+                        let (oy, ox) = ((pix + pi) / out_shape.w, (pix + pi) % out_shape.w);
+                        mon.alu(2);
+                        mon.st8(1);
+                        y.set(oy, ox, n, sat_i8(requantize(acc[fi * pcnt + pi], shift)));
+                    }
+                }
+                f0 += fcnt;
+            }
+            pix += pcnt;
+        }
+    }
+}
+
+/// Reorder a depthwise layer's `[channels][k][k]` q7 weights into
+/// channel-minor `[k][k][channels]` q15 — one contiguous lane run per
+/// tap, mirroring the CMSIS-NN offline reorder the modeled SIMD kernel
+/// assumes. Assembled once at deploy time (`ExecPlan` weight prep).
+pub fn depthwise_wq(d: &QuantDepthwise) -> Vec<i16> {
+    let (k, ch) = (d.kernel, d.channels);
+    let mut wq = vec![0i16; d.weights.len()];
+    for c in 0..ch {
+        for i in 0..k {
+            for j in 0..k {
+                wq[(i * k + j) * ch + c] = d.weights[(c * k + i) * k + j] as i16;
+            }
+        }
+    }
+    wq
+}
+
+/// Lane twin of [`QuantDepthwise::forward_simd_into`]: per output pixel
+/// the whole channel axis is accumulated as contiguous lane runs (HWC
+/// activations × the [`depthwise_wq`] tap-major weights), with the
+/// modeled per-tap event stream emitted in aggregate. `acc` is the
+/// per-channel i32 accumulator scratch (`channels` long, lives in the
+/// workspace arena).
+pub fn depthwise_vec_into<M: Monitor>(
+    d: &QuantDepthwise,
+    x: &Tensor,
+    y: &mut Tensor,
+    wq: &[i16],
+    acc: &mut [i32],
+    mon: &mut M,
+) {
+    d.validate(&x.shape).expect("invalid depthwise configuration");
+    let out_shape = d.output_shape(&x.shape);
+    debug_assert_eq!(y.shape, out_shape, "output buffer shape mismatch");
+    debug_assert_eq!(y.q, d.q_out, "output buffer format mismatch");
+    debug_assert_eq!(wq.len(), d.weights.len(), "reordered weight length");
+    let ch = d.channels;
+    debug_assert!(acc.len() >= ch, "accumulator arena too small");
+    let shift = d.out_shift();
+    let k = d.kernel;
+    let pad = d.pad as isize;
+    let c4 = (ch / 4) as u64;
+    let rem = (ch % 4) as u64;
+
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            // aggregate of the events the channel-blocked scalar kernel
+            // interleaves per pixel: taps = in-bounds (i, j) positions
+            let rows_in = (0..k)
+                .filter(|&i| {
+                    let iy = oy as isize + i as isize - pad;
+                    iy >= 0 && iy < x.shape.h as isize
+                })
+                .count() as u64;
+            let cols_in = (0..k)
+                .filter(|&j| {
+                    let ix = ox as isize + j as isize - pad;
+                    ix >= 0 && ix < x.shape.w as isize
+                })
+                .count() as u64;
+            let rows_oob = k as u64 - rows_in;
+            let taps = rows_in * cols_in;
+            mon.ld32(2 * c4 + rem + taps * 2 * c4);
+            mon.branch((rows_oob + rows_in * k as u64) * (c4 + rem));
+            mon.alu(taps * 4 * c4 + 2 * ch as u64);
+            mon.mac(taps * (4 * c4 + rem));
+            mon.ld8(taps * 2 * rem);
+            mon.st8(ch as u64);
+
+            // lane compute: bias init, one contiguous channel run per tap
+            let accs = &mut acc[..ch];
+            accs.copy_from_slice(&d.bias);
+            for i in 0..k {
+                let iy = oy as isize + i as isize - pad;
+                if iy < 0 || iy >= x.shape.h as isize {
+                    continue;
+                }
+                for j in 0..k {
+                    let ix = ox as isize + j as isize - pad;
+                    if ix < 0 || ix >= x.shape.w as isize {
+                        continue;
+                    }
+                    let xs = &x.data[x.shape.idx(iy as usize, ix as usize, 0)..][..ch];
+                    let ws = &wq[(i * k + j) * ch..][..ch];
+                    for ((a, &xv), &wv) in accs.iter_mut().zip(xs).zip(ws) {
+                        *a += xv as i32 * wv as i32;
+                    }
+                }
+            }
+            for (c, &a) in accs.iter().enumerate() {
+                y.set(oy, ox, c, sat_i8(requantize(a, shift)));
+            }
+        }
+    }
+}
+
+/// Lane twin of [`ShiftConv::forward_simd_with`] — same shifted-gather
+/// im2col loop structure, inner matmuls swapped for [`VecMm`].
+#[allow(clippy::too_many_arguments)]
+pub fn shift_vec_with<M: Monitor>(
+    s: &ShiftConv,
+    x: &Tensor,
+    y: &mut Tensor,
+    col_a: &mut [i16],
+    col_b: &mut [i16],
+    wq: &[i16],
+    mon: &mut M,
+) {
+    s.forward_simd_mm::<VecMm, M>(x, y, col_a, col_b, wq, mon)
+}
+
+/// Lane twin of [`QuantDense::forward_simd_with`] — same widen-once +
+/// row-pair loop structure, inner matmuls swapped for [`VecMm`].
+pub fn dense_vec_with<M: Monitor>(
+    d: &QuantDense,
+    x: &[i8],
+    out: &mut [i8],
+    xq: &mut [i16],
+    wq: &[i16],
+    mon: &mut M,
+) {
+    d.forward_simd_mm::<VecMm, M>(x, out, xq, wq, mon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::test_random_conv;
+    use crate::nn::monitor::CountingMonitor;
+    use crate::nn::ops::QuantDense;
+    use crate::nn::plan::conv_blocked_into;
+    use crate::nn::shift::test_random_shift_conv;
+    use crate::nn::tensor::{Shape, Tensor};
+    use crate::quant::QParam;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, ensure, ensure_eq_i8};
+
+    fn random_input(rng: &mut Rng, h: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(Shape::new(h, h, c), QParam::new(7));
+        rng.fill_i8(&mut t.data, -16, 16);
+        t
+    }
+
+    fn random_depthwise(rng: &mut Rng, k: usize, c: usize) -> QuantDepthwise {
+        let mut weights = vec![0i8; c * k * k];
+        rng.fill_i8(&mut weights, -8, 8);
+        QuantDepthwise {
+            kernel: k,
+            channels: c,
+            pad: k / 2,
+            weights,
+            bias: (0..c).map(|_| rng.range(0, 32) as i32 - 16).collect(),
+            q_in: QParam::new(7),
+            q_w: QParam::new(7),
+            q_out: QParam::new(5),
+        }
+    }
+
+    fn widen(w: &[i8]) -> Vec<i16> {
+        w.iter().map(|&v| v as i16).collect()
+    }
+
+    #[test]
+    fn backend_spelling_roundtrips() {
+        for b in [Backend::ScalarRef, Backend::VecLanes] {
+            assert_eq!(Backend::parse(b.as_str()), Ok(b));
+        }
+        assert!(Backend::parse("neon").is_err());
+        assert_eq!(Backend::default(), Backend::ScalarRef);
+    }
+
+    #[test]
+    fn dot_matches_sequential_sum_across_remainder_lengths() {
+        let mut rng = Rng::new(31);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            let mut w8 = vec![0i8; len];
+            let mut c8 = vec![0i8; len];
+            rng.fill_i8(&mut w8, -128, 127);
+            rng.fill_i8(&mut c8, -128, 127);
+            let w = widen(&w8);
+            let c = widen(&c8);
+            let naive: i32 = w.iter().zip(&c).map(|(&a, &b)| a as i32 * b as i32).sum();
+            assert_eq!(dot_q15(&w, &c), naive, "len {len}");
+        }
+    }
+
+    #[test]
+    fn vec_mm_kernels_match_scalar_reference_events_included() {
+        check(
+            "vec-mm-vs-scalar",
+            64,
+            |rng, _| {
+                let k = rng.range(1, 40);
+                let mut buf = vec![0i8; 4 * k];
+                rng.fill_i8(&mut buf, -64, 64);
+                let rows: Vec<i16> = widen(&buf);
+                (rows, k, rng.range(0, 64) as i32 - 32)
+            },
+            |(buf, k, bias)| {
+                let (wa, rest) = buf.split_at(*k);
+                let (wb, rest) = rest.split_at(*k);
+                let (pa, pb) = rest.split_at(*k);
+                let (b0, b1) = (*bias, -bias);
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                let s22 = ScalarMm::m2x2(wa, wb, pa, pb, b0, b1, &mut ms);
+                let v22 = VecMm::m2x2(wa, wb, pa, pb, b0, b1, &mut mv);
+                ensure(s22 == v22, "2x2 accs differ")?;
+                ensure(ms.counts == mv.counts, "2x2 event streams differ")?;
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                ensure(
+                    ScalarMm::m1x2(wa, pa, pb, b0, &mut ms)
+                        == VecMm::m1x2(wa, pa, pb, b0, &mut mv),
+                    "1x2 accs differ",
+                )?;
+                ensure(ms.counts == mv.counts, "1x2 event streams differ")?;
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                ensure(
+                    ScalarMm::m2x1(wa, wb, pa, b0, b1, &mut ms)
+                        == VecMm::m2x1(wa, wb, pa, b0, b1, &mut mv),
+                    "2x1 accs differ",
+                )?;
+                ensure(ms.counts == mv.counts, "2x1 event streams differ")?;
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                ensure(
+                    ScalarMm::m1x1(wa, pa, b0, &mut ms) == VecMm::m1x1(wa, pa, b0, &mut mv),
+                    "1x1 accs differ",
+                )?;
+                ensure(ms.counts == mv.counts, "1x1 event streams differ")
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_conv_vec_is_bit_exact_and_event_identical() {
+        check(
+            "conv-blocked-vec-vs-scalar",
+            48,
+            |rng, _| {
+                let groups = [1usize, 2][rng.range(0, 1)];
+                let cin = groups * rng.range(1, 6);
+                let cout = groups * rng.range(1, 6);
+                let k = [1usize, 3][rng.range(0, 1)];
+                let h = rng.range(k, k + 4);
+                let (p, f) = (rng.range(1, MAX_BLOCK), rng.range(1, MAX_BLOCK));
+                (test_random_conv(rng, groups, k, cin, cout), random_input(rng, h, cin), p, f)
+            },
+            |(conv, x, p, f)| {
+                let klen = conv.kernel * conv.kernel * conv.ch_per_group();
+                let mut cols = vec![0i16; p * klen];
+                let mut acc = vec![0i32; p * f];
+                let mut ys = Tensor::zeros(conv.output_shape(&x.shape), conv.q_out);
+                let mut yv = ys.clone();
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                conv_blocked_into(conv, x, &mut ys, *p, *f, &mut cols, &mut acc, &mut ms);
+                let wq = widen(&conv.weights);
+                conv_blocked_vec_into(
+                    conv, x, &mut yv, *p, *f, &mut cols, &mut acc, &wq, &mut mv,
+                );
+                ensure_eq_i8(&ys.data, &yv.data, "blocked conv vec vs scalar")?;
+                ensure(ms.counts == mv.counts, "blocked conv event streams differ")
+            },
+        );
+    }
+
+    #[test]
+    fn depthwise_vec_is_bit_exact_and_event_identical_on_lane_remainders() {
+        // channel counts straddling both the modeled 4-channel blocking
+        // and the host LANES width, remainders included
+        check(
+            "depthwise-vec-vs-scalar",
+            48,
+            |rng, _| {
+                let c = [1usize, 3, 4, 5, 7, 8, 9, 13, 16][rng.range(0, 8)];
+                let k = [1usize, 3, 5][rng.range(0, 2)];
+                let h = rng.range(k, k + 4);
+                (random_depthwise(rng, k, c), random_input(rng, h, c))
+            },
+            |(dw, x)| {
+                let mut ys = Tensor::zeros(dw.output_shape(&x.shape), dw.q_out);
+                let mut yv = ys.clone();
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                dw.forward_simd_into(x, &mut ys, &mut ms);
+                let wq = depthwise_wq(dw);
+                let mut acc = vec![0i32; dw.channels];
+                depthwise_vec_into(dw, x, &mut yv, &wq, &mut acc, &mut mv);
+                ensure_eq_i8(&ys.data, &yv.data, "depthwise vec vs scalar")?;
+                ensure(ms.counts == mv.counts, "depthwise event streams differ")
+            },
+        );
+    }
+
+    #[test]
+    fn shift_vec_is_bit_exact_and_event_identical() {
+        check(
+            "shift-vec-vs-scalar",
+            32,
+            |rng, _| {
+                let cin = rng.range(1, 12);
+                let cout = rng.range(1, 12);
+                let h = rng.range(2, 6);
+                (test_random_shift_conv(rng, cin, cout, 3), random_input(rng, h, cin))
+            },
+            |(sc, x)| {
+                let klen = sc.in_channels;
+                let (mut ca, mut cb) = (vec![0i16; klen], vec![0i16; klen]);
+                let wq = widen(&sc.weights);
+                let mut ys = Tensor::zeros(sc.output_shape(&x.shape), sc.q_out);
+                let mut yv = ys.clone();
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                sc.forward_simd_with(x, &mut ys, &mut ca, &mut cb, &wq, &mut ms);
+                shift_vec_with(sc, x, &mut yv, &mut ca, &mut cb, &wq, &mut mv);
+                ensure_eq_i8(&ys.data, &yv.data, "shift vec vs scalar")?;
+                ensure(ms.counts == mv.counts, "shift event streams differ")
+            },
+        );
+    }
+
+    #[test]
+    fn dense_vec_is_bit_exact_and_event_identical() {
+        check(
+            "dense-vec-vs-scalar",
+            32,
+            |rng, _| {
+                let (fin, fout) = (rng.range(1, 40), rng.range(1, 12));
+                let mut weights = vec![0i8; fin * fout];
+                rng.fill_i8(&mut weights, -16, 16);
+                let d = QuantDense {
+                    in_features: fin,
+                    out_features: fout,
+                    weights,
+                    bias: (0..fout).map(|_| rng.range(0, 32) as i32 - 16).collect(),
+                    q_in: QParam::new(7),
+                    q_w: QParam::new(7),
+                    q_out: QParam::new(5),
+                };
+                let mut x = vec![0i8; fin];
+                rng.fill_i8(&mut x, -32, 32);
+                (d, x)
+            },
+            |(d, x)| {
+                let wq = widen(&d.weights);
+                let mut xq = vec![0i16; d.in_features];
+                let mut outs = vec![0i8; d.out_features];
+                let mut outv = vec![0i8; d.out_features];
+                let mut ms = CountingMonitor::new();
+                let mut mv = CountingMonitor::new();
+                d.forward_simd_with(x, &mut outs, &mut xq, &wq, &mut ms);
+                dense_vec_with(d, x, &mut outv, &mut xq, &wq, &mut mv);
+                ensure_eq_i8(&outs, &outv, "dense vec vs scalar")?;
+                ensure(ms.counts == mv.counts, "dense event streams differ")
+            },
+        );
+    }
+
+    #[test]
+    fn depthwise_weight_reorder_is_a_permutation() {
+        let mut rng = Rng::new(9);
+        let d = random_depthwise(&mut rng, 3, 5);
+        let wq = depthwise_wq(&d);
+        assert_eq!(wq.len(), d.weights.len());
+        for c in 0..d.channels {
+            for i in 0..d.kernel {
+                for j in 0..d.kernel {
+                    assert_eq!(
+                        wq[(i * d.kernel + j) * d.channels + c],
+                        d.weights[(c * d.kernel + i) * d.kernel + j] as i16
+                    );
+                }
+            }
+        }
+    }
+}

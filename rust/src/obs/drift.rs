@@ -44,12 +44,23 @@ pub struct NodeCost {
     pub effective_macs: u64,
     /// Activation arena bytes live while this node runs.
     pub arena_bytes: usize,
+    /// Host execution backend the node's kernel deploys with
+    /// ([`crate::nn::Backend::as_str`] spelling). The analytic costs are
+    /// backend-invariant (modeled MCU stream); measured host wall time
+    /// is not, so the drift monitor fits ns-per-cycle per backend.
+    pub backend: String,
 }
 
 impl NodeCost {
     /// Build from a measurement (shared by the profile CLI and
     /// [`plan_node_costs`]).
-    pub fn from_measurement(node: &str, index: usize, m: &Measurement, arena_bytes: usize) -> Self {
+    pub fn from_measurement(
+        node: &str,
+        index: usize,
+        m: &Measurement,
+        arena_bytes: usize,
+        backend: &str,
+    ) -> Self {
         Self {
             node: node.to_string(),
             index,
@@ -59,6 +70,7 @@ impl NodeCost {
             mem_accesses: m.mem_accesses,
             effective_macs: m.effective_macs,
             arena_bytes,
+            backend: backend.to_string(),
         }
     }
 
@@ -73,6 +85,7 @@ impl NodeCost {
             .field("mem_accesses", self.mem_accesses)
             .field("effective_macs", self.effective_macs)
             .field("arena_bytes", self.arena_bytes)
+            .field("backend", self.backend.as_str())
     }
 }
 
@@ -101,7 +114,13 @@ pub fn plan_node_costs(
                 NodeOp::Add(_) => (counts::residual_add_counts(in_shape), PathClass::Scalar),
             };
             let m = measure(&op_counts, path, cfg);
-            NodeCost::from_measurement(node.op.name(), i, &m, plan.layer_ram_bytes(i))
+            NodeCost::from_measurement(
+                node.op.name(),
+                i,
+                &m,
+                plan.layer_ram_bytes(i),
+                cand.backend.as_str(),
+            )
         })
         .collect()
 }
@@ -141,6 +160,12 @@ pub struct DriftReport {
     /// OLS fit of measured ns vs predicted cycles across all measured
     /// nodes (`None` below 2 points or under degenerate variance).
     pub fit: Option<LinearFit>,
+    /// The same fit restricted to each executing backend (keyed by
+    /// [`crate::nn::Backend::as_str`] spelling, in key order). The
+    /// predicted cycles are backend-invariant, so a vec kernel's lower
+    /// host wall time shows up as a distinct (smaller) ns-per-cycle
+    /// slope here rather than as drift noise in the global fit.
+    pub backend_fits: Vec<(String, LinearFit)>,
     /// Per-node records, in (model, node index) order.
     pub records: Vec<DriftRecord>,
 }
@@ -168,6 +193,21 @@ impl DriftReport {
                 .field("n", f.n),
             None => Json::Null,
         };
+        let backend_fits = Json::Obj(
+            self.backend_fits
+                .iter()
+                .map(|(backend, f)| {
+                    (
+                        backend.clone(),
+                        Json::obj()
+                            .field("ns_per_cycle", f.a)
+                            .field("intercept_ns", f.b)
+                            .field("r2", f.r2)
+                            .field("n", f.n),
+                    )
+                })
+                .collect(),
+        );
         let nodes: Vec<Json> = self
             .records
             .iter()
@@ -184,6 +224,7 @@ impl DriftReport {
         Json::obj()
             .field("tolerance", self.tolerance)
             .field("fit", fit)
+            .field("backend_fits", backend_fits)
             .field("nodes", Json::Arr(nodes))
             .field("flagged", self.flagged())
     }
@@ -234,15 +275,26 @@ impl DriftMonitor {
     pub fn report(&self, tolerance: f64) -> DriftReport {
         let mut xs = Vec::new();
         let mut ys = Vec::new();
+        let mut by_backend: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
         for accums in self.models.values() {
             for a in accums {
                 if a.samples > 0 {
+                    let mean_ns = a.measured_ns_sum / a.samples as f64;
                     xs.push(a.cost.cycles);
-                    ys.push(a.measured_ns_sum / a.samples as f64);
+                    ys.push(mean_ns);
+                    let (bx, by) = by_backend.entry(a.cost.backend.as_str()).or_default();
+                    bx.push(a.cost.cycles);
+                    by.push(mean_ns);
                 }
             }
         }
         let fit = linreg(&xs, &ys);
+        let backend_fits: Vec<(String, LinearFit)> = by_backend
+            .into_iter()
+            .filter_map(|(backend, (bx, by))| {
+                linreg(&bx, &by).map(|f| (backend.to_string(), f))
+            })
+            .collect();
         let mut records = Vec::new();
         for (model, accums) in &self.models {
             for a in accums {
@@ -270,6 +322,7 @@ impl DriftMonitor {
         DriftReport {
             tolerance,
             fit,
+            backend_fits,
             records,
         }
     }
@@ -280,6 +333,10 @@ mod tests {
     use super::*;
 
     fn cost(name: &str, index: usize, cycles: f64) -> NodeCost {
+        cost_on(name, index, cycles, "scalar")
+    }
+
+    fn cost_on(name: &str, index: usize, cycles: f64, backend: &str) -> NodeCost {
         NodeCost {
             node: name.to_string(),
             index,
@@ -289,6 +346,7 @@ mod tests {
             mem_accesses: cycles as u64 / 2,
             effective_macs: cycles as u64 / 4,
             arena_bytes: 1024,
+            backend: backend.to_string(),
         }
     }
 
@@ -350,6 +408,39 @@ mod tests {
         assert_eq!(rep.records.len(), 1, "only the measured node reports");
         assert!(rep.fit.is_none(), "one point cannot fit a line");
         assert_eq!(rep.flagged(), 0);
+    }
+
+    #[test]
+    fn backend_fits_separate_host_speeds() {
+        let mut mon = DriftMonitor::new();
+        mon.register(
+            "m",
+            vec![
+                cost_on("conv", 0, 1000.0, "scalar"),
+                cost_on("dense", 1, 4000.0, "scalar"),
+                cost_on("conv.vec", 2, 1000.0, "vec"),
+                cost_on("dense.vec", 3, 4000.0, "vec"),
+            ],
+        );
+        // identical modeled cycles; the vec kernels run 3× faster on the
+        // host (4 vs 12 ns/cycle) — a backend property, not drift
+        mon.record("m", 0, 12_000.0);
+        mon.record("m", 1, 48_000.0);
+        mon.record("m", 2, 4_000.0);
+        mon.record("m", 3, 16_000.0);
+        let rep = mon.report(10.0);
+        assert_eq!(rep.backend_fits.len(), 2);
+        let fits: BTreeMap<&str, &LinearFit> =
+            rep.backend_fits.iter().map(|(b, f)| (b.as_str(), f)).collect();
+        assert!((fits["scalar"].a - 12.0).abs() < 1e-6, "scalar slope {}", fits["scalar"].a);
+        assert!((fits["vec"].a - 4.0).abs() < 1e-6, "vec slope {}", fits["vec"].a);
+        assert!(fits["vec"].a < fits["scalar"].a, "vec must fit a smaller ns-per-cycle");
+        let j = Json::parse(&rep.to_json().to_string()).expect("valid json");
+        let bf = j.get("backend_fits").unwrap();
+        assert!(bf.get("scalar").is_some() && bf.get("vec").is_some());
+        for n in j.get("nodes").and_then(|v| v.as_arr()).unwrap() {
+            assert!(n.get("backend").is_some(), "records carry the executing backend");
+        }
     }
 
     #[test]

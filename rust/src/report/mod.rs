@@ -215,6 +215,10 @@ pub fn tuned_summary_json(rows: &[crate::harness::TunedCmpRow]) -> String {
 pub fn server_stats_json(stats: &crate::coordinator::ServerStats) -> String {
     use crate::util::json::Json;
     let hist: Vec<Json> = stats.batch_hist.iter().map(|&c| Json::Num(c as f64)).collect();
+    let mut backends = Json::obj();
+    for (model, summary) in &stats.backends {
+        backends = backends.field(model, summary.as_str());
+    }
     Json::obj()
         .field("served", stats.served)
         .field("errors", stats.errors)
@@ -234,6 +238,7 @@ pub fn server_stats_json(stats: &crate::coordinator::ServerStats) -> String {
         .field("quarantined", stats.quarantined)
         .field("breaker_trips", stats.breaker_trips)
         .field("degraded_batches", stats.degraded_batches)
+        .field("backends", backends)
         .to_string()
 }
 
@@ -318,6 +323,10 @@ mod tests {
             quarantined: 1,
             breaker_trips: 2,
             degraded_batches: 5,
+            backends: vec![
+                ("mcunet-std".to_string(), "scalar".to_string()),
+                ("mcunet-dws".to_string(), "vec:7/9".to_string()),
+            ],
         };
         let j = Json::parse(&server_stats_json(&stats)).expect("valid json");
         assert_eq!(j.get("served").and_then(|v| v.as_i64()), Some(12));
@@ -333,6 +342,10 @@ mod tests {
         assert_eq!(j.get("quarantined").and_then(|v| v.as_i64()), Some(1));
         assert_eq!(j.get("breaker_trips").and_then(|v| v.as_i64()), Some(2));
         assert_eq!(j.get("degraded_batches").and_then(|v| v.as_i64()), Some(5));
+        // the per-model deployed-backend summary survives the round trip
+        let backends = j.get("backends").unwrap();
+        assert_eq!(backends.get("mcunet-std").and_then(|v| v.as_str()), Some("scalar"));
+        assert_eq!(backends.get("mcunet-dws").and_then(|v| v.as_str()), Some("vec:7/9"));
     }
 
     #[test]

@@ -16,14 +16,20 @@ use crate::mcu::McuConfig;
 use crate::util::json::Json;
 
 use super::space::{Candidate, KernelImpl, Lowering};
+use super::BackendSel;
+use crate::nn::Backend;
 
 /// Cache file format version (bump on incompatible schema changes —
-/// mismatching files are discarded wholesale). v2: keys switched from
-/// per-layer to per-node signatures, which fold the node's input
-/// topology (`~in<d1[,d2]>` producer-distance suffix) so graph rewiring
-/// invalidates by construction; v1 files hold orphaned keys and are
-/// discarded.
-pub const CACHE_VERSION: i64 = 2;
+/// mismatching files are discarded wholesale). v3: entries gained a
+/// required `backend` field (host execution backend of the winning
+/// candidate) and keys gained a backend-policy segment, so a schedule
+/// tuned under one `--backend` policy can never be replayed under
+/// another; v2 files predate the backend axis and are discarded. v2:
+/// keys switched from per-layer to per-node signatures, which fold the
+/// node's input topology (`~in<d1[,d2]>` producer-distance suffix) so
+/// graph rewiring invalidates by construction; v1 files hold orphaned
+/// keys and are discarded.
+pub const CACHE_VERSION: i64 = 3;
 
 /// A cached per-layer decision: the winning candidate plus its simulated
 /// measurement (all inputs to the objective, so replay needs no simulator).
@@ -44,9 +50,24 @@ pub fn mcu_fingerprint(cfg: &McuConfig) -> String {
     format!("{:.3}MHz-{:?}", cfg.freq_mhz, cfg.opt)
 }
 
-/// Compose a cache key.
+/// Compose a cache key under the default (scalar-only) backend policy —
+/// the key every legacy entry point composes.
 pub fn cache_key(layer_sig: &str, mcu_fp: &str, objective: &str) -> String {
-    format!("{layer_sig}|{mcu_fp}|{objective}")
+    cache_key_backend(layer_sig, mcu_fp, objective, BackendSel::Scalar)
+}
+
+/// Compose a cache key under an explicit backend policy. The policy is
+/// its own key segment: a decision tuned under `--backend vec` must
+/// never be replayed for a `--backend scalar` deployment (the cached
+/// candidate could name a backend the policy forbids), so the two miss
+/// each other by construction.
+pub fn cache_key_backend(
+    layer_sig: &str,
+    mcu_fp: &str,
+    objective: &str,
+    backend: BackendSel,
+) -> String {
+    format!("{layer_sig}|{mcu_fp}|{objective}|{}", backend.as_str())
 }
 
 /// The tuning cache: an in-memory map with optional JSON persistence.
@@ -120,6 +141,7 @@ impl TuningCache {
                 Json::obj()
                     .field("kernel", e.candidate.kernel.as_str())
                     .field("lowering", e.candidate.lowering.path_name())
+                    .field("backend", e.candidate.backend.as_str())
                     .field("patches", patches)
                     .field("filters", filters)
                     .field("cycles", e.cycles)
@@ -178,10 +200,11 @@ fn parse_entries(json: &Json) -> Option<BTreeMap<String, CacheEntry>> {
             },
             _ => return None,
         };
+        let backend = Backend::parse(v.get("backend")?.as_str()?).ok()?;
         out.insert(
             key.clone(),
             CacheEntry {
-                candidate: Candidate { kernel, lowering },
+                candidate: Candidate { kernel, lowering, backend },
                 cycles: v.get("cycles")?.as_f64()?,
                 latency_s: v.get("latency_s")?.as_f64()?,
                 energy_mj: v.get("energy_mj")?.as_f64()?,
@@ -204,6 +227,7 @@ mod tests {
             candidate: Candidate {
                 kernel: KernelImpl::AsIs,
                 lowering: Lowering::Im2col { patches: 2, filters: 2 },
+                backend: Backend::ScalarRef,
             },
             cycles: lat * 84e6,
             latency_s: lat,
@@ -221,7 +245,11 @@ mod tests {
         c.put(
             cache_key("dw[y]@8x8x4", "84.000MHz-Os", "energy"),
             CacheEntry {
-                candidate: Candidate { kernel: KernelImpl::DepthwiseAsConv, lowering: Lowering::Direct },
+                candidate: Candidate {
+                    kernel: KernelImpl::DepthwiseAsConv,
+                    lowering: Lowering::Direct,
+                    backend: Backend::ScalarRef,
+                },
                 ..entry(0.5)
             },
         );
@@ -284,6 +312,54 @@ mod tests {
         assert!(c.get(&k_f20).is_none(), "20 MHz must miss an 84 MHz entry");
         // objective change misses too
         assert!(c.get(&cache_key(sig, &mcu_fingerprint(&os), "energy")).is_none());
+    }
+
+    #[test]
+    fn backend_change_invalidates_cached_entries() {
+        // Policy axis: the same (signature, MCU, objective) under a
+        // different --backend policy composes a different key, so a
+        // scalar-tuned cache can never answer a vec-policy tune.
+        let sig = "conv[b]@8x8x8";
+        let fp = mcu_fingerprint(&McuConfig::default());
+        let k_scalar = cache_key(sig, &fp, "latency");
+        assert_eq!(
+            k_scalar,
+            cache_key_backend(sig, &fp, "latency", BackendSel::Scalar),
+            "legacy keys are the scalar-policy keys"
+        );
+        let k_vec = cache_key_backend(sig, &fp, "latency", BackendSel::Vec);
+        let k_auto = cache_key_backend(sig, &fp, "latency", BackendSel::Auto);
+        assert_ne!(k_scalar, k_vec);
+        assert_ne!(k_scalar, k_auto);
+        assert_ne!(k_vec, k_auto);
+        let mut c = TuningCache::in_memory();
+        c.put(k_scalar.clone(), entry(0.01));
+        assert!(c.get(&k_scalar).is_some());
+        assert!(c.get(&k_vec).is_none(), "vec policy must miss a scalar-tuned entry");
+        assert!(c.get(&k_auto).is_none(), "auto policy must miss a scalar-tuned entry");
+
+        // Value axis: the winning candidate's backend is part of the
+        // entry and survives a JSON roundtrip — a replayed vec decision
+        // deploys the vec kernel, not a silently-scalar one.
+        c.put(
+            k_vec.clone(),
+            CacheEntry {
+                candidate: Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Im2col { patches: 2, filters: 2 },
+                    backend: Backend::VecLanes,
+                },
+                ..entry(0.008)
+            },
+        );
+        let parsed = parse_entries(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed[&k_vec].candidate.backend, Backend::VecLanes);
+        assert_eq!(parsed[&k_scalar].candidate.backend, Backend::ScalarRef);
+
+        // Schema axis: pre-backend (v2) cache files are discarded
+        // wholesale by the version bump instead of being misread.
+        let v2 = r#"{"version":2,"entries":{"conv[b]@8x8x8|84.000MHz-Os|latency":{"kernel":"as-is","lowering":"direct","patches":0,"filters":0,"cycles":1.0,"latency_s":0.1,"energy_mj":0.2,"mem_accesses":3,"effective_macs":4,"ram_bytes":5}}}"#;
+        assert!(parse_entries(&Json::parse(v2).unwrap()).is_none());
     }
 
     #[test]

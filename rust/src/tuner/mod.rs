@@ -44,12 +44,53 @@ pub mod cache;
 pub mod search;
 pub mod space;
 
-pub use cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
+pub use cache::{cache_key, cache_key_backend, mcu_fingerprint, CacheEntry, TuningCache};
 pub use search::{
-    simd_flags, tune_graph_shape, tune_model, tune_model_shape, LayerDecision, TuneStats,
-    TunedSchedule,
+    simd_flags, tune_graph_shape, tune_graph_shape_backend, tune_model, tune_model_shape,
+    tune_model_shape_backend, LayerDecision, TuneStats, TunedSchedule,
 };
 pub use space::{analytic_counts, candidates, Candidate, KernelImpl, Lowering};
+
+pub use crate::nn::Backend;
+
+/// Which host execution backends the search may choose from — the
+/// CLI-facing policy axis (`--backend scalar|vec|auto`). Orthogonal to
+/// [`Objective`]: the objective prices the modeled MCU event stream,
+/// which is backend-invariant; the policy only restricts which
+/// [`Backend`] the deployed kernels execute with on the host.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendSel {
+    /// Scalar reference kernels only — the historical behaviour, and
+    /// the default for every legacy entry point.
+    #[default]
+    Scalar,
+    /// Host-vectorized kernels wherever the lowering admits them
+    /// (im2col points); scalar elsewhere.
+    Vec,
+    /// Both backends enumerated; ties broken toward [`Backend::VecLanes`].
+    Auto,
+}
+
+impl BackendSel {
+    /// Parse a CLI spelling: `scalar`, `vec`, or `auto`.
+    pub fn parse(s: &str) -> Result<BackendSel, String> {
+        match s {
+            "scalar" => Ok(BackendSel::Scalar),
+            "vec" => Ok(BackendSel::Vec),
+            "auto" => Ok(BackendSel::Auto),
+            other => Err(format!("unknown backend {other:?} (scalar|vec|auto)")),
+        }
+    }
+
+    /// Stable name — part of every backend-aware cache key.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendSel::Scalar => "scalar",
+            BackendSel::Vec => "vec",
+            BackendSel::Auto => "auto",
+        }
+    }
+}
 
 /// What the tuner minimizes.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -125,6 +166,15 @@ impl Objective {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_sel_spellings_roundtrip() {
+        for sel in [BackendSel::Scalar, BackendSel::Vec, BackendSel::Auto] {
+            assert_eq!(BackendSel::parse(sel.as_str()), Ok(sel));
+        }
+        assert!(BackendSel::parse("simd").is_err());
+        assert_eq!(BackendSel::default(), BackendSel::Scalar);
+    }
 
     #[test]
     fn objective_parse_spellings() {

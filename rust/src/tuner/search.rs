@@ -22,9 +22,10 @@
 use crate::mcu::{measure, McuConfig, Measurement};
 use crate::nn::{counts, ExecPlan, Graph, Model, Monitor, Node, NodeOp, Shape, Tensor, Workspace};
 
-use super::cache::{cache_key, mcu_fingerprint, CacheEntry, TuningCache};
+use super::cache::{cache_key_backend, mcu_fingerprint, CacheEntry, TuningCache};
 use super::space::{self, Candidate, KernelImpl, Lowering};
-use super::Objective;
+use super::{BackendSel, Objective};
+use crate::nn::Backend;
 
 /// The tuned decision for one layer.
 #[derive(Clone, Debug)]
@@ -272,17 +273,18 @@ impl TunedSchedule {
     pub fn to_markdown(&self) -> String {
         let mut s = format!(
             "**{}** — objective {}, MCU {}\n\n\
-             | # | layer | kernel | lowering | latency (ms) | energy (µJ) | RAM (B) | cached |\n\
-             |---|---|---|---|---|---|---|---|\n",
+             | # | layer | kernel | lowering | backend | latency (ms) | energy (µJ) | RAM (B) | cached |\n\
+             |---|---|---|---|---|---|---|---|---|\n",
             self.model, self.objective, self.mcu
         );
         for d in &self.layers {
             s.push_str(&format!(
-                "| {} | {} | {} | {} | {:.4} | {:.3} | {} | {} |\n",
+                "| {} | {} | {} | {} | {} | {:.4} | {:.3} | {} | {} |\n",
                 d.index,
                 d.layer,
                 d.candidate.kernel.as_str(),
                 d.candidate.lowering.as_str(),
+                d.candidate.backend.as_str(),
                 1e3 * d.latency_s,
                 1e3 * d.energy_mj,
                 d.ram_bytes,
@@ -290,7 +292,7 @@ impl TunedSchedule {
             ));
         }
         s.push_str(&format!(
-            "| — | **total** | | | {:.4} | {:.3} | {} (peak) | |\n",
+            "| — | **total** | | | | {:.4} | {:.3} | {} (peak) | |\n",
             1e3 * self.latency_s,
             1e3 * self.energy_mj,
             self.peak_ram_bytes
@@ -371,15 +373,54 @@ pub fn tune_model_shape(
     tune_graph_shape(&Graph::from_model(model), cfg, objective, cache)
 }
 
-/// Legal candidates of a graph node: the layer's schedule space, or the
-/// single scalar implementation of the residual join.
-fn node_candidates(node: &Node) -> Vec<Candidate> {
-    match &node.op {
+/// [`tune_model_shape`] under an explicit host-backend policy.
+pub fn tune_model_shape_backend(
+    model: &Model,
+    cfg: &McuConfig,
+    objective: Objective,
+    backend: BackendSel,
+    cache: &mut TuningCache,
+) -> (TunedSchedule, TuneStats) {
+    tune_graph_shape_backend(&Graph::from_model(model), cfg, objective, backend, cache)
+}
+
+/// Legal candidates of a graph node under a backend policy: the layer's
+/// schedule space, or the single scalar implementation of the residual
+/// join, filtered/ordered so the search can only deploy backends the
+/// policy allows:
+///
+/// * `Scalar` — scalar-reference candidates only (the historical space,
+///   byte-identical decisions to every pre-backend release);
+/// * `Vec` — vectorized twins only wherever the node has any (im2col
+///   points); nodes without vec twins (residual joins, direct-only
+///   spaces) keep their scalar candidates, since *some* kernel must run;
+/// * `Auto` — the full space, stably reordered vec-first: the modeled
+///   MCU event stream is backend-invariant, so a vec twin always scores
+///   exactly equal to its scalar sibling, and the first-strict-less
+///   argmin then resolves the tie toward the faster host kernel.
+fn node_candidates(node: &Node, backend: BackendSel) -> Vec<Candidate> {
+    let mut cands = match &node.op {
         NodeOp::Layer(l) => space::candidates(l),
         NodeOp::Add(_) => {
-            vec![Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }]
+            vec![Candidate {
+                kernel: KernelImpl::AsIs,
+                lowering: Lowering::Direct,
+                backend: Backend::ScalarRef,
+            }]
         }
+    };
+    match backend {
+        BackendSel::Scalar => cands.retain(|c| c.backend == Backend::ScalarRef),
+        BackendSel::Vec => {
+            if cands.iter().any(|c| c.backend == Backend::VecLanes) {
+                cands.retain(|c| c.backend == Backend::VecLanes);
+            }
+        }
+        // stable partition, vec twins first (sort_by_key is stable and
+        // false < true), preserving enumeration order within each block
+        BackendSel::Auto => cands.sort_by_key(|c| c.backend == Backend::ScalarRef),
     }
+    cands
 }
 
 /// [`space::applies`] for graph nodes (cache-replay validation).
@@ -439,6 +480,23 @@ pub fn tune_graph_shape(
     objective: Objective,
     cache: &mut TuningCache,
 ) -> (TunedSchedule, TuneStats) {
+    tune_graph_shape_backend(graph, cfg, objective, BackendSel::Scalar, cache)
+}
+
+/// [`tune_graph_shape`] under an explicit host-backend policy
+/// ([`BackendSel`]): the policy filters each node's candidate list (see
+/// [`node_candidates`]) and is folded into every cache key
+/// ([`cache_key_backend`]), so schedules tuned under different policies
+/// never replay each other's entries. The modeled MCU costs are
+/// backend-invariant — policies change which host kernel deploys, never
+/// the reported cycles/energy/RAM of a given (kernel, lowering).
+pub fn tune_graph_shape_backend(
+    graph: &Graph,
+    cfg: &McuConfig,
+    objective: Objective,
+    backend: BackendSel,
+    cache: &mut TuningCache,
+) -> (TunedSchedule, TuneStats) {
     let mcu_fp = mcu_fingerprint(cfg);
     let obj_name = objective.name();
     let mut stats = TuneStats::default();
@@ -448,7 +506,7 @@ pub fn tune_graph_shape(
 
     for (index, node) in graph.nodes.iter().enumerate() {
         let sig = space::node_signature(node, index, &shapes);
-        let key = cache_key(&sig, &mcu_fp, &obj_name);
+        let key = cache_key_backend(&sig, &mcu_fp, &obj_name, backend);
 
         let cached = cache.get(&key).copied();
         let decision = match cached {
@@ -461,7 +519,7 @@ pub fn tune_graph_shape(
             }
             _ => {
                 let mut best: Option<(f64, CacheEntry)> = None;
-                for cand in node_candidates(node) {
+                for cand in node_candidates(node, backend) {
                     let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
                     let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
                     stats.analytic += 1;
@@ -675,6 +733,94 @@ mod tests {
         // the flags view matches the decisions
         let flags = simd_flags(&sched);
         assert_eq!(flags.len(), model.layers.len());
+    }
+
+    #[test]
+    fn backend_policies_pick_conforming_backends() {
+        let cfg = McuConfig::default();
+        let model = mcunet(Primitive::DepthwiseSeparable, 5);
+        let mut cache = TuningCache::in_memory();
+        let tune = |sel, cache: &mut TuningCache| {
+            tune_model_shape_backend(&model, &cfg, Objective::Latency, sel, cache).0
+        };
+        let scalar = tune(BackendSel::Scalar, &mut cache);
+        let vec_s = tune(BackendSel::Vec, &mut cache);
+        let auto_s = tune(BackendSel::Auto, &mut cache);
+
+        // the scalar policy IS the legacy entry point (same keys, same
+        // space), so the pre-backend decisions are byte-stable
+        let (legacy, legacy_stats) =
+            tune_model_shape(&model, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(legacy_stats.cache_hits, model.layers.len());
+        for (a, b) in scalar.layers.iter().zip(&legacy.layers) {
+            assert_eq!(a.candidate, b.candidate);
+        }
+        for d in &scalar.layers {
+            assert_eq!(d.candidate.backend, Backend::ScalarRef, "layer {}", d.index);
+        }
+
+        // vec policy: every node with vec twins (= every im2col-lowered
+        // decision) deploys the vectorized kernel; direct-only nodes
+        // keep the scalar reference
+        assert!(
+            vec_s.layers.iter().any(|d| d.candidate.backend == Backend::VecLanes),
+            "the zoo model must tune at least one node onto the vec backend"
+        );
+        for d in &vec_s.layers {
+            match d.candidate.lowering {
+                Lowering::Im2col { .. } => {
+                    assert_eq!(d.candidate.backend, Backend::VecLanes, "layer {}", d.index)
+                }
+                Lowering::Direct => {
+                    assert_eq!(d.candidate.backend, Backend::ScalarRef, "layer {}", d.index)
+                }
+            }
+        }
+
+        // the modeled MCU stream is backend-invariant: auto reaches
+        // exactly the scalar-optimal latency (per node, not just in
+        // total) while deploying vec kernels on every tie; restricting
+        // to vec-only candidates can only cost modeled latency
+        assert_eq!(auto_s.latency_s, scalar.latency_s);
+        assert!(vec_s.latency_s >= scalar.latency_s);
+        for (a, s) in auto_s.layers.iter().zip(&scalar.layers) {
+            assert_eq!(a.latency_s, s.latency_s, "layer {}", a.index);
+            if matches!(a.candidate.lowering, Lowering::Im2col { .. }) {
+                assert_eq!(a.candidate.backend, Backend::VecLanes, "layer {}", a.index);
+            }
+        }
+    }
+
+    #[test]
+    fn vec_policy_graph_tune_is_bit_exact_and_replays_warm() {
+        use crate::models::mcunet_residual;
+        let cfg = McuConfig::default();
+        let g = mcunet_residual(Primitive::DepthwiseSeparable, 5);
+        let mut cache = TuningCache::in_memory();
+        let (sched, cold) =
+            tune_graph_shape_backend(&g, &cfg, Objective::Latency, BackendSel::Vec, &mut cache);
+        assert_eq!(cold.evaluations, 0, "backend-aware tuning is analytic too");
+        assert!(sched.layers.iter().any(|d| d.candidate.backend == Backend::VecLanes));
+
+        // vec-backed compiled engine stays bit-exact with the scalar
+        // reference executor on a residual graph
+        let mut rng = crate::util::prng::Rng::new(9);
+        let mut x = Tensor::zeros(g.input_shape, g.input_q);
+        rng.fill_i8(&mut x.data, -64, 63);
+        let want = g.forward(&x, true, &mut NoopMonitor);
+        let mut ws = sched.workspace_graph(&g);
+        let got = sched.run_in(&x, &mut ws, &mut NoopMonitor).clone();
+        assert_eq!(want.data, got.data);
+
+        // warm replay under the same policy hits every node; a
+        // scalar-policy tune misses all of them (policy is in the key)
+        let (_, warm) =
+            tune_graph_shape_backend(&g, &cfg, Objective::Latency, BackendSel::Vec, &mut cache);
+        assert_eq!(warm.cache_hits, g.nodes.len());
+        assert_eq!(warm.analytic, 0);
+        let (_, cross) = tune_graph_shape(&g, &cfg, Objective::Latency, &mut cache);
+        assert_eq!(cross.cache_hits, 0, "scalar policy must not replay vec-policy entries");
+        assert!(cross.analytic > 0);
     }
 
     #[test]

@@ -23,8 +23,8 @@ use crate::mcu::PathClass;
 use crate::nn::blocking::fits_register_file;
 use crate::nn::counts;
 use crate::nn::{
-    uniform_shifts, Layer, Monitor, Node, NodeOp, OpCounts, QuantConv, QuantDepthwise, Shape,
-    ShiftConv, Tensor,
+    uniform_shifts, Backend, Layer, Monitor, Node, NodeOp, OpCounts, QuantConv, QuantDepthwise,
+    Shape, ShiftConv, Tensor,
 };
 
 /// Which kernel implementation computes the layer.
@@ -94,6 +94,13 @@ impl Lowering {
 pub struct Candidate {
     pub kernel: KernelImpl,
     pub lowering: Lowering,
+    /// Host execution backend for the compiled kernel. Orthogonal to the
+    /// modeled MCU stream: a `VecLanes` candidate scores identically to
+    /// its `ScalarRef` twin (events are a function of kernel × lowering
+    /// only) and is admissible exactly where the lowering is `Im2col` —
+    /// the vectorized hot loops are the im2col matmul family, the
+    /// depthwise channel-lane kernel and the dense row-pair kernel.
+    pub backend: Backend,
 }
 
 /// All (P, F) blockings that fit the M4 register file, P and F up to 4
@@ -125,8 +132,15 @@ fn conv_is_pointwise(c: &QuantConv) -> bool {
 /// Enumerate the legal schedule space of one layer.
 pub fn candidates(layer: &Layer) -> Vec<Candidate> {
     let mut out = Vec::new();
+    // ScalarRef is pushed before its VecLanes twin so that, under the
+    // search's first-strict-less argmin, analytic ties keep resolving to
+    // the scalar reference (the default-policy decisions are unchanged
+    // by the backend axis).
     let push = |out: &mut Vec<Candidate>, kernel: KernelImpl, lowering: Lowering| {
-        out.push(Candidate { kernel, lowering });
+        out.push(Candidate { kernel, lowering, backend: Backend::ScalarRef });
+        if matches!(lowering, Lowering::Im2col { .. }) {
+            out.push(Candidate { kernel, lowering, backend: Backend::VecLanes });
+        }
     };
     match layer {
         Layer::Conv(c) => {
@@ -200,6 +214,11 @@ fn legal_blocking(p: usize, f: usize) -> bool {
 /// enumerate the space; equivalence with `candidates(layer).contains`
 /// is pinned by a test below.
 pub fn applies(layer: &Layer, cand: &Candidate) -> bool {
+    // the vec backend only exists for the im2col-lowered hot kernels;
+    // Direct loops are scalar-only on every layer kind
+    if cand.backend == Backend::VecLanes && !matches!(cand.lowering, Lowering::Im2col { .. }) {
+        return false;
+    }
     match (layer, cand.kernel, cand.lowering) {
         (Layer::Conv(_), KernelImpl::AsIs, Lowering::Direct) => true,
         (Layer::Conv(_), KernelImpl::AsIs, Lowering::Im2col { patches, filters }) => {
@@ -315,6 +334,13 @@ pub fn conv_im2col_blocked<M: Monitor>(
 /// Execute `layer` under a schedule-space candidate. Panics if the
 /// candidate does not apply to the layer kind (callers enumerate via
 /// [`candidates`] or validate via [`applies`]).
+///
+/// The candidate's [`Backend`] is deliberately ignored here: this is the
+/// allocating *reference* executor, and the vec backend is pinned
+/// bit-exact and event-stream-identical to it (in [`crate::nn::vec`]
+/// unit properties and across the whole space via the compiled-plan
+/// equivalence tests in [`crate::nn::plan`]), so the scalar reference is
+/// the oracle for both backends.
 pub fn execute<M: Monitor>(layer: &Layer, cand: &Candidate, x: &Tensor, mon: &mut M) -> Tensor {
     match (layer, cand.kernel) {
         (Layer::Conv(c), KernelImpl::AsIs) => match cand.lowering {
@@ -372,7 +398,9 @@ pub fn execute<M: Monitor>(layer: &Layer, cand: &Candidate, x: &Tensor, mon: &mu
 /// what lets the search score the whole space with shape arithmetic
 /// instead of instrumented forwards (the equality is property-tested
 /// below across every candidate of every layer kind). Panics like
-/// [`execute`] if the candidate does not apply.
+/// [`execute`] if the candidate does not apply. Like [`execute`], the
+/// backend axis does not enter: the modeled MCU stream is a function of
+/// kernel × lowering only.
 pub fn analytic_counts(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> OpCounts {
     match (layer, cand.kernel) {
         (Layer::Conv(c), KernelImpl::AsIs) => match cand.lowering {
@@ -454,12 +482,19 @@ pub fn scratch_bytes(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> usize
         (Layer::Conv(c), Lowering::Im2col { patches, .. }) => match cand.kernel {
             // the shift gather column is 1×1×Cx
             KernelImpl::PointwiseAsShift => patches * c.in_channels * 2,
-            // depthwise SIMD works in-register, no column buffer
+            // depthwise SIMD works in-register, no column buffer — but
+            // the host-vectorized twin keeps a per-channel i32
+            // accumulator strip in the workspace arena
+            KernelImpl::ConvAsDepthwise if cand.backend == Backend::VecLanes => {
+                4 * c.in_channels
+            }
             KernelImpl::ConvAsDepthwise => 0,
             _ => patches * c.kernel * c.kernel * c.ch_per_group() * 2,
         },
         (Layer::Depthwise(d), Lowering::Im2col { patches, .. }) => match cand.kernel {
             KernelImpl::DepthwiseAsConv => patches * d.kernel * d.kernel * 2,
+            // vec backend: per-channel i32 accumulator strip (see above)
+            _ if cand.backend == Backend::VecLanes => 4 * d.channels,
             _ => 0,
         },
         (Layer::Shift(s), Lowering::Im2col { patches, .. }) => patches * s.in_channels * 2,
@@ -753,16 +788,22 @@ mod tests {
         layers.push(Layer::Conv(random_conv(&mut rng, 4, 3, 4, 4))); // depthwise-shaped
         layers.push(Layer::Conv(random_conv(&mut rng, 1, 1, 5, 3))); // pointwise
         let mut probes: Vec<Candidate> = Vec::new();
-        for kernel in [
-            KernelImpl::AsIs,
-            KernelImpl::ConvAsDepthwise,
-            KernelImpl::DepthwiseAsConv,
-            KernelImpl::PointwiseAsShift,
-        ] {
-            probes.push(Candidate { kernel, lowering: Lowering::Direct });
-            for patches in 1..=5usize {
-                for filters in 1..=5usize {
-                    probes.push(Candidate { kernel, lowering: Lowering::Im2col { patches, filters } });
+        for backend in [Backend::ScalarRef, Backend::VecLanes] {
+            for kernel in [
+                KernelImpl::AsIs,
+                KernelImpl::ConvAsDepthwise,
+                KernelImpl::DepthwiseAsConv,
+                KernelImpl::PointwiseAsShift,
+            ] {
+                probes.push(Candidate { kernel, lowering: Lowering::Direct, backend });
+                for patches in 1..=5usize {
+                    for filters in 1..=5usize {
+                        probes.push(Candidate {
+                            kernel,
+                            lowering: Lowering::Im2col { patches, filters },
+                            backend,
+                        });
+                    }
                 }
             }
         }
@@ -872,31 +913,66 @@ mod tests {
         let mut rng = Rng::new(9);
         let c = random_conv(&mut rng, 1, 3, 8, 8);
         let shape = Shape::new(6, 6, 8);
-        let direct = Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct };
+        let direct = Candidate {
+            kernel: KernelImpl::AsIs,
+            lowering: Lowering::Direct,
+            backend: Backend::ScalarRef,
+        };
         let im2 = Candidate {
             kernel: KernelImpl::AsIs,
             lowering: Lowering::Im2col { patches: 2, filters: 2 },
+            backend: Backend::ScalarRef,
         };
         let im4 = Candidate {
             kernel: KernelImpl::AsIs,
             lowering: Lowering::Im2col { patches: 4, filters: 1 },
+            backend: Backend::ScalarRef,
         };
         let layer = Layer::Conv(c);
         assert_eq!(scratch_bytes(&layer, &direct, &shape), 0);
         assert_eq!(scratch_bytes(&layer, &im2, &shape), 2 * 9 * 8 * 2);
         assert_eq!(scratch_bytes(&layer, &im4, &shape), 4 * 9 * 8 * 2);
         assert!(ram_bytes(&layer, &im4, &shape) > ram_bytes(&layer, &im2, &shape));
+        // the vec backend reuses the same im2col columns — no extra
+        // scratch on the blocked-matmul path
+        assert_eq!(
+            scratch_bytes(&layer, &Candidate { backend: Backend::VecLanes, ..im2 }, &shape),
+            2 * 9 * 8 * 2
+        );
         // a pointwise conv substituted onto the shift kernel pays the
         // shift scalar path's materialized intermediate map
         let pw = Layer::Conv(random_conv(&mut rng, 1, 1, 8, 8));
         let pw_as_shift = Candidate {
             kernel: KernelImpl::PointwiseAsShift,
             lowering: Lowering::Direct,
+            backend: Backend::ScalarRef,
         };
         assert_eq!(scratch_bytes(&pw, &pw_as_shift, &shape), shape.len());
         assert_eq!(
-            scratch_bytes(&pw, &Candidate { kernel: KernelImpl::AsIs, lowering: Lowering::Direct }, &shape),
+            scratch_bytes(
+                &pw,
+                &Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Direct,
+                    backend: Backend::ScalarRef,
+                },
+                &shape
+            ),
             0
+        );
+        // vec-backend depthwise (native or conv-substituted) pays the
+        // per-channel i32 accumulator strip
+        let dwc = Layer::Conv(random_conv(&mut rng, 4, 3, 4, 4));
+        let dshape = Shape::new(6, 6, 4);
+        let cad = Candidate {
+            kernel: KernelImpl::ConvAsDepthwise,
+            lowering: Lowering::Im2col { patches: 2, filters: 2 },
+            backend: Backend::ScalarRef,
+        };
+        assert_eq!(scratch_bytes(&dwc, &cad, &dshape), 0);
+        assert_eq!(
+            scratch_bytes(&dwc, &Candidate { backend: Backend::VecLanes, ..cad }, &dshape),
+            4 * 4
         );
     }
 
