@@ -60,6 +60,30 @@ echo "==> smoke: vec-policy warm-cache replay (gated, proves backend-keyed entri
 # would re-score and fail the gate
 ./target/release/convbench tune --objective latency --backend vec --quick --out results/ci --expect-warm
 
+echo "==> smoke: budgeted tune (frontier deployment under a tight RAM budget)"
+# derive a budget strictly below the unconstrained optimum's peak on a
+# residual model from the profile's frontier summary, then require the
+# deployed frontier point to fit it — budget enforcement end to end:
+# the unconstrained (greedy) schedule is infeasible at this budget, so
+# the joint tuner must deploy a genuinely different point
+frontier_line=$(./target/release/convbench profile --model mcunet-res-standard --backend auto \
+    | grep "points, peak")
+min_peak=$(echo "$frontier_line" | grep -oE '[0-9]+' | tail -2 | head -1)
+max_peak=$(echo "$frontier_line" | grep -oE '[0-9]+' | tail -1)
+if [[ -z "$min_peak" || -z "$max_peak" || "$min_peak" -ge "$max_peak" ]]; then
+    echo "ERROR: mcunet-res-standard frontier collapsed to a single point ($frontier_line)"
+    exit 1
+fi
+budget=$((max_peak - 1))
+deployed=$(./target/release/convbench profile --model mcunet-res-standard --backend auto \
+    --ram-budget "$budget" \
+    | grep "deployed frontier point" | grep -oE 'peak RAM [0-9]+' | grep -oE '[0-9]+')
+echo "    budget $budget B (unconstrained peak $max_peak B) -> deployed peak ${deployed:-none} B"
+if [[ -z "$deployed" || "$deployed" -gt "$budget" ]]; then
+    echo "ERROR: budgeted deployment peak ${deployed:-none} B exceeds budget $budget B"
+    exit 1
+fi
+
 echo "==> bench smoke: infer_hot (zero-alloc fixed + tuned paths, analytic cold tune)"
 # quick mode keeps the sample count CI-sized; the binary asserts that
 # steady-state forward_in AND the tuned-schedule run_in (compiled

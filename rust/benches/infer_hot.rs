@@ -72,8 +72,8 @@ use convbench::obs::{plan_node_costs, DriftMonitor, ExecTracer, NoopTraceSink};
 use convbench::quant::QParam;
 use convbench::report::write_report;
 use convbench::tuner::{
-    tune_graph_shape, tune_graph_shape_backend, tune_model_shape, BackendSel, Objective,
-    TuningCache,
+    tune_graph_frontier, tune_graph_joint, tune_graph_shape, tune_graph_shape_backend,
+    tune_model_shape, BackendSel, Objective, TuningCache,
 };
 use convbench::util::bench::Bench;
 use convbench::util::json::Json;
@@ -728,6 +728,75 @@ fn main() {
         ));
     }
 
+    // latency↔RAM frontiers across the zoo: point counts per model,
+    // plus the budgeted-deployment demonstration on a residual model —
+    // tightest budget below the unconstrained optimum's peak (where the
+    // greedy schedule is infeasible); the joint tuner's gain is measured
+    // against the naive RAM-safe fallback (the minimum-peak frontier
+    // point a budget-blind deployment would have to pick)
+    let mut frontier_fields: Vec<(String, Json)> = Vec::new();
+    let mut budget_demo: Option<(String, usize, usize, f64)> = None;
+    for prim in Primitive::ALL {
+        for graph in [
+            Graph::from_model(&mcunet(prim, 42)),
+            mcunet_residual(prim, 42),
+        ] {
+            let mut fcache = TuningCache::in_memory();
+            let (frontier, _) = tune_graph_frontier(
+                &graph,
+                &cfg,
+                Objective::Latency,
+                BackendSel::Auto,
+                &mut fcache,
+            );
+            frontier_fields.push((graph.name.clone(), Json::from(frontier.len() as i64)));
+            if budget_demo.is_some() || !graph.name.contains("res") {
+                continue;
+            }
+            let best = frontier.best().expect("non-empty frontier");
+            let Some(budget) = frontier
+                .points
+                .iter()
+                .map(|p| p.peak_ram_bytes)
+                .filter(|&b| b < best.peak_ram_bytes)
+                .max()
+            else {
+                continue;
+            };
+            let (budgeted, _) = tune_graph_joint(
+                &graph,
+                &cfg,
+                Objective::Latency,
+                BackendSel::Auto,
+                Some(budget),
+                &mut fcache,
+            );
+            let budgeted = budgeted.expect("frontier guarantees feasibility at its own peaks");
+            assert!(budgeted.peak_ram_bytes <= budget);
+            if budgeted.latency_s > best.latency_s * 1.25 {
+                // this model's budget costs too much latency; the
+                // acceptance bound only needs to hold on SOME residual
+                // model, so keep scanning the zoo
+                continue;
+            }
+            let fallback_latency = frontier.min_peak().expect("non-empty").latency_s;
+            budget_demo = Some((
+                graph.name.clone(),
+                budget,
+                budgeted.peak_ram_bytes,
+                fallback_latency / budgeted.latency_s,
+            ));
+        }
+    }
+    let (budget_model, budget_bytes, budgeted_peak, joint_gain) = budget_demo.expect(
+        "some residual zoo model has a frontier point below the unconstrained peak \
+         within 25% of its latency",
+    );
+    println!(
+        "frontier: {budget_model} under --ram-budget {budget_bytes} B deploys peak \
+         {budgeted_peak} B, {joint_gain:.3}x faster than the min-RAM fallback point"
+    );
+
     let json = Json::obj()
         .field("model", model.name.as_str())
         .field("steady_state_allocs_per_inference", steady_allocs / iters)
@@ -793,7 +862,12 @@ fn main() {
         .field("drift_nodes_measured", drift_report.records.len())
         .field("drift_nodes_flagged", drift_report.flagged())
         .field("drift_all_ratios_finite", drift_report.all_ratios_finite())
-        .field("peak_arena_bytes_per_model", Json::Obj(arena_fields));
+        .field("peak_arena_bytes_per_model", Json::Obj(arena_fields))
+        .field("frontier_points_per_model", Json::Obj(frontier_fields))
+        .field("budgeted_model", budget_model.as_str())
+        .field("budgeted_ram_budget_bytes", budget_bytes)
+        .field("budgeted_peak_bytes", budgeted_peak)
+        .field("joint_vs_greedy_latency_gain", joint_gain);
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
     println!(

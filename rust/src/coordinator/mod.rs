@@ -77,11 +77,16 @@ pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions, outs: &ServeOutpu
     let mut server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
     println!(
         "deployed: {names:?} ({workers} workers, max-batch {}, deadline {} µs, queue depth {}, \
-         backend {})",
+         backend {}{})",
         opts.max_batch,
         opts.deadline_us,
         opts.queue_depth,
-        opts.backend.as_str()
+        opts.backend.as_str(),
+        if opts.ram_budget > 0 {
+            format!(", ram budget {} B", opts.ram_budget)
+        } else {
+            String::new()
+        }
     );
     for (model, backend) in server.stats().backends {
         println!("  {model}: backend {backend}");

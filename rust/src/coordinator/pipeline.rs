@@ -12,7 +12,10 @@ use crate::nn::{
 };
 use crate::obs::{plan_node_costs, NodeCost};
 use crate::quant::{frac_bits_for, quantize_bias, quantize_tensor_with, QParam};
-use crate::tuner::{tune_model_shape, Objective, TuneStats, TunedSchedule, TuningCache};
+use crate::tuner::{
+    tune_graph_budgeted, tune_model_shape, BackendSel, Objective, TuneStats, TunedSchedule,
+    TuningCache,
+};
 
 /// A float convolution stage (standard/grouped via `groups`).
 #[derive(Clone, Debug)]
@@ -197,6 +200,35 @@ impl FloatModel {
         (model, schedule, stats)
     }
 
+    /// [`FloatModel::deploy_tuned`] under a hard peak-SRAM budget: the
+    /// deployed schedule is the lowest-latency point of the model's
+    /// latency↔RAM frontier whose liveness-planned peak fits
+    /// `ram_budget` bytes ([`crate::tuner::tune_graph_budgeted`]) — not
+    /// the unconstrained greedy optimum. Panics when even the
+    /// smallest frontier point exceeds the budget: a deployment that
+    /// cannot fit the target's SRAM must fail at deploy time, not
+    /// overflow at runtime.
+    pub fn deploy_tuned_budgeted(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        ram_budget: usize,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, TuneStats) {
+        let model = self.deploy(calib);
+        let g = Graph::from_model(&model);
+        let (sched, stats) =
+            tune_graph_budgeted(&g, cfg, objective, BackendSel::Scalar, ram_budget, cache);
+        let schedule = sched.unwrap_or_else(|| {
+            panic!(
+                "model {:?}: no tuned schedule fits ram budget {ram_budget} B",
+                model.name
+            )
+        });
+        (model, schedule, stats)
+    }
+
     /// Deploy and plan the per-model inference arena in one step. The
     /// returned [`Workspace`] drives [`Model::forward_in`] (zero heap
     /// allocations in steady state), and its plan is the deployment's
@@ -224,6 +256,24 @@ impl FloatModel {
         cache: &mut TuningCache,
     ) -> (Model, TunedSchedule, Workspace, TuneStats) {
         let (model, schedule, stats) = self.deploy_tuned(calib, cfg, objective, cache);
+        let workspace = schedule.workspace(&model);
+        (model, schedule, workspace, stats)
+    }
+
+    /// [`FloatModel::deploy_tuned_planned`] under a peak-SRAM budget
+    /// (see [`FloatModel::deploy_tuned_budgeted`]): the compiled arena
+    /// covers the budgeted schedule's claimed peak, which in turn fits
+    /// `ram_budget` — asserted by the budgeted-tune CI smoke.
+    pub fn deploy_tuned_planned_budgeted(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        ram_budget: usize,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, Workspace, TuneStats) {
+        let (model, schedule, stats) =
+            self.deploy_tuned_budgeted(calib, cfg, objective, ram_budget, cache);
         let workspace = schedule.workspace(&model);
         (model, schedule, workspace, stats)
     }
@@ -268,6 +318,27 @@ impl FloatModel {
         (model, schedule, PlanPair::tuned(primary, fallback), stats)
     }
 
+    /// [`FloatModel::deploy_resilient`] under a peak-SRAM budget: the
+    /// primary is the budget-fitting frontier point's schedule
+    /// ([`FloatModel::deploy_tuned_budgeted`]); the fallback stays the
+    /// paper-default SIMD plan (degradation trades latency, never
+    /// logits — budget enforcement applies to the plan the breaker
+    /// normally serves).
+    pub fn deploy_resilient_budgeted(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        ram_budget: usize,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, PlanPair, TuneStats) {
+        let (model, schedule, stats) =
+            self.deploy_tuned_budgeted(calib, cfg, objective, ram_budget, cache);
+        let primary = schedule.compile(&model);
+        let fallback = ExecPlan::compile_default(&model, true);
+        (model, schedule, PlanPair::tuned(primary, fallback), stats)
+    }
+
     /// [`FloatModel::deploy`] plus the observability hand-off: the
     /// compiled default-SIMD executor and the per-node analytic cost
     /// records ([`NodeCost`]) that a [`crate::obs::DriftMonitor`]
@@ -282,6 +353,26 @@ impl FloatModel {
         let plan = ExecPlan::compile_default(&model, true);
         let costs = plan_node_costs(&Graph::from_model(&model), &plan.candidates(), &plan, cfg);
         (model, plan, costs)
+    }
+
+    /// [`FloatModel::deploy_observed`] under a peak-SRAM budget: the
+    /// compiled executor is the budget-fitting frontier point's
+    /// schedule rather than the fixed paper default, and the drift
+    /// baseline is priced from that schedule's candidates — so the
+    /// monitor predicts the plan that actually serves.
+    pub fn deploy_observed_budgeted(
+        &self,
+        calib: &[Vec<f32>],
+        cfg: &McuConfig,
+        objective: Objective,
+        ram_budget: usize,
+        cache: &mut TuningCache,
+    ) -> (Model, TunedSchedule, ExecPlan, Vec<NodeCost>) {
+        let (model, schedule, _) =
+            self.deploy_tuned_budgeted(calib, cfg, objective, ram_budget, cache);
+        let plan = schedule.compile(&model);
+        let costs = plan_node_costs(&Graph::from_model(&model), &plan.candidates(), &plan, cfg);
+        (model, schedule, plan, costs)
     }
 }
 

@@ -80,8 +80,8 @@ use crate::obs::{
     Shard, SpanKind, TraceEvent, TraceModelMeta, TraceRing,
 };
 use crate::tuner::{
-    tune_graph_shape_backend, tune_model_shape, tune_model_shape_backend, BackendSel, Objective,
-    TunedSchedule, TuningCache,
+    schedule_from_candidates, tune_graph_frontier, tune_graph_shape_backend, tune_model_shape,
+    tune_model_shape_backend, BackendSel, Objective, TunedSchedule, TuningCache,
 };
 use crate::util::backoff::Backoff;
 use crate::util::fault::{FaultAction, FaultInjector, FaultPlan, FaultSite, NoopFaults, SeededFaults};
@@ -219,6 +219,15 @@ pub struct ServeOptions {
     /// `auto`. Logits and modeled MCU costs are identical either way —
     /// only host wall-clock changes.
     pub backend: BackendSel,
+    /// Peak-SRAM budget in bytes for tuned deployments (`--ram-budget`).
+    /// `0` means unconstrained. When set, each model deploys the
+    /// cheapest point of its latency↔RAM [`crate::tuner::Frontier`]
+    /// whose liveness-planned peak fits the budget, instead of the
+    /// unconstrained greedy optimum. Startup panics with the model name
+    /// if even the smallest frontier point exceeds the budget — a
+    /// deployment that silently overflows SRAM is worse than one that
+    /// refuses to start.
+    pub ram_budget: usize,
 }
 
 impl Default for ServeOptions {
@@ -234,6 +243,7 @@ impl Default for ServeOptions {
             respawn_max_us: 20_000,
             faults: FaultPlan::disabled(),
             backend: BackendSel::Scalar,
+            ram_budget: 0,
         }
     }
 }
@@ -241,7 +251,8 @@ impl Default for ServeOptions {
 impl ServeOptions {
     /// Parse the `--max-batch` / `--deadline-us` / `--queue-depth` /
     /// `--trace-sample` / `--breaker-threshold` / `--breaker-cooldown-us`
-    /// / `--respawn-base-us` / `--respawn-max-us` / `--backend` flags
+    /// / `--respawn-base-us` / `--respawn-max-us` / `--backend` /
+    /// `--ram-budget` flags
     /// plus the [`FaultPlan`] flags (defaults where absent) — shared by
     /// `convbench serve`, `convbench chaos` and the serving example so
     /// the flag set cannot drift.
@@ -265,6 +276,7 @@ impl ServeOptions {
             respawn_max_us: args.get_or("respawn-max-us", d.respawn_max_us),
             faults: FaultPlan::from_args(args),
             backend,
+            ram_budget: args.get_or("ram-budget", d.ram_budget),
         }
     }
 }
@@ -503,6 +515,31 @@ pub fn backend_summary(cands: &[crate::tuner::Candidate]) -> String {
         "scalar".to_string()
     } else {
         format!("vec:{vec_nodes}/{}", cands.len())
+    }
+}
+
+/// Resolve the schedule a RAM-budgeted deployment compiles: the
+/// lowest-latency point of the graph's latency↔RAM frontier whose
+/// liveness peak fits [`ServeOptions::ram_budget`]. Panics with the
+/// model name and the frontier's floor when nothing fits — refusing to
+/// start beats silently overflowing the target's SRAM.
+fn budgeted_schedule(
+    graph: &Graph,
+    cfg: &McuConfig,
+    objective: Objective,
+    opts: &ServeOptions,
+    cache: &mut TuningCache,
+) -> TunedSchedule {
+    let (frontier, _) = tune_graph_frontier(graph, cfg, objective, opts.backend, cache);
+    match frontier.cheapest_within(opts.ram_budget) {
+        Some(p) => schedule_from_candidates(graph, &p.candidates, cfg, objective),
+        None => panic!(
+            "model {:?}: no tuned schedule fits --ram-budget {} B \
+             (smallest frontier point needs {} B)",
+            graph.name,
+            opts.ram_budget,
+            frontier.min_peak().map(|p| p.peak_ram_bytes).unwrap_or(0)
+        ),
     }
 }
 
@@ -951,20 +988,35 @@ impl InferenceServer {
         opts: ServeOptions,
     ) -> Self {
         let mut registry = HashMap::new();
+        // budgeted untuned serving still needs the frontier (the fixed
+        // paper-default schedule carries no RAM trade-offs to pick
+        // from); the selection cache lives only for this registration
+        let mut local_cache = TuningCache::in_memory();
         for m in models {
-            let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
-            // vec/auto flip the paper-default schedule onto the vec
-            // backend at its im2col nodes; the modeled MCU profile above
-            // is backend-invariant, so `mcu` needs no recompute.
-            let plan = if opts.backend == BackendSel::Scalar {
-                ExecPlan::compile_default(&m, true)
+            let (mcu, schedule, plan) = if opts.ram_budget > 0 {
+                let g = Graph::from_model(&m);
+                let schedule =
+                    budgeted_schedule(&g, cfg, Objective::Latency, &opts, &mut local_cache);
+                let mcu = schedule.as_measurement();
+                let plan = schedule.compile(&m);
+                (mcu, Some(schedule), plan)
             } else {
-                ExecPlan::compile_default_vec(&m, true)
+                let mcu = crate::harness::measure_model_analytic(&m, true, cfg);
+                // vec/auto flip the paper-default schedule onto the vec
+                // backend at its im2col nodes; the modeled MCU profile
+                // above is backend-invariant, so `mcu` needs no
+                // recompute.
+                let plan = if opts.backend == BackendSel::Scalar {
+                    ExecPlan::compile_default(&m, true)
+                } else {
+                    ExecPlan::compile_default_vec(&m, true)
+                };
+                (mcu, None, plan)
             };
             let costs = plan_node_costs(&Graph::from_model(&m), &plan.candidates(), &plan, cfg);
             registry.insert(
                 m.name.clone(),
-                Deployed { mcu, schedule: None, plans: PlanPair::solo(plan), costs },
+                Deployed { mcu, schedule, plans: PlanPair::solo(plan), costs },
             );
         }
         Self::spawn(registry, n_workers, opts)
@@ -997,7 +1049,11 @@ impl InferenceServer {
     ) -> Self {
         let mut registry = HashMap::new();
         for m in models {
-            let (schedule, _) = tune_model_shape_backend(&m, cfg, objective, opts.backend, cache);
+            let schedule = if opts.ram_budget > 0 {
+                budgeted_schedule(&Graph::from_model(&m), cfg, objective, &opts, cache)
+            } else {
+                tune_model_shape_backend(&m, cfg, objective, opts.backend, cache).0
+            };
             let mcu = schedule.as_measurement();
             let plan = schedule.compile(&m);
             // the degradation target: the paper-default SIMD schedule,
@@ -1051,7 +1107,11 @@ impl InferenceServer {
     ) -> Self {
         let mut registry = HashMap::new();
         for g in graphs {
-            let (schedule, _) = tune_graph_shape_backend(&g, cfg, objective, opts.backend, cache);
+            let schedule = if opts.ram_budget > 0 {
+                budgeted_schedule(&g, cfg, objective, &opts, cache)
+            } else {
+                tune_graph_shape_backend(&g, cfg, objective, opts.backend, cache).0
+            };
             let mcu = schedule.as_measurement();
             let plan = schedule.compile_graph(&g);
             let fallback = ExecPlan::compile_graph_default(&g, true);

@@ -13,18 +13,22 @@
 //! convbench all [--out results]    # everything above into --out
 //! convbench tune [--objective latency|energy|ram|weighted[:L,E,R]]
 //!                [--backend scalar|vec|auto]
+//!                [--ram-budget BYTES] [--pareto-out FILE]
 //!                [--cache PATH] [--quick] [--out results]
 //!                                  # per-layer schedule auto-tuner over
-//!                                  # the Table 2 workloads + model zoo
+//!                                  # the Table 2 workloads + model zoo;
+//!                                  # with a budget, reports the frontier
+//!                                  # point each zoo model deploys
 //! convbench validate [--artifacts artifacts]   # engine vs HLO runtime
 //! convbench profile [--model M] [--scalar] [--json]
-//!                   [--backend scalar|vec|auto]
+//!                   [--backend scalar|vec|auto] [--ram-budget BYTES]
 //!                                  # per-node simulated profile (markdown,
 //!                                  # or NodeCost JSON with --json), with
 //!                                  # the deployed host backend per node
+//!                                  # and the deployed frontier point
 //! convbench serve [--requests N] [--workers W] [--max-batch B]
 //!                 [--deadline-us D] [--queue-depth Q] [--trace-sample N]
-//!                 [--backend scalar|vec|auto]
+//!                 [--backend scalar|vec|auto] [--ram-budget BYTES]
 //!                 [--trace-out F] [--metrics-out F] [--stats-out F]
 //!                                  # micro-batched inference service demo;
 //!                                  # emits trace/metrics/stats artifacts
@@ -90,11 +94,13 @@ fn main() {
             eprintln!(
                 "usage: convbench <table1|fig2|fig3|fig4|table3|table4|regressions|all|tune|validate|profile|serve|chaos|check-obs> \
                  [--exp N] [--out DIR] [--quick] \
-                 (tune: [--objective O] [--backend scalar|vec|auto] [--cache PATH]) \
-                 (profile: [--model M] [--scalar] [--json] [--backend scalar|vec|auto]) \
+                 (tune: [--objective O] [--backend scalar|vec|auto] [--ram-budget BYTES] \
+                 [--pareto-out FILE] [--cache PATH]) \
+                 (profile: [--model M] [--scalar] [--json] [--backend scalar|vec|auto] \
+                 [--ram-budget BYTES]) \
                  (serve: [--requests N] [--workers W] [--max-batch B] [--deadline-us D] \
                  [--queue-depth Q] [--trace-sample N] [--backend scalar|vec|auto] \
-                 [--trace-out F] [--metrics-out F] [--stats-out F]) \
+                 [--ram-budget BYTES] [--trace-out F] [--metrics-out F] [--stats-out F]) \
                  (chaos: [--seed S] [--requests N] [--workers W] [--panic-ppm P] \
                  [--delay-ppm P] [--error-ppm P] [--fault-delay-us D] [--breaker-threshold K] \
                  [--retry-attempts A] [--min-respawns R] [--min-breaker-trips T] \
@@ -377,6 +383,62 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
         println!("{}", schedule.to_markdown());
     }
 
+    // --ram-budget BYTES: report the frontier point each zoo model
+    // would deploy under the budget (exit 1 if any model is
+    // infeasible); --pareto-out FILE: write every model's full
+    // latency↔RAM frontier as JSON
+    let ram_budget: usize = args.get_or("ram-budget", 0usize);
+    let pareto_out = args.get("pareto-out");
+    if ram_budget > 0 || pareto_out.is_some() {
+        use convbench::nn::Graph;
+        use convbench::tuner::tune_graph_frontier;
+        use convbench::util::json::Json;
+        let mut frontier_jsons = Vec::new();
+        let mut infeasible = 0usize;
+        let graphs = Primitive::ALL
+            .iter()
+            .map(|&p| Graph::from_model(&mcunet(p, 42)))
+            .chain(Primitive::ALL.iter().map(|&p| mcunet_residual(p, 42)));
+        for graph in graphs {
+            let (frontier, _) = tune_graph_frontier(&graph, cfg, objective, backend, &mut cache);
+            if ram_budget > 0 {
+                match frontier.cheapest_within(ram_budget) {
+                    Some(p) => println!(
+                        "{}: deploys frontier point latency {:.3} ms, energy {:.2} µJ, \
+                         peak RAM {} B (≤ budget {ram_budget} B; {} points total)",
+                        graph.name,
+                        1e3 * p.latency_s,
+                        1e3 * p.energy_mj,
+                        p.peak_ram_bytes,
+                        frontier.len()
+                    ),
+                    None => {
+                        eprintln!(
+                            "ERROR: {}: no frontier point fits --ram-budget {ram_budget} B \
+                             (smallest needs {} B)",
+                            graph.name,
+                            frontier.min_peak().map(|p| p.peak_ram_bytes).unwrap_or(0)
+                        );
+                        infeasible += 1;
+                    }
+                }
+            }
+            frontier_jsons.push(frontier.to_json());
+        }
+        if let Some(path) = pareto_out {
+            let j = Json::obj()
+                .field("objective", objective.name())
+                .field("backend", backend.as_str())
+                .field("frontiers", Json::Arr(frontier_jsons));
+            report::write_report(path, &j.to_string()).expect("write pareto frontiers");
+            eprintln!("wrote {path}");
+        }
+        if infeasible > 0 {
+            eprintln!("ERROR: {infeasible} zoo models cannot fit --ram-budget {ram_budget} B");
+            std::process::exit(1);
+        }
+    }
+
     let csv_path = format!("{out_dir}/tuned_vs_fixed.csv");
     report::write_report(&csv_path, &tuned_csv(&rows)).expect("write csv");
     report::write_report(
@@ -580,6 +642,41 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
         sched.peak_ram_bytes,
         wp.total_bytes() >= sched.peak_ram_bytes
     );
+
+    // the latency↔RAM frontier and the point a deployment under
+    // --ram-budget (0 = unconstrained) would compile
+    use convbench::tuner::tune_graph_frontier;
+    let ram_budget: usize = args.get_or("ram-budget", 0usize);
+    let (frontier, _) = tune_graph_frontier(&graph, cfg, Objective::Latency, backend, &mut cache);
+    println!(
+        "\nlatency↔RAM frontier ({} backend): {} points, peak {}–{} B",
+        backend.as_str(),
+        frontier.len(),
+        frontier.min_peak().map(|p| p.peak_ram_bytes).unwrap_or(0),
+        frontier.best().map(|p| p.peak_ram_bytes).unwrap_or(0)
+    );
+    let budget = if ram_budget > 0 { ram_budget } else { usize::MAX };
+    match frontier.cheapest_within(budget) {
+        Some(p) => println!(
+            "deployed frontier point{}: latency {:.3} ms, energy {:.2} µJ, peak RAM {} B",
+            if ram_budget > 0 {
+                format!(" (--ram-budget {ram_budget} B)")
+            } else {
+                " (unconstrained)".to_string()
+            },
+            1e3 * p.latency_s,
+            1e3 * p.energy_mj,
+            p.peak_ram_bytes
+        ),
+        None => {
+            eprintln!(
+                "ERROR: no frontier point fits --ram-budget {ram_budget} B \
+                 (smallest needs {} B)",
+                frontier.min_peak().map(|p| p.peak_ram_bytes).unwrap_or(0)
+            );
+            std::process::exit(1);
+        }
+    }
 }
 
 /// `convbench check-obs [--trace FILE] [--metrics FILE]` — parse and

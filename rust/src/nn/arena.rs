@@ -22,6 +22,11 @@
 //!   signatures borrow-safe); the packed offsets are the deployment
 //!   report.
 //!
+//! * [`IncrementalPeak`] — the same best-fit packing grown one value at
+//!   a time (byte-identical to [`best_fit_layout`] after every push, by
+//!   shared-code construction). The joint graph tuner uses it as its
+//!   liveness-peak pruning oracle instead of replanning per candidate.
+//!
 //! [`plan_arena`] combines the two: it returns the slot layout for
 //! execution and whichever packing is tighter as the reported arena —
 //! the slot partition *is* a valid offset assignment, so the reported
@@ -84,6 +89,44 @@ fn peak_of(vals: &[ValueInterval], offsets: &[usize]) -> usize {
         .unwrap_or(0)
 }
 
+/// Place `order[start..]` in sequence. Each value consults only the
+/// values *before it in `order`* (treated as already placed) and lands at
+/// the smallest lifetime-overlapping gap that fits, else past the last
+/// busy byte. This is the one placement loop shared by
+/// [`best_fit_layout`] (which runs it from 0) and [`IncrementalPeak`]
+/// (which re-runs only the suffix invalidated by an insertion) — sharing
+/// the code is what makes the incremental planner byte-identical to the
+/// batch one by construction.
+fn place_from(vals: &[ValueInterval], order: &[usize], offsets: &mut [usize], start: usize) {
+    for k in start..order.len() {
+        let i = order[k];
+        if vals[i].size == 0 {
+            offsets[i] = 0;
+            continue;
+        }
+        // busy byte ranges of lifetime-overlapping earlier-in-order values
+        let mut busy: Vec<(usize, usize)> = order[..k]
+            .iter()
+            .copied()
+            .filter(|&j| vals[j].size > 0 && vals[i].overlaps(&vals[j]))
+            .map(|j| (offsets[j], offsets[j] + vals[j].size))
+            .collect();
+        busy.sort_unstable();
+        let mut best: Option<(usize, usize)> = None; // (gap, offset)
+        let mut cursor = 0usize;
+        for &(s, e) in &busy {
+            if s > cursor {
+                let gap = s - cursor;
+                if gap >= vals[i].size && best.map(|(g, _)| gap < g).unwrap_or(true) {
+                    best = Some((gap, cursor));
+                }
+            }
+            cursor = cursor.max(e);
+        }
+        offsets[i] = best.map(|(_, o)| o).unwrap_or(cursor);
+    }
+}
+
 /// Greedy best-fit offset assignment: place values in decreasing size
 /// order (ties broken by index for determinism) at the smallest gap
 /// between lifetime-overlapping already-placed values that fits.
@@ -91,34 +134,78 @@ pub fn best_fit_layout(vals: &[ValueInterval]) -> ArenaLayout {
     let mut order: Vec<usize> = (0..vals.len()).collect();
     order.sort_by(|&a, &b| vals[b].size.cmp(&vals[a].size).then(a.cmp(&b)));
     let mut offsets = vec![0usize; vals.len()];
-    let mut placed: Vec<usize> = Vec::new();
-    for &i in &order {
-        if vals[i].size > 0 {
-            // busy byte ranges of lifetime-overlapping placed values
-            let mut busy: Vec<(usize, usize)> = placed
-                .iter()
-                .copied()
-                .filter(|&j| vals[j].size > 0 && vals[i].overlaps(&vals[j]))
-                .map(|j| (offsets[j], offsets[j] + vals[j].size))
-                .collect();
-            busy.sort_unstable();
-            let mut best: Option<(usize, usize)> = None; // (gap, offset)
-            let mut cursor = 0usize;
-            for &(s, e) in &busy {
-                if s > cursor {
-                    let gap = s - cursor;
-                    if gap >= vals[i].size && best.map(|(g, _)| gap < g).unwrap_or(true) {
-                        best = Some((gap, cursor));
-                    }
-                }
-                cursor = cursor.max(e);
-            }
-            offsets[i] = best.map(|(_, o)| o).unwrap_or(cursor);
-        }
-        placed.push(i);
-    }
+    place_from(vals, &order, &mut offsets, 0);
     let peak_bytes = peak_of(vals, &offsets);
     ArenaLayout { offsets, peak_bytes }
+}
+
+/// Incremental best-fit planner: extends a [`best_fit_layout`] one value
+/// at a time instead of replanning from scratch — the pruning oracle of
+/// the joint graph tuner, which pushes one activation interval per search
+/// step and reads the running peak.
+///
+/// Invariant (the whole point): after any sequence of [`push`]es, the
+/// held offsets are **byte-identical** to `best_fit_layout(&vals)` over
+/// the same values. This holds by construction: `order` is maintained
+/// under the exact comparator `best_fit_layout` sorts by (size desc,
+/// index asc), a new value is inserted at its sorted position, and only
+/// the suffix *from that position on* is re-placed via the shared
+/// [`place_from`] loop — every earlier-in-order placement consulted only
+/// values that precede it in `order`, none of which moved. Tests validate
+/// every prefix against [`best_fit_layout`], [`plan_arena`] and
+/// [`validate_layout`].
+///
+/// [`push`]: IncrementalPeak::push
+#[derive(Clone, Debug, Default)]
+pub struct IncrementalPeak {
+    vals: Vec<ValueInterval>,
+    /// Indices into `vals`, sorted by (size desc, index asc).
+    order: Vec<usize>,
+    offsets: Vec<usize>,
+}
+
+impl IncrementalPeak {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one value and re-place the invalidated suffix. Returns the new
+    /// arena peak. Cost is O(k·n) where k is how many placed values are
+    /// not larger than the new one — replanning from scratch is O(n²).
+    pub fn push(&mut self, v: ValueInterval) -> usize {
+        let i = self.vals.len();
+        self.vals.push(v);
+        self.offsets.push(0);
+        // `>=` keeps equal-sized earlier indices before the new (largest)
+        // index, matching the batch sort's (size desc, index asc) ties.
+        let pos = self.order.partition_point(|&j| self.vals[j].size >= v.size);
+        self.order.insert(pos, i);
+        place_from(&self.vals, &self.order, &mut self.offsets, pos);
+        self.peak()
+    }
+
+    /// Current arena peak: `max(offset + size)` over all pushed values.
+    pub fn peak(&self) -> usize {
+        peak_of(&self.vals, &self.offsets)
+    }
+
+    /// Per-value byte offsets, indexed by push order (= value id).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Snapshot as an [`ArenaLayout`].
+    pub fn layout(&self) -> ArenaLayout {
+        ArenaLayout { offsets: self.offsets.clone(), peak_bytes: self.peak() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
 }
 
 /// First-fit interval colouring in def order. Correct because values are
@@ -304,6 +391,57 @@ mod tests {
             let offs: Vec<usize> = slots.slot_of.iter().map(|&s| slot_off[s]).collect();
             assert_eq!(validate_layout(&vals, &offs), peak_of(&vals, &offs));
         }
+    }
+
+    #[test]
+    fn incremental_peak_matches_batch_best_fit_on_every_prefix() {
+        let mut rng = Rng::new(0x1C4);
+        for trial in 0..48 {
+            let n_vals = rng.range(2, 12);
+            let vals: Vec<ValueInterval> = (0..n_vals)
+                .map(|v| {
+                    let def = if v == 0 { 0 } else { v - 1 };
+                    let last = def + rng.range(0, 4);
+                    ValueInterval { size: rng.range(0, 512), def, last_use: last }
+                })
+                .collect();
+            let mut incr = IncrementalPeak::new();
+            assert!(incr.is_empty());
+            for (k, &v) in vals.iter().enumerate() {
+                let peak = incr.push(v);
+                let prefix = &vals[..=k];
+                let batch = best_fit_layout(prefix);
+                assert_eq!(
+                    incr.offsets(),
+                    &batch.offsets[..],
+                    "trial {trial}: prefix {k} diverged from batch best-fit"
+                );
+                assert_eq!(peak, batch.peak_bytes, "trial {trial}: prefix {k} peak");
+                assert_eq!(incr.layout().peak_bytes, peak);
+                assert_eq!(incr.len(), k + 1);
+                // the incremental layout is itself overlap-free...
+                assert_eq!(validate_layout(prefix, incr.offsets()), peak);
+                // ...and never reports below what the full planner would
+                let (planned, _) = plan_arena(prefix);
+                assert!(
+                    peak >= planned.peak_bytes,
+                    "trial {trial}: prefix {k} incremental {peak} < planned {}",
+                    planned.peak_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_peak_on_chains_equals_batch_layout() {
+        let vals = chain(&[256, 512, 512, 96, 10]);
+        let mut incr = IncrementalPeak::new();
+        for &v in &vals {
+            incr.push(v);
+        }
+        let batch = best_fit_layout(&vals);
+        assert_eq!(incr.offsets(), &batch.offsets[..]);
+        assert_eq!(incr.peak(), batch.peak_bytes);
     }
 
     #[test]

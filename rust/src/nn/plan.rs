@@ -585,6 +585,23 @@ impl ExecPlan {
         arena::validate_layout(&self.intervals, &self.value_offsets)
     }
 
+    /// Activation-arena high-water mark while step `idx` executes: the
+    /// maximum packed extent (offset + size) over every value live at
+    /// that step. This is the activation term of the tuner's liveness
+    /// RAM model — `TunedSchedule` decisions report
+    /// `step_live_bytes(i) + layer_scratch_bytes(i)` per node, and the
+    /// maximum over steps equals [`WorkspacePlan::activation_bytes`]
+    /// plus that step's scratch by construction.
+    pub fn step_live_bytes(&self, idx: usize) -> usize {
+        self.intervals
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.size > 0 && v.def <= idx && idx <= v.last_use)
+            .map(|(i, v)| self.value_offsets[i] + v.size)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Per-node scratch bytes beyond the activation arena — by
     /// construction identical to [`space::scratch_bytes`] for the
     /// node's candidate (pinned by a property test below), so the
@@ -605,10 +622,13 @@ impl ExecPlan {
         }
     }
 
-    /// Peak working RAM of node `idx` under its compiled candidate:
-    /// input operand(s) + output activations + candidate scratch (the
-    /// quantity `space::ram_bytes` prices and
-    /// `TunedSchedule::peak_ram_bytes` maximizes).
+    /// Node-local operand RAM of node `idx` under its compiled
+    /// candidate: input operand(s) + output activations + candidate
+    /// scratch (the quantity `space::ram_bytes` prices). Note this
+    /// ignores liveness packing — the tuner's deployment-facing RAM
+    /// report is [`ExecPlan::step_live_bytes`] + scratch, which accounts
+    /// for values the arena keeps alive across this step (residual
+    /// skips) *and* for operand sharing the packer exploits.
     pub fn layer_ram_bytes(&self, idx: usize) -> usize {
         let step = &self.steps[idx];
         step.in_shapes.iter().map(|s| s.len()).sum::<usize>()
@@ -1675,7 +1695,9 @@ mod tests {
     fn workspace_plan_covers_tuned_peak_ram_claim() {
         // The arena report for a tuned plan is an upper bound on the
         // schedule's own peak-RAM claim (reconciling the two RAM
-        // reports), and the per-layer maxima agree.
+        // reports), and the schedule's claim is exactly the engine's
+        // liveness-packed per-step peak — not the looser node-local
+        // in+out+scratch sum, which can over-price residual graphs.
         let cfg = McuConfig::default();
         for prim in Primitive::ALL {
             let model = mcunet(prim, 7);
@@ -1689,9 +1711,17 @@ mod tests {
                 wp.total_bytes(),
                 sched.peak_ram_bytes
             );
-            // the schedule's peak is the max of the engine's per-layer RAM
+            // the schedule's peak is the max of the engine's per-step
+            // live bytes + scratch, layer by layer
+            for (i, d) in sched.layers.iter().enumerate() {
+                assert_eq!(
+                    d.ram_bytes,
+                    plan.step_live_bytes(i) + plan.layer_scratch_bytes(i),
+                    "{prim:?} layer {i}"
+                );
+            }
             let engine_peak = (0..plan.n_layers())
-                .map(|i| plan.layer_ram_bytes(i))
+                .map(|i| plan.step_live_bytes(i) + plan.layer_scratch_bytes(i))
                 .max()
                 .unwrap();
             assert_eq!(engine_peak, sched.peak_ram_bytes, "{prim:?}");

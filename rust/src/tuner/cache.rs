@@ -15,21 +15,27 @@ use std::collections::BTreeMap;
 use crate::mcu::McuConfig;
 use crate::util::json::Json;
 
+use super::pareto::Frontier;
 use super::space::{Candidate, KernelImpl, Lowering};
 use super::BackendSel;
 use crate::nn::Backend;
 
 /// Cache file format version (bump on incompatible schema changes —
-/// mismatching files are discarded wholesale). v3: entries gained a
-/// required `backend` field (host execution backend of the winning
-/// candidate) and keys gained a backend-policy segment, so a schedule
-/// tuned under one `--backend` policy can never be replayed under
-/// another; v2 files predate the backend axis and are discarded. v2:
-/// keys switched from per-layer to per-node signatures, which fold the
-/// node's input topology (`~in<d1[,d2]>` producer-distance suffix) so
-/// graph rewiring invalidates by construction; v1 files hold orphaned
-/// keys and are discarded.
-pub const CACHE_VERSION: i64 = 3;
+/// mismatching files are discarded wholesale). v4: files gained a
+/// `frontiers` map (whole-graph Pareto frontiers keyed by graph
+/// signature × MCU × objective × backend policy) and per-entry
+/// `ram_bytes` semantics stayed node-local while schedule-level RAM
+/// reporting moved to the liveness model — v3 files could replay
+/// alongside stale liveness-free frontiers, so they are discarded. v3:
+/// entries gained a required `backend` field (host execution backend of
+/// the winning candidate) and keys gained a backend-policy segment, so
+/// a schedule tuned under one `--backend` policy can never be replayed
+/// under another; v2 files predate the backend axis and are discarded.
+/// v2: keys switched from per-layer to per-node signatures, which fold
+/// the node's input topology (`~in<d1[,d2]>` producer-distance suffix)
+/// so graph rewiring invalidates by construction; v1 files hold
+/// orphaned keys and are discarded.
+pub const CACHE_VERSION: i64 = 4;
 
 /// A cached per-layer decision: the winning candidate plus its simulated
 /// measurement (all inputs to the objective, so replay needs no simulator).
@@ -70,11 +76,25 @@ pub fn cache_key_backend(
     format!("{layer_sig}|{mcu_fp}|{objective}|{}", backend.as_str())
 }
 
+/// Compose the cache key of a whole-graph Pareto frontier: a `frontier|`
+/// namespace plus graph signature ([`crate::tuner::space::graph_signature`]),
+/// MCU fingerprint, objective name and backend policy — the full
+/// validity domain of a frontier's measurements and schedules.
+pub fn frontier_key(
+    graph_sig: &str,
+    mcu_fp: &str,
+    objective: &str,
+    backend: BackendSel,
+) -> String {
+    format!("frontier|{graph_sig}|{mcu_fp}|{objective}|{}", backend.as_str())
+}
+
 /// The tuning cache: an in-memory map with optional JSON persistence.
 #[derive(Debug)]
 pub struct TuningCache {
     path: Option<String>,
     entries: BTreeMap<String, CacheEntry>,
+    frontiers: BTreeMap<String, Frontier>,
     dirty: bool,
 }
 
@@ -84,6 +104,7 @@ impl TuningCache {
         Self {
             path: None,
             entries: BTreeMap::new(),
+            frontiers: BTreeMap::new(),
             dirty: false,
         }
     }
@@ -92,14 +113,15 @@ impl TuningCache {
     /// yields an empty cache bound to the same path (it will be created
     /// on [`TuningCache::save`]).
     pub fn load(path: &str) -> Self {
-        let entries = std::fs::read_to_string(path)
+        let (entries, frontiers) = std::fs::read_to_string(path)
             .ok()
             .and_then(|text| Json::parse(&text).ok())
-            .and_then(|json| parse_entries(&json))
+            .and_then(|json| parse_file(&json))
             .unwrap_or_default();
         Self {
             path: Some(path.to_string()),
             entries,
+            frontiers,
             dirty: false,
         }
     }
@@ -128,6 +150,24 @@ impl TuningCache {
         }
     }
 
+    /// Cached whole-graph frontiers ([`frontier_key`] keys).
+    pub fn get_frontier(&self, key: &str) -> Option<&Frontier> {
+        self.frontiers.get(key)
+    }
+
+    pub fn put_frontier(&mut self, key: String, frontier: Frontier) {
+        let changed = self.frontiers.get(&key) != Some(&frontier);
+        if changed {
+            self.frontiers.insert(key, frontier);
+            self.dirty = true;
+        }
+    }
+
+    /// Number of cached frontiers (per-node entries are [`TuningCache::len`]).
+    pub fn frontier_len(&self) -> usize {
+        self.frontiers.len()
+    }
+
     /// Serialize the whole cache.
     pub fn to_json(&self) -> Json {
         let mut fields = Vec::with_capacity(self.entries.len());
@@ -152,9 +192,15 @@ impl TuningCache {
                     .field("ram_bytes", e.ram_bytes),
             ));
         }
+        let frontiers: Vec<(String, Json)> = self
+            .frontiers
+            .iter()
+            .map(|(k, f)| (k.clone(), f.to_json()))
+            .collect();
         Json::obj()
             .field("version", CACHE_VERSION)
             .field("entries", Json::Obj(fields))
+            .field("frontiers", Json::Obj(frontiers))
     }
 
     /// Persist to the bound path (no-op for in-memory caches). Parent
@@ -185,12 +231,31 @@ impl LoweringName for Lowering {
     }
 }
 
-fn parse_entries(json: &Json) -> Option<BTreeMap<String, CacheEntry>> {
+type ParsedFile = (BTreeMap<String, CacheEntry>, BTreeMap<String, Frontier>);
+
+fn parse_file(json: &Json) -> Option<ParsedFile> {
     if json.get("version")?.as_i64()? != CACHE_VERSION {
         return None;
     }
+    let entries = parse_entry_map(json.get("entries")?)?;
+    let mut frontiers = BTreeMap::new();
+    // tolerate a missing map (hand-trimmed files); reject malformed ones
+    if let Some(fj) = json.get("frontiers") {
+        for (key, v) in fj.as_obj()? {
+            frontiers.insert(key.clone(), Frontier::from_json(v)?);
+        }
+    }
+    Some((entries, frontiers))
+}
+
+#[cfg(test)]
+fn parse_entries(json: &Json) -> Option<BTreeMap<String, CacheEntry>> {
+    parse_file(json).map(|(e, _)| e)
+}
+
+fn parse_entry_map(entries: &Json) -> Option<BTreeMap<String, CacheEntry>> {
     let mut out = BTreeMap::new();
-    for (key, v) in json.get("entries")?.as_obj()? {
+    for (key, v) in entries.as_obj()? {
         let kernel = KernelImpl::parse(v.get("kernel")?.as_str()?).ok()?;
         let lowering = match v.get("lowering")?.as_str()? {
             "direct" => Lowering::Direct,
@@ -360,6 +425,53 @@ mod tests {
         // wholesale by the version bump instead of being misread.
         let v2 = r#"{"version":2,"entries":{"conv[b]@8x8x8|84.000MHz-Os|latency":{"kernel":"as-is","lowering":"direct","patches":0,"filters":0,"cycles":1.0,"latency_s":0.1,"energy_mj":0.2,"mem_accesses":3,"effective_macs":4,"ram_bytes":5}}}"#;
         assert!(parse_entries(&Json::parse(v2).unwrap()).is_none());
+    }
+
+    #[test]
+    fn frontiers_roundtrip_and_version_gate_discards_old_files() {
+        use crate::tuner::pareto::{Frontier, FrontierPoint};
+        let dir = std::env::temp_dir().join("convbench-cache-test");
+        let path = dir.join("frontier.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let frontier = Frontier::new(
+            "mcunet-res".into(),
+            mcu_fingerprint(&McuConfig::default()),
+            "latency".into(),
+            "auto".into(),
+            vec![FrontierPoint {
+                peak_ram_bytes: 4096,
+                latency_s: 0.01,
+                energy_mj: 0.3,
+                candidates: vec![Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Im2col { patches: 2, filters: 2 },
+                    backend: Backend::VecLanes,
+                }],
+            }],
+        );
+        let key = frontier_key("g0123456789abcdefx1", "84.000MHz-Os", "latency", BackendSel::Auto);
+        assert!(key.starts_with("frontier|"), "frontier keys are namespaced");
+
+        let mut c = TuningCache::load(&path);
+        c.put(cache_key("conv[x]@8x8x4", "84.000MHz-Os", "latency"), entry(0.011));
+        c.put_frontier(key.clone(), frontier.clone());
+        assert!(c.is_dirty());
+        assert_eq!(c.frontier_len(), 1);
+        // re-putting the identical frontier does not re-dirty
+        c.save().expect("save cache");
+        c.put_frontier(key.clone(), frontier.clone());
+        assert!(!c.is_dirty());
+
+        let warm = TuningCache::load(&path);
+        assert_eq!(warm.len(), 1, "per-node entries survive alongside frontiers");
+        assert_eq!(warm.get_frontier(&key), Some(&frontier));
+
+        // pre-frontier (v3) files are discarded wholesale by the bump
+        let v3 = r#"{"version":3,"entries":{}}"#;
+        assert!(parse_file(&Json::parse(v3).unwrap()).is_none());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -33,6 +33,20 @@
 //! Residual joins ([`crate::nn::ResidualAdd`]) have a single scalar
 //! implementation, priced by the same analytic engine.
 //!
+//! Beyond per-node greedy selection, [`search::tune_graph_joint`] runs
+//! the same analytic search *jointly* over the whole graph under a peak-
+//! SRAM budget: node working RAM is priced as the liveness-planned
+//! activation peak at that step ([`crate::nn::arena::IncrementalPeak`])
+//! plus candidate scratch, so the reported `peak_ram_bytes` matches what
+//! [`crate::nn::plan::plan_arena`] actually packs — including residual
+//! graphs, where the old in+out+scratch accounting over-priced the join.
+//! [`search::tune_graph_frontier`] sweeps every distinct budget
+//! threshold and emits the full latency↔RAM [`pareto::Frontier`];
+//! deployment picks the cheapest point that fits `--ram-budget` at
+//! serve time ([`pareto::Frontier::cheapest_within`]). Frontiers are
+//! cached whole, keyed by [`space::graph_signature`] × MCU fingerprint
+//! × objective × backend policy ([`cache::frontier_key`]).
+//!
 //! Wiring: `coordinator::pipeline::FloatModel::deploy_tuned` tunes at
 //! deployment, `coordinator::server::InferenceServer::start_tuned`
 //! serves tuned variants, `convbench tune` drives the Table 2 workloads
@@ -41,15 +55,20 @@
 //! same analytic engine.
 
 pub mod cache;
+pub mod pareto;
 pub mod search;
 pub mod space;
 
-pub use cache::{cache_key, cache_key_backend, mcu_fingerprint, CacheEntry, TuningCache};
+pub use cache::{
+    cache_key, cache_key_backend, frontier_key, mcu_fingerprint, CacheEntry, TuningCache,
+};
+pub use pareto::{Frontier, FrontierPoint};
 pub use search::{
-    simd_flags, tune_graph_shape, tune_graph_shape_backend, tune_model, tune_model_shape,
+    schedule_from_candidates, simd_flags, tune_graph_budgeted, tune_graph_frontier,
+    tune_graph_joint, tune_graph_shape, tune_graph_shape_backend, tune_model, tune_model_shape,
     tune_model_shape_backend, LayerDecision, TuneStats, TunedSchedule,
 };
-pub use space::{analytic_counts, candidates, Candidate, KernelImpl, Lowering};
+pub use space::{analytic_counts, candidates, graph_signature, Candidate, KernelImpl, Lowering};
 
 pub use crate::nn::Backend;
 

@@ -1,0 +1,277 @@
+//! The latency↔RAM Pareto frontier a joint graph tune emits: every
+//! non-dominated trade between peak working SRAM and the tuned
+//! objective, each point carrying the full per-node candidate schedule
+//! that realizes it. Deployment picks a point *at serve time* — the
+//! cheapest one that fits the target's `--ram-budget` — instead of
+//! re-searching, and frontiers round-trip through JSON
+//! ([`crate::util::json`]) so the tuning cache can replay them wholesale
+//! ([`crate::tuner::cache`]).
+
+use crate::nn::Backend;
+use crate::util::json::Json;
+
+use super::space::{Candidate, KernelImpl, Lowering};
+
+/// One point on the frontier: a complete per-node schedule, its peak
+/// working RAM (liveness-planned activations + scratch, maximized over
+/// steps) and its analytic totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// Peak working SRAM of this schedule — what the claim
+    /// `workspace ≥ peak` is tested against after compilation.
+    pub peak_ram_bytes: usize,
+    /// Analytic end-to-end latency (seconds).
+    pub latency_s: f64,
+    /// Analytic energy per inference (mJ).
+    pub energy_mj: f64,
+    /// The per-node candidate assignment realizing this point (one per
+    /// graph node, in topo order) — the input to
+    /// [`crate::tuner::search::schedule_from_candidates`].
+    pub candidates: Vec<Candidate>,
+}
+
+/// A model's full latency↔RAM frontier on one MCU configuration under
+/// one objective and backend policy. Canonical ordering: peak ascending,
+/// latency strictly descending (dominated and duplicate points are
+/// eliminated on construction), so the first point is the smallest
+/// feasible deployment and the last is the unconstrained optimum.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frontier {
+    pub model: String,
+    /// MCU fingerprint the measurements are valid for.
+    pub mcu: String,
+    pub objective: String,
+    /// Backend policy the schedules were searched under.
+    pub backend: String,
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Build a frontier from raw candidate points: sort (peak asc,
+    /// latency asc), then keep a point only when it strictly improves
+    /// latency over everything kept so far. A point survives iff no
+    /// other point is ≤ in both coordinates and < in one — the standard
+    /// dominated-point elimination — and the survivors come out in the
+    /// canonical stable order.
+    pub fn new(
+        model: String,
+        mcu: String,
+        objective: String,
+        backend: String,
+        mut points: Vec<FrontierPoint>,
+    ) -> Frontier {
+        points.sort_by(|a, b| {
+            a.peak_ram_bytes.cmp(&b.peak_ram_bytes).then(
+                a.latency_s
+                    .partial_cmp(&b.latency_s)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        let mut kept: Vec<FrontierPoint> = Vec::new();
+        for p in points {
+            if kept
+                .last()
+                .map(|k| p.latency_s < k.latency_s)
+                .unwrap_or(true)
+            {
+                kept.push(p);
+            }
+        }
+        Frontier { model, mcu, objective, backend, points: kept }
+    }
+
+    /// The lowest-latency point whose peak fits `budget` — the point a
+    /// deployment with `--ram-budget` compiles. With the canonical order
+    /// that is simply the last fitting point. `None` when even the
+    /// smallest point exceeds the budget.
+    pub fn cheapest_within(&self, budget: usize) -> Option<&FrontierPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.peak_ram_bytes <= budget)
+            .last()
+    }
+
+    /// The unconstrained optimum (last point in canonical order).
+    pub fn best(&self) -> Option<&FrontierPoint> {
+        self.points.last()
+    }
+
+    /// The smallest-RAM feasible deployment (first point).
+    pub fn min_peak(&self) -> Option<&FrontierPoint> {
+        self.points.first()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Serialize (the cache embeds this under its `frontiers` map; the
+    /// CLI writes it standalone via `--pareto-out`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("model", self.model.as_str())
+            .field("mcu", self.mcu.as_str())
+            .field("objective", self.objective.as_str())
+            .field("backend", self.backend.as_str())
+            .field(
+                "points",
+                Json::Arr(self.points.iter().map(point_to_json).collect()),
+            )
+    }
+
+    /// Parse what [`Frontier::to_json`] emits. `None` on any structural
+    /// mismatch (the caller treats that as a cache miss).
+    pub fn from_json(json: &Json) -> Option<Frontier> {
+        let mut points = Vec::new();
+        for p in json.get("points")?.as_arr()? {
+            points.push(point_from_json(p)?);
+        }
+        Some(Frontier {
+            model: json.get("model")?.as_str()?.to_string(),
+            mcu: json.get("mcu")?.as_str()?.to_string(),
+            objective: json.get("objective")?.as_str()?.to_string(),
+            backend: json.get("backend")?.as_str()?.to_string(),
+            points,
+        })
+    }
+}
+
+fn candidate_to_json(c: &Candidate) -> Json {
+    let (lowering, patches, filters) = match c.lowering {
+        Lowering::Direct => ("direct", 0usize, 0usize),
+        Lowering::Im2col { patches, filters } => ("im2col", patches, filters),
+    };
+    Json::obj()
+        .field("kernel", c.kernel.as_str())
+        .field("lowering", lowering)
+        .field("patches", patches)
+        .field("filters", filters)
+        .field("backend", c.backend.as_str())
+}
+
+fn candidate_from_json(json: &Json) -> Option<Candidate> {
+    let kernel = KernelImpl::parse(json.get("kernel")?.as_str()?).ok()?;
+    let lowering = match json.get("lowering")?.as_str()? {
+        "direct" => Lowering::Direct,
+        "im2col" => Lowering::Im2col {
+            patches: json.get("patches")?.as_i64()? as usize,
+            filters: json.get("filters")?.as_i64()? as usize,
+        },
+        _ => return None,
+    };
+    let backend = Backend::parse(json.get("backend")?.as_str()?).ok()?;
+    Some(Candidate { kernel, lowering, backend })
+}
+
+fn point_to_json(p: &FrontierPoint) -> Json {
+    Json::obj()
+        .field("peak_ram_bytes", p.peak_ram_bytes)
+        .field("latency_s", p.latency_s)
+        .field("energy_mj", p.energy_mj)
+        .field(
+            "candidates",
+            Json::Arr(p.candidates.iter().map(candidate_to_json).collect()),
+        )
+}
+
+fn point_from_json(json: &Json) -> Option<FrontierPoint> {
+    let mut candidates = Vec::new();
+    for c in json.get("candidates")?.as_arr()? {
+        candidates.push(candidate_from_json(c)?);
+    }
+    Some(FrontierPoint {
+        peak_ram_bytes: json.get("peak_ram_bytes")?.as_i64()? as usize,
+        latency_s: json.get("latency_s")?.as_f64()?,
+        energy_mj: json.get("energy_mj")?.as_f64()?,
+        candidates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(peak: usize, lat: f64) -> FrontierPoint {
+        FrontierPoint {
+            peak_ram_bytes: peak,
+            latency_s: lat,
+            energy_mj: lat * 30.0,
+            candidates: vec![
+                Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Im2col { patches: 2, filters: 2 },
+                    backend: Backend::VecLanes,
+                },
+                Candidate {
+                    kernel: KernelImpl::AsIs,
+                    lowering: Lowering::Direct,
+                    backend: Backend::ScalarRef,
+                },
+            ],
+        }
+    }
+
+    fn frontier(points: Vec<FrontierPoint>) -> Frontier {
+        Frontier::new(
+            "m".into(),
+            "84.000MHz-Os".into(),
+            "latency".into(),
+            "auto".into(),
+            points,
+        )
+    }
+
+    #[test]
+    fn dominated_points_are_eliminated_and_order_is_canonical() {
+        let f = frontier(vec![
+            pt(300, 0.5),  // dominated by (200, 0.5): same latency, more RAM
+            pt(100, 1.0),
+            pt(200, 0.5),
+            pt(150, 1.2),  // dominated by (100, 1.0) in both coordinates
+            pt(100, 1.1),  // duplicate peak, worse latency
+        ]);
+        let got: Vec<(usize, f64)> =
+            f.points.iter().map(|p| (p.peak_ram_bytes, p.latency_s)).collect();
+        assert_eq!(got, vec![(100, 1.0), (200, 0.5)]);
+        // peak strictly ascending, latency strictly descending
+        for w in f.points.windows(2) {
+            assert!(w[0].peak_ram_bytes < w[1].peak_ram_bytes);
+            assert!(w[0].latency_s > w[1].latency_s);
+        }
+    }
+
+    #[test]
+    fn cheapest_within_picks_the_fastest_fitting_point() {
+        let f = frontier(vec![pt(100, 1.0), pt(200, 0.5), pt(400, 0.25)]);
+        assert!(f.cheapest_within(50).is_none(), "below the smallest point");
+        assert_eq!(f.cheapest_within(100).unwrap().peak_ram_bytes, 100);
+        assert_eq!(f.cheapest_within(399).unwrap().peak_ram_bytes, 200);
+        assert_eq!(f.cheapest_within(usize::MAX).unwrap().peak_ram_bytes, 400);
+        assert_eq!(f.best().unwrap().latency_s, 0.25);
+        assert_eq!(f.min_peak().unwrap().peak_ram_bytes, 100);
+        assert_eq!(f.len(), 3);
+        assert!(!f.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_is_identical() {
+        let f = frontier(vec![pt(100, 1.0), pt(200, 0.5)]);
+        let text = f.to_json().to_string();
+        let back = Frontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn malformed_json_is_rejected_not_misread() {
+        assert!(Frontier::from_json(&Json::parse(r#"{"model":"m"}"#).unwrap()).is_none());
+        let bad_kernel = r#"{"model":"m","mcu":"f","objective":"latency","backend":"auto",
+            "points":[{"peak_ram_bytes":1,"latency_s":0.1,"energy_mj":0.2,
+                       "candidates":[{"kernel":"warp","lowering":"direct",
+                                      "patches":0,"filters":0,"backend":"scalar"}]}]}"#;
+        assert!(Frontier::from_json(&Json::parse(bad_kernel).unwrap()).is_none());
+    }
+}

@@ -20,9 +20,11 @@
 //! silently replayed onto a rewired graph.
 
 use crate::mcu::{measure, McuConfig, Measurement};
+use crate::nn::arena::{slot_layout, IncrementalPeak, ValueInterval};
 use crate::nn::{counts, ExecPlan, Graph, Model, Monitor, Node, NodeOp, Shape, Tensor, Workspace};
 
-use super::cache::{cache_key_backend, mcu_fingerprint, CacheEntry, TuningCache};
+use super::cache::{cache_key_backend, frontier_key, mcu_fingerprint, CacheEntry, TuningCache};
+use super::pareto::{Frontier, FrontierPoint};
 use super::space::{self, Candidate, KernelImpl, Lowering};
 use super::{BackendSel, Objective};
 use crate::nn::Backend;
@@ -38,7 +40,15 @@ pub struct LayerDecision {
     pub energy_mj: f64,
     pub mem_accesses: u64,
     pub effective_macs: u64,
-    /// Input + output activations + candidate scratch.
+    /// Working SRAM while this node runs: the live activation bytes at
+    /// this step under the deployment arena layout (the same
+    /// [`crate::nn::arena::plan_arena`] packing the compiled plan binds)
+    /// plus the candidate's scratch. Equals
+    /// `ExecPlan::step_live_bytes(i) + ExecPlan::layer_scratch_bytes(i)`
+    /// of the compiled plan, so the schedule's claimed peak matches what
+    /// the arena actually provisions — including on residual graphs,
+    /// where the old input+output pricing double-counted join operands
+    /// that the liveness planner overlaps with dead bodies.
     pub ram_bytes: usize,
     /// Whether the decision was replayed from the tuning cache.
     pub from_cache: bool,
@@ -56,7 +66,10 @@ pub struct TunedSchedule {
     pub latency_s: f64,
     /// Sum of per-layer simulated energies.
     pub energy_mj: f64,
-    /// Max of per-layer working RAM.
+    /// Max of per-layer working RAM ([`LayerDecision::ram_bytes`]):
+    /// liveness-planned live activation bytes + scratch, maximized over
+    /// steps — byte-equal to the compiled plan's arena peak plus the
+    /// peak step's scratch.
     pub peak_ram_bytes: usize,
 }
 
@@ -469,6 +482,71 @@ fn score_node_candidate(
     }
 }
 
+/// Scratch a node's candidate needs beyond the activation arena. The
+/// residual join works in place on arena slots — no scratch.
+fn node_scratch_bytes(node: &Node, cand: &Candidate, value_shapes: &[Shape]) -> usize {
+    match &node.op {
+        NodeOp::Layer(l) => space::scratch_bytes(l, cand, &value_shapes[node.inputs[0]]),
+        NodeOp::Add(_) => 0,
+    }
+}
+
+/// Candidate-independent activation liveness of a graph: per-step live
+/// byte peaks under the deployment arena layout. Built exactly as
+/// [`ExecPlan::compile_graph`] builds its arena — the same value
+/// intervals, the best-fit packing grown through [`IncrementalPeak`]
+/// one value per topo step (byte-identical to the batch
+/// [`crate::nn::arena::best_fit_layout`] after every push), and
+/// [`crate::nn::arena::plan_arena`]'s reporting rule against the
+/// slot-partition total — so `max(step peak)` equals the compiled plan's
+/// arena peak and each entry equals `ExecPlan::step_live_bytes`.
+fn act_step_peaks(graph: &Graph, shapes: &[Shape]) -> Vec<usize> {
+    if graph.nodes.is_empty() {
+        return Vec::new();
+    }
+    let last_use = graph.last_uses();
+    let vals: Vec<ValueInterval> = shapes
+        .iter()
+        .enumerate()
+        .map(|(v, s)| ValueInterval {
+            size: s.len(),
+            def: v.saturating_sub(1),
+            last_use: last_use[v],
+        })
+        .collect();
+    // the incremental walk the joint search prunes with: one push per
+    // value in topo order, never a from-scratch replan
+    let mut incr = IncrementalPeak::new();
+    for &v in &vals {
+        incr.push(v);
+    }
+    let best = incr.layout();
+    // plan_arena's reporting rule: the slot partition caps the packing
+    let slots = slot_layout(&vals);
+    let slot_total: usize = slots.caps.iter().sum();
+    let offsets: Vec<usize> = if best.peak_bytes <= slot_total {
+        best.offsets
+    } else {
+        let mut slot_off = vec![0usize; slots.caps.len()];
+        let mut acc = 0usize;
+        for (off, cap) in slot_off.iter_mut().zip(&slots.caps) {
+            *off = acc;
+            acc += cap;
+        }
+        slots.slot_of.iter().map(|&s| slot_off[s]).collect()
+    };
+    let mut peaks = vec![0usize; graph.nodes.len()];
+    for (v, val) in vals.iter().enumerate() {
+        if val.size == 0 {
+            continue;
+        }
+        for p in &mut peaks[val.def..=val.last_use] {
+            *p = (*p).max(offsets[v] + val.size);
+        }
+    }
+    peaks
+}
+
 /// Tune every node of a graph for `objective` on `cfg`, consulting (and
 /// filling) `cache`. Cache keys are per-node signatures
 /// ([`space::node_signature`]): op + input shape + producer-distance
@@ -490,6 +568,10 @@ pub fn tune_graph_shape(
 /// never replay each other's entries. The modeled MCU costs are
 /// backend-invariant — policies change which host kernel deploys, never
 /// the reported cycles/energy/RAM of a given (kernel, lowering).
+///
+/// This is the budget-∞ case of [`tune_graph_joint`] — per-node greedy
+/// decisions, with per-layer RAM priced by the incremental liveness
+/// model rather than the old input+output sum.
 pub fn tune_graph_shape_backend(
     graph: &Graph,
     cfg: &McuConfig,
@@ -497,28 +579,79 @@ pub fn tune_graph_shape_backend(
     backend: BackendSel,
     cache: &mut TuningCache,
 ) -> (TunedSchedule, TuneStats) {
+    let (sched, stats) = tune_graph_joint(graph, cfg, objective, backend, None, cache);
+    (
+        sched.expect("unbudgeted tuning always finds a schedule"),
+        stats,
+    )
+}
+
+/// Joint whole-graph schedule search under a hard RAM budget: a DP over
+/// the topo order whose state is (node index, assignment so far,
+/// incremental liveness peak), minimizing `objective` subject to
+/// `peak working RAM ≤ ram_budget`, pruned by the incremental arena
+/// planner ([`IncrementalPeak`], extended one value per step — see
+/// [`act_step_peaks`]).
+///
+/// The search is **exact**, not a heuristic beam: activation intervals
+/// are shape-derived and candidate-independent, so a node's working RAM
+/// decomposes as `step_peak[i] + scratch(candidate)` where `step_peak`
+/// is fixed by the graph alone. The budget constraint therefore tests
+/// each candidate independently, cross-node state never interacts, and
+/// the DP's beam collapses to width 1: the per-node admissible argmin IS
+/// the global optimum. With `ram_budget = None` the admissible set is
+/// the full space and the decisions are exactly the per-node greedy ones
+/// ([`tune_graph_shape_backend`] delegates here).
+///
+/// Returns `None` when some node has *no* candidate that fits the
+/// budget (the budget is below the graph's activation floor plus the
+/// node's cheapest scratch). The per-node cache is consulted and filled
+/// with **unconstrained** winners only — entries are keyed by node
+/// signature, which carries no budget — and a cached winner is replayed
+/// exactly when it still applies and fits; a fitting unconstrained
+/// argmin is also the budgeted argmin (the minimum over a superset,
+/// attained inside the subset).
+pub fn tune_graph_joint(
+    graph: &Graph,
+    cfg: &McuConfig,
+    objective: Objective,
+    backend: BackendSel,
+    ram_budget: Option<usize>,
+    cache: &mut TuningCache,
+) -> (Option<TunedSchedule>, TuneStats) {
     let mcu_fp = mcu_fingerprint(cfg);
     let obj_name = objective.name();
     let mut stats = TuneStats::default();
     let mut decisions: Vec<LayerDecision> = Vec::with_capacity(graph.nodes.len());
     // shapes, not tensors: nothing is executed
     let shapes = graph.value_shapes();
+    let step_peaks = act_step_peaks(graph, &shapes);
+    let budget = ram_budget.unwrap_or(usize::MAX);
 
     for (index, node) in graph.nodes.iter().enumerate() {
         let sig = space::node_signature(node, index, &shapes);
         let key = cache_key_backend(&sig, &mcu_fp, &obj_name, backend);
 
-        let cached = cache.get(&key).copied();
-        let decision = match cached {
-            // replay only candidates that still apply (a schema change in
-            // the space enum would otherwise panic at execution time)
-            Some(e) if node_applies(node, &e.candidate) => {
+        // replay only candidates that still apply (a schema change in
+        // the space enum would otherwise panic at execution time) AND
+        // fit the budget at this step's liveness peak
+        let replay = cache.get(&key).copied().filter(|e| {
+            node_applies(node, &e.candidate)
+                && step_peaks[index] + node_scratch_bytes(node, &e.candidate, &shapes) <= budget
+        });
+        let decision = match replay {
+            Some(e) => {
                 stats.cache_hits += 1;
                 stats.candidates += 1;
-                decision_from_entry(index, node.op.name(), &e, true)
+                let mut d = decision_from_entry(index, node.op.name(), &e, true);
+                d.ram_bytes = step_peaks[index] + node_scratch_bytes(node, &e.candidate, &shapes);
+                d
             }
-            _ => {
+            None => {
+                // two argmins in one scan: the unconstrained winner goes
+                // to the cache, the budget-admissible winner deploys
                 let mut best: Option<(f64, CacheEntry)> = None;
+                let mut fit: Option<(f64, CacheEntry, usize)> = None;
                 for cand in node_candidates(node, backend) {
                     let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
                     let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
@@ -527,10 +660,23 @@ pub fn tune_graph_shape_backend(
                     if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
                         best = Some((score, entry));
                     }
+                    let need = step_peaks[index] + node_scratch_bytes(node, &cand, &shapes);
+                    if need <= budget
+                        && fit.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true)
+                    {
+                        fit = Some((score, entry, need));
+                    }
                 }
                 let (_, entry) = best.expect("every node has at least one candidate");
                 cache.put(key, entry);
-                decision_from_entry(index, node.op.name(), &entry, false)
+                let Some((_, entry, need)) = fit else {
+                    // budget infeasible at this node, whatever the rest
+                    // of the graph does
+                    return (None, stats);
+                };
+                let mut d = decision_from_entry(index, node.op.name(), &entry, false);
+                d.ram_bytes = need;
+                d
             }
         };
         decisions.push(decision);
@@ -540,7 +686,7 @@ pub fn tune_graph_shape_backend(
     let energy_mj = decisions.iter().map(|d| d.energy_mj).sum();
     let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
     (
-        TunedSchedule {
+        Some(TunedSchedule {
             model: graph.name.clone(),
             mcu: mcu_fp,
             objective: obj_name,
@@ -548,9 +694,163 @@ pub fn tune_graph_shape_backend(
             latency_s,
             energy_mj,
             peak_ram_bytes,
-        },
+        }),
         stats,
     )
+}
+
+/// The full latency↔RAM Pareto frontier of a graph: every
+/// non-dominated (peak working RAM, objective-optimal schedule) trade
+/// the joint search can reach. Candidate budgets are the distinct
+/// per-(node, candidate) RAM requirements — between two consecutive
+/// requirements the admissible sets (and hence the optimal schedule)
+/// cannot change, so this threshold sweep is exhaustive, not sampled.
+/// Dominated points are eliminated and the rest ordered peak-ascending /
+/// latency-descending by [`Frontier::new`].
+///
+/// Frontiers are cached wholesale under
+/// `frontier|graph signature|MCU|objective|backend`
+/// ([`space::graph_signature`] × [`mcu_fingerprint`] ×
+/// [`Objective::name`] × [`BackendSel::as_str`]); a warm call replays
+/// the frontier without re-scoring anything (reported as one cache hit
+/// per node in [`TuneStats`]).
+pub fn tune_graph_frontier(
+    graph: &Graph,
+    cfg: &McuConfig,
+    objective: Objective,
+    backend: BackendSel,
+    cache: &mut TuningCache,
+) -> (Frontier, TuneStats) {
+    let mcu_fp = mcu_fingerprint(cfg);
+    let obj_name = objective.name();
+    let mut stats = TuneStats::default();
+    let fkey = frontier_key(&space::graph_signature(graph), &mcu_fp, &obj_name, backend);
+    if let Some(f) = cache.get_frontier(&fkey) {
+        stats.cache_hits += graph.nodes.len();
+        return (f.clone(), stats);
+    }
+
+    let shapes = graph.value_shapes();
+    let step_peaks = act_step_peaks(graph, &shapes);
+    // score every (node, candidate) pair once
+    struct Scored {
+        entry: CacheEntry,
+        score: f64,
+        need: usize,
+    }
+    let mut table: Vec<Vec<Scored>> = Vec::with_capacity(graph.nodes.len());
+    for (index, node) in graph.nodes.iter().enumerate() {
+        let mut row = Vec::new();
+        for cand in node_candidates(node, backend) {
+            let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
+            let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
+            stats.analytic += 1;
+            stats.candidates += 1;
+            let need = step_peaks[index] + node_scratch_bytes(node, &cand, &shapes);
+            row.push(Scored { entry, score, need });
+        }
+        table.push(row);
+    }
+
+    let mut thresholds: Vec<usize> = table.iter().flatten().map(|s| s.need).collect();
+    thresholds.sort_unstable();
+    thresholds.dedup();
+
+    let mut points = Vec::new();
+    'budgets: for &b in &thresholds {
+        let mut cands = Vec::with_capacity(table.len());
+        let (mut lat, mut en, mut peak) = (0f64, 0f64, 0usize);
+        for row in &table {
+            let mut best: Option<&Scored> = None;
+            for s in row {
+                if s.need <= b && best.map(|x| s.score < x.score).unwrap_or(true) {
+                    best = Some(s);
+                }
+            }
+            let Some(s) = best else { continue 'budgets };
+            cands.push(s.entry.candidate);
+            lat += s.entry.latency_s;
+            en += s.entry.energy_mj;
+            peak = peak.max(s.need);
+        }
+        points.push(FrontierPoint {
+            peak_ram_bytes: peak,
+            latency_s: lat,
+            energy_mj: en,
+            candidates: cands,
+        });
+    }
+
+    let frontier = Frontier::new(
+        graph.name.clone(),
+        mcu_fp,
+        obj_name,
+        backend.as_str().to_string(),
+        points,
+    );
+    cache.put_frontier(fkey, frontier.clone());
+    (frontier, stats)
+}
+
+/// Deployment-facing budget selection: compute (or replay) the graph's
+/// latency↔RAM frontier and materialize the lowest-latency schedule
+/// whose liveness peak fits `ram_budget`
+/// ([`Frontier::cheapest_within`] → [`schedule_from_candidates`]).
+/// Returns `None` when even the smallest frontier point exceeds the
+/// budget — the caller decides whether that refuses deployment
+/// (serving) or reports infeasibility (CLI).
+pub fn tune_graph_budgeted(
+    graph: &Graph,
+    cfg: &McuConfig,
+    objective: Objective,
+    backend: BackendSel,
+    ram_budget: usize,
+    cache: &mut TuningCache,
+) -> (Option<TunedSchedule>, TuneStats) {
+    let (frontier, stats) = tune_graph_frontier(graph, cfg, objective, backend, cache);
+    let sched = frontier
+        .cheapest_within(ram_budget)
+        .map(|p| schedule_from_candidates(graph, &p.candidates, cfg, objective));
+    (sched, stats)
+}
+
+/// Materialize a [`TunedSchedule`] from an explicit per-node candidate
+/// assignment (e.g. a [`FrontierPoint`] picked at deploy time): re-price
+/// each node analytically and apply the liveness RAM model — the same
+/// totals the joint search would report for this assignment. Panics if
+/// a candidate does not apply to its node.
+pub fn schedule_from_candidates(
+    graph: &Graph,
+    cands: &[Candidate],
+    cfg: &McuConfig,
+    objective: Objective,
+) -> TunedSchedule {
+    assert_eq!(cands.len(), graph.nodes.len(), "schedule/graph mismatch");
+    let shapes = graph.value_shapes();
+    let step_peaks = act_step_peaks(graph, &shapes);
+    let mut decisions = Vec::with_capacity(cands.len());
+    for (index, (node, cand)) in graph.nodes.iter().zip(cands).enumerate() {
+        assert!(
+            node_applies(node, cand),
+            "candidate {cand:?} does not apply to node {index}"
+        );
+        let (entry, _) = score_node_candidate(node, cand, &shapes, cfg);
+        let mut d = decision_from_entry(index, node.op.name(), &entry, false);
+        d.ram_bytes = step_peaks[index] + node_scratch_bytes(node, cand, &shapes);
+        decisions.push(d);
+    }
+    let latency_s = decisions.iter().map(|d| d.latency_s).sum();
+    let energy_mj = decisions.iter().map(|d| d.energy_mj).sum();
+    let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
+    TunedSchedule {
+        model: graph.name.clone(),
+        mcu: mcu_fingerprint(cfg),
+        objective: objective.name(),
+        layers: decisions,
+        latency_s,
+        energy_mj,
+        peak_ram_bytes,
+    }
 }
 
 /// Per-layer SIMD-substitute flags for serving paths that only know the

@@ -604,6 +604,25 @@ pub fn node_signature(node: &Node, index: usize, value_shapes: &[Shape]) -> Stri
     }
 }
 
+/// A whole-graph structural fingerprint: FNV-1a over every node's
+/// [`node_signature`] (which already folds op kind, shapes, quantization
+/// and input topology) plus the node count. Two graphs with equal
+/// signatures present byte-identical tuning problems under every
+/// candidate, so a Pareto frontier cached under this signature
+/// ([`crate::tuner::cache::frontier_key`]) replays wholesale; any
+/// rewiring or reshape changes some node signature and re-keys.
+pub fn graph_signature(graph: &crate::nn::Graph) -> String {
+    let shapes = graph.value_shapes();
+    let mut h = crate::util::fnv::Fnv1a::new();
+    for (index, node) in graph.nodes.iter().enumerate() {
+        for b in node_signature(node, index, &shapes).bytes() {
+            h.byte(b);
+        }
+        h.byte(b'\n'); // node separator: "ab"+"c" must differ from "a"+"bc"
+    }
+    format!("g{:016x}x{}", h.finish(), graph.nodes.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1019,5 +1038,29 @@ mod tests {
         let sig = node_signature(&res.nodes[3], 3, &rs);
         assert!(sig.starts_with("resadd[q5]@6x6x4"), "{sig}");
         assert!(sig.ends_with("~in3,1"), "{sig}");
+    }
+
+    #[test]
+    fn graph_signature_keys_on_structure_not_name() {
+        use crate::nn::Graph;
+        let mut rng = Rng::new(0x51);
+        let conv = random_conv(&mut rng, 1, 3, 4, 4);
+        let build = |name: &str, skip: bool| {
+            let mut g = Graph::new(name, Shape::new(6, 6, 4), QParam::new(7));
+            let v0 = g.layer(g.input(), Layer::Conv(conv.clone()));
+            let v1 = g.layer(v0, Layer::Relu);
+            g.layer(if skip { v0 } else { v1 }, Layer::Relu);
+            g
+        };
+        // names differ, structure identical: one frontier serves both
+        assert_eq!(
+            graph_signature(&build("a", false)),
+            graph_signature(&build("b", false))
+        );
+        // one rewired edge (same ops, same shapes) re-keys
+        assert_ne!(
+            graph_signature(&build("a", false)),
+            graph_signature(&build("a", true))
+        );
     }
 }
