@@ -27,8 +27,35 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
-echo "==> tier-1: cargo test -q"
+echo "==> gate: golden vectors are committed"
+# tests/integration_golden.rs blesses (generates) rust/tests/golden/zoo.json
+# when it is missing — the right behavior on a dev checkout, but in CI a
+# missing file means the goldens were deleted without re-committing: the
+# suite would silently pin nothing. Bless so the artifact exists, then
+# fail loudly so it gets committed.
+if [[ ! -f rust/tests/golden/zoo.json ]]; then
+    CONVBENCH_BLESS=1 cargo test -q --test integration_golden
+    echo "ERROR: rust/tests/golden/zoo.json was missing and has just been"
+    echo "       regenerated — commit it; uncommitted goldens pin nothing"
+    exit 1
+fi
+
+echo "==> tier-1: cargo test -q (includes the cross-PR golden-vector suite)"
 cargo test -q
+
+echo "==> gate: test-count floor (a dropped test target fails CI, not just a failing test)"
+# `cargo test -- --list` enumerates every test the harness would run
+# across all registered targets; a Cargo.toml regression that silently
+# drops an integration-test target (path typo, deleted [[test]] block)
+# shrinks this count without failing a single test. The floor trails the
+# current count (418) by a margin so adding tests never touches it, but
+# losing a whole file trips it.
+test_count=$(cargo test -q -- --list 2>/dev/null | grep -c ': test$' || true)
+echo "    $test_count tests listed (floor 400)"
+if [[ "$test_count" -lt 400 ]]; then
+    echo "ERROR: only $test_count tests listed — a test target was dropped (floor 400)"
+    exit 1
+fi
 
 echo "==> smoke: convbench tune --objective latency --quick"
 # exercises the schedule auto-tuner end to end on the quick plans AND the
@@ -55,10 +82,26 @@ echo "==> smoke: convbench tune --backend vec --quick (host-vectorized backend o
 
 echo "==> smoke: vec-policy warm-cache replay (gated, proves backend-keyed entries round-trip)"
 # re-running under the same policy must replay every decision from the
-# CACHE_VERSION-3 entries written by the cold run — including their
+# CACHE_VERSION-5 entries written by the cold run — including their
 # "backend" field; a parse regression (e.g. after a cache-version bump)
 # would re-score and fail the gate
 ./target/release/convbench tune --objective latency --backend vec --quick --out results/ci --expect-warm
+
+echo "==> smoke: convbench tune --objective flash --quick (pruned zoo under the flash objective)"
+# the flash-footprint objective end to end: the tune run covers the
+# pruned zoo (every primitive × sparsity 0.25/0.5/0.75, linear + residual)
+# whose compacted graphs carry their own layer signatures and deployed
+# weight-byte counts; the objective name folds into every cache key, so
+# this run writes its own CACHE_VERSION-5 entries with the flash_bytes
+# column populated from compacted kernels
+./target/release/convbench tune --objective flash --quick --out results/ci
+
+echo "==> smoke: flash-objective warm-cache replay (gated, proves flash-keyed entries round-trip)"
+# the replay must reload every flash-keyed entry — version gate, the
+# required flash_bytes field and the objective segment of the key all
+# round-tripping through util::json — and re-score nothing; a v5 parse
+# regression would silently fall back to cold tuning and fail the gate
+./target/release/convbench tune --objective flash --quick --out results/ci --expect-warm
 
 echo "==> smoke: budgeted tune (frontier deployment under a tight RAM budget)"
 # derive a budget strictly below the unconstrained optimum's peak on a

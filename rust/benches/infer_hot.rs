@@ -49,7 +49,15 @@
 //!    blocked-matmul and depthwise ratios asserted > 1.0), the whole
 //!    zoo tuned and run under the `scalar` and `vec` backend policies
 //!    (bit-exact per graph), and the vec-backend `run_in` hot loop
-//!    pinned at **zero** steady-state allocations like the scalar one.
+//!    pinned at **zero** steady-state allocations like the scalar one;
+//! 9. **structured pruning** — a channel-pruned plan is asserted
+//!    bit-exact with the dense reference carrying zeroed channels (the
+//!    compaction contract) and its `run_in` hot loop pinned at **zero**
+//!    steady-state allocations under both backend policies; the flash
+//!    objective is proven live (on at least one pruned zoo model a
+//!    flash-tuned schedule differs from the latency-tuned one and never
+//!    deploys more weight bytes), and per-variant MACs / flash /
+//!    latency reductions vs the dense baselines land in the JSON.
 //!
 //! Run: `cargo bench --bench infer_hot` (CI runs it with
 //! `CONVBENCH_QUICK=1`; see `ci.sh`). Writes `results/BENCH_infer.json`
@@ -650,6 +658,114 @@ fn main() {
         "steady-state vec-backend run_in performed {vec_steady_allocs} heap allocations"
     );
 
+    // --- 7. structured pruning: compacted kernels ---------------------
+    // the compaction contract, pinned where it matters for deployment:
+    // the pruned plan must compute exactly what the dense reference
+    // computes with the masked channels zeroed — on the COMPILED engine
+    // under both backend policies — and its hot loop must stay
+    // allocation-free like every other serving path
+    use convbench::models::{mcunet_pruned, PRUNE_LEVELS};
+    use convbench::nn::{compact_graph, magnitude_masks, zeroed_graph};
+    let dgraph = Graph::from_model(&mcunet(Primitive::DepthwiseSeparable, 42));
+    let masks = magnitude_masks(&dgraph, 0.5);
+    let zeroed = zeroed_graph(&dgraph, &masks);
+    let pruned = compact_graph(&dgraph, &masks, "mcunet-dws-bench-pruned50");
+    let mut px = Tensor::zeros(pruned.input_shape, pruned.input_q);
+    Rng::new(21).fill_i8(&mut px.data, -64, 63);
+    let pruned_want = zeroed.forward(&px, true, &mut NoopMonitor);
+    for backend in [BackendSel::Scalar, BackendSel::Vec] {
+        let (psched, _) =
+            tune_graph_shape_backend(&pruned, &cfg, Objective::Latency, backend, &mut cache);
+        let mut pws = psched.workspace_graph(&pruned);
+        let got = psched.run_in(&px, &mut pws, &mut NoopMonitor);
+        assert_eq!(
+            pruned_want.data, got.data,
+            "pruned plan [{backend:?}] must match the zeroed-channel dense reference"
+        );
+        let p_alloc0 = allocations();
+        for _ in 0..iters {
+            black_box(psched.run_in(&px, &mut pws, &mut NoopMonitor).data[0]);
+        }
+        let pruned_steady_allocs = allocations() - p_alloc0;
+        assert_eq!(
+            pruned_steady_allocs, 0,
+            "steady-state pruned run_in [{backend:?}] performed {pruned_steady_allocs} \
+             heap allocations"
+        );
+        if backend == BackendSel::Vec {
+            b.run("infer/pruned50_run_in/vec", || {
+                psched.run_in(&px, &mut pws, &mut NoopMonitor).data[0]
+            });
+        }
+    }
+
+    // the flash objective is live: on at least one pruned zoo model the
+    // flash-tuned schedule differs from the latency-tuned one, and it
+    // never deploys more weight bytes than latency tuning does
+    let mut flash_demo: Option<(String, usize, usize)> = None;
+    for &sparsity in &PRUNE_LEVELS {
+        for prim in Primitive::ALL {
+            let g = Graph::from_model(&mcunet_pruned(prim, 42, sparsity));
+            let mut c1 = TuningCache::in_memory();
+            let mut c2 = TuningCache::in_memory();
+            let (lat, _) =
+                tune_graph_shape_backend(&g, &cfg, Objective::Latency, BackendSel::Auto, &mut c1);
+            let (fls, _) =
+                tune_graph_shape_backend(&g, &cfg, Objective::Flash, BackendSel::Auto, &mut c2);
+            assert!(
+                fls.flash_bytes <= lat.flash_bytes,
+                "{}: flash tuning deployed {} B > latency tuning's {} B",
+                g.name,
+                fls.flash_bytes,
+                lat.flash_bytes
+            );
+            if flash_demo.is_none() && fls.candidates() != lat.candidates() {
+                flash_demo = Some((g.name.clone(), lat.flash_bytes, fls.flash_bytes));
+            }
+        }
+    }
+    let (flash_model, flash_latency_tuned_bytes, flash_flash_tuned_bytes) = flash_demo
+        .expect("flash-weighted tuning never diverged from latency tuning on any pruned model");
+    println!(
+        "pruning: flash objective picks a different schedule than latency on {flash_model} \
+         ({flash_latency_tuned_bytes} B latency-tuned vs {flash_flash_tuned_bytes} B flash-tuned)"
+    );
+
+    // per-variant MACs / flash / latency vs the dense baseline — the
+    // compression trajectory future PRs regress against
+    let mut pruned_fields: Vec<(String, Json)> = Vec::new();
+    for prim in Primitive::ALL {
+        let dg = Graph::from_model(&mcunet(prim, 42));
+        let (dsched, _) =
+            tune_graph_shape_backend(&dg, &cfg, Objective::Latency, BackendSel::Auto, &mut cache);
+        let dense_macs: u64 = dsched.layers.iter().map(|d| d.effective_macs).sum();
+        for &sparsity in &PRUNE_LEVELS {
+            let pg = Graph::from_model(&mcunet_pruned(prim, 42, sparsity));
+            let (ps, _) = tune_graph_shape_backend(
+                &pg,
+                &cfg,
+                Objective::Latency,
+                BackendSel::Auto,
+                &mut cache,
+            );
+            let macs: u64 = ps.layers.iter().map(|d| d.effective_macs).sum();
+            pruned_fields.push((
+                pg.name.clone(),
+                Json::obj()
+                    .field("sparsity", sparsity)
+                    .field("macs", macs)
+                    .field("flash_bytes", ps.flash_bytes)
+                    .field("latency_s", ps.latency_s)
+                    .field("mac_reduction", 1.0 - macs as f64 / dense_macs as f64)
+                    .field(
+                        "flash_reduction",
+                        1.0 - ps.flash_bytes as f64 / dsched.flash_bytes as f64,
+                    )
+                    .field("latency_reduction", 1.0 - ps.latency_s / dsched.latency_s),
+            ));
+        }
+    }
+
     b.write_csv("results/bench_infer_hot.csv");
 
     let mean_ns = |name: &str| -> f64 {
@@ -667,6 +783,7 @@ fn main() {
     let residual_in_ns = mean_ns("infer/residual_run_in");
     let batch_ns_per_inf = mean_ns("infer/batch8_run_batch_in") / BATCH as f64;
     let batch_seq_ns_per_inf = mean_ns("infer/batch8_sequential_run_in") / BATCH as f64;
+    let pruned_in_ns = mean_ns("infer/pruned50_run_in/vec");
     let plan = ws.plan();
     let tplan = tws.plan();
     let rplan = rws.plan();
@@ -867,7 +984,12 @@ fn main() {
         .field("budgeted_model", budget_model.as_str())
         .field("budgeted_ram_budget_bytes", budget_bytes)
         .field("budgeted_peak_bytes", budgeted_peak)
-        .field("joint_vs_greedy_latency_gain", joint_gain);
+        .field("joint_vs_greedy_latency_gain", joint_gain)
+        .field("pruned50_run_in_ns", pruned_in_ns)
+        .field("pruned_variants", Json::Obj(pruned_fields))
+        .field("flash_objective_model", flash_model.as_str())
+        .field("flash_latency_tuned_bytes", flash_latency_tuned_bytes)
+        .field("flash_flash_tuned_bytes", flash_flash_tuned_bytes);
     write_report("results/BENCH_infer.json", &json.to_string()).expect("write BENCH_infer.json");
 
     println!(
@@ -913,6 +1035,12 @@ fn main() {
          {backend_speedup_depthwise:.2}x, shift {backend_speedup_shift:.2}x, dense \
          {backend_speedup_dense:.2}x; whole zoo tuned {backend_zoo_scalar_ns:.0} ns (scalar) \
          vs {backend_zoo_vec_ns:.0} ns (vec) — {backend_speedup_zoo:.2}x, vec run_in 0 allocs"
+    );
+    println!(
+        "pruning: compacted mcunet-dws @0.5 bit-exact with the zeroed dense reference on both \
+         backends, tuned run_in {pruned_in_ns:.0} ns (0 allocs); flash objective diverges from \
+         latency on {flash_model} ({flash_latency_tuned_bytes} B vs \
+         {flash_flash_tuned_bytes} B deployed)"
     );
     println!("wrote results/BENCH_infer.json");
 }

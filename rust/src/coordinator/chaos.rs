@@ -19,9 +19,16 @@
 //!
 //! Retriable failures are resubmitted under the run's
 //! [`RetryPolicy`] attempt budget with the *same request id*, which is
-//! what drives repeat offenders into quarantine. With an inert fault
-//! plan the harness degenerates to a plain load test — useful as the
-//! baseline leg of the chaos-overhead benchmark.
+//! what drives repeat offenders into quarantine (the resubmission bumps
+//! [`Request::attempt`], so the deterministic fault dice re-roll). With
+//! an inert fault plan the harness degenerates to a plain load test —
+//! useful as the baseline leg of the chaos-overhead benchmark.
+//!
+//! Because the fault dice are key-rolled from batch content alone
+//! ([`crate::util::fault::batch_key`]), a storm under `max_batch: 1` is
+//! *replayable*: two runs of the same configuration produce identical
+//! reply and supervision counters, whatever the thread interleaving —
+//! pinned by the determinism tests below.
 
 use std::sync::mpsc;
 use std::time::Duration;
@@ -113,7 +120,9 @@ impl ChaosOptions {
 
 /// Outcome of one chaos run: client-side reply accounting, the final
 /// supervision counters, and every invariant violation observed.
-#[derive(Clone, Debug, Default)]
+/// `PartialEq` so determinism tests can compare whole reports: two runs
+/// of the same seeded configuration must produce identical snapshots.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ChaosReport {
     /// Requests submitted (initial storm + retries).
     pub submitted: u64,
@@ -158,7 +167,12 @@ pub fn run_chaos(opts: &ChaosOptions) -> ChaosReport {
     let mut report = ChaosReport::default();
     let cfg = McuConfig::default();
     let variants = [Primitive::Standard, Primitive::Shift, Primitive::DepthwiseSeparable];
-    let models: Vec<_> = variants.iter().map(|&p| mcunet(p, 42)).collect();
+    let mut models: Vec<_> = variants.iter().map(|&p| mcunet(p, 42)).collect();
+    // the pruned zoo chaos-tests through the same storm: compacted
+    // kernels must survive panics, degradation and retries like their
+    // dense counterparts
+    models.push(crate::models::mcunet_pruned(Primitive::Standard, 42, 0.5));
+    models.push(crate::models::mcunet_pruned(Primitive::Shift, 42, 0.5));
     let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
     let input_len = models[0].input_shape.len();
     let mut cache = TuningCache::in_memory();
@@ -175,13 +189,18 @@ pub fn run_chaos(opts: &ChaosOptions) -> ChaosReport {
     let submit = |server: &InferenceServer,
                       report: &mut ChaosReport,
                       id: u64,
+                      attempt: u32,
                       model: &str,
                       rng: &mut Rng|
      -> Option<InFlight> {
         let mut input = vec![0i8; input_len];
         rng.fill_i8(&mut input, -64, 63);
         report.submitted += 1;
-        match server.submit(Request::new(id, model, input)) {
+        // the attempt ordinal feeds the deterministic fault key: a
+        // retry of the same id rolls fresh dice (see util::fault)
+        let mut req = Request::new(id, model, input);
+        req.attempt = attempt;
+        match server.submit(req) {
             Ok(rx) => Some((id, model.to_string(), rx)),
             Err(e) => {
                 report
@@ -195,7 +214,7 @@ pub fn run_chaos(opts: &ChaosOptions) -> ChaosReport {
     let mut round: Vec<InFlight> = Vec::with_capacity(opts.requests);
     for i in 0..opts.requests {
         let model = names[rng.below(names.len() as u64) as usize].clone();
-        if let Some(f) = submit(&server, &mut report, i as u64, &model, &mut rng) {
+        if let Some(f) = submit(&server, &mut report, i as u64, 0, &model, &mut rng) {
             round.push(f);
         }
     }
@@ -232,7 +251,9 @@ pub fn run_chaos(opts: &ChaosOptions) -> ChaosReport {
                 }
                 Err(e) if e.retriable() && attempt + 1 < attempts => {
                     report.retried += 1;
-                    if let Some(f) = submit(&server, &mut report, id, &model, &mut rng) {
+                    if let Some(f) =
+                        submit(&server, &mut report, id, attempt as u32 + 1, &model, &mut rng)
+                    {
                         next.push(f);
                     }
                 }
@@ -372,6 +393,90 @@ mod tests {
         assert!(report.passed(), "violations: {:?}", report.violations);
         assert_eq!(report.ok + report.failed + report.retried, report.submitted);
         assert!(report.submitted >= 24);
+    }
+
+    #[test]
+    fn same_seed_replays_identical_counters() {
+        // Determinism leg of the chaos contract. `max_batch: 1` pins the
+        // batch composition (each batch is exactly one (id, attempt)
+        // lane, so every fault key is interleaving-independent); one
+        // worker plus `breaker_threshold: 1` and a cooldown longer than
+        // the run pin the breaker sequence (a model trips on its first
+        // panicking batch and stays open, so trips == models-with-a-
+        // panic regardless of drain order). The only counter left with a
+        // timing component is `degraded` — how many batches landed
+        // inside the open window depends on how far the submitting
+        // thread ran ahead of the worker — so the comparison normalizes
+        // it out; everything the satellite pins (served/shed/panics/
+        // respawns/breaker trips) must match exactly.
+        let opts = ChaosOptions {
+            seed: 23,
+            requests: 24,
+            workers: 1,
+            retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
+            serve: ServeOptions {
+                max_batch: 1,
+                queue_depth: 64,
+                breaker_threshold: 1,
+                breaker_cooldown_us: 3_600_000_000, // never expires in-run
+                respawn_base_us: 50,
+                respawn_max_us: 200,
+                faults: FaultPlan {
+                    seed: 23,
+                    panic_ppm: 150_000,
+                    delay_ppm: 50_000,
+                    error_ppm: 100_000,
+                    delay_us: 20,
+                },
+                ..ServeOptions::default()
+            },
+            ..ChaosOptions::default()
+        };
+        let mut a = run_chaos(&opts);
+        let mut b = run_chaos(&opts);
+        assert!(a.passed(), "violations: {:?}", a.violations);
+        assert!(b.passed(), "violations: {:?}", b.violations);
+        assert!(a.worker_panics > 0, "the storm must actually inject");
+        a.degraded = 0;
+        b.degraded = 0;
+        assert_eq!(a, b, "same seeded storm, different counters");
+    }
+
+    #[test]
+    fn counters_are_worker_count_invariant_when_the_breaker_is_idle() {
+        // The fault dice are keyed by batch content alone, so with the
+        // breaker effectively disabled (nothing trips, nothing degrades)
+        // every remaining counter is a pure function of the storm: a
+        // two-worker run must reproduce the single-worker run exactly.
+        let mk = |workers: usize| ChaosOptions {
+            seed: 31,
+            requests: 24,
+            workers,
+            retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
+            serve: ServeOptions {
+                max_batch: 1,
+                queue_depth: 64,
+                breaker_threshold: usize::MAX,
+                respawn_base_us: 50,
+                respawn_max_us: 200,
+                faults: FaultPlan {
+                    seed: 31,
+                    panic_ppm: 150_000,
+                    delay_ppm: 0,
+                    error_ppm: 100_000,
+                    delay_us: 0,
+                },
+                ..ServeOptions::default()
+            },
+            ..ChaosOptions::default()
+        };
+        let a = run_chaos(&mk(1));
+        let b = run_chaos(&mk(2));
+        assert!(a.passed(), "violations: {:?}", a.violations);
+        assert!(b.passed(), "violations: {:?}", b.violations);
+        assert_eq!(a.breaker_trips, 0, "threshold usize::MAX must never trip");
+        assert_eq!(a.degraded, 0);
+        assert_eq!(a, b, "fault outcomes leaked worker identity");
     }
 
     #[test]

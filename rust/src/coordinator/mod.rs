@@ -64,15 +64,23 @@ fn emit_artifact(path: &str, content: &str, what: &str) {
 }
 
 /// CLI entry point for `convbench serve`: deploy all five MCU-Net
-/// variants behind the deadline-aware micro-batch queue, fire `n`
-/// random requests through `workers` workers **asynchronously** (so
-/// batches actually form), and print the service report — end-to-end
-/// latency split into queue wait and execution, plus the batch-size
-/// histogram. Workers are joined before the trace/metrics/stats
-/// artifacts in `outs` are emitted, so every span and counter from the
-/// run is visible in them.
+/// variants plus their channel-pruned counterparts (every
+/// [`crate::models::PRUNE_LEVELS`] sparsity) behind the deadline-aware
+/// micro-batch queue, fire `n` random requests through `workers` workers
+/// **asynchronously** (so batches actually form), and print the service
+/// report — end-to-end latency split into queue wait and execution, plus
+/// the batch-size histogram. Workers are joined before the
+/// trace/metrics/stats artifacts in `outs` are emitted, so every span
+/// and counter from the run is visible in them.
 pub fn serve_cli(n: usize, workers: usize, opts: ServeOptions, outs: &ServeOutputs) {
-    let models: Vec<_> = Primitive::ALL.iter().map(|&p| mcunet(p, 42)).collect();
+    let mut models: Vec<_> = Primitive::ALL.iter().map(|&p| mcunet(p, 42)).collect();
+    for &sparsity in &crate::models::PRUNE_LEVELS {
+        models.extend(
+            Primitive::ALL
+                .iter()
+                .map(|&p| crate::models::mcunet_pruned(p, 42, sparsity)),
+        );
+    }
     let names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
     let mut server = InferenceServer::start_with(models, workers, &McuConfig::default(), opts);
     println!(

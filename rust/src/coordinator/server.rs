@@ -84,7 +84,9 @@ use crate::tuner::{
     tune_model_shape_backend, BackendSel, Objective, TunedSchedule, TuningCache,
 };
 use crate::util::backoff::Backoff;
-use crate::util::fault::{FaultAction, FaultInjector, FaultPlan, FaultSite, NoopFaults, SeededFaults};
+use crate::util::fault::{
+    batch_key, FaultAction, FaultInjector, FaultPlan, FaultSite, NoopFaults, SeededFaults,
+};
 use crate::util::json::Json;
 use crate::util::stats::Reservoir;
 
@@ -296,12 +298,19 @@ pub struct Request {
     /// tighter per-request deadline trades batching efficiency for
     /// latency.
     pub deadline_us: u64,
+    /// Resubmission ordinal: 0 on first submission, incremented by the
+    /// retry paths. Folded into the deterministic fault key
+    /// ([`crate::util::fault::batch_key`]) so a chaos retry rolls fresh
+    /// dice instead of replaying the fault that killed attempt 0 —
+    /// retries reuse the request *id*, which quarantine tracking needs
+    /// stable.
+    pub attempt: u32,
 }
 
 impl Request {
     /// Build a request with the server-default deadline.
     pub fn new(id: u64, model: impl Into<String>, input: Vec<i8>) -> Self {
-        Self { id, model: model.into(), input, deadline_us: 0 }
+        Self { id, model: model.into(), input, deadline_us: 0, attempt: 0 }
     }
 }
 
@@ -1194,7 +1203,7 @@ impl InferenceServer {
                 // monomorphize the worker loop on the injector: the
                 // production path carries no fault branches at all
                 if opts.faults.enabled() {
-                    let faults = SeededFaults::new(opts.faults, w as u64);
+                    let faults = SeededFaults::new(opts.faults);
                     std::thread::spawn(move || worker_loop(&models, &queue, opts, state, faults))
                 } else {
                     std::thread::spawn(move || {
@@ -1355,7 +1364,11 @@ impl InferenceServer {
                 Some(r) if r > Duration::ZERO => r,
                 _ => return Err(ServeError::DeadlineExceeded),
             };
-            let rx = match self.submit(req.clone()) {
+            // stamp the attempt ordinal so the fault dice re-roll per
+            // attempt (the id stays stable for quarantine tracking)
+            let mut attempt_req = req.clone();
+            attempt_req.attempt = attempt as u32;
+            let rx = match self.submit(attempt_req) {
                 Ok(rx) => rx,
                 Err(e) if e.retriable() => {
                     last = e;
@@ -1638,9 +1651,11 @@ fn guard_model_has_fallback(state: &WorkerState, name: &str) -> bool {
 
 /// Act on one injector roll: `Panic` unwinds (the supervisor catches
 /// it), `Delay` sleeps in place, `Error` returns `true` so the caller
-/// fails the batch with typed retriable errors instead.
-fn apply_fault<F: FaultInjector>(faults: &mut F, site: FaultSite) -> bool {
-    match faults.roll(site) {
+/// fails the batch with typed retriable errors instead. `key` is the
+/// batch's deterministic fault key ([`batch_key`]) — what happens to a
+/// batch depends only on its content, never on which worker drained it.
+fn apply_fault<F: FaultInjector>(faults: &mut F, site: FaultSite, key: u64) -> bool {
+    match faults.roll(site, key) {
         FaultAction::None => false,
         FaultAction::Panic => panic!("injected fault: panic at {site:?}"),
         FaultAction::Delay(d) => {
@@ -1706,7 +1721,10 @@ fn serve_batch<F: FaultInjector>(
     } else {
         &mut arenas.primary
     };
-    if apply_fault(faults, FaultSite::Stage) {
+    // one key per drained batch, derived from its lanes' (id, attempt)
+    // pairs: fault outcomes are a pure function of batch content
+    let fkey = batch_key(guard.lanes().iter().map(|p| (p.req.id, p.req.attempt)));
+    if apply_fault(faults, FaultSite::Stage, fkey) {
         fail_batch(state, guard);
         return;
     }
@@ -1714,7 +1732,7 @@ fn serve_batch<F: FaultInjector>(
     for (lane, p) in guard.lanes().iter().enumerate() {
         ws.stage_batch_input(lane, &p.req.input);
     }
-    if apply_fault(faults, FaultSite::Exec) {
+    if apply_fault(faults, FaultSite::Exec, fkey) {
         fail_batch(state, guard);
         return;
     }
@@ -1730,7 +1748,7 @@ fn serve_batch<F: FaultInjector>(
     // amortized per-request cost is visible via batch_size / the
     // throughput benches, not hidden in the latency split)
     let exec = t0.elapsed();
-    if apply_fault(faults, FaultSite::Respond) {
+    if apply_fault(faults, FaultSite::Respond, fkey) {
         // rolled before any served accounting, so the conservation
         // invariant (served + shed + errors == submitted) stays exact
         fail_batch(state, guard);

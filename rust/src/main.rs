@@ -11,7 +11,7 @@
 //! convbench table4                 # Table 4 optimization levels
 //! convbench regressions            # §4.1 linearity scores
 //! convbench all [--out results]    # everything above into --out
-//! convbench tune [--objective latency|energy|ram|weighted[:L,E,R]]
+//! convbench tune [--objective latency|energy|ram|flash|weighted[:L,E,R[,F]]]
 //!                [--backend scalar|vec|auto]
 //!                [--ram-budget BYTES] [--pareto-out FILE]
 //!                [--cache PATH] [--quick] [--out results]
@@ -383,6 +383,50 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
         println!("{}", schedule.to_markdown());
     }
 
+    // pruned zoo variants (every primitive × 3 sparsity levels, linear +
+    // residual): these tune over *compacted* kernels, so their node
+    // signatures, flash footprints and cache entries are all their own —
+    // the --expect-warm gate below covers their warm replay too. One
+    // summary line per model keeps the report readable.
+    {
+        use convbench::models::{mcunet_pruned, mcunet_residual_pruned, PRUNE_LEVELS};
+        println!("\nMCU-Net pruned zoo — objective {}, backend {}\n", objective.name(), backend.as_str());
+        for &sparsity in &PRUNE_LEVELS {
+            for prim in Primitive::ALL {
+                let model = mcunet_pruned(prim, 42, sparsity);
+                let (schedule, s) =
+                    tune_model_shape_backend(&model, cfg, objective, backend, &mut cache);
+                zoo_scored += s.analytic;
+                zoo_evals += s.evaluations;
+                zoo_hits += s.cache_hits;
+                println!(
+                    "{}: latency {:.4} ms, energy {:.3} µJ, peak RAM {} B, flash {} B",
+                    schedule.model,
+                    1e3 * schedule.latency_s,
+                    1e3 * schedule.energy_mj,
+                    schedule.peak_ram_bytes,
+                    schedule.flash_bytes
+                );
+            }
+            for prim in Primitive::ALL {
+                let graph = mcunet_residual_pruned(prim, 42, sparsity);
+                let (schedule, s) =
+                    tune_graph_shape_backend(&graph, cfg, objective, backend, &mut cache);
+                zoo_scored += s.analytic;
+                zoo_evals += s.evaluations;
+                zoo_hits += s.cache_hits;
+                println!(
+                    "{}: latency {:.4} ms, energy {:.3} µJ, peak RAM {} B, flash {} B",
+                    schedule.model,
+                    1e3 * schedule.latency_s,
+                    1e3 * schedule.energy_mj,
+                    schedule.peak_ram_bytes,
+                    schedule.flash_bytes
+                );
+            }
+        }
+    }
+
     // --ram-budget BYTES: report the frontier point each zoo model
     // would deploy under the budget (exit 1 if any model is
     // infeasible); --pareto-out FILE: write every model's full
@@ -493,10 +537,8 @@ fn cmd_tune(args: &Args, cfg: &McuConfig, quick: bool, out_dir: &str) {
 /// serializer the runtime drift monitor uses, so offline profiles diff
 /// directly against `DriftReport` node records.
 fn cmd_profile(args: &Args, cfg: &McuConfig) {
-    use convbench::analytic::Primitive;
     use convbench::mcu::{footprint_graph, measure, PathClass};
-    use convbench::models::{mcunet, mcunet_residual};
-    use convbench::nn::{ExecPlan, Graph, Tensor};
+    use convbench::nn::{ExecPlan, Tensor};
     use convbench::tuner::{tune_graph_shape_backend, BackendSel, Objective, TuningCache};
 
     let name = args.get("model").unwrap_or("mcunet-standard");
@@ -508,15 +550,13 @@ fn cmd_profile(args: &Args, cfg: &McuConfig) {
             std::process::exit(2);
         }
     };
-    let graph = Primitive::ALL
-        .iter()
-        .map(|&p| Graph::from_model(&mcunet(p, 42)))
-        .chain(Primitive::ALL.iter().map(|&p| mcunet_residual(p, 42)))
+    let graph = convbench::models::zoo_graphs(42)
+        .into_iter()
         .find(|g| g.name == name)
         .unwrap_or_else(|| {
             eprintln!(
-                "unknown model {name:?}; available: mcunet-<standard|grouped|dws|shift|add> \
-                 or mcunet-res-<standard|grouped|dws|shift|add>"
+                "unknown model {name:?}; available: mcunet-<standard|grouped|dws|shift|add>, \
+                 mcunet-res-<same>, and their -pruned<25|50|75> variants"
             );
             std::process::exit(2);
         });

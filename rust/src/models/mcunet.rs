@@ -393,6 +393,63 @@ fn push_stage(m: &mut Model, prim: Primitive, p: &LayerParams, rng: &mut Rng) {
     }
 }
 
+/// The sparsity levels the pruned zoo ships: fraction of channels
+/// removed per prunable mask class (see [`crate::nn::prune`]).
+pub const PRUNE_LEVELS: [f64; 3] = [0.25, 0.5, 0.75];
+
+/// Canonical pruned-variant name: `mcunet-standard` at 0.5 sparsity is
+/// `mcunet-standard-pruned50`.
+pub fn pruned_name(base: &str, sparsity: f64) -> String {
+    format!("{base}-pruned{}", (sparsity * 100.0).round() as u32)
+}
+
+/// Channel-pruned linear MCU-Net: magnitude-based selection at
+/// `sparsity`, masked channels compacted out at build time
+/// ([`crate::nn::prune_model`]). The result is a plain smaller [`Model`]
+/// — it tunes, serves, batches and chaos-tests through every existing
+/// coordinator flavor with no pruning-specific runtime machinery. How
+/// much actually shrinks depends on the primitive's mask-propagation
+/// boundaries: grouped convs freeze their neighborhoods, `AddConv`
+/// outputs stay dense (the distance kernel breaks the zero-activation
+/// argument), everything else prunes.
+pub fn mcunet_pruned(prim: Primitive, seed: u64, sparsity: f64) -> Model {
+    let m = mcunet(prim, seed);
+    let name = pruned_name(&m.name, sparsity);
+    crate::nn::prune_model(&m, sparsity, name)
+}
+
+/// Channel-pruned residual MCU-Net ([`mcunet_residual`] through
+/// [`crate::nn::prune_graph`]): the residual joins union their operand
+/// masks, so the whole trunk prunes as one class.
+pub fn mcunet_residual_pruned(prim: Primitive, seed: u64, sparsity: f64) -> Graph {
+    let g = mcunet_residual(prim, seed);
+    let name = pruned_name(&g.name, sparsity);
+    crate::nn::prune_graph(&g, sparsity, name)
+}
+
+/// The full model zoo as graphs: the linear variants (lowered to chain
+/// graphs), the residual graphs, and the pruned variants of both at
+/// every [`PRUNE_LEVELS`] sparsity — one canonical enumeration shared by
+/// the CLI model lookup, the golden-vector suite and the CI gates.
+pub fn zoo_graphs(seed: u64) -> Vec<Graph> {
+    let mut zoo: Vec<Graph> = Primitive::ALL
+        .iter()
+        .map(|&p| Graph::from_model(&mcunet(p, seed)))
+        .collect();
+    zoo.extend(Primitive::ALL.iter().map(|&p| mcunet_residual(p, seed)));
+    for &s in &PRUNE_LEVELS {
+        zoo.extend(
+            Primitive::ALL
+                .iter()
+                .map(|&p| Graph::from_model(&mcunet_pruned(p, seed, s))),
+        );
+    }
+    for &s in &PRUNE_LEVELS {
+        zoo.extend(Primitive::ALL.iter().map(|&p| mcunet_residual_pruned(p, seed, s)));
+    }
+    zoo
+}
+
 /// Fixed experiment input for a layer config (deterministic).
 pub fn experiment_input(p: &LayerParams, seed: u64) -> crate::nn::Tensor {
     let mut rng = Rng::new(seed ^ 0x1A2B_3C4D);
@@ -518,5 +575,79 @@ mod tests {
             let g = mcunet_residual(prim, 7);
             assert!(g.weight_bytes() < 256 * 1024, "{prim:?}: {}", g.weight_bytes());
         }
+    }
+
+    #[test]
+    fn pruned_zoo_builds_shrinks_and_keeps_simd_parity() {
+        for prim in Primitive::ALL {
+            let dense = mcunet(prim, 7);
+            for &s in &PRUNE_LEVELS {
+                let m = mcunet_pruned(prim, 7, s);
+                assert_eq!(m.name, pruned_name(&dense.name, s), "{prim:?}@{s}");
+                // grouped convs freeze their whole neighborhood, so the
+                // grouped variant legitimately prunes nothing; every
+                // other primitive must actually lose flash
+                if prim == Primitive::Grouped {
+                    assert_eq!(m.weight_bytes(), dense.weight_bytes(), "{prim:?}@{s}");
+                } else {
+                    assert!(
+                        m.weight_bytes() < dense.weight_bytes(),
+                        "{prim:?}@{s}: {} !< {}",
+                        m.weight_bytes(),
+                        dense.weight_bytes()
+                    );
+                }
+                let mut x = crate::nn::Tensor::zeros(m.input_shape, m.input_q);
+                let mut rng = Rng::new(3);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let a = m.forward(&x, false, &mut NoopMonitor);
+                let b = m.forward(&x, true, &mut NoopMonitor);
+                assert_eq!(a.shape, Shape::new(1, 1, 10), "{prim:?}@{s}: logits stay 10-way");
+                assert_eq!(a.data, b.data, "{prim:?}@{s} pruned simd parity");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_residual_zoo_builds_and_shrinks() {
+        for prim in Primitive::ALL {
+            let dense = mcunet_residual(prim, 7);
+            for &s in &PRUNE_LEVELS {
+                let g = mcunet_residual_pruned(prim, 7, s);
+                assert_eq!(g.name, pruned_name(&dense.name, s), "{prim:?}@{s}");
+                // the joins union the whole trunk into one mask class, so
+                // one frozen member freezes everything: the grouped body
+                // freezes both conv sides, and the add body's AddConv
+                // output is in the class — those two variants stay dense
+                if prim == Primitive::Grouped || prim == Primitive::Add {
+                    assert_eq!(g.weight_bytes(), dense.weight_bytes(), "{prim:?}@{s}");
+                } else {
+                    assert!(
+                        g.weight_bytes() < dense.weight_bytes(),
+                        "{prim:?}@{s}: residual trunk should prune as one class"
+                    );
+                }
+                let mut x = crate::nn::Tensor::zeros(g.input_shape, g.input_q);
+                let mut rng = Rng::new(3);
+                rng.fill_i8(&mut x.data, -64, 63);
+                let a = g.forward(&x, false, &mut NoopMonitor);
+                let b = g.forward(&x, true, &mut NoopMonitor);
+                assert_eq!(a.shape, Shape::new(1, 1, 10), "{prim:?}@{s}");
+                assert_eq!(a.data, b.data, "{prim:?}@{s} pruned residual simd parity");
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_graphs_enumerates_every_variant_once() {
+        let zoo = zoo_graphs(42);
+        // 5 linear + 5 residual, each dense plus 3 pruned levels
+        assert_eq!(zoo.len(), 10 * (1 + PRUNE_LEVELS.len()));
+        let mut names: Vec<&str> = zoo.iter().map(|g| g.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len(), "zoo names must be unique");
+        assert!(names.contains(&"mcunet-standard"));
+        assert!(names.contains(&"mcunet-res-shift-pruned75"));
     }
 }

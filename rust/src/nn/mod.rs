@@ -24,6 +24,7 @@ pub mod im2col;
 pub mod monitor;
 pub mod ops;
 pub mod plan;
+pub mod prune;
 pub mod shift;
 pub mod simd;
 pub mod tensor;
@@ -39,6 +40,9 @@ pub use graph::{Graph, Layer, LayerProfile, Model, Node, NodeOp, ResidualAdd, Va
 pub use monitor::{CountingMonitor, Monitor, NoopMonitor, OpCounts};
 pub use ops::{argmax, global_avgpool, maxpool2, relu, QuantDense};
 pub use plan::{ExecPlan, PlanPair};
+pub use prune::{
+    compact_graph, magnitude_masks, prune_graph, prune_model, zeroed_graph, PruneMasks,
+};
 pub use shift::{uniform_shifts, ShiftConv};
 pub use tensor::{Shape, Tensor};
 pub use vec::Backend;

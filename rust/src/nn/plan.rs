@@ -512,6 +512,28 @@ impl ExecPlan {
         Self::compile_graph(graph, &cands)
     }
 
+    /// The pruned-aware compile path: masked channels are compacted
+    /// *out* at plan-compile time ([`prune::compact_graph`]), then the
+    /// compacted graph compiles through the ordinary engine — dense
+    /// kernels over the kept channel set, no runtime branching, the
+    /// same zero-allocation arena discipline as any plan. Returns the
+    /// compacted graph alongside its plan (the graph is what workspaces
+    /// and references are built against). Works for the scalar default
+    /// schedule; tuned or vec schedules come from tuning the compacted
+    /// graph like any other.
+    ///
+    /// [`prune::compact_graph`]: crate::nn::prune::compact_graph
+    pub fn compile_graph_pruned_default(
+        graph: &Graph,
+        masks: &crate::nn::prune::PruneMasks,
+        simd: bool,
+    ) -> (Graph, ExecPlan) {
+        let compacted =
+            crate::nn::prune::compact_graph(graph, masks, format!("{}-pruned", graph.name));
+        let plan = Self::compile_graph_default(&compacted, simd);
+        (compacted, plan)
+    }
+
     /// Name of the model this plan was compiled from.
     pub fn model_name(&self) -> &str {
         &self.model_name

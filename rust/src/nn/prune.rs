@@ -1,0 +1,704 @@
+//! Channel-structured pruning: magnitude-based channel selection, mask
+//! propagation through the graph IR, and compile-time compaction.
+//!
+//! The paper's linear MACs↔energy relationship (§4) means any transform
+//! that removes multiply work removes energy in proportion; structured
+//! (whole-channel) pruning is the compression axis that keeps the dense
+//! kernels dense. The pipeline here has three stages:
+//!
+//! 1. **Selection** ([`magnitude_masks`]): per-value channel keep-masks
+//!    chosen by the L1 magnitude of the producing filters (the classic
+//!    magnitude criterion), at a caller-chosen sparsity.
+//! 2. **Propagation**: masks are constrained by the graph topology.
+//!    Channel-preserving ops (ReLU, pooling, BN, depthwise — one filter
+//!    per channel) carry their input mask through; a residual join
+//!    forces *one* shared mask across both operands and the output
+//!    (implemented as a union-find over tensor value ids); boundary ops
+//!    (standard conv, shift conv, dense) cut the chain so their input
+//!    and output masks are independent. The graph input, the logits
+//!    output, the output of [`AddConv`](crate::nn::AddConv) (a distance
+//!    kernel: zeroed weights do *not* produce zero activations) and both
+//!    sides of a general grouped conv (compaction would have to re-split
+//!    the groups) are frozen to the full channel set.
+//! 3. **Compaction** ([`compact_graph`]): masked channels are compiled
+//!    *out* — every layer is rebuilt over the kept channel set, so the
+//!    result is a plain (smaller) [`Graph`] that the existing engine
+//!    compiles and runs with dense kernels, no runtime branching and no
+//!    extra allocations. [`zeroed_graph`] builds the semantic reference:
+//!    the original topology with the masked channels' producing weights
+//!    and biases zeroed (and the consuming weight columns zeroed, which
+//!    keeps the distance kernel honest) — masked activations are then
+//!    exactly zero everywhere, so the compacted graph's logits are
+//!    bit-exact with the zeroed dense reference on every backend.
+//!
+//! The flash win is exact and closed-form: the compacted graph's
+//! [`Graph::weight_bytes`] *is* the post-compaction footprint the tuner
+//! prices in its flash objective (see `tuner::Objective`).
+
+use crate::nn::graph::{Graph, Layer, Model, NodeOp};
+use crate::nn::tensor::Shape;
+
+/// Per-value channel keep-masks for one graph: `keep[v]` holds the
+/// ascending kept channel indices of tensor value `v` (value 0 is the
+/// graph input, value `i + 1` is node `i`'s output). A full mask
+/// (`keep[v].len() == shape.c`) means the value is unpruned.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PruneMasks {
+    /// Kept channel indices per tensor value id, each sorted ascending.
+    pub keep: Vec<Vec<usize>>,
+}
+
+impl PruneMasks {
+    /// Kept channels of value `v`.
+    pub fn kept(&self, v: usize) -> &[usize] {
+        &self.keep[v]
+    }
+
+    /// Total channels removed across all values (a quick sparsity
+    /// telemetry figure; the authoritative flash delta is
+    /// [`Graph::weight_bytes`] before vs after [`compact_graph`]).
+    pub fn removed_channels(&self, graph: &Graph) -> usize {
+        let shapes = graph.value_shapes();
+        self.keep
+            .iter()
+            .zip(&shapes)
+            .map(|(k, s)| s.c - k.len())
+            .sum()
+    }
+}
+
+/// Union-find over tensor value ids: the mask-propagation classes.
+struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        Self { parent: (0..n).collect() }
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        let mut r = x;
+        while self.parent[r] != r {
+            r = self.parent[r];
+        }
+        let mut c = x;
+        while self.parent[c] != r {
+            let next = self.parent[c];
+            self.parent[c] = r;
+            c = next;
+        }
+        r
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra] = rb;
+        }
+    }
+}
+
+/// A conv that is depthwise-shaped (`groups == in == out`): one filter
+/// per channel, so its mask propagates like a depthwise layer's.
+fn conv_is_depthwise_shaped(c: &crate::nn::QuantConv) -> bool {
+    c.groups == c.in_channels && c.groups == c.out_channels
+}
+
+/// How many channels survive at `sparsity` (at least one always does).
+fn keep_count(channels: usize, sparsity: f64) -> usize {
+    let removed = (channels as f64 * sparsity).floor() as usize;
+    channels.saturating_sub(removed).clamp(1, channels)
+}
+
+/// Top-`k` channels by score, ties to the lower index, returned sorted.
+fn select_top(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut kept: Vec<usize> = idx.into_iter().take(k).collect();
+    kept.sort_unstable();
+    kept
+}
+
+/// Per-output-channel L1 magnitude of a node's producing filters, or
+/// `None` for ops without per-channel weights (glue, residual joins).
+fn producer_l1(op: &NodeOp) -> Option<Vec<f64>> {
+    let l1_rows = |weights: &[i8], stride: usize| -> Vec<f64> {
+        weights
+            .chunks(stride)
+            .map(|row| row.iter().map(|&x| (x as i32).abs() as f64).sum())
+            .collect()
+    };
+    match op {
+        NodeOp::Layer(Layer::Conv(c)) => {
+            Some(l1_rows(&c.weights, c.kernel * c.kernel * c.ch_per_group()))
+        }
+        NodeOp::Layer(Layer::Depthwise(d)) => Some(l1_rows(&d.weights, d.kernel * d.kernel)),
+        NodeOp::Layer(Layer::Shift(s)) => Some(l1_rows(&s.weights, s.in_channels)),
+        _ => None,
+    }
+}
+
+/// Build magnitude-based channel masks for `graph` at `sparsity`
+/// (fraction of channels removed per prunable mask class, in `[0, 1)`).
+///
+/// Values constrained to share a mask (see the module docs) form one
+/// class; the class score is the sum of every member producer's
+/// per-channel L1, and the top `keep_count` channels survive. Frozen
+/// classes (graph input/output, `AddConv` outputs, grouped-conv
+/// neighborhoods, classes with no weighted producer) keep every channel.
+pub fn magnitude_masks(graph: &Graph, sparsity: f64) -> PruneMasks {
+    assert!(
+        (0.0..1.0).contains(&sparsity),
+        "sparsity must be in [0, 1), got {sparsity}"
+    );
+    let shapes = graph.value_shapes();
+    let n = shapes.len();
+    let mut uf = UnionFind::new(n);
+    let mut frozen = vec![false; n];
+    frozen[0] = true; // the graph input is the caller's contract
+    frozen[n - 1] = true; // the logits stay comparable to the dense model
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let out = i + 1;
+        match &node.op {
+            NodeOp::Add(_) => {
+                // a residual join adds element-wise: both operands and
+                // the output must agree on the surviving channels
+                uf.union(node.inputs[0], out);
+                uf.union(node.inputs[1], out);
+            }
+            NodeOp::Layer(l) => {
+                let inp = node.inputs[0];
+                match l {
+                    Layer::Relu
+                    | Layer::MaxPool2
+                    | Layer::GlobalAvgPool(_)
+                    | Layer::Bn(_)
+                    | Layer::Depthwise(_) => uf.union(inp, out),
+                    Layer::Conv(c) if c.groups == 1 => {}
+                    Layer::Conv(c) if conv_is_depthwise_shaped(c) => uf.union(inp, out),
+                    Layer::Conv(_) => {
+                        // general grouped conv: compaction would need to
+                        // re-split the groups; freeze both sides
+                        frozen[inp] = true;
+                        frozen[out] = true;
+                    }
+                    Layer::Shift(_) => {}
+                    // |x - 0| != 0: a zeroed AddConv filter still emits
+                    // nonzero activations, so its output is unprunable
+                    Layer::AddConv(_) => frozen[out] = true,
+                    Layer::Dense(_) => frozen[out] = true,
+                }
+            }
+        }
+    }
+    let mut class_frozen = vec![false; n];
+    for v in 0..n {
+        if frozen[v] {
+            let r = uf.find(v);
+            class_frozen[r] = true;
+        }
+    }
+    // accumulate per-class scores from every weighted producer
+    let mut scores: Vec<Option<Vec<f64>>> = vec![None; n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let out = i + 1;
+        let r = uf.find(out);
+        if class_frozen[r] {
+            continue;
+        }
+        if let Some(cs) = producer_l1(&node.op) {
+            let slot = scores[r].get_or_insert_with(|| vec![0.0; shapes[out].c]);
+            debug_assert_eq!(slot.len(), cs.len(), "mask class mixes channel counts");
+            for (s, c) in slot.iter_mut().zip(&cs) {
+                *s += c;
+            }
+        }
+    }
+    let mut keep = Vec::with_capacity(n);
+    for v in 0..n {
+        let c = shapes[v].c;
+        let r = uf.find(v);
+        let kv = match (class_frozen[r], &scores[r]) {
+            (true, _) | (false, None) => (0..c).collect(),
+            (false, Some(s)) => {
+                debug_assert_eq!(s.len(), c, "mask class mixes channel counts");
+                select_top(s, keep_count(c, sparsity))
+            }
+        };
+        keep.push(kv);
+    }
+    PruneMasks { keep }
+}
+
+/// Select `rows` of an `[n][stride]`-shaped flat weight buffer.
+fn take_rows(weights: &[i8], stride: usize, rows: &[usize]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(rows.len() * stride);
+    for &r in rows {
+        out.extend_from_slice(&weights[r * stride..(r + 1) * stride]);
+    }
+    out
+}
+
+/// Select `cols` inside every `row_len`-sized row of a flat buffer.
+fn take_cols(weights: &[i8], row_len: usize, cols: &[usize]) -> Vec<i8> {
+    let rows = weights.len() / row_len;
+    let mut out = Vec::with_capacity(rows * cols.len());
+    for r in 0..rows {
+        let row = &weights[r * row_len..(r + 1) * row_len];
+        for &c in cols {
+            out.push(row[c]);
+        }
+    }
+    out
+}
+
+fn take<T: Copy>(xs: &[T], idx: &[usize]) -> Vec<T> {
+    idx.iter().map(|&i| xs[i]).collect()
+}
+
+fn is_full(keep: &[usize], c: usize) -> bool {
+    keep.len() == c
+}
+
+/// Rebuild one layer over the kept channel sets of its input/output.
+fn compact_layer(l: &Layer, in_shape: &Shape, keep_in: &[usize], keep_out: &[usize]) -> Layer {
+    match l {
+        Layer::Conv(c) if c.groups == 1 => {
+            // weights [Cy][k][k][Cx]: slice output rows then input cols
+            let taps = c.kernel * c.kernel;
+            let rows = take_rows(&c.weights, taps * c.in_channels, keep_out);
+            let w = take_cols(&rows, c.in_channels, keep_in);
+            Layer::Conv(crate::nn::QuantConv {
+                kernel: c.kernel,
+                groups: 1,
+                in_channels: keep_in.len(),
+                out_channels: keep_out.len(),
+                pad: c.pad,
+                weights: w,
+                bias: take(&c.bias, keep_out),
+                q_in: c.q_in,
+                q_w: c.q_w,
+                q_out: c.q_out,
+            })
+        }
+        Layer::Conv(c) if conv_is_depthwise_shaped(c) => {
+            debug_assert_eq!(keep_in, keep_out, "depthwise-shaped conv masks must agree");
+            let taps = c.kernel * c.kernel; // ch_per_group == 1
+            Layer::Conv(crate::nn::QuantConv {
+                kernel: c.kernel,
+                groups: keep_out.len(),
+                in_channels: keep_out.len(),
+                out_channels: keep_out.len(),
+                pad: c.pad,
+                weights: take_rows(&c.weights, taps, keep_out),
+                bias: take(&c.bias, keep_out),
+                q_in: c.q_in,
+                q_w: c.q_w,
+                q_out: c.q_out,
+            })
+        }
+        Layer::Conv(c) => {
+            debug_assert!(
+                is_full(keep_in, c.in_channels) && is_full(keep_out, c.out_channels),
+                "general grouped convs are frozen by mask propagation"
+            );
+            l.clone()
+        }
+        Layer::Depthwise(d) => {
+            debug_assert_eq!(keep_in, keep_out, "depthwise masks must agree");
+            Layer::Depthwise(crate::nn::QuantDepthwise {
+                kernel: d.kernel,
+                channels: keep_out.len(),
+                pad: d.pad,
+                weights: take_rows(&d.weights, d.kernel * d.kernel, keep_out),
+                bias: take(&d.bias, keep_out),
+                q_in: d.q_in,
+                q_w: d.q_w,
+                q_out: d.q_out,
+            })
+        }
+        Layer::Shift(s) => {
+            let rows = take_rows(&s.weights, s.in_channels, keep_out);
+            Layer::Shift(crate::nn::ShiftConv {
+                in_channels: keep_in.len(),
+                out_channels: keep_out.len(),
+                shifts: take(&s.shifts, keep_in),
+                weights: take_cols(&rows, s.in_channels, keep_in),
+                bias: take(&s.bias, keep_out),
+                q_in: s.q_in,
+                q_w: s.q_w,
+                q_out: s.q_out,
+            })
+        }
+        Layer::AddConv(a) => {
+            debug_assert!(is_full(keep_out, a.out_channels), "AddConv outputs are frozen");
+            let taps = a.kernel * a.kernel;
+            let rows = take_rows(&a.weights, taps * a.in_channels, keep_out);
+            Layer::AddConv(crate::nn::AddConv {
+                kernel: a.kernel,
+                in_channels: keep_in.len(),
+                out_channels: keep_out.len(),
+                pad: a.pad,
+                weights: take_cols(&rows, a.in_channels, keep_in),
+                bias: take(&a.bias, keep_out),
+                q_in: a.q_in,
+                q_w: a.q_w,
+                q_out: a.q_out,
+            })
+        }
+        Layer::Bn(b) => {
+            debug_assert_eq!(keep_in, keep_out, "BN masks must agree");
+            Layer::Bn(crate::nn::BnLayer {
+                channels: keep_out.len(),
+                m: take(&b.m, keep_out),
+                b: take(&b.b, keep_out),
+                frac_m: b.frac_m,
+                q_in: b.q_in,
+                q_out: b.q_out,
+            })
+        }
+        Layer::Dense(d) => {
+            debug_assert!(is_full(keep_out, d.out_features), "logits are never pruned");
+            // HWC flattening: feature (y, x, ch) lives at (y*w + x)*c + ch
+            let spatial = in_shape.h * in_shape.w;
+            let mut cols = Vec::with_capacity(spatial * keep_in.len());
+            for s in 0..spatial {
+                for &ci in keep_in {
+                    cols.push(s * in_shape.c + ci);
+                }
+            }
+            Layer::Dense(crate::nn::QuantDense {
+                in_features: cols.len(),
+                out_features: d.out_features,
+                weights: take_cols(&d.weights, d.in_features, &cols),
+                bias: d.bias.clone(),
+                q_in: d.q_in,
+                q_w: d.q_w,
+                q_out: d.q_out,
+            })
+        }
+        Layer::Relu | Layer::MaxPool2 | Layer::GlobalAvgPool(_) => l.clone(),
+    }
+}
+
+/// Compile the masked channels *out*: rebuild `graph` over the kept
+/// channel sets. The result is a plain smaller [`Graph`] — same
+/// topology, dense kernels over the compacted dimensions — which the
+/// existing [`ExecPlan`](crate::nn::ExecPlan) engine compiles, tunes,
+/// plans and serves with no pruning-specific runtime machinery (and
+/// therefore no runtime branching and no extra allocations).
+pub fn compact_graph(graph: &Graph, masks: &PruneMasks, name: impl Into<String>) -> Graph {
+    let shapes = graph.value_shapes();
+    assert_eq!(masks.keep.len(), shapes.len(), "mask/value count mismatch");
+    let mut g = Graph::new(name, graph.input_shape, graph.input_q);
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let out = i + 1;
+        // builder value ids reproduce the source ids (input 0, node i →
+        // i + 1), so source input ids can be reused verbatim
+        let v = match &node.op {
+            NodeOp::Add(a) => g.add(node.inputs[0], node.inputs[1], a.q_out),
+            NodeOp::Layer(l) => {
+                let inp = node.inputs[0];
+                let nl = compact_layer(l, &shapes[inp], &masks.keep[inp], &masks.keep[out]);
+                g.layer(inp, nl)
+            }
+        };
+        debug_assert_eq!(v, out);
+    }
+    debug_assert!(
+        g.value_shapes()
+            .iter()
+            .zip(&masks.keep)
+            .all(|(s, k)| s.c == k.len()),
+        "compacted channel counts must equal the kept sets"
+    );
+    g
+}
+
+/// Zero one output row (filter + bias) of a rows×stride weight buffer.
+fn zero_row(weights: &mut [i8], bias: &mut [i32], stride: usize, row: usize) {
+    weights[row * stride..(row + 1) * stride].fill(0);
+    bias[row] = 0;
+}
+
+/// Zero one input column across every row of a flat weight buffer.
+fn zero_col(weights: &mut [i8], row_len: usize, col: usize) {
+    let rows = weights.len() / row_len;
+    for r in 0..rows {
+        weights[r * row_len + col] = 0;
+    }
+}
+
+/// Channels of `0..c` *not* in the (sorted) keep set.
+fn dropped(keep: &[usize], c: usize) -> Vec<usize> {
+    let mut in_keep = vec![false; c];
+    for &k in keep {
+        in_keep[k] = true;
+    }
+    (0..c).filter(|&i| !in_keep[i]).collect()
+}
+
+/// The dense semantic reference for a pruned graph: the original
+/// topology with every masked channel's producing weights and bias
+/// zeroed, plus the consuming weight columns zeroed (a no-op for
+/// multiply kernels once the activation is zero, but required to keep
+/// the `AddConv` distance kernel exact). Masked activations are then
+/// *exactly* zero through every int8 op (requantize/saturate of a zero
+/// accumulator is zero), so [`compact_graph`]'s logits are bit-exact
+/// with this reference on every backend and candidate.
+pub fn zeroed_graph(graph: &Graph, masks: &PruneMasks) -> Graph {
+    let shapes = graph.value_shapes();
+    let mut g = graph.clone();
+    for (i, node) in g.nodes.iter_mut().enumerate() {
+        let out = i + 1;
+        let inp = node.inputs[0];
+        let gone_out = dropped(&masks.keep[out], shapes[out].c);
+        let gone_in = dropped(&masks.keep[inp], shapes[inp].c);
+        match &mut node.op {
+            NodeOp::Add(_) => {}
+            NodeOp::Layer(l) => match l {
+                Layer::Conv(c) => {
+                    let taps = c.kernel * c.kernel;
+                    let row = taps * c.ch_per_group();
+                    for &j in &gone_out {
+                        zero_row(&mut c.weights, &mut c.bias, row, j);
+                    }
+                    if c.groups == 1 {
+                        for &ci in &gone_in {
+                            zero_col(&mut c.weights, c.in_channels, ci);
+                        }
+                    }
+                }
+                Layer::Depthwise(d) => {
+                    for &j in &gone_out {
+                        zero_row(&mut d.weights, &mut d.bias, d.kernel * d.kernel, j);
+                    }
+                }
+                Layer::Shift(s) => {
+                    for &j in &gone_out {
+                        zero_row(&mut s.weights, &mut s.bias, s.in_channels, j);
+                    }
+                    for &ci in &gone_in {
+                        zero_col(&mut s.weights, s.in_channels, ci);
+                    }
+                }
+                Layer::AddConv(a) => {
+                    debug_assert!(gone_out.is_empty(), "AddConv outputs are frozen");
+                    for &ci in &gone_in {
+                        zero_col(&mut a.weights, a.in_channels, ci);
+                    }
+                }
+                Layer::Bn(b) => {
+                    for &j in &gone_out {
+                        b.m[j] = 0;
+                        b.b[j] = 0;
+                    }
+                }
+                Layer::Dense(d) => {
+                    debug_assert!(gone_out.is_empty(), "logits are never pruned");
+                    let spatial = shapes[inp].h * shapes[inp].w;
+                    for s in 0..spatial {
+                        for &ci in &gone_in {
+                            zero_col(&mut d.weights, d.in_features, s * shapes[inp].c + ci);
+                        }
+                    }
+                }
+                Layer::Relu | Layer::MaxPool2 | Layer::GlobalAvgPool(_) => {}
+            },
+        }
+    }
+    g
+}
+
+/// Magnitude-prune and compact a graph in one call.
+pub fn prune_graph(graph: &Graph, sparsity: f64, name: impl Into<String>) -> Graph {
+    let masks = magnitude_masks(graph, sparsity);
+    compact_graph(graph, &masks, name)
+}
+
+/// Magnitude-prune and compact a linear [`Model`]: the chain graph is
+/// pruned and lowered back, so the result serves through every
+/// `Model`-typed coordinator entry point unchanged.
+pub fn prune_model(model: &Model, sparsity: f64, name: impl Into<String>) -> Model {
+    let g = Graph::from_model(model);
+    let masks = magnitude_masks(&g, sparsity);
+    let cg = compact_graph(&g, &masks, name);
+    let layers = cg
+        .nodes
+        .into_iter()
+        .map(|n| match n.op {
+            NodeOp::Layer(l) => l,
+            NodeOp::Add(_) => unreachable!("chain graphs hold no residual joins"),
+        })
+        .collect();
+    Model {
+        name: cg.name,
+        input_shape: cg.input_shape,
+        input_q: cg.input_q,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Primitive;
+    use crate::models::{mcunet, mcunet_residual};
+    use crate::nn::{NoopMonitor, Tensor};
+    use crate::util::prng::Rng;
+
+    fn zoo() -> Vec<Graph> {
+        Primitive::ALL
+            .iter()
+            .map(|&p| Graph::from_model(&mcunet(p, 42)))
+            .chain(Primitive::ALL.iter().map(|&p| mcunet_residual(p, 42)))
+            .collect()
+    }
+
+    #[test]
+    fn masks_respect_the_propagation_rules() {
+        for graph in zoo() {
+            let masks = magnitude_masks(&graph, 0.5);
+            let shapes = graph.value_shapes();
+            // input and logits keep every channel
+            assert_eq!(masks.keep[0].len(), shapes[0].c, "{}", graph.name);
+            let last = shapes.len() - 1;
+            assert_eq!(masks.keep[last].len(), shapes[last].c, "{}", graph.name);
+            for (i, node) in graph.nodes.iter().enumerate() {
+                let out = i + 1;
+                match &node.op {
+                    NodeOp::Add(_) => {
+                        // one shared mask across the join
+                        assert_eq!(masks.keep[node.inputs[0]], masks.keep[out], "{}", graph.name);
+                        assert_eq!(masks.keep[node.inputs[1]], masks.keep[out], "{}", graph.name);
+                    }
+                    NodeOp::Layer(l) => match l {
+                        Layer::Relu
+                        | Layer::MaxPool2
+                        | Layer::GlobalAvgPool(_)
+                        | Layer::Bn(_)
+                        | Layer::Depthwise(_) => {
+                            assert_eq!(
+                                masks.keep[node.inputs[0]], masks.keep[out],
+                                "{}: channel-preserving op changed its mask",
+                                graph.name
+                            );
+                        }
+                        Layer::AddConv(a) => {
+                            assert_eq!(masks.keep[out].len(), a.out_channels, "{}", graph.name);
+                        }
+                        _ => {}
+                    },
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masks_hit_the_requested_sparsity_on_prunable_classes() {
+        let graph = Graph::from_model(&mcunet(Primitive::DepthwiseSeparable, 42));
+        let masks = magnitude_masks(&graph, 0.5);
+        let shapes = graph.value_shapes();
+        let pruned_values = (0..shapes.len())
+            .filter(|&v| masks.keep[v].len() < shapes[v].c)
+            .count();
+        assert!(pruned_values > 0, "nothing was pruned at 50% sparsity");
+        for v in 0..shapes.len() {
+            let (kept, c) = (masks.keep[v].len(), shapes[v].c);
+            assert!(
+                kept == c || kept == keep_count(c, 0.5),
+                "value {v}: kept {kept} of {c} matches neither full nor 50%"
+            );
+            // masks are sorted, unique, in range
+            assert!(masks.keep[v].windows(2).all(|w| w[0] < w[1]));
+            assert!(masks.keep[v].iter().all(|&ch| ch < c));
+        }
+    }
+
+    #[test]
+    fn compacted_graphs_shrink_weights_and_shapes() {
+        for graph in zoo() {
+            let pruned = prune_graph(&graph, 0.5, format!("{}-p50", graph.name));
+            assert!(
+                pruned.weight_bytes() < graph.weight_bytes(),
+                "{}: {} B !< {} B",
+                graph.name,
+                pruned.weight_bytes(),
+                graph.weight_bytes()
+            );
+            // same node count, same input/output shapes
+            assert_eq!(pruned.nodes.len(), graph.nodes.len());
+            assert_eq!(pruned.input_shape, graph.input_shape);
+            assert_eq!(
+                pruned.value_shapes().last(),
+                graph.value_shapes().last(),
+                "{}: logits shape drifted",
+                graph.name
+            );
+        }
+    }
+
+    #[test]
+    fn compacted_is_bit_exact_with_the_zeroed_dense_reference() {
+        // the tentpole contract, across the whole zoo and 3 sparsity
+        // levels, on both reference paths (scalar + SIMD)
+        let mut rng = Rng::new(0x9121);
+        for graph in zoo() {
+            for sparsity in [0.25, 0.5, 0.75] {
+                let masks = magnitude_masks(&graph, sparsity);
+                let compact = compact_graph(&graph, &masks, "compact");
+                let zeroed = zeroed_graph(&graph, &masks);
+                let mut x = Tensor::zeros(graph.input_shape, graph.input_q);
+                rng.fill_i8(&mut x.data, -96, 95);
+                for simd in [false, true] {
+                    let want = zeroed.forward(&x, simd, &mut NoopMonitor);
+                    let got = compact.forward(&x, simd, &mut NoopMonitor);
+                    assert_eq!(
+                        want.data, got.data,
+                        "{} @ {sparsity} simd={simd}: compacted logits drifted",
+                        graph.name
+                    );
+                    assert_eq!(want.q.frac_bits, got.q.frac_bits);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sparsity_is_the_identity() {
+        let graph = mcunet_residual(Primitive::Standard, 42);
+        let masks = magnitude_masks(&graph, 0.0);
+        let shapes = graph.value_shapes();
+        for (v, k) in masks.keep.iter().enumerate() {
+            assert_eq!(k.len(), shapes[v].c);
+        }
+        assert_eq!(masks.removed_channels(&graph), 0);
+        let compact = compact_graph(&graph, &masks, graph.name.clone());
+        assert_eq!(compact.weight_bytes(), graph.weight_bytes());
+    }
+
+    #[test]
+    fn pruned_models_lower_back_to_chains() {
+        let m = mcunet(Primitive::Standard, 42);
+        let p = prune_model(&m, 0.5, "mcunet-standard-p50");
+        assert_eq!(p.name, "mcunet-standard-p50");
+        assert_eq!(p.layers.len(), m.layers.len());
+        assert!(p.weight_bytes() < m.weight_bytes());
+        // chain round-trip agrees with the graph pipeline
+        let mut rng = Rng::new(0x77);
+        let mut x = Tensor::zeros(m.input_shape, m.input_q);
+        rng.fill_i8(&mut x.data, -96, 95);
+        let g = Graph::from_model(&m);
+        let masks = magnitude_masks(&g, 0.5);
+        let zeroed = zeroed_graph(&g, &masks);
+        let want = zeroed.forward(&x, true, &mut NoopMonitor);
+        let got = p.forward(&x, true, &mut NoopMonitor);
+        assert_eq!(want.data, got.data);
+    }
+}

@@ -21,7 +21,11 @@ use super::BackendSel;
 use crate::nn::Backend;
 
 /// Cache file format version (bump on incompatible schema changes —
-/// mismatching files are discarded wholesale). v4: files gained a
+/// mismatching files are discarded wholesale). v5: entries and frontier
+/// points gained a required `flash_bytes` field (deployed weight bytes
+/// of the winning candidate, post-compaction for pruned graphs) feeding
+/// the flash term of the tuner objective — v4 files carry no flash
+/// column and are discarded. v4: files gained a
 /// `frontiers` map (whole-graph Pareto frontiers keyed by graph
 /// signature × MCU × objective × backend policy) and per-entry
 /// `ram_bytes` semantics stayed node-local while schedule-level RAM
@@ -35,7 +39,7 @@ use crate::nn::Backend;
 /// the node's input topology (`~in<d1[,d2]>` producer-distance suffix)
 /// so graph rewiring invalidates by construction; v1 files hold
 /// orphaned keys and are discarded.
-pub const CACHE_VERSION: i64 = 4;
+pub const CACHE_VERSION: i64 = 5;
 
 /// A cached per-layer decision: the winning candidate plus its simulated
 /// measurement (all inputs to the objective, so replay needs no simulator).
@@ -48,6 +52,9 @@ pub struct CacheEntry {
     pub mem_accesses: u64,
     pub effective_macs: u64,
     pub ram_bytes: usize,
+    /// Deployed weight bytes of the winning kernel (flash footprint,
+    /// post-compaction for pruned graphs).
+    pub flash_bytes: usize,
 }
 
 /// Fingerprint of the simulated MCU configuration a measurement is valid
@@ -189,7 +196,8 @@ impl TuningCache {
                     .field("energy_mj", e.energy_mj)
                     .field("mem_accesses", e.mem_accesses)
                     .field("effective_macs", e.effective_macs)
-                    .field("ram_bytes", e.ram_bytes),
+                    .field("ram_bytes", e.ram_bytes)
+                    .field("flash_bytes", e.flash_bytes),
             ));
         }
         let frontiers: Vec<(String, Json)> = self
@@ -276,6 +284,7 @@ fn parse_entry_map(entries: &Json) -> Option<BTreeMap<String, CacheEntry>> {
                 mem_accesses: v.get("mem_accesses")?.as_i64()? as u64,
                 effective_macs: v.get("effective_macs")?.as_i64()? as u64,
                 ram_bytes: v.get("ram_bytes")?.as_i64()? as usize,
+                flash_bytes: v.get("flash_bytes")?.as_i64()? as usize,
             },
         );
     }
@@ -300,6 +309,7 @@ mod tests {
             mem_accesses: 1234,
             effective_macs: 5678,
             ram_bytes: 4096,
+            flash_bytes: 2048,
         }
     }
 
@@ -428,6 +438,19 @@ mod tests {
     }
 
     #[test]
+    fn pre_flash_v4_files_are_discarded_wholesale() {
+        // v4 entries carry no flash_bytes column: both the version gate
+        // and the required-field parse reject them, so a stale cache can
+        // never replay into the flash-aware objective
+        let v4 = r#"{"version":4,"entries":{"conv[b]@8x8x8|84.000MHz-Os|latency|scalar":{"kernel":"as-is","lowering":"direct","backend":"scalar","patches":0,"filters":0,"cycles":1.0,"latency_s":0.1,"energy_mj":0.2,"mem_accesses":3,"effective_macs":4,"ram_bytes":5}}}"#;
+        assert!(parse_entries(&Json::parse(v4).unwrap()).is_none());
+        // and even a doctored version number cannot smuggle a
+        // flash-less entry past the parser
+        let doctored = v4.replace("\"version\":4", "\"version\":5");
+        assert!(parse_entries(&Json::parse(&doctored).unwrap()).is_none());
+    }
+
+    #[test]
     fn frontiers_roundtrip_and_version_gate_discards_old_files() {
         use crate::tuner::pareto::{Frontier, FrontierPoint};
         let dir = std::env::temp_dir().join("convbench-cache-test");
@@ -444,6 +467,7 @@ mod tests {
                 peak_ram_bytes: 4096,
                 latency_s: 0.01,
                 energy_mj: 0.3,
+                flash_bytes: 9216,
                 candidates: vec![Candidate {
                     kernel: KernelImpl::AsIs,
                     lowering: Lowering::Im2col { patches: 2, filters: 2 },

@@ -120,37 +120,52 @@ pub enum Objective {
     Energy,
     /// Peak working SRAM (activations + schedule scratch).
     PeakRam,
-    /// Weighted sum of the three (latency in ms, energy in mJ, RAM in
-    /// KiB, so the default weights are comparable in magnitude).
-    Weighted { latency: f64, energy: f64, ram: f64 },
+    /// Flash footprint: deployed weight bytes of the chosen kernels
+    /// (post-compaction for pruned graphs; kernel substitutions that
+    /// materialize extra tables — e.g. pointwise-as-shift — pay for
+    /// them here).
+    Flash,
+    /// Weighted sum of the four (latency in ms, energy in mJ, RAM in
+    /// KiB, flash in KiB, so the default weights are comparable in
+    /// magnitude).
+    Weighted { latency: f64, energy: f64, ram: f64, flash: f64 },
 }
 
 impl Objective {
-    /// Parse a CLI spelling: `latency`, `energy`, `ram`, or
-    /// `weighted[:L,E,R]` (e.g. `weighted:1,0.5,0.1`).
+    /// Parse a CLI spelling: `latency`, `energy`, `ram`, `flash`, or
+    /// `weighted[:L,E,R[,F]]` (e.g. `weighted:1,0.5,0.1,0.05`; the
+    /// three-weight spelling keeps its pre-flash meaning, F = 0).
     pub fn parse(s: &str) -> Result<Objective, String> {
         match s {
             "latency" => Ok(Objective::Latency),
             "energy" => Ok(Objective::Energy),
             "ram" => Ok(Objective::PeakRam),
-            "weighted" => Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 }),
+            "flash" => Ok(Objective::Flash),
+            "weighted" => {
+                Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1, flash: 0.0 })
+            }
             other => {
                 if let Some(spec) = other.strip_prefix("weighted:") {
                     let parts: Vec<&str> = spec.split(',').collect();
-                    if parts.len() != 3 {
+                    if parts.len() != 3 && parts.len() != 4 {
                         return Err(format!(
-                            "weighted objective needs 3 comma-separated weights, got {other:?}"
+                            "weighted objective needs 3 or 4 comma-separated weights, got {other:?}"
                         ));
                     }
                     let w: Result<Vec<f64>, _> =
                         parts.iter().map(|p| p.trim().parse::<f64>()).collect();
                     match w {
-                        Ok(w) => Ok(Objective::Weighted { latency: w[0], energy: w[1], ram: w[2] }),
+                        Ok(w) => Ok(Objective::Weighted {
+                            latency: w[0],
+                            energy: w[1],
+                            ram: w[2],
+                            flash: w.get(3).copied().unwrap_or(0.0),
+                        }),
                         Err(e) => Err(format!("bad weight in {other:?}: {e}")),
                     }
                 } else {
                     Err(format!(
-                        "unknown objective {other:?} (latency|energy|ram|weighted[:L,E,R])"
+                        "unknown objective {other:?} (latency|energy|ram|flash|weighted[:L,E,R[,F]])"
                     ))
                 }
             }
@@ -163,20 +178,25 @@ impl Objective {
             Objective::Latency => "latency".to_string(),
             Objective::Energy => "energy".to_string(),
             Objective::PeakRam => "ram".to_string(),
-            Objective::Weighted { latency, energy, ram } => {
-                format!("weighted:{latency},{energy},{ram}")
+            Objective::Flash => "flash".to_string(),
+            Objective::Weighted { latency, energy, ram, flash } => {
+                format!("weighted:{latency},{energy},{ram},{flash}")
             }
         }
     }
 
     /// The scalar the search minimizes.
-    pub fn score(&self, latency_s: f64, energy_mj: f64, ram_bytes: usize) -> f64 {
+    pub fn score(&self, latency_s: f64, energy_mj: f64, ram_bytes: usize, flash_bytes: usize) -> f64 {
         match self {
             Objective::Latency => latency_s,
             Objective::Energy => energy_mj,
             Objective::PeakRam => ram_bytes as f64,
-            Objective::Weighted { latency, energy, ram } => {
-                latency * latency_s * 1e3 + energy * energy_mj + ram * ram_bytes as f64 / 1024.0
+            Objective::Flash => flash_bytes as f64,
+            Objective::Weighted { latency, energy, ram, flash } => {
+                latency * latency_s * 1e3
+                    + energy * energy_mj
+                    + ram * ram_bytes as f64 / 1024.0
+                    + flash * flash_bytes as f64 / 1024.0
             }
         }
     }
@@ -200,16 +220,23 @@ mod tests {
         assert_eq!(Objective::parse("latency"), Ok(Objective::Latency));
         assert_eq!(Objective::parse("energy"), Ok(Objective::Energy));
         assert_eq!(Objective::parse("ram"), Ok(Objective::PeakRam));
+        assert_eq!(Objective::parse("flash"), Ok(Objective::Flash));
         assert_eq!(
             Objective::parse("weighted"),
-            Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 })
+            Ok(Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1, flash: 0.0 })
         );
+        // the pre-flash three-weight spelling keeps its meaning (F = 0)
         assert_eq!(
             Objective::parse("weighted:2,0.5,0"),
-            Ok(Objective::Weighted { latency: 2.0, energy: 0.5, ram: 0.0 })
+            Ok(Objective::Weighted { latency: 2.0, energy: 0.5, ram: 0.0, flash: 0.0 })
+        );
+        assert_eq!(
+            Objective::parse("weighted:1,0,0,0.25"),
+            Ok(Objective::Weighted { latency: 1.0, energy: 0.0, ram: 0.0, flash: 0.25 })
         );
         assert!(Objective::parse("speed").is_err());
         assert!(Objective::parse("weighted:1,2").is_err());
+        assert!(Objective::parse("weighted:1,2,3,4,5").is_err());
         assert!(Objective::parse("weighted:a,b,c").is_err());
     }
 
@@ -219,8 +246,10 @@ mod tests {
             Objective::Latency,
             Objective::Energy,
             Objective::PeakRam,
-            Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1 },
-            Objective::Weighted { latency: 2.0, energy: 1.0, ram: 0.1 },
+            Objective::Flash,
+            Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1, flash: 0.0 },
+            Objective::Weighted { latency: 2.0, energy: 1.0, ram: 0.1, flash: 0.0 },
+            Objective::Weighted { latency: 1.0, energy: 1.0, ram: 0.1, flash: 0.05 },
         ]
         .iter()
         .map(|o| o.name())
@@ -234,14 +263,22 @@ mod tests {
 
     #[test]
     fn scores_select_the_right_metric() {
-        // candidate A: fast but RAM-hungry; candidate B: slow but small
-        let a = (0.001f64, 0.05f64, 64 * 1024usize);
-        let b = (0.010f64, 0.40f64, 4 * 1024usize);
-        assert!(Objective::Latency.score(a.0, a.1, a.2) < Objective::Latency.score(b.0, b.1, b.2));
-        assert!(Objective::Energy.score(a.0, a.1, a.2) < Objective::Energy.score(b.0, b.1, b.2));
-        assert!(Objective::PeakRam.score(a.0, a.1, a.2) > Objective::PeakRam.score(b.0, b.1, b.2));
+        // candidate A: fast but RAM- and flash-hungry; B: slow but small
+        let a = (0.001f64, 0.05f64, 64 * 1024usize, 48 * 1024usize);
+        let b = (0.010f64, 0.40f64, 4 * 1024usize, 6 * 1024usize);
+        let lat = Objective::Latency;
+        let en = Objective::Energy;
+        let ram = Objective::PeakRam;
+        let fl = Objective::Flash;
+        assert!(lat.score(a.0, a.1, a.2, a.3) < lat.score(b.0, b.1, b.2, b.3));
+        assert!(en.score(a.0, a.1, a.2, a.3) < en.score(b.0, b.1, b.2, b.3));
+        assert!(ram.score(a.0, a.1, a.2, a.3) > ram.score(b.0, b.1, b.2, b.3));
+        assert!(fl.score(a.0, a.1, a.2, a.3) > fl.score(b.0, b.1, b.2, b.3));
         // a RAM-dominated weighting flips the preference
-        let w = Objective::Weighted { latency: 0.0, energy: 0.0, ram: 1.0 };
-        assert!(w.score(a.0, a.1, a.2) > w.score(b.0, b.1, b.2));
+        let w = Objective::Weighted { latency: 0.0, energy: 0.0, ram: 1.0, flash: 0.0 };
+        assert!(w.score(a.0, a.1, a.2, a.3) > w.score(b.0, b.1, b.2, b.3));
+        // and so does a flash-dominated one
+        let f = Objective::Weighted { latency: 1.0, energy: 0.0, ram: 0.0, flash: 1e6 };
+        assert!(f.score(a.0, a.1, a.2, a.3) > f.score(b.0, b.1, b.2, b.3));
     }
 }

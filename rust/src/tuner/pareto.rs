@@ -24,6 +24,11 @@ pub struct FrontierPoint {
     pub latency_s: f64,
     /// Analytic energy per inference (mJ).
     pub energy_mj: f64,
+    /// Flash footprint of this schedule: weight/bias/table bytes summed
+    /// over the chosen candidates (lowering re-layouts are free; only
+    /// materialized tables — e.g. the pointwise-as-shift table — and
+    /// channel compaction move this number).
+    pub flash_bytes: usize,
     /// The per-node candidate assignment realizing this point (one per
     /// graph node, in topo order) — the input to
     /// [`crate::tuner::search::schedule_from_candidates`].
@@ -172,6 +177,7 @@ fn point_to_json(p: &FrontierPoint) -> Json {
         .field("peak_ram_bytes", p.peak_ram_bytes)
         .field("latency_s", p.latency_s)
         .field("energy_mj", p.energy_mj)
+        .field("flash_bytes", p.flash_bytes)
         .field(
             "candidates",
             Json::Arr(p.candidates.iter().map(candidate_to_json).collect()),
@@ -187,6 +193,7 @@ fn point_from_json(json: &Json) -> Option<FrontierPoint> {
         peak_ram_bytes: json.get("peak_ram_bytes")?.as_i64()? as usize,
         latency_s: json.get("latency_s")?.as_f64()?,
         energy_mj: json.get("energy_mj")?.as_f64()?,
+        flash_bytes: json.get("flash_bytes")?.as_i64()? as usize,
         candidates,
     })
 }
@@ -200,6 +207,7 @@ mod tests {
             peak_ram_bytes: peak,
             latency_s: lat,
             energy_mj: lat * 30.0,
+            flash_bytes: peak * 3,
             candidates: vec![
                 Candidate {
                     kernel: KernelImpl::AsIs,

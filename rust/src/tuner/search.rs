@@ -50,6 +50,11 @@ pub struct LayerDecision {
     /// where the old input+output pricing double-counted join operands
     /// that the liveness planner overlaps with dead bodies.
     pub ram_bytes: usize,
+    /// Deployed weight bytes of this node under the chosen candidate
+    /// ([`space::flash_bytes`]): the layer's weight/bias payload plus any
+    /// materialized tables (pointwise-as-shift pays its shift table).
+    /// Post-compaction for pruned graphs — masked channels cost nothing.
+    pub flash_bytes: usize,
     /// Whether the decision was replayed from the tuning cache.
     pub from_cache: bool,
 }
@@ -71,6 +76,10 @@ pub struct TunedSchedule {
     /// steps — byte-equal to the compiled plan's arena peak plus the
     /// peak step's scratch.
     pub peak_ram_bytes: usize,
+    /// Sum of per-layer deployed weight bytes
+    /// ([`LayerDecision::flash_bytes`]) — the model's flash footprint
+    /// under this schedule.
+    pub flash_bytes: usize,
 }
 
 /// Search-effort accounting. Since the analytic cost engine landed,
@@ -286,13 +295,13 @@ impl TunedSchedule {
     pub fn to_markdown(&self) -> String {
         let mut s = format!(
             "**{}** — objective {}, MCU {}\n\n\
-             | # | layer | kernel | lowering | backend | latency (ms) | energy (µJ) | RAM (B) | cached |\n\
-             |---|---|---|---|---|---|---|---|---|\n",
+             | # | layer | kernel | lowering | backend | latency (ms) | energy (µJ) | RAM (B) | flash (B) | cached |\n\
+             |---|---|---|---|---|---|---|---|---|---|\n",
             self.model, self.objective, self.mcu
         );
         for d in &self.layers {
             s.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {:.4} | {:.3} | {} | {} |\n",
+                "| {} | {} | {} | {} | {} | {:.4} | {:.3} | {} | {} | {} |\n",
                 d.index,
                 d.layer,
                 d.candidate.kernel.as_str(),
@@ -301,14 +310,16 @@ impl TunedSchedule {
                 1e3 * d.latency_s,
                 1e3 * d.energy_mj,
                 d.ram_bytes,
+                d.flash_bytes,
                 if d.from_cache { "yes" } else { "no" }
             ));
         }
         s.push_str(&format!(
-            "| — | **total** | | | | {:.4} | {:.3} | {} (peak) | |\n",
+            "| — | **total** | | | | {:.4} | {:.3} | {} (peak) | {} | |\n",
             1e3 * self.latency_s,
             1e3 * self.energy_mj,
-            self.peak_ram_bytes
+            self.peak_ram_bytes,
+            self.flash_bytes
         ));
         s
     }
@@ -330,6 +341,7 @@ fn decision_from_entry(
         mem_accesses: e.mem_accesses,
         effective_macs: e.effective_macs,
         ram_bytes: e.ram_bytes,
+        flash_bytes: e.flash_bytes,
         from_cache,
     }
 }
@@ -353,6 +365,7 @@ fn score_candidate(
             mem_accesses: m.mem_accesses,
             effective_macs: m.effective_macs,
             ram_bytes: space::ram_bytes(layer, cand, in_shape),
+            flash_bytes: space::flash_bytes(layer, cand),
         },
         m,
     )
@@ -475,6 +488,7 @@ fn score_node_candidate(
                     mem_accesses: m.mem_accesses,
                     effective_macs: m.effective_macs,
                     ram_bytes: ram,
+                    flash_bytes: 0,
                 },
                 m,
             )
@@ -654,7 +668,12 @@ pub fn tune_graph_joint(
                 let mut fit: Option<(f64, CacheEntry, usize)> = None;
                 for cand in node_candidates(node, backend) {
                     let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
-                    let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
+                    let score = objective.score(
+                        m.latency_s,
+                        m.energy_mj,
+                        entry.ram_bytes,
+                        entry.flash_bytes,
+                    );
                     stats.analytic += 1;
                     stats.candidates += 1;
                     if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
@@ -685,6 +704,7 @@ pub fn tune_graph_joint(
     let latency_s = decisions.iter().map(|d| d.latency_s).sum();
     let energy_mj = decisions.iter().map(|d| d.energy_mj).sum();
     let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
+    let flash_bytes = decisions.iter().map(|d| d.flash_bytes).sum();
     (
         Some(TunedSchedule {
             model: graph.name.clone(),
@@ -694,6 +714,7 @@ pub fn tune_graph_joint(
             latency_s,
             energy_mj,
             peak_ram_bytes,
+            flash_bytes,
         }),
         stats,
     )
@@ -743,7 +764,12 @@ pub fn tune_graph_frontier(
         let mut row = Vec::new();
         for cand in node_candidates(node, backend) {
             let (entry, m) = score_node_candidate(node, &cand, &shapes, cfg);
-            let score = objective.score(m.latency_s, m.energy_mj, entry.ram_bytes);
+            let score = objective.score(
+                m.latency_s,
+                m.energy_mj,
+                entry.ram_bytes,
+                entry.flash_bytes,
+            );
             stats.analytic += 1;
             stats.candidates += 1;
             let need = step_peaks[index] + node_scratch_bytes(node, &cand, &shapes);
@@ -759,7 +785,7 @@ pub fn tune_graph_frontier(
     let mut points = Vec::new();
     'budgets: for &b in &thresholds {
         let mut cands = Vec::with_capacity(table.len());
-        let (mut lat, mut en, mut peak) = (0f64, 0f64, 0usize);
+        let (mut lat, mut en, mut peak, mut flash) = (0f64, 0f64, 0usize, 0usize);
         for row in &table {
             let mut best: Option<&Scored> = None;
             for s in row {
@@ -772,11 +798,13 @@ pub fn tune_graph_frontier(
             lat += s.entry.latency_s;
             en += s.entry.energy_mj;
             peak = peak.max(s.need);
+            flash += s.entry.flash_bytes;
         }
         points.push(FrontierPoint {
             peak_ram_bytes: peak,
             latency_s: lat,
             energy_mj: en,
+            flash_bytes: flash,
             candidates: cands,
         });
     }
@@ -842,6 +870,7 @@ pub fn schedule_from_candidates(
     let latency_s = decisions.iter().map(|d| d.latency_s).sum();
     let energy_mj = decisions.iter().map(|d| d.energy_mj).sum();
     let peak_ram_bytes = decisions.iter().map(|d| d.ram_bytes).max().unwrap_or(0);
+    let flash_bytes = decisions.iter().map(|d| d.flash_bytes).sum();
     TunedSchedule {
         model: graph.name.clone(),
         mcu: mcu_fingerprint(cfg),
@@ -850,6 +879,7 @@ pub fn schedule_from_candidates(
         latency_s,
         energy_mj,
         peak_ram_bytes,
+        flash_bytes,
     }
 }
 
@@ -902,7 +932,8 @@ mod tests {
                     space::execute(layer, &cand, &t, &mut mon);
                     let m = measure(&mon.counts, cand.lowering.path_class(), &cfg);
                     let ram = space::ram_bytes(layer, &cand, &in_shape);
-                    let score = Objective::Latency.score(m.latency_s, m.energy_mj, ram);
+                    let flash = space::flash_bytes(layer, &cand);
+                    let score = Objective::Latency.score(m.latency_s, m.energy_mj, ram, flash);
                     if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
                         best = Some((score, cand, m));
                     }
@@ -919,6 +950,118 @@ mod tests {
                 t = layer.forward(&t, false, &mut NoopMonitor);
             }
         }
+    }
+
+    #[test]
+    fn node_oracle_covers_residual_joins_and_vec_twins_through_the_joint_path() {
+        // The counts oracle, extended to the graph IR: every candidate
+        // of every node — ResidualAdd and vec-backend twins included —
+        // scores in closed form exactly what a counting monitor observes
+        // executing it, on dense AND channel-pruned residual zoo models.
+        // The pruned graphs matter: compaction rebuilds every layer with
+        // fewer channels, and the closed-form counts must stay exact on
+        // the compacted shapes, not just the hand-built ones.
+        let cfg = McuConfig::default();
+        let mut saw_add = false;
+        let mut saw_vec = false;
+        for prim in Primitive::ALL {
+            for graph in [
+                crate::models::mcunet_residual(prim, 42),
+                crate::models::mcunet_residual_pruned(prim, 42, 0.5),
+            ] {
+                let shapes = graph.value_shapes();
+                let mut values = vec![Tensor::zeros(graph.input_shape, graph.input_q)];
+                crate::util::prng::Rng::new(17).fill_i8(&mut values[0].data, -96, 95);
+                for node in &graph.nodes {
+                    for cand in node_candidates(node, BackendSel::Auto) {
+                        let mut mon = CountingMonitor::new();
+                        let analytic = match &node.op {
+                            NodeOp::Layer(l) => {
+                                space::execute(l, &cand, &values[node.inputs[0]], &mut mon);
+                                space::analytic_counts(l, &cand, &shapes[node.inputs[0]])
+                            }
+                            NodeOp::Add(a) => {
+                                saw_add = true;
+                                a.forward(
+                                    &values[node.inputs[0]],
+                                    &values[node.inputs[1]],
+                                    &mut mon,
+                                );
+                                counts::residual_add_counts(&shapes[node.inputs[0]])
+                            }
+                        };
+                        saw_vec |= cand.backend == Backend::VecLanes;
+                        assert_eq!(
+                            analytic,
+                            mon.counts,
+                            "{}/{}/{cand:?}",
+                            graph.name,
+                            node.op.name()
+                        );
+                        // and the cache entry the joint DP scores is the
+                        // cost model applied to exactly those counts
+                        let (entry, m) = score_node_candidate(node, &cand, &shapes, &cfg);
+                        let want = measure(&analytic, cand.lowering.path_class(), &cfg);
+                        assert_eq!(entry.cycles, want.cycles, "{}", graph.name);
+                        assert_eq!(entry.effective_macs, want.effective_macs, "{}", graph.name);
+                        assert_eq!(m.mem_accesses, want.mem_accesses, "{}", graph.name);
+                    }
+                    let out = match &node.op {
+                        NodeOp::Layer(l) => {
+                            l.forward(&values[node.inputs[0]], false, &mut NoopMonitor)
+                        }
+                        NodeOp::Add(a) => a.forward(
+                            &values[node.inputs[0]],
+                            &values[node.inputs[1]],
+                            &mut NoopMonitor,
+                        ),
+                    };
+                    values.push(out);
+                }
+                // through the joint tuner path: every winning decision's
+                // counts-derived fields are reproduced by instrumenting
+                // the chosen candidate
+                let mut cache = TuningCache::in_memory();
+                let (sched, _) = tune_graph_joint(
+                    &graph,
+                    &cfg,
+                    Objective::Latency,
+                    BackendSel::Auto,
+                    None,
+                    &mut cache,
+                );
+                let sched = sched.expect("unbudgeted joint search succeeds");
+                for (node, d) in graph.nodes.iter().zip(&sched.layers) {
+                    let mut mon = CountingMonitor::new();
+                    match &node.op {
+                        NodeOp::Layer(l) => {
+                            space::execute(l, &d.candidate, &values[node.inputs[0]], &mut mon);
+                        }
+                        NodeOp::Add(a) => {
+                            a.forward(&values[node.inputs[0]], &values[node.inputs[1]], &mut mon);
+                        }
+                    }
+                    let m = measure(&mon.counts, d.candidate.lowering.path_class(), &cfg);
+                    assert_eq!(d.cycles, m.cycles, "{}/{}", graph.name, node.op.name());
+                    assert_eq!(
+                        d.effective_macs,
+                        m.effective_macs,
+                        "{}/{}",
+                        graph.name,
+                        node.op.name()
+                    );
+                    assert_eq!(
+                        d.mem_accesses,
+                        m.mem_accesses,
+                        "{}/{}",
+                        graph.name,
+                        node.op.name()
+                    );
+                }
+            }
+        }
+        assert!(saw_add, "residual zoo contains no joins");
+        assert!(saw_vec, "auto candidate spaces contained no vec twins");
     }
 
     #[test]

@@ -510,6 +510,31 @@ pub fn ram_bytes(layer: &Layer, cand: &Candidate, in_shape: &Shape) -> usize {
     in_shape.len() + layer.output_shape(in_shape).len() + scratch_bytes(layer, cand, in_shape)
 }
 
+/// Flash footprint of one deployed candidate: the weight bytes the
+/// chosen kernel stores (weights + bias + per-channel tables), exact and
+/// closed-form like every other cost here. Kernel substitutions that
+/// re-layout the parameters keep the byte count (`ConvAsDepthwise`,
+/// `DepthwiseAsConv`); `PointwiseAsShift` materializes the per-channel
+/// `(α, β)` shift table the source conv does not carry — 2 bytes per
+/// input channel, exactly what [`Layer::Shift`] is billed for in
+/// `Graph::weight_bytes`. For pruned graphs the layer is already
+/// compacted, so this *is* the post-compaction footprint.
+pub fn flash_bytes(layer: &Layer, cand: &Candidate) -> usize {
+    let base = crate::nn::graph::layer_weight_bytes(layer);
+    match (cand.kernel, layer) {
+        (KernelImpl::PointwiseAsShift, Layer::Conv(c)) => base + 2 * c.in_channels,
+        _ => base,
+    }
+}
+
+/// [`flash_bytes`] for graph nodes: residual joins hold no parameters.
+pub fn node_flash_bytes(node: &Node, cand: &Candidate) -> usize {
+    match &node.op {
+        NodeOp::Layer(l) => flash_bytes(l, cand),
+        NodeOp::Add(_) => 0,
+    }
+}
+
 /// A structural fingerprint of (layer, input shape): two layers with equal
 /// signatures produce identical micro-op streams under every candidate,
 /// so tuning results are shareable through the cache. Weight *values*

@@ -10,10 +10,26 @@
 //! generic over the injector, so a server started without a
 //! [`FaultPlan`] monomorphises to exactly the code it had before this
 //! module existed.
+//!
+//! # Key-rolled determinism
+//!
+//! The dice are **stateless**: every roll is a pure function of
+//! `(plan seed, site, key)`, where the key identifies the *work* being
+//! rolled for — [`batch_key`] folds the batch lanes' (request id,
+//! attempt) pairs. Nothing about worker identity, visit order or
+//! wall-clock timing enters the draw, so the same request content
+//! suffers the same fault in every run and under every thread
+//! interleaving. (A sequential per-worker die would make outcomes depend
+//! on which worker won the queue race — the nondeterminism this design
+//! replaced.) The attempt number is part of the key on purpose: retries
+//! resubmit under the *same request id*, and keying by id alone would
+//! doom a panic-marked request to panic on every attempt, turning every
+//! injected panic into a permanent failure instead of a retry exercise.
 
 use std::time::Duration;
 
 use crate::util::cli::Args;
+use crate::util::fnv::Fnv1a;
 use crate::util::prng::Rng;
 
 /// Named injection points inside the worker batch-serving path.
@@ -28,6 +44,18 @@ pub enum FaultSite {
     Exec,
     /// Before per-lane replies are sent.
     Respond,
+}
+
+impl FaultSite {
+    /// Per-site salt folded into the die seed, so one batch rolls
+    /// independent dice at its three sites.
+    fn salt(self) -> u64 {
+        match self {
+            FaultSite::Stage => 0x5354_4147_45,
+            FaultSite::Exec => 0x4558_4543,
+            FaultSite::Respond => 0x5245_5350_4f,
+        }
+    }
 }
 
 /// What the injector decided for one pass through a site.
@@ -48,7 +76,7 @@ pub enum FaultAction {
 /// nothing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultPlan {
-    /// Seed for the per-worker dice (worker id is folded in).
+    /// Seed for the fault dice (folded with the per-roll key and site).
     pub seed: u64,
     /// Probability of a panic per site visit, in parts per million.
     pub panic_ppm: u32,
@@ -97,15 +125,33 @@ impl FaultPlan {
     }
 }
 
+/// The deterministic fault key of one batch: FNV-1a over the lanes'
+/// (request id, attempt) pairs, in lane order. Worker identity and
+/// timing are deliberately absent — the same batch content rolls the
+/// same dice in any interleaving.
+pub fn batch_key(lanes: impl Iterator<Item = (u64, u32)>) -> u64 {
+    let mut h = Fnv1a::new();
+    for (id, attempt) in lanes {
+        for b in id.to_le_bytes() {
+            h.byte(b);
+        }
+        for b in attempt.to_le_bytes() {
+            h.byte(b);
+        }
+    }
+    h.finish()
+}
+
 /// Zero-cost fault hook for the worker loop.
 ///
 /// The default method body is the production behaviour; `NoopFaults`
 /// adds nothing on top, so the non-chaos monomorphisation of the worker
 /// loop contains no branches for injection.
 pub trait FaultInjector: Send + 'static {
-    /// Roll the dice at `site`; the worker acts on the returned action.
+    /// Roll the dice at `site` for the work identified by `key` (see
+    /// [`batch_key`]); the worker acts on the returned action.
     #[inline]
-    fn roll(&mut self, _site: FaultSite) -> FaultAction {
+    fn roll(&mut self, _site: FaultSite, _key: u64) -> FaultAction {
         FaultAction::None
     }
 }
@@ -116,26 +162,33 @@ pub struct NoopFaults;
 
 impl FaultInjector for NoopFaults {}
 
-/// Seeded injector: one deterministic die per worker, partitioned into
-/// panic / delay / error bands so a single draw decides the action.
-#[derive(Clone, Debug)]
+/// Seeded injector: each roll seeds a fresh die from
+/// `(plan seed, key, site)` and partitions one draw into panic / delay /
+/// error bands. Stateless, so outcomes are independent of worker
+/// identity and visit order — identical storms produce identical fault
+/// schedules.
+#[derive(Clone, Copy, Debug)]
 pub struct SeededFaults {
     plan: FaultPlan,
-    rng: Rng,
 }
 
 impl SeededFaults {
-    /// Build the injector for one worker; `worker_id` is folded into the
-    /// plan seed so workers roll independent but reproducible dice.
-    pub fn new(plan: FaultPlan, worker_id: u64) -> Self {
-        let rng = Rng::new(plan.seed ^ worker_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        Self { plan, rng }
+    /// Build the injector for a worker. All workers share the same
+    /// stateless dice — which worker serves a batch must not change
+    /// what happens to it.
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan }
     }
 }
 
 impl FaultInjector for SeededFaults {
-    fn roll(&mut self, _site: FaultSite) -> FaultAction {
-        let draw = self.rng.below(1_000_000) as u32;
+    fn roll(&mut self, site: FaultSite, key: u64) -> FaultAction {
+        let seed = self
+            .plan
+            .seed
+            .wrapping_add(key.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            ^ site.salt();
+        let draw = Rng::new(seed).below(1_000_000) as u32;
         let panic_hi = self.plan.panic_ppm;
         let delay_hi = panic_hi.saturating_add(self.plan.delay_ppm);
         let error_hi = delay_hi.saturating_add(self.plan.error_ppm);
@@ -160,12 +213,12 @@ mod tests {
         assert!(!FaultPlan::disabled().enabled());
         let mut noop = NoopFaults;
         for site in [FaultSite::Stage, FaultSite::Exec, FaultSite::Respond] {
-            assert_eq!(noop.roll(site), FaultAction::None);
+            assert_eq!(noop.roll(site, 123), FaultAction::None);
         }
     }
 
     #[test]
-    fn seeded_faults_replay_identically() {
+    fn rolls_are_pure_functions_of_seed_site_and_key() {
         let plan = FaultPlan {
             seed: 42,
             panic_ppm: 300_000,
@@ -174,15 +227,24 @@ mod tests {
             delay_us: 50,
         };
         assert!(plan.enabled());
-        let mut a = SeededFaults::new(plan, 1);
-        let mut b = SeededFaults::new(plan, 1);
-        for _ in 0..256 {
-            assert_eq!(a.roll(FaultSite::Exec), b.roll(FaultSite::Exec));
+        let mut a = SeededFaults::new(plan);
+        let mut b = SeededFaults::new(plan);
+        // same (site, key) → same action, regardless of what else each
+        // injector rolled before (statelessness is the whole point)
+        for warmup in 0..7 {
+            a.roll(FaultSite::Stage, warmup);
+        }
+        for key in 0..256u64 {
+            assert_eq!(
+                a.roll(FaultSite::Exec, key),
+                b.roll(FaultSite::Exec, key),
+                "key {key}"
+            );
         }
     }
 
     #[test]
-    fn distinct_workers_roll_distinct_dice() {
+    fn keys_and_sites_decorrelate_the_dice() {
         let plan = FaultPlan {
             seed: 42,
             panic_ppm: 500_000,
@@ -190,12 +252,59 @@ mod tests {
             error_ppm: 0,
             delay_us: 0,
         };
-        let mut a = SeededFaults::new(plan, 0);
-        let mut b = SeededFaults::new(plan, 1);
-        let same = (0..64)
-            .filter(|_| a.roll(FaultSite::Stage) == b.roll(FaultSite::Stage))
+        let mut f = SeededFaults::new(plan);
+        // distinct keys must not all roll the same action…
+        let same_key = (0..64u64)
+            .filter(|&k| f.roll(FaultSite::Stage, k) == f.roll(FaultSite::Stage, 0))
             .count();
-        assert!(same < 64, "two workers rolled 64 identical actions");
+        assert!(same_key < 64, "64 distinct keys rolled identical actions");
+        // …and one key must roll independent dice at the three sites
+        let per_site: Vec<FaultAction> = [FaultSite::Stage, FaultSite::Exec, FaultSite::Respond]
+            .iter()
+            .map(|&s| f.roll(s, 0xFEED))
+            .collect();
+        let all_equal = per_site.windows(2).all(|w| w[0] == w[1]);
+        // not a hard guarantee for one key, so probe a few
+        let varied = (0..16u64).any(|k| {
+            let acts: Vec<FaultAction> = [FaultSite::Stage, FaultSite::Exec, FaultSite::Respond]
+                .iter()
+                .map(|&s| f.roll(s, k))
+                .collect();
+            acts.windows(2).any(|w| w[0] != w[1])
+        });
+        assert!(varied || !all_equal, "sites never decorrelated over 16 keys");
+    }
+
+    #[test]
+    fn attempt_number_rerolls_a_retried_request() {
+        // a panic-marked (id, attempt) must not doom every retry of the
+        // same id: folding the attempt into the key gives each attempt
+        // fresh dice
+        let plan = FaultPlan {
+            seed: 7,
+            panic_ppm: 400_000,
+            delay_ppm: 0,
+            error_ppm: 0,
+            delay_us: 0,
+        };
+        let mut f = SeededFaults::new(plan);
+        let doomed = (0..64u64).all(|id| {
+            let k0 = batch_key([(id, 0u32)].into_iter());
+            let k1 = batch_key([(id, 1u32)].into_iter());
+            f.roll(FaultSite::Exec, k0) == FaultAction::Panic
+                && f.roll(FaultSite::Exec, k1) == FaultAction::Panic
+        });
+        assert!(!doomed, "retries rolled the same dice as the first attempt");
+    }
+
+    #[test]
+    fn batch_key_is_order_and_content_sensitive() {
+        let a = batch_key([(1u64, 0u32), (2, 0)].into_iter());
+        let b = batch_key([(2u64, 0u32), (1, 0)].into_iter());
+        let c = batch_key([(1u64, 1u32), (2, 0)].into_iter());
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, batch_key([(1u64, 0u32), (2, 0)].into_iter()));
     }
 
     #[test]
@@ -208,10 +317,10 @@ mod tests {
             error_ppm: 300_000,
             delay_us: 10,
         };
-        let mut f = SeededFaults::new(plan, 3);
+        let mut f = SeededFaults::new(plan);
         let (mut p, mut d, mut e) = (0u32, 0u32, 0u32);
-        for _ in 0..1_000 {
-            match f.roll(FaultSite::Respond) {
+        for key in 0..1_000u64 {
+            match f.roll(FaultSite::Respond, key) {
                 FaultAction::Panic => p += 1,
                 FaultAction::Delay(dur) => {
                     assert_eq!(dur, Duration::from_micros(10));

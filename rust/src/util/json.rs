@@ -471,6 +471,77 @@ mod tests {
     }
 
     #[test]
+    fn arbitrary_nested_values_roundtrip_emit_parse_emit() {
+        use crate::util::prng::Rng;
+        use crate::util::prop::{check, default_cases, ensure};
+
+        fn arb_string(rng: &mut Rng) -> String {
+            let n = rng.below(9) as usize;
+            (0..n)
+                .map(|_| match rng.below(12) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => '\t',
+                    4 => '\u{1}', // control char: emits as \u0001
+                    5 => 'é',     // 2-byte UTF-8
+                    6 => '✓',     // 3-byte UTF-8
+                    7 => '𝕏',     // 4-byte UTF-8 (astral plane)
+                    _ => (b'a' + rng.below(26) as u8) as char,
+                })
+                .collect()
+        }
+
+        fn leaf(rng: &mut Rng) -> Json {
+            match rng.below(5) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.below(2) == 0),
+                2 => Json::Int(rng.below(2_000_001) as i64 - 1_000_000),
+                // odd multiples of 1/16: never integral, so Display
+                // keeps a fraction and the reparse stays an equal Num
+                // (an integral Num would reparse as Int — the text
+                // would still be stable, but not the value)
+                3 => Json::Num((rng.below(2_000_000) as f64 - 1e6 + 0.5) / 8.0),
+                _ => Json::Str(arb_string(rng)),
+            }
+        }
+
+        fn arb_value(rng: &mut Rng, depth: u32) -> Json {
+            if depth == 0 {
+                return leaf(rng);
+            }
+            match rng.below(4) {
+                0 | 1 => leaf(rng),
+                2 => {
+                    let n = rng.below(5) as usize;
+                    Json::Arr((0..n).map(|_| arb_value(rng, depth - 1)).collect())
+                }
+                _ => {
+                    let n = rng.below(5) as usize;
+                    Json::Obj(
+                        (0..n)
+                            .map(|i| (format!("{}{i}", arb_string(rng)), arb_value(rng, depth - 1)))
+                            .collect(),
+                    )
+                }
+            }
+        }
+
+        check(
+            "json emit-parse-emit",
+            default_cases(),
+            |rng, _| arb_value(rng, 4),
+            |v| {
+                let text = v.to_string();
+                let back =
+                    Json::parse(&text).map_err(|e| format!("reparse failed on {text}: {e}"))?;
+                ensure(back == *v, format!("value drifted via {text}: {back:?} vs {v:?}"))?;
+                ensure(back.to_string() == text, format!("re-emit drifted for {text}"))
+            },
+        );
+    }
+
+    #[test]
     fn accessors_are_type_safe() {
         let j = Json::obj().field("n", 3usize).field("s", "str");
         assert_eq!(j.get("n").and_then(|v| v.as_i64()), Some(3));

@@ -1,0 +1,209 @@
+//! Cross-PR golden vectors: the whole model zoo's logits, pinned to a
+//! committed file.
+//!
+//! Every other numeric test in the repo compares the engine against
+//! *itself* (scalar vs vec, graph vs plan, dense-with-zeroed-channels vs
+//! compacted). Those catch within-PR regressions but are blind to a
+//! change that shifts *all* paths together — a requantization tweak, a
+//! reordered accumulation, a new rounding mode. This suite pins the
+//! absolute numbers across PRs: each zoo model's logits on a fixed
+//! input, stored in `rust/tests/golden/zoo.json` and committed.
+//!
+//! Workflow (see `rust/tests/golden/README.md`):
+//! * the golden file exists → every model's logits must match it
+//!   bit-for-bit, every model in the file must still exist, and every
+//!   zoo model must have an entry — any mismatch fails with the diff;
+//! * the golden file is missing, or `CONVBENCH_BLESS=1` → the suite
+//!   regenerates and writes it, then passes. **Commit the file**: an
+//!   uncommitted golden file pins nothing.
+//!
+//! An intentional numeric change re-blesses in one command
+//! (`CONVBENCH_BLESS=1 cargo test --test integration_golden`) and the
+//! file's diff becomes part of the PR review.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use convbench::models::zoo_graphs;
+use convbench::nn::{Graph, NoopMonitor, Tensor};
+use convbench::tuner::{tune_graph_shape_backend, BackendSel, Objective, TuningCache};
+use convbench::util::fnv::Fnv1a;
+use convbench::util::json::Json;
+use convbench::util::prng::Rng;
+
+/// Seed for the zoo builds. Must never change: the golden vectors are a
+/// function of it.
+const ZOO_SEED: u64 = 42;
+
+/// Golden file format version (bumped only if the schema changes, not
+/// when vectors are re-blessed).
+const GOLDEN_VERSION: i64 = 1;
+
+fn golden_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/zoo.json")
+}
+
+/// The fixed input for one model: seeded from the model *name*, so
+/// adding zoo members never shifts the inputs of existing ones.
+fn golden_input(graph: &Graph) -> Tensor {
+    let mut h = Fnv1a::new();
+    for b in graph.name.bytes() {
+        h.byte(b);
+    }
+    let mut x = Tensor::zeros(graph.input_shape, graph.input_q);
+    Rng::new(h.finish() ^ 0x601D_E41).fill_i8(&mut x.data, -96, 95);
+    x
+}
+
+/// Compute the current logits for every zoo model. The reference value
+/// is the plain simd graph forward; the scalar forward and the tuned
+/// compiled plan must agree with it before anything is compared against
+/// the golden file — a golden mismatch should always mean "the numbers
+/// moved", never "the paths disagree".
+fn current_vectors() -> BTreeMap<String, Vec<i8>> {
+    let cfg = convbench::mcu::McuConfig::default();
+    let mut cache = TuningCache::in_memory();
+    let mut out = BTreeMap::new();
+    for graph in zoo_graphs(ZOO_SEED) {
+        let x = golden_input(&graph);
+        let want = graph.forward(&x, true, &mut NoopMonitor);
+        let scalar = graph.forward(&x, false, &mut NoopMonitor);
+        assert_eq!(
+            want.data, scalar.data,
+            "{}: scalar and simd forwards disagree — fix parity before blessing goldens",
+            graph.name
+        );
+        let (sched, _) = tune_graph_shape_backend(
+            &graph,
+            &cfg,
+            Objective::Latency,
+            BackendSel::Auto,
+            &mut cache,
+        );
+        let tuned = sched.run_graph(&graph, &x, &mut NoopMonitor);
+        assert_eq!(
+            want.data, tuned.data,
+            "{}: tuned plan disagrees with the graph forward",
+            graph.name
+        );
+        let prev = out.insert(graph.name.clone(), want.data);
+        assert!(prev.is_none(), "duplicate zoo model name {}", graph.name);
+    }
+    out
+}
+
+fn vectors_to_json(vectors: &BTreeMap<String, Vec<i8>>) -> Json {
+    let mut models = Json::obj();
+    for (name, logits) in vectors {
+        let arr: Vec<i64> = logits.iter().map(|&v| v as i64).collect();
+        models = models.field(name, arr);
+    }
+    Json::obj()
+        .field("version", GOLDEN_VERSION)
+        .field("zoo_seed", ZOO_SEED)
+        .field("models", models)
+}
+
+fn vectors_from_json(json: &Json) -> Result<BTreeMap<String, Vec<i8>>, String> {
+    if json.get("version").and_then(|v| v.as_i64()) != Some(GOLDEN_VERSION) {
+        return Err("golden file version mismatch — delete and re-bless".into());
+    }
+    if json.get("zoo_seed").and_then(|v| v.as_i64()) != Some(ZOO_SEED as i64) {
+        return Err("golden file zoo seed mismatch — delete and re-bless".into());
+    }
+    let models = json
+        .get("models")
+        .and_then(|m| m.as_obj())
+        .ok_or("golden file has no models object")?;
+    let mut out = BTreeMap::new();
+    for (name, arr) in models {
+        let items = arr.as_arr().ok_or_else(|| format!("{name}: logits not an array"))?;
+        let mut logits = Vec::with_capacity(items.len());
+        for v in items {
+            let i = v.as_i64().ok_or_else(|| format!("{name}: non-integer logit entry"))?;
+            logits.push(i as i8);
+        }
+        out.insert(name.clone(), logits);
+    }
+    Ok(out)
+}
+
+#[test]
+fn zoo_logits_match_the_committed_golden_vectors() {
+    let current = current_vectors();
+    // the zoo must actually cover dense, residual and pruned variants —
+    // a silently-shrunk zoo would weaken the pin without failing it
+    assert!(
+        current.keys().any(|n| n.contains("-res-")),
+        "zoo lost its residual variants"
+    );
+    assert!(
+        current.keys().any(|n| n.contains("-pruned")),
+        "zoo lost its pruned variants"
+    );
+    assert!(current.len() >= 40, "zoo shrank to {} models", current.len());
+
+    let path = golden_path();
+    let bless = std::env::var("CONVBENCH_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+        std::fs::write(&path, vectors_to_json(&current).to_string()).expect("write golden file");
+        println!(
+            "blessed {} golden vectors to {} — commit this file to pin them across PRs",
+            current.len(),
+            path.display()
+        );
+        return;
+    }
+
+    let text = std::fs::read_to_string(&path).expect("read golden file");
+    let golden = vectors_from_json(&Json::parse(&text).expect("parse golden file"))
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let mut drifted = Vec::new();
+    for (name, want) in &golden {
+        match current.get(name) {
+            None => drifted.push(format!("{name}: in golden file but no longer in the zoo")),
+            Some(got) if got != want => {
+                let first = want
+                    .iter()
+                    .zip(got.iter())
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(usize::MAX);
+                drifted.push(format!(
+                    "{name}: logits drifted (first diff at index {first}: golden {:?} vs current \
+                     {:?})",
+                    want.get(first),
+                    got.get(first)
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    for name in current.keys() {
+        if !golden.contains_key(name) {
+            drifted.push(format!(
+                "{name}: new zoo model without a golden entry — re-bless with CONVBENCH_BLESS=1"
+            ));
+        }
+    }
+    assert!(
+        drifted.is_empty(),
+        "golden vectors drifted ({} models):\n  {}\nIf the numeric change is intentional, \
+         re-bless with CONVBENCH_BLESS=1 and commit the updated {}",
+        drifted.len(),
+        drifted.join("\n  "),
+        path.display()
+    );
+}
+
+#[test]
+fn golden_inputs_are_stable_functions_of_the_model_name() {
+    // the input derivation is part of the cross-PR contract: it must
+    // depend on the model name only, not on zoo order or count
+    let zoo = zoo_graphs(ZOO_SEED);
+    let a = golden_input(&zoo[0]);
+    let b = golden_input(&zoo[0]);
+    assert_eq!(a.data, b.data);
+    let other = golden_input(&zoo[1]);
+    assert_ne!(a.data, other.data, "two models drew the same golden input");
+}
